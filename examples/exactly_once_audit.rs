@@ -1,0 +1,174 @@
+//! Exactly-once audit: run the analytics pipeline through deliberate chaos
+//! (kills, twins, lossy+duplicating network, store outages), then audit
+//! the output against the ground truth, row for row.
+//!
+//! This is §4.6 as a demo: "the effect of processing each row should only
+//! be observed once, as part of a successful transaction commit".
+//!
+//! ```text
+//! cargo run --release --example exactly_once_audit
+//! ```
+
+use std::collections::HashMap;
+
+use yt_stream::controller::Role;
+use yt_stream::coordinator::processor::ClusterEnv;
+use yt_stream::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+use yt_stream::figures::scenario::fill_static_input;
+use yt_stream::queue::input_name_table;
+use yt_stream::queue::ordered_table::OrderedTable;
+use yt_stream::queue::{ContinuationToken, PartitionReader};
+use yt_stream::rows::Value;
+use yt_stream::util::yson::Yson;
+use yt_stream::util::Clock;
+use yt_stream::workload::analytics::{
+    analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE,
+};
+use yt_stream::workload::loggen::parse_line;
+
+fn main() {
+    println!("== exactly-once audit under chaos ==");
+    let partitions = 4;
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0xA0D17);
+    let table = OrderedTable::new(
+        "//in/audit",
+        input_name_table(),
+        partitions,
+        env.accounting.clone(),
+    );
+    fill_static_input(&table, &clock, 300, 0xA0D17);
+
+    // Ground truth: per-(user, cluster) counts straight from the input.
+    let mut truth: HashMap<(String, String), i64> = HashMap::new();
+    for p in 0..partitions {
+        let mut reader = table.reader(p);
+        let batch = reader
+            .read(0, i64::MAX / 2, &ContinuationToken::initial())
+            .unwrap();
+        for row in batch.rowset.rows() {
+            for line in row.get(0).unwrap().as_str().unwrap().lines() {
+                if let Some(parsed) = parse_line(line) {
+                    if let Some(user) = parsed.user {
+                        *truth
+                            .entry((user.to_string(), parsed.cluster.to_string()))
+                            .or_default() += 1;
+                    }
+                }
+            }
+        }
+    }
+    let expected_total: i64 = truth.values().sum();
+    println!(
+        "ground truth: {} rows across {} (user, cluster) groups",
+        expected_total,
+        truth.len()
+    );
+
+    let cfg = ProcessorConfig {
+        mapper_count: partitions,
+        reducer_count: 2,
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        ..ProcessorConfig::default()
+    };
+    let processor = StreamingProcessor::launch(
+        cfg,
+        env.clone(),
+        InputSpec::Ordered(table),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+    let sup = processor.supervisor().clone();
+
+    println!("injecting chaos: 20% drops, 20% duplicates, kills, twins, store blips…");
+    env.net.with_faults(|f| {
+        f.drop_prob = 0.2;
+        f.dup_prob = 0.2;
+    });
+    for round in 0..4 {
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        match round {
+            0 => sup.kill(Role::Mapper, 1),
+            1 => {
+                sup.duplicate(Role::Mapper, 0);
+                sup.kill(Role::Reducer, 0);
+            }
+            2 => {
+                env.store.set_unavailable(true);
+                std::thread::sleep(std::time::Duration::from_millis(200));
+                env.store.set_unavailable(false);
+            }
+            _ => {
+                sup.duplicate(Role::Reducer, 1);
+            }
+        }
+        println!("  chaos round {round} done");
+    }
+    env.net.with_faults(|f| f.heal_all());
+
+    // Wait for the drain.
+    print!("healing network, waiting for drain… ");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let got: i64 = env
+            .store
+            .scan(OUTPUT_TABLE)
+            .unwrap()
+            .iter()
+            .map(|r| r.get(2).and_then(Value::as_i64).unwrap_or(0))
+            .sum();
+        if got == expected_total || std::time::Instant::now() > deadline {
+            break;
+        }
+    }
+    println!("done.");
+
+    // Row-for-row audit.
+    let mut mismatches = 0;
+    let output = env.store.scan(OUTPUT_TABLE).unwrap();
+    let mut audited: HashMap<(String, String), i64> = HashMap::new();
+    for r in &output {
+        audited.insert(
+            (
+                r.get(0).unwrap().as_str().unwrap().to_string(),
+                r.get(1).unwrap().as_str().unwrap().to_string(),
+            ),
+            r.get(2).unwrap().as_i64().unwrap(),
+        );
+    }
+    for (key, want) in &truth {
+        let got = audited.get(key).copied().unwrap_or(0);
+        if got != *want {
+            println!("  MISMATCH {key:?}: expected {want}, got {got}");
+            mismatches += 1;
+        }
+    }
+    for key in audited.keys() {
+        if !truth.contains_key(key) {
+            println!("  PHANTOM group {key:?} in output");
+            mismatches += 1;
+        }
+    }
+
+    let got_total: i64 = audited.values().sum();
+    println!(
+        "\naudit: {} groups checked, {} mismatches; totals {}/{}",
+        truth.len(),
+        mismatches,
+        got_total,
+        expected_total
+    );
+    println!("{}", processor.wa_report("audit"));
+    processor.stop();
+    if mismatches == 0 && got_total == expected_total {
+        println!("VERDICT: exactly-once held through all injected chaos ✔");
+    } else {
+        println!("VERDICT: VIOLATION DETECTED ✘");
+        std::process::exit(1);
+    }
+}

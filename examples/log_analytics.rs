@@ -1,0 +1,112 @@
+//! The end-to-end driver: the paper's §5.2 evaluation workload, full
+//! stack, real (simulated-cluster) run with live producers.
+//!
+//! * synthetic master-log topic (zipf users, ~85 % filtered, uneven
+//!   partition rates) feeding N partitions;
+//! * one mapper per partition splitting/parsing/shuffling via the compute
+//!   stage (`--compute hlo` runs the AOT-compiled Pallas kernels through
+//!   PJRT — the three-layer path);
+//! * reducers aggregating (user, cluster) → (count, last_ts) into a
+//!   shared sorted table, exactly once;
+//! * live stats every second, final write-amplification report and
+//!   throughput/lag summary (EXPERIMENTS.md quotes this run).
+//!
+//! ```text
+//! cargo run --release --example log_analytics -- [--seconds 20] [--compute hlo]
+//! ```
+
+use yt_stream::coordinator::ComputeMode;
+use yt_stream::figures::scenario::{start, ScenarioCfg};
+use yt_stream::metrics::hub::names;
+use yt_stream::rows::Value;
+use yt_stream::workload::analytics::OUTPUT_TABLE;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut seconds = 15u64;
+    let mut compute = ComputeMode::Native;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--seconds" => seconds = it.next().and_then(|v| v.parse().ok()).unwrap_or(seconds),
+            "--compute" => {
+                if it.next().map(String::as_str) == Some("hlo") {
+                    compute = ComputeMode::Hlo;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    println!("== log analytics (paper §5.2), compute={compute:?} ==");
+    let scenario = start(ScenarioCfg {
+        mappers: 8,
+        reducers: 2,
+        compute,
+        speedup: 1,
+        msgs_per_sec: 800.0,
+        seed: 0x5E5,
+        ..ScenarioCfg::default()
+    });
+
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs() < seconds {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        let m = &scenario.env.metrics;
+        let thpt: f64 = m
+            .series_with_prefix("reducer/")
+            .iter()
+            .filter(|s| s.name().contains("ingest"))
+            .filter_map(|s| s.last().map(|(_, v)| v))
+            .sum();
+        let lag: Vec<f64> = m
+            .series_with_prefix("mapper/")
+            .iter()
+            .filter(|s| s.name().ends_with("read_lag_ms"))
+            .filter_map(|s| s.last().map(|(_, v)| v))
+            .collect();
+        let max_lag = lag.iter().fold(0.0f64, |a, &b| a.max(b));
+        println!(
+            "t={:>3}s read={:>8} reduced={:>8} commits={:>5} ingest={:>7.2} MB/s max_lag={:>5.0} ms backlog={:>6}",
+            t0.elapsed().as_secs(),
+            m.get_counter(names::MAPPER_ROWS_READ),
+            m.get_counter(names::REDUCER_ROWS),
+            m.get_counter(names::REDUCER_COMMITS),
+            thpt / 1e6,
+            max_lag,
+            scenario.input.retained_rows(),
+        );
+    }
+
+    // Final summary: top users (the analysis the paper's processor ran).
+    let mut rows = scenario.env.store.scan(OUTPUT_TABLE).unwrap();
+    rows.sort_by_key(|r| -r.get(2).and_then(Value::as_i64).unwrap_or(0));
+    println!("\ntop (user, cluster) by message count:");
+    for r in rows.iter().take(8) {
+        println!(
+            "  {:<12} {:<8} count={:<7} last_ts={}",
+            r.get(0).unwrap().as_str().unwrap(),
+            r.get(1).unwrap().as_str().unwrap(),
+            r.get(2).unwrap().as_i64().unwrap(),
+            r.get(3).unwrap().as_i64().unwrap(),
+        );
+    }
+
+    let report = scenario.processor.wa_report("log-analytics");
+    println!("\n{report}");
+    let commit_lat: Vec<f64> = scenario
+        .env
+        .metrics
+        .series_with_prefix("reducer/")
+        .iter()
+        .filter(|s| s.name().contains("latency"))
+        .filter_map(|s| s.mean_since(2_000))
+        .collect();
+    if !commit_lat.is_empty() {
+        println!(
+            "mean end-to-end commit latency: {:.0} ms (paper: sub-second)",
+            commit_lat.iter().sum::<f64>() / commit_lat.len() as f64
+        );
+    }
+    scenario.stop();
+}

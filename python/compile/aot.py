@@ -1,0 +1,81 @@
+"""AOT lowering: L2 JAX stages -> HLO text artifacts for the rust runtime.
+
+Run once per build (``make artifacts``); the rust binary is self-contained
+afterwards.  HLO **text** is the interchange format — jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mapper_stage() -> str:
+    spec_u32 = jax.ShapeDtypeStruct((model.B,), jnp.uint32)
+    spec_scalar = jax.ShapeDtypeStruct((), jnp.uint32)
+    lowered = jax.jit(model.mapper_stage).lower(spec_u32, spec_u32, spec_scalar)
+    return to_hlo_text(lowered)
+
+
+def lower_reducer_stage() -> str:
+    spec_i32 = jax.ShapeDtypeStruct((model.B,), jnp.int32)
+    spec_f32 = jax.ShapeDtypeStruct((model.B,), jnp.float32)
+    lowered = jax.jit(model.reducer_stage).lower(spec_i32, spec_f32, spec_f32)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="(compat) ignored if --out-dir given")
+    args = parser.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None and args.out_dir == "../artifacts":
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = {
+        "mapper_stage.hlo.txt": lower_mapper_stage,
+        "reducer_stage.hlo.txt": lower_reducer_stage,
+    }
+    for name, lower in artifacts.items():
+        path = os.path.join(out_dir, name)
+        text = lower()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+    manifest = os.path.join(out_dir, "manifest.yson")
+    with open(manifest, "w") as f:
+        f.write(
+            "{\n"
+            f"    batch = {model.B};\n"
+            f"    groups = {model.G};\n"
+            '    format = "hlo-text";\n'
+            f'    jax_version = "{jax.__version__}";\n'
+            "}\n"
+        )
+    print(f"wrote manifest to {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + their pure-jnp oracle (ref)."""
+
+from . import ref, segment_agg, shuffle_hash  # noqa: F401

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: the Pallas kernels in
+``shuffle_hash.py`` / ``segment_agg.py`` must match them exactly (pytest +
+hypothesis sweeps in ``python/tests``), and the rust ``NativeStage``
+mirrors the same semantics (checked from the rust side by
+``rust/tests/runtime_hlo.rs``).
+
+The integer mix is specified in ``rust/src/compute/mod.rs`` — the spec
+lives in one place and is transcribed here:
+
+    h  = user_hash * 0x9E3779B1  XOR  cluster_hash * 0x85EBCA77   (wrapping)
+    h ^= h >> 16;  h *= 0xC2B2AE35;  h ^= h >> 13
+"""
+
+import jax.numpy as jnp
+
+MIX_A = jnp.uint32(0x9E3779B1)
+MIX_B = jnp.uint32(0x85EBCA77)
+MIX_C = jnp.uint32(0xC2B2AE35)
+
+
+def shuffle_mix_ref(user_hash: jnp.ndarray, cluster_hash: jnp.ndarray) -> jnp.ndarray:
+    """The shuffle-function integer mix (uint32[B] -> uint32[B])."""
+    user_hash = user_hash.astype(jnp.uint32)
+    cluster_hash = cluster_hash.astype(jnp.uint32)
+    h = user_hash * MIX_A ^ cluster_hash * MIX_B
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * MIX_C
+    h = h ^ (h >> jnp.uint32(13))
+    return h
+
+
+def segment_agg_ref(slots: jnp.ndarray, ts: jnp.ndarray, valid: jnp.ndarray, num_groups: int):
+    """Grouped count + max aggregation.
+
+    slots: int32[B] in [0, num_groups); ts: float32[B]; valid: float32[B]
+    (0.0/1.0 mask).  Returns (counts float32[G], max_ts float32[G]); empty
+    slots hold -inf in max_ts.
+    """
+    slots = slots.astype(jnp.int32)
+    ts = ts.astype(jnp.float32)
+    valid = valid.astype(jnp.float32)
+    onehot = (slots[:, None] == jnp.arange(num_groups, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    ) * valid[:, None]
+    counts = jnp.sum(onehot, axis=0)
+    masked = jnp.where(onehot > 0, ts[:, None], -jnp.inf)
+    max_ts = jnp.max(masked, axis=0)
+    return counts, max_ts

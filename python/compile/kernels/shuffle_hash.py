@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: the shuffle-function integer mix.
+
+The paper's *shuffle function* (§1.2) decides which reducer each mapped
+row goes to; in the eval workload it is a hash of the (user, cluster) key
+pair.  The string hashing (FNV-1a) stays in rust — this kernel consumes
+the resulting ``uint32`` key hashes and applies the avalanche mix, blocked
+over the batch so each block's working set fits comfortably in VMEM.
+
+Hardware adaptation note (DESIGN.md §2): this is an elementwise integer
+kernel — on TPU it is a VPU (vector unit) workload, not MXU; BlockSpec
+tiles the batch into VMEM-resident chunks.  ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot run Mosaic custom-calls, and interpret-mode
+lowering produces plain HLO that the rust runtime executes directly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Tuned in the §Perf pass: one block of 256 uint32 x 2 inputs + 1 output
+# = 3 KiB of VMEM — far under budget; larger blocks don't change interpret
+# numerics, real-TPU sizing is documented in DESIGN.md §Perf.
+BLOCK = 256
+
+# numpy scalars (not jnp arrays): they fold into immediates instead of
+# becoming captured constants, which Pallas kernels forbid.
+MIX_A = np.uint32(0x9E3779B1)
+MIX_B = np.uint32(0x85EBCA77)
+MIX_C = np.uint32(0xC2B2AE35)
+
+
+def _mix_kernel(user_ref, cluster_ref, out_ref):
+    """One VMEM block of the avalanche mix."""
+    u = user_ref[...]
+    c = cluster_ref[...]
+    h = (u * MIX_A) ^ (c * MIX_B)
+    h = h ^ (h >> np.uint32(16))
+    h = h * MIX_C
+    h = h ^ (h >> np.uint32(13))
+    out_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def shuffle_mix(user_hash: jnp.ndarray, cluster_hash: jnp.ndarray, block: int = BLOCK):
+    """uint32[B] x uint32[B] -> uint32[B]; B must be a multiple of `block`."""
+    (b,) = user_hash.shape
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,
+    )(user_hash.astype(jnp.uint32), cluster_hash.astype(jnp.uint32))

@@ -1,0 +1,36 @@
+"""L2: the JAX compute graphs for both streaming-processor stages.
+
+These are the functions ``python/compile/aot.py`` lowers to HLO text once
+at build time; the rust coordinator executes them through PJRT on its hot
+path (``rust/src/compute/hlo.rs``).  They call the L1 Pallas kernels so
+the kernels lower into the same HLO module.
+
+Fixed AOT shapes (mirrored in ``rust/src/runtime/mod.rs``):
+
+    B = 1024 rows per compiled batch
+    G = 256 group slots per compiled aggregation
+"""
+
+import jax.numpy as jnp
+
+from .kernels import segment_agg, shuffle_hash
+
+B = 1024
+G = 256
+
+
+def mapper_stage(user_hash: jnp.ndarray, cluster_hash: jnp.ndarray, num_reducers: jnp.ndarray):
+    """The shuffle function: (uint32[B], uint32[B], uint32[]) -> (uint32[B],).
+
+    The avalanche mix runs in the Pallas kernel; the modulo by the runtime
+    ``num_reducers`` scalar stays in the surrounding jax function (fused by
+    XLA) so the kernel is shape- and constant-static.
+    """
+    mixed = shuffle_hash.shuffle_mix(user_hash, cluster_hash)
+    return (mixed % num_reducers.astype(jnp.uint32),)
+
+
+def reducer_stage(slots: jnp.ndarray, ts: jnp.ndarray, valid: jnp.ndarray):
+    """Grouped aggregation: (int32[B], f32[B], f32[B]) -> (f32[G], f32[G])."""
+    counts, max_ts = segment_agg.segment_agg(slots, ts, valid, num_groups=G)
+    return counts, max_ts

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the compiled compute path —
+hypothesis sweeps shapes and values; assert_allclose (exact for integer
+and count outputs) against the reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, segment_agg, shuffle_hash
+
+# ---------------------------------------------------------------------------
+# shuffle_mix
+# ---------------------------------------------------------------------------
+
+
+def rust_mix_scalar(u: int, c: int) -> int:
+    """The spec transcribed a third time, in plain Python, as a tie-breaker
+    for the cross-language contract (rust/src/compute/mod.rs)."""
+    M = 0xFFFFFFFF
+    h = ((u * 0x9E3779B1) & M) ^ ((c * 0x85EBCA77) & M)
+    h ^= h >> 16
+    h = (h * 0xC2B2AE35) & M
+    h ^= h >> 13
+    return h
+
+
+def test_mix_matches_ref_small():
+    u = jnp.arange(256, dtype=jnp.uint32)
+    c = jnp.arange(256, dtype=jnp.uint32) * jnp.uint32(7919)
+    out = shuffle_hash.shuffle_mix(u, c)
+    expect = ref.shuffle_mix_ref(u, c)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_mix_matches_python_spec():
+    u = np.array([0, 1, 2, 0xFFFFFFFF, 0x811C9DC5, 12345], dtype=np.uint32)
+    c = np.array([0, 1, 0xDEADBEEF, 0xFFFFFFFF, 42, 99999], dtype=np.uint32)
+    # pad to one block
+    pad = shuffle_hash.BLOCK - len(u)
+    u_p = np.concatenate([u, np.zeros(pad, np.uint32)])
+    c_p = np.concatenate([c, np.zeros(pad, np.uint32)])
+    out = np.asarray(shuffle_hash.shuffle_mix(jnp.asarray(u_p), jnp.asarray(c_p)))
+    for i in range(len(u)):
+        assert out[i] == rust_mix_scalar(int(u[i]), int(c[i])), f"row {i}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_mix_matches_ref_hypothesis(blocks, seed):
+    rng = np.random.default_rng(seed)
+    b = blocks * shuffle_hash.BLOCK
+    u = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+    c = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+    out = shuffle_hash.shuffle_mix(jnp.asarray(u), jnp.asarray(c))
+    expect = ref.shuffle_mix_ref(jnp.asarray(u), jnp.asarray(c))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_mix_rejects_ragged_batch():
+    u = jnp.zeros(100, dtype=jnp.uint32)  # not a multiple of BLOCK
+    with pytest.raises(AssertionError):
+        shuffle_hash.shuffle_mix(u, u)
+
+
+# ---------------------------------------------------------------------------
+# segment_agg
+# ---------------------------------------------------------------------------
+
+
+def run_agg(slots, ts, valid, g, block_b=None):
+    kwargs = {} if block_b is None else {"block_b": block_b}
+    counts, maxes = segment_agg.segment_agg(
+        jnp.asarray(slots), jnp.asarray(ts), jnp.asarray(valid), num_groups=g, **kwargs
+    )
+    return np.asarray(counts), np.asarray(maxes)
+
+
+def test_agg_matches_ref_small():
+    b, g = 512, 16
+    rng = np.random.default_rng(0)
+    slots = rng.integers(0, g, size=b).astype(np.int32)
+    ts = rng.uniform(0, 1e6, size=b).astype(np.float32)
+    valid = (rng.uniform(size=b) < 0.8).astype(np.float32)
+    counts, maxes = run_agg(slots, ts, valid, g)
+    ec, em = ref.segment_agg_ref(jnp.asarray(slots), jnp.asarray(ts), jnp.asarray(valid), g)
+    np.testing.assert_array_equal(counts, np.asarray(ec))
+    np.testing.assert_allclose(maxes, np.asarray(em), rtol=0, atol=0)
+
+
+def test_agg_multiblock_accumulation():
+    # Grid > 1: the accumulator must carry across batch blocks.
+    b, g = 4 * segment_agg.BLOCK_B, 8
+    slots = np.arange(b, dtype=np.int32) % g
+    ts = np.arange(b, dtype=np.float32)
+    valid = np.ones(b, dtype=np.float32)
+    counts, maxes = run_agg(slots, ts, valid, g)
+    assert counts.sum() == b
+    np.testing.assert_array_equal(counts, np.full(g, b // g, np.float32))
+    # max of slot s is the last occurrence: b - g + s
+    np.testing.assert_array_equal(maxes, (np.arange(g) + b - g).astype(np.float32))
+
+
+def test_agg_empty_slots_are_neg_inf():
+    b, g = 512, 8
+    slots = np.zeros(b, dtype=np.int32)  # everything in slot 0
+    ts = np.ones(b, dtype=np.float32)
+    valid = np.ones(b, dtype=np.float32)
+    counts, maxes = run_agg(slots, ts, valid, g)
+    assert counts[0] == b
+    assert (counts[1:] == 0).all()
+    assert maxes[0] == 1.0
+    assert np.isneginf(maxes[1:]).all()
+
+
+def test_agg_all_invalid():
+    b, g = 512, 4
+    counts, maxes = run_agg(
+        np.zeros(b, np.int32), np.ones(b, np.float32), np.zeros(b, np.float32), g
+    )
+    assert (counts == 0).all()
+    assert np.isneginf(maxes).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    g=st.sampled_from([1, 2, 8, 64, 256]),
+    valid_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_agg_matches_ref_hypothesis(blocks, g, valid_frac, seed):
+    rng = np.random.default_rng(seed)
+    b = blocks * segment_agg.BLOCK_B
+    slots = rng.integers(0, g, size=b).astype(np.int32)
+    ts = rng.uniform(-1e5, 1e5, size=b).astype(np.float32)
+    valid = (rng.uniform(size=b) < valid_frac).astype(np.float32)
+    counts, maxes = run_agg(slots, ts, valid, g)
+    ec, em = ref.segment_agg_ref(jnp.asarray(slots), jnp.asarray(ts), jnp.asarray(valid), g)
+    np.testing.assert_array_equal(counts, np.asarray(ec))
+    np.testing.assert_array_equal(maxes, np.asarray(em))
+    # conservation: counts sum to the number of valid rows
+    assert counts.sum() == valid.sum()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_agg_block_size_invariance(seed):
+    # The same inputs through different BlockSpec tilings must agree —
+    # the grid accumulation is associative.
+    rng = np.random.default_rng(seed)
+    b, g = 1024, 32
+    slots = rng.integers(0, g, size=b).astype(np.int32)
+    ts = rng.uniform(0, 1e4, size=b).astype(np.float32)
+    valid = np.ones(b, dtype=np.float32)
+    c1, m1 = run_agg(slots, ts, valid, g, block_b=256)
+    c2, m2 = run_agg(slots, ts, valid, g, block_b=1024)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(m1, m2)

@@ -1,0 +1,162 @@
+//! End-to-end bench for fig 5.1 / the scale table: sustained reducer
+//! ingest throughput of the full streaming processor (simulated cluster,
+//! native and — when artifacts exist — HLO compute).
+//!
+//! Prints per-reducer mean/max MB/s and aggregate rows/s; EXPERIMENTS.md
+//! compares the *shape* against the paper's 95 MB/s-per-reducer result.
+
+use yt_stream::coordinator::ComputeMode;
+use yt_stream::figures::scenario::{start, ScenarioCfg};
+use yt_stream::metrics::hub::names;
+
+fn run_once(label: &str, compute: ComputeMode, mappers: usize, reducers: usize) {
+    let scenario = start(ScenarioCfg {
+        mappers,
+        reducers,
+        compute,
+        speedup: 1,
+        msgs_per_sec: 1500.0,
+        seed: 0xF161,
+        ..ScenarioCfg::default()
+    });
+    // Warm up, then measure a steady window.
+    std::thread::sleep(std::time::Duration::from_secs(2));
+    let t0_rows = scenario.env.metrics.get_counter(names::REDUCER_ROWS);
+    let t0_bytes = scenario.env.metrics.get_counter(names::REDUCER_BYTES);
+    let t0 = std::time::Instant::now();
+    std::thread::sleep(std::time::Duration::from_secs(5));
+    let dt = t0.elapsed().as_secs_f64();
+    let rows = scenario.env.metrics.get_counter(names::REDUCER_ROWS) - t0_rows;
+    let bytes = scenario.env.metrics.get_counter(names::REDUCER_BYTES) - t0_bytes;
+
+    let per_reducer: Vec<f64> = scenario
+        .env
+        .metrics
+        .series_with_prefix("reducer/")
+        .iter()
+        .filter(|s| s.name().contains("ingest"))
+        .filter_map(|s| s.mean_since(2_000))
+        .collect();
+    let max_thpt = per_reducer.iter().fold(0.0f64, |a, &b| a.max(b));
+    let lag: Vec<f64> = scenario
+        .env
+        .metrics
+        .series_with_prefix("mapper/")
+        .iter()
+        .filter(|s| s.name().ends_with("read_lag_ms"))
+        .filter_map(|s| s.mean_since(2_000))
+        .collect();
+    let mean_lag = lag.iter().sum::<f64>() / lag.len().max(1) as f64;
+    scenario.stop();
+
+    println!(
+        "bench fig5.1/{label:<28} agg={:.2} MB/s rows={:.0}/s max_per_reducer={:.2} MB/s mean_read_lag={:.0} ms",
+        bytes as f64 / dt / 1e6,
+        rows as f64 / dt,
+        max_thpt / 1e6,
+        mean_lag,
+    );
+}
+
+/// Capacity mode: drain a large pre-filled backlog as fast as possible —
+/// measures the pipeline's own ceiling, not the producers'.
+fn run_drain(label: &str, compute: ComputeMode, mappers: usize, reducers: usize, messages: usize) {
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::coordinator::{InputSpec, StreamingProcessor};
+    use yt_stream::figures::scenario::fill_static_input;
+    use yt_stream::queue::input_name_table;
+    use yt_stream::queue::ordered_table::OrderedTable;
+    use yt_stream::util::yson::Yson;
+    use yt_stream::util::Clock;
+    use yt_stream::workload::analytics::{analytics_mapper_factory, analytics_reducer_factory};
+
+    let clock = Clock::realtime();
+    let env = ClusterEnv::new(clock.clone(), 0xD12A);
+    let table = OrderedTable::new("//in/drain", input_name_table(), mappers, env.accounting.clone());
+    fill_static_input(&table, &clock, messages, 0xD12A);
+    let input = InputSpec::Ordered(table);
+    let mut cfg = ScenarioCfg {
+        mappers,
+        reducers,
+        compute,
+        seed: 0xD12A,
+        memory_limit_bytes: 64 << 20,
+        ..ScenarioCfg::default()
+    }
+    .processor_config();
+    // §Perf iteration 4: bigger reads + fetches cut per-cycle fixed costs
+    // (state lookups, RPC fan-out, commit overhead) on the drain path.
+    cfg.read_batch_rows = std::env::var("DRAIN_READ_BATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cfg.read_batch_rows);
+    cfg.fetch_count = std::env::var("DRAIN_FETCH_COUNT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cfg.fetch_count);
+
+    let t0 = std::time::Instant::now();
+    let processor = StreamingProcessor::launch(
+        cfg,
+        env.clone(),
+        input.clone(),
+        analytics_mapper_factory(compute),
+        analytics_reducer_factory(compute),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+    // Wait until all reducer rows are committed; time the run up to the
+    // *last observed progress* so idle stability-polling doesn't bias the
+    // capacity number.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    let mut last = 0;
+    let mut stable = 0;
+    let mut t_last_progress = std::time::Instant::now();
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let r = env.metrics.get_counter(names::REDUCER_ROWS);
+        if r != last {
+            t_last_progress = std::time::Instant::now();
+            stable = 0;
+        } else if r > 0 {
+            stable += 1;
+            if stable > 30 && input.retained_rows() == 0 {
+                break;
+            }
+        }
+        last = r;
+    }
+    let dt = (t_last_progress - t0).as_secs_f64().max(0.001);
+    let rows = env.metrics.get_counter(names::REDUCER_ROWS);
+    let bytes = env.metrics.get_counter(names::REDUCER_BYTES);
+    let in_bytes = env.metrics.get_counter(names::MAPPER_BYTES_READ);
+    processor.stop();
+    println!(
+        "bench fig5.1-drain/{label:<22} input={:.1} MB reduced={rows} rows wall={dt:.2}s \
+         ingest_capacity={:.2} MB/s reduce_capacity={:.2} MB/s ({:.0} rows/s)",
+        in_bytes as f64 / 1e6,
+        in_bytes as f64 / dt / 1e6,
+        bytes as f64 / dt / 1e6,
+        rows as f64 / dt,
+    );
+}
+
+fn main() {
+    println!("== fig 5.1: reducer throughput (end-to-end) ==");
+    run_once("native_8m_2r", ComputeMode::Native, 8, 2);
+    run_once("native_8m_4r", ComputeMode::Native, 8, 4);
+    let have_artifacts =
+        yt_stream::compute::hlo::HloStage::load(std::path::Path::new("artifacts")).is_ok();
+    if have_artifacts {
+        run_once("hlo_8m_2r", ComputeMode::Hlo, 8, 2);
+    } else {
+        eprintln!("note: artifacts missing, skipping hlo variant");
+    }
+    // Capacity: drain a pre-filled backlog (the paper's relevant metric —
+    // "the maximum input ingestion speed by reducers").
+    run_drain("native_8m_2r", ComputeMode::Native, 8, 2, 24_000);
+    run_drain("native_8m_4r", ComputeMode::Native, 8, 4, 24_000);
+    if have_artifacts {
+        run_drain("hlo_8m_2r", ComputeMode::Hlo, 8, 2, 12_000);
+    }
+}

@@ -1,0 +1,216 @@
+//! Micro-benchmarks of the hot paths identified in EXPERIMENTS.md §Perf:
+//! row codec, shuffle hash, compute stages (native + HLO), GetRows round
+//! trip, dynamic-table commit, window push/ack.
+//!
+//! Run with `cargo bench --bench micro_hot_paths`. Output is one line per
+//! benchmark (benchkit format).
+
+use std::sync::Arc;
+
+use yt_stream::compute::native::NativeStage;
+use yt_stream::compute::{fnv1a32, ComputeStage};
+use yt_stream::row;
+use yt_stream::rows::{codec, NameTable, RowsetBuilder, UnversionedRowset};
+use yt_stream::util::benchkit::{black_box, Bench};
+use yt_stream::util::{Clock, Prng};
+
+fn sample_rowset(rows: usize) -> UnversionedRowset {
+    let nt = NameTable::new(&["user", "cluster", "ts"]);
+    let mut b = RowsetBuilder::new(nt);
+    let mut rng = Prng::seeded(1);
+    for i in 0..rows {
+        b.push(row![
+            format!("user-{}", rng.next_below(500)),
+            "hahn",
+            i as i64
+        ]);
+    }
+    b.build()
+}
+
+fn bench_codec() {
+    let rs = sample_rowset(1024);
+    let bytes = codec::encode_rowset(&rs);
+    let payload = rs.byte_size() as u64;
+
+    Bench::new("codec/encode_rowset_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            black_box(codec::encode_rowset(&rs));
+        });
+    Bench::new("codec/decode_rowset_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            black_box(codec::decode_rowset(&bytes).unwrap());
+        });
+}
+
+fn bench_hash_and_stages() {
+    let users: Vec<String> = (0..1024).map(|i| format!("user-{i}")).collect();
+    Bench::new("hash/fnv1a32_1024_keys")
+        .throughput_items(1024)
+        .run(|| {
+            for u in &users {
+                black_box(fnv1a32(u));
+            }
+        });
+
+    let mut rng = Prng::seeded(2);
+    let uh: Vec<u32> = (0..4096).map(|_| rng.next_u64() as u32).collect();
+    let ch: Vec<u32> = (0..4096).map(|_| rng.next_u64() as u32).collect();
+    let hu: Vec<bool> = (0..4096).map(|_| rng.chance(0.15)).collect();
+    let native = NativeStage;
+    Bench::new("stage/native_map_4096")
+        .throughput_items(4096)
+        .run(|| {
+            black_box(native.map_stage(&uh, &ch, &hu, 10));
+        });
+
+    let slots: Vec<u32> = (0..4096).map(|_| rng.next_below(256) as u32).collect();
+    let ts: Vec<f32> = (0..4096).map(|_| rng.next_f64() as f32).collect();
+    let valid = vec![true; 4096];
+    Bench::new("stage/native_reduce_4096x256")
+        .throughput_items(4096)
+        .run(|| {
+            black_box(native.reduce_stage(&slots, &ts, &valid, 256));
+        });
+
+    // HLO stages (skipped without artifacts).
+    if let Ok(hlo) = yt_stream::compute::hlo::HloStage::load(std::path::Path::new("artifacts")) {
+        Bench::new("stage/hlo_map_4096")
+            .throughput_items(4096)
+            .run(|| {
+                black_box(hlo.map_stage(&uh, &ch, &hu, 10));
+            });
+        Bench::new("stage/hlo_reduce_4096x256")
+            .throughput_items(4096)
+            .run(|| {
+                black_box(hlo.reduce_stage(&slots, &ts, &valid, 256));
+            });
+    } else {
+        eprintln!("note: artifacts missing, skipping hlo stage benches");
+    }
+}
+
+fn bench_rpc_getrows() {
+    use yt_stream::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService};
+
+    struct Server {
+        attachment: Vec<u8>,
+    }
+    impl RpcService for Server {
+        fn handle(&self, req: Request) -> Result<Response, String> {
+            match req {
+                Request::GetRows(_) => Ok(Response::GetRows(yt_stream::rpc::RspGetRows {
+                    row_count: 1024,
+                    last_shuffle_row_index: 1023,
+                    attachment: self.attachment.clone(),
+                })),
+                Request::Ping => Ok(Response::Pong),
+            }
+        }
+    }
+
+    let net = RpcNet::new(Clock::realtime(), Prng::seeded(3));
+    let attachment = codec::encode_rowset(&sample_rowset(1024));
+    let bytes = attachment.len() as u64;
+    net.register("m0", Arc::new(Server { attachment }));
+    Bench::new("rpc/getrows_roundtrip_1024rows")
+        .throughput_bytes(bytes)
+        .run(|| {
+            let rsp = net
+                .call(
+                    "r0",
+                    "m0",
+                    Request::GetRows(ReqGetRows {
+                        count: 1024,
+                        reducer_index: 0,
+                        committed_row_index: -1,
+                        mapper_id: "g".into(),
+                    }),
+                )
+                .unwrap();
+            black_box(rsp);
+        });
+}
+
+fn bench_dyntable() {
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::rows::{ColumnSchema, ColumnType, TableSchema};
+    use yt_stream::storage::WriteCategory;
+
+    let env = ClusterEnv::new(Clock::realtime(), 4);
+    env.store
+        .create_table(
+            "t",
+            TableSchema::new(vec![
+                ColumnSchema::key("k", ColumnType::Int64),
+                ColumnSchema::value("v", ColumnType::Str),
+            ]),
+            WriteCategory::UserOutput,
+        )
+        .unwrap();
+    let mut k = 0i64;
+    Bench::new("dyntable/txn_rmw_commit").run(|| {
+        k += 1;
+        let key = k % 1000;
+        let mut txn = env.store.begin();
+        let _ = txn
+            .lookup("t", &[yt_stream::rows::Value::Int64(key)])
+            .unwrap();
+        txn.write("t", row![key, "value"]).unwrap();
+        txn.commit().unwrap();
+    });
+}
+
+fn bench_window() {
+    use yt_stream::coordinator::bucket::{BucketRow, BucketState};
+    use yt_stream::coordinator::window::{WindowEntry, WindowQueue};
+    use yt_stream::queue::ContinuationToken;
+
+    Bench::new("window/push_route_ack_trim_64rows")
+        .throughput_items(64)
+        .run(|| {
+            let mut window = WindowQueue::new();
+            let mut bucket = BucketState::new();
+            let rowset = sample_rowset(64);
+            let byte_size = rowset.byte_size();
+            let entry_index = window.next_entry_index();
+            window.push(WindowEntry {
+                entry_index,
+                rowset,
+                input_begin: 0,
+                input_end: 64,
+                shuffle_begin: 0,
+                shuffle_end: 64,
+                continuation_token: ContinuationToken::initial(),
+                bucket_ptr_count: 0,
+                byte_size,
+                read_ts_ms: 0,
+            });
+            for i in 0..64 {
+                if bucket.push(BucketRow {
+                    shuffle_index: i,
+                    entry_index,
+                }) {
+                    window.get_mut(entry_index).unwrap().bucket_ptr_count += 1;
+                }
+            }
+            let ack = bucket.ack(63);
+            if let Some(old) = ack.old_head_entry {
+                if ack.new_head_entry != ack.old_head_entry {
+                    window.get_mut(old).unwrap().bucket_ptr_count -= 1;
+                }
+            }
+            black_box(window.trim_front());
+        });
+}
+
+fn main() {
+    println!("== micro hot paths ==");
+    bench_codec();
+    bench_hash_and_stages();
+    bench_rpc_getrows();
+    bench_dyntable();
+    bench_window();
+}

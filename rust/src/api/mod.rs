@@ -1,0 +1,233 @@
+//! The user API (§4.1): `IMapper`, `IReducer` and their creation context.
+//!
+//! To run a streaming processor, users provide implementations of
+//! [`Mapper`] and [`Reducer`] plus factories ([`MapperFactory`],
+//! [`ReducerFactory`]) mirroring the paper's `CreateMapper`/`CreateReducer`
+//! free functions: each receives the user's own YSON config node, a
+//! [`Client`] for talking to the rest of YT, the input schema (mappers)
+//! and the worker's spec within the processor.
+
+use std::sync::Arc;
+
+use crate::cypress::Cypress;
+use crate::dyntable::{DynTableStore, Transaction};
+use crate::rows::{NameTable, UnversionedRowset};
+use crate::util::yson::Yson;
+use crate::util::{Clock, Guid};
+
+/// A mapped batch plus the per-row shuffle assignment (§4.1.1).
+///
+/// `partition_indexes[i]` is the index of the reducer that must process
+/// `rowset.rows()[i]`; the vectors have equal length. The mapping is
+/// one-to-many per input row: the output may hold more or fewer rows than
+/// the input and a different schema.
+#[derive(Debug, Clone)]
+pub struct PartitionedRowset {
+    pub rowset: UnversionedRowset,
+    pub partition_indexes: Vec<usize>,
+}
+
+impl PartitionedRowset {
+    pub fn empty(name_table: Arc<NameTable>) -> PartitionedRowset {
+        PartitionedRowset {
+            rowset: UnversionedRowset::empty(name_table),
+            partition_indexes: Vec::new(),
+        }
+    }
+
+    /// Internal consistency check: one partition index per row, all within
+    /// `num_reducers`.
+    pub fn validate(&self, num_reducers: usize) -> Result<(), String> {
+        if self.rowset.len() != self.partition_indexes.len() {
+            return Err(format!(
+                "PartitionedRowset: {} rows but {} partition indexes",
+                self.rowset.len(),
+                self.partition_indexes.len()
+            ));
+        }
+        if let Some(bad) = self.partition_indexes.iter().find(|&&p| p >= num_reducers) {
+            return Err(format!(
+                "PartitionedRowset: partition index {bad} out of range (num_reducers={num_reducers})"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The user's map function (§4.1.1). **Must be deterministic** — identical
+/// input rowsets must produce identical output (rows *and* partition
+/// indexes), otherwise exactly-once cannot be guaranteed across re-reads
+/// (§4.6).
+pub trait Mapper: Send {
+    fn map(&mut self, rows: UnversionedRowset) -> PartitionedRowset;
+}
+
+/// The user's reduce function (§4.1.2).
+///
+/// May start a transaction via [`Client::begin`], apply arbitrary table
+/// mutations, and return it **uncommitted** — the reducer instance adds
+/// its meta-state update and commits both atomically (exactly-once).
+/// Returning `None` makes the reducer open the transaction itself.
+pub trait Reducer: Send {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction>;
+}
+
+/// Handle to YT services, passed to user factories (the paper's
+/// `IClientPtr`).
+#[derive(Clone)]
+pub struct Client {
+    pub store: Arc<DynTableStore>,
+    pub cypress: Arc<Cypress>,
+    pub clock: Clock,
+}
+
+impl Client {
+    /// Begin a dynamic-table transaction.
+    pub fn begin(&self) -> Transaction {
+        self.store.begin()
+    }
+}
+
+/// Mapper specification within the streaming processor (§4.5: "the GUID of
+/// the streaming processor, the path of the corresponding state table, the
+/// worker's index and GUID, as well as the number of reducers").
+#[derive(Debug, Clone)]
+pub struct MapperSpec {
+    pub processor_guid: Guid,
+    pub state_table: String,
+    pub index: usize,
+    pub guid: Guid,
+    pub num_reducers: usize,
+}
+
+/// Reducer specification within the streaming processor.
+#[derive(Debug, Clone)]
+pub struct ReducerSpec {
+    pub processor_guid: Guid,
+    pub state_table: String,
+    pub index: usize,
+    pub guid: Guid,
+    pub num_mappers: usize,
+}
+
+/// `CreateMapper` (§4.1.1): user config node, client, input schema, spec.
+pub type MapperFactory =
+    Arc<dyn Fn(&Yson, &Client, Arc<NameTable>, &MapperSpec) -> Box<dyn Mapper> + Send + Sync>;
+
+/// `CreateReducer` (§4.1.2): user config node, client, spec.
+pub type ReducerFactory =
+    Arc<dyn Fn(&Yson, &Client, &ReducerSpec) -> Box<dyn Reducer> + Send + Sync>;
+
+/// Deterministic hash-partitioning helper (the "common functionality, such
+/// as hash partitioning" the paper's §6 wants in base classes). FNV-1a over
+/// the key bytes, reduced modulo `num_reducers`.
+pub fn hash_partition(key: &str, num_reducers: usize) -> usize {
+    debug_assert!(num_reducers > 0);
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // Final avalanche so short keys spread well.
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^= h >> 33;
+    (h % num_reducers as u64) as usize
+}
+
+/// Adapter: build a [`Mapper`] from a plain function (tests, examples).
+pub struct FnMapper<F>(pub F);
+
+impl<F: FnMut(UnversionedRowset) -> PartitionedRowset + Send> Mapper for FnMapper<F> {
+    fn map(&mut self, rows: UnversionedRowset) -> PartitionedRowset {
+        (self.0)(rows)
+    }
+}
+
+/// Adapter: build a [`Reducer`] from a plain function.
+pub struct FnReducer<F>(pub F);
+
+impl<F: FnMut(UnversionedRowset) -> Option<Transaction> + Send> Reducer for FnReducer<F> {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction> {
+        (self.0)(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::rows::RowsetBuilder;
+
+    #[test]
+    fn partitioned_rowset_validation() {
+        let nt = NameTable::new(&["k"]);
+        let mut b = RowsetBuilder::new(nt.clone());
+        b.push(row![1i64]);
+        b.push(row![2i64]);
+        let ok = PartitionedRowset {
+            rowset: b.build(),
+            partition_indexes: vec![0, 1],
+        };
+        assert!(ok.validate(2).is_ok());
+        assert!(ok.validate(1).is_err(), "partition index out of range");
+
+        let empty = PartitionedRowset::empty(nt.clone());
+        assert!(empty.validate(1).is_ok());
+
+        let mut b2 = RowsetBuilder::new(nt);
+        b2.push(row![1i64]);
+        let mismatched = PartitionedRowset {
+            rowset: b2.build(),
+            partition_indexes: vec![],
+        };
+        assert!(mismatched.validate(1).is_err());
+    }
+
+    #[test]
+    fn hash_partition_in_range_and_spread() {
+        let n = 10;
+        let mut counts = vec![0u32; n];
+        for i in 0..10_000 {
+            let p = hash_partition(&format!("user{i}"), n);
+            assert!(p < n);
+            counts[p] += 1;
+        }
+        // Roughly uniform: no bucket under 5% or over 20%.
+        for c in counts {
+            assert!((500..=2000).contains(&c), "skewed bucket: {c}");
+        }
+    }
+
+    #[test]
+    fn hash_partition_deterministic() {
+        assert_eq!(hash_partition("root", 7), hash_partition("root", 7));
+        assert_ne!(
+            hash_partition("root", 1000),
+            hash_partition("r00t", 1000),
+            "different keys should (overwhelmingly) differ"
+        );
+    }
+
+    #[test]
+    fn fn_adapters() {
+        let nt = NameTable::new(&["k"]);
+        let mut m = FnMapper(|rows: UnversionedRowset| {
+            let n = rows.len();
+            PartitionedRowset {
+                rowset: rows,
+                partition_indexes: vec![0; n],
+            }
+        });
+        let mut b = RowsetBuilder::new(nt.clone());
+        b.push(row![5i64]);
+        let out = m.map(b.build());
+        assert_eq!(out.rowset.len(), 1);
+        assert_eq!(out.partition_indexes, vec![0]);
+
+        let mut r = FnReducer(|_rows: UnversionedRowset| None);
+        let mut b2 = RowsetBuilder::new(nt);
+        b2.push(row![5i64]);
+        assert!(r.reduce(b2.build()).is_none());
+    }
+}

@@ -1,0 +1,285 @@
+//! The persisted-shuffle baseline: classic MapReduce-style delivery.
+//!
+//! Google MapReduce stores mapped partitions on disk before reducers
+//! collect them (§2.1); MapReduce Online pipelines batches but "these
+//! batches are still written to storage" for fault tolerance (§2.2). This
+//! module reproduces that design over the *same* substrates and workload
+//! so the write-amplification comparison is apples-to-apples:
+//!
+//! * every mapped batch is encoded and persisted to the chunk store
+//!   ([`WriteCategory::ShufflePersist`]) split per destination reducer,
+//! * reducers read chunks back, process them, and commit output + their
+//!   offset meta-state,
+//! * chunks are deleted once consumed (deletes don't refund written
+//!   bytes — WA counts writes).
+//!
+//! The pipeline is synchronous (WA is a byte metric, not a timing one);
+//! `figures wa` runs both pipelines over an identical pre-filled input and
+//! prints the headline table.
+
+use std::sync::Arc;
+
+use crate::api::{Client, Mapper, Reducer};
+use crate::coordinator::InputSpec;
+use crate::metrics::WaReport;
+use crate::queue::ContinuationToken;
+use crate::rows::{codec, UnversionedRowset};
+use crate::storage::{ChunkStore, WriteAccounting, WriteCategory};
+
+/// Baseline tuning.
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    pub read_batch_rows: usize,
+    pub num_reducers: usize,
+    /// Persist reducer offset meta-state every N consumed chunks
+    /// (MapReduce Online checkpoints; keeps the comparison fair by giving
+    /// the baseline the same meta writes ours has).
+    pub checkpoint_every: usize,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig {
+            read_batch_rows: 256,
+            num_reducers: 2,
+            checkpoint_every: 4,
+        }
+    }
+}
+
+/// Result of one baseline run.
+#[derive(Debug)]
+pub struct BaselineRunStats {
+    pub input_rows: u64,
+    pub input_bytes: u64,
+    pub shuffled_rows: u64,
+    pub reduced_batches: u64,
+    pub wall_ms: u64,
+}
+
+/// Run the persisted-shuffle pipeline over everything currently in the
+/// input, with the same user map/reduce code the streaming processor runs.
+///
+/// `accounting` must be the same instance the input/user tables use so the
+/// report composes; returns (stats, report).
+pub fn run_persistent_shuffle(
+    label: &str,
+    cfg: &BaselineConfig,
+    client: &Client,
+    input: &InputSpec,
+    accounting: &Arc<WriteAccounting>,
+    mapper_for_partition: impl Fn(usize) -> Box<dyn Mapper>,
+    reducer_for_index: impl Fn(usize) -> Box<dyn Reducer>,
+) -> (BaselineRunStats, WaReport) {
+    let start_snapshot = accounting.snapshot();
+    let t0 = client.clock.now_ms();
+    let chunk_store = ChunkStore::new(WriteCategory::ShufflePersist, accounting.clone());
+
+    let mut input_rows = 0u64;
+    let mut input_bytes = 0u64;
+    let mut shuffled_rows = 0u64;
+
+    // Map phase: read every partition to exhaustion, persist each mapped
+    // batch split by destination reducer.
+    let mut reducer_chunks: Vec<Vec<crate::storage::ChunkId>> =
+        vec![Vec::new(); cfg.num_reducers];
+    for partition in 0..input.partition_count() {
+        let mut mapper = mapper_for_partition(partition);
+        let mut reader = input.reader(partition);
+        let mut idx = 0i64;
+        let mut token = ContinuationToken::initial();
+        loop {
+            let batch = match reader.read(idx, idx + cfg.read_batch_rows as i64, &token) {
+                Ok(b) => b,
+                Err(_) => break,
+            };
+            if batch.rowset.is_empty() {
+                break;
+            }
+            idx += batch.rowset.len() as i64;
+            token = batch.next_token;
+            input_rows += batch.rowset.len() as u64;
+            input_bytes += batch.rowset.byte_size() as u64;
+
+            let mapped = mapper.map(batch.rowset);
+            shuffled_rows += mapped.rowset.len() as u64;
+            // Split by destination and persist — the classic shuffle write.
+            for r in 0..cfg.num_reducers {
+                let picks: Vec<usize> = mapped
+                    .partition_indexes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &p)| p == r)
+                    .map(|(i, _)| i)
+                    .collect();
+                if picks.is_empty() {
+                    continue;
+                }
+                let sub = mapped.rowset.select(&picks);
+                let chunk = chunk_store.put(codec::encode_rowset(&sub));
+                reducer_chunks[r].push(chunk);
+            }
+        }
+    }
+
+    // Reduce phase: consume chunks, commit user effects + offset
+    // checkpoints.
+    let mut reduced_batches = 0u64;
+    for (r, chunks) in reducer_chunks.iter().enumerate() {
+        let mut reducer = reducer_for_index(r);
+        for (i, chunk) in chunks.iter().enumerate() {
+            let bytes = chunk_store.get(*chunk).expect("chunk vanished");
+            let rowset: UnversionedRowset =
+                codec::decode_rowset(&bytes).expect("chunk self-corruption");
+            if let Some(txn) = reducer.reduce(rowset) {
+                txn.commit().expect("baseline commit failed");
+            }
+            chunk_store.delete(*chunk);
+            reduced_batches += 1;
+            if (i + 1) % cfg.checkpoint_every.max(1) == 0 {
+                // Offset checkpoint: a small meta write, like ours.
+                accounting.record(WriteCategory::ReducerMeta, 64);
+            }
+        }
+    }
+
+    let end_snapshot = accounting.snapshot();
+    let delta = end_snapshot.delta_since(&start_snapshot);
+    let stats = BaselineRunStats {
+        input_rows,
+        input_bytes,
+        shuffled_rows,
+        reduced_batches,
+        wall_ms: client.clock.now_ms() - t0,
+    };
+    (stats, WaReport::new(label, input_bytes, delta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::processor::ClusterEnv;
+    use crate::coordinator::ComputeMode;
+    use crate::queue::input_name_table;
+    use crate::queue::ordered_table::OrderedTable;
+    use crate::row;
+    use crate::rows::UnversionedRow;
+    use crate::util::Clock;
+    use crate::workload::analytics::{
+        analytics_mapper_factory, analytics_reducer_factory, ensure_output_table, OUTPUT_TABLE,
+    };
+    use crate::api::{MapperSpec, ReducerSpec};
+    use crate::util::yson::Yson;
+    use crate::util::Guid;
+
+    fn fill_input(table: &Arc<OrderedTable>, partitions: usize, rows_per: usize) {
+        for p in 0..partitions {
+            let rows: Vec<UnversionedRow> = (0..rows_per)
+                .map(|i| {
+                    row![
+                        format!(
+                            "ts={} cluster=hahn method=M user=u{} dur=1\n\
+                             ts={} cluster=hahn method=M dur=2",
+                            i,
+                            i % 7,
+                            i
+                        ),
+                        i as i64
+                    ]
+                })
+                .collect();
+            table.append(p, rows).unwrap();
+        }
+    }
+
+    #[test]
+    fn baseline_persists_payload_and_produces_output() {
+        let env = ClusterEnv::new(Clock::realtime(), 3);
+        let client = env.client();
+        ensure_output_table(&client);
+        let table = OrderedTable::new("in", input_name_table(), 2, env.accounting.clone());
+        fill_input(&table, 2, 50);
+        let input = InputSpec::Ordered(table);
+
+        let mf = analytics_mapper_factory(ComputeMode::Native);
+        let rf = analytics_reducer_factory(ComputeMode::Native);
+        let user_cfg = Yson::parse("{}").unwrap();
+        let cfg = BaselineConfig {
+            num_reducers: 2,
+            ..BaselineConfig::default()
+        };
+        let (stats, report) = run_persistent_shuffle(
+            "baseline",
+            &cfg,
+            &client,
+            &input,
+            &env.accounting,
+            |p| {
+                mf(&user_cfg, &client, input_name_table(), &MapperSpec {
+                    processor_guid: Guid::from_seed(1),
+                    state_table: "t".into(),
+                    index: p,
+                    guid: Guid::from_seed(p as u64),
+                    num_reducers: 2,
+                })
+            },
+            |r| {
+                rf(&user_cfg, &client, &ReducerSpec {
+                    processor_guid: Guid::from_seed(1),
+                    state_table: "t".into(),
+                    index: r,
+                    guid: Guid::from_seed(100 + r as u64),
+                    num_mappers: 2,
+                })
+            },
+        );
+
+        assert_eq!(stats.input_rows, 100);
+        assert!(stats.shuffled_rows > 0);
+        assert!(stats.reduced_batches > 0);
+        // The headline: the baseline re-persisted payload bytes.
+        assert!(report.payload_repersisted_bytes() > 0);
+        assert!(report.factor() > 0.1, "baseline WA factor {}", report.factor());
+        // And the user output actually materialized.
+        assert!(client.store.row_count(OUTPUT_TABLE).unwrap() > 0);
+    }
+
+    #[test]
+    fn baseline_empty_input_is_clean() {
+        let env = ClusterEnv::new(Clock::realtime(), 3);
+        let client = env.client();
+        ensure_output_table(&client);
+        let table = OrderedTable::new("in", input_name_table(), 1, env.accounting.clone());
+        let input = InputSpec::Ordered(table);
+        let mf = analytics_mapper_factory(ComputeMode::Native);
+        let rf = analytics_reducer_factory(ComputeMode::Native);
+        let user_cfg = Yson::parse("{}").unwrap();
+        let (stats, report) = run_persistent_shuffle(
+            "baseline-empty",
+            &BaselineConfig::default(),
+            &client,
+            &input,
+            &env.accounting,
+            |p| {
+                mf(&user_cfg, &client, input_name_table(), &MapperSpec {
+                    processor_guid: Guid::from_seed(1),
+                    state_table: "t".into(),
+                    index: p,
+                    guid: Guid::from_seed(p as u64),
+                    num_reducers: 2,
+                })
+            },
+            |r| {
+                rf(&user_cfg, &client, &ReducerSpec {
+                    processor_guid: Guid::from_seed(1),
+                    state_table: "t".into(),
+                    index: r,
+                    guid: Guid::from_seed(100 + r as u64),
+                    num_mappers: 1,
+                })
+            },
+        );
+        assert_eq!(stats.input_rows, 0);
+        assert_eq!(report.factor(), 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! [`ComputeStage`] backed by the AOT-compiled Pallas/JAX artifacts.
+//!
+//! Arbitrary batch lengths are chunked to the fixed artifact batch size
+//! ([`runtime::BATCH`]) with padding; reduce batches whose slot space
+//! exceeds [`runtime::GROUPS`] are split into *slot bands* and merged.
+//! Outputs are bit-identical to [`super::native::NativeStage`] (checked by
+//! `rust/tests/runtime_hlo.rs`): the kernels implement the same integer
+//! mix and the aggregation is exact in its domain (counts < 2²⁴, f32 ts
+//! offsets).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::{pad_to, LoadedStage, PjRtRuntime, RuntimeError, BATCH, GROUPS};
+
+use super::{ComputeStage, MapStageOut, ReduceStageOut};
+
+/// Compute stage executing compiled HLO through PJRT.
+pub struct HloStage {
+    _runtime: Arc<PjRtRuntime>,
+    mapper: LoadedStage,
+    reducer: LoadedStage,
+}
+
+impl HloStage {
+    /// Load both artifacts from `dir` (typically `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Arc<HloStage>, RuntimeError> {
+        let runtime = Arc::new(PjRtRuntime::cpu()?);
+        let (mapper, reducer) = runtime.load_stage_artifacts(dir)?;
+        Ok(Arc::new(HloStage {
+            _runtime: runtime,
+            mapper,
+            reducer,
+        }))
+    }
+
+    fn run_map_chunk(&self, uh: &[u32], ch: &[u32], num_reducers: u32) -> Vec<u32> {
+        let n = uh.len();
+        let args = [
+            xla::Literal::vec1(&pad_to(uh, BATCH, 0u32)),
+            xla::Literal::vec1(&pad_to(ch, BATCH, 0u32)),
+            xla::Literal::scalar(num_reducers),
+        ];
+        let out = self
+            .mapper
+            .run(&args)
+            .expect("mapper_stage execution failed");
+        let reducer: Vec<u32> = out[0].to_vec().expect("mapper_stage output dtype");
+        reducer[..n].to_vec()
+    }
+
+    fn run_reduce_chunk(
+        &self,
+        slots: &[i32],
+        ts: &[f32],
+        valid: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let args = [
+            xla::Literal::vec1(&pad_to(slots, BATCH, 0i32)),
+            xla::Literal::vec1(&pad_to(ts, BATCH, 0f32)),
+            xla::Literal::vec1(&pad_to(valid, BATCH, 0f32)),
+        ];
+        let out = self
+            .reducer
+            .run(&args)
+            .expect("reducer_stage execution failed");
+        let counts: Vec<f32> = out[0].to_vec().expect("counts dtype");
+        let maxes: Vec<f32> = out[1].to_vec().expect("max dtype");
+        (counts, maxes)
+    }
+}
+
+impl ComputeStage for HloStage {
+    fn map_stage(
+        &self,
+        user_hash: &[u32],
+        cluster_hash: &[u32],
+        has_user: &[bool],
+        num_reducers: u32,
+    ) -> MapStageOut {
+        assert_eq!(user_hash.len(), cluster_hash.len());
+        assert_eq!(user_hash.len(), has_user.len());
+        assert!(num_reducers > 0);
+        let mut reducer = Vec::with_capacity(user_hash.len());
+        for (uh, ch) in user_hash.chunks(BATCH).zip(cluster_hash.chunks(BATCH)) {
+            reducer.extend(self.run_map_chunk(uh, ch, num_reducers));
+        }
+        MapStageOut {
+            keep: has_user.to_vec(),
+            reducer,
+        }
+    }
+
+    fn reduce_stage(
+        &self,
+        slots: &[u32],
+        ts: &[f32],
+        valid: &[bool],
+        num_groups: u32,
+    ) -> ReduceStageOut {
+        assert_eq!(slots.len(), ts.len());
+        assert_eq!(slots.len(), valid.len());
+        let g = num_groups as usize;
+        let mut counts = vec![0i64; g];
+        let mut max_ts = vec![f32::NEG_INFINITY; g];
+
+        // Split rows into slot bands of GROUPS each, then chunk each band
+        // by BATCH.
+        let bands = g.div_ceil(GROUPS);
+        for band in 0..bands {
+            let lo = (band * GROUPS) as u32;
+            let hi = ((band + 1) * GROUPS) as u32;
+            let mut b_slots: Vec<i32> = Vec::new();
+            let mut b_ts: Vec<f32> = Vec::new();
+            let mut b_valid: Vec<f32> = Vec::new();
+            for i in 0..slots.len() {
+                if valid[i] && (lo..hi).contains(&slots[i]) {
+                    assert!((slots[i] as usize) < g, "slot out of range");
+                    b_slots.push((slots[i] - lo) as i32);
+                    b_ts.push(ts[i]);
+                    b_valid.push(1.0);
+                }
+            }
+            if b_slots.is_empty() {
+                continue;
+            }
+            for ((cs, cts), cv) in b_slots
+                .chunks(BATCH)
+                .zip(b_ts.chunks(BATCH))
+                .zip(b_valid.chunks(BATCH))
+            {
+                let (ccounts, cmaxes) = self.run_reduce_chunk(cs, cts, cv);
+                let band_width = (hi.min(g as u32) - lo) as usize;
+                for s in 0..band_width {
+                    counts[lo as usize + s] += ccounts[s] as i64;
+                    if cmaxes[s] > max_ts[lo as usize + s] {
+                        max_ts[lo as usize + s] = cmaxes[s];
+                    }
+                }
+            }
+        }
+        ReduceStageOut { counts, max_ts }
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+}

@@ -1,0 +1,133 @@
+//! The numeric hot-spot stages shared by L1/L2/L3.
+//!
+//! Two dense per-row computations dominate the eval workload's inner
+//! loops and are the part of the pipeline that lowers to compiled HLO
+//! (DESIGN.md §2 "three-layer mapping"):
+//!
+//! * **map stage** — the paper's *shuffle function*: mix the (user,
+//!   cluster) key hashes and pick a reducer; plus the filter mask
+//!   ("messages that didn't have a user field were simply ignored",
+//!   §5.2).
+//! * **reduce stage** — grouped aggregation: per-(user, cluster) slot
+//!   count and max-timestamp.
+//!
+//! [`ComputeStage`] is the interface; [`native`] is the pure-rust
+//! reference implementation and [`hlo`] executes the AOT-compiled
+//! Pallas/JAX artifacts through PJRT. `python/compile/kernels/ref.py`
+//! implements the *same* functions in jnp — the three implementations are
+//! cross-checked (pytest for L1-vs-ref, `runtime_hlo.rs` for L3-vs-native).
+//!
+//! The integer hash spec is fixed here and mirrored in
+//! `python/compile/kernels/shuffle_hash.py`; changing one without the
+//! other breaks the cross-checks by design.
+
+pub mod native;
+pub mod hlo;
+
+/// Output of the map stage for a batch of parsed log lines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapStageOut {
+    /// `true` = row survives the user-field filter.
+    pub keep: Vec<bool>,
+    /// Designated reducer per row (valid where `keep`).
+    pub reducer: Vec<u32>,
+}
+
+/// Output of the reduce stage for a batch of (slot, ts) pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReduceStageOut {
+    /// Row count per group slot.
+    pub counts: Vec<i64>,
+    /// Max timestamp offset per group slot (f32 domain; NaN-free).
+    /// Slots with zero rows hold `f32::NEG_INFINITY`.
+    pub max_ts: Vec<f32>,
+}
+
+/// A batch-oriented implementation of both stages.
+pub trait ComputeStage: Send + Sync {
+    /// Shuffle function + filter. All slices share one length.
+    fn map_stage(
+        &self,
+        user_hash: &[u32],
+        cluster_hash: &[u32],
+        has_user: &[bool],
+        num_reducers: u32,
+    ) -> MapStageOut;
+
+    /// Grouped aggregation over `num_groups` slots. `valid[i] == false`
+    /// rows are padding and must not contribute.
+    fn reduce_stage(
+        &self,
+        slots: &[u32],
+        ts: &[f32],
+        valid: &[bool],
+        num_groups: u32,
+    ) -> ReduceStageOut;
+
+    /// Implementation label (metrics / logs).
+    fn name(&self) -> &'static str;
+}
+
+/// FNV-1a 32-bit string hash: how L3 turns key strings into the u32 key
+/// hashes both stage implementations consume. (String hashing stays in
+/// rust; the compiled kernels operate on fixed-width integers.)
+pub fn fnv1a32(s: &str) -> u32 {
+    let mut h: u32 = 0x811C9DC5;
+    for b in s.as_bytes() {
+        h ^= *b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// The shuffle-function integer mix, specified once for all three layers
+/// (rust native, Pallas kernel, jnp reference):
+///
+/// ```text
+/// h  = user_hash * 0x9E3779B1  XOR  cluster_hash * 0x85EBCA77   (wrapping)
+/// h ^= h >> 16;  h *= 0xC2B2AE35;  h ^= h >> 13
+/// reducer = h mod num_reducers
+/// ```
+#[inline]
+pub fn shuffle_mix(user_hash: u32, cluster_hash: u32) -> u32 {
+    let mut h = user_hash.wrapping_mul(0x9E3779B1) ^ cluster_hash.wrapping_mul(0x85EBCA77);
+    h ^= h >> 16;
+    h = h.wrapping_mul(0xC2B2AE35);
+    h ^= h >> 13;
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a32_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a32(""), 0x811C9DC5);
+        assert_eq!(fnv1a32("a"), 0xE40C292C);
+        assert_eq!(fnv1a32("foobar"), 0xBF9CF968);
+    }
+
+    #[test]
+    fn shuffle_mix_deterministic_and_spread() {
+        assert_eq!(shuffle_mix(1, 2), shuffle_mix(1, 2));
+        let mut buckets = [0u32; 8];
+        for u in 0..64u32 {
+            for c in 0..16u32 {
+                buckets[(shuffle_mix(u, c) % 8) as usize] += 1;
+            }
+        }
+        let total: u32 = buckets.iter().sum();
+        assert_eq!(total, 1024);
+        for b in buckets {
+            assert!(b > 64, "shuffle_mix badly skewed: {buckets:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_mix_asymmetric_in_args() {
+        // user and cluster must not be interchangeable.
+        assert_ne!(shuffle_mix(1, 2), shuffle_mix(2, 1));
+    }
+}

@@ -1,0 +1,153 @@
+//! Pure-rust reference implementation of the compute stages.
+//!
+//! Semantically identical to the Pallas kernels (`python/compile/kernels/`)
+//! and the jnp oracle (`ref.py`); used by tests, as the `--compute=native`
+//! ablation, and as the fallback when AOT artifacts are absent.
+
+use super::{ComputeStage, MapStageOut, ReduceStageOut};
+
+/// The reference stage.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeStage;
+
+impl ComputeStage for NativeStage {
+    fn map_stage(
+        &self,
+        user_hash: &[u32],
+        cluster_hash: &[u32],
+        has_user: &[bool],
+        num_reducers: u32,
+    ) -> MapStageOut {
+        assert_eq!(user_hash.len(), cluster_hash.len());
+        assert_eq!(user_hash.len(), has_user.len());
+        assert!(num_reducers > 0);
+        let n = user_hash.len();
+        let mut keep = Vec::with_capacity(n);
+        let mut reducer = Vec::with_capacity(n);
+        for i in 0..n {
+            keep.push(has_user[i]);
+            let h = super::shuffle_mix(user_hash[i], cluster_hash[i]);
+            reducer.push(h % num_reducers);
+        }
+        MapStageOut { keep, reducer }
+    }
+
+    fn reduce_stage(
+        &self,
+        slots: &[u32],
+        ts: &[f32],
+        valid: &[bool],
+        num_groups: u32,
+    ) -> ReduceStageOut {
+        assert_eq!(slots.len(), ts.len());
+        assert_eq!(slots.len(), valid.len());
+        let g = num_groups as usize;
+        let mut counts = vec![0i64; g];
+        let mut max_ts = vec![f32::NEG_INFINITY; g];
+        for i in 0..slots.len() {
+            if !valid[i] {
+                continue;
+            }
+            let s = slots[i] as usize;
+            assert!(s < g, "slot {s} out of range (num_groups={g})");
+            counts[s] += 1;
+            if ts[i] > max_ts[s] {
+                max_ts[s] = ts[i];
+            }
+        }
+        ReduceStageOut { counts, max_ts }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop;
+
+    #[test]
+    fn map_stage_filters_and_routes() {
+        let s = NativeStage;
+        let out = s.map_stage(&[1, 2, 3], &[10, 20, 30], &[true, false, true], 4);
+        assert_eq!(out.keep, vec![true, false, true]);
+        assert_eq!(out.reducer.len(), 3);
+        assert!(out.reducer.iter().all(|&r| r < 4));
+        // Deterministic.
+        let again = s.map_stage(&[1, 2, 3], &[10, 20, 30], &[true, false, true], 4);
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn reduce_stage_counts_and_maxes() {
+        let s = NativeStage;
+        let out = s.reduce_stage(
+            &[0, 1, 0, 2, 1, 0],
+            &[1.0, 5.0, 3.0, 7.0, 2.0, 0.5],
+            &[true, true, true, true, true, false],
+            4,
+        );
+        assert_eq!(out.counts, vec![2, 2, 1, 0]);
+        assert_eq!(out.max_ts[0], 3.0);
+        assert_eq!(out.max_ts[1], 5.0);
+        assert_eq!(out.max_ts[2], 7.0);
+        assert_eq!(out.max_ts[3], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn reduce_stage_ignores_invalid_rows() {
+        let s = NativeStage;
+        let out = s.reduce_stage(&[0, 0], &[9.0, 99.0], &[true, false], 1);
+        assert_eq!(out.counts, vec![1]);
+        assert_eq!(out.max_ts, vec![9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn reduce_stage_rejects_bad_slot() {
+        NativeStage.reduce_stage(&[5], &[1.0], &[true], 2);
+    }
+
+    #[test]
+    fn property_counts_sum_to_valid_rows() {
+        miniprop::check("reduce counts conservation", |rng| {
+            let n = rng.gen_range(1, 200) as usize;
+            let g = rng.gen_range(1, 32) as u32;
+            let slots: Vec<u32> = (0..n).map(|_| rng.next_below(g as u64) as u32).collect();
+            let ts: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32 * 1000.0).collect();
+            let valid: Vec<bool> = (0..n).map(|_| rng.chance(0.8)).collect();
+            let out = NativeStage.reduce_stage(&slots, &ts, &valid, g);
+            let total: i64 = out.counts.iter().sum();
+            let expect = valid.iter().filter(|v| **v).count() as i64;
+            crate::prop_assert_eq!(total, expect);
+            // max_ts of a non-empty slot must be one of its inputs.
+            for (slot, &m) in out.counts.iter().zip(&out.max_ts).enumerate().map(|(s, (_c, m))| (s, m)) {
+                if out.counts[slot] > 0 {
+                    let found = (0..n).any(|i| {
+                        valid[i] && slots[i] as usize == slot && (ts[i] - m).abs() < 1e-6
+                    });
+                    crate::prop_assert!(found, "slot {slot}: max {m} not among inputs");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_map_stage_reducer_range() {
+        miniprop::check("map stage range", |rng| {
+            let n = rng.gen_range(1, 100) as usize;
+            let r = rng.gen_range(1, 16) as u32;
+            let uh: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let ch: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let hu: Vec<bool> = (0..n).map(|_| rng.chance(0.15)).collect();
+            let out = NativeStage.map_stage(&uh, &ch, &hu, r);
+            crate::prop_assert_eq!(out.keep.len(), n);
+            crate::prop_assert!(out.reducer.iter().all(|&x| x < r), "reducer out of range");
+            crate::prop_assert_eq!(out.keep, hu.clone());
+            Ok(())
+        });
+    }
+}

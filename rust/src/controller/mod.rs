@@ -1,0 +1,245 @@
+//! The controller: YT's "vanilla operation" stand-in (§4.5).
+//!
+//! "The whole streaming processor is executed as a YT 'vanilla' operation,
+//! which allows running user-specified binaries on a number of nodes,
+//! automatically restarting them in case of failures."
+//!
+//! [`Supervisor`] owns one *slot* per worker (mapper or reducer index).
+//! A monitor thread watches each slot's current instance and respawns it
+//! after `restart_delay_ms` when it dies. Drill helpers reproduce the
+//! §5.2 failure scenarios: `pause` (hung worker), `kill` (crash + auto
+//! restart), and `duplicate` (spawn a split-brain twin *without* killing
+//! the incumbent — the §4.6 scenario).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::mapper::MapperHandle;
+use crate::coordinator::reducer::ReducerHandle;
+use crate::util::{Clock, Guid};
+
+/// A running worker of either role.
+pub enum WorkerHandle {
+    Mapper(MapperHandle),
+    Reducer(ReducerHandle),
+}
+
+impl WorkerHandle {
+    pub fn set_paused(&self, paused: bool) {
+        match self {
+            WorkerHandle::Mapper(h) => h.set_paused(paused),
+            WorkerHandle::Reducer(h) => h.set_paused(paused),
+        }
+    }
+
+    pub fn kill(&self) {
+        match self {
+            WorkerHandle::Mapper(h) => h.kill(),
+            WorkerHandle::Reducer(h) => h.kill(),
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        match self {
+            WorkerHandle::Mapper(h) => h.is_finished(),
+            WorkerHandle::Reducer(h) => h.is_finished(),
+        }
+    }
+
+    pub fn guid(&self) -> Guid {
+        match self {
+            WorkerHandle::Mapper(h) => h.guid,
+            WorkerHandle::Reducer(h) => h.guid,
+        }
+    }
+
+    pub fn join(self) {
+        match self {
+            WorkerHandle::Mapper(h) => h.join(),
+            WorkerHandle::Reducer(h) => h.join(),
+        }
+    }
+}
+
+/// Worker role within the processor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    Mapper,
+    Reducer,
+}
+
+/// Factory producing a *fresh* instance (new GUID) for a slot.
+pub type Spawner = Box<dyn Fn() -> WorkerHandle + Send + Sync>;
+
+struct Slot {
+    role: Role,
+    index: usize,
+    spawner: Spawner,
+    /// The incumbent instance.
+    current: Mutex<Option<WorkerHandle>>,
+    /// Split-brain twins created by `duplicate`.
+    extras: Mutex<Vec<WorkerHandle>>,
+    /// Respawn-on-death enabled?
+    want_running: AtomicBool,
+    /// Time of death observed by the monitor (for restart delay).
+    died_at_ms: Mutex<Option<u64>>,
+}
+
+/// Supervises all workers of one streaming processor.
+pub struct Supervisor {
+    slots: Vec<Arc<Slot>>,
+    clock: Clock,
+    restart_delay_ms: u64,
+    shutdown: Arc<AtomicBool>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Supervisor {
+    /// Build a supervisor; workers are spawned immediately, the monitor
+    /// thread starts with them.
+    pub fn start(
+        clock: Clock,
+        restart_delay_ms: u64,
+        slots: Vec<(Role, usize, Spawner)>,
+    ) -> Arc<Supervisor> {
+        let slots: Vec<Arc<Slot>> = slots
+            .into_iter()
+            .map(|(role, index, spawner)| {
+                let handle = spawner();
+                Arc::new(Slot {
+                    role,
+                    index,
+                    spawner,
+                    current: Mutex::new(Some(handle)),
+                    extras: Mutex::new(Vec::new()),
+                    want_running: AtomicBool::new(true),
+                    died_at_ms: Mutex::new(None),
+                })
+            })
+            .collect();
+        let sup = Arc::new(Supervisor {
+            slots,
+            clock: clock.clone(),
+            restart_delay_ms,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            monitor: Mutex::new(None),
+        });
+        let monitor = {
+            let sup = sup.clone();
+            std::thread::Builder::new()
+                .name("supervisor".into())
+                .spawn(move || sup.monitor_loop())
+                .expect("spawn supervisor thread")
+        };
+        *sup.monitor.lock().unwrap() = Some(monitor);
+        sup
+    }
+
+    fn monitor_loop(&self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            for slot in &self.slots {
+                if !slot.want_running.load(Ordering::SeqCst) {
+                    continue;
+                }
+                let mut current = slot.current.lock().unwrap();
+                let dead = current.as_ref().map(|h| h.is_finished()).unwrap_or(true);
+                if dead {
+                    let now = self.clock.now_ms();
+                    let mut died = slot.died_at_ms.lock().unwrap();
+                    match *died {
+                        None => *died = Some(now),
+                        Some(t) if now.saturating_sub(t) >= self.restart_delay_ms => {
+                            *current = Some((slot.spawner)());
+                            *died = None;
+                        }
+                        Some(_) => {}
+                    }
+                }
+                // Reap finished twins.
+                slot.extras.lock().unwrap().retain(|h| !h.is_finished());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn slot(&self, role: Role, index: usize) -> &Arc<Slot> {
+        self.slots
+            .iter()
+            .find(|s| s.role == role && s.index == index)
+            .unwrap_or_else(|| panic!("no {role:?} slot {index}"))
+    }
+
+    /// Pause / unpause the incumbent (hung-worker drill).
+    pub fn set_paused(&self, role: Role, index: usize, paused: bool) {
+        if let Some(h) = self.slot(role, index).current.lock().unwrap().as_ref() {
+            h.set_paused(paused);
+        }
+    }
+
+    /// Crash the incumbent; the monitor respawns it after the delay.
+    pub fn kill(&self, role: Role, index: usize) {
+        if let Some(h) = self.slot(role, index).current.lock().unwrap().as_ref() {
+            h.kill();
+        }
+    }
+
+    /// Spawn a split-brain twin for a slot without touching the incumbent.
+    /// Returns the twin's GUID.
+    pub fn duplicate(&self, role: Role, index: usize) -> Guid {
+        let slot = self.slot(role, index);
+        let twin = (slot.spawner)();
+        let guid = twin.guid();
+        slot.extras.lock().unwrap().push(twin);
+        guid
+    }
+
+    /// Disable respawn for a slot and kill its instances (used by drills
+    /// that need a worker to *stay* dead).
+    pub fn retire(&self, role: Role, index: usize) {
+        let slot = self.slot(role, index);
+        slot.want_running.store(false, Ordering::SeqCst);
+        if let Some(h) = slot.current.lock().unwrap().as_ref() {
+            h.kill();
+        }
+        for h in slot.extras.lock().unwrap().iter() {
+            h.kill();
+        }
+    }
+
+    /// Re-enable respawn for a retired slot.
+    pub fn revive(&self, role: Role, index: usize) {
+        self.slot(role, index)
+            .want_running
+            .store(true, Ordering::SeqCst);
+    }
+
+    /// GUID of the incumbent instance, if alive.
+    pub fn current_guid(&self, role: Role, index: usize) -> Option<Guid> {
+        self.slot(role, index)
+            .current
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|h| h.guid())
+    }
+
+    /// Stop everything: kill all workers, stop the monitor, join threads.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(m) = self.monitor.lock().unwrap().take() {
+            let _ = m.join();
+        }
+        for slot in &self.slots {
+            slot.want_running.store(false, Ordering::SeqCst);
+            if let Some(h) = slot.current.lock().unwrap().take() {
+                h.kill();
+                h.join();
+            }
+            for h in slot.extras.lock().unwrap().drain(..) {
+                h.kill();
+                h.join();
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Per-reducer bucket state inside a mapper (§4.3.1).
+//!
+//! "An array of BucketState objects, one for every reducer, which hold a
+//! queue of shuffle row indexes that will need to be shipped to said
+//! reducer, along with the window entry index in which the first of these
+//! rows is to be found."
+
+use std::collections::VecDeque;
+
+/// One queued row reference: its shuffle index and the window entry that
+//  holds it (recorded at push time so acknowledgement processing never
+//  searches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketRow {
+    pub shuffle_index: i64,
+    pub entry_index: u64,
+}
+
+/// The queue of rows destined for one reducer.
+#[derive(Debug, Default)]
+pub struct BucketState {
+    queue: VecDeque<BucketRow>,
+    /// Shuffle index of the last row ever enqueued (monotonicity guard).
+    last_enqueued: Option<i64>,
+}
+
+/// What acknowledging rows did to the bucket head — the caller must apply
+/// these to the window's bucket-pointer counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AckOutcome {
+    pub rows_popped: usize,
+    /// Entry that held the head before the ack (decrement its count)…
+    pub old_head_entry: Option<u64>,
+    /// …and the entry holding the head now (increment its count). Equal
+    /// values mean no pointer movement.
+    pub new_head_entry: Option<u64>,
+}
+
+impl BucketState {
+    pub fn new() -> BucketState {
+        BucketState::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Window entry holding the bucket's first queued row.
+    pub fn first_entry_index(&self) -> Option<u64> {
+        self.queue.front().map(|r| r.entry_index)
+    }
+
+    /// Enqueue a produced row. Returns `true` if this row became the new
+    /// head (i.e. the bucket was empty — the caller increments the entry's
+    /// pointer count, §4.3.3 step 6).
+    pub fn push(&mut self, row: BucketRow) -> bool {
+        if let Some(last) = self.last_enqueued {
+            assert!(
+                row.shuffle_index > last,
+                "bucket rows must be enqueued in shuffle order ({} after {last})",
+                row.shuffle_index
+            );
+        }
+        self.last_enqueued = Some(row.shuffle_index);
+        let was_empty = self.queue.is_empty();
+        self.queue.push_back(row);
+        was_empty
+    }
+
+    /// Acknowledge rows with `shuffle_index <= committed_row_index`
+    /// (§4.3.4 step 2). Returns the pointer-count adjustments.
+    pub fn ack(&mut self, committed_row_index: i64) -> AckOutcome {
+        let old_head_entry = self.first_entry_index();
+        let mut rows_popped = 0;
+        while self
+            .queue
+            .front()
+            .is_some_and(|r| r.shuffle_index <= committed_row_index)
+        {
+            self.queue.pop_front();
+            rows_popped += 1;
+        }
+        AckOutcome {
+            rows_popped,
+            old_head_entry,
+            new_head_entry: self.first_entry_index(),
+        }
+    }
+
+    /// The first `count` unacknowledged rows (NOT removed — §4.3.4 step 4:
+    /// "these rows are not deleted from the queue").
+    pub fn peek(&self, count: usize) -> impl Iterator<Item = &BucketRow> {
+        self.queue.iter().take(count)
+    }
+
+    /// Drop everything (split-brain reset).
+    pub fn clear(&mut self) {
+        self.queue.clear();
+        self.last_enqueued = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(s: i64, e: u64) -> BucketRow {
+        BucketRow {
+            shuffle_index: s,
+            entry_index: e,
+        }
+    }
+
+    #[test]
+    fn push_reports_head_transitions() {
+        let mut b = BucketState::new();
+        assert!(b.push(row(3, 0)), "first push becomes head");
+        assert!(!b.push(row(7, 0)));
+        assert!(!b.push(row(9, 1)));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.first_entry_index(), Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shuffle order")]
+    fn out_of_order_push_panics() {
+        let mut b = BucketState::new();
+        b.push(row(5, 0));
+        b.push(row(4, 0));
+    }
+
+    #[test]
+    fn ack_pops_prefix_and_reports_movement() {
+        let mut b = BucketState::new();
+        b.push(row(3, 0));
+        b.push(row(7, 0));
+        b.push(row(9, 1));
+        b.push(row(12, 2));
+
+        // Ack nothing (committed below head).
+        let a = b.ack(2);
+        assert_eq!(a.rows_popped, 0);
+        assert_eq!(a.old_head_entry, Some(0));
+        assert_eq!(a.new_head_entry, Some(0));
+
+        // Ack through shuffle index 9: head moves to entry 2.
+        let a = b.ack(9);
+        assert_eq!(a.rows_popped, 3);
+        assert_eq!(a.old_head_entry, Some(0));
+        assert_eq!(a.new_head_entry, Some(2));
+        assert_eq!(b.len(), 1);
+
+        // Ack everything: bucket empties.
+        let a = b.ack(100);
+        assert_eq!(a.rows_popped, 1);
+        assert_eq!(a.old_head_entry, Some(2));
+        assert_eq!(a.new_head_entry, None);
+        assert!(b.is_empty());
+
+        // Ack on empty bucket is a no-op.
+        let a = b.ack(100);
+        assert_eq!(a.rows_popped, 0);
+        assert_eq!(a.old_head_entry, None);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut b = BucketState::new();
+        for i in 0..5 {
+            b.push(row(i, 0));
+        }
+        let seen: Vec<i64> = b.peek(3).map(|r| r.shuffle_index).collect();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(b.len(), 5, "peek must not remove rows");
+        let again: Vec<i64> = b.peek(10).map(|r| r.shuffle_index).collect();
+        assert_eq!(again.len(), 5);
+    }
+
+    #[test]
+    fn clear_resets_order_guard() {
+        let mut b = BucketState::new();
+        b.push(row(100, 0));
+        b.clear();
+        assert!(b.is_empty());
+        // After a reset, lower shuffle indexes are legal again (fresh life).
+        b.push(row(1, 0));
+    }
+}

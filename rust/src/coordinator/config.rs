@@ -1,0 +1,228 @@
+//! Streaming-processor configuration (§4.5).
+//!
+//! "The system is configured using YT's own JSON-like format, called
+//! YSON." — [`ProcessorConfig::from_yson`] parses the same shape the
+//! examples ship as `.yson` text; every field has a sane default so tests
+//! can build configs programmatically.
+
+use crate::util::yson::{Yson, YsonError};
+
+/// Which implementation computes the mapper/reducer numeric stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Pure-rust reference path (always available; used by tests).
+    Native,
+    /// AOT-compiled HLO executed through PJRT (`runtime`); falls back to
+    /// an error at startup if artifacts are missing.
+    Hlo,
+}
+
+/// Straggler-spill thresholds (§6 future-work feature, implemented).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpillConfig {
+    pub enabled: bool,
+    /// Spill triggers when the window exceeds this fraction of the memory
+    /// limit.
+    pub trigger_fraction: f64,
+    /// A bucket is spilled only if the *other* reducers have all acked
+    /// past this fraction of the spilled range (i.e. one straggler is
+    /// holding everyone back).
+    pub straggler_quorum: f64,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig {
+            enabled: false,
+            trigger_fraction: 0.8,
+            straggler_quorum: 0.75,
+        }
+    }
+}
+
+/// All tunables of one streaming processor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessorConfig {
+    pub name: String,
+    pub mapper_count: usize,
+    pub reducer_count: usize,
+
+    /// Rows per partition-reader read (§4.3.3 step 2 batch size hint).
+    pub read_batch_rows: usize,
+    /// Back-off (§4.3.3 step 1 / §4.4.2 step 1), simulated ms.
+    pub backoff_ms: u64,
+    /// Split-brain wait before dropping internal state (§4.3.3 step 3).
+    pub split_brain_delay_ms: u64,
+    /// Mapper in-memory window budget, bytes (§4.3.3 step 8; the paper's
+    /// production run used 8 GB — scaled down here).
+    pub memory_limit_bytes: usize,
+    /// Period of `TrimInputRows` (§4.3.5: "usually on the order of a few
+    /// seconds"), simulated ms.
+    pub trim_period_ms: u64,
+    /// Rows a reducer requests per mapper per cycle (§4.3.4 `count`).
+    pub fetch_count: usize,
+
+    /// Sorted-table paths for persistent state.
+    pub mapper_state_table: String,
+    pub reducer_state_table: String,
+    /// Cypress directory for discovery groups.
+    pub discovery_dir: String,
+    /// Discovery session TTL / heartbeat period, simulated ms.
+    pub session_ttl_ms: u64,
+    pub heartbeat_period_ms: u64,
+    /// Controller restart delay after a worker death, simulated ms.
+    pub restart_delay_ms: u64,
+
+    pub spill: SpillConfig,
+    pub compute: ComputeMode,
+    /// Directory with AOT artifacts (`ComputeMode::Hlo`).
+    pub artifacts_dir: String,
+    /// §6 pipelined reducer: overlap fetch(n+1) with process/commit(n).
+    pub pipelined_reducer: bool,
+    /// §6 relaxed delivery: "not all tasks demand strict exactly-once
+    /// guarantees". When set, reducers skip the in-transaction state CAS;
+    /// the state update becomes a blind element-wise max — rows can be
+    /// processed more than once under races, but never lost.
+    pub at_least_once: bool,
+}
+
+impl Default for ProcessorConfig {
+    fn default() -> Self {
+        ProcessorConfig {
+            name: "streaming-processor".into(),
+            mapper_count: 4,
+            reducer_count: 2,
+            read_batch_rows: 256,
+            backoff_ms: 20,
+            split_brain_delay_ms: 200,
+            memory_limit_bytes: 64 << 20,
+            trim_period_ms: 500,
+            fetch_count: 1024,
+            mapper_state_table: "//sys/processor/mapper_state".into(),
+            reducer_state_table: "//sys/processor/reducer_state".into(),
+            discovery_dir: "//sys/processor/discovery".into(),
+            session_ttl_ms: 3_000,
+            heartbeat_period_ms: 500,
+            restart_delay_ms: 300,
+            spill: SpillConfig::default(),
+            compute: ComputeMode::Native,
+            artifacts_dir: "artifacts".into(),
+            pipelined_reducer: false,
+            at_least_once: false,
+        }
+    }
+}
+
+impl ProcessorConfig {
+    /// Parse from a YSON map; missing keys keep their defaults.
+    pub fn from_yson(y: &Yson) -> Result<ProcessorConfig, YsonError> {
+        y.as_map()?; // the config must be a YSON map
+        let d = ProcessorConfig::default();
+        let spill_default = SpillConfig::default();
+        let spill = match y.get_opt("spill") {
+            Some(sy) => SpillConfig {
+                enabled: sy.get_bool_or("enabled", spill_default.enabled),
+                trigger_fraction: sy.get_f64_or("trigger_fraction", spill_default.trigger_fraction),
+                straggler_quorum: sy.get_f64_or("straggler_quorum", spill_default.straggler_quorum),
+            },
+            None => spill_default,
+        };
+        let compute = match y.get_str_or("compute", "native") {
+            "hlo" => ComputeMode::Hlo,
+            _ => ComputeMode::Native,
+        };
+        Ok(ProcessorConfig {
+            name: y.get_str_or("name", &d.name).to_string(),
+            mapper_count: y.get_u64_or("mapper_count", d.mapper_count as u64) as usize,
+            reducer_count: y.get_u64_or("reducer_count", d.reducer_count as u64) as usize,
+            read_batch_rows: y.get_u64_or("read_batch_rows", d.read_batch_rows as u64) as usize,
+            backoff_ms: y.get_u64_or("backoff_ms", d.backoff_ms),
+            split_brain_delay_ms: y.get_u64_or("split_brain_delay_ms", d.split_brain_delay_ms),
+            memory_limit_bytes: y.get_u64_or("memory_limit_bytes", d.memory_limit_bytes as u64)
+                as usize,
+            trim_period_ms: y.get_u64_or("trim_period_ms", d.trim_period_ms),
+            fetch_count: y.get_u64_or("fetch_count", d.fetch_count as u64) as usize,
+            mapper_state_table: y
+                .get_str_or("mapper_state_table", &d.mapper_state_table)
+                .to_string(),
+            reducer_state_table: y
+                .get_str_or("reducer_state_table", &d.reducer_state_table)
+                .to_string(),
+            discovery_dir: y.get_str_or("discovery_dir", &d.discovery_dir).to_string(),
+            session_ttl_ms: y.get_u64_or("session_ttl_ms", d.session_ttl_ms),
+            heartbeat_period_ms: y.get_u64_or("heartbeat_period_ms", d.heartbeat_period_ms),
+            restart_delay_ms: y.get_u64_or("restart_delay_ms", d.restart_delay_ms),
+            spill,
+            compute,
+            artifacts_dir: y.get_str_or("artifacts_dir", &d.artifacts_dir).to_string(),
+            pipelined_reducer: y.get_bool_or("pipelined_reducer", d.pipelined_reducer),
+            at_least_once: y.get_bool_or("at_least_once", d.at_least_once),
+        })
+    }
+
+    /// Parse from YSON text.
+    pub fn parse(text: &str) -> Result<ProcessorConfig, YsonError> {
+        Self::from_yson(&Yson::parse(text)?)
+    }
+
+    /// Mapper discovery group directory.
+    pub fn mapper_group(&self) -> String {
+        format!("{}/mappers", self.discovery_dir)
+    }
+
+    /// Reducer discovery group directory.
+    pub fn reducer_group(&self) -> String {
+        format!("{}/reducers", self.discovery_dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ProcessorConfig::default();
+        assert!(c.mapper_count > 0 && c.reducer_count > 0);
+        assert!(c.memory_limit_bytes > 1 << 20);
+        assert_eq!(c.compute, ComputeMode::Native);
+        assert!(!c.spill.enabled);
+    }
+
+    #[test]
+    fn parse_overrides_subset() {
+        let c = ProcessorConfig::parse(
+            r#"{
+                name = my_proc;
+                mapper_count = 8;
+                reducer_count = 3;
+                memory_limit_bytes = 1048576;
+                compute = hlo;
+                spill = {enabled = %true; trigger_fraction = 0.5};
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.name, "my_proc");
+        assert_eq!(c.mapper_count, 8);
+        assert_eq!(c.reducer_count, 3);
+        assert_eq!(c.memory_limit_bytes, 1 << 20);
+        assert_eq!(c.compute, ComputeMode::Hlo);
+        assert!(c.spill.enabled);
+        assert!((c.spill.trigger_fraction - 0.5).abs() < 1e-12);
+        // Untouched keys keep defaults.
+        assert_eq!(c.backoff_ms, ProcessorConfig::default().backoff_ms);
+        assert!((c.spill.straggler_quorum - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_non_map() {
+        assert!(ProcessorConfig::parse("[1;2]").is_err());
+    }
+
+    #[test]
+    fn group_paths() {
+        let c = ProcessorConfig::default();
+        assert!(c.mapper_group().ends_with("/mappers"));
+        assert!(c.reducer_group().ends_with("/reducers"));
+    }
+}

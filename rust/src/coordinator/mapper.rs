@@ -1,0 +1,648 @@
+//! The mapper worker (§4.3): input ingestion, in-memory window, GetRows
+//! service, trimming, split-brain defence.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::api::{Client, Mapper, MapperSpec};
+use crate::coordinator::bucket::{BucketRow, BucketState};
+use crate::coordinator::config::ProcessorConfig;
+use crate::coordinator::state::MapperState;
+use crate::coordinator::window::{WindowEntry, WindowQueue};
+use crate::cypress::DiscoveryGroup;
+use crate::dyntable::TxnError;
+use crate::metrics::hub::names;
+use crate::metrics::MetricsHub;
+use crate::queue::{PartitionReader, INPUT_COL_WRITE_TS};
+use crate::rows::{codec, NameTable};
+use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService, RspGetRows};
+use crate::spill::{pick_straggler_buckets, SpillQueue};
+use crate::storage::{Journal, WriteCategory};
+use crate::util::Guid;
+
+/// Mutable mapper internals shared between the ingestion thread and the
+/// GetRows RPC handler (§4.3.1's "internal state").
+pub(crate) struct MapperInner {
+    pub window: WindowQueue,
+    pub buckets: Vec<BucketState>,
+    pub spilled: Vec<SpillQueue>,
+    /// LocalMapperState: lower bound advanced by TrimWindowEntries.
+    pub local_state: MapperState,
+    /// PersistedMapperState: last state this instance committed/observed.
+    pub persisted_state: MapperState,
+    /// Output name table, known after the first mapped batch.
+    pub out_name_table: Option<Arc<NameTable>>,
+}
+
+impl MapperInner {
+    fn new(num_reducers: usize, spill_journal: impl Fn(usize) -> Arc<Journal>) -> MapperInner {
+        MapperInner {
+            window: WindowQueue::new(),
+            buckets: (0..num_reducers).map(|_| BucketState::new()).collect(),
+            spilled: (0..num_reducers)
+                .map(|r| SpillQueue::new(spill_journal(r)))
+                .collect(),
+            local_state: MapperState::initial(),
+            persisted_state: MapperState::initial(),
+            out_name_table: None,
+        }
+    }
+
+    /// Split-brain reset: "the internal state is dropped" (§4.3.3 step 3).
+    fn reset(&mut self, fresh: MapperState) {
+        self.window.clear();
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        for s in &mut self.spilled {
+            s.clear();
+        }
+        self.local_state = fresh.clone();
+        self.persisted_state = fresh;
+    }
+
+    /// `TrimWindowEntries` (§4.3.5): advance past fully-acknowledged
+    /// entries and fold the result into LocalMapperState.
+    fn trim_window_entries(&mut self) -> usize {
+        match self.window.trim_front() {
+            Some(outcome) => {
+                self.local_state = MapperState {
+                    input_unread_row_index: outcome.input_unread_row_index,
+                    shuffle_unread_row_index: outcome.shuffle_unread_row_index,
+                    continuation_token: outcome.continuation_token.clone(),
+                };
+                outcome.entries_popped
+            }
+            None => 0,
+        }
+    }
+}
+
+/// Everything the RPC service and ingestion loop share.
+pub(crate) struct MapperShared {
+    pub cfg: ProcessorConfig,
+    pub index: usize,
+    pub guid: Guid,
+    pub address: String,
+    pub client: Client,
+    pub metrics: Arc<MetricsHub>,
+    pub inner: Mutex<MapperInner>,
+    /// Signalled whenever window memory is freed (step 8's semaphore).
+    pub mem_freed: Condvar,
+    pub pause: Arc<AtomicBool>,
+    pub kill: Arc<AtomicBool>,
+}
+
+impl MapperShared {
+    fn record_window_gauge(&self, bytes: usize) {
+        self.metrics
+            .series(&names::mapper_window_bytes(self.index))
+            .record(self.client.clock.now_ms(), bytes as f64);
+    }
+}
+
+/// The GetRows RPC endpoint (§4.3.4).
+pub(crate) struct MapperService {
+    shared: Arc<MapperShared>,
+}
+
+impl MapperService {
+    /// Steps 1–4 of the GetRows procedure.
+    fn get_rows(&self, req: ReqGetRows) -> Result<RspGetRows, String> {
+        let sh = &self.shared;
+        // Step 1: stale-discovery defence.
+        if req.mapper_id != sh.guid.to_string() {
+            return Err(format!(
+                "mapper id mismatch: request for {} but this is {}",
+                req.mapper_id, sh.guid
+            ));
+        }
+        let reducer = req.reducer_index as usize;
+        let mut inner = sh.inner.lock().unwrap();
+        if reducer >= inner.buckets.len() {
+            return Err(format!("reducer index {reducer} out of range"));
+        }
+
+        // Step 2: pop acknowledged rows and maintain bucket pointers.
+        inner.spilled[reducer].ack(req.committed_row_index);
+        let ack = inner.buckets[reducer].ack(req.committed_row_index);
+        if ack.old_head_entry != ack.new_head_entry {
+            if let Some(old) = ack.old_head_entry {
+                if let Some(e) = inner.window.get_mut(old) {
+                    e.bucket_ptr_count -= 1;
+                }
+            }
+            if let Some(new) = ack.new_head_entry {
+                if let Some(e) = inner.window.get_mut(new) {
+                    e.bucket_ptr_count += 1;
+                }
+            }
+        }
+
+        // Step 3: trimming. TrimWindowEntries is cheap and runs inline;
+        // TrimInputRows is transactional and runs on its own cadence in
+        // the ingestion thread (§4.3.5's two-method split).
+        if inner.trim_window_entries() > 0 {
+            let bytes = inner.window.total_bytes();
+            drop(inner);
+            sh.record_window_gauge(bytes);
+            sh.mem_freed.notify_all();
+            inner = sh.inner.lock().unwrap();
+        }
+
+        // Step 4: serve up to `count` rows *without* removing them.
+        // Encoded straight from window references — no per-row clones
+        // (§Perf optimization 2).
+        let want = req.count.max(0) as usize;
+        let mut last_shuffle = -1i64;
+        let spilled_rows: Vec<(i64, crate::rows::UnversionedRow)> =
+            inner.spilled[reducer].peek(want);
+        if let Some((s, _)) = spilled_rows.last() {
+            last_shuffle = *s;
+        }
+        let remaining = want - spilled_rows.len();
+        let picks: Vec<BucketRow> = inner.buckets[reducer].peek(remaining).copied().collect();
+        if let Some(r) = picks.last() {
+            last_shuffle = r.shuffle_index;
+        }
+
+        if spilled_rows.is_empty() && picks.is_empty() {
+            return Ok(RspGetRows::empty());
+        }
+        let nt = inner
+            .out_name_table
+            .clone()
+            .expect("rows served before any batch was mapped");
+        let mut refs: Vec<&crate::rows::UnversionedRow> =
+            Vec::with_capacity(spilled_rows.len() + picks.len());
+        refs.extend(spilled_rows.iter().map(|(_, r)| r));
+        for r in &picks {
+            let entry = inner
+                .window
+                .get(r.entry_index)
+                .expect("bucket row references trimmed entry");
+            refs.push(
+                entry
+                    .row_at_shuffle_index(r.shuffle_index)
+                    .expect("shuffle index outside its entry"),
+            );
+        }
+        let row_count = refs.len() as i64;
+        let attachment = codec::encode_rowset_refs(&nt, &refs);
+        Ok(RspGetRows {
+            row_count,
+            last_shuffle_row_index: last_shuffle,
+            attachment,
+        })
+    }
+}
+
+impl RpcService for MapperService {
+    fn handle(&self, req: Request) -> Result<Response, String> {
+        // A paused worker models a hung process: no responses at all.
+        if self.shared.pause.load(Ordering::SeqCst) {
+            return Err("mapper unresponsive (paused)".into());
+        }
+        match req {
+            Request::Ping => Ok(Response::Pong),
+            Request::GetRows(r) => self.get_rows(r).map(Response::GetRows),
+        }
+    }
+}
+
+/// Dependencies handed to a mapper instance at spawn.
+pub struct MapperDeps {
+    pub client: Client,
+    pub net: Arc<RpcNet>,
+    pub metrics: Arc<MetricsHub>,
+    pub discovery: DiscoveryGroup,
+}
+
+/// Control handle for one running mapper instance.
+pub struct MapperHandle {
+    pub index: usize,
+    pub guid: Guid,
+    pub address: String,
+    kill: Arc<AtomicBool>,
+    pause: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl MapperHandle {
+    /// Simulate a hang (§5.2 drills): ingestion stops, RPCs error, the
+    /// discovery session stops heartbeating.
+    pub fn set_paused(&self, paused: bool) {
+        self.pause.store(paused, Ordering::SeqCst);
+    }
+
+    /// Crash the worker. The thread exits; nothing is cleaned up except
+    /// the RPC registration (a dead process's sockets close; its discovery
+    /// entry lingers until TTL expiry).
+    pub fn kill(&self) {
+        self.kill.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.join.is_finished()
+    }
+
+    pub fn join(self) {
+        let _ = self.join.join();
+    }
+}
+
+/// Spawn a mapper instance: ingestion thread + RPC registration +
+/// discovery membership. `user_mapper` is the product of the user's
+/// factory; `reader` is the partition reader for this mapper's partition.
+pub fn spawn_mapper(
+    cfg: ProcessorConfig,
+    spec: MapperSpec,
+    deps: MapperDeps,
+    mut user_mapper: Box<dyn Mapper>,
+    mut reader: Box<dyn PartitionReader>,
+) -> MapperHandle {
+    let kill = Arc::new(AtomicBool::new(false));
+    let pause = Arc::new(AtomicBool::new(false));
+    let address = format!("mapper-{}/{}", spec.index, spec.guid);
+    let accounting = deps.client.store.accounting();
+    let num_reducers = spec.num_reducers;
+    let mapper_index = spec.index;
+
+    let shared = Arc::new(MapperShared {
+        cfg: cfg.clone(),
+        index: spec.index,
+        guid: spec.guid,
+        address: address.clone(),
+        client: deps.client.clone(),
+        metrics: deps.metrics.clone(),
+        inner: Mutex::new(MapperInner::new(num_reducers, |r| {
+            Journal::new(
+                format!("spill/m{mapper_index}/r{r}"),
+                WriteCategory::Spill,
+                accounting.clone(),
+            )
+        })),
+        mem_freed: Condvar::new(),
+        pause: pause.clone(),
+        kill: kill.clone(),
+    });
+
+    deps.net.register(
+        &address,
+        Arc::new(MapperService {
+            shared: shared.clone(),
+        }),
+    );
+
+    let join = std::thread::Builder::new()
+        .name(format!("mapper-{}", spec.index))
+        .spawn({
+            let shared = shared.clone();
+            let net = deps.net.clone();
+            let discovery = deps.discovery.clone();
+            move || {
+                run_ingestion(&shared, &spec, &discovery, user_mapper.as_mut(), reader.as_mut());
+                net.unregister(&shared.address);
+            }
+        })
+        .expect("spawn mapper thread");
+
+    MapperHandle {
+        index: shared.index,
+        guid: shared.guid,
+        address,
+        kill,
+        pause,
+        join,
+    }
+}
+
+/// The input ingestion procedure (§4.3.3) plus the TrimInputRows cadence.
+fn run_ingestion(
+    sh: &Arc<MapperShared>,
+    spec: &MapperSpec,
+    discovery: &DiscoveryGroup,
+    user_mapper: &mut dyn Mapper,
+    reader: &mut dyn PartitionReader,
+) {
+    let clock = sh.client.clock.clone();
+    let cfg = &sh.cfg;
+    let state_table = &spec.state_table;
+    let state_key = MapperState::key(sh.index);
+
+    // Join discovery, waiting out a live predecessor if needed.
+    let session = sh.client.cypress.open_session(cfg.session_ttl_ms);
+    loop {
+        if sh.kill.load(Ordering::SeqCst) {
+            return;
+        }
+        match discovery.join(session, &sh.guid.to_string(), &sh.address, sh.index as i64, sh.guid) {
+            Ok(()) => break,
+            Err(_) => clock.sleep_ms(cfg.backoff_ms),
+        }
+    }
+
+    // Initial state fetch (§4.3.3: "Initially, it fetches its corresponding
+    // row from the state table"), creating the row if this is a fresh
+    // processor.
+    let mut cur = loop {
+        if sh.kill.load(Ordering::SeqCst) {
+            return;
+        }
+        match sh.client.store.lookup(state_table, &state_key) {
+            Ok(Some(row)) => match MapperState::from_row(&row) {
+                Some(s) => break s,
+                None => {
+                    clock.sleep_ms(cfg.backoff_ms);
+                }
+            },
+            Ok(None) => {
+                let mut txn = sh.client.begin();
+                let init = MapperState::initial();
+                if txn.write(state_table, init.to_row(sh.index)).is_ok() && txn.commit().is_ok() {
+                    break init;
+                }
+                clock.sleep_ms(cfg.backoff_ms);
+            }
+            Err(_) => clock.sleep_ms(cfg.backoff_ms),
+        }
+    };
+    {
+        let mut inner = sh.inner.lock().unwrap();
+        inner.local_state = cur.clone();
+        inner.persisted_state = cur.clone();
+    }
+
+    let lag_series = sh.metrics.series(&names::mapper_read_lag(sh.index));
+    let mut last_trim_ms = clock.now_ms();
+    let mut last_heartbeat_ms = clock.now_ms();
+    let mut last_batch_empty = false;
+
+    // The continuous ingestion cycle (§4.3.3 steps 1–8).
+    while !sh.kill.load(Ordering::SeqCst) {
+        if sh.pause.load(Ordering::SeqCst) {
+            // A hung worker: no reads, no heartbeats, no trims.
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        heartbeat_if_due(sh, session, &mut last_heartbeat_ms);
+
+        // Step 1: back-off if the previous iteration appended nothing.
+        if last_batch_empty {
+            clock.sleep_ms(cfg.backoff_ms);
+        }
+        last_batch_empty = true;
+
+        // Step 2: next batch from the partition reader.
+        let batch = match reader.read(
+            cur.input_unread_row_index,
+            cur.input_unread_row_index + cfg.read_batch_rows as i64,
+            &cur.continuation_token,
+        ) {
+            Ok(b) => b,
+            Err(_) => continue, // partition outage: retry after backoff
+        };
+
+        // Step 3: split-brain check against the remote persistent state.
+        let remote = match sh.client.store.lookup(state_table, &state_key) {
+            Ok(Some(row)) => match MapperState::from_row(&row) {
+                Some(s) => s,
+                None => continue,
+            },
+            _ => continue, // state backend error: skip to next iteration
+        };
+        let persisted = sh.inner.lock().unwrap().persisted_state.clone();
+        if remote != persisted {
+            // "we are in a split-brain situation and the mapper waits out a
+            // configurable delay, after which the internal state is dropped
+            // and the whole input ingestion procedure is restarted."
+            sh.metrics.add(names::MAPPER_SPLIT_BRAIN, 1);
+            clock.sleep_ms(cfg.split_brain_delay_ms);
+            let fresh = match sh.client.store.lookup(state_table, &state_key) {
+                Ok(Some(row)) => MapperState::from_row(&row).unwrap_or_else(MapperState::initial),
+                _ => continue,
+            };
+            sh.inner.lock().unwrap().reset(fresh.clone());
+            cur = fresh;
+            sh.record_window_gauge(0);
+            continue;
+        }
+
+        // Step 4: empty batch → next iteration (with backoff).
+        if batch.rowset.is_empty() {
+            maybe_trim_input(sh, reader, &mut last_trim_ms);
+            continue;
+        }
+        last_batch_empty = false;
+
+        let n_in = batch.rowset.len() as i64;
+        let input_bytes = batch.rowset.byte_size();
+
+        // Read-lag metric: now − newest producer write timestamp.
+        if let Some(last_row) = batch.rowset.rows().last() {
+            if let Some(ts) = last_row.get(INPUT_COL_WRITE_TS).and_then(|v| v.as_i64()) {
+                let lag = clock.now_ms() as i64 - ts;
+                lag_series.record(clock.now_ms(), lag.max(0) as f64);
+            }
+        }
+
+        // Step 5: run the user Map and build the window entry.
+        let mapped = user_mapper.map(batch.rowset);
+        if let Err(e) = mapped.validate(sh.cfg.reducer_count) {
+            panic!("user Map produced invalid output: {e}");
+        }
+        let n_out = mapped.rowset.len() as i64;
+
+        sh.metrics.add(names::MAPPER_ROWS_READ, n_in as u64);
+        sh.metrics.add(names::MAPPER_ROWS_MAPPED, n_out as u64);
+        sh.metrics.add(names::MAPPER_BYTES_READ, input_bytes as u64);
+
+        // Step 6: push into the window and distribute to buckets.
+        {
+            let mut inner = sh.inner.lock().unwrap();
+            if inner.out_name_table.is_none() && n_out > 0 {
+                inner.out_name_table = Some(mapped.rowset.name_table().clone());
+            }
+            let entry_index = inner.window.next_entry_index();
+            let byte_size = mapped.rowset.byte_size();
+            let entry = WindowEntry {
+                entry_index,
+                rowset: mapped.rowset,
+                input_begin: cur.input_unread_row_index,
+                input_end: cur.input_unread_row_index + n_in,
+                shuffle_begin: cur.shuffle_unread_row_index,
+                shuffle_end: cur.shuffle_unread_row_index + n_out,
+                continuation_token: batch.next_token.clone(),
+                bucket_ptr_count: 0,
+                byte_size,
+                read_ts_ms: clock.now_ms(),
+            };
+            inner.window.push(entry);
+            for (i, &reducer) in mapped.partition_indexes.iter().enumerate() {
+                let shuffle_index = cur.shuffle_unread_row_index + i as i64;
+                let became_head = inner.buckets[reducer].push(BucketRow {
+                    shuffle_index,
+                    entry_index,
+                });
+                if became_head {
+                    inner
+                        .window
+                        .get_mut(entry_index)
+                        .unwrap()
+                        .bucket_ptr_count += 1;
+                }
+            }
+            // An entry no bucket points into (all rows filtered, or zero
+            // output) is immediately trimmable; fold it into local state.
+            inner.trim_window_entries();
+            sh.record_window_gauge(inner.window.total_bytes());
+        }
+
+        // Step 7: advance the cursor.
+        cur.input_unread_row_index += n_in;
+        cur.shuffle_unread_row_index += n_out;
+        cur.continuation_token = batch.next_token;
+
+        // §6 straggler spill (feature-gated).
+        if cfg.spill.enabled {
+            try_spill(sh);
+        }
+
+        // TrimInputRows cadence (§4.3.5: "regularly with a
+        // configuration-defined period").
+        maybe_trim_input(sh, reader, &mut last_trim_ms);
+
+        // Step 8: memory semaphore.
+        {
+            let mut inner = sh.inner.lock().unwrap();
+            while inner.window.total_bytes() > cfg.memory_limit_bytes
+                && !sh.kill.load(Ordering::SeqCst)
+                && !sh.pause.load(Ordering::SeqCst)
+            {
+                if cfg.spill.enabled {
+                    drop(inner);
+                    try_spill(sh);
+                    inner = sh.inner.lock().unwrap();
+                    if inner.window.total_bytes() <= cfg.memory_limit_bytes {
+                        break;
+                    }
+                }
+                let (guard, _timeout) = sh
+                    .mem_freed
+                    .wait_timeout(inner, Duration::from_millis(2))
+                    .unwrap();
+                inner = guard;
+                drop(inner);
+                heartbeat_if_due(sh, session, &mut last_heartbeat_ms);
+                maybe_trim_input(sh, reader, &mut last_trim_ms);
+                inner = sh.inner.lock().unwrap();
+            }
+        }
+    }
+}
+
+fn heartbeat_if_due(sh: &MapperShared, session: crate::cypress::SessionId, last: &mut u64) {
+    let now = sh.client.clock.now_ms();
+    if now.saturating_sub(*last) >= sh.cfg.heartbeat_period_ms {
+        let _ = sh.client.cypress.heartbeat(session);
+        *last = now;
+    }
+}
+
+/// `TrimInputRows` (§4.3.5): transactional CAS of the persistent state to
+/// LocalMapperState, then trim the input partition.
+fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, last_trim_ms: &mut u64) {
+    let now = sh.client.clock.now_ms();
+    if now.saturating_sub(*last_trim_ms) < sh.cfg.trim_period_ms {
+        return;
+    }
+    *last_trim_ms = now;
+
+    let (local, persisted) = {
+        let inner = sh.inner.lock().unwrap();
+        (inner.local_state.clone(), inner.persisted_state.clone())
+    };
+    if local.input_unread_row_index <= persisted.input_unread_row_index {
+        return; // nothing new to persist
+    }
+
+    let state_table = &sh.cfg.mapper_state_table;
+    let key = MapperState::key(sh.index);
+    let mut txn = sh.client.begin();
+    let committed = match txn.lookup(state_table, &key) {
+        Ok(Some(row)) => match MapperState::from_row(&row) {
+            Some(s) => s,
+            None => return,
+        },
+        _ => return,
+    };
+    // "If it is equal to the state stored in PersistedMapperState and
+    // LocalMapperState is further along than the committed state, the
+    // method tries to update the remote state…"
+    if committed != persisted {
+        return; // split brain — the ingestion loop will handle it
+    }
+    if txn.write(state_table, local.to_row(sh.index)).is_err() {
+        return;
+    }
+    match txn.commit() {
+        Ok(_) => {
+            {
+                let mut inner = sh.inner.lock().unwrap();
+                inner.persisted_state = local.clone();
+            }
+            // "…and calls Trim on the partition reader."
+            let _ = reader.trim(local.input_unread_row_index, &local.continuation_token);
+        }
+        Err(TxnError::Conflict { .. }) => { /* raced a twin; loop handles it */ }
+        Err(_) => { /* transient store failure; retried next period */ }
+    }
+}
+
+/// §6 spill: detach straggler buckets' rows from the window.
+fn try_spill(sh: &Arc<MapperShared>) {
+    let mut inner = sh.inner.lock().unwrap();
+    let heads: Vec<Option<u64>> = inner.buckets.iter().map(|b| b.first_entry_index()).collect();
+    let front = inner.window.first_entry_index();
+    let victims = pick_straggler_buckets(
+        inner.window.total_bytes(),
+        sh.cfg.memory_limit_bytes,
+        sh.cfg.spill.trigger_fraction,
+        sh.cfg.spill.straggler_quorum,
+        &heads,
+        front,
+    );
+    if victims.is_empty() {
+        return;
+    }
+    let mut spilled_rows = 0u64;
+    for b in victims {
+        // Detach the bucket's whole queue: every queued row moves to the
+        // persisted spill queue, the window loses the pin.
+        let rows: Vec<BucketRow> = inner.buckets[b].peek(usize::MAX).copied().collect();
+        let old_head = inner.buckets[b].first_entry_index();
+        for r in &rows {
+            let row = inner
+                .window
+                .get(r.entry_index)
+                .and_then(|e| e.row_at_shuffle_index(r.shuffle_index))
+                .expect("spill source row must be resident")
+                .clone();
+            inner.spilled[b].push(r.shuffle_index, &row);
+            spilled_rows += 1;
+        }
+        inner.buckets[b].ack(i64::MAX); // drain the in-memory queue
+        if let Some(old) = old_head {
+            if let Some(e) = inner.window.get_mut(old) {
+                e.bucket_ptr_count -= 1;
+            }
+        }
+    }
+    inner.trim_window_entries();
+    let bytes = inner.window.total_bytes();
+    drop(inner);
+    sh.metrics.add(names::SPILL_ROWS, spilled_rows);
+    sh.record_window_gauge(bytes);
+    sh.mem_freed.notify_all();
+}

@@ -1,0 +1,32 @@
+//! The streaming processor (chapter 4) — the paper's system contribution.
+//!
+//! "A single streaming task, which we call a *streaming processor*,
+//! consists of endlessly running mapper and reducer jobs. Mappers read
+//! their corresponding partitions and keep a rolling window of mapped rows
+//! in memory. … Reducers, in turn, pull the corresponding rows from the
+//! mappers and process these rows using the specified reduce function. …
+//! The system will then commit the required internal meta-state changes in
+//! the same transaction, guaranteeing that the effect of processing a
+//! batch of rows is applied exactly once."
+//!
+//! | module | paper section |
+//! |---|---|
+//! | [`config`] | §4.5 configuration |
+//! | [`state`] | §4.3.2 / §4.4.1 persistent state |
+//! | [`window`] | §4.3.1 window entries, §4.3.5 trimming |
+//! | [`bucket`] | §4.3.1 bucket states |
+//! | [`mapper`] | §4.3 mapper workflow + §4.3.4 GetRows |
+//! | [`reducer`] | §4.4 reducer workflow |
+//! | [`processor`] | §4.5 assembly, discovery and control |
+
+pub mod bucket;
+pub mod config;
+pub mod mapper;
+pub mod processor;
+pub mod reducer;
+pub mod state;
+pub mod window;
+
+pub use config::{ComputeMode, ProcessorConfig, SpillConfig};
+pub use processor::{ClusterEnv, InputSpec, StreamingProcessor};
+pub use state::{MapperState, ReducerState};

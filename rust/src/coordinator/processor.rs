@@ -1,0 +1,299 @@
+//! Streaming-processor assembly: wire config + substrates + user code into
+//! a supervised fleet of mappers and reducers (§4.5, §4.6).
+
+use std::sync::Arc;
+
+use crate::api::{Client, MapperFactory, MapperSpec, ReducerFactory, ReducerSpec};
+use crate::controller::{Role, Spawner, Supervisor, WorkerHandle};
+use crate::coordinator::config::ProcessorConfig;
+use crate::coordinator::mapper::{spawn_mapper, MapperDeps};
+use crate::coordinator::reducer::{spawn_reducer, ReducerDeps};
+use crate::coordinator::state::{MapperState, ReducerState};
+use crate::cypress::{Cypress, DiscoveryGroup};
+use crate::dyntable::DynTableStore;
+use crate::metrics::{MetricsHub, WaReport};
+use crate::queue::logbroker::LbTopic;
+use crate::queue::ordered_table::OrderedTable;
+use crate::queue::PartitionReader;
+use crate::rows::NameTable;
+use crate::rpc::RpcNet;
+use crate::storage::{WriteAccounting, WriteCategory};
+use crate::util::yson::Yson;
+use crate::util::{Clock, Guid, Prng};
+
+/// The input stream feeding the processor (§4.2): one mapper per partition.
+#[derive(Clone)]
+pub enum InputSpec {
+    Ordered(Arc<OrderedTable>),
+    LogBroker(Arc<LbTopic>),
+    /// §6 multi-partition mappers: several source partitions per mapper,
+    /// made deterministic by the order log (see [`crate::multipart`]).
+    Grouped(Arc<crate::multipart::GroupedInput>),
+}
+
+impl InputSpec {
+    pub fn partition_count(&self) -> usize {
+        match self {
+            InputSpec::Ordered(t) => t.tablet_count(),
+            InputSpec::LogBroker(t) => t.partition_count(),
+            InputSpec::Grouped(g) => g.mapper_count(),
+        }
+    }
+
+    pub fn name_table(&self) -> Arc<NameTable> {
+        match self {
+            InputSpec::Ordered(t) => t.name_table(),
+            InputSpec::LogBroker(t) => t.name_table(),
+            InputSpec::Grouped(g) => g.source.name_table(),
+        }
+    }
+
+    pub fn reader(&self, partition: usize) -> Box<dyn PartitionReader> {
+        match self {
+            InputSpec::Ordered(t) => Box::new(t.reader(partition)),
+            InputSpec::LogBroker(t) => Box::new(t.reader(partition)),
+            InputSpec::Grouped(g) => Box::new(g.reader(partition)),
+        }
+    }
+
+    /// Rows still retained in the input store (backlog metric).
+    pub fn retained_rows(&self) -> usize {
+        match self {
+            InputSpec::Ordered(t) => t.retained_rows(),
+            InputSpec::LogBroker(t) => t.retained_rows(),
+            InputSpec::Grouped(g) => g.source.retained_rows(),
+        }
+    }
+}
+
+/// The shared substrate bundle a processor (and its tests/figures) runs on:
+/// one simulated cluster.
+#[derive(Clone)]
+pub struct ClusterEnv {
+    pub clock: Clock,
+    pub accounting: Arc<WriteAccounting>,
+    pub store: Arc<DynTableStore>,
+    pub cypress: Arc<Cypress>,
+    pub net: Arc<RpcNet>,
+    pub metrics: Arc<MetricsHub>,
+}
+
+impl ClusterEnv {
+    /// Build a fresh simulated cluster.
+    pub fn new(clock: Clock, seed: u64) -> ClusterEnv {
+        let accounting = WriteAccounting::new();
+        ClusterEnv {
+            store: DynTableStore::new(accounting.clone()),
+            cypress: Cypress::new(clock.clone(), accounting.clone()),
+            net: RpcNet::new(clock.clone(), Prng::seeded(seed)),
+            metrics: MetricsHub::new(),
+            accounting,
+            clock,
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            store: self.store.clone(),
+            cypress: self.cypress.clone(),
+            clock: self.clock.clone(),
+        }
+    }
+}
+
+/// Errors surfaced while assembling a processor.
+#[derive(Debug, thiserror::Error)]
+pub enum LaunchError {
+    #[error("config: mapper_count {cfg} != input partition count {input}")]
+    PartitionMismatch { cfg: usize, input: usize },
+    #[error("state table setup failed: {0}")]
+    Setup(String),
+}
+
+/// A running streaming processor: the user-facing handle.
+pub struct StreamingProcessor {
+    pub cfg: ProcessorConfig,
+    pub env: ClusterEnv,
+    pub input: InputSpec,
+    supervisor: Arc<Supervisor>,
+    processor_guid: Guid,
+}
+
+impl StreamingProcessor {
+    /// Set up state tables and discovery, then launch the supervised
+    /// worker fleet.
+    pub fn launch(
+        cfg: ProcessorConfig,
+        env: ClusterEnv,
+        input: InputSpec,
+        mapper_factory: MapperFactory,
+        reducer_factory: ReducerFactory,
+        user_config: Yson,
+    ) -> Result<StreamingProcessor, LaunchError> {
+        if cfg.mapper_count != input.partition_count() {
+            return Err(LaunchError::PartitionMismatch {
+                cfg: cfg.mapper_count,
+                input: input.partition_count(),
+            });
+        }
+        let processor_guid = Guid::generate();
+        setup_state_tables(&cfg, &env).map_err(LaunchError::Setup)?;
+
+        let mapper_group = DiscoveryGroup::open(env.cypress.clone(), &cfg.mapper_group())
+            .map_err(|e| LaunchError::Setup(e.to_string()))?;
+        let reducer_group = DiscoveryGroup::open(env.cypress.clone(), &cfg.reducer_group())
+            .map_err(|e| LaunchError::Setup(e.to_string()))?;
+
+        let user_config = Arc::new(user_config);
+        let mut slots: Vec<(Role, usize, Spawner)> = Vec::new();
+
+        for index in 0..cfg.mapper_count {
+            let cfg = cfg.clone();
+            let env = env.clone();
+            let input = input.clone();
+            let factory = mapper_factory.clone();
+            let user_config = user_config.clone();
+            let group = mapper_group.clone();
+            let spawner: Spawner = Box::new(move || {
+                let guid = Guid::generate();
+                let spec = MapperSpec {
+                    processor_guid,
+                    state_table: cfg.mapper_state_table.clone(),
+                    index,
+                    guid,
+                    num_reducers: cfg.reducer_count,
+                };
+                let client = env.client();
+                let user_mapper = factory(&user_config, &client, input.name_table(), &spec);
+                let deps = MapperDeps {
+                    client,
+                    net: env.net.clone(),
+                    metrics: env.metrics.clone(),
+                    discovery: group.clone(),
+                };
+                WorkerHandle::Mapper(spawn_mapper(
+                    cfg.clone(),
+                    spec,
+                    deps,
+                    user_mapper,
+                    input.reader(index),
+                ))
+            });
+            slots.push((Role::Mapper, index, spawner));
+        }
+
+        for index in 0..cfg.reducer_count {
+            let cfg = cfg.clone();
+            let env = env.clone();
+            let factory = reducer_factory.clone();
+            let user_config = user_config.clone();
+            let mapper_group = mapper_group.clone();
+            let reducer_group = reducer_group.clone();
+            let spawner: Spawner = Box::new(move || {
+                let guid = Guid::generate();
+                let spec = ReducerSpec {
+                    processor_guid,
+                    state_table: cfg.reducer_state_table.clone(),
+                    index,
+                    guid,
+                    num_mappers: cfg.mapper_count,
+                };
+                let client = env.client();
+                let user_reducer = factory(&user_config, &client, &spec);
+                let deps = ReducerDeps {
+                    client,
+                    net: env.net.clone(),
+                    metrics: env.metrics.clone(),
+                    mapper_discovery: mapper_group.clone(),
+                    reducer_discovery: reducer_group.clone(),
+                };
+                WorkerHandle::Reducer(spawn_reducer(cfg.clone(), spec, deps, user_reducer))
+            });
+            slots.push((Role::Reducer, index, spawner));
+        }
+
+        let supervisor = Supervisor::start(env.clock.clone(), cfg.restart_delay_ms, slots);
+        Ok(StreamingProcessor {
+            cfg,
+            env,
+            input,
+            supervisor,
+            processor_guid,
+        })
+    }
+
+    pub fn processor_guid(&self) -> Guid {
+        self.processor_guid
+    }
+
+    pub fn supervisor(&self) -> &Arc<Supervisor> {
+        &self.supervisor
+    }
+
+    /// Total input payload bytes mappers have read so far.
+    pub fn ingested_bytes(&self) -> u64 {
+        self.env
+            .metrics
+            .get_counter(crate::metrics::hub::names::MAPPER_BYTES_READ)
+    }
+
+    /// Write-amplification report for this run.
+    pub fn wa_report(&self, label: &str) -> WaReport {
+        WaReport::new(label, self.ingested_bytes(), self.env.accounting.snapshot())
+    }
+
+    /// Stop all workers and the supervisor. Consumes the processor.
+    pub fn stop(self) {
+        self.supervisor.stop();
+    }
+}
+
+/// Create the state tables (idempotent) and seed initial rows for every
+/// worker index that has none yet.
+fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), String> {
+    use crate::dyntable::store::StoreError;
+    match env.store.create_table(
+        &cfg.mapper_state_table,
+        MapperState::schema(),
+        WriteCategory::MapperMeta,
+    ) {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
+        Err(e) => return Err(e.to_string()),
+    }
+    match env.store.create_table(
+        &cfg.reducer_state_table,
+        ReducerState::schema(),
+        WriteCategory::ReducerMeta,
+    ) {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
+        Err(e) => return Err(e.to_string()),
+    }
+
+    let mut txn = env.store.begin();
+    for index in 0..cfg.mapper_count {
+        let existing = txn
+            .lookup(&cfg.mapper_state_table, &MapperState::key(index))
+            .map_err(|e| e.to_string())?;
+        if existing.is_none() {
+            txn.write(
+                &cfg.mapper_state_table,
+                MapperState::initial().to_row(index),
+            )
+            .map_err(|e| e.to_string())?;
+        }
+    }
+    for index in 0..cfg.reducer_count {
+        let existing = txn
+            .lookup(&cfg.reducer_state_table, &ReducerState::key(index))
+            .map_err(|e| e.to_string())?;
+        if existing.is_none() {
+            txn.write(
+                &cfg.reducer_state_table,
+                ReducerState::initial(cfg.mapper_count).to_row(index),
+            )
+            .map_err(|e| e.to_string())?;
+        }
+    }
+    txn.commit().map_err(|e| e.to_string())?;
+    Ok(())
+}

@@ -1,0 +1,460 @@
+//! The reducer worker (§4.4): pull rows from every mapper, run the user's
+//! Reduce, commit effects + meta-state atomically (exactly-once).
+//!
+//! The main procedure is factored into three phases — **fetch**,
+//! **process**, **commit** — matching the §6 pipelining proposal ("a
+//! single cycle of the reducer's main procedure can be subdivided into
+//! three consecutive stages: fetch, process … and commit"). The serial
+//! loop here runs them back-to-back; [`crate::pipelined`] overlaps
+//! fetch(n+1) with process/commit(n).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::{Client, Reducer, ReducerSpec};
+use crate::coordinator::config::ProcessorConfig;
+use crate::coordinator::state::ReducerState;
+use crate::cypress::{DiscoveryGroup, MemberInfo, SessionId};
+use crate::dyntable::TxnError;
+use crate::metrics::hub::names;
+use crate::metrics::MetricsHub;
+use crate::rows::{codec, UnversionedRowset};
+use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RspGetRows};
+use crate::util::Guid;
+
+/// Dependencies handed to a reducer instance at spawn.
+pub struct ReducerDeps {
+    pub client: Client,
+    pub net: Arc<RpcNet>,
+    pub metrics: Arc<MetricsHub>,
+    /// Where mappers register (to resolve addresses, §4.4.2 step 3).
+    pub mapper_discovery: DiscoveryGroup,
+    /// Where this reducer registers itself.
+    pub reducer_discovery: DiscoveryGroup,
+}
+
+/// Control handle for one running reducer instance.
+pub struct ReducerHandle {
+    pub index: usize,
+    pub guid: Guid,
+    pub address: String,
+    kill: Arc<AtomicBool>,
+    pause: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl ReducerHandle {
+    pub fn set_paused(&self, paused: bool) {
+        self.pause.store(paused, Ordering::SeqCst);
+    }
+
+    pub fn kill(&self) {
+        self.kill.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.join.is_finished()
+    }
+
+    pub fn join(self) {
+        let _ = self.join.join();
+    }
+}
+
+/// One mapper's contribution to a reducer cycle.
+pub(crate) struct FetchResult {
+    pub mapper_index: usize,
+    pub rsp: RspGetRows,
+}
+
+/// Outcome of the process+commit phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CommitOutcome {
+    /// State advanced; effects applied exactly once.
+    Committed { rows: i64, bytes: usize },
+    /// A twin changed the state under us (§4.4.2 step 7).
+    SplitBrain,
+    /// OCC conflict at commit time.
+    Conflict,
+    /// Nothing to process this cycle.
+    Nothing,
+    /// Transient error (store down, decode failure); retry next cycle.
+    TransientError,
+}
+
+/// Spawn a reducer instance running the serial main procedure (§4.4.2),
+/// or the §6 pipelined variant when `cfg` asks for it.
+pub fn spawn_reducer(
+    cfg: ProcessorConfig,
+    spec: ReducerSpec,
+    deps: ReducerDeps,
+    mut user_reducer: Box<dyn Reducer>,
+) -> ReducerHandle {
+    let kill = Arc::new(AtomicBool::new(false));
+    let pause = Arc::new(AtomicBool::new(false));
+    let address = format!("reducer-{}/{}", spec.index, spec.guid);
+    let index = spec.index;
+    let guid = spec.guid;
+
+    let join = std::thread::Builder::new()
+        .name(format!("reducer-{}", spec.index))
+        .spawn({
+            let kill = kill.clone();
+            let pause = pause.clone();
+            let address = address.clone();
+            move || {
+                let rt = ReducerRt {
+                    cfg,
+                    spec,
+                    deps,
+                    address,
+                };
+                if rt.cfg.pipelined_reducer {
+                    crate::pipelined::run_reducer_pipelined(&rt, user_reducer.as_mut(), &kill, &pause);
+                } else {
+                    run_reducer_serial(&rt, user_reducer.as_mut(), &kill, &pause);
+                }
+            }
+        })
+        .expect("spawn reducer thread");
+
+    ReducerHandle {
+        index,
+        guid,
+        address,
+        kill,
+        pause,
+        join,
+    }
+}
+
+/// Everything a reducer loop needs (shared by serial and pipelined).
+pub(crate) struct ReducerRt {
+    pub cfg: ProcessorConfig,
+    pub spec: ReducerSpec,
+    pub deps: ReducerDeps,
+    pub address: String,
+}
+
+impl ReducerRt {
+    /// Join the reducer discovery group, waiting out a live predecessor.
+    pub(crate) fn join_discovery(&self, kill: &AtomicBool) -> Option<SessionId> {
+        let clock = &self.deps.client.clock;
+        let session = self
+            .deps
+            .client
+            .cypress
+            .open_session(self.cfg.session_ttl_ms);
+        loop {
+            if kill.load(Ordering::SeqCst) {
+                return None;
+            }
+            match self.deps.reducer_discovery.join(
+                session,
+                &format!("reducer-{}", self.spec.index),
+                &self.address,
+                self.spec.index as i64,
+                self.spec.guid,
+            ) {
+                Ok(()) => return Some(session),
+                Err(_) => clock.sleep_ms(self.cfg.backoff_ms),
+            }
+        }
+    }
+
+    pub(crate) fn heartbeat_if_due(&self, session: SessionId, last: &mut u64) {
+        let now = self.deps.client.clock.now_ms();
+        if now.saturating_sub(*last) >= self.cfg.heartbeat_period_ms {
+            let _ = self.deps.client.cypress.heartbeat(session);
+            *last = now;
+        }
+    }
+
+    /// Step 2: fetch (or lazily create) the persistent state.
+    pub(crate) fn fetch_state(&self) -> Option<ReducerState> {
+        let key = ReducerState::key(self.spec.index);
+        match self
+            .deps
+            .client
+            .store
+            .lookup(&self.spec.state_table, &key)
+        {
+            Ok(Some(row)) => ReducerState::from_row(&row),
+            Ok(None) => {
+                let mut txn = self.deps.client.begin();
+                let init = ReducerState::initial(self.spec.num_mappers);
+                if txn
+                    .write(&self.spec.state_table, init.to_row(self.spec.index))
+                    .is_ok()
+                    && txn.commit().is_ok()
+                {
+                    Some(init)
+                } else {
+                    None
+                }
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Step 3: one parallel GetRows per mapper index.
+    pub(crate) fn fetch_cycle(&self, state: &ReducerState, cycle: u64) -> Vec<FetchResult> {
+        let members = match self.deps.mapper_discovery.list() {
+            Ok(m) => m,
+            Err(_) => return Vec::new(),
+        };
+        fetch_from_mappers(
+            &self.cfg,
+            &self.spec,
+            &self.deps.net,
+            &self.address,
+            &members,
+            state,
+            cycle,
+        )
+    }
+
+    /// Step 4: the tentative new state + total fetched rows.
+    pub(crate) fn tentative_state(
+        &self,
+        state: &ReducerState,
+        fetches: &[FetchResult],
+    ) -> (ReducerState, i64) {
+        let mut new_state = state.clone();
+        let mut total = 0;
+        for f in fetches {
+            if f.rsp.row_count > 0 {
+                new_state.committed_row_indices[f.mapper_index] = f.rsp.last_shuffle_row_index;
+                total += f.rsp.row_count;
+            }
+        }
+        (new_state, total)
+    }
+
+    /// Steps 5–8: decode, combine, run the user Reduce, validate the state
+    /// within the transaction and commit atomically.
+    pub(crate) fn process_and_commit(
+        &self,
+        user_reducer: &mut dyn Reducer,
+        state: &ReducerState,
+        new_state: &ReducerState,
+        fetches: &[FetchResult],
+    ) -> CommitOutcome {
+        let client = &self.deps.client;
+        let state_table = &self.spec.state_table;
+        let state_key = ReducerState::key(self.spec.index);
+
+        // Step 5: deserialize and combine into one batch.
+        let mut parts = Vec::new();
+        let mut total_rows = 0i64;
+        for f in fetches {
+            if f.rsp.row_count > 0 {
+                match codec::decode_rowset(&f.rsp.attachment) {
+                    Ok(rs) => {
+                        total_rows += rs.len() as i64;
+                        parts.push(rs);
+                    }
+                    Err(_) => return CommitOutcome::TransientError,
+                }
+            }
+        }
+        let Some(combined) = UnversionedRowset::concat_owned(parts) else {
+            return CommitOutcome::Nothing;
+        };
+        let combined_bytes = combined.byte_size();
+        let batch_ts = max_ts_of(&combined);
+
+        // Step 6: user Reduce, taking over its transaction if it opened
+        // one.
+        let mut txn = match user_reducer.reduce(combined) {
+            Some(t) => t,
+            None => client.begin(),
+        };
+
+        // Step 7: split-brain check inside the transaction.
+        let in_txn = match txn.lookup(state_table, &state_key) {
+            Ok(Some(row)) => ReducerState::from_row(&row),
+            _ => None,
+        };
+        if in_txn.as_ref() != Some(state) {
+            self.deps.metrics.add(names::REDUCER_SPLIT_BRAIN, 1);
+            txn.abort();
+            return CommitOutcome::SplitBrain;
+        }
+
+        // Step 8: write the new state; commit everything atomically.
+        if txn
+            .write(state_table, new_state.to_row(self.spec.index))
+            .is_err()
+        {
+            return CommitOutcome::TransientError;
+        }
+        match txn.commit() {
+            Ok(_) => {
+                if let Some(ts) = batch_ts {
+                    let now = client.clock.now_ms();
+                    self.deps
+                        .metrics
+                        .series(&names::reducer_commit_latency(self.spec.index))
+                        .record(now, (now as i64 - ts).max(0) as f64);
+                }
+                CommitOutcome::Committed {
+                    rows: total_rows,
+                    bytes: combined_bytes,
+                }
+            }
+            Err(TxnError::Conflict { .. }) => {
+                self.deps.metrics.add(names::REDUCER_COMMIT_CONFLICTS, 1);
+                CommitOutcome::Conflict
+            }
+            Err(_) => CommitOutcome::TransientError,
+        }
+    }
+
+    /// Record post-commit metrics; returns the new `last_commit_ms`.
+    pub(crate) fn record_commit(&self, rows: i64, bytes: usize, last_commit_ms: u64) -> u64 {
+        let now = self.deps.client.clock.now_ms();
+        let dt_s = ((now - last_commit_ms).max(1)) as f64 / 1000.0;
+        self.deps
+            .metrics
+            .series(&names::reducer_throughput(self.spec.index))
+            .record(now, bytes as f64 / dt_s);
+        self.deps.metrics.add(names::REDUCER_ROWS, rows as u64);
+        self.deps.metrics.add(names::REDUCER_BYTES, bytes as u64);
+        self.deps.metrics.add(names::REDUCER_COMMITS, 1);
+        now
+    }
+}
+
+/// Newest producer/mapper timestamp in a combined batch (commit-latency
+/// metric); looks for a `ts` or `write_ts_ms` column.
+fn max_ts_of(rs: &UnversionedRowset) -> Option<i64> {
+    let col = rs
+        .name_table()
+        .id("write_ts_ms")
+        .or_else(|| rs.name_table().id("ts"))?;
+    rs.rows()
+        .iter()
+        .filter_map(|r| r.get(col).and_then(|v| v.as_i64()))
+        .max()
+}
+
+/// The serial main procedure (§4.4.2 steps 1–8).
+fn run_reducer_serial(
+    rt: &ReducerRt,
+    user_reducer: &mut dyn Reducer,
+    kill: &AtomicBool,
+    pause: &AtomicBool,
+) {
+    let clock = rt.deps.client.clock.clone();
+    let Some(session) = rt.join_discovery(kill) else {
+        return;
+    };
+    let mut last_commit_ms = clock.now_ms();
+    let mut last_heartbeat_ms = clock.now_ms();
+    let mut last_cycle_committed = true;
+    let mut cycle: u64 = 0;
+
+    while !kill.load(Ordering::SeqCst) {
+        if pause.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        rt.heartbeat_if_due(session, &mut last_heartbeat_ms);
+        cycle += 1;
+
+        // Step 1: back-off unless the previous cycle committed.
+        if !last_cycle_committed {
+            clock.sleep_ms(rt.cfg.backoff_ms);
+        }
+        last_cycle_committed = false;
+
+        // Step 2.
+        let Some(state) = rt.fetch_state() else {
+            continue;
+        };
+        if state.committed_row_indices.len() != rt.spec.num_mappers {
+            return; // config/state mismatch: unrecoverable for this instance
+        }
+
+        // Steps 3–4.
+        let fetches = rt.fetch_cycle(&state, cycle);
+        let (new_state, total_rows) = rt.tentative_state(&state, &fetches);
+        if total_rows == 0 {
+            continue;
+        }
+
+        // Steps 5–8.
+        match rt.process_and_commit(user_reducer, &state, &new_state, &fetches) {
+            CommitOutcome::Committed { rows, bytes } => {
+                last_cycle_committed = true;
+                last_commit_ms = rt.record_commit(rows, bytes, last_commit_ms);
+            }
+            CommitOutcome::SplitBrain
+            | CommitOutcome::Conflict
+            | CommitOutcome::Nothing
+            | CommitOutcome::TransientError => {}
+        }
+    }
+}
+
+/// Step 3's fan-out: one `GetRows` per mapper index, issued in parallel.
+/// "If a mapper … returned an error or was missing in discovery and wasn't
+/// polled, its entry is left unchanged." Split-brain twins both appear in
+/// discovery under one index; we rotate between them across cycles so a
+/// dead twin cannot starve the index forever.
+pub(crate) fn fetch_from_mappers(
+    cfg: &ProcessorConfig,
+    spec: &ReducerSpec,
+    net: &Arc<RpcNet>,
+    reducer_address: &str,
+    members: &[MemberInfo],
+    state: &ReducerState,
+    cycle: u64,
+) -> Vec<FetchResult> {
+    // Group members by mapper index.
+    let mut by_index: Vec<Vec<&MemberInfo>> = vec![Vec::new(); spec.num_mappers];
+    for m in members {
+        if (0..spec.num_mappers as i64).contains(&m.index) {
+            by_index[m.index as usize].push(m);
+        }
+    }
+
+    let mut results: Vec<Option<FetchResult>> = Vec::with_capacity(spec.num_mappers);
+    for _ in 0..spec.num_mappers {
+        results.push(None);
+    }
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (mapper_index, candidates) in by_index.iter().enumerate() {
+            if candidates.is_empty() {
+                continue;
+            }
+            // Only one request per mapper index per cycle (§4.4.2 step 3).
+            let target = candidates[(cycle as usize) % candidates.len()];
+            let committed = state.committed_row_indices[mapper_index];
+            let req = Request::GetRows(ReqGetRows {
+                count: cfg.fetch_count as i64,
+                reducer_index: spec.index as i64,
+                committed_row_index: committed,
+                mapper_id: target.guid.to_string(),
+            });
+            let net = net.clone();
+            let addr = target.address.clone();
+            let src = reducer_address.to_string();
+            handles.push((
+                mapper_index,
+                scope.spawn(move || net.call(&src, &addr, req)),
+            ));
+        }
+        for (mapper_index, h) in handles {
+            if let Ok(Ok(Response::GetRows(rsp))) = h.join().map_err(|_| ()) {
+                results[mapper_index] = Some(FetchResult { mapper_index, rsp });
+            }
+        }
+    });
+
+    results.into_iter().flatten().collect()
+}

@@ -1,0 +1,175 @@
+//! Persistent worker state rows (§4.3.2, §4.4.1).
+//!
+//! Mapper state table columns: `mapper_index` (key),
+//! `input_unread_row_index`, `shuffle_unread_row_index`,
+//! `continuation_token` — "the index … of the first row that was not yet
+//! successfully processed and committed by its corresponding reducer".
+//!
+//! Reducer state table columns: `reducer_index` (key),
+//! `committed_row_indices` — "a list of shuffle row indices, one for each
+//! mapper, indicating that all rows up to said index were reliably
+//! processed by the reducer". The list is serialized as a YSON list.
+
+use crate::queue::ContinuationToken;
+use crate::rows::{ColumnSchema, ColumnType, TableSchema, UnversionedRow, Value};
+use crate::util::yson::Yson;
+
+/// A mapper's persistent state (one row of the mapper state table).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MapperState {
+    pub input_unread_row_index: i64,
+    pub shuffle_unread_row_index: i64,
+    pub continuation_token: ContinuationToken,
+}
+
+impl MapperState {
+    pub fn initial() -> MapperState {
+        MapperState {
+            input_unread_row_index: 0,
+            shuffle_unread_row_index: 0,
+            continuation_token: ContinuationToken::initial(),
+        }
+    }
+
+    pub fn schema() -> TableSchema {
+        TableSchema::new(vec![
+            ColumnSchema::key("mapper_index", ColumnType::Int64),
+            ColumnSchema::value("input_unread_row_index", ColumnType::Int64),
+            ColumnSchema::value("shuffle_unread_row_index", ColumnType::Int64),
+            ColumnSchema::value("continuation_token", ColumnType::Str),
+        ])
+    }
+
+    pub fn to_row(&self, mapper_index: usize) -> UnversionedRow {
+        UnversionedRow::new(vec![
+            Value::Int64(mapper_index as i64),
+            Value::Int64(self.input_unread_row_index),
+            Value::Int64(self.shuffle_unread_row_index),
+            Value::Str(self.continuation_token.0.clone()),
+        ])
+    }
+
+    pub fn from_row(row: &UnversionedRow) -> Option<MapperState> {
+        Some(MapperState {
+            input_unread_row_index: row.get(1)?.as_i64()?,
+            shuffle_unread_row_index: row.get(2)?.as_i64()?,
+            continuation_token: ContinuationToken(row.get(3)?.as_str()?.to_string()),
+        })
+    }
+
+    pub fn key(mapper_index: usize) -> Vec<Value> {
+        vec![Value::Int64(mapper_index as i64)]
+    }
+}
+
+/// A reducer's persistent state (one row of the reducer state table).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReducerState {
+    /// `committed_row_indices[m]` = shuffle index of the last row from
+    /// mapper `m` this reducer has committed; -1 = none yet.
+    pub committed_row_indices: Vec<i64>,
+}
+
+impl ReducerState {
+    pub fn initial(num_mappers: usize) -> ReducerState {
+        ReducerState {
+            committed_row_indices: vec![-1; num_mappers],
+        }
+    }
+
+    pub fn schema() -> TableSchema {
+        TableSchema::new(vec![
+            ColumnSchema::key("reducer_index", ColumnType::Int64),
+            ColumnSchema::value("committed_row_indices", ColumnType::Str),
+        ])
+    }
+
+    pub fn to_row(&self, reducer_index: usize) -> UnversionedRow {
+        let list = Yson::List(
+            self.committed_row_indices
+                .iter()
+                .map(|v| Yson::Int(*v))
+                .collect(),
+        );
+        UnversionedRow::new(vec![
+            Value::Int64(reducer_index as i64),
+            Value::Str(list.to_string()),
+        ])
+    }
+
+    pub fn from_row(row: &UnversionedRow) -> Option<ReducerState> {
+        let text = row.get(1)?.as_str()?;
+        let y = Yson::parse(text).ok()?;
+        let committed = y
+            .as_list()
+            .ok()?
+            .iter()
+            .map(|v| v.as_i64().ok())
+            .collect::<Option<Vec<i64>>>()?;
+        Some(ReducerState {
+            committed_row_indices: committed,
+        })
+    }
+
+    pub fn key(reducer_index: usize) -> Vec<Value> {
+        vec![Value::Int64(reducer_index as i64)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapper_state_roundtrip() {
+        let s = MapperState {
+            input_unread_row_index: 42,
+            shuffle_unread_row_index: 99,
+            continuation_token: ContinuationToken("lb:123".into()),
+        };
+        let row = s.to_row(3);
+        MapperState::schema().validate(&row).unwrap();
+        assert_eq!(MapperState::from_row(&row), Some(s));
+        assert_eq!(row.get(0), Some(&Value::Int64(3)));
+    }
+
+    #[test]
+    fn mapper_initial_state() {
+        let s = MapperState::initial();
+        assert_eq!(s.input_unread_row_index, 0);
+        assert!(s.continuation_token.is_initial());
+    }
+
+    #[test]
+    fn reducer_state_roundtrip() {
+        let s = ReducerState {
+            committed_row_indices: vec![-1, 0, 12345, 7],
+        };
+        let row = s.to_row(1);
+        ReducerState::schema().validate(&row).unwrap();
+        assert_eq!(ReducerState::from_row(&row), Some(s));
+    }
+
+    #[test]
+    fn reducer_initial_all_minus_one() {
+        let s = ReducerState::initial(5);
+        assert_eq!(s.committed_row_indices, vec![-1; 5]);
+    }
+
+    #[test]
+    fn from_row_rejects_garbage() {
+        let bad = UnversionedRow::new(vec![Value::Int64(0), Value::Str("not yson list {".into())]);
+        assert_eq!(ReducerState::from_row(&bad), None);
+        let wrong_ty = UnversionedRow::new(vec![Value::Int64(0), Value::Int64(7)]);
+        assert_eq!(ReducerState::from_row(&wrong_ty), None);
+    }
+
+    #[test]
+    fn empty_committed_list_roundtrip() {
+        let s = ReducerState {
+            committed_row_indices: vec![],
+        };
+        let row = s.to_row(0);
+        assert_eq!(ReducerState::from_row(&row), Some(s));
+    }
+}

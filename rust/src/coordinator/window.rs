@@ -1,0 +1,296 @@
+//! The mapper's in-memory row window (§4.3.1).
+//!
+//! "A queue of WindowEntry objects, which hold information about batches of
+//! read and mapped rows. These entries are indexed sequentially within the
+//! lifetime of the instance … Each window entry also stores a *bucket
+//! pointer count*, which tallies the number of buckets for which this entry
+//! holds the first row in their queue."
+//!
+//! This queue **is** the paper's write-amplification win: mapped rows live
+//! here, in memory, until every designated reducer has committed them —
+//! they are never persisted (unless the §6 spill feature evicts them).
+
+use std::collections::VecDeque;
+
+use crate::queue::ContinuationToken;
+use crate::rows::UnversionedRowset;
+
+/// One mapped batch held in the window.
+#[derive(Debug, Clone)]
+pub struct WindowEntry {
+    /// Absolute entry index within the mapper instance's lifetime.
+    pub entry_index: u64,
+    /// The mapped rows (output of the user's Map).
+    pub rowset: UnversionedRowset,
+    /// Input-numbering range [begin, end) this entry was mapped from.
+    pub input_begin: i64,
+    pub input_end: i64,
+    /// Shuffle-numbering range [begin, end): `rowset.rows()[i]` has shuffle
+    /// index `shuffle_begin + i`.
+    pub shuffle_begin: i64,
+    pub shuffle_end: i64,
+    /// Continuation token *after* reading the input batch.
+    pub continuation_token: ContinuationToken,
+    /// Number of buckets whose first queued row lies in this entry.
+    pub bucket_ptr_count: usize,
+    /// Cached payload size (drives the memory semaphore).
+    pub byte_size: usize,
+    /// Simulated timestamp when the batch was read (metrics).
+    pub read_ts_ms: u64,
+}
+
+impl WindowEntry {
+    /// Row with the given shuffle index, if it lies in this entry.
+    pub fn row_at_shuffle_index(&self, shuffle_index: i64) -> Option<&crate::rows::UnversionedRow> {
+        if shuffle_index < self.shuffle_begin || shuffle_index >= self.shuffle_end {
+            return None;
+        }
+        self.rowset.rows().get((shuffle_index - self.shuffle_begin) as usize)
+    }
+}
+
+/// Result of a front-trim: the state reached by consuming everything up to
+/// and including the last popped entry (feeds `LocalMapperState`, §4.3.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrimOutcome {
+    pub entries_popped: usize,
+    pub bytes_freed: usize,
+    /// After-the-end indexes + token of the last popped entry.
+    pub input_unread_row_index: i64,
+    pub shuffle_unread_row_index: i64,
+    pub continuation_token: ContinuationToken,
+}
+
+/// FIFO of window entries with absolute indexing.
+#[derive(Debug, Default)]
+pub struct WindowQueue {
+    entries: VecDeque<WindowEntry>,
+    first_entry_index: u64,
+    total_bytes: usize,
+}
+
+impl WindowQueue {
+    pub fn new() -> WindowQueue {
+        WindowQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    pub fn first_entry_index(&self) -> u64 {
+        self.first_entry_index
+    }
+
+    /// Index the next pushed entry will get.
+    pub fn next_entry_index(&self) -> u64 {
+        self.first_entry_index + self.entries.len() as u64
+    }
+
+    /// Push a new entry (must carry `next_entry_index`).
+    pub fn push(&mut self, entry: WindowEntry) {
+        assert_eq!(
+            entry.entry_index,
+            self.next_entry_index(),
+            "window entries must be pushed in order"
+        );
+        self.total_bytes += entry.byte_size;
+        self.entries.push_back(entry);
+    }
+
+    /// Entry by absolute index.
+    pub fn get(&self, entry_index: u64) -> Option<&WindowEntry> {
+        let offset = entry_index.checked_sub(self.first_entry_index)? as usize;
+        self.entries.get(offset)
+    }
+
+    pub fn get_mut(&mut self, entry_index: u64) -> Option<&mut WindowEntry> {
+        let offset = entry_index.checked_sub(self.first_entry_index)? as usize;
+        self.entries.get_mut(offset)
+    }
+
+    /// Entry containing the given shuffle index (binary search — entries
+    /// have increasing, contiguous-per-entry shuffle ranges, but there may
+    /// be gaps where Map produced zero rows).
+    pub fn entry_for_shuffle_index(&self, shuffle_index: i64) -> Option<&WindowEntry> {
+        let idx = self
+            .entries
+            .partition_point(|e| e.shuffle_end <= shuffle_index);
+        self.entries
+            .get(idx)
+            .filter(|e| e.shuffle_begin <= shuffle_index && shuffle_index < e.shuffle_end)
+    }
+
+    /// Absolute entry index containing a shuffle index.
+    pub fn entry_index_for_shuffle_index(&self, shuffle_index: i64) -> Option<u64> {
+        self.entry_for_shuffle_index(shuffle_index).map(|e| e.entry_index)
+    }
+
+    /// `TrimWindowEntries` (§4.3.5): pop entries with zero bucket-pointer
+    /// count from the front; returns the advanced unread state if anything
+    /// was popped.
+    pub fn trim_front(&mut self) -> Option<TrimOutcome> {
+        let mut popped = 0;
+        let mut freed = 0;
+        let mut last: Option<(i64, i64, ContinuationToken)> = None;
+        while let Some(front) = self.entries.front() {
+            if front.bucket_ptr_count != 0 {
+                break;
+            }
+            let e = self.entries.pop_front().unwrap();
+            self.first_entry_index += 1;
+            popped += 1;
+            freed += e.byte_size;
+            last = Some((e.input_end, e.shuffle_end, e.continuation_token));
+        }
+        self.total_bytes -= freed;
+        last.map(
+            |(input_unread_row_index, shuffle_unread_row_index, continuation_token)| TrimOutcome {
+                entries_popped: popped,
+                bytes_freed: freed,
+                input_unread_row_index,
+                shuffle_unread_row_index,
+                continuation_token,
+            },
+        )
+    }
+
+    /// Drop everything (split-brain reset, §4.3.3 step 3).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.total_bytes = 0;
+        // first_entry_index keeps increasing monotonically so stale
+        // BucketRow references can never alias a future entry.
+        self.first_entry_index = self.first_entry_index.wrapping_add(1 << 32);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &WindowEntry> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::rows::{NameTable, RowsetBuilder};
+
+    fn entry(q: &WindowQueue, in_range: (i64, i64), sh_range: (i64, i64), nrows: usize) -> WindowEntry {
+        let nt = NameTable::new(&["v"]);
+        let mut b = RowsetBuilder::new(nt);
+        for i in 0..nrows {
+            b.push(row![sh_range.0 + i as i64]);
+        }
+        let rowset = b.build();
+        let byte_size = rowset.byte_size();
+        WindowEntry {
+            entry_index: q.next_entry_index(),
+            rowset,
+            input_begin: in_range.0,
+            input_end: in_range.1,
+            shuffle_begin: sh_range.0,
+            shuffle_end: sh_range.1,
+            continuation_token: ContinuationToken(format!("tok{}", in_range.1)),
+            bucket_ptr_count: 0,
+            byte_size,
+            read_ts_ms: 0,
+        }
+    }
+
+    #[test]
+    fn push_and_absolute_indexing() {
+        let mut q = WindowQueue::new();
+        q.push(entry(&q, (0, 10), (0, 8), 8));
+        q.push(entry(&q, (10, 20), (8, 20), 12));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.get(0).unwrap().input_begin, 0);
+        assert_eq!(q.get(1).unwrap().shuffle_begin, 8);
+        assert!(q.get(2).is_none());
+        assert!(q.total_bytes() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "in order")]
+    fn out_of_order_push_rejected() {
+        let mut q = WindowQueue::new();
+        let mut e = entry(&q, (0, 1), (0, 1), 1);
+        e.entry_index = 5;
+        q.push(e);
+    }
+
+    #[test]
+    fn shuffle_index_lookup_with_gaps() {
+        let mut q = WindowQueue::new();
+        q.push(entry(&q, (0, 10), (0, 5), 5));
+        // An entry whose Map produced zero rows: empty shuffle range.
+        q.push(entry(&q, (10, 20), (5, 5), 0));
+        q.push(entry(&q, (20, 30), (5, 9), 4));
+        assert_eq!(q.entry_index_for_shuffle_index(0), Some(0));
+        assert_eq!(q.entry_index_for_shuffle_index(4), Some(0));
+        assert_eq!(q.entry_index_for_shuffle_index(5), Some(2));
+        assert_eq!(q.entry_index_for_shuffle_index(8), Some(2));
+        assert_eq!(q.entry_index_for_shuffle_index(9), None);
+        let e = q.entry_for_shuffle_index(6).unwrap();
+        assert_eq!(e.row_at_shuffle_index(6).unwrap(), &row![6i64]);
+        assert!(e.row_at_shuffle_index(100).is_none());
+    }
+
+    #[test]
+    fn trim_front_respects_pointer_counts() {
+        let mut q = WindowQueue::new();
+        q.push(entry(&q, (0, 10), (0, 5), 5));
+        q.push(entry(&q, (10, 20), (5, 9), 4));
+        q.push(entry(&q, (20, 30), (9, 12), 3));
+        q.get_mut(1).unwrap().bucket_ptr_count = 1;
+
+        let out = q.trim_front().unwrap();
+        assert_eq!(out.entries_popped, 1);
+        assert_eq!(out.input_unread_row_index, 10);
+        assert_eq!(out.shuffle_unread_row_index, 5);
+        assert_eq!(out.continuation_token.0, "tok10");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.first_entry_index(), 1);
+
+        // Entry 1 still pinned: nothing more to trim.
+        assert_eq!(q.trim_front(), None);
+
+        // Unpin and trim the rest.
+        q.get_mut(1).unwrap().bucket_ptr_count = 0;
+        let out = q.trim_front().unwrap();
+        assert_eq!(out.entries_popped, 2);
+        assert_eq!(out.input_unread_row_index, 30);
+        assert_eq!(out.shuffle_unread_row_index, 12);
+        assert!(q.is_empty());
+        assert_eq!(q.total_bytes(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_trim() {
+        let mut q = WindowQueue::new();
+        q.push(entry(&q, (0, 1), (0, 3), 3));
+        let b1 = q.total_bytes();
+        q.push(entry(&q, (1, 2), (3, 6), 3));
+        assert!(q.total_bytes() > b1);
+        q.trim_front().unwrap();
+        assert_eq!(q.total_bytes(), 0);
+    }
+
+    #[test]
+    fn clear_advances_indices() {
+        let mut q = WindowQueue::new();
+        q.push(entry(&q, (0, 1), (0, 1), 1));
+        let before = q.first_entry_index();
+        q.clear();
+        assert!(q.is_empty());
+        assert!(q.first_entry_index() > before);
+        assert_eq!(q.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Worker discovery over Cypress (§4.5).
+//!
+//! "Participants of a discovery group create and take a lock on key-named
+//! nodes in a shared Cypress directory, storing any necessary information
+//! in the node's attributes. … Other clients can fetch a list of nodes in
+//! this directory and retrieve the relevant attributes."
+//!
+//! Mappers join `<dir>/mappers` keyed by GUID with `address`, `port` and
+//! `index` attributes; reducers join `<dir>/reducers` keyed by index. The
+//! listing is *allowed to be stale* — the reducer main loop (§4.4.2) and
+//! the `mapper_id` check in GetRows (§4.3.4) are the defences.
+
+use std::sync::Arc;
+
+use super::tree::{Cypress, CypressError, SessionId};
+use crate::util::yson::Yson;
+use crate::util::Guid;
+
+/// One member of a discovery group, as seen by a (possibly stale) listing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberInfo {
+    /// The node key: worker GUID string for mappers, index for reducers.
+    pub key: String,
+    /// RPC address registered by the worker.
+    pub address: String,
+    /// Worker index within its role.
+    pub index: i64,
+    /// Worker GUID.
+    pub guid: Guid,
+}
+
+/// A handle for participating in / observing one discovery directory.
+#[derive(Clone)]
+pub struct DiscoveryGroup {
+    cypress: Arc<Cypress>,
+    dir: String,
+}
+
+impl DiscoveryGroup {
+    /// Open (creating the directory if needed).
+    pub fn open(cypress: Arc<Cypress>, dir: &str) -> Result<DiscoveryGroup, CypressError> {
+        if !cypress.exists(dir) {
+            // Races with other openers are benign.
+            match cypress.create(dir) {
+                Ok(()) | Err(CypressError::AlreadyExists(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(DiscoveryGroup {
+            cypress,
+            dir: dir.to_string(),
+        })
+    }
+
+    /// Join the group: create the locked key node and publish attributes.
+    /// Returns an error if a *live* holder already owns the key (e.g. a
+    /// split-brain twin that has not expired yet) — callers retry after a
+    /// backoff, exactly like a restarted YT job waits out its predecessor.
+    pub fn join(
+        &self,
+        session: SessionId,
+        key: &str,
+        address: &str,
+        index: i64,
+        guid: Guid,
+    ) -> Result<(), CypressError> {
+        let path = format!("{}/{}", self.dir, key);
+        self.cypress.create_ephemeral(&path, session)?;
+        self.cypress.set_attr(&path, "address", Yson::str(address))?;
+        self.cypress.set_attr(&path, "index", Yson::Int(index))?;
+        self.cypress
+            .set_attr(&path, "guid", Yson::str(&guid.to_string()))?;
+        Ok(())
+    }
+
+    /// Leave cleanly (crashed workers never call this).
+    pub fn leave(&self, session: SessionId, key: &str) -> Result<(), CypressError> {
+        let path = format!("{}/{}", self.dir, key);
+        self.cypress.remove(&path, Some(session))
+    }
+
+    /// Fetch the current membership. May include expired-but-unswept
+    /// entries and may miss very recent joiners — consumers must tolerate
+    /// both (§4.5).
+    pub fn list(&self) -> Result<Vec<MemberInfo>, CypressError> {
+        let keys = self.cypress.list(&self.dir)?;
+        let mut members = Vec::with_capacity(keys.len());
+        for key in keys {
+            let path = format!("{}/{}", self.dir, key);
+            let attrs = match self.cypress.attrs(&path) {
+                Ok(a) => a,
+                // Node vanished between list and attrs — skip, that is
+                // exactly the staleness consumers must survive.
+                Err(CypressError::NotFound(_)) => continue,
+                Err(e) => return Err(e),
+            };
+            let address = attrs
+                .get("address")
+                .and_then(|v| v.as_str().ok().map(String::from))
+                .unwrap_or_default();
+            let index = attrs.get("index").and_then(|v| v.as_i64().ok()).unwrap_or(-1);
+            let guid = attrs
+                .get("guid")
+                .and_then(|v| v.as_str().ok())
+                .and_then(Guid::parse)
+                .unwrap_or(Guid::ZERO);
+            members.push(MemberInfo {
+                key,
+                address,
+                index,
+                guid,
+            });
+        }
+        Ok(members)
+    }
+
+    /// Find the member registered under a given index (reducers address
+    /// mappers by index, §4.4.2 step 3).
+    pub fn find_by_index(&self, index: i64) -> Result<Option<MemberInfo>, CypressError> {
+        Ok(self.list()?.into_iter().find(|m| m.index == index))
+    }
+
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::WriteAccounting;
+    use crate::util::Clock;
+
+    fn group(clock: Clock) -> (Arc<Cypress>, DiscoveryGroup) {
+        let c = Cypress::new(clock, WriteAccounting::new());
+        let g = DiscoveryGroup::open(c.clone(), "//discovery/mappers").unwrap();
+        (c, g)
+    }
+
+    #[test]
+    fn join_list_leave() {
+        let (c, g) = group(Clock::realtime());
+        let s = c.open_session(60_000);
+        let guid = Guid::from_seed(1);
+        g.join(s, &guid.to_string(), "addr-0", 0, guid).unwrap();
+        let members = g.list().unwrap();
+        assert_eq!(members.len(), 1);
+        assert_eq!(members[0].address, "addr-0");
+        assert_eq!(members[0].index, 0);
+        assert_eq!(members[0].guid, guid);
+        g.leave(s, &guid.to_string()).unwrap();
+        assert!(g.list().unwrap().is_empty());
+    }
+
+    #[test]
+    fn double_join_same_key_fails_while_alive() {
+        let (c, g) = group(Clock::realtime());
+        let s1 = c.open_session(60_000);
+        let s2 = c.open_session(60_000);
+        let guid = Guid::from_seed(2);
+        g.join(s1, "mapper-0", "addr-a", 0, guid).unwrap();
+        // A replacement with the same key must wait for expiry.
+        assert!(matches!(
+            g.join(s2, "mapper-0", "addr-b", 0, Guid::from_seed(3)),
+            Err(CypressError::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    fn split_brain_twins_both_visible_under_distinct_keys() {
+        // Mappers key by GUID, so a stale twin and its replacement can be
+        // listed simultaneously — the scenario §4.5 warns about.
+        let (c, g) = group(Clock::realtime());
+        let s1 = c.open_session(60_000);
+        let s2 = c.open_session(60_000);
+        let old = Guid::from_seed(10);
+        let new = Guid::from_seed(11);
+        g.join(s1, &old.to_string(), "addr-old", 3, old).unwrap();
+        g.join(s2, &new.to_string(), "addr-new", 3, new).unwrap();
+        let members = g.list().unwrap();
+        let with_index_3: Vec<_> = members.iter().filter(|m| m.index == 3).collect();
+        assert_eq!(with_index_3.len(), 2, "both twins must be observable");
+    }
+
+    #[test]
+    fn expiry_clears_crashed_member() {
+        let clock = Clock::scaled(1000);
+        let (c, g) = group(clock);
+        let s = c.open_session(20);
+        let guid = Guid::from_seed(4);
+        g.join(s, &guid.to_string(), "addr", 0, guid).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // No heartbeat → swept on next read.
+        assert!(g.list().unwrap().is_empty());
+        // Replacement may now claim the same key.
+        let s2 = c.open_session(60_000);
+        g.join(s2, &guid.to_string(), "addr2", 0, guid).unwrap();
+    }
+
+    #[test]
+    fn find_by_index() {
+        let (c, g) = group(Clock::realtime());
+        for i in 0..3 {
+            let s = c.open_session(60_000);
+            let guid = Guid::from_seed(20 + i as u64);
+            g.join(s, &guid.to_string(), &format!("addr-{i}"), i, guid).unwrap();
+        }
+        let m = g.find_by_index(1).unwrap().unwrap();
+        assert_eq!(m.address, "addr-1");
+        assert!(g.find_by_index(9).unwrap().is_none());
+    }
+
+    #[test]
+    fn open_idempotent() {
+        let c = Cypress::new(Clock::realtime(), WriteAccounting::new());
+        let _a = DiscoveryGroup::open(c.clone(), "//d").unwrap();
+        let _b = DiscoveryGroup::open(c, "//d").unwrap();
+    }
+}

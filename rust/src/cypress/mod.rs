@@ -1,0 +1,20 @@
+//! Cypress — the filesystem-like metainformation store (chapter 3).
+//!
+//! "Cypress, a filesystem-like metainformation store, which can also keep
+//! an attribute mapping in its nodes and supports transactions and locks.
+//! This allows it to be used similarly to Apache ZooKeeper."
+//!
+//! The reproduction provides exactly what discovery (§4.5) consumes:
+//! slash-separated paths, per-node attribute maps, **ephemeral
+//! session-scoped locks** with TTL expiry, and directory listing. Lock
+//! expiry is swept lazily, which *naturally* produces the staleness window
+//! the paper warns about: "in case of failures, or even on startup, the
+//! information in these discovery groups can be stale … a failed mapper
+//! and its newly-alive replacement could temporarily both appear in
+//! discovery."
+
+pub mod tree;
+pub mod discovery;
+
+pub use discovery::{DiscoveryGroup, MemberInfo};
+pub use tree::{Cypress, CypressError, SessionId};

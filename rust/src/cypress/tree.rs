@@ -1,0 +1,438 @@
+//! The Cypress tree: nodes, attributes, sessions and ephemeral locks.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::storage::{WriteAccounting, WriteCategory};
+use crate::util::yson::Yson;
+use crate::util::Clock;
+
+/// A client session. Ephemeral nodes live exactly as long as their session
+/// keeps heartbeating within the TTL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CypressError {
+    #[error("node '{0}' not found")]
+    NotFound(String),
+    #[error("node '{0}' already exists")]
+    AlreadyExists(String),
+    #[error("node '{0}' is locked by another session")]
+    Locked(String),
+    #[error("unknown session {0:?}")]
+    NoSuchSession(SessionId),
+    #[error("invalid path '{0}'")]
+    BadPath(String),
+}
+
+#[derive(Debug)]
+struct Node {
+    attributes: BTreeMap<String, Yson>,
+    children: BTreeMap<String, Node>,
+    /// Ephemeral nodes are removed when their owning session expires; the
+    /// owning session also holds the exclusive lock on the node.
+    owner: Option<SessionId>,
+}
+
+impl Node {
+    fn new() -> Node {
+        Node {
+            attributes: BTreeMap::new(),
+            children: BTreeMap::new(),
+            owner: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SessionState {
+    last_heartbeat_ms: u64,
+    ttl_ms: u64,
+}
+
+/// The shared metainformation tree.
+#[derive(Debug)]
+pub struct Cypress {
+    root: Mutex<Node>,
+    sessions: Mutex<HashMap<SessionId, SessionState>>,
+    next_session: AtomicU64,
+    clock: Clock,
+    accounting: Arc<WriteAccounting>,
+}
+
+fn split_path(path: &str) -> Result<Vec<&str>, CypressError> {
+    let stripped = path
+        .strip_prefix("//")
+        .ok_or_else(|| CypressError::BadPath(path.to_string()))?;
+    if stripped.is_empty() {
+        return Ok(Vec::new());
+    }
+    let parts: Vec<&str> = stripped.split('/').collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(CypressError::BadPath(path.to_string()));
+    }
+    Ok(parts)
+}
+
+impl Cypress {
+    pub fn new(clock: Clock, accounting: Arc<WriteAccounting>) -> Arc<Cypress> {
+        Arc::new(Cypress {
+            root: Mutex::new(Node::new()),
+            sessions: Mutex::new(HashMap::new()),
+            next_session: AtomicU64::new(1),
+            clock,
+            accounting,
+        })
+    }
+
+    // -- sessions ----------------------------------------------------------
+
+    /// Open a session with the given TTL. The owner must heartbeat at least
+    /// every `ttl_ms` of simulated time or its ephemeral nodes vanish.
+    pub fn open_session(&self, ttl_ms: u64) -> SessionId {
+        let id = SessionId(self.next_session.fetch_add(1, Ordering::Relaxed));
+        self.sessions.lock().unwrap().insert(
+            id,
+            SessionState {
+                last_heartbeat_ms: self.clock.now_ms(),
+                ttl_ms,
+            },
+        );
+        id
+    }
+
+    pub fn heartbeat(&self, session: SessionId) -> Result<(), CypressError> {
+        let mut sessions = self.sessions.lock().unwrap();
+        let s = sessions
+            .get_mut(&session)
+            .ok_or(CypressError::NoSuchSession(session))?;
+        s.last_heartbeat_ms = self.clock.now_ms();
+        Ok(())
+    }
+
+    /// Explicitly close a session (a *clean* worker shutdown). Crashed
+    /// workers never call this — their nodes linger until TTL expiry,
+    /// which is the staleness window.
+    pub fn close_session(&self, session: SessionId) {
+        self.sessions.lock().unwrap().remove(&session);
+        self.sweep_expired();
+    }
+
+    /// Remove ephemeral nodes whose sessions expired. Called lazily from
+    /// every read path; also callable directly (tests, drills).
+    pub fn sweep_expired(&self) {
+        let now = self.clock.now_ms();
+        let live: std::collections::HashSet<SessionId> = {
+            let mut sessions = self.sessions.lock().unwrap();
+            sessions.retain(|_, s| now.saturating_sub(s.last_heartbeat_ms) <= s.ttl_ms);
+            sessions.keys().copied().collect()
+        };
+        let mut root = self.root.lock().unwrap();
+        fn prune(node: &mut Node, live: &std::collections::HashSet<SessionId>) {
+            node.children.retain(|_, child| {
+                child.owner.map(|o| live.contains(&o)).unwrap_or(true)
+            });
+            for child in node.children.values_mut() {
+                prune(child, live);
+            }
+        }
+        prune(&mut root, &live);
+    }
+
+    // -- nodes -------------------------------------------------------------
+
+    /// Create a persistent node (and missing parents).
+    pub fn create(&self, path: &str) -> Result<(), CypressError> {
+        self.create_inner(path, None)
+    }
+
+    /// Create an ephemeral node owned (and exclusively locked) by
+    /// `session`. Fails if the node exists and is held by a *live* other
+    /// session; a node whose owner expired is replaced. This is the
+    /// "create and take a lock on key-named nodes" primitive of §4.5.
+    pub fn create_ephemeral(&self, path: &str, session: SessionId) -> Result<(), CypressError> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .contains_key(&session)
+            .then_some(())
+            .ok_or(CypressError::NoSuchSession(session))?;
+        self.create_inner(path, Some(session))
+    }
+
+    fn create_inner(&self, path: &str, owner: Option<SessionId>) -> Result<(), CypressError> {
+        self.sweep_expired();
+        let parts = split_path(path)?;
+        if parts.is_empty() {
+            return Err(CypressError::AlreadyExists("//".to_string()));
+        }
+        let bytes = path.len() as u64 + 16;
+        let mut root = self.root.lock().unwrap();
+        let mut node = &mut *root;
+        for (i, part) in parts.iter().enumerate() {
+            let last = i == parts.len() - 1;
+            if last {
+                if node.children.contains_key(*part) {
+                    return Err(CypressError::AlreadyExists(path.to_string()));
+                }
+                let mut fresh = Node::new();
+                fresh.owner = owner;
+                node.children.insert(part.to_string(), fresh);
+            } else {
+                node = node.children.entry(part.to_string()).or_insert_with(Node::new);
+            }
+        }
+        self.accounting.record(WriteCategory::CypressMeta, bytes);
+        Ok(())
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.sweep_expired();
+        let Ok(parts) = split_path(path) else {
+            return false;
+        };
+        let root = self.root.lock().unwrap();
+        let mut node = &*root;
+        for part in parts {
+            match node.children.get(part) {
+                Some(n) => node = n,
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Remove a node and its subtree. Only the owning session may remove an
+    /// ephemeral node; persistent nodes are free for all.
+    pub fn remove(&self, path: &str, session: Option<SessionId>) -> Result<(), CypressError> {
+        let parts = split_path(path)?;
+        if parts.is_empty() {
+            return Err(CypressError::BadPath(path.to_string()));
+        }
+        let mut root = self.root.lock().unwrap();
+        let mut node = &mut *root;
+        for part in &parts[..parts.len() - 1] {
+            node = node
+                .children
+                .get_mut(*part)
+                .ok_or_else(|| CypressError::NotFound(path.to_string()))?;
+        }
+        let last = parts[parts.len() - 1];
+        let target = node
+            .children
+            .get(last)
+            .ok_or_else(|| CypressError::NotFound(path.to_string()))?;
+        if let Some(owner) = target.owner {
+            if session != Some(owner) {
+                return Err(CypressError::Locked(path.to_string()));
+            }
+        }
+        node.children.remove(last);
+        self.accounting
+            .record(WriteCategory::CypressMeta, path.len() as u64);
+        Ok(())
+    }
+
+    /// List child names of a directory node (discovery's group listing).
+    pub fn list(&self, path: &str) -> Result<Vec<String>, CypressError> {
+        self.sweep_expired();
+        let parts = split_path(path)?;
+        let root = self.root.lock().unwrap();
+        let mut node = &*root;
+        for part in parts {
+            node = node
+                .children
+                .get(part)
+                .ok_or_else(|| CypressError::NotFound(path.to_string()))?;
+        }
+        Ok(node.children.keys().cloned().collect())
+    }
+
+    // -- attributes ---------------------------------------------------------
+
+    pub fn set_attr(&self, path: &str, key: &str, value: Yson) -> Result<(), CypressError> {
+        let parts = split_path(path)?;
+        let bytes = (key.len() + value.to_string().len()) as u64;
+        let mut root = self.root.lock().unwrap();
+        let mut node = &mut *root;
+        for part in parts {
+            node = node
+                .children
+                .get_mut(part)
+                .ok_or_else(|| CypressError::NotFound(path.to_string()))?;
+        }
+        node.attributes.insert(key.to_string(), value);
+        self.accounting.record(WriteCategory::CypressMeta, bytes);
+        Ok(())
+    }
+
+    pub fn get_attr(&self, path: &str, key: &str) -> Result<Option<Yson>, CypressError> {
+        let parts = split_path(path)?;
+        let root = self.root.lock().unwrap();
+        let mut node = &*root;
+        for part in parts {
+            node = node
+                .children
+                .get(part)
+                .ok_or_else(|| CypressError::NotFound(path.to_string()))?;
+        }
+        Ok(node.attributes.get(key).cloned())
+    }
+
+    pub fn attrs(&self, path: &str) -> Result<BTreeMap<String, Yson>, CypressError> {
+        let parts = split_path(path)?;
+        let root = self.root.lock().unwrap();
+        let mut node = &*root;
+        for part in parts {
+            node = node
+                .children
+                .get(part)
+                .ok_or_else(|| CypressError::NotFound(path.to_string()))?;
+        }
+        Ok(node.attributes.clone())
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cypress() -> Arc<Cypress> {
+        Cypress::new(Clock::realtime(), WriteAccounting::new())
+    }
+
+    #[test]
+    fn create_list_remove() {
+        let c = cypress();
+        c.create("//sys/discovery/mappers").unwrap();
+        c.create("//sys/discovery/reducers").unwrap();
+        assert!(c.exists("//sys/discovery"));
+        assert_eq!(
+            c.list("//sys/discovery").unwrap(),
+            vec!["mappers".to_string(), "reducers".to_string()]
+        );
+        c.remove("//sys/discovery/mappers", None).unwrap();
+        assert!(!c.exists("//sys/discovery/mappers"));
+        assert!(matches!(
+            c.list("//nope"),
+            Err(CypressError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_create_rejected() {
+        let c = cypress();
+        c.create("//a/b").unwrap();
+        assert!(matches!(c.create("//a/b"), Err(CypressError::AlreadyExists(_))));
+    }
+
+    #[test]
+    fn bad_paths_rejected() {
+        let c = cypress();
+        assert!(matches!(c.create("no-slashes"), Err(CypressError::BadPath(_))));
+        assert!(matches!(c.create("//a//b"), Err(CypressError::BadPath(_))));
+        assert!(!c.exists("relative/path"));
+    }
+
+    #[test]
+    fn attributes_roundtrip() {
+        let c = cypress();
+        c.create("//workers/m0").unwrap();
+        c.set_attr("//workers/m0", "address", Yson::str("mapper-0.local")).unwrap();
+        c.set_attr("//workers/m0", "index", Yson::Int(0)).unwrap();
+        assert_eq!(
+            c.get_attr("//workers/m0", "address").unwrap(),
+            Some(Yson::str("mapper-0.local"))
+        );
+        assert_eq!(c.get_attr("//workers/m0", "missing").unwrap(), None);
+        assert_eq!(c.attrs("//workers/m0").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ephemeral_node_owned_and_protected() {
+        let c = cypress();
+        c.create("//group").unwrap();
+        let s1 = c.open_session(10_000);
+        let s2 = c.open_session(10_000);
+        c.create_ephemeral("//group/worker-a", s1).unwrap();
+        // Another session cannot remove it.
+        assert!(matches!(
+            c.remove("//group/worker-a", Some(s2)),
+            Err(CypressError::Locked(_))
+        ));
+        assert!(matches!(
+            c.remove("//group/worker-a", None),
+            Err(CypressError::Locked(_))
+        ));
+        // The owner can.
+        c.remove("//group/worker-a", Some(s1)).unwrap();
+        assert!(!c.exists("//group/worker-a"));
+    }
+
+    #[test]
+    fn session_expiry_removes_ephemeral_nodes() {
+        let clock = Clock::scaled(1000); // 1ms wall = 1s simulated
+        let c = Cypress::new(clock.clone(), WriteAccounting::new());
+        c.create("//group").unwrap();
+        let s = c.open_session(50); // 50 simulated ms TTL
+        c.create_ephemeral("//group/w", s).unwrap();
+        assert!(c.exists("//group/w"));
+        std::thread::sleep(std::time::Duration::from_millis(5)); // ≥5000 sim ms
+        c.sweep_expired();
+        assert!(!c.exists("//group/w"), "expired session's node must vanish");
+        assert!(matches!(c.heartbeat(s), Err(CypressError::NoSuchSession(_))));
+    }
+
+    #[test]
+    fn heartbeat_keeps_session_alive() {
+        let clock = Clock::scaled(100);
+        let c = Cypress::new(clock.clone(), WriteAccounting::new());
+        c.create("//g").unwrap();
+        let s = c.open_session(500);
+        c.create_ephemeral("//g/w", s).unwrap();
+        for _ in 0..5 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            c.heartbeat(s).unwrap();
+        }
+        assert!(c.exists("//g/w"));
+    }
+
+    #[test]
+    fn close_session_is_clean_departure() {
+        let c = cypress();
+        c.create("//g").unwrap();
+        let s = c.open_session(60_000);
+        c.create_ephemeral("//g/w", s).unwrap();
+        c.close_session(s);
+        assert!(!c.exists("//g/w"));
+    }
+
+    #[test]
+    fn replacement_after_expiry_can_reuse_name() {
+        let clock = Clock::scaled(1000);
+        let c = Cypress::new(clock.clone(), WriteAccounting::new());
+        c.create("//g").unwrap();
+        let old = c.open_session(10);
+        c.create_ephemeral("//g/mapper-3", old).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        // Old session expired; a restarted worker re-registers.
+        let fresh = c.open_session(10_000);
+        c.create_ephemeral("//g/mapper-3", fresh).unwrap();
+        assert!(c.exists("//g/mapper-3"));
+    }
+
+    #[test]
+    fn cypress_writes_are_accounted() {
+        let acc = WriteAccounting::new();
+        let c = Cypress::new(Clock::realtime(), acc.clone());
+        c.create("//x").unwrap();
+        c.set_attr("//x", "k", Yson::Int(1)).unwrap();
+        assert!(acc.bytes(WriteCategory::CypressMeta) > 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Sorted dynamic tables with atomic multi-row transactions (chapter 3).
+//!
+//! "Sorted tables provide a typical row-based strictly schematized storage
+//! supporting fine-grained reads and writes. Users can interact with these
+//! tables atomically by creating transactions, which can span across
+//! multiple rows and both kinds of tables. Transactions are implemented
+//! using two-phase commits."
+//!
+//! The reproduction implements the transaction semantics the algorithm
+//! needs — snapshot lookups, optimistic commit-time validation of every
+//! observed row version, atomicity across tables — on an in-process store.
+//! Consensus/replication (Hydra) is orthogonal to the write-amplification
+//! and exactly-once logic and is not simulated; durability is *accounted*
+//! through the storage journal instead (every committed byte lands in a
+//! [`crate::storage::WriteCategory`] bucket).
+//!
+//! Exactly-once hinges on this module twice:
+//! * mappers CAS their persistent state row inside a transaction
+//!   (§4.3.5 `TrimInputRows`),
+//! * reducers commit user-table effects and their own meta-state in one
+//!   transaction (§4.4.2 steps 6–8), so "the effect of processing a batch
+//!   of rows is applied exactly once".
+
+pub mod store;
+pub mod txn;
+
+pub use store::{DynTableStore, TableDescriptor};
+pub use txn::{Transaction, TxnError};

@@ -1,0 +1,259 @@
+//! The table store: schemas, versioned rows, snapshot reads.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::rows::{TableSchema, UnversionedRow, Value};
+use crate::storage::{WriteAccounting, WriteCategory};
+
+use super::txn::{Transaction, TxnError};
+
+/// Primary key of a sorted-table row: the schema's key-column prefix.
+pub type Key = Vec<Value>;
+
+/// A row with the id of the commit that last wrote it. Version 0 means
+/// "never existed" and is what lookups of absent keys observe.
+#[derive(Debug, Clone)]
+pub(crate) struct VersionedRow {
+    pub version: u64,
+    pub row: UnversionedRow,
+}
+
+#[derive(Debug)]
+pub(crate) struct TableData {
+    pub schema: TableSchema,
+    pub category: WriteCategory,
+    pub rows: BTreeMap<Key, VersionedRow>,
+}
+
+/// Descriptor returned by table creation; names the table for transactions.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TableDescriptor {
+    pub name: String,
+}
+
+/// In-process sorted dynamic-table store shared by all simulated workers.
+#[derive(Debug)]
+pub struct DynTableStore {
+    pub(crate) tables: Mutex<HashMap<String, TableData>>,
+    /// Monotonic commit-id source; doubles as the row-version domain.
+    pub(crate) commit_counter: AtomicU64,
+    pub(crate) accounting: Arc<WriteAccounting>,
+    /// Injected fault: all operations fail while set (simulates the state
+    /// backend being unreachable — the mapper/reducer loops must back off
+    /// and retry, §4.3.3 step 3 / §4.4.2 error handling).
+    unavailable: AtomicBool,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StoreError {
+    #[error("no such table '{0}'")]
+    NoSuchTable(String),
+    #[error("table '{0}' already exists")]
+    AlreadyExists(String),
+    #[error("dynamic-table store unavailable (injected fault)")]
+    Unavailable,
+}
+
+impl DynTableStore {
+    pub fn new(accounting: Arc<WriteAccounting>) -> Arc<DynTableStore> {
+        Arc::new(DynTableStore {
+            tables: Mutex::new(HashMap::new()),
+            commit_counter: AtomicU64::new(1),
+            accounting,
+            unavailable: AtomicBool::new(false),
+        })
+    }
+
+    /// Create a sorted table. `category` says whose write-amplification
+    /// bucket its committed bytes land in.
+    pub fn create_table(
+        &self,
+        name: &str,
+        schema: TableSchema,
+        category: WriteCategory,
+    ) -> Result<TableDescriptor, StoreError> {
+        self.check_available()?;
+        assert!(schema.key_count() > 0, "sorted table needs key columns");
+        let mut tables = self.tables.lock().unwrap();
+        if tables.contains_key(name) {
+            return Err(StoreError::AlreadyExists(name.to_string()));
+        }
+        tables.insert(
+            name.to_string(),
+            TableData {
+                schema,
+                category,
+                rows: BTreeMap::new(),
+            },
+        );
+        Ok(TableDescriptor {
+            name: name.to_string(),
+        })
+    }
+
+    /// Non-transactional point lookup of the latest committed row. Used by
+    /// the mapper's step-3 state fetch (§4.3.3), which is a plain read.
+    pub fn lookup(&self, table: &str, key: &[Value]) -> Result<Option<UnversionedRow>, StoreError> {
+        self.check_available()?;
+        let tables = self.tables.lock().unwrap();
+        let t = tables
+            .get(table)
+            .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?;
+        Ok(t.rows.get(key).map(|vr| vr.row.clone()))
+    }
+
+    /// Latest committed (version, row); used by transactions for snapshot
+    /// recording.
+    pub(crate) fn lookup_versioned(
+        &self,
+        table: &str,
+        key: &[Value],
+    ) -> Result<(u64, Option<UnversionedRow>), StoreError> {
+        self.check_available()?;
+        let tables = self.tables.lock().unwrap();
+        let t = tables
+            .get(table)
+            .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?;
+        Ok(match t.rows.get(key) {
+            Some(vr) => (vr.version, Some(vr.row.clone())),
+            None => (0, None),
+        })
+    }
+
+    /// Full scan of a table's committed rows in key order (for examples,
+    /// tests and output verification — not on the hot path).
+    pub fn scan(&self, table: &str) -> Result<Vec<UnversionedRow>, StoreError> {
+        self.check_available()?;
+        let tables = self.tables.lock().unwrap();
+        let t = tables
+            .get(table)
+            .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?;
+        Ok(t.rows.values().map(|vr| vr.row.clone()).collect())
+    }
+
+    pub fn row_count(&self, table: &str) -> Result<usize, StoreError> {
+        self.check_available()?;
+        let tables = self.tables.lock().unwrap();
+        Ok(tables
+            .get(table)
+            .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?
+            .rows
+            .len())
+    }
+
+    pub fn schema_of(&self, table: &str) -> Result<TableSchema, StoreError> {
+        let tables = self.tables.lock().unwrap();
+        Ok(tables
+            .get(table)
+            .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?
+            .schema
+            .clone())
+    }
+
+    /// Begin an optimistic transaction.
+    pub fn begin(self: &Arc<Self>) -> Transaction {
+        Transaction::new(self.clone())
+    }
+
+    /// Inject / clear a whole-store outage.
+    pub fn set_unavailable(&self, unavailable: bool) {
+        self.unavailable.store(unavailable, Ordering::SeqCst);
+    }
+
+    pub(crate) fn check_available(&self) -> Result<(), StoreError> {
+        if self.unavailable.load(Ordering::SeqCst) {
+            Err(StoreError::Unavailable)
+        } else {
+            Ok(())
+        }
+    }
+
+    pub fn accounting(&self) -> Arc<WriteAccounting> {
+        self.accounting.clone()
+    }
+
+    /// Number of commits applied so far (tests, metrics).
+    pub fn commit_count(&self) -> u64 {
+        self.commit_counter.load(Ordering::Relaxed) - 1
+    }
+}
+
+impl From<StoreError> for TxnError {
+    fn from(e: StoreError) -> TxnError {
+        match e {
+            StoreError::Unavailable => TxnError::Unavailable,
+            StoreError::NoSuchTable(t) => TxnError::NoSuchTable(t),
+            StoreError::AlreadyExists(t) => TxnError::NoSuchTable(t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::rows::{ColumnSchema, ColumnType};
+
+    fn schema() -> TableSchema {
+        TableSchema::new(vec![
+            ColumnSchema::key("k", ColumnType::Int64),
+            ColumnSchema::value("v", ColumnType::Str),
+        ])
+    }
+
+    #[test]
+    fn create_and_lookup_empty() {
+        let s = DynTableStore::new(WriteAccounting::new());
+        s.create_table("t", schema(), WriteCategory::MapperMeta).unwrap();
+        assert_eq!(s.lookup("t", &[Value::Int64(1)]).unwrap(), None);
+        assert!(matches!(
+            s.lookup("missing", &[]),
+            Err(StoreError::NoSuchTable(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_table_rejected() {
+        let s = DynTableStore::new(WriteAccounting::new());
+        s.create_table("t", schema(), WriteCategory::MapperMeta).unwrap();
+        assert!(matches!(
+            s.create_table("t", schema(), WriteCategory::MapperMeta),
+            Err(StoreError::AlreadyExists(_))
+        ));
+    }
+
+    #[test]
+    #[should_panic(expected = "key columns")]
+    fn keyless_table_rejected() {
+        let s = DynTableStore::new(WriteAccounting::new());
+        let keyless = TableSchema::new(vec![ColumnSchema::value("v", ColumnType::Str)]);
+        let _ = s.create_table("t", keyless, WriteCategory::MapperMeta);
+    }
+
+    #[test]
+    fn unavailability_blocks_everything() {
+        let s = DynTableStore::new(WriteAccounting::new());
+        s.create_table("t", schema(), WriteCategory::MapperMeta).unwrap();
+        s.set_unavailable(true);
+        assert_eq!(s.lookup("t", &[Value::Int64(1)]), Err(StoreError::Unavailable));
+        assert_eq!(s.scan("t"), Err(StoreError::Unavailable));
+        s.set_unavailable(false);
+        assert_eq!(s.lookup("t", &[Value::Int64(1)]).unwrap(), None);
+    }
+
+    #[test]
+    fn scan_in_key_order() {
+        let s = DynTableStore::new(WriteAccounting::new());
+        s.create_table("t", schema(), WriteCategory::UserOutput).unwrap();
+        let mut txn = s.begin();
+        txn.write("t", row![3i64, "c"]).unwrap();
+        txn.write("t", row![1i64, "a"]).unwrap();
+        txn.write("t", row![2i64, "b"]).unwrap();
+        txn.commit().unwrap();
+        let rows = s.scan("t").unwrap();
+        let keys: Vec<i64> = rows.iter().map(|r| r.get(0).unwrap().as_i64().unwrap()).collect();
+        assert_eq!(keys, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,440 @@
+//! Optimistic transactions with commit-time validation.
+//!
+//! Protocol (a single-process stand-in for YT's two-phase commit):
+//!
+//! 1. `lookup` records the observed version of every key read (0 for
+//!    absent keys) — the transaction's read set.
+//! 2. `write`/`delete` buffer mutations locally (read-your-writes).
+//! 3. `commit` takes the store-wide commit lock, re-validates that every
+//!    read key still has its observed version, then applies all buffered
+//!    writes under one fresh commit id and journals their encoded bytes.
+//!
+//! A concurrent committer that changed any row this transaction read makes
+//! `commit` fail with [`TxnError::Conflict`] — this is precisely how
+//! split-brain duplicates lose the race in §4.6: "a produced row is only
+//! sent … if the corresponding mapper's state was not modified by some
+//! other worker", and dually for reducers in §4.4.2 step 7.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::rows::{codec, UnversionedRow, Value};
+
+use super::store::{DynTableStore, Key, VersionedRow};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum TxnError {
+    #[error("commit conflict on table '{table}' key {key:?}: expected version {expected}, found {found}")]
+    Conflict {
+        table: String,
+        key: Key,
+        expected: u64,
+        found: u64,
+    },
+    #[error("no such table '{0}'")]
+    NoSuchTable(String),
+    #[error("schema violation: {0}")]
+    Schema(String),
+    #[error("dynamic-table store unavailable (injected fault)")]
+    Unavailable,
+    #[error("transaction already finished")]
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+enum Mutation {
+    Upsert(UnversionedRow),
+    Delete,
+}
+
+/// An open optimistic transaction. Dropped without `commit` = abort.
+pub struct Transaction {
+    store: Arc<DynTableStore>,
+    /// (table, key) → version observed at first read.
+    read_set: HashMap<(String, Key), u64>,
+    /// (table, key) → last buffered mutation, in insertion order for
+    /// deterministic journaling.
+    write_set: Vec<((String, Key), Mutation)>,
+    write_index: HashMap<(String, Key), usize>,
+    finished: bool,
+}
+
+/// Outcome of a successful commit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommitResult {
+    pub commit_id: u64,
+    pub rows_written: usize,
+}
+
+impl Transaction {
+    pub(crate) fn new(store: Arc<DynTableStore>) -> Transaction {
+        Transaction {
+            store,
+            read_set: HashMap::new(),
+            write_set: Vec::new(),
+            write_index: HashMap::new(),
+            finished: false,
+        }
+    }
+
+    fn check_open(&self) -> Result<(), TxnError> {
+        if self.finished {
+            Err(TxnError::Finished)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Transactional point lookup with read-your-writes semantics. Records
+    /// the observed version in the read set (validated at commit).
+    pub fn lookup(
+        &mut self,
+        table: &str,
+        key: &[Value],
+    ) -> Result<Option<UnversionedRow>, TxnError> {
+        self.check_open()?;
+        let tk = (table.to_string(), key.to_vec());
+        if let Some(&i) = self.write_index.get(&tk) {
+            return Ok(match &self.write_set[i].1 {
+                Mutation::Upsert(row) => Some(row.clone()),
+                Mutation::Delete => None,
+            });
+        }
+        let (version, row) = self.store.lookup_versioned(table, key)?;
+        // First read wins: a later re-read must not overwrite the version
+        // we validated our decisions against.
+        self.read_set.entry(tk).or_insert(version);
+        Ok(row)
+    }
+
+    /// Buffer an upsert. The key is extracted from the row via the table's
+    /// schema; the row is validated eagerly.
+    pub fn write(&mut self, table: &str, row: UnversionedRow) -> Result<(), TxnError> {
+        self.check_open()?;
+        let schema = self
+            .store
+            .schema_of(table)
+            .map_err(|_| TxnError::NoSuchTable(table.to_string()))?;
+        schema
+            .validate(&row)
+            .map_err(|e| TxnError::Schema(e.to_string()))?;
+        let key = schema.key_of(&row);
+        self.buffer(table, key, Mutation::Upsert(row));
+        Ok(())
+    }
+
+    /// Buffer a delete by key.
+    pub fn delete(&mut self, table: &str, key: Vec<Value>) -> Result<(), TxnError> {
+        self.check_open()?;
+        self.store
+            .schema_of(table)
+            .map_err(|_| TxnError::NoSuchTable(table.to_string()))?;
+        self.buffer(table, key, Mutation::Delete);
+        Ok(())
+    }
+
+    fn buffer(&mut self, table: &str, key: Key, m: Mutation) {
+        let tk = (table.to_string(), key);
+        if let Some(&i) = self.write_index.get(&tk) {
+            self.write_set[i].1 = m;
+        } else {
+            self.write_index.insert(tk.clone(), self.write_set.len());
+            self.write_set.push((tk, m));
+        }
+    }
+
+    /// Number of buffered mutations.
+    pub fn pending_writes(&self) -> usize {
+        self.write_set.len()
+    }
+
+    /// Validate the read set and atomically apply the write set.
+    pub fn commit(mut self) -> Result<CommitResult, TxnError> {
+        self.check_open()?;
+        self.finished = true;
+        self.store.check_available()?;
+
+        // The tables mutex doubles as the commit lock: validation and
+        // application are one critical section, which is what 2PC's
+        // prepare+commit collapse to in a single-process store.
+        let mut tables = self.store.tables.lock().unwrap();
+
+        // Phase 1: validate every observed version.
+        for ((table, key), expected) in &self.read_set {
+            let t = tables
+                .get(table)
+                .ok_or_else(|| TxnError::NoSuchTable(table.clone()))?;
+            let found = t.rows.get(key).map(|vr| vr.version).unwrap_or(0);
+            if found != *expected {
+                return Err(TxnError::Conflict {
+                    table: table.clone(),
+                    key: key.clone(),
+                    expected: *expected,
+                    found,
+                });
+            }
+        }
+        // Validate write targets exist as tables.
+        for ((table, _), _) in &self.write_set {
+            if !tables.contains_key(table) {
+                return Err(TxnError::NoSuchTable(table.clone()));
+            }
+        }
+
+        // Phase 2: apply under a fresh commit id, journal the bytes.
+        let commit_id = self.store.commit_counter.fetch_add(1, Ordering::Relaxed);
+        let mut rows_written = 0;
+        for ((table, key), m) in &self.write_set {
+            let t = tables.get_mut(table).unwrap();
+            match m {
+                Mutation::Upsert(row) => {
+                    let encoded = codec::encode_rows(std::slice::from_ref(row));
+                    self.store
+                        .accounting
+                        .record(t.category, encoded.len() as u64);
+                    t.rows.insert(
+                        key.clone(),
+                        VersionedRow {
+                            version: commit_id,
+                            row: row.clone(),
+                        },
+                    );
+                    rows_written += 1;
+                }
+                Mutation::Delete => {
+                    // A tombstone still costs a small persisted record.
+                    let encoded = codec::encode_rows(&[UnversionedRow::new(key.clone())]);
+                    self.store
+                        .accounting
+                        .record(t.category, encoded.len() as u64);
+                    t.rows.remove(key);
+                    rows_written += 1;
+                }
+            }
+        }
+        Ok(CommitResult {
+            commit_id,
+            rows_written,
+        })
+    }
+
+    /// Explicit abort (equivalent to drop, but intention-revealing).
+    pub fn abort(mut self) {
+        self.finished = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::rows::{ColumnSchema, ColumnType, TableSchema};
+    use crate::storage::{WriteAccounting, WriteCategory};
+
+    fn store() -> Arc<DynTableStore> {
+        let s = DynTableStore::new(WriteAccounting::new());
+        s.create_table(
+            "state",
+            TableSchema::new(vec![
+                ColumnSchema::key("idx", ColumnType::Int64),
+                ColumnSchema::value("val", ColumnType::Str),
+            ]),
+            WriteCategory::MapperMeta,
+        )
+        .unwrap();
+        s.create_table(
+            "out",
+            TableSchema::new(vec![
+                ColumnSchema::key("user", ColumnType::Str),
+                ColumnSchema::value("count", ColumnType::Int64),
+            ]),
+            WriteCategory::UserOutput,
+        )
+        .unwrap();
+        s
+    }
+
+    #[test]
+    fn read_your_writes() {
+        let s = store();
+        let mut t = s.begin();
+        assert_eq!(t.lookup("state", &[Value::Int64(1)]).unwrap(), None);
+        t.write("state", row![1i64, "a"]).unwrap();
+        assert_eq!(
+            t.lookup("state", &[Value::Int64(1)]).unwrap(),
+            Some(row![1i64, "a"])
+        );
+        t.delete("state", vec![Value::Int64(1)]).unwrap();
+        assert_eq!(t.lookup("state", &[Value::Int64(1)]).unwrap(), None);
+    }
+
+    #[test]
+    fn commit_applies_atomically_across_tables() {
+        let s = store();
+        let mut t = s.begin();
+        t.write("state", row![1i64, "a"]).unwrap();
+        t.write("out", row!["alice", 7i64]).unwrap();
+        let r = t.commit().unwrap();
+        assert_eq!(r.rows_written, 2);
+        assert_eq!(s.lookup("state", &[Value::Int64(1)]).unwrap(), Some(row![1i64, "a"]));
+        assert_eq!(s.lookup("out", &[Value::from("alice")]).unwrap(), Some(row!["alice", 7i64]));
+    }
+
+    #[test]
+    fn conflicting_read_fails_commit() {
+        let s = store();
+        // Seed.
+        let mut t0 = s.begin();
+        t0.write("state", row![1i64, "v0"]).unwrap();
+        t0.commit().unwrap();
+
+        // Two racing read-modify-write transactions (split-brain shape).
+        let mut a = s.begin();
+        let mut b = s.begin();
+        assert!(a.lookup("state", &[Value::Int64(1)]).unwrap().is_some());
+        assert!(b.lookup("state", &[Value::Int64(1)]).unwrap().is_some());
+        a.write("state", row![1i64, "from_a"]).unwrap();
+        b.write("state", row![1i64, "from_b"]).unwrap();
+        a.commit().unwrap();
+        let err = b.commit().unwrap_err();
+        assert!(matches!(err, TxnError::Conflict { .. }), "{err:?}");
+        assert_eq!(
+            s.lookup("state", &[Value::Int64(1)]).unwrap(),
+            Some(row![1i64, "from_a"])
+        );
+    }
+
+    #[test]
+    fn conflict_on_absent_key_creation() {
+        let s = store();
+        let mut a = s.begin();
+        let mut b = s.begin();
+        assert_eq!(a.lookup("state", &[Value::Int64(9)]).unwrap(), None);
+        assert_eq!(b.lookup("state", &[Value::Int64(9)]).unwrap(), None);
+        a.write("state", row![9i64, "a"]).unwrap();
+        b.write("state", row![9i64, "b"]).unwrap();
+        a.commit().unwrap();
+        assert!(matches!(b.commit(), Err(TxnError::Conflict { .. })));
+    }
+
+    #[test]
+    fn blind_writes_last_writer_wins() {
+        let s = store();
+        let mut a = s.begin();
+        let mut b = s.begin();
+        a.write("state", row![1i64, "a"]).unwrap();
+        b.write("state", row![1i64, "b"]).unwrap();
+        a.commit().unwrap();
+        b.commit().unwrap(); // no read set → no conflict
+        assert_eq!(
+            s.lookup("state", &[Value::Int64(1)]).unwrap(),
+            Some(row![1i64, "b"])
+        );
+    }
+
+    #[test]
+    fn aborted_txn_leaves_no_trace() {
+        let s = store();
+        let mut t = s.begin();
+        t.write("state", row![5i64, "x"]).unwrap();
+        t.abort();
+        assert_eq!(s.lookup("state", &[Value::Int64(5)]).unwrap(), None);
+        let mut t2 = s.begin();
+        t2.write("state", row![6i64, "y"]).unwrap();
+        drop(t2); // drop = abort
+        assert_eq!(s.lookup("state", &[Value::Int64(6)]).unwrap(), None);
+    }
+
+    #[test]
+    fn schema_violations_rejected_eagerly() {
+        let s = store();
+        let mut t = s.begin();
+        assert!(matches!(
+            t.write("state", row!["not_an_int", "v"]),
+            Err(TxnError::Schema(_))
+        ));
+        assert!(matches!(
+            t.write("missing", row![1i64, "v"]),
+            Err(TxnError::NoSuchTable(_))
+        ));
+    }
+
+    #[test]
+    fn commit_bytes_accounted_per_table_category() {
+        let acc = WriteAccounting::new();
+        let s = DynTableStore::new(acc.clone());
+        s.create_table(
+            "m",
+            TableSchema::new(vec![
+                ColumnSchema::key("k", ColumnType::Int64),
+                ColumnSchema::value("v", ColumnType::Str),
+            ]),
+            WriteCategory::MapperMeta,
+        )
+        .unwrap();
+        let mut t = s.begin();
+        t.write("m", row![1i64, "some value"]).unwrap();
+        t.commit().unwrap();
+        assert!(acc.bytes(WriteCategory::MapperMeta) > 0);
+        assert_eq!(acc.bytes(WriteCategory::UserOutput), 0);
+    }
+
+    #[test]
+    fn unavailable_store_fails_commit() {
+        let s = store();
+        let mut t = s.begin();
+        t.write("state", row![1i64, "v"]).unwrap();
+        s.set_unavailable(true);
+        assert_eq!(t.commit(), Err(TxnError::Unavailable));
+        s.set_unavailable(false);
+        assert_eq!(s.lookup("state", &[Value::Int64(1)]).unwrap(), None);
+    }
+
+    #[test]
+    fn overwrite_within_txn_keeps_last() {
+        let s = store();
+        let mut t = s.begin();
+        t.write("state", row![1i64, "first"]).unwrap();
+        t.write("state", row![1i64, "second"]).unwrap();
+        assert_eq!(t.pending_writes(), 1);
+        t.commit().unwrap();
+        assert_eq!(
+            s.lookup("state", &[Value::Int64(1)]).unwrap(),
+            Some(row![1i64, "second"])
+        );
+    }
+
+    #[test]
+    fn reread_does_not_reset_observed_version() {
+        let s = store();
+        let mut t0 = s.begin();
+        t0.write("state", row![1i64, "v0"]).unwrap();
+        t0.commit().unwrap();
+
+        let mut a = s.begin();
+        a.lookup("state", &[Value::Int64(1)]).unwrap();
+
+        // Interleaved writer bumps the version.
+        let mut w = s.begin();
+        w.write("state", row![1i64, "v1"]).unwrap();
+        w.commit().unwrap();
+
+        // Re-read inside `a` must not "refresh" the snapshot.
+        a.lookup("state", &[Value::Int64(1)]).unwrap();
+        a.write("state", row![1i64, "v2"]).unwrap();
+        assert!(matches!(a.commit(), Err(TxnError::Conflict { .. })));
+    }
+
+    #[test]
+    fn use_after_finish_rejected() {
+        let s = store();
+        let t = s.begin();
+        t.commit().unwrap();
+        // `commit` consumes, so re-use is prevented statically; check the
+        // internal guard via a fresh finished txn through abort + drop.
+        let mut t2 = s.begin();
+        t2.write("state", row![1i64, "v"]).unwrap();
+        t2.abort();
+    }
+}

@@ -1,0 +1,13 @@
+//! Regeneration harness for every figure/table in the paper's evaluation
+//! (§5.2) — see DESIGN.md §4 for the experiment index.
+//!
+//! Each `fig*` function runs a scaled scenario on the simulated cluster
+//! and prints CSV series with the same axes the paper plots, plus a
+//! summary line with the headline number to compare against the paper's.
+//! Invoke via `cargo run --release -- figure <id>`.
+
+pub mod scenario;
+pub mod figs;
+
+pub use figs::{run_figure, FigureOpts};
+pub use scenario::{ScenarioCfg, Scenario};

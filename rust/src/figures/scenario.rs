@@ -1,0 +1,203 @@
+//! Shared scenario plumbing: build a cluster, feed it the §5.2 workload,
+//! run the analytics processor, watch it drain.
+
+use std::sync::Arc;
+
+use crate::coordinator::processor::ClusterEnv;
+use crate::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+use crate::metrics::hub::names;
+use crate::queue::input_name_table;
+use crate::queue::ordered_table::OrderedTable;
+use crate::row;
+use crate::rows::UnversionedRow;
+use crate::util::yson::Yson;
+use crate::util::Clock;
+use crate::workload::analytics::{analytics_mapper_factory, analytics_reducer_factory};
+use crate::workload::loggen::{LogGen, LogGenConfig};
+use crate::workload::producer::{start_producers, ProducerConfig, ProducerHandle};
+
+/// Scenario knobs (scaled-down §5.2 testbed).
+#[derive(Debug, Clone)]
+pub struct ScenarioCfg {
+    pub mappers: usize,
+    pub reducers: usize,
+    /// Simulated-time speedup (the paper's 10-minute drills run 60×).
+    pub speedup: u64,
+    /// Producer rate per partition (messages/simulated second).
+    pub msgs_per_sec: f64,
+    pub seed: u64,
+    pub compute: ComputeMode,
+    pub memory_limit_bytes: usize,
+    pub spill_enabled: bool,
+    pub pipelined_reducer: bool,
+}
+
+impl Default for ScenarioCfg {
+    fn default() -> Self {
+        ScenarioCfg {
+            mappers: 8,
+            reducers: 2,
+            speedup: 8,
+            msgs_per_sec: 300.0,
+            seed: 0xE7A1,
+            compute: ComputeMode::Native,
+            memory_limit_bytes: 8 << 20,
+            spill_enabled: false,
+            pipelined_reducer: false,
+        }
+    }
+}
+
+/// A live scenario: cluster + producers + processor.
+pub struct Scenario {
+    pub env: ClusterEnv,
+    pub input: InputSpec,
+    pub processor: StreamingProcessor,
+    pub producers: Option<ProducerHandle>,
+    pub cfg: ScenarioCfg,
+}
+
+impl ScenarioCfg {
+    pub fn processor_config(&self) -> ProcessorConfig {
+        ProcessorConfig {
+            mapper_count: self.mappers,
+            reducer_count: self.reducers,
+            memory_limit_bytes: self.memory_limit_bytes,
+            compute: self.compute,
+            pipelined_reducer: self.pipelined_reducer,
+            spill: crate::coordinator::SpillConfig {
+                enabled: self.spill_enabled,
+                ..Default::default()
+            },
+            ..ProcessorConfig::default()
+        }
+    }
+}
+
+/// Launch the full §5.2 scenario: producers + analytics processor.
+pub fn start(cfg: ScenarioCfg) -> Scenario {
+    let clock = Clock::scaled(cfg.speedup);
+    let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    let table = OrderedTable::new(
+        "//input/master_logs",
+        input_name_table(),
+        cfg.mappers,
+        env.accounting.clone(),
+    );
+    let input = InputSpec::Ordered(table);
+
+    let producers = start_producers(
+        input.clone(),
+        clock.clone(),
+        ProducerConfig {
+            messages_per_sec: cfg.msgs_per_sec,
+            ..ProducerConfig::default()
+        },
+        cfg.seed,
+    );
+
+    let processor = StreamingProcessor::launch(
+        cfg.processor_config(),
+        env.clone(),
+        input.clone(),
+        analytics_mapper_factory(cfg.compute),
+        analytics_reducer_factory(cfg.compute),
+        Yson::parse("{}").unwrap(),
+    )
+    .expect("launch processor");
+
+    Scenario {
+        env,
+        input,
+        processor,
+        producers: Some(producers),
+        cfg,
+    }
+}
+
+impl Scenario {
+    /// Let the scenario run for `sim_ms` of simulated time.
+    pub fn run_for_sim_ms(&self, sim_ms: u64) {
+        self.env.clock.sleep_ms(sim_ms);
+    }
+
+    /// Stop producers (keeps the processor draining the backlog).
+    pub fn stop_producers(&mut self) {
+        if let Some(p) = self.producers.take() {
+            p.stop();
+        }
+    }
+
+    /// Tear down everything; returns the env for post-mortem queries.
+    pub fn stop(mut self) -> ClusterEnv {
+        self.stop_producers();
+        let env = self.env.clone();
+        self.processor.stop();
+        env
+    }
+
+    /// Total rows the reducers have committed so far.
+    pub fn reduced_rows(&self) -> u64 {
+        self.env.metrics.get_counter(names::REDUCER_ROWS)
+    }
+
+    /// Wait (wall-clock bounded) until reducers stop making progress and
+    /// the input backlog is trimmed — the "drained" condition used by the
+    /// WA comparison.
+    pub fn wait_drained(&self, wall_timeout_ms: u64) -> bool {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wall_timeout_ms);
+        let mut last = (0u64, usize::MAX);
+        while std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let reduced = self.reduced_rows();
+            let retained = self.input.retained_rows();
+            if retained == 0 && reduced == last.0 && reduced > 0 {
+                return true;
+            }
+            last = (reduced, retained);
+        }
+        false
+    }
+}
+
+/// Fill an ordered table with a *deterministic* batch of messages (used
+/// where two pipelines must see identical input, e.g. the WA comparison).
+/// Returns total payload rows appended.
+pub fn fill_static_input(
+    table: &Arc<OrderedTable>,
+    clock: &Clock,
+    messages_per_partition: usize,
+    seed: u64,
+) -> u64 {
+    let mut total = 0u64;
+    for p in 0..table.tablet_count() {
+        let mut gen = LogGen::new(LogGenConfig::default(), clock.clone(), seed, p);
+        let rows: Vec<UnversionedRow> = (0..messages_per_partition)
+            .map(|_| {
+                let (msg, _) = gen.next_message();
+                row![msg, clock.now_ms() as i64]
+            })
+            .collect();
+        total += rows.len() as u64;
+        table.append(p, rows).expect("static fill");
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_fill_is_deterministic_in_structure() {
+        let clock = Clock::realtime();
+        let acc = crate::storage::WriteAccounting::new();
+        let t1 = OrderedTable::new("a", input_name_table(), 2, acc.clone());
+        let t2 = OrderedTable::new("b", input_name_table(), 2, acc);
+        let n1 = fill_static_input(&t1, &clock, 10, 7);
+        let n2 = fill_static_input(&t2, &clock, 10, 7);
+        assert_eq!(n1, n2);
+        assert_eq!(n1, 20);
+        assert_eq!(t1.end_index(0), 10);
+    }
+}

@@ -1,0 +1,51 @@
+//! # yt-stream — streaming MapReduce with low write amplification
+//!
+//! A from-scratch reproduction of *"Better Write Amplification for Streaming
+//! Data Processing"* (Chulkov, 2023): the Yandex YT streaming processor — a
+//! mapper/reducer shuffle stage that keeps all in-flight data **in memory**
+//! and persists only compact *meta-state* (row indexes + continuation
+//! tokens), achieving exactly-once delivery with near-zero write
+//! amplification.
+//!
+//! The crate is the L3 (coordinator) layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — workers, shuffle, transactions, discovery,
+//!   fault tolerance; owns the event loop and every persistent byte.
+//! * **L2 (python/compile/model.py)** — the numeric stages (shuffle hash,
+//!   grouped aggregation) as JAX graphs, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! Python never runs at request time: [`runtime`] loads the AOT artifacts
+//! via the PJRT C API (`xla` crate) and [`compute`] calls them from the
+//! mapper/reducer hot paths (with a pure-rust fallback for tests).
+//!
+//! Module map (see DESIGN.md for the paper-section cross-reference):
+//!
+//! | layer | modules |
+//! |---|---|
+//! | data model | [`rows`] |
+//! | substrates | [`storage`], [`queue`], [`dyntable`], [`cypress`], [`rpc`] |
+//! | the paper's system | [`api`], [`coordinator`], [`controller`] |
+//! | compiled compute | [`runtime`], [`compute`] |
+//! | evaluation | [`workload`], [`baseline`], [`metrics`], [`figures`] |
+//! | future work (§6) | [`spill`], [`pipelined`] |
+
+pub mod util;
+pub mod rows;
+pub mod storage;
+pub mod queue;
+pub mod dyntable;
+pub mod cypress;
+pub mod rpc;
+pub mod api;
+pub mod coordinator;
+pub mod controller;
+pub mod runtime;
+pub mod compute;
+pub mod workload;
+pub mod baseline;
+pub mod spill;
+pub mod multipart;
+pub mod pipelined;
+pub mod metrics;
+pub mod figures;

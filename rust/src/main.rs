@@ -1,0 +1,172 @@
+//! `yt-stream` CLI — launcher and evaluation harness.
+//!
+//! ```text
+//! yt-stream figure <id> [--seconds N] [--compute native|hlo] [--seed N]
+//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill
+//! yt-stream run [--config path.yson] [--seconds N]
+//!     run the log-analytics streaming processor and print live stats
+//! yt-stream selfcheck
+//!     verify the PJRT runtime + AOT artifacts load and agree with native
+//! ```
+
+use yt_stream::coordinator::{ComputeMode, ProcessorConfig};
+use yt_stream::figures::{run_figure, FigureOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("figure") => {
+            let id = args.get(1).cloned().unwrap_or_else(|| {
+                eprintln!("usage: yt-stream figure <id>");
+                std::process::exit(2);
+            });
+            let mut opts = FigureOpts::default();
+            parse_common(&args[2..], &mut opts);
+            run_figure(&id, &opts);
+        }
+        Some("run") => {
+            let mut opts = FigureOpts::default();
+            let mut config_path = None;
+            let mut it = args[1..].iter();
+            while let Some(a) = it.next() {
+                if a == "--config" {
+                    config_path = it.next().cloned();
+                }
+            }
+            parse_common(&args[1..], &mut opts);
+            run_demo(config_path.as_deref(), &opts);
+        }
+        Some("selfcheck") => selfcheck(),
+        _ => {
+            eprintln!(
+                "yt-stream — streaming MapReduce with low write amplification\n\
+                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill> [--seconds N] [--compute native|hlo] [--seed N]\n\
+                 \x20 yt-stream run [--config path.yson] [--seconds N] [--compute native|hlo]\n\
+                 \x20 yt-stream selfcheck"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_common(rest: &[String], opts: &mut FigureOpts) {
+    let mut it = rest.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--seconds" => {
+                opts.sim_seconds = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(opts.sim_seconds)
+            }
+            "--seed" => {
+                opts.seed = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.seed)
+            }
+            "--compute" => {
+                opts.compute = match it.next().map(String::as_str) {
+                    Some("hlo") => ComputeMode::Hlo,
+                    _ => ComputeMode::Native,
+                }
+            }
+            "--config" => {
+                let _ = it.next();
+            }
+            other => {
+                eprintln!("unknown flag '{other}'");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// `run`: launch the §5.2 analytics processor and print periodic stats.
+fn run_demo(config_path: Option<&str>, opts: &FigureOpts) {
+    use yt_stream::figures::{Scenario, ScenarioCfg};
+    use yt_stream::metrics::hub::names;
+
+    let mut cfg = ScenarioCfg {
+        compute: opts.compute,
+        seed: opts.seed,
+        speedup: 1,
+        ..ScenarioCfg::default()
+    };
+    if let Some(path) = config_path {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        let pc = ProcessorConfig::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bad config {path}: {e}");
+            std::process::exit(2);
+        });
+        cfg.mappers = pc.mapper_count;
+        cfg.reducers = pc.reducer_count;
+        cfg.memory_limit_bytes = pc.memory_limit_bytes;
+        cfg.spill_enabled = pc.spill.enabled;
+        cfg.pipelined_reducer = pc.pipelined_reducer;
+        cfg.compute = pc.compute;
+    }
+    println!(
+        "launching log-analytics processor: {} mappers, {} reducers, compute={:?}",
+        cfg.mappers, cfg.reducers, cfg.compute
+    );
+    let scenario: Scenario = yt_stream::figures::scenario::start(cfg);
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs() < opts.sim_seconds.max(5) {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+        let m = &scenario.env.metrics;
+        println!(
+            "t={:>4}s rows_read={:>9} rows_reduced={:>9} commits={:>6} split_brains={} backlog={}",
+            t0.elapsed().as_secs(),
+            m.get_counter(names::MAPPER_ROWS_READ),
+            m.get_counter(names::REDUCER_ROWS),
+            m.get_counter(names::REDUCER_COMMITS),
+            m.get_counter(names::MAPPER_SPLIT_BRAIN) + m.get_counter(names::REDUCER_SPLIT_BRAIN),
+            scenario.input.retained_rows(),
+        );
+    }
+    let report = scenario.processor.wa_report("yt-stream");
+    println!("{report}");
+    scenario.stop();
+}
+
+/// `selfcheck`: PJRT + artifacts sanity (the AOT bridge smoke test).
+fn selfcheck() {
+    use yt_stream::compute::{hlo::HloStage, native::NativeStage, ComputeStage};
+
+    let rt = match yt_stream::runtime::PjRtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+
+    let dir = std::path::Path::new("artifacts");
+    let stage = match HloStage::load(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("artifact load failed: {e}\nhint: run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    let native = NativeStage;
+
+    // Cross-check a few batches.
+    let uh: Vec<u32> = (0..2000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+    let ch: Vec<u32> = (0..2000u32).map(|i| i.wrapping_mul(40503)).collect();
+    let hu: Vec<bool> = (0..2000).map(|i| i % 7 == 0).collect();
+    let a = stage.map_stage(&uh, &ch, &hu, 10);
+    let b = native.map_stage(&uh, &ch, &hu, 10);
+    assert_eq!(a, b, "map stage mismatch (hlo vs native)");
+
+    let slots: Vec<u32> = (0..2000u32).map(|i| i % 97).collect();
+    let ts: Vec<f32> = (0..2000).map(|i| (i % 1000) as f32).collect();
+    let valid: Vec<bool> = (0..2000).map(|i| i % 3 != 0).collect();
+    let x = stage.reduce_stage(&slots, &ts, &valid, 97);
+    let y = native.reduce_stage(&slots, &ts, &valid, 97);
+    assert_eq!(x, y, "reduce stage mismatch (hlo vs native)");
+
+    println!("selfcheck OK: hlo == native on map + reduce stages");
+}

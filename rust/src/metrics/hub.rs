@@ -1,0 +1,143 @@
+//! The shared metrics registry.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::timeseries::TimeSeries;
+
+/// Process-wide registry of counters and time series, shared by all
+/// simulated workers of a streaming processor.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    series: Mutex<HashMap<String, Arc<TimeSeries>>>,
+    counters: Mutex<HashMap<String, Arc<AtomicU64>>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Arc<MetricsHub> {
+        Arc::new(MetricsHub::default())
+    }
+
+    /// Get-or-create a named series.
+    pub fn series(&self, name: &str) -> Arc<TimeSeries> {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(TimeSeries::new(name)))
+            .clone()
+    }
+
+    /// Get-or-create a named counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get_counter(&self, name: &str) -> u64 {
+        self.counter(name).load(Ordering::Relaxed)
+    }
+
+    /// All series whose names start with `prefix`, sorted by name — e.g.
+    /// `mapper/`-prefixed read-lag series for fig. 5.2.
+    pub fn series_with_prefix(&self, prefix: &str) -> Vec<Arc<TimeSeries>> {
+        let g = self.series.lock().unwrap();
+        let mut out: Vec<_> = g
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v.clone())
+            .collect();
+        out.sort_by(|a, b| a.name().cmp(b.name()));
+        out
+    }
+
+    pub fn series_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.series.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+/// Well-known metric name builders, so workers and figures agree.
+pub mod names {
+    /// Read lag (ms) of one mapper — fig. 5.2 / 5.3.
+    pub fn mapper_read_lag(index: usize) -> String {
+        format!("mapper/{index:03}/read_lag_ms")
+    }
+
+    /// Buffered window size (bytes) of one mapper — fig. 5.4 / 5.5.
+    pub fn mapper_window_bytes(index: usize) -> String {
+        format!("mapper/{index:03}/window_bytes")
+    }
+
+    /// Reducer ingest throughput (bytes per second) — fig. 5.1.
+    pub fn reducer_throughput(index: usize) -> String {
+        format!("reducer/{index:03}/ingest_bytes_per_s")
+    }
+
+    /// End-to-end latency (ms) from producer write to reducer commit.
+    pub fn reducer_commit_latency(index: usize) -> String {
+        format!("reducer/{index:03}/commit_latency_ms")
+    }
+
+    pub const MAPPER_ROWS_READ: &str = "mapper/rows_read_total";
+    pub const MAPPER_ROWS_MAPPED: &str = "mapper/rows_mapped_total";
+    pub const MAPPER_BYTES_READ: &str = "mapper/bytes_read_total";
+    pub const MAPPER_SPLIT_BRAIN: &str = "mapper/split_brain_detected_total";
+    pub const REDUCER_ROWS: &str = "reducer/rows_processed_total";
+    pub const REDUCER_BYTES: &str = "reducer/bytes_processed_total";
+    pub const REDUCER_COMMITS: &str = "reducer/commits_total";
+    pub const REDUCER_COMMIT_CONFLICTS: &str = "reducer/commit_conflicts_total";
+    pub const REDUCER_SPLIT_BRAIN: &str = "reducer/split_brain_detected_total";
+    pub const SPILL_ROWS: &str = "spill/rows_spilled_total";
+    pub const SPILL_RESTORED: &str = "spill/rows_restored_total";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_identity() {
+        let h = MetricsHub::new();
+        let a = h.series("x");
+        let b = h.series("x");
+        a.record(0, 1.0);
+        assert_eq!(b.len(), 1, "same name must be the same series");
+    }
+
+    #[test]
+    fn counters() {
+        let h = MetricsHub::new();
+        h.add("c", 5);
+        h.add("c", 2);
+        assert_eq!(h.get_counter("c"), 7);
+        assert_eq!(h.get_counter("unset"), 0);
+    }
+
+    #[test]
+    fn prefix_query_sorted() {
+        let h = MetricsHub::new();
+        h.series(&names::mapper_read_lag(2));
+        h.series(&names::mapper_read_lag(0));
+        h.series(&names::reducer_throughput(0));
+        let lags = h.series_with_prefix("mapper/");
+        assert_eq!(lags.len(), 2);
+        assert!(lags[0].name() < lags[1].name());
+    }
+
+    #[test]
+    fn name_builders_stable() {
+        assert_eq!(names::mapper_read_lag(7), "mapper/007/read_lag_ms");
+        assert_eq!(names::reducer_throughput(0), "reducer/000/ingest_bytes_per_s");
+    }
+}

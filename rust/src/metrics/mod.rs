@@ -1,0 +1,17 @@
+//! Observability: counters, gauges, time series and the write-amplification
+//! report.
+//!
+//! Every figure in the paper's evaluation (§5.2) is a time series — reducer
+//! throughput (5.1), mapper read lag (5.2, 5.3), buffered window sizes
+//! (5.4, 5.5). Workers record samples into a shared [`MetricsHub`]; the
+//! `figures` harness turns series into the CSV rows EXPERIMENTS.md quotes.
+//! [`wa::WaReport`] computes the headline write-amplification table from
+//! the storage accounting.
+
+pub mod hub;
+pub mod timeseries;
+pub mod wa;
+
+pub use hub::MetricsHub;
+pub use timeseries::TimeSeries;
+pub use wa::WaReport;

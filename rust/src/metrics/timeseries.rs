@@ -1,0 +1,159 @@
+//! Append-only time series of (simulated-ms, value) samples.
+
+use std::sync::Mutex;
+
+/// One named series. Thread-safe; samples must arrive in roughly
+/// monotonic time order (enforced loosely — the clock is shared).
+#[derive(Debug)]
+pub struct TimeSeries {
+    name: String,
+    samples: Mutex<Vec<(u64, f64)>>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>) -> TimeSeries {
+        TimeSeries {
+            name: name.into(),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn record(&self, t_ms: u64, value: f64) {
+        self.samples.lock().unwrap().push((t_ms, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn samples(&self) -> Vec<(u64, f64)> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.samples.lock().unwrap().last().copied()
+    }
+
+    pub fn max_value(&self) -> Option<f64> {
+        self.samples
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        let g = self.samples.lock().unwrap();
+        if g.is_empty() {
+            return None;
+        }
+        Some(g.iter().map(|(_, v)| v).sum::<f64>() / g.len() as f64)
+    }
+
+    /// Mean over samples with `t >= from_ms` (steady-state stats that skip
+    /// warmup).
+    pub fn mean_since(&self, from_ms: u64) -> Option<f64> {
+        let g = self.samples.lock().unwrap();
+        let xs: Vec<f64> = g
+            .iter()
+            .filter(|(t, _)| *t >= from_ms)
+            .map(|(_, v)| *v)
+            .collect();
+        if xs.is_empty() {
+            None
+        } else {
+            Some(xs.iter().sum::<f64>() / xs.len() as f64)
+        }
+    }
+
+    /// Downsample into fixed time bins (mean per bin) — what the figure
+    /// harness prints so series of different density align on one axis.
+    pub fn binned(&self, bin_ms: u64) -> Vec<(u64, f64)> {
+        assert!(bin_ms > 0);
+        let g = self.samples.lock().unwrap();
+        let mut out: Vec<(u64, f64, u32)> = Vec::new();
+        for (t, v) in g.iter() {
+            let bin = t / bin_ms * bin_ms;
+            match out.last_mut() {
+                Some((bt, sum, n)) if *bt == bin => {
+                    *sum += v;
+                    *n += 1;
+                }
+                _ => out.push((bin, *v, 1)),
+            }
+        }
+        out.into_iter()
+            .map(|(t, sum, n)| (t, sum / n as f64))
+            .collect()
+    }
+
+    /// First time at which the value drops to or below `threshold`, looking
+    /// only at samples with `t >= from_ms`. Used for "recovered in ~15 s"
+    /// style measurements (fig. 5.3).
+    pub fn first_below_after(&self, from_ms: u64, threshold: f64) -> Option<u64> {
+        self.samples
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(t, v)| *t >= from_ms && *v <= threshold)
+            .map(|(t, _)| *t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_stats() {
+        let s = TimeSeries::new("lag");
+        for i in 0..10u64 {
+            s.record(i * 100, i as f64);
+        }
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.last(), Some((900, 9.0)));
+        assert_eq!(s.max_value(), Some(9.0));
+        assert!((s.mean().unwrap() - 4.5).abs() < 1e-9);
+        assert!((s.mean_since(500).unwrap() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_series() {
+        let s = TimeSeries::new("x");
+        assert!(s.is_empty());
+        assert_eq!(s.last(), None);
+        assert_eq!(s.mean(), None);
+        assert_eq!(s.max_value(), None);
+    }
+
+    #[test]
+    fn binning_averages() {
+        let s = TimeSeries::new("x");
+        s.record(0, 1.0);
+        s.record(40, 3.0);
+        s.record(120, 10.0);
+        let bins = s.binned(100);
+        assert_eq!(bins, vec![(0, 2.0), (100, 10.0)]);
+    }
+
+    #[test]
+    fn first_below_after() {
+        let s = TimeSeries::new("lag");
+        s.record(0, 100.0);
+        s.record(100, 50.0);
+        s.record(200, 5.0);
+        s.record(300, 2.0);
+        assert_eq!(s.first_below_after(0, 10.0), Some(200));
+        assert_eq!(s.first_below_after(250, 10.0), Some(300));
+        assert_eq!(s.first_below_after(0, 0.5), None);
+    }
+}

@@ -1,0 +1,162 @@
+//! The write-amplification report — the paper's headline metric.
+//!
+//! `WA = bytes the processor persisted / input payload bytes it processed`.
+//!
+//! The paper's design persists only *meta-state* (three small columns per
+//! mapper, one small row per reducer), so its WA factor is ~0; classic
+//! persisted-shuffle designs (§2.1–2.2) rewrite the full payload at least
+//! once, so theirs is ≥1. The `figure wa` harness prints this comparison.
+
+use std::fmt;
+
+use crate::storage::accounting::{AccountingSnapshot, ALL_CATEGORIES};
+use crate::storage::WriteCategory;
+
+/// A write-amplification summary for one pipeline run.
+#[derive(Debug, Clone)]
+pub struct WaReport {
+    /// Run label (e.g. "yt-stream" or "persisted-shuffle baseline").
+    pub label: String,
+    /// Input payload bytes actually ingested by mappers.
+    pub ingested_bytes: u64,
+    pub snapshot: AccountingSnapshot,
+}
+
+impl WaReport {
+    pub fn new(label: impl Into<String>, ingested_bytes: u64, snapshot: AccountingSnapshot) -> Self {
+        WaReport {
+            label: label.into(),
+            ingested_bytes,
+            snapshot,
+        }
+    }
+
+    /// System write-amplification factor (excludes source ingest and
+    /// useful user output; see [`WriteCategory::counts_toward_wa`]).
+    pub fn factor(&self) -> f64 {
+        self.snapshot.wa_factor(self.ingested_bytes)
+    }
+
+    /// Meta-state-only bytes (mapper + reducer state commits).
+    pub fn meta_bytes(&self) -> u64 {
+        self.snapshot.bytes_of(WriteCategory::MapperMeta)
+            + self.snapshot.bytes_of(WriteCategory::ReducerMeta)
+    }
+
+    /// Payload re-persisted by the pipeline (shuffle spill / baseline).
+    pub fn payload_repersisted_bytes(&self) -> u64 {
+        self.snapshot.bytes_of(WriteCategory::ShufflePersist)
+            + self.snapshot.bytes_of(WriteCategory::Spill)
+    }
+
+    /// One CSV row: label, ingested, per-category bytes, factor.
+    pub fn csv_row(&self) -> String {
+        let mut cells = vec![self.label.clone(), self.ingested_bytes.to_string()];
+        for cat in ALL_CATEGORIES {
+            cells.push(self.snapshot.bytes_of(cat).to_string());
+        }
+        cells.push(format!("{:.4}", self.factor()));
+        cells.join(",")
+    }
+
+    pub fn csv_header() -> String {
+        let mut cells = vec!["label".to_string(), "ingested_bytes".to_string()];
+        for cat in ALL_CATEGORIES {
+            cells.push(cat.name().to_string());
+        }
+        cells.push("wa_factor".to_string());
+        cells.join(",")
+    }
+}
+
+impl fmt::Display for WaReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "write-amplification report: {}", self.label)?;
+        writeln!(f, "  ingested            {:>14} bytes", self.ingested_bytes)?;
+        write!(f, "{}", self.snapshot)?;
+        writeln!(f, "  meta-state          {:>14} bytes", self.meta_bytes())?;
+        writeln!(
+            f,
+            "  payload re-persisted{:>14} bytes",
+            self.payload_repersisted_bytes()
+        )?;
+        writeln!(f, "  WA factor           {:>14.4}", self.factor())
+    }
+}
+
+/// Side-by-side comparison of runs over the same workload (the paper's
+/// headline table: ours vs persisted-shuffle baseline vs spill ablation).
+pub fn comparison_table(reports: &[WaReport]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>14} {:>14} {:>14} {:>10} {:>9}\n",
+        "pipeline", "ingested", "meta_bytes", "payload_rewr", "user_out", "WA"
+    ));
+    for r in reports {
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>14} {:>14} {:>10} {:>9.4}\n",
+            r.label,
+            r.ingested_bytes,
+            r.meta_bytes(),
+            r.payload_repersisted_bytes(),
+            r.snapshot.bytes_of(WriteCategory::UserOutput),
+            r.factor()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::WriteAccounting;
+
+    fn snapshot(meta: u64, shuffle: u64, user: u64) -> AccountingSnapshot {
+        let acc = WriteAccounting::new();
+        acc.record(WriteCategory::MapperMeta, meta / 2);
+        acc.record(WriteCategory::ReducerMeta, meta - meta / 2);
+        acc.record(WriteCategory::ShufflePersist, shuffle);
+        acc.record(WriteCategory::UserOutput, user);
+        acc.snapshot()
+    }
+
+    #[test]
+    fn factor_math() {
+        let r = WaReport::new("ours", 1_000_000, snapshot(1_000, 0, 50_000));
+        assert!((r.factor() - 0.001).abs() < 1e-9);
+        assert_eq!(r.meta_bytes(), 1_000);
+        assert_eq!(r.payload_repersisted_bytes(), 0);
+
+        let b = WaReport::new("baseline", 1_000_000, snapshot(1_000, 2_000_000, 50_000));
+        assert!(b.factor() > 2.0);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let r = WaReport::new("x", 10, snapshot(2, 3, 4));
+        let header = WaReport::csv_header();
+        let row = r.csv_row();
+        assert_eq!(header.split(',').count(), row.split(',').count());
+        assert!(header.starts_with("label,ingested_bytes"));
+        assert!(row.starts_with("x,10"));
+    }
+
+    #[test]
+    fn comparison_table_contains_rows() {
+        let rs = vec![
+            WaReport::new("ours", 100, snapshot(1, 0, 10)),
+            WaReport::new("baseline", 100, snapshot(1, 250, 10)),
+        ];
+        let t = comparison_table(&rs);
+        assert!(t.contains("ours"));
+        assert!(t.contains("baseline"));
+        assert!(t.lines().count() == 3);
+    }
+
+    #[test]
+    fn display_renders() {
+        let r = WaReport::new("ours", 100, snapshot(4, 0, 0));
+        let text = r.to_string();
+        assert!(text.contains("WA factor"));
+    }
+}

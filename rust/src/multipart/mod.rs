@@ -1,0 +1,501 @@
+//! Multi-partition mappers — the §6 future-work design, implemented.
+//!
+//! "Another goal is to allow a single mapper to read multiple input
+//! partitions. … The challenge lies in the fact that the order in which
+//! data is delivered from distinct partitions is not deterministic. …
+//! To overcome this issue, mappers will read data in one of two modes. In
+//! the **advancing** mode a mapper will collect data from its multiple
+//! assigned partitions and persist the order and size of the received
+//! batches to a tablet of an ordered dynamic table. In the **catch up**
+//! mode a mapper will read rows from this tablet and wait to receive the
+//! same amount of rows from the corresponding partitions, returning them
+//! in exactly the same order."
+//!
+//! [`MultiPartitionReader`] wraps N sub-readers behind the ordinary
+//! [`PartitionReader`] interface, so the mapper worker is unchanged. Each
+//! advancing read appends a small **order record** `(sub, rows,
+//! token_before, token_after)` to a per-mapper tablet of an order log
+//! (accounted as mapper meta-state — a few dozen bytes per batch, so the
+//! low-WA claim is preserved); the continuation token is just an index
+//! into that log. A restarted mapper whose persisted token is behind the
+//! log replays the recorded schedule — byte-identical row order, hence
+//! stable input/shuffle numbering and intact exactly-once.
+
+use std::sync::Arc;
+
+use crate::coordinator::InputSpec;
+use crate::queue::ordered_table::OrderedTable;
+use crate::queue::{ContinuationToken, PartitionReader, QueueError, ReadBatch};
+use crate::row;
+use crate::rows::{NameTable, UnversionedRowset, Value};
+use crate::storage::WriteAccounting;
+
+/// Columns of an order-log record.
+pub fn order_log_name_table() -> Arc<NameTable> {
+    NameTable::new(&["sub", "rows", "token_before", "token_after"])
+}
+
+const TOKEN_PREFIX: &str = "mp:";
+
+fn encode_token(order_idx: i64) -> ContinuationToken {
+    ContinuationToken(format!("{TOKEN_PREFIX}{order_idx}"))
+}
+
+fn decode_token(token: &ContinuationToken) -> Result<i64, QueueError> {
+    if token.is_initial() {
+        return Ok(0);
+    }
+    token
+        .0
+        .strip_prefix(TOKEN_PREFIX)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| QueueError::BadToken(token.0.clone()))
+}
+
+/// A deterministic composite reader over several input partitions.
+pub struct MultiPartitionReader {
+    subs: Vec<Box<dyn PartitionReader>>,
+    /// Live read cursor per sub (advancing mode).
+    sub_tokens: Vec<ContinuationToken>,
+    /// Rows already consumed per sub (drives sub begin/end indexes).
+    sub_consumed: Vec<i64>,
+    /// The order log: one tablet per composite mapper.
+    order_log: Arc<OrderedTable>,
+    tablet: usize,
+    /// Next sub to try in advancing mode (round-robin fairness).
+    rr_next: usize,
+    /// Set when the in-memory cursors are known to match order index; a
+    /// fresh reader must first replay (catch up) to its caller's token.
+    synced_to: i64,
+}
+
+impl MultiPartitionReader {
+    pub fn new(
+        subs: Vec<Box<dyn PartitionReader>>,
+        order_log: Arc<OrderedTable>,
+        tablet: usize,
+    ) -> MultiPartitionReader {
+        let n = subs.len();
+        assert!(n > 0, "multi-partition reader needs at least one sub");
+        MultiPartitionReader {
+            sub_tokens: vec![ContinuationToken::initial(); n],
+            sub_consumed: vec![0; n],
+            subs,
+            order_log,
+            tablet,
+            rr_next: 0,
+            synced_to: 0,
+        }
+    }
+
+    fn record(&self, order_idx: i64) -> Result<Option<(usize, i64, String, String)>, QueueError> {
+        let rows = self
+            .order_log
+            .read_tablet(self.tablet, order_idx, order_idx + 1)?;
+        Ok(rows.first().map(|r| {
+            (
+                r.get(0).and_then(Value::as_i64).unwrap_or(0) as usize,
+                r.get(1).and_then(Value::as_i64).unwrap_or(0),
+                r.get(2).and_then(Value::as_str).unwrap_or("").to_string(),
+                r.get(3).and_then(Value::as_str).unwrap_or("").to_string(),
+            )
+        }))
+    }
+
+    /// Catch-up: fast-forward the in-memory sub cursors through recorded
+    /// batches `[self.synced_to, target)` *without* returning rows (used
+    /// when a fresh instance starts from a token > 0).
+    fn sync_to(&mut self, target: i64) -> Result<(), QueueError> {
+        while self.synced_to < target {
+            let Some((sub, rows, _before, after)) = self.record(self.synced_to)? else {
+                return Err(QueueError::BadToken(format!(
+                    "order log truncated at {} (want {target})",
+                    self.synced_to
+                )));
+            };
+            self.sub_tokens[sub] = ContinuationToken(after);
+            self.sub_consumed[sub] += rows;
+            self.synced_to += 1;
+        }
+        Ok(())
+    }
+
+    /// One recorded batch, re-read exactly as first delivered.
+    fn read_catch_up(
+        &mut self,
+        order_idx: i64,
+        record: (usize, i64, String, String),
+    ) -> Result<ReadBatch, QueueError> {
+        let (sub, rows, before, after) = record;
+        let begin = self.sub_consumed[sub] - 0; // rows not yet re-consumed in this life
+        let batch = self.subs[sub].read(
+            begin,
+            begin + rows,
+            &ContinuationToken(before),
+        )?;
+        if (batch.rowset.len() as i64) < rows {
+            // The sub hasn't re-delivered everything yet (e.g. transient
+            // unavailability): "wait to receive the same amount of rows".
+            return Ok(ReadBatch {
+                rowset: UnversionedRowset::empty(batch.rowset.name_table().clone()),
+                next_token: encode_token(order_idx),
+            });
+        }
+        debug_assert_eq!(batch.rowset.len() as i64, rows, "sub over-delivered");
+        self.sub_tokens[sub] = ContinuationToken(after);
+        self.sub_consumed[sub] += rows;
+        self.synced_to = order_idx + 1;
+        Ok(ReadBatch {
+            rowset: batch.rowset,
+            next_token: encode_token(order_idx + 1),
+        })
+    }
+
+    /// Advancing mode: pull the next non-empty batch round-robin, persist
+    /// the order record, return it.
+    fn read_advancing(
+        &mut self,
+        order_idx: i64,
+        want: i64,
+    ) -> Result<ReadBatch, QueueError> {
+        let n = self.subs.len();
+        for probe in 0..n {
+            let sub = (self.rr_next + probe) % n;
+            let before = self.sub_tokens[sub].clone();
+            let begin = self.sub_consumed[sub];
+            let batch = match self.subs[sub].read(begin, begin + want, &before) {
+                Ok(b) => b,
+                Err(_) => continue, // partition outage: try the next one
+            };
+            if batch.rowset.is_empty() {
+                continue;
+            }
+            let rows = batch.rowset.len() as i64;
+            // Persist the order record *before* handing rows out; a crash
+            // after the append but before processing is harmless (the
+            // record just replays).
+            self.order_log
+                .append(
+                    self.tablet,
+                    vec![row![
+                        sub as i64,
+                        rows,
+                        before.0.clone(),
+                        batch.next_token.0.clone()
+                    ]],
+                )
+                .map_err(|e| e)?;
+            self.sub_tokens[sub] = batch.next_token;
+            self.sub_consumed[sub] += rows;
+            self.rr_next = (sub + 1) % n;
+            self.synced_to = order_idx + 1;
+            return Ok(ReadBatch {
+                rowset: batch.rowset,
+                next_token: encode_token(order_idx + 1),
+            });
+        }
+        // Nothing anywhere.
+        Ok(ReadBatch {
+            rowset: UnversionedRowset::empty(crate::queue::input_name_table()),
+            next_token: encode_token(order_idx),
+        })
+    }
+}
+
+impl PartitionReader for MultiPartitionReader {
+    fn read(
+        &mut self,
+        _begin_row_index: i64,
+        end_minus_begin_hint: i64,
+        token: &ContinuationToken,
+    ) -> Result<ReadBatch, QueueError> {
+        let order_idx = decode_token(token)?;
+        if self.synced_to < order_idx {
+            // Fresh instance resuming mid-log: fast-forward cursors.
+            self.sync_to(order_idx)?;
+        }
+        let want = (end_minus_begin_hint - _begin_row_index).max(1);
+        match self.record(order_idx)? {
+            Some(rec) => self.read_catch_up(order_idx, rec),
+            None => self.read_advancing(order_idx, want),
+        }
+    }
+
+    fn trim(&mut self, _row_index: i64, token: &ContinuationToken) -> Result<(), QueueError> {
+        // Everything before `token`'s order index is fully processed: trim
+        // each sub up to the latest token_after recorded below it, then
+        // trim the order log itself.
+        let order_idx = decode_token(token)?;
+        let first = self.order_log.first_index(self.tablet);
+        let mut latest: Vec<Option<(i64, String)>> = vec![None; self.subs.len()];
+        let mut consumed: Vec<i64> = vec![0; self.subs.len()];
+        for i in first..order_idx {
+            if let Some((sub, rows, _before, after)) = self.record(i)? {
+                let c = consumed[sub] + rows;
+                consumed[sub] = c;
+                latest[sub] = Some((c, after));
+            }
+        }
+        for (sub, l) in latest.iter().enumerate() {
+            if let Some((upto, after)) = l {
+                self.subs[sub].trim(*upto, &ContinuationToken(after.clone()))?;
+            }
+        }
+        self.order_log.trim_tablet(self.tablet, order_idx)?;
+        Ok(())
+    }
+}
+
+/// Build a grouped input: `group_size` source partitions per mapper. The
+/// order log gets one tablet per composite mapper; its appends are
+/// accounted as mapper meta-state.
+pub struct GroupedInput {
+    pub source: InputSpec,
+    pub group_size: usize,
+    pub order_log: Arc<OrderedTable>,
+}
+
+impl GroupedInput {
+    pub fn new(
+        source: InputSpec,
+        group_size: usize,
+        accounting: Arc<WriteAccounting>,
+    ) -> Arc<GroupedInput> {
+        assert!(group_size > 0);
+        let partitions = source.partition_count();
+        assert_eq!(
+            partitions % group_size,
+            0,
+            "partition count must divide by group size"
+        );
+        let mappers = partitions / group_size;
+        let order_log = OrderedTable::new_with_category(
+            "//sys/processor/order_log",
+            order_log_name_table(),
+            mappers,
+            accounting,
+            crate::storage::WriteCategory::MapperMeta,
+        );
+        Arc::new(GroupedInput {
+            source,
+            group_size,
+            order_log,
+        })
+    }
+
+    pub fn mapper_count(&self) -> usize {
+        self.source.partition_count() / self.group_size
+    }
+
+    /// Composite reader for mapper `index`.
+    pub fn reader(&self, index: usize) -> MultiPartitionReader {
+        let lo = index * self.group_size;
+        let subs: Vec<Box<dyn PartitionReader>> = (lo..lo + self.group_size)
+            .map(|p| self.source.reader(p))
+            .collect();
+        MultiPartitionReader::new(subs, self.order_log.clone(), index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::input_name_table;
+    use crate::rows::UnversionedRow;
+    use crate::storage::WriteCategory;
+
+    fn source(partitions: usize, rows_per: usize) -> (InputSpec, Arc<WriteAccounting>) {
+        let acc = WriteAccounting::new();
+        let t = OrderedTable::new("//in/mp", input_name_table(), partitions, acc.clone());
+        for p in 0..partitions {
+            let rows: Vec<UnversionedRow> = (0..rows_per)
+                .map(|i| row![format!("p{p}-m{i}"), i as i64])
+                .collect();
+            t.append(p, rows).unwrap();
+        }
+        (InputSpec::Ordered(t), acc)
+    }
+
+    fn drain(reader: &mut MultiPartitionReader, batch: i64) -> (Vec<String>, ContinuationToken) {
+        let mut out = Vec::new();
+        let mut token = ContinuationToken::initial();
+        let mut idx = 0i64;
+        loop {
+            let b = reader.read(idx, idx + batch, &token).unwrap();
+            if b.rowset.is_empty() {
+                break;
+            }
+            idx += b.rowset.len() as i64;
+            token = b.next_token;
+            out.extend(
+                b.rowset
+                    .rows()
+                    .iter()
+                    .map(|r| r.get(0).unwrap().as_str().unwrap().to_string()),
+            );
+        }
+        (out, token)
+    }
+
+    #[test]
+    fn advancing_reads_all_partitions() {
+        let (src, acc) = source(4, 10);
+        let grouped = GroupedInput::new(src, 2, acc);
+        assert_eq!(grouped.mapper_count(), 2);
+        let mut r0 = grouped.reader(0);
+        let (rows, _) = drain(&mut r0, 6);
+        assert_eq!(rows.len(), 20, "both subs of group 0 fully read");
+        assert!(rows.iter().any(|s| s.starts_with("p0-")));
+        assert!(rows.iter().any(|s| s.starts_with("p1-")));
+        assert!(!rows.iter().any(|s| s.starts_with("p2-")), "group 1's data");
+    }
+
+    #[test]
+    fn restart_replays_identical_order() {
+        // The §6 guarantee: a restarted mapper re-reads rows in exactly
+        // the order the first life delivered them.
+        let (src, acc) = source(4, 8);
+        let grouped = GroupedInput::new(src, 4, acc);
+        let mut first_life = grouped.reader(0);
+        let (order1, _) = drain(&mut first_life, 5);
+        assert_eq!(order1.len(), 32);
+
+        // Fresh instance, token from scratch → catch-up replays the log.
+        let mut second_life = grouped.reader(0);
+        let (order2, _) = drain(&mut second_life, 5);
+        assert_eq!(order1, order2, "replay must be byte-identical");
+    }
+
+    #[test]
+    fn restart_mid_stream_resumes_from_token() {
+        let (src, acc) = source(2, 10);
+        let grouped = GroupedInput::new(src, 2, acc);
+        let mut life1 = grouped.reader(0);
+        let mut token = ContinuationToken::initial();
+        let mut seen = Vec::new();
+        let mut idx = 0i64;
+        for _ in 0..3 {
+            let b = life1.read(idx, idx + 4, &token).unwrap();
+            idx += b.rowset.len() as i64;
+            token = b.next_token;
+            seen.extend(
+                b.rowset
+                    .rows()
+                    .iter()
+                    .map(|r| r.get(0).unwrap().as_str().unwrap().to_string()),
+            );
+        }
+        // New instance resumes from the persisted token (sync_to path),
+        // then continues advancing.
+        let mut life2 = grouped.reader(0);
+        let mut rest = Vec::new();
+        loop {
+            let b = life2.read(idx, idx + 4, &token).unwrap();
+            if b.rowset.is_empty() {
+                break;
+            }
+            idx += b.rowset.len() as i64;
+            token = b.next_token;
+            rest.extend(
+                b.rowset
+                    .rows()
+                    .iter()
+                    .map(|r| r.get(0).unwrap().as_str().unwrap().to_string()),
+            );
+        }
+        assert_eq!(seen.len() + rest.len(), 20);
+        // No duplicates, no loss.
+        let mut all = seen;
+        all.extend(rest);
+        let mut dedup = all.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "duplicate rows after resume");
+    }
+
+    #[test]
+    fn trim_propagates_to_subs_and_log() {
+        let (src, acc) = source(2, 10);
+        let retained_before = match &src {
+            InputSpec::Ordered(t) => t.retained_rows(),
+            _ => unreachable!(),
+        };
+        assert_eq!(retained_before, 20);
+        let grouped = GroupedInput::new(src.clone(), 2, acc);
+        let mut r = grouped.reader(0);
+        let (_, final_token) = drain(&mut r, 6);
+        r.trim(0, &final_token).unwrap();
+        assert_eq!(src.retained_rows(), 0, "sub partitions must be trimmed");
+        assert_eq!(grouped.order_log.retained_rows(), 0, "order log trimmed");
+        // Idempotent.
+        r.trim(0, &final_token).unwrap();
+    }
+
+    #[test]
+    fn order_log_accounted_as_meta() {
+        // Realistic payload sizes: one order record (~45 B) amortizes over
+        // a whole batch of ~200 B messages.
+        let acc = WriteAccounting::new();
+        let t = OrderedTable::new("//in/mp-meta", input_name_table(), 2, acc.clone());
+        for p in 0..2 {
+            let rows: Vec<UnversionedRow> = (0..20)
+                .map(|i| row![format!("p{p}-m{i}-{}", "x".repeat(200)), i as i64])
+                .collect();
+            t.append(p, rows).unwrap();
+        }
+        let src = InputSpec::Ordered(t);
+        let grouped = GroupedInput::new(src, 2, acc.clone());
+        let meta_before = acc.bytes(WriteCategory::MapperMeta);
+        let mut r = grouped.reader(0);
+        let _ = drain(&mut r, 4);
+        assert!(
+            acc.bytes(WriteCategory::MapperMeta) > meta_before,
+            "order records must be accounted as mapper meta-state"
+        );
+        // …and they are small relative to the payload.
+        let meta = acc.bytes(WriteCategory::MapperMeta) - meta_before;
+        let ingest = acc.bytes(WriteCategory::SourceIngest);
+        assert!(meta * 2 < ingest, "order log too heavy: {meta} vs {ingest}");
+    }
+
+    #[test]
+    fn catch_up_waits_for_unavailable_sub() {
+        let (src, acc) = source(2, 6);
+        let grouped = GroupedInput::new(src.clone(), 2, acc);
+        let mut life1 = grouped.reader(0);
+        let (all, _) = drain(&mut life1, 4);
+        assert_eq!(all.len(), 12);
+
+        // Make sub 0 unavailable; a replaying reader must return empty
+        // batches for records on sub 0 ("wait to receive the same amount
+        // of rows") instead of skipping or erroring.
+        if let InputSpec::Ordered(t) = &src {
+            t.set_unavailable(0, true);
+        }
+        let mut life2 = grouped.reader(0);
+        let b = life2.read(0, 4, &ContinuationToken::initial());
+        // First recorded batch is from one of the subs; if it was sub 0,
+        // the read yields an empty batch with the *same* token.
+        if let Ok(batch) = b {
+            if batch.rowset.is_empty() {
+                assert_eq!(batch.next_token, encode_token(0));
+            }
+        }
+        if let InputSpec::Ordered(t) = &src {
+            t.set_unavailable(0, false);
+        }
+        let (replayed, _) = drain(&mut life2, 4);
+        assert_eq!(replayed, all, "replay after outage must match");
+    }
+
+    #[test]
+    fn bad_token_rejected() {
+        let (src, acc) = source(2, 2);
+        let grouped = GroupedInput::new(src, 2, acc);
+        let mut r = grouped.reader(0);
+        assert!(matches!(
+            r.read(0, 1, &ContinuationToken("junk".into())),
+            Err(QueueError::BadToken(_))
+        ));
+    }
+}

@@ -1,0 +1,112 @@
+//! The input model (§4.2): Kafka-like partitioned queues.
+//!
+//! "The input is given as a stream of rows consisting of multiple
+//! partitions. … Producers can append rows to the end of these queues and
+//! consumers can read the partitions at their own pace."
+//!
+//! A viable input source implements [`PartitionReader`] — exactly the two
+//! methods the paper specifies:
+//!
+//! * `read(begin_row_index, end_row_index, continuation_token)` → next
+//!   batch plus a token for the following position; rows get sequential
+//!   indexes starting at `begin_row_index` in the mapper's input numbering,
+//!   so the method **must** return rows in deterministic order.
+//! * `trim(row_index, continuation_token)` — mark earlier entries
+//!   committed and safe to delete; idempotent, may be applied lazily.
+//!
+//! Two sources are provided, mirroring the paper's:
+//! [`ordered_table::OrderedTable`] (absolute tablet indexes; the `…Index`
+//! arguments do the addressing) and [`logbroker::LbTopic`] (monotonic but
+//! *non-sequential* offsets; addressing must go through the token).
+
+pub mod ordered_table;
+pub mod logbroker;
+
+use crate::rows::{NameTable, UnversionedRowset};
+use std::sync::Arc;
+
+/// Opaque serializable position in an input partition. Stored verbatim in
+/// the mapper's persistent state (§4.3.2 `continuation_token` column).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ContinuationToken(pub String);
+
+impl ContinuationToken {
+    /// The "start of stream" token every mapper begins from.
+    pub fn initial() -> Self {
+        ContinuationToken(String::new())
+    }
+
+    pub fn is_initial(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// A batch returned by [`PartitionReader::read`].
+#[derive(Debug, Clone)]
+pub struct ReadBatch {
+    /// The rows, in deterministic order.
+    pub rowset: UnversionedRowset,
+    /// Token pointing at the next position in the stream.
+    pub next_token: ContinuationToken,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum QueueError {
+    #[error("partition {partition}: rows before index {first_available} were trimmed (requested {requested})")]
+    Trimmed {
+        partition: usize,
+        requested: i64,
+        first_available: i64,
+    },
+    #[error("partition {0} unavailable (injected fault)")]
+    Unavailable(usize),
+    #[error("bad continuation token: {0:?}")]
+    BadToken(String),
+}
+
+/// The paper's `IPartitionReader` (§4.2). One instance per (mapper,
+/// partition); drives all interaction with the input stream.
+pub trait PartitionReader: Send {
+    /// Read up to `end_row_index - begin_row_index` rows from the position
+    /// identified by `token`.
+    fn read(
+        &mut self,
+        begin_row_index: i64,
+        end_row_index: i64,
+        token: &ContinuationToken,
+    ) -> Result<ReadBatch, QueueError>;
+
+    /// Mark rows before `row_index` / `token` as committed; idempotent and
+    /// allowed to be asynchronous.
+    fn trim(&mut self, row_index: i64, token: &ContinuationToken) -> Result<(), QueueError>;
+}
+
+/// Schema shared by both input sources: an opaque message payload plus the
+/// producer-side write timestamp (drives the read-lag metric of fig. 5.2).
+pub fn input_name_table() -> Arc<NameTable> {
+    NameTable::new(&["payload", "write_ts_ms"])
+}
+
+/// Column index of the payload in [`input_name_table`]-shaped rows.
+pub const INPUT_COL_PAYLOAD: usize = 0;
+/// Column index of the producer write timestamp.
+pub const INPUT_COL_WRITE_TS: usize = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_token_empty() {
+        let t = ContinuationToken::initial();
+        assert!(t.is_initial());
+        assert!(!ContinuationToken("x".into()).is_initial());
+    }
+
+    #[test]
+    fn input_schema_columns() {
+        let nt = input_name_table();
+        assert_eq!(nt.id("payload"), Some(INPUT_COL_PAYLOAD));
+        assert_eq!(nt.id("write_ts_ms"), Some(INPUT_COL_WRITE_TS));
+    }
+}

@@ -1,0 +1,305 @@
+//! Ordered dynamic tables (§4.2, chapter 3).
+//!
+//! "Reading from an ordered dynamic table. It is internally divided into
+//! queue-like partitions called tablets. Each tablet is indexed from zero
+//! in an absolute fashion and can be read from and trimmed using these
+//! indexes." — so the reader addresses rows purely by the `…Index`
+//! arguments and the continuation token is a pass-through.
+//!
+//! Appends are journal-accounted as [`WriteCategory::SourceIngest`]: the
+//! input store is durable, but its writes are the WA *denominator*, not
+//! processor overhead.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::{ContinuationToken, PartitionReader, QueueError, ReadBatch};
+use crate::rows::{codec, NameTable, UnversionedRow, UnversionedRowset};
+use crate::storage::{Journal, WriteAccounting, WriteCategory};
+
+/// One queue-like partition of an ordered table.
+#[derive(Debug)]
+struct Tablet {
+    /// Absolute index of the first retained row.
+    first_index: i64,
+    rows: VecDeque<UnversionedRow>,
+    /// Injected fault: reads/writes fail while true (partition outage).
+    unavailable: bool,
+}
+
+/// An ordered dynamic table: a vector of independently trimmable tablets.
+#[derive(Debug)]
+pub struct OrderedTable {
+    name_table: Arc<NameTable>,
+    tablets: Vec<Mutex<Tablet>>,
+    journal: Arc<Journal>,
+}
+
+impl OrderedTable {
+    pub fn new(
+        name: &str,
+        name_table: Arc<NameTable>,
+        tablet_count: usize,
+        accounting: Arc<WriteAccounting>,
+    ) -> Arc<OrderedTable> {
+        Self::new_with_category(name, name_table, tablet_count, accounting, WriteCategory::SourceIngest)
+    }
+
+    /// Like [`OrderedTable::new`] but with an explicit write-accounting
+    /// category (the §6 order log is *meta-state*, not source ingest).
+    pub fn new_with_category(
+        name: &str,
+        name_table: Arc<NameTable>,
+        tablet_count: usize,
+        accounting: Arc<WriteAccounting>,
+        category: WriteCategory,
+    ) -> Arc<OrderedTable> {
+        Arc::new(OrderedTable {
+            name_table,
+            tablets: (0..tablet_count)
+                .map(|_| {
+                    Mutex::new(Tablet {
+                        first_index: 0,
+                        rows: VecDeque::new(),
+                        unavailable: false,
+                    })
+                })
+                .collect(),
+            journal: Journal::new(name, category, accounting),
+        })
+    }
+
+    pub fn tablet_count(&self) -> usize {
+        self.tablets.len()
+    }
+
+    pub fn name_table(&self) -> Arc<NameTable> {
+        self.name_table.clone()
+    }
+
+    /// Producer append; returns the absolute index of the first appended
+    /// row. Durable: bytes are journal-accounted.
+    pub fn append(&self, tablet: usize, rows: Vec<UnversionedRow>) -> Result<i64, QueueError> {
+        let encoded = codec::encode_rows(&rows);
+        let mut t = self.tablets[tablet].lock().unwrap();
+        if t.unavailable {
+            return Err(QueueError::Unavailable(tablet));
+        }
+        self.journal.append(encoded);
+        let first = t.first_index + t.rows.len() as i64;
+        t.rows.extend(rows);
+        Ok(first)
+    }
+
+    /// Absolute index one past the last appended row.
+    pub fn end_index(&self, tablet: usize) -> i64 {
+        let t = self.tablets[tablet].lock().unwrap();
+        t.first_index + t.rows.len() as i64
+    }
+
+    /// Absolute index of the first retained (untrimmed) row.
+    pub fn first_index(&self, tablet: usize) -> i64 {
+        self.tablets[tablet].lock().unwrap().first_index
+    }
+
+    /// Rows currently retained across all tablets (for backlog metrics).
+    pub fn retained_rows(&self) -> usize {
+        self.tablets
+            .iter()
+            .map(|t| t.lock().unwrap().rows.len())
+            .sum()
+    }
+
+    /// Inject or clear a partition outage (used by §5.2-style drills:
+    /// "failures of individual partitions").
+    pub fn set_unavailable(&self, tablet: usize, unavailable: bool) {
+        self.tablets[tablet].lock().unwrap().unavailable = unavailable;
+    }
+
+    /// Public indexed read over one tablet (used by the §6 order log).
+    pub fn read_tablet(
+        &self,
+        tablet: usize,
+        begin: i64,
+        end: i64,
+    ) -> Result<Vec<UnversionedRow>, QueueError> {
+        self.read(tablet, begin, end)
+    }
+
+    /// Public idempotent trim of one tablet.
+    pub fn trim_tablet(&self, tablet: usize, row_index: i64) -> Result<(), QueueError> {
+        self.trim(tablet, row_index)
+    }
+
+    fn read(&self, tablet: usize, begin: i64, end: i64) -> Result<Vec<UnversionedRow>, QueueError> {
+        let t = self.tablets[tablet].lock().unwrap();
+        if t.unavailable {
+            return Err(QueueError::Unavailable(tablet));
+        }
+        if begin < t.first_index {
+            return Err(QueueError::Trimmed {
+                partition: tablet,
+                requested: begin,
+                first_available: t.first_index,
+            });
+        }
+        let avail_end = t.first_index + t.rows.len() as i64;
+        let end = end.min(avail_end);
+        if begin >= end {
+            return Ok(Vec::new());
+        }
+        let lo = (begin - t.first_index) as usize;
+        let hi = (end - t.first_index) as usize;
+        Ok(t.rows.range(lo..hi).cloned().collect())
+    }
+
+    fn trim(&self, tablet: usize, row_index: i64) -> Result<(), QueueError> {
+        let mut t = self.tablets[tablet].lock().unwrap();
+        if t.unavailable {
+            return Err(QueueError::Unavailable(tablet));
+        }
+        // Idempotent: indexes at or below first_index are no-ops.
+        while t.first_index < row_index && !t.rows.is_empty() {
+            t.rows.pop_front();
+            t.first_index += 1;
+        }
+        Ok(())
+    }
+
+    /// Reader over a single tablet.
+    pub fn reader(self: &Arc<Self>, tablet: usize) -> OrderedTableReader {
+        OrderedTableReader {
+            table: self.clone(),
+            tablet,
+        }
+    }
+}
+
+/// [`PartitionReader`] over one tablet: pure index addressing, token is a
+/// pass-through (always returned as-is).
+pub struct OrderedTableReader {
+    table: Arc<OrderedTable>,
+    tablet: usize,
+}
+
+impl PartitionReader for OrderedTableReader {
+    fn read(
+        &mut self,
+        begin_row_index: i64,
+        end_row_index: i64,
+        token: &ContinuationToken,
+    ) -> Result<ReadBatch, QueueError> {
+        let rows = self.table.read(self.tablet, begin_row_index, end_row_index)?;
+        Ok(ReadBatch {
+            rowset: UnversionedRowset::new(self.table.name_table(), rows),
+            next_token: token.clone(),
+        })
+    }
+
+    fn trim(&mut self, row_index: i64, _token: &ContinuationToken) -> Result<(), QueueError> {
+        self.table.trim(self.tablet, row_index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::input_name_table;
+    use crate::row;
+
+    fn table(tablets: usize) -> Arc<OrderedTable> {
+        OrderedTable::new("input", input_name_table(), tablets, WriteAccounting::new())
+    }
+
+    fn rows(n: usize, base: i64) -> Vec<UnversionedRow> {
+        (0..n).map(|i| row![format!("msg{}", base + i as i64), base + i as i64]).collect()
+    }
+
+    #[test]
+    fn append_then_read() {
+        let t = table(2);
+        assert_eq!(t.append(0, rows(3, 0)).unwrap(), 0);
+        assert_eq!(t.append(0, rows(2, 3)).unwrap(), 3);
+        assert_eq!(t.end_index(0), 5);
+        assert_eq!(t.end_index(1), 0);
+
+        let mut r = t.reader(0);
+        let batch = r.read(1, 4, &ContinuationToken::initial()).unwrap();
+        assert_eq!(batch.rowset.len(), 3);
+        assert_eq!(batch.rowset.cell(0, "payload").unwrap().as_str(), Some("msg1"));
+    }
+
+    #[test]
+    fn read_past_end_truncates() {
+        let t = table(1);
+        t.append(0, rows(2, 0)).unwrap();
+        let mut r = t.reader(0);
+        let b = r.read(0, 100, &ContinuationToken::initial()).unwrap();
+        assert_eq!(b.rowset.len(), 2);
+        let empty = r.read(2, 100, &ContinuationToken::initial()).unwrap();
+        assert!(empty.rowset.is_empty());
+    }
+
+    #[test]
+    fn trim_is_idempotent_and_guards_reads() {
+        let t = table(1);
+        t.append(0, rows(10, 0)).unwrap();
+        let mut r = t.reader(0);
+        r.trim(4, &ContinuationToken::initial()).unwrap();
+        r.trim(4, &ContinuationToken::initial()).unwrap();
+        r.trim(2, &ContinuationToken::initial()).unwrap(); // lower: no-op
+        assert_eq!(t.first_index(0), 4);
+        assert_eq!(t.retained_rows(), 6);
+        // Reading trimmed rows errors.
+        let err = r.read(0, 5, &ContinuationToken::initial());
+        assert!(matches!(err, Err(QueueError::Trimmed { first_available: 4, .. })));
+        // Reading retained rows still fine.
+        assert_eq!(r.read(4, 8, &ContinuationToken::initial()).unwrap().rowset.len(), 4);
+    }
+
+    #[test]
+    fn trim_past_end_clamps() {
+        let t = table(1);
+        t.append(0, rows(3, 0)).unwrap();
+        t.trim(0, 100).unwrap();
+        assert_eq!(t.first_index(0), 3);
+        assert_eq!(t.retained_rows(), 0);
+        // Appends continue the absolute numbering.
+        assert_eq!(t.append(0, rows(1, 3)).unwrap(), 3);
+    }
+
+    #[test]
+    fn appends_are_accounted_as_source_ingest() {
+        let acc = WriteAccounting::new();
+        let t = OrderedTable::new("in", input_name_table(), 1, acc.clone());
+        t.append(0, rows(5, 0)).unwrap();
+        assert!(acc.bytes(WriteCategory::SourceIngest) > 0);
+        assert_eq!(acc.bytes(WriteCategory::MapperMeta), 0);
+    }
+
+    #[test]
+    fn unavailability_fails_ops() {
+        let t = table(1);
+        t.append(0, rows(1, 0)).unwrap();
+        t.set_unavailable(0, true);
+        let mut r = t.reader(0);
+        assert!(matches!(
+            r.read(0, 1, &ContinuationToken::initial()),
+            Err(QueueError::Unavailable(0))
+        ));
+        assert!(t.append(0, rows(1, 1)).is_err());
+        t.set_unavailable(0, false);
+        assert_eq!(r.read(0, 1, &ContinuationToken::initial()).unwrap().rowset.len(), 1);
+    }
+
+    #[test]
+    fn tablets_independent() {
+        let t = table(3);
+        t.append(0, rows(5, 0)).unwrap();
+        t.append(2, rows(7, 0)).unwrap();
+        t.trim(0, 5).unwrap();
+        assert_eq!(t.first_index(0), 5);
+        assert_eq!(t.first_index(2), 0);
+        assert_eq!(t.retained_rows(), 7);
+    }
+}

@@ -1,0 +1,418 @@
+//! Binary wire format for rows and rowsets.
+//!
+//! Used for (a) `GetRows` RPC attachments (§4.3.4: rows "are returned as
+//! attachments in a binary format"), (b) journal/state byte accounting —
+//! the write-amplification meter counts *encoded* bytes, and (c) spill
+//! chunks (§6).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! rowset  := u32 magic | u16 version | name_table | u32 row_count | row*
+//! name_table := u16 count | (u16 len | bytes)*
+//! row     := u16 value_count | value*
+//! value   := u8 tag | payload
+//! ```
+//!
+//! Varint is deliberately not used: fixed-width ints make the encoder ~2×
+//! faster and the shuffle payload is dominated by strings anyway (profiled
+//! in EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+use super::name_table::NameTable;
+use super::row::UnversionedRow;
+use super::rowset::UnversionedRowset;
+use super::value::Value;
+
+const MAGIC: u32 = 0x59_54_52_53; // "YTRS"
+const VERSION: u16 = 2;
+
+const TAG_NULL: u8 = 0;
+const TAG_BOOL_FALSE: u8 = 1;
+const TAG_BOOL_TRUE: u8 = 2;
+const TAG_INT64: u8 = 3;
+const TAG_UINT64: u8 = 4;
+const TAG_DOUBLE: u8 = 5;
+const TAG_STR: u8 = 6;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CodecError {
+    #[error("codec: truncated input at byte {0}")]
+    Truncated(usize),
+    #[error("codec: bad magic {0:#x}")]
+    BadMagic(u32),
+    #[error("codec: unsupported version {0}")]
+    BadVersion(u16),
+    #[error("codec: unknown value tag {0}")]
+    BadTag(u8),
+    #[error("codec: invalid utf-8 in string")]
+    BadUtf8,
+}
+
+/// Streaming encoder over a byte buffer.
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Encoder { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Encoder {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    #[inline]
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn value(&mut self, v: &Value) {
+        match v {
+            Value::Null => self.u8(TAG_NULL),
+            Value::Bool(false) => self.u8(TAG_BOOL_FALSE),
+            Value::Bool(true) => self.u8(TAG_BOOL_TRUE),
+            Value::Int64(x) => {
+                self.u8(TAG_INT64);
+                self.u64(*x as u64);
+            }
+            Value::Uint64(x) => {
+                self.u8(TAG_UINT64);
+                self.u64(*x);
+            }
+            Value::Double(x) => {
+                self.u8(TAG_DOUBLE);
+                self.u64(x.to_bits());
+            }
+            Value::Str(s) => {
+                self.u8(TAG_STR);
+                self.u32(s.len() as u32);
+                self.bytes(s.as_bytes());
+            }
+        }
+    }
+
+    pub fn row(&mut self, row: &UnversionedRow) {
+        self.u16(row.len() as u16);
+        for v in row.values() {
+            self.value(v);
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Encode a full rowset (name table + rows).
+pub fn encode_rowset(rs: &UnversionedRowset) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(16 + rs.byte_size() * 2);
+    e.u32(MAGIC);
+    e.u16(VERSION);
+    e.u16(rs.name_table().len() as u16);
+    for name in rs.name_table().names() {
+        e.u16(name.len() as u16);
+        e.bytes(name.as_bytes());
+    }
+    e.u32(rs.len() as u32);
+    for row in rs.rows() {
+        e.row(row);
+    }
+    e.finish()
+}
+
+/// Encode a rowset directly from borrowed rows, without building an
+/// intermediate `UnversionedRowset` (§Perf: the mapper's GetRows serving
+/// path was cloning every served value just to encode it).
+pub fn encode_rowset_refs(nt: &NameTable, rows: &[&UnversionedRow]) -> Vec<u8> {
+    let payload: usize = rows.iter().map(|r| r.byte_size()).sum();
+    let mut e = Encoder::with_capacity(16 + payload * 2);
+    e.u32(MAGIC);
+    e.u16(VERSION);
+    e.u16(nt.len() as u16);
+    for name in nt.names() {
+        e.u16(name.len() as u16);
+        e.bytes(name.as_bytes());
+    }
+    e.u32(rows.len() as u32);
+    for row in rows {
+        e.row(row);
+    }
+    e.finish()
+}
+
+/// Encode only the rows (for journal accounting where the name table is
+/// amortized away).
+pub fn encode_rows(rows: &[UnversionedRow]) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.u32(rows.len() as u32);
+    for r in rows {
+        e.row(r);
+    }
+    e.finish()
+}
+
+struct Decoder<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Decoder<'a> {
+    fn need(&self, n: usize) -> Result<(), CodecError> {
+        if self.i + n > self.b.len() {
+            Err(CodecError::Truncated(self.i))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        self.need(1)?;
+        let v = self.b[self.i];
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16, CodecError> {
+        self.need(2)?;
+        let v = u16::from_le_bytes(self.b[self.i..self.i + 2].try_into().unwrap());
+        self.i += 2;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap());
+        self.i += 8;
+        Ok(v)
+    }
+
+    fn str(&mut self, n: usize) -> Result<String, CodecError> {
+        self.need(n)?;
+        let s = std::str::from_utf8(&self.b[self.i..self.i + n])
+            .map_err(|_| CodecError::BadUtf8)?
+            .to_string();
+        self.i += n;
+        Ok(s)
+    }
+
+    fn value(&mut self) -> Result<Value, CodecError> {
+        Ok(match self.u8()? {
+            TAG_NULL => Value::Null,
+            TAG_BOOL_FALSE => Value::Bool(false),
+            TAG_BOOL_TRUE => Value::Bool(true),
+            TAG_INT64 => Value::Int64(self.u64()? as i64),
+            TAG_UINT64 => Value::Uint64(self.u64()?),
+            TAG_DOUBLE => Value::Double(f64::from_bits(self.u64()?)),
+            TAG_STR => {
+                let n = self.u32()? as usize;
+                Value::Str(self.str(n)?)
+            }
+            t => return Err(CodecError::BadTag(t)),
+        })
+    }
+
+    fn row(&mut self) -> Result<UnversionedRow, CodecError> {
+        let n = self.u16()? as usize;
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            vals.push(self.value()?);
+        }
+        Ok(UnversionedRow::new(vals))
+    }
+}
+
+/// Decode a rowset produced by [`encode_rowset`].
+pub fn decode_rowset(bytes: &[u8]) -> Result<UnversionedRowset, CodecError> {
+    let mut d = Decoder { b: bytes, i: 0 };
+    let magic = d.u32()?;
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    let version = d.u16()?;
+    if version != VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let ncols = d.u16()? as usize;
+    let mut names = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        let n = d.u16()? as usize;
+        names.push(d.str(n)?);
+    }
+    let nt: Arc<NameTable> = NameTable::from_names(names);
+    let nrows = d.u32()? as usize;
+    let mut rows = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        rows.push(d.row()?);
+    }
+    if d.i != bytes.len() {
+        return Err(CodecError::Truncated(d.i));
+    }
+    Ok(UnversionedRowset::new(nt, rows))
+}
+
+/// Decode rows produced by [`encode_rows`].
+pub fn decode_rows(bytes: &[u8]) -> Result<Vec<UnversionedRow>, CodecError> {
+    let mut d = Decoder { b: bytes, i: 0 };
+    let n = d.u32()? as usize;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        rows.push(d.row()?);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::rows::rowset::RowsetBuilder;
+    use crate::util::miniprop;
+    use crate::util::prng::Prng;
+
+    fn sample() -> UnversionedRowset {
+        let nt = NameTable::new(&["user", "cluster", "ts", "payload", "flag"]);
+        let mut b = RowsetBuilder::new(nt);
+        b.push(row!["alice", "hahn", 123i64, 42.5, true]);
+        b.push(row!["bob", "freud", -7i64, 0.0, false]);
+        b.push(UnversionedRow::new(vec![
+            Value::Null,
+            Value::Uint64(u64::MAX),
+            Value::Int64(i64::MIN),
+            Value::Double(f64::NAN),
+            Value::Null,
+        ]));
+        b.build()
+    }
+
+    #[test]
+    fn rowset_roundtrip() {
+        let rs = sample();
+        let bytes = encode_rowset(&rs);
+        let back = decode_rowset(&bytes).unwrap();
+        assert_eq!(back.name_table().names(), rs.name_table().names());
+        assert_eq!(back.len(), rs.len());
+        // NaN != NaN under PartialEq, so compare via total order per value.
+        for (a, b) in rs.rows().iter().zip(back.rows()) {
+            assert_eq!(a.cmp(b), std::cmp::Ordering::Equal);
+        }
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let rows = vec![row![1i64, "x"], row![2i64, "y"]];
+        let bytes = encode_rows(&rows);
+        assert_eq!(decode_rows(&bytes).unwrap(), rows);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let rs = sample();
+        let bytes = encode_rowset(&rs);
+        assert!(matches!(
+            decode_rowset(&bytes[..bytes.len() - 1]),
+            Err(CodecError::Truncated(_))
+        ));
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(matches!(decode_rowset(&bad_magic), Err(CodecError::BadMagic(_))));
+        let mut bad_ver = bytes.clone();
+        bad_ver[4] = 0xEE;
+        assert!(matches!(decode_rowset(&bad_ver), Err(CodecError::BadVersion(_))));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let rs = sample();
+        let mut bytes = encode_rowset(&rs);
+        bytes.push(0);
+        assert!(matches!(decode_rowset(&bytes), Err(CodecError::Truncated(_))));
+    }
+
+    #[test]
+    fn empty_rowset_roundtrip() {
+        let nt = NameTable::new(&["a"]);
+        let rs = UnversionedRowset::empty(nt);
+        let back = decode_rowset(&encode_rowset(&rs)).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.name_table().names(), &["a".to_string()]);
+    }
+
+    fn arbitrary_value(rng: &mut Prng) -> Value {
+        match rng.next_below(6) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Int64(rng.next_u64() as i64),
+            3 => Value::Uint64(rng.next_u64()),
+            4 => Value::Double(f64::from_bits(rng.next_u64())),
+            _ => {
+                let n = rng.next_below(20) as usize;
+                Value::Str(rng.ident(n))
+            }
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_arbitrary_rowsets() {
+        miniprop::check("codec roundtrip", |rng| {
+            let ncols = rng.gen_range(1, 6) as usize;
+            let names: Vec<String> =
+                (0..ncols).map(|i| format!("c{i}_{}", rng.ident(3))).collect();
+            let nt = NameTable::from_names(names);
+            let nrows = rng.next_below(20) as usize;
+            let mut b = RowsetBuilder::new(nt);
+            for _ in 0..nrows {
+                let vals = (0..ncols).map(|_| arbitrary_value(rng)).collect();
+                b.push_values(vals);
+            }
+            let rs = b.build();
+            let back = decode_rowset(&encode_rowset(&rs))
+                .map_err(|e| format!("decode failed: {e}"))?;
+            crate::prop_assert_eq!(back.len(), rs.len());
+            for (a, b) in rs.rows().iter().zip(back.rows()) {
+                crate::prop_assert!(
+                    a.cmp(b) == std::cmp::Ordering::Equal,
+                    "row mismatch: {a:?} vs {b:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

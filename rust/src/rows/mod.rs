@@ -1,0 +1,25 @@
+//! The schematized key-value row model (§4.1).
+//!
+//! "The whole system operates within a schematized key-value row-based
+//! data model, encapsulated in the UnversionedRow class. It is stored as an
+//! array of strictly-typed data values, with a separate NameTable object
+//! used to map the array's indexes to the corresponding key strings. An
+//! UnversionedRowset object stores an array of UnversionedRow objects
+//! along with a NameTable instance."
+//!
+//! [`codec`] provides the binary wire format used for RPC attachments
+//! (§4.3.4: "the actual rows are returned as attachments in a binary
+//! format") and for journal byte accounting.
+
+pub mod value;
+pub mod name_table;
+pub mod schema;
+pub mod row;
+pub mod rowset;
+pub mod codec;
+
+pub use name_table::NameTable;
+pub use row::UnversionedRow;
+pub use rowset::{RowsetBuilder, UnversionedRowset};
+pub use schema::{ColumnSchema, ColumnType, TableSchema};
+pub use value::Value;

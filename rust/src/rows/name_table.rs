@@ -1,0 +1,78 @@
+//! Column-name ↔ column-id mapping.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Maps row array indexes to column-name strings (§4.1). Immutable once
+/// built and shared by `Arc` between every row of a rowset, mirroring the
+//  original system where rows carry ids only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NameTable {
+    names: Vec<String>,
+    ids: HashMap<String, usize>,
+}
+
+impl NameTable {
+    pub fn new(names: &[&str]) -> Arc<NameTable> {
+        let names: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+        Self::from_names(names)
+    }
+
+    pub fn from_names(names: Vec<String>) -> Arc<NameTable> {
+        let mut ids = HashMap::with_capacity(names.len());
+        for (i, n) in names.iter().enumerate() {
+            let prev = ids.insert(n.clone(), i);
+            assert!(prev.is_none(), "duplicate column name '{n}'");
+        }
+        Arc::new(NameTable { names, ids })
+    }
+
+    /// Column id for `name`, if registered.
+    pub fn id(&self, name: &str) -> Option<usize> {
+        self.ids.get(name).copied()
+    }
+
+    /// Column name for `id`.
+    pub fn name(&self, id: usize) -> &str {
+        &self.names[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_both_ways() {
+        let nt = NameTable::new(&["user", "cluster", "ts"]);
+        assert_eq!(nt.id("user"), Some(0));
+        assert_eq!(nt.id("ts"), Some(2));
+        assert_eq!(nt.id("missing"), None);
+        assert_eq!(nt.name(1), "cluster");
+        assert_eq!(nt.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate column name")]
+    fn duplicate_names_rejected() {
+        NameTable::new(&["a", "a"]);
+    }
+
+    #[test]
+    fn empty_table() {
+        let nt = NameTable::new(&[]);
+        assert!(nt.is_empty());
+    }
+}

@@ -1,0 +1,99 @@
+//! A single schematized row.
+
+use super::value::Value;
+
+/// An array of strictly-typed values; column meaning is given by the
+/// enclosing rowset's [`super::NameTable`] (§4.1).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct UnversionedRow {
+    values: Vec<Value>,
+}
+
+impl UnversionedRow {
+    pub fn new(values: Vec<Value>) -> Self {
+        UnversionedRow { values }
+    }
+
+    pub fn values(&self) -> &[Value] {
+        &self.values
+    }
+
+    pub fn into_values(self) -> Vec<Value> {
+        self.values
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&Value> {
+        self.values.get(idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Approximate in-memory/wire footprint; sum of cell sizes plus a
+    /// fixed per-row header. Drives the memory semaphore and MB/s metrics.
+    pub fn byte_size(&self) -> usize {
+        8 + self.values.iter().map(Value::byte_size).sum::<usize>()
+    }
+}
+
+impl From<Vec<Value>> for UnversionedRow {
+    fn from(values: Vec<Value>) -> Self {
+        UnversionedRow::new(values)
+    }
+}
+
+/// Build a row from heterogeneous literals: `row![1i64, "s", 2.5]`.
+#[macro_export]
+macro_rules! row {
+    ($($v:expr),* $(,)?) => {
+        $crate::rows::UnversionedRow::new(vec![$($crate::rows::Value::from($v)),*])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let r = UnversionedRow::new(vec![Value::Int64(1), Value::Str("x".into())]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(0), Some(&Value::Int64(1)));
+        assert_eq!(r.get(5), None);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn byte_size_includes_header() {
+        let r = UnversionedRow::new(vec![Value::Int64(1)]);
+        assert_eq!(r.byte_size(), 8 + 8);
+    }
+
+    #[test]
+    fn row_macro() {
+        let r = row![1i64, "hello", 2.5, true];
+        assert_eq!(
+            r.values(),
+            &[
+                Value::Int64(1),
+                Value::Str("hello".into()),
+                Value::Double(2.5),
+                Value::Bool(true)
+            ]
+        );
+    }
+
+    #[test]
+    fn rows_order_lexicographically() {
+        let a = row![1i64, "a"];
+        let b = row![1i64, "b"];
+        let c = row![2i64];
+        assert!(a < b);
+        assert!(b < c);
+    }
+}

@@ -1,0 +1,228 @@
+//! Rowsets: the batch unit flowing through the whole system.
+
+use std::sync::Arc;
+
+use super::name_table::NameTable;
+use super::row::UnversionedRow;
+use super::value::Value;
+
+/// A batch of rows sharing one [`NameTable`] (§4.1). This is the unit that
+/// mappers read, map, buffer in window entries, ship to reducers and that
+/// user `Reduce` implementations receive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnversionedRowset {
+    name_table: Arc<NameTable>,
+    rows: Vec<UnversionedRow>,
+}
+
+impl UnversionedRowset {
+    pub fn new(name_table: Arc<NameTable>, rows: Vec<UnversionedRow>) -> Self {
+        UnversionedRowset { name_table, rows }
+    }
+
+    pub fn empty(name_table: Arc<NameTable>) -> Self {
+        UnversionedRowset {
+            name_table,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn name_table(&self) -> &Arc<NameTable> {
+        &self.name_table
+    }
+
+    pub fn rows(&self) -> &[UnversionedRow] {
+        &self.rows
+    }
+
+    pub fn into_rows(self) -> Vec<UnversionedRow> {
+        self.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Approximate payload footprint of all rows.
+    pub fn byte_size(&self) -> usize {
+        self.rows.iter().map(UnversionedRow::byte_size).sum()
+    }
+
+    /// Cell at (row, column-name); `None` if the column is unknown.
+    pub fn cell(&self, row: usize, column: &str) -> Option<&Value> {
+        let id = self.name_table.id(column)?;
+        self.rows.get(row)?.get(id)
+    }
+
+    /// Iterator over one column by name.
+    pub fn column<'a>(&'a self, column: &str) -> Option<impl Iterator<Item = &'a Value>> {
+        let id = self.name_table.id(column)?;
+        Some(self.rows.iter().map(move |r| &r.values()[id]))
+    }
+
+    /// Select a subset of rows by index, sharing the name table.
+    pub fn select(&self, indexes: &[usize]) -> UnversionedRowset {
+        UnversionedRowset {
+            name_table: self.name_table.clone(),
+            rows: indexes.iter().map(|&i| self.rows[i].clone()).collect(),
+        }
+    }
+
+    /// Concatenate rowsets that share an identical name table. Used by the
+    /// reducer main procedure (§4.4.2 step 5: "run the user-provided Reduce
+    /// function on all of these rows combined into one batch").
+    pub fn concat(parts: &[UnversionedRowset]) -> Option<UnversionedRowset> {
+        let first = parts.iter().find(|p| !p.is_empty())?;
+        let nt = first.name_table.clone();
+        let mut rows = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+        for p in parts {
+            if !p.is_empty() {
+                assert_eq!(
+                    p.name_table.names(),
+                    nt.names(),
+                    "concat requires identical name tables"
+                );
+            }
+            rows.extend(p.rows.iter().cloned());
+        }
+        Some(UnversionedRowset {
+            name_table: nt,
+            rows,
+        })
+    }
+
+    /// Consuming concat: moves rows out of `parts` instead of cloning.
+    /// The reducer hot path uses this right after decoding attachments
+    /// (§Perf: saves one full copy of every shuffled value per cycle).
+    pub fn concat_owned(parts: Vec<UnversionedRowset>) -> Option<UnversionedRowset> {
+        let nt = parts.iter().find(|p| !p.is_empty())?.name_table.clone();
+        let mut rows = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+        for p in parts {
+            if !p.is_empty() {
+                assert_eq!(
+                    p.name_table.names(),
+                    nt.names(),
+                    "concat requires identical name tables"
+                );
+                rows.extend(p.rows);
+            }
+        }
+        Some(UnversionedRowset {
+            name_table: nt,
+            rows,
+        })
+    }
+}
+
+/// Incremental builder.
+#[derive(Debug)]
+pub struct RowsetBuilder {
+    name_table: Arc<NameTable>,
+    rows: Vec<UnversionedRow>,
+}
+
+impl RowsetBuilder {
+    pub fn new(name_table: Arc<NameTable>) -> Self {
+        RowsetBuilder {
+            name_table,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: UnversionedRow) -> &mut Self {
+        debug_assert_eq!(
+            row.len(),
+            self.name_table.len(),
+            "row width must match name table"
+        );
+        self.rows.push(row);
+        self
+    }
+
+    pub fn push_values(&mut self, values: Vec<Value>) -> &mut Self {
+        self.push(UnversionedRow::new(values))
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn build(self) -> UnversionedRowset {
+        UnversionedRowset {
+            name_table: self.name_table,
+            rows: self.rows,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    fn sample() -> UnversionedRowset {
+        let nt = NameTable::new(&["user", "count"]);
+        let mut b = RowsetBuilder::new(nt);
+        b.push(row!["alice", 1i64]);
+        b.push(row!["bob", 2i64]);
+        b.push(row!["carol", 3i64]);
+        b.build()
+    }
+
+    #[test]
+    fn builder_and_access() {
+        let rs = sample();
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs.cell(1, "user"), Some(&Value::Str("bob".into())));
+        assert_eq!(rs.cell(1, "missing"), None);
+        assert_eq!(rs.cell(10, "user"), None);
+    }
+
+    #[test]
+    fn column_iteration() {
+        let rs = sample();
+        let counts: Vec<i64> = rs
+            .column("count")
+            .unwrap()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(counts, vec![1, 2, 3]);
+        assert!(rs.column("nope").is_none());
+    }
+
+    #[test]
+    fn select_subset() {
+        let rs = sample();
+        let sub = rs.select(&[2, 0]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.cell(0, "user"), Some(&Value::Str("carol".into())));
+        assert_eq!(sub.cell(1, "user"), Some(&Value::Str("alice".into())));
+    }
+
+    #[test]
+    fn concat_batches() {
+        let a = sample();
+        let b = sample();
+        let nt = a.name_table().clone();
+        let empty = UnversionedRowset::empty(nt);
+        let all = UnversionedRowset::concat(&[empty.clone(), a, b]).unwrap();
+        assert_eq!(all.len(), 6);
+        assert!(UnversionedRowset::concat(&[empty.clone(), empty]).is_none());
+    }
+
+    #[test]
+    fn byte_size_sums_rows() {
+        let rs = sample();
+        let total: usize = rs.rows().iter().map(|r| r.byte_size()).sum();
+        assert_eq!(rs.byte_size(), total);
+        assert!(total > 0);
+    }
+}

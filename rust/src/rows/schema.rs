@@ -1,0 +1,246 @@
+//! Table schemas: typed columns, optional key prefix (for sorted dynamic
+//! tables, chapter 3).
+
+use std::sync::Arc;
+
+use super::name_table::NameTable;
+use super::row::UnversionedRow;
+use super::value::Value;
+
+/// Column value type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ColumnType {
+    Bool,
+    Int64,
+    Uint64,
+    Double,
+    Str,
+    /// Accepts any value (used by pass-through pipelines).
+    Any,
+}
+
+impl ColumnType {
+    pub fn accepts(&self, v: &Value) -> bool {
+        matches!(
+            (self, v),
+            (ColumnType::Any, _)
+                | (_, Value::Null)
+                | (ColumnType::Bool, Value::Bool(_))
+                | (ColumnType::Int64, Value::Int64(_))
+                | (ColumnType::Uint64, Value::Uint64(_))
+                | (ColumnType::Double, Value::Double(_))
+                | (ColumnType::Str, Value::Str(_))
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ColumnType::Bool => "boolean",
+            ColumnType::Int64 => "int64",
+            ColumnType::Uint64 => "uint64",
+            ColumnType::Double => "double",
+            ColumnType::Str => "string",
+            ColumnType::Any => "any",
+        }
+    }
+}
+
+/// One column of a schema.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColumnSchema {
+    pub name: String,
+    pub ty: ColumnType,
+    /// Key columns form the sorted-table primary key (must be a prefix).
+    pub key: bool,
+}
+
+impl ColumnSchema {
+    pub fn value(name: &str, ty: ColumnType) -> Self {
+        ColumnSchema {
+            name: name.to_string(),
+            ty,
+            key: false,
+        }
+    }
+
+    pub fn key(name: &str, ty: ColumnType) -> Self {
+        ColumnSchema {
+            name: name.to_string(),
+            ty,
+            key: true,
+        }
+    }
+}
+
+/// Full table schema. Key columns, if any, must form a prefix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TableSchema {
+    columns: Vec<ColumnSchema>,
+    key_count: usize,
+    name_table: Arc<NameTable>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SchemaError {
+    #[error("row has {got} values, schema has {want} columns")]
+    WidthMismatch { got: usize, want: usize },
+    #[error("column '{column}' expects {expected}, got {got:?}")]
+    TypeMismatch {
+        column: String,
+        expected: &'static str,
+        got: Value,
+    },
+    #[error("null in key column '{0}'")]
+    NullKey(String),
+}
+
+impl TableSchema {
+    pub fn new(columns: Vec<ColumnSchema>) -> TableSchema {
+        let key_count = columns.iter().take_while(|c| c.key).count();
+        assert!(
+            columns.iter().skip(key_count).all(|c| !c.key),
+            "key columns must form a prefix"
+        );
+        let name_table =
+            NameTable::from_names(columns.iter().map(|c| c.name.clone()).collect());
+        TableSchema {
+            columns,
+            key_count,
+            name_table,
+        }
+    }
+
+    pub fn columns(&self) -> &[ColumnSchema] {
+        &self.columns
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.key_count
+    }
+
+    pub fn name_table(&self) -> Arc<NameTable> {
+        self.name_table.clone()
+    }
+
+    pub fn width(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Validate a row against this schema.
+    pub fn validate(&self, row: &UnversionedRow) -> Result<(), SchemaError> {
+        if row.len() != self.columns.len() {
+            return Err(SchemaError::WidthMismatch {
+                got: row.len(),
+                want: self.columns.len(),
+            });
+        }
+        for (col, v) in self.columns.iter().zip(row.values()) {
+            if col.key && v.is_null() {
+                return Err(SchemaError::NullKey(col.name.clone()));
+            }
+            if !col.ty.accepts(v) {
+                return Err(SchemaError::TypeMismatch {
+                    column: col.name.clone(),
+                    expected: col.ty.name(),
+                    got: v.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the key prefix of a row (for sorted-table addressing).
+    pub fn key_of(&self, row: &UnversionedRow) -> Vec<Value> {
+        row.values()[..self.key_count].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> TableSchema {
+        TableSchema::new(vec![
+            ColumnSchema::key("user", ColumnType::Str),
+            ColumnSchema::key("cluster", ColumnType::Str),
+            ColumnSchema::value("count", ColumnType::Int64),
+            ColumnSchema::value("last_ts", ColumnType::Int64),
+        ])
+    }
+
+    #[test]
+    fn key_prefix_detected() {
+        let s = schema();
+        assert_eq!(s.key_count(), 2);
+        assert_eq!(s.width(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefix")]
+    fn non_prefix_keys_rejected() {
+        TableSchema::new(vec![
+            ColumnSchema::value("a", ColumnType::Int64),
+            ColumnSchema::key("b", ColumnType::Int64),
+        ]);
+    }
+
+    #[test]
+    fn validate_accepts_good_row() {
+        let s = schema();
+        let row = UnversionedRow::new(vec![
+            "alice".into(),
+            "hahn".into(),
+            Value::Int64(3),
+            Value::Int64(1234),
+        ]);
+        assert_eq!(s.validate(&row), Ok(()));
+        assert_eq!(s.key_of(&row), vec![Value::from("alice"), Value::from("hahn")]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_rows() {
+        let s = schema();
+        let narrow = UnversionedRow::new(vec!["a".into()]);
+        assert!(matches!(s.validate(&narrow), Err(SchemaError::WidthMismatch { .. })));
+
+        let wrong_ty = UnversionedRow::new(vec![
+            "a".into(),
+            "b".into(),
+            Value::Double(1.0),
+            Value::Int64(0),
+        ]);
+        assert!(matches!(s.validate(&wrong_ty), Err(SchemaError::TypeMismatch { .. })));
+
+        let null_key = UnversionedRow::new(vec![
+            Value::Null,
+            "b".into(),
+            Value::Int64(0),
+            Value::Int64(0),
+        ]);
+        assert!(matches!(s.validate(&null_key), Err(SchemaError::NullKey(_))));
+    }
+
+    #[test]
+    fn nullable_value_columns() {
+        let s = schema();
+        let row = UnversionedRow::new(vec![
+            "a".into(),
+            "b".into(),
+            Value::Null,
+            Value::Int64(0),
+        ]);
+        assert_eq!(s.validate(&row), Ok(()));
+    }
+
+    #[test]
+    fn any_accepts_everything() {
+        for v in [
+            Value::Null,
+            Value::Bool(true),
+            Value::Int64(1),
+            Value::Str("x".into()),
+        ] {
+            assert!(ColumnType::Any.accepts(&v));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Network fault plans: drop, delay, duplicate, partition.
+//!
+//! "We consider that any worker can fail spontaneously. Moreover, …
+//! we can temporarily end up with multiple instances of the same mapper or
+//! reducer if network partitions occur, producing a so-called split-brain
+//! scenario." (§4.6) — this module is where those conditions are
+//! manufactured, deterministically, from a seed.
+
+use std::collections::HashSet;
+
+/// Mutable description of the network's current misbehaviour.
+#[derive(Debug, Default, Clone)]
+pub struct FaultPlan {
+    /// Probability a call is dropped (caller sees a timeout).
+    pub drop_prob: f64,
+    /// Probability a delivered call is *duplicated* (handler runs twice;
+    /// the caller sees the first response). At-least-once networks do
+    /// this; exactly-once processing must survive it.
+    pub dup_prob: f64,
+    /// Uniform artificial latency range, simulated milliseconds.
+    pub delay_ms: (u64, u64),
+    /// Severed directed links.
+    cut_links: HashSet<(String, String)>,
+    /// Fully isolated nodes (no traffic in or out).
+    isolated: HashSet<String>,
+}
+
+impl FaultPlan {
+    pub fn healthy() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Sever both directions between two addresses.
+    pub fn partition(&mut self, a: &str, b: &str) {
+        self.cut_links.insert((a.to_string(), b.to_string()));
+        self.cut_links.insert((b.to_string(), a.to_string()));
+    }
+
+    /// Restore both directions between two addresses.
+    pub fn heal(&mut self, a: &str, b: &str) {
+        self.cut_links.remove(&(a.to_string(), b.to_string()));
+        self.cut_links.remove(&(b.to_string(), a.to_string()));
+    }
+
+    /// Cut a node off from everyone.
+    pub fn isolate(&mut self, node: &str) {
+        self.isolated.insert(node.to_string());
+    }
+
+    pub fn rejoin(&mut self, node: &str) {
+        self.isolated.remove(node);
+    }
+
+    /// Clear everything back to a healthy network.
+    pub fn heal_all(&mut self) {
+        *self = FaultPlan::default();
+    }
+
+    /// Is the (src → dst) path currently severed?
+    pub fn is_cut(&self, src: &str, dst: &str) -> bool {
+        self.isolated.contains(src)
+            || self.isolated.contains(dst)
+            || self.cut_links.contains(&(src.to_string(), dst.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_plan_cuts_nothing() {
+        let p = FaultPlan::healthy();
+        assert!(!p.is_cut("a", "b"));
+        assert_eq!(p.drop_prob, 0.0);
+    }
+
+    #[test]
+    fn partition_and_heal_symmetric() {
+        let mut p = FaultPlan::healthy();
+        p.partition("a", "b");
+        assert!(p.is_cut("a", "b"));
+        assert!(p.is_cut("b", "a"));
+        assert!(!p.is_cut("a", "c"));
+        p.heal("b", "a");
+        assert!(!p.is_cut("a", "b"));
+    }
+
+    #[test]
+    fn isolation_blocks_all_traffic() {
+        let mut p = FaultPlan::healthy();
+        p.isolate("m0");
+        assert!(p.is_cut("m0", "r1"));
+        assert!(p.is_cut("r1", "m0"));
+        assert!(!p.is_cut("r1", "r2"));
+        p.rejoin("m0");
+        assert!(!p.is_cut("m0", "r1"));
+    }
+
+    #[test]
+    fn heal_all_resets() {
+        let mut p = FaultPlan::healthy();
+        p.drop_prob = 0.5;
+        p.partition("a", "b");
+        p.isolate("c");
+        p.heal_all();
+        assert!(!p.is_cut("a", "b"));
+        assert!(!p.is_cut("c", "a"));
+        assert_eq!(p.drop_prob, 0.0);
+    }
+}

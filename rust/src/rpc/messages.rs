@@ -1,0 +1,122 @@
+//! RPC wire messages.
+//!
+//! `TReqGetRows` / `TRspGetRows` follow §4.3.4:
+//!
+//! ```protobuf
+//! message TReqGetRows {
+//!   optional int64 count = 1;
+//!   optional int64 reducer_index = 2;
+//!   optional int64 committed_row_index = 3;
+//!   optional string mapper_id = 4;
+//! }
+//! message TRspGetRows {
+//!   optional int64 row_count = 1;
+//!   optional int64 last_shuffle_row_index = 2;
+//! }
+//! ```
+//!
+//! "The actual rows are returned as attachments in a binary format" — the
+//! attachment carries a [`crate::rows::codec`]-encoded rowset.
+
+/// Reducer → mapper row pull (§4.3.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReqGetRows {
+    /// How many of the reducer's assigned rows to return (a hint; the
+    /// mapper may return fewer, or zero).
+    pub count: i64,
+    /// Index of the requesting reducer.
+    pub reducer_index: i64,
+    /// Shuffle index of the last row this reducer successfully processed
+    /// and committed; everything at or below is acknowledged.
+    pub committed_row_index: i64,
+    /// GUID the reducer believes it is talking to; a mismatch (stale
+    /// discovery) makes the mapper reject the call.
+    pub mapper_id: String,
+}
+
+/// Mapper → reducer response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RspGetRows {
+    /// Number of rows in the attachment.
+    pub row_count: i64,
+    /// Shuffle index of the *last* returned row. Needed because rows
+    /// assigned to one reducer do not have sequential shuffle indexes.
+    pub last_shuffle_row_index: i64,
+    /// codec-encoded rowset ([`crate::rows::codec::encode_rowset`]).
+    pub attachment: Vec<u8>,
+}
+
+impl RspGetRows {
+    /// An empty response (no rows available / nothing new).
+    pub fn empty() -> RspGetRows {
+        RspGetRows {
+            row_count: 0,
+            last_shuffle_row_index: -1,
+            attachment: Vec::new(),
+        }
+    }
+}
+
+/// All request kinds carried by the simulated bus.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    GetRows(ReqGetRows),
+    /// Liveness probe (controller health checks).
+    Ping,
+}
+
+/// All response kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    GetRows(RspGetRows),
+    Pong,
+}
+
+impl Request {
+    /// Approximate wire size (for network metrics).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Request::GetRows(r) => 8 * 3 + r.mapper_id.len(),
+            Request::Ping => 1,
+        }
+    }
+}
+
+impl Response {
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Response::GetRows(r) => 16 + r.attachment.len(),
+            Response::Pong => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_response_shape() {
+        let r = RspGetRows::empty();
+        assert_eq!(r.row_count, 0);
+        assert_eq!(r.last_shuffle_row_index, -1);
+        assert!(r.attachment.is_empty());
+    }
+
+    #[test]
+    fn wire_sizes_positive() {
+        let req = Request::GetRows(ReqGetRows {
+            count: 10,
+            reducer_index: 1,
+            committed_row_index: -1,
+            mapper_id: "a-b-c-d".into(),
+        });
+        assert!(req.wire_bytes() > 24);
+        let rsp = Response::GetRows(RspGetRows {
+            row_count: 1,
+            last_shuffle_row_index: 0,
+            attachment: vec![0; 100],
+        });
+        assert_eq!(rsp.wire_bytes(), 116);
+    }
+}

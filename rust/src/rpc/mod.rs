@@ -1,0 +1,17 @@
+//! In-process RPC with fault injection.
+//!
+//! Reducers pull rows from mappers with `GetRows` calls (§4.3.4); the wire
+//! messages in [`messages`] mirror the paper's protobuf schema field for
+//! field. [`transport::RpcNet`] is the simulated network: services
+//! register under string addresses (the ones workers publish in
+//! discovery), and every call passes through a [`fault::FaultPlan`] that
+//! can drop, delay, duplicate or partition traffic — the raw material for
+//! the §4.6 split-brain and failure drills.
+
+pub mod messages;
+pub mod fault;
+pub mod transport;
+
+pub use fault::FaultPlan;
+pub use messages::{ReqGetRows, Request, Response, RspGetRows};
+pub use transport::{RpcError, RpcNet, RpcService};

@@ -1,0 +1,301 @@
+//! The simulated bus: address registry + fault-filtered synchronous calls.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::fault::FaultPlan;
+use super::messages::{Request, Response};
+use crate::util::{Clock, Prng};
+
+/// A service mounted at an address. Handlers run on the caller's thread
+/// (the in-process analogue of a synchronous RPC).
+pub trait RpcService: Send + Sync {
+    fn handle(&self, req: Request) -> Result<Response, String>;
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RpcError {
+    #[error("no service at '{0}' (not registered or shut down)")]
+    NoSuchService(String),
+    #[error("rpc timeout from '{src}' to '{dst}' (dropped by fault plan)")]
+    Timeout { src: String, dst: String },
+    #[error("network partition between '{src}' and '{dst}'")]
+    Partitioned { src: String, dst: String },
+    #[error("handler error: {0}")]
+    Handler(String),
+}
+
+/// Per-net call statistics (observability; not used for control flow).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    pub calls: AtomicU64,
+    pub dropped: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub partition_rejects: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub bytes_received: AtomicU64,
+}
+
+/// The in-process network fabric shared by all simulated workers.
+pub struct RpcNet {
+    services: RwLock<HashMap<String, Arc<dyn RpcService>>>,
+    faults: Mutex<FaultPlan>,
+    prng: Mutex<Prng>,
+    clock: Clock,
+    pub stats: NetStats,
+}
+
+impl RpcNet {
+    pub fn new(clock: Clock, prng: Prng) -> Arc<RpcNet> {
+        Arc::new(RpcNet {
+            services: RwLock::new(HashMap::new()),
+            faults: Mutex::new(FaultPlan::healthy()),
+            prng: Mutex::new(prng),
+            clock,
+            stats: NetStats::default(),
+        })
+    }
+
+    /// Mount a service; replaces any previous holder of the address (a
+    /// restarted worker re-registers its address).
+    pub fn register(&self, address: &str, service: Arc<dyn RpcService>) {
+        self.services
+            .write()
+            .unwrap()
+            .insert(address.to_string(), service);
+    }
+
+    /// Unmount (worker death). Subsequent calls see `NoSuchService`.
+    pub fn unregister(&self, address: &str) {
+        self.services.write().unwrap().remove(address);
+    }
+
+    pub fn is_registered(&self, address: &str) -> bool {
+        self.services.read().unwrap().contains_key(address)
+    }
+
+    /// Mutate the fault plan (drills, tests).
+    pub fn with_faults(&self, f: impl FnOnce(&mut FaultPlan)) {
+        f(&mut self.faults.lock().unwrap());
+    }
+
+    /// Perform a call from `src` to `dst`, subject to the fault plan.
+    pub fn call(&self, src: &str, dst: &str, req: Request) -> Result<Response, RpcError> {
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_sent
+            .fetch_add(req.wire_bytes() as u64, Ordering::Relaxed);
+
+        // Fault decisions are made under the prng lock for determinism.
+        let (cut, dropped, duplicated, delay_ms) = {
+            let faults = self.faults.lock().unwrap();
+            let mut prng = self.prng.lock().unwrap();
+            let cut = faults.is_cut(src, dst);
+            let dropped = !cut && faults.drop_prob > 0.0 && prng.chance(faults.drop_prob);
+            let duplicated = !cut && !dropped && faults.dup_prob > 0.0 && prng.chance(faults.dup_prob);
+            let delay_ms = if faults.delay_ms.1 > 0 {
+                prng.gen_range(faults.delay_ms.0, faults.delay_ms.1)
+            } else {
+                0
+            };
+            (cut, dropped, duplicated, delay_ms)
+        };
+
+        if cut {
+            self.stats.partition_rejects.fetch_add(1, Ordering::Relaxed);
+            return Err(RpcError::Partitioned {
+                src: src.to_string(),
+                dst: dst.to_string(),
+            });
+        }
+        if dropped {
+            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return Err(RpcError::Timeout {
+                src: src.to_string(),
+                dst: dst.to_string(),
+            });
+        }
+        if delay_ms > 0 {
+            self.clock.sleep_ms(delay_ms);
+        }
+
+        let service = self
+            .services
+            .read()
+            .unwrap()
+            .get(dst)
+            .cloned()
+            .ok_or_else(|| RpcError::NoSuchService(dst.to_string()))?;
+
+        let first = service.handle(req.clone()).map_err(RpcError::Handler);
+        if duplicated {
+            // At-least-once delivery: the handler observes the request
+            // twice; the caller gets the first outcome.
+            self.stats.duplicated.fetch_add(1, Ordering::Relaxed);
+            let _ = service.handle(req);
+        }
+        if let Ok(rsp) = &first {
+            self.stats
+                .bytes_received
+                .fetch_add(rsp.wire_bytes() as u64, Ordering::Relaxed);
+        }
+        first
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::messages::{ReqGetRows, RspGetRows};
+    use std::sync::atomic::AtomicU64;
+
+    struct Echo {
+        hits: AtomicU64,
+    }
+
+    impl RpcService for Echo {
+        fn handle(&self, req: Request) -> Result<Response, String> {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            match req {
+                Request::Ping => Ok(Response::Pong),
+                Request::GetRows(r) => Ok(Response::GetRows(RspGetRows {
+                    row_count: r.count,
+                    last_shuffle_row_index: r.committed_row_index + r.count,
+                    attachment: vec![],
+                })),
+            }
+        }
+    }
+
+    fn net() -> Arc<RpcNet> {
+        RpcNet::new(Clock::realtime(), Prng::seeded(1))
+    }
+
+    #[test]
+    fn basic_call() {
+        let n = net();
+        n.register("m0", Arc::new(Echo { hits: AtomicU64::new(0) }));
+        let rsp = n.call("r0", "m0", Request::Ping).unwrap();
+        assert_eq!(rsp, Response::Pong);
+        assert_eq!(n.stats.calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_address() {
+        let n = net();
+        assert!(matches!(
+            n.call("r0", "ghost", Request::Ping),
+            Err(RpcError::NoSuchService(_))
+        ));
+    }
+
+    #[test]
+    fn unregister_kills_service() {
+        let n = net();
+        n.register("m0", Arc::new(Echo { hits: AtomicU64::new(0) }));
+        n.unregister("m0");
+        assert!(!n.is_registered("m0"));
+        assert!(n.call("r0", "m0", Request::Ping).is_err());
+    }
+
+    #[test]
+    fn reregistration_replaces() {
+        let n = net();
+        let a = Arc::new(Echo { hits: AtomicU64::new(0) });
+        let b = Arc::new(Echo { hits: AtomicU64::new(0) });
+        n.register("m0", a.clone());
+        n.register("m0", b.clone());
+        n.call("r0", "m0", Request::Ping).unwrap();
+        assert_eq!(a.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(b.hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn partition_blocks_both_ways() {
+        let n = net();
+        n.register("m0", Arc::new(Echo { hits: AtomicU64::new(0) }));
+        n.register("r0", Arc::new(Echo { hits: AtomicU64::new(0) }));
+        n.with_faults(|f| f.partition("r0", "m0"));
+        assert!(matches!(
+            n.call("r0", "m0", Request::Ping),
+            Err(RpcError::Partitioned { .. })
+        ));
+        assert!(matches!(
+            n.call("m0", "r0", Request::Ping),
+            Err(RpcError::Partitioned { .. })
+        ));
+        n.with_faults(|f| f.heal("r0", "m0"));
+        assert!(n.call("r0", "m0", Request::Ping).is_ok());
+    }
+
+    #[test]
+    fn drops_are_probabilistic_and_deterministic() {
+        let n = net();
+        n.register("m0", Arc::new(Echo { hits: AtomicU64::new(0) }));
+        n.with_faults(|f| f.drop_prob = 0.5);
+        let outcomes: Vec<bool> = (0..100)
+            .map(|_| n.call("r0", "m0", Request::Ping).is_ok())
+            .collect();
+        let ok = outcomes.iter().filter(|b| **b).count();
+        assert!((20..=80).contains(&ok), "drop rate wildly off: {ok}/100");
+        assert!(n.stats.dropped.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn duplication_runs_handler_twice() {
+        let n = net();
+        let svc = Arc::new(Echo { hits: AtomicU64::new(0) });
+        n.register("m0", svc.clone());
+        n.with_faults(|f| f.dup_prob = 1.0);
+        let rsp = n.call("r0", "m0", Request::Ping).unwrap();
+        assert_eq!(rsp, Response::Pong);
+        assert_eq!(svc.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(n.stats.duplicated.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn getrows_roundtrip_shape() {
+        let n = net();
+        n.register("m0", Arc::new(Echo { hits: AtomicU64::new(0) }));
+        let rsp = n
+            .call(
+                "r0",
+                "m0",
+                Request::GetRows(ReqGetRows {
+                    count: 5,
+                    reducer_index: 2,
+                    committed_row_index: 10,
+                    mapper_id: "g".into(),
+                }),
+            )
+            .unwrap();
+        match rsp {
+            Response::GetRows(r) => {
+                assert_eq!(r.row_count, 5);
+                assert_eq!(r.last_shuffle_row_index, 15);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handler_errors_propagate() {
+        struct Failing;
+        impl RpcService for Failing {
+            fn handle(&self, _req: Request) -> Result<Response, String> {
+                Err("boom".into())
+            }
+        }
+        let n = net();
+        n.register("m0", Arc::new(Failing));
+        assert_eq!(
+            n.call("r0", "m0", Request::Ping),
+            Err(RpcError::Handler("boom".into()))
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT runtime: load and execute the AOT artifacts from the L3 hot path.
+//!
+//! The bridge follows `/opt/xla-example/load_hlo`: python lowers the L2 JAX
+//! stages (which call the L1 Pallas kernels) to **HLO text** once at build
+//! time (`make artifacts` → `python/compile/aot.py`); this module parses
+//! the text with `HloModuleProto::from_text_file`, compiles it on the PJRT
+//! CPU client and executes it with concrete batches. Python never runs at
+//! request time.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! ## Fixed artifact shapes
+//!
+//! AOT compilation freezes shapes. The contract with `python/compile`:
+//!
+//! * `mapper_stage.hlo.txt`:
+//!   `(user_hash u32[B], cluster_hash u32[B], num_reducers u32[]) → (reducer u32[B],)`
+//! * `reducer_stage.hlo.txt`:
+//!   `(slots i32[B], ts f32[B], valid f32[B]) → (counts f32[G], max_ts f32[G])`
+//!
+//! with `B = 1024`, `G = 256` ([`BATCH`], [`GROUPS`]). The rust callers pad
+//! and chunk arbitrary batch sizes to fit (see `compute::hlo`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Rows per compiled batch (must match `python/compile/aot.py`).
+pub const BATCH: usize = 1024;
+/// Group slots per compiled aggregation (must match `aot.py`).
+pub const GROUPS: usize = 256;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact '{0}' not found — run `make artifacts` first")]
+    MissingArtifact(PathBuf),
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled, loaded stage ready for execution.
+///
+/// # Safety / threading
+///
+/// The `xla` crate's wrappers hold raw pointers and are not `Send`. The
+/// PJRT CPU client is internally synchronized for execution, but we stay
+/// conservative: every [`LoadedStage`] serializes `run` behind a `Mutex`
+/// and the `unsafe impl Send/Sync` below is justified by that exclusive
+/// access (no concurrent mutation of the underlying executable).
+pub struct LoadedStage {
+    name: String,
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+unsafe impl Send for LoadedStage {}
+unsafe impl Sync for LoadedStage {}
+
+impl LoadedStage {
+    /// Execute with the given argument literals; returns the un-tupled
+    /// results (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(args)?;
+        let literal = result[0][0].to_literal_sync()?;
+        Ok(literal.to_tuple()?)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The PJRT CPU client plus artifact loading.
+pub struct PjRtRuntime {
+    client: xla::PjRtClient,
+}
+
+unsafe impl Send for PjRtRuntime {}
+unsafe impl Sync for PjRtRuntime {}
+
+impl PjRtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjRtRuntime, RuntimeError> {
+        Ok(PjRtRuntime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedStage, RuntimeError> {
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path must be utf-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedStage {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe: Mutex::new(exe),
+        })
+    }
+
+    /// Load both stage artifacts from a directory.
+    pub fn load_stage_artifacts(
+        &self,
+        dir: &Path,
+    ) -> Result<(LoadedStage, LoadedStage), RuntimeError> {
+        let mapper = self.load_hlo_text(&dir.join("mapper_stage.hlo.txt"))?;
+        let reducer = self.load_hlo_text(&dir.join("reducer_stage.hlo.txt"))?;
+        Ok((mapper, reducer))
+    }
+}
+
+/// Pad a slice to `n` with a fill value (artifact shapes are fixed).
+pub fn pad_to<T: Copy>(xs: &[T], n: usize, fill: T) -> Vec<T> {
+    assert!(xs.len() <= n, "chunk longer than batch");
+    let mut v = Vec::with_capacity(n);
+    v.extend_from_slice(xs);
+    v.resize(n, fill);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_extends_and_preserves() {
+        let p = pad_to(&[1u32, 2, 3], 6, 0);
+        assert_eq!(p, vec![1, 2, 3, 0, 0, 0]);
+        let q = pad_to(&[1u32], 1, 9);
+        assert_eq!(q, vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk longer")]
+    fn pad_to_rejects_overflow() {
+        pad_to(&[1u32, 2], 1, 0);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = match PjRtRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        match rt.load_hlo_text(Path::new("/nonexistent/stage.hlo.txt")) {
+            Err(RuntimeError::MissingArtifact(_)) => {}
+            Err(e) => panic!("unexpected error: {e}"),
+            Ok(_) => panic!("loading a nonexistent artifact must fail"),
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Straggler spill — the §6 future-work design, implemented.
+//!
+//! "To deal with straggling workers, mappers will flush batches and
+//! advance their windows when most, but not necessarily all, reducers have
+//! processed the rows in these batches. When that happens, rows that are
+//! still needed by some reducers will be spilled to a designated table. By
+//! configuring thresholds in this approach we will be able to leverage low
+//! write amplification factors with sufficient straggler tolerance."
+//!
+//! Mechanics: when the in-memory window exceeds
+//! `spill.trigger_fraction × memory_limit` and a *quorum* of buckets has
+//! already acknowledged past the front entry, the buckets still pinning the
+//! front (the stragglers) have their queued rows **detached** from the
+//! window into a per-bucket [`SpillQueue`]. Spilled bytes are persisted
+//! (accounted under [`WriteCategory::Spill`]) so the window can advance —
+//! trading a bounded amount of write amplification for progress, exactly
+//! the paper's proposed knob. `GetRows` serves spilled rows first (they
+//! are the oldest), then in-memory rows.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::rows::{codec, UnversionedRow};
+use crate::storage::Journal;
+
+/// Persisted overflow queue for one straggler bucket.
+#[derive(Debug)]
+pub struct SpillQueue {
+    /// (shuffle_index, encoded row). The in-memory copy models reading the
+    /// spill table back; the journal models (and accounts) the write.
+    queue: VecDeque<(i64, Vec<u8>)>,
+    journal: Arc<Journal>,
+    /// Total rows ever spilled through this queue (metrics).
+    pub rows_spilled_total: u64,
+}
+
+impl SpillQueue {
+    pub fn new(journal: Arc<Journal>) -> SpillQueue {
+        SpillQueue {
+            queue: VecDeque::new(),
+            journal,
+            rows_spilled_total: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Shuffle index of the newest spilled row.
+    pub fn last_shuffle_index(&self) -> Option<i64> {
+        self.queue.back().map(|(s, _)| *s)
+    }
+
+    /// Persist a detached row. Rows must arrive in shuffle order and the
+    /// entire spill queue must stay *older* than any in-memory bucket row
+    /// (the mapper spills whole bucket prefixes, which guarantees it).
+    pub fn push(&mut self, shuffle_index: i64, row: &UnversionedRow) {
+        if let Some((last, _)) = self.queue.back() {
+            debug_assert!(shuffle_index > *last, "spill must preserve shuffle order");
+        }
+        let encoded = codec::encode_rows(std::slice::from_ref(row));
+        self.journal.append(encoded.clone());
+        self.queue.push_back((shuffle_index, encoded));
+        self.rows_spilled_total += 1;
+    }
+
+    /// Drop rows acknowledged by the reducer (`shuffle_index <= committed`).
+    pub fn ack(&mut self, committed_row_index: i64) -> usize {
+        let mut popped = 0;
+        while self
+            .queue
+            .front()
+            .is_some_and(|(s, _)| *s <= committed_row_index)
+        {
+            self.queue.pop_front();
+            popped += 1;
+        }
+        popped
+    }
+
+    /// Decode up to `count` rows from the front (not removed).
+    pub fn peek(&self, count: usize) -> Vec<(i64, UnversionedRow)> {
+        self.queue
+            .iter()
+            .take(count)
+            .map(|(s, bytes)| {
+                let rows = codec::decode_rows(bytes).expect("spill self-corruption");
+                (*s, rows.into_iter().next().expect("one row per record"))
+            })
+            .collect()
+    }
+
+    /// Drop everything (split-brain reset).
+    pub fn clear(&mut self) {
+        self.queue.clear();
+    }
+}
+
+/// Decide which buckets to spill (the §6 threshold policy).
+///
+/// * `window_bytes` / `memory_limit` / `trigger_fraction`: pressure gate.
+/// * `head_entries[b]` = window entry pinned by bucket `b`'s head (`None`
+///   when the bucket is empty or already spilled).
+/// * `front_entry`: the window's first entry index.
+/// * `straggler_quorum`: fraction of buckets that must have moved past the
+///   front for the remaining pinners to count as stragglers.
+///
+/// Returns the bucket indexes to detach.
+pub fn pick_straggler_buckets(
+    window_bytes: usize,
+    memory_limit: usize,
+    trigger_fraction: f64,
+    straggler_quorum: f64,
+    head_entries: &[Option<u64>],
+    front_entry: u64,
+) -> Vec<usize> {
+    if (window_bytes as f64) < trigger_fraction * memory_limit as f64 {
+        return Vec::new();
+    }
+    let total = head_entries.len();
+    if total == 0 {
+        return Vec::new();
+    }
+    let pinners: Vec<usize> = head_entries
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| **h == Some(front_entry))
+        .map(|(i, _)| i)
+        .collect();
+    if pinners.is_empty() {
+        return Vec::new();
+    }
+    let moved_on = total - pinners.len();
+    if (moved_on as f64) >= straggler_quorum * total as f64 {
+        pinners
+    } else {
+        // Most buckets are *also* slow: this is global backpressure, not a
+        // straggler — spilling would just burn write amplification.
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::storage::{WriteAccounting, WriteCategory};
+
+    fn queue() -> (SpillQueue, Arc<WriteAccounting>) {
+        let acc = WriteAccounting::new();
+        let j = Journal::new("spill-r0", WriteCategory::Spill, acc.clone());
+        (SpillQueue::new(j), acc)
+    }
+
+    #[test]
+    fn push_accounts_spill_bytes() {
+        let (mut q, acc) = queue();
+        q.push(5, &row!["payload", 1i64]);
+        q.push(9, &row!["payload2", 2i64]);
+        assert_eq!(q.len(), 2);
+        assert!(acc.bytes(WriteCategory::Spill) > 0);
+        assert_eq!(q.rows_spilled_total, 2);
+    }
+
+    #[test]
+    fn peek_decodes_without_consuming() {
+        let (mut q, _) = queue();
+        q.push(3, &row![30i64]);
+        q.push(8, &row![80i64]);
+        let rows = q.peek(5);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (3, row![30i64]));
+        assert_eq!(rows[1], (8, row![80i64]));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn ack_pops_prefix() {
+        let (mut q, _) = queue();
+        for s in [1i64, 4, 6, 10] {
+            q.push(s, &row![s]);
+        }
+        assert_eq!(q.ack(5), 2);
+        assert_eq!(q.ack(5), 0); // idempotent
+        assert_eq!(q.peek(10)[0].0, 6);
+        assert_eq!(q.last_shuffle_index(), Some(10));
+    }
+
+    #[test]
+    fn policy_no_pressure_no_spill() {
+        let picked = pick_straggler_buckets(10, 100, 0.8, 0.5, &[Some(0), Some(5)], 0);
+        assert!(picked.is_empty());
+    }
+
+    #[test]
+    fn policy_spills_minority_pinners() {
+        // 4 buckets, one pinning the front, pressure over trigger.
+        let heads = [Some(0u64), Some(7), Some(9), None];
+        let picked = pick_straggler_buckets(90, 100, 0.8, 0.75, &heads, 0);
+        assert_eq!(picked, vec![0]);
+    }
+
+    #[test]
+    fn policy_refuses_global_slowness() {
+        // 4 buckets, three pinning the front: not a straggler situation.
+        let heads = [Some(0u64), Some(0), Some(0), Some(9)];
+        let picked = pick_straggler_buckets(95, 100, 0.8, 0.75, &heads, 0);
+        assert!(picked.is_empty());
+    }
+
+    #[test]
+    fn policy_handles_empty_window() {
+        assert!(pick_straggler_buckets(100, 100, 0.5, 0.5, &[], 0).is_empty());
+        let heads = [None, None];
+        assert!(pick_straggler_buckets(100, 100, 0.5, 0.5, &heads, 0).is_empty());
+    }
+
+    #[test]
+    fn clear_empties() {
+        let (mut q, _) = queue();
+        q.push(1, &row![1i64]);
+        q.clear();
+        assert!(q.is_empty());
+        // fresh shuffle order accepted after clear
+        q.push(0, &row![0i64]);
+    }
+}

@@ -1,0 +1,249 @@
+//! Global write-byte accounting — the write-amplification meter.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// What a persisted byte was written *for*. The WA factor of the streaming
+/// processor counts only the categories the processor itself is responsible
+/// for (see [`WriteCategory::counts_toward_wa`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WriteCategory {
+    /// Producer appends into the input queues. This is the *input* of the
+    /// system, not something the processor wrote — the WA denominator.
+    SourceIngest,
+    /// Mapper persistent meta-state updates (§4.3.2: three small columns).
+    MapperMeta,
+    /// Reducer persistent meta-state updates (§4.4.1).
+    ReducerMeta,
+    /// Rows written by the *user's* Reduce function to its output table.
+    /// Useful output, reported separately from system overhead.
+    UserOutput,
+    /// Full shuffle payload persisted by the classic-MapReduce baseline
+    /// (§2.1–2.2) — the thing the paper's design eliminates.
+    ShufflePersist,
+    /// Straggler spill writes (§6 future-work feature).
+    Spill,
+    /// Cypress / discovery metadata writes.
+    CypressMeta,
+}
+
+pub const ALL_CATEGORIES: [WriteCategory; 7] = [
+    WriteCategory::SourceIngest,
+    WriteCategory::MapperMeta,
+    WriteCategory::ReducerMeta,
+    WriteCategory::UserOutput,
+    WriteCategory::ShufflePersist,
+    WriteCategory::Spill,
+    WriteCategory::CypressMeta,
+];
+
+impl WriteCategory {
+    fn index(self) -> usize {
+        match self {
+            WriteCategory::SourceIngest => 0,
+            WriteCategory::MapperMeta => 1,
+            WriteCategory::ReducerMeta => 2,
+            WriteCategory::UserOutput => 3,
+            WriteCategory::ShufflePersist => 4,
+            WriteCategory::Spill => 5,
+            WriteCategory::CypressMeta => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WriteCategory::SourceIngest => "source_ingest",
+            WriteCategory::MapperMeta => "mapper_meta",
+            WriteCategory::ReducerMeta => "reducer_meta",
+            WriteCategory::UserOutput => "user_output",
+            WriteCategory::ShufflePersist => "shuffle_persist",
+            WriteCategory::Spill => "spill",
+            WriteCategory::CypressMeta => "cypress_meta",
+        }
+    }
+
+    /// Does this category count toward the processor's write amplification?
+    /// Input ingestion is the denominator; user output is useful work that
+    /// every design pays identically, so the *system* WA excludes it (it is
+    /// still reported).
+    pub fn counts_toward_wa(self) -> bool {
+        !matches!(
+            self,
+            WriteCategory::SourceIngest | WriteCategory::UserOutput
+        )
+    }
+}
+
+/// Lock-free per-category byte + op counters. One instance is shared by
+/// every journal in a simulated cluster.
+#[derive(Debug, Default)]
+pub struct WriteAccounting {
+    bytes: [AtomicU64; 7],
+    ops: [AtomicU64; 7],
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AccountingSnapshot {
+    pub bytes: [u64; 7],
+    pub ops: [u64; 7],
+}
+
+impl WriteAccounting {
+    pub fn new() -> Arc<WriteAccounting> {
+        Arc::new(WriteAccounting::default())
+    }
+
+    #[inline]
+    pub fn record(&self, cat: WriteCategory, bytes: u64) {
+        let i = cat.index();
+        self.bytes[i].fetch_add(bytes, Ordering::Relaxed);
+        self.ops[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bytes(&self, cat: WriteCategory) -> u64 {
+        self.bytes[cat.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn ops(&self, cat: WriteCategory) -> u64 {
+        self.ops[cat.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> AccountingSnapshot {
+        let mut s = AccountingSnapshot::default();
+        for (i, (b, o)) in self.bytes.iter().zip(&self.ops).enumerate() {
+            s.bytes[i] = b.load(Ordering::Relaxed);
+            s.ops[i] = o.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+impl AccountingSnapshot {
+    pub fn bytes_of(&self, cat: WriteCategory) -> u64 {
+        self.bytes[cat.index()]
+    }
+
+    pub fn ops_of(&self, cat: WriteCategory) -> u64 {
+        self.ops[cat.index()]
+    }
+
+    /// Total persisted bytes attributable to the processor itself.
+    pub fn system_bytes(&self) -> u64 {
+        ALL_CATEGORIES
+            .iter()
+            .filter(|c| c.counts_toward_wa())
+            .map(|c| self.bytes_of(*c))
+            .sum()
+    }
+
+    /// Write-amplification factor relative to `ingested_bytes` of input
+    /// payload actually processed.
+    pub fn wa_factor(&self, ingested_bytes: u64) -> f64 {
+        if ingested_bytes == 0 {
+            return 0.0;
+        }
+        self.system_bytes() as f64 / ingested_bytes as f64
+    }
+
+    /// Difference against an earlier snapshot (per-window accounting).
+    pub fn delta_since(&self, earlier: &AccountingSnapshot) -> AccountingSnapshot {
+        let mut d = AccountingSnapshot::default();
+        for i in 0..7 {
+            d.bytes[i] = self.bytes[i] - earlier.bytes[i];
+            d.ops[i] = self.ops[i] - earlier.ops[i];
+        }
+        d
+    }
+}
+
+impl fmt::Display for AccountingSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for cat in ALL_CATEGORIES {
+            if self.bytes_of(cat) > 0 || self.ops_of(cat) > 0 {
+                writeln!(
+                    f,
+                    "  {:<16} {:>14} bytes {:>10} ops",
+                    cat.name(),
+                    self.bytes_of(cat),
+                    self.ops_of(cat)
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_read() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::MapperMeta, 100);
+        a.record(WriteCategory::MapperMeta, 50);
+        a.record(WriteCategory::SourceIngest, 1000);
+        assert_eq!(a.bytes(WriteCategory::MapperMeta), 150);
+        assert_eq!(a.ops(WriteCategory::MapperMeta), 2);
+        assert_eq!(a.bytes(WriteCategory::SourceIngest), 1000);
+    }
+
+    #[test]
+    fn wa_excludes_source_and_user_output() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::SourceIngest, 10_000);
+        a.record(WriteCategory::UserOutput, 500);
+        a.record(WriteCategory::MapperMeta, 100);
+        a.record(WriteCategory::ReducerMeta, 100);
+        a.record(WriteCategory::ShufflePersist, 20_000);
+        let s = a.snapshot();
+        assert_eq!(s.system_bytes(), 20_200);
+        assert!((s.wa_factor(10_000) - 2.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wa_zero_denominator() {
+        let s = AccountingSnapshot::default();
+        assert_eq!(s.wa_factor(0), 0.0);
+    }
+
+    #[test]
+    fn delta_since() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::Spill, 10);
+        let before = a.snapshot();
+        a.record(WriteCategory::Spill, 25);
+        let after = a.snapshot();
+        let d = after.delta_since(&before);
+        assert_eq!(d.bytes_of(WriteCategory::Spill), 25);
+        assert_eq!(d.ops_of(WriteCategory::Spill), 1);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let a = WriteAccounting::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let a = a.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        a.record(WriteCategory::ReducerMeta, 3);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.bytes(WriteCategory::ReducerMeta), 24_000);
+        assert_eq!(a.ops(WriteCategory::ReducerMeta), 8_000);
+    }
+
+    #[test]
+    fn display_skips_empty() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::MapperMeta, 5);
+        let text = a.snapshot().to_string();
+        assert!(text.contains("mapper_meta"));
+        assert!(!text.contains("spill"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Bulk chunk store: where classic shuffles and spills put payload bytes.
+//!
+//! Classic MapReduce persists the full shuffle payload between phases
+//! (§2.1); MapReduce Online still journals every pipelined batch (§2.2).
+//! The baseline pipeline reproduces that behaviour through this store so
+//! the WA comparison is apples-to-apples. The §6 spill extension also
+//! writes here when a straggling reducer forces a mapper to evict rows.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::accounting::{WriteAccounting, WriteCategory};
+
+/// Opaque id of a stored chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkId(pub u64);
+
+/// Content store with accounted writes and delete (for trim-after-read).
+#[derive(Debug)]
+pub struct ChunkStore {
+    accounting: Arc<WriteAccounting>,
+    category: WriteCategory,
+    next_id: AtomicU64,
+    chunks: Mutex<HashMap<ChunkId, Arc<Vec<u8>>>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ChunkError {
+    #[error("chunk {0:?} not found (trimmed or never written)")]
+    NotFound(ChunkId),
+}
+
+impl ChunkStore {
+    pub fn new(category: WriteCategory, accounting: Arc<WriteAccounting>) -> Arc<ChunkStore> {
+        Arc::new(ChunkStore {
+            accounting,
+            category,
+            next_id: AtomicU64::new(1),
+            chunks: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Persist a chunk; every byte is accounted.
+    pub fn put(&self, data: Vec<u8>) -> ChunkId {
+        self.accounting.record(self.category, data.len() as u64);
+        let id = ChunkId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.chunks.lock().unwrap().insert(id, Arc::new(data));
+        id
+    }
+
+    pub fn get(&self, id: ChunkId) -> Result<Arc<Vec<u8>>, ChunkError> {
+        self.chunks
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or(ChunkError::NotFound(id))
+    }
+
+    /// Remove a chunk once its consumers are done (idempotent).
+    pub fn delete(&self, id: ChunkId) {
+        self.chunks.lock().unwrap().remove(&id);
+    }
+
+    /// Number of live (not yet deleted) chunks.
+    pub fn live_count(&self) -> usize {
+        self.chunks.lock().unwrap().len()
+    }
+
+    /// Bytes currently held live.
+    pub fn live_bytes(&self) -> u64 {
+        self.chunks
+            .lock()
+            .unwrap()
+            .values()
+            .map(|c| c.len() as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_delete() {
+        let acc = WriteAccounting::new();
+        let s = ChunkStore::new(WriteCategory::ShufflePersist, acc.clone());
+        let id = s.put(vec![9; 100]);
+        assert_eq!(s.get(id).unwrap().len(), 100);
+        assert_eq!(acc.bytes(WriteCategory::ShufflePersist), 100);
+        assert_eq!(s.live_bytes(), 100);
+        s.delete(id);
+        assert_eq!(s.get(id), Err(ChunkError::NotFound(id)));
+        assert_eq!(s.live_count(), 0);
+        // accounting is monotone: deletes don't refund written bytes
+        assert_eq!(acc.bytes(WriteCategory::ShufflePersist), 100);
+    }
+
+    #[test]
+    fn delete_idempotent() {
+        let acc = WriteAccounting::new();
+        let s = ChunkStore::new(WriteCategory::Spill, acc);
+        let id = s.put(vec![1]);
+        s.delete(id);
+        s.delete(id); // no panic
+    }
+
+    #[test]
+    fn ids_unique_across_threads() {
+        let acc = WriteAccounting::new();
+        let s = ChunkStore::new(WriteCategory::Spill, acc);
+        let ids = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let s = s.clone();
+                    scope.spawn(move || (0..100).map(|_| s.put(vec![0])).collect::<Vec<_>>())
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().unwrap())
+                .collect::<Vec<_>>()
+        });
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len());
+    }
+}

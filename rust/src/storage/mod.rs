@@ -1,0 +1,21 @@
+//! Persistent-storage substrate with per-category byte accounting.
+//!
+//! The paper's headline claim is about **write amplification** — "the
+//! phenomenon associated with the same data being written to storage
+//! multiple times" (§1). To *measure* it, every simulated persistent write
+//! in the repository flows through a [`journal::Journal`] tagged with a
+//! [`accounting::WriteCategory`]; [`accounting::WriteAccounting`] keeps the
+//! global tally from which `WA = persisted-system-bytes / ingested-bytes`
+//! is computed (see `metrics::wa` and the `figure wa` harness).
+//!
+//! [`chunk_store::ChunkStore`] is the bulk store used by the
+//! persistent-shuffle *baseline* (classic MapReduce-style shuffle, §2.1–2.2)
+//! and by the §6 straggler-spill extension.
+
+pub mod accounting;
+pub mod journal;
+pub mod chunk_store;
+
+pub use accounting::{WriteAccounting, WriteCategory};
+pub use chunk_store::{ChunkId, ChunkStore};
+pub use journal::Journal;

@@ -1,0 +1,201 @@
+//! Micro-benchmark harness (criterion is unavailable offline, so `cargo
+//! bench` targets use this instead; they are plain `harness = false`
+//! binaries).
+//!
+//! Methodology: warm up, then run timed batches until both a minimum
+//! duration and a minimum iteration count are reached; report mean / p50 /
+//! p99 per-iteration time and derived throughput. Output is stable
+//! one-line-per-benchmark text that the EXPERIMENTS.md tables are built
+//! from.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark definition.
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    min_time: Duration,
+    min_iters: u64,
+    /// Optional bytes processed per iteration (enables MB/s reporting).
+    bytes_per_iter: Option<u64>,
+    /// Optional logical items per iteration (enables Mitems/s reporting).
+    items_per_iter: Option<u64>,
+}
+
+/// Result of a completed benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub mb_per_s: Option<f64>,
+    pub mitems_per_s: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(800),
+            min_iters: 10,
+            bytes_per_iter: None,
+            items_per_iter: None,
+        }
+    }
+
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    pub fn min_time(mut self, d: Duration) -> Self {
+        self.min_time = d;
+        self
+    }
+
+    pub fn min_iters(mut self, n: u64) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    pub fn throughput_bytes(mut self, bytes: u64) -> Self {
+        self.bytes_per_iter = Some(bytes);
+        self
+    }
+
+    pub fn throughput_items(mut self, items: u64) -> Self {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Run the benchmark, print and return the report.
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchReport {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.min_time || (samples_ns.len() as u64) < self.min_iters {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 5_000_000 {
+                break; // safety valve for ~ns-scale bodies
+            }
+        }
+        let report = summarize(
+            &self.name,
+            &mut samples_ns,
+            self.bytes_per_iter,
+            self.items_per_iter,
+        );
+        println!("{}", format_report(&report));
+        report
+    }
+}
+
+fn summarize(
+    name: &str,
+    samples_ns: &mut [f64],
+    bytes_per_iter: Option<u64>,
+    items_per_iter: Option<u64>,
+) -> BenchReport {
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let iters = samples_ns.len() as u64;
+    let mean_ns = samples_ns.iter().sum::<f64>() / iters as f64;
+    let p = |q: f64| samples_ns[((iters as f64 - 1.0) * q) as usize];
+    let mb_per_s = bytes_per_iter.map(|b| b as f64 / (mean_ns / 1e9) / 1e6);
+    let mitems_per_s = items_per_iter.map(|n| n as f64 / (mean_ns / 1e9) / 1e6);
+    BenchReport {
+        name: name.to_string(),
+        iters,
+        mean_ns,
+        p50_ns: p(0.5),
+        p99_ns: p(0.99),
+        mb_per_s,
+        mitems_per_s,
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+fn format_report(r: &BenchReport) -> String {
+    let mut line = format!(
+        "bench {:<44} iters={:<8} mean={:<10} p50={:<10} p99={:<10}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns),
+    );
+    if let Some(mb) = r.mb_per_s {
+        line.push_str(&format!(" thpt={mb:.1} MB/s"));
+    }
+    if let Some(mi) = r.mitems_per_s {
+        line.push_str(&format!(" rate={mi:.2} Mitems/s"));
+    }
+    line
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .min_time(Duration::from_millis(5))
+            .min_iters(10)
+            .run(|| {
+                black_box(1 + 1);
+            });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = Bench::new("sleepy")
+            .warmup(Duration::from_millis(1))
+            .min_time(Duration::from_millis(5))
+            .min_iters(5)
+            .throughput_bytes(1_000_000)
+            .run(|| std::thread::sleep(Duration::from_micros(100)));
+        let mb = r.mb_per_s.unwrap();
+        // 1 MB per ~100us → ~10 GB/s nominal; just check it's sane & positive.
+        assert!(mb > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).ends_with("us"));
+        assert!(fmt_ns(2.5e6).ends_with("ms"));
+        assert!(fmt_ns(3.0e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,124 @@
+//! 128-bit GUIDs in YT's canonical `a-b-c-d` hex format.
+//!
+//! Workers identify themselves by GUID in discovery and in `GetRows`
+//! requests (§4.3.4: `mapper_id` discards requests that were routed via
+//! stale discovery data, which is the split-brain defence).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::prng::splitmix64;
+
+static COUNTER: AtomicU64 = AtomicU64::new(1);
+
+/// A 128-bit globally-unique id, formatted YT-style as four dash-separated
+/// hex quarters (e.g. `3f19-8a2b-90c1-7de4`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Guid {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl Guid {
+    /// Generate a fresh GUID. Mixes a process-global counter with the
+    /// current time so GUIDs are unique across restarts of simulated
+    /// workers within one process (the only uniqueness domain we need).
+    pub fn generate() -> Guid {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let mut s = n
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(std::time::UNIX_EPOCH.elapsed().map(|d| d.as_nanos() as u64).unwrap_or(0));
+        let hi = splitmix64(&mut s);
+        let lo = splitmix64(&mut s);
+        Guid { hi, lo }
+    }
+
+    /// Deterministic GUID from a seed (used by property tests).
+    pub fn from_seed(seed: u64) -> Guid {
+        let mut s = seed;
+        Guid {
+            hi: splitmix64(&mut s),
+            lo: splitmix64(&mut s),
+        }
+    }
+
+    pub const ZERO: Guid = Guid { hi: 0, lo: 0 };
+
+    /// Parse the `a-b-c-d` hex format produced by `Display`.
+    pub fn parse(s: &str) -> Option<Guid> {
+        let parts: Vec<&str> = s.split('-').collect();
+        if parts.len() != 4 {
+            return None;
+        }
+        let q: Vec<u64> = parts
+            .iter()
+            .map(|p| u64::from_str_radix(p, 16))
+            .collect::<Result<_, _>>()
+            .ok()?;
+        Some(Guid {
+            hi: (q[0] << 32) | q[1],
+            lo: (q[2] << 32) | q[3],
+        })
+    }
+}
+
+impl fmt::Display for Guid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:x}-{:x}-{:x}-{:x}",
+            self.hi >> 32,
+            self.hi & 0xFFFF_FFFF,
+            self.lo >> 32,
+            self.lo & 0xFFFF_FFFF
+        )
+    }
+}
+
+impl fmt::Debug for Guid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn generated_guids_unique() {
+        let mut seen = HashSet::new();
+        for _ in 0..10_000 {
+            assert!(seen.insert(Guid::generate()));
+        }
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for seed in 0..100 {
+            let g = Guid::from_seed(seed);
+            let s = g.to_string();
+            assert_eq!(Guid::parse(&s), Some(g), "roundtrip failed for {s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert_eq!(Guid::parse(""), None);
+        assert_eq!(Guid::parse("1-2-3"), None);
+        assert_eq!(Guid::parse("x-y-z-w"), None);
+        assert_eq!(Guid::parse("1-2-3-4-5"), None);
+    }
+
+    #[test]
+    fn from_seed_deterministic() {
+        assert_eq!(Guid::from_seed(7), Guid::from_seed(7));
+        assert_ne!(Guid::from_seed(7), Guid::from_seed(8));
+    }
+
+    #[test]
+    fn zero_formats() {
+        assert_eq!(Guid::ZERO.to_string(), "0-0-0-0");
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained utilities: deterministic PRNG, simulated/scaled
+//! clock, GUIDs, a YSON-subset parser (the paper's configuration format,
+//! §4.5), a micro-benchmark harness and a mini property-testing loop.
+//!
+//! Everything here is dependency-free by design: the build environment is
+//! offline, so the crate hand-rolls what it would otherwise take from
+//! `rand`, `serde`, `criterion` and `proptest`.
+
+pub mod prng;
+pub mod clock;
+pub mod guid;
+pub mod yson;
+pub mod benchkit;
+pub mod miniprop;
+
+pub use clock::Clock;
+pub use guid::Guid;
+pub use prng::Prng;
+pub use yson::Yson;

@@ -1,0 +1,621 @@
+//! YSON — YT's JSON-like configuration format (§4.5).
+//!
+//! The paper configures streaming processors "using YT's own JSON-like
+//! format, called YSON". This module implements the text-mode subset used
+//! for configuration:
+//!
+//! * maps: `{key = value; key2 = value2}`
+//! * lists: `[a; b; c]`
+//! * strings: bare identifiers (`foo_bar`, `//path/to/table`) or
+//!   double-quoted with escapes (`"hello\nworld"`)
+//! * integers (`42`, `-7`), doubles (`3.14`, `1e-3`)
+//! * booleans: `%true` / `%false`
+//! * entity (null): `#`
+//! * attribute maps prefixed to a value: `<compression = lz4> {...}`
+//!
+//! Plus a writer producing canonical pretty text that re-parses to the same
+//! value (round-trip property-tested).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed YSON value. Maps are ordered (BTreeMap) so the writer emits
+/// deterministic output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yson {
+    Entity,
+    Bool(bool),
+    Int(i64),
+    Uint(u64),
+    Double(f64),
+    Str(String),
+    List(Vec<Yson>),
+    Map(BTreeMap<String, Yson>),
+    /// A value with an attached attribute map: `<attrs> value`.
+    Attributed(BTreeMap<String, Yson>, Box<Yson>),
+}
+
+/// Parse or schema-access error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum YsonError {
+    #[error("yson parse error at byte {0}: {1}")]
+    Parse(usize, String),
+    #[error("yson: missing key '{0}'")]
+    MissingKey(String),
+    #[error("yson: expected {0}, found {1}")]
+    WrongType(&'static str, &'static str),
+}
+
+impl Yson {
+    pub fn parse(text: &str) -> Result<Yson, YsonError> {
+        let mut p = Parser {
+            b: text.as_bytes(),
+            i: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(YsonError::Parse(p.i, "trailing input".into()));
+        }
+        Ok(v)
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Yson::Entity => "entity",
+            Yson::Bool(_) => "bool",
+            Yson::Int(_) => "int",
+            Yson::Uint(_) => "uint",
+            Yson::Double(_) => "double",
+            Yson::Str(_) => "string",
+            Yson::List(_) => "list",
+            Yson::Map(_) => "map",
+            Yson::Attributed(..) => "attributed",
+        }
+    }
+
+    /// Strip the attribute wrapper, if any.
+    pub fn unwrap_attrs(&self) -> &Yson {
+        match self {
+            Yson::Attributed(_, inner) => inner.unwrap_attrs(),
+            other => other,
+        }
+    }
+
+    /// The attribute map, if this value carries one.
+    pub fn attrs(&self) -> Option<&BTreeMap<String, Yson>> {
+        match self {
+            Yson::Attributed(a, _) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Result<&BTreeMap<String, Yson>, YsonError> {
+        match self.unwrap_attrs() {
+            Yson::Map(m) => Ok(m),
+            other => Err(YsonError::WrongType("map", other.type_name())),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[Yson], YsonError> {
+        match self.unwrap_attrs() {
+            Yson::List(l) => Ok(l),
+            other => Err(YsonError::WrongType("list", other.type_name())),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str, YsonError> {
+        match self.unwrap_attrs() {
+            Yson::Str(s) => Ok(s),
+            other => Err(YsonError::WrongType("string", other.type_name())),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64, YsonError> {
+        match self.unwrap_attrs() {
+            Yson::Int(v) => Ok(*v),
+            Yson::Uint(v) => Ok(*v as i64),
+            other => Err(YsonError::WrongType("int", other.type_name())),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, YsonError> {
+        match self.unwrap_attrs() {
+            Yson::Uint(v) => Ok(*v),
+            Yson::Int(v) if *v >= 0 => Ok(*v as u64),
+            other => Err(YsonError::WrongType("uint", other.type_name())),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, YsonError> {
+        match self.unwrap_attrs() {
+            Yson::Double(v) => Ok(*v),
+            Yson::Int(v) => Ok(*v as f64),
+            Yson::Uint(v) => Ok(*v as f64),
+            other => Err(YsonError::WrongType("double", other.type_name())),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, YsonError> {
+        match self.unwrap_attrs() {
+            Yson::Bool(v) => Ok(*v),
+            other => Err(YsonError::WrongType("bool", other.type_name())),
+        }
+    }
+
+    /// Fetch a required map key.
+    pub fn get(&self, key: &str) -> Result<&Yson, YsonError> {
+        self.as_map()?
+            .get(key)
+            .ok_or_else(|| YsonError::MissingKey(key.to_string()))
+    }
+
+    /// Fetch an optional map key.
+    pub fn get_opt(&self, key: &str) -> Option<&Yson> {
+        self.as_map().ok().and_then(|m| m.get(key))
+    }
+
+    /// `get(key)` with a default when absent: integers.
+    pub fn get_i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get_opt(key).and_then(|v| v.as_i64().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get_opt(key).and_then(|v| v.as_u64().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get_opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool_or(&self, key: &str, default: bool) -> bool {
+        self.get_opt(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get_opt(key).and_then(|v| v.as_str().ok()).unwrap_or(default)
+    }
+
+    /// Convenience constructors for building config programmatically.
+    pub fn map(pairs: Vec<(&str, Yson)>) -> Yson {
+        Yson::Map(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: &str) -> Yson {
+        Yson::Str(s.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, YsonError> {
+        Err(YsonError::Parse(self.i, msg.into()))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(c) = self.peek() {
+            match c {
+                b' ' | b'\t' | b'\n' | b'\r' => self.i += 1,
+                b'#' if false => {}
+                _ => break,
+            }
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), YsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            self.err(format!("expected '{}'", c as char))
+        }
+    }
+
+    fn value(&mut self) -> Result<Yson, YsonError> {
+        self.skip_ws();
+        // Attribute prefix.
+        if self.peek() == Some(b'<') {
+            self.i += 1;
+            let attrs = self.map_body(b'>')?;
+            self.skip_ws();
+            let inner = self.value()?;
+            return Ok(Yson::Attributed(attrs, Box::new(inner)));
+        }
+        match self.peek() {
+            None => self.err("unexpected end of input"),
+            Some(b'{') => {
+                self.i += 1;
+                Ok(Yson::Map(self.map_body(b'}')?))
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.list_body()
+            }
+            Some(b'"') => Ok(Yson::Str(self.quoted_string()?)),
+            Some(b'%') => self.percent_literal(),
+            Some(b'#') => {
+                self.i += 1;
+                Ok(Yson::Entity)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) if is_ident_start(c) => Ok(Yson::Str(self.bare_ident())),
+            Some(c) => self.err(format!("unexpected byte '{}'", c as char)),
+        }
+    }
+
+    fn map_body(&mut self, close: u8) -> Result<BTreeMap<String, Yson>, YsonError> {
+        let mut m = BTreeMap::new();
+        loop {
+            self.skip_ws();
+            if self.peek() == Some(close) {
+                self.i += 1;
+                return Ok(m);
+            }
+            let key = match self.peek() {
+                Some(b'"') => self.quoted_string()?,
+                Some(c) if is_ident_start(c) => self.bare_ident(),
+                _ => return self.err("expected map key"),
+            };
+            self.skip_ws();
+            self.expect(b'=')?;
+            let v = self.value()?;
+            m.insert(key, v);
+            self.skip_ws();
+            if self.peek() == Some(b';') {
+                self.i += 1;
+            }
+        }
+    }
+
+    fn list_body(&mut self) -> Result<Yson, YsonError> {
+        let mut l = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Yson::List(l));
+            }
+            l.push(self.value()?);
+            self.skip_ws();
+            if self.peek() == Some(b';') {
+                self.i += 1;
+            }
+        }
+    }
+
+    fn quoted_string(&mut self) -> Result<String, YsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let c = self.peek().ok_or(YsonError::Parse(self.i, "bad escape".into()))?;
+                    self.i += 1;
+                    out.push(match c {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'\\' => '\\',
+                        b'"' => '"',
+                        b'0' => '\0',
+                        other => return self.err(format!("bad escape '\\{}'", other as char)),
+                    });
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar.
+                    let s = &self.b[self.i..];
+                    let ch_len = utf8_len(s[0]);
+                    let chunk = std::str::from_utf8(&s[..ch_len.min(s.len())])
+                        .map_err(|_| YsonError::Parse(self.i, "invalid utf-8".into()))?;
+                    out.push_str(chunk);
+                    self.i += ch_len;
+                }
+            }
+        }
+    }
+
+    fn percent_literal(&mut self) -> Result<Yson, YsonError> {
+        self.expect(b'%')?;
+        let word = self.bare_ident();
+        match word.as_str() {
+            "true" => Ok(Yson::Bool(true)),
+            "false" => Ok(Yson::Bool(false)),
+            other => self.err(format!("unknown %-literal '{other}'")),
+        }
+    }
+
+    fn bare_ident(&mut self) -> String {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if is_ident_continue(c) {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        String::from_utf8_lossy(&self.b[start..self.i]).into_owned()
+    }
+
+    fn number(&mut self) -> Result<Yson, YsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' => {
+                    is_float = true;
+                    self.i += 1;
+                }
+                b'-' if is_float => self.i += 1, // exponent sign
+                b'u' => {
+                    // uint suffix: `42u`
+                    let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+                    self.i += 1;
+                    return text
+                        .parse::<u64>()
+                        .map(Yson::Uint)
+                        .map_err(|e| YsonError::Parse(start, e.to_string()));
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if is_float {
+            text.parse::<f64>()
+                .map(Yson::Double)
+                .map_err(|e| YsonError::Parse(start, e.to_string()))
+        } else {
+            text.parse::<i64>()
+                .map(Yson::Int)
+                .map_err(|e| YsonError::Parse(start, e.to_string()))
+        }
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c == b'/'
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_' || c == b'/' || c == b'.' || c == b':'
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+impl fmt::Display for Yson {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write_value(f, self, 0)
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.is_empty()
+        || !s.bytes().next().map(is_ident_start).unwrap_or(false)
+        || !s.bytes().all(is_ident_continue)
+}
+
+fn write_string(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    if needs_quoting(s) {
+        write!(f, "\"")?;
+        for c in s.chars() {
+            match c {
+                '\n' => write!(f, "\\n")?,
+                '\t' => write!(f, "\\t")?,
+                '\r' => write!(f, "\\r")?,
+                '\\' => write!(f, "\\\\")?,
+                '"' => write!(f, "\\\"")?,
+                c => write!(f, "{c}")?,
+            }
+        }
+        write!(f, "\"")
+    } else {
+        write!(f, "{s}")
+    }
+}
+
+fn write_map(
+    f: &mut fmt::Formatter<'_>,
+    m: &BTreeMap<String, Yson>,
+    open: char,
+    close: char,
+    indent: usize,
+) -> fmt::Result {
+    if m.is_empty() {
+        return write!(f, "{open}{close}");
+    }
+    writeln!(f, "{open}")?;
+    for (k, v) in m {
+        write!(f, "{:indent$}", "", indent = (indent + 1) * 4)?;
+        write_string(f, k)?;
+        write!(f, " = ")?;
+        write_value(f, v, indent + 1)?;
+        writeln!(f, ";")?;
+    }
+    write!(f, "{:indent$}{close}", "", indent = indent * 4)
+}
+
+fn write_value(f: &mut fmt::Formatter<'_>, v: &Yson, indent: usize) -> fmt::Result {
+    match v {
+        Yson::Entity => write!(f, "#"),
+        Yson::Bool(true) => write!(f, "%true"),
+        Yson::Bool(false) => write!(f, "%false"),
+        Yson::Int(n) => write!(f, "{n}"),
+        Yson::Uint(n) => write!(f, "{n}u"),
+        Yson::Double(x) => {
+            if x.fract() == 0.0 && x.is_finite() && x.abs() < 1e15 {
+                write!(f, "{x:.1}")
+            } else {
+                write!(f, "{x}")
+            }
+        }
+        Yson::Str(s) => write_string(f, s),
+        Yson::List(l) => {
+            if l.is_empty() {
+                return write!(f, "[]");
+            }
+            writeln!(f, "[")?;
+            for item in l {
+                write!(f, "{:indent$}", "", indent = (indent + 1) * 4)?;
+                write_value(f, item, indent + 1)?;
+                writeln!(f, ";")?;
+            }
+            write!(f, "{:indent$}]", "", indent = indent * 4)
+        }
+        Yson::Map(m) => write_map(f, m, '{', '}', indent),
+        Yson::Attributed(attrs, inner) => {
+            write_map(f, attrs, '<', '>', indent)?;
+            write!(f, " ")?;
+            write_value(f, inner, indent)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Yson::parse("42").unwrap(), Yson::Int(42));
+        assert_eq!(Yson::parse("-17").unwrap(), Yson::Int(-17));
+        assert_eq!(Yson::parse("42u").unwrap(), Yson::Uint(42));
+        assert_eq!(Yson::parse("3.5").unwrap(), Yson::Double(3.5));
+        assert_eq!(Yson::parse("1e-3").unwrap(), Yson::Double(1e-3));
+        assert_eq!(Yson::parse("%true").unwrap(), Yson::Bool(true));
+        assert_eq!(Yson::parse("%false").unwrap(), Yson::Bool(false));
+        assert_eq!(Yson::parse("#").unwrap(), Yson::Entity);
+        assert_eq!(Yson::parse("hello_world").unwrap(), Yson::Str("hello_world".into()));
+        assert_eq!(
+            Yson::parse("\"with spaces\\n\"").unwrap(),
+            Yson::Str("with spaces\n".into())
+        );
+    }
+
+    #[test]
+    fn parses_paths_as_bare_strings() {
+        assert_eq!(
+            Yson::parse("//sys/state/mappers").unwrap(),
+            Yson::Str("//sys/state/mappers".into())
+        );
+    }
+
+    #[test]
+    fn parses_nested_config() {
+        let text = r#"
+        {
+            processor = {
+                mapper_count = 4;
+                reducer_count = 2;
+                memory_limit = 8589934592;
+                backoff_ms = 100;
+                state_table = "//sys/state";
+                spill = %false;
+                thresholds = [0.5; 0.9; 1.0];
+            };
+        }
+        "#;
+        let v = Yson::parse(text).unwrap();
+        let p = v.get("processor").unwrap();
+        assert_eq!(p.get("mapper_count").unwrap().as_i64().unwrap(), 4);
+        assert_eq!(p.get("state_table").unwrap().as_str().unwrap(), "//sys/state");
+        assert!(!p.get("spill").unwrap().as_bool().unwrap());
+        assert_eq!(p.get("thresholds").unwrap().as_list().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn parses_attributes() {
+        let v = Yson::parse("<compression = lz4; replication = 3> {a = 1}").unwrap();
+        let attrs = v.attrs().unwrap();
+        assert_eq!(attrs["compression"], Yson::Str("lz4".into()));
+        assert_eq!(attrs["replication"], Yson::Int(3));
+        assert_eq!(v.get("a").unwrap().as_i64().unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Yson::parse("").is_err());
+        assert!(Yson::parse("{a = }").is_err());
+        assert!(Yson::parse("{a = 1} trailing").is_err());
+        assert!(Yson::parse("\"unterminated").is_err());
+        assert!(Yson::parse("%maybe").is_err());
+    }
+
+    #[test]
+    fn trailing_semicolons_optional() {
+        let a = Yson::parse("{a=1;b=2;}").unwrap();
+        let b = Yson::parse("{a=1;b=2}").unwrap();
+        assert_eq!(a, b);
+        let c = Yson::parse("[1;2;3;]").unwrap();
+        let d = Yson::parse("[1;2;3]").unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn defaults_helpers() {
+        let v = Yson::parse("{a = 5}").unwrap();
+        assert_eq!(v.get_i64_or("a", 0), 5);
+        assert_eq!(v.get_i64_or("b", 7), 7);
+        assert_eq!(v.get_str_or("c", "dflt"), "dflt");
+        assert!(v.get_bool_or("d", true));
+    }
+
+    #[test]
+    fn writer_roundtrip() {
+        let texts = [
+            "{a = 1; b = [x; y; \"z w\"]; c = {d = %true; e = 2.5; f = #}}",
+            "[]",
+            "{}",
+            "<attr = 7> [1; 2u; -3]",
+            "{path = //home/user/table; msg = \"line1\\nline2\"}",
+        ];
+        for t in texts {
+            let v = Yson::parse(t).unwrap();
+            let printed = v.to_string();
+            let reparsed = Yson::parse(&printed)
+                .unwrap_or_else(|e| panic!("re-parse of {printed:?} failed: {e}"));
+            assert_eq!(v, reparsed, "roundtrip mismatch for {t}");
+        }
+    }
+
+    #[test]
+    fn wrong_type_errors() {
+        let v = Yson::parse("{a = 1}").unwrap();
+        assert!(matches!(v.get("a").unwrap().as_str(), Err(YsonError::WrongType(..))));
+        assert!(matches!(v.get("zzz"), Err(YsonError::MissingKey(_))));
+        assert!(matches!(Yson::Int(-1).as_u64(), Err(YsonError::WrongType(..))));
+        assert_eq!(Yson::Int(3).as_f64().unwrap(), 3.0);
+    }
+}

@@ -1,0 +1,376 @@
+//! The paper's evaluation user code (§5.2): log analytics.
+//!
+//! "The mappers' Map implementation split each read message back into
+//! individual log messages. These messages were then parsed and hash
+//! partitioned by their respective user and cluster fields. Log messages
+//! that didn't have a user field were simply ignored … The remainder was
+//! processed by 10 reducer workers, which grouped messages by user and
+//! cluster, writing the timestamp of the user's last access to the cluster
+//! and a tally of the number of corresponding messages in the batch to a
+//! sorted dynamic table shared by all reducers."
+//!
+//! String parsing and row codecs stay in rust; the numeric inner loops
+//! (shuffle hash, grouped aggregation) run through a [`ComputeStage`] —
+//! either the native reference or the AOT-compiled Pallas kernels.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::api::{
+    Client, Mapper, MapperFactory, MapperSpec, PartitionedRowset, Reducer, ReducerFactory,
+    ReducerSpec,
+};
+use crate::compute::native::NativeStage;
+use crate::compute::{fnv1a32, ComputeStage};
+use crate::coordinator::config::ComputeMode;
+use crate::dyntable::Transaction;
+use crate::queue::INPUT_COL_PAYLOAD;
+use crate::row;
+use crate::rows::{ColumnSchema, ColumnType, NameTable, RowsetBuilder, TableSchema, UnversionedRowset, Value};
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+
+use super::loggen::parse_line;
+
+/// The shared output table (user, cluster) → (count, last_ts).
+pub const OUTPUT_TABLE: &str = "//out/user_activity";
+
+/// Schema of [`OUTPUT_TABLE`].
+pub fn output_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("user", ColumnType::Str),
+        ColumnSchema::key("cluster", ColumnType::Str),
+        ColumnSchema::value("count", ColumnType::Int64),
+        ColumnSchema::value("last_ts", ColumnType::Int64),
+    ])
+}
+
+/// Create [`OUTPUT_TABLE`] if missing (examples / figures call this once).
+pub fn ensure_output_table(client: &Client) {
+    use crate::dyntable::store::StoreError;
+    match client
+        .store
+        .create_table(OUTPUT_TABLE, output_schema(), WriteCategory::UserOutput)
+    {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
+        Err(e) => panic!("cannot create output table: {e}"),
+    }
+}
+
+/// Columns of the mapped (shuffled) rows.
+pub fn mapped_name_table() -> Arc<NameTable> {
+    NameTable::new(&["user", "cluster", "ts"])
+}
+
+/// Build a [`ComputeStage`] per the processor's compute mode.
+pub fn stage_for(mode: ComputeMode, artifacts_dir: &str) -> Arc<dyn ComputeStage> {
+    match mode {
+        ComputeMode::Native => Arc::new(NativeStage),
+        ComputeMode::Hlo => crate::compute::hlo::HloStage::load(std::path::Path::new(
+            artifacts_dir,
+        ))
+        .expect("loading AOT artifacts (run `make artifacts`)"),
+    }
+}
+
+/// The §5.2 mapper: split batched messages, parse, filter, shuffle.
+pub struct LogAnalyticsMapper {
+    stage: Arc<dyn ComputeStage>,
+    num_reducers: u32,
+    out_nt: Arc<NameTable>,
+}
+
+impl Mapper for LogAnalyticsMapper {
+    fn map(&mut self, rows: UnversionedRowset) -> PartitionedRowset {
+        // 1. Split batched messages into individual lines and parse.
+        // Parsed fields stay *borrowed* from the payload strings — ~85 %
+        // of lines are filtered out, so materializing them would waste
+        // two string allocations per dropped line (§Perf optimization 3).
+        let mut lines: Vec<(Option<&str>, &str, i64)> = Vec::new();
+        let mut user_hash = Vec::new();
+        let mut cluster_hash = Vec::new();
+        let mut has_user = Vec::new();
+        for r in rows.rows() {
+            let Some(payload) = r.get(INPUT_COL_PAYLOAD).and_then(Value::as_str) else {
+                continue;
+            };
+            for raw in payload.lines() {
+                let Some(p) = parse_line(raw) else { continue };
+                user_hash.push(fnv1a32(p.user.unwrap_or("")));
+                cluster_hash.push(fnv1a32(p.cluster));
+                has_user.push(p.user.is_some());
+                lines.push((p.user, p.cluster, p.ts));
+            }
+        }
+
+        // 2. Numeric stage: filter mask + shuffle function.
+        let out = self
+            .stage
+            .map_stage(&user_hash, &cluster_hash, &has_user, self.num_reducers);
+
+        // 3. Materialize only the surviving rows.
+        let mut b = RowsetBuilder::new(self.out_nt.clone());
+        let mut partitions = Vec::new();
+        for (i, (user, cluster, ts)) in lines.into_iter().enumerate() {
+            if out.keep[i] {
+                b.push(row![user.unwrap_or(""), cluster, ts]);
+                partitions.push(out.reducer[i] as usize);
+            }
+        }
+        PartitionedRowset {
+            rowset: b.build(),
+            partition_indexes: partitions,
+        }
+    }
+}
+
+/// The §5.2 reducer: group by (user, cluster), count + max-ts, upsert into
+/// the shared output table inside the exactly-once transaction.
+pub struct LogAnalyticsReducer {
+    stage: Arc<dyn ComputeStage>,
+    client: Client,
+}
+
+impl Reducer for LogAnalyticsReducer {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction> {
+        if rows.is_empty() {
+            return None;
+        }
+        // 1. Slot assignment in first-seen order (deterministic). Group
+        // keys stay *borrowed* from the batch — only one pair of string
+        // allocations per distinct group at write-out, not per row
+        // (§Perf iteration 7).
+        let mut slot_of: HashMap<(&str, &str), u32> = HashMap::new();
+        let mut keys: Vec<(&str, &str)> = Vec::new();
+        let mut slots = Vec::with_capacity(rows.len());
+        let mut ts_off = Vec::with_capacity(rows.len());
+        let mut valid = Vec::with_capacity(rows.len());
+
+        let nt = rows.name_table();
+        let (u_col, c_col, t_col) = (nt.id("user")?, nt.id("cluster")?, nt.id("ts")?);
+        // f32 offsets keep millisecond precision within a batch.
+        let base_ts = rows
+            .rows()
+            .iter()
+            .filter_map(|r| r.get(t_col).and_then(Value::as_i64))
+            .min()
+            .unwrap_or(0);
+        for r in rows.rows() {
+            let (Some(u), Some(c), Some(t)) = (
+                r.get(u_col).and_then(Value::as_str),
+                r.get(c_col).and_then(Value::as_str),
+                r.get(t_col).and_then(Value::as_i64),
+            ) else {
+                continue;
+            };
+            let key = (u, c);
+            let next = slot_of.len() as u32;
+            let slot = *slot_of.entry(key).or_insert_with(|| {
+                keys.push(key);
+                next
+            });
+            slots.push(slot);
+            ts_off.push((t - base_ts) as f32);
+            valid.push(true);
+        }
+        if slots.is_empty() {
+            return None;
+        }
+
+        // 2. Numeric stage: per-slot count + max ts offset.
+        let agg = self
+            .stage
+            .reduce_stage(&slots, &ts_off, &valid, keys.len() as u32);
+
+        // 3. Upsert aggregates transactionally; the reducer instance will
+        // add its meta-state to this same transaction (§4.4.2 step 6).
+        let mut txn = self.client.begin();
+        for (slot, (user, cluster)) in keys.iter().enumerate() {
+            if agg.counts[slot] == 0 {
+                continue;
+            }
+            let (user, cluster) = (user.to_string(), cluster.to_string());
+            let last_ts = base_ts + agg.max_ts[slot] as i64;
+            let key = vec![Value::Str(user.clone()), Value::Str(cluster.clone())];
+            let (mut count, mut max_ts) = (0i64, i64::MIN);
+            if let Ok(Some(existing)) = txn.lookup(OUTPUT_TABLE, &key) {
+                count = existing.get(2).and_then(Value::as_i64).unwrap_or(0);
+                max_ts = existing.get(3).and_then(Value::as_i64).unwrap_or(i64::MIN);
+            }
+            let row = row![user, cluster, count + agg.counts[slot], max_ts.max(last_ts)];
+            txn.write(OUTPUT_TABLE, row).ok()?;
+        }
+        Some(txn)
+    }
+}
+
+/// `CreateMapper` for the analytics workload.
+pub fn analytics_mapper_factory(mode: ComputeMode) -> MapperFactory {
+    Arc::new(
+        move |user_cfg: &Yson, _client: &Client, _input_nt: Arc<NameTable>, spec: &MapperSpec| {
+            let artifacts = user_cfg.get_str_or("artifacts_dir", "artifacts").to_string();
+            Box::new(LogAnalyticsMapper {
+                stage: stage_for(mode, &artifacts),
+                num_reducers: spec.num_reducers as u32,
+                out_nt: mapped_name_table(),
+            }) as Box<dyn Mapper>
+        },
+    )
+}
+
+/// `CreateReducer` for the analytics workload.
+pub fn analytics_reducer_factory(mode: ComputeMode) -> ReducerFactory {
+    Arc::new(move |user_cfg: &Yson, client: &Client, _spec: &ReducerSpec| {
+        let artifacts = user_cfg.get_str_or("artifacts_dir", "artifacts").to_string();
+        ensure_output_table(client);
+        Box::new(LogAnalyticsReducer {
+            stage: stage_for(mode, &artifacts),
+            client: client.clone(),
+        }) as Box<dyn Reducer>
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::processor::ClusterEnv;
+    use crate::queue::input_name_table;
+    use crate::util::Clock;
+
+    fn input_rowset(payloads: &[&str]) -> UnversionedRowset {
+        let mut b = RowsetBuilder::new(input_name_table());
+        for p in payloads {
+            b.push(row![*p, 0i64]);
+        }
+        b.build()
+    }
+
+    fn mapper(num_reducers: u32) -> LogAnalyticsMapper {
+        LogAnalyticsMapper {
+            stage: Arc::new(NativeStage),
+            num_reducers,
+            out_nt: mapped_name_table(),
+        }
+    }
+
+    #[test]
+    fn mapper_splits_filters_and_partitions() {
+        let mut m = mapper(4);
+        let out = m.map(input_rowset(&[
+            "ts=100 cluster=hahn method=GetNode user=alice dur=5\n\
+             ts=101 cluster=hahn method=SetNode dur=6\n\
+             ts=102 cluster=freud method=Commit user=root dur=7",
+            "ts=103 cluster=bohr method=Heartbeat dur=8",
+        ]));
+        // Only the two lines with user= survive.
+        assert_eq!(out.rowset.len(), 2);
+        assert_eq!(out.partition_indexes.len(), 2);
+        assert!(out.partition_indexes.iter().all(|&p| p < 4));
+        assert_eq!(out.rowset.cell(0, "user").unwrap().as_str(), Some("alice"));
+        assert_eq!(out.rowset.cell(1, "user").unwrap().as_str(), Some("root"));
+        assert_eq!(out.rowset.cell(1, "cluster").unwrap().as_str(), Some("freud"));
+    }
+
+    #[test]
+    fn mapper_is_deterministic() {
+        let mut m1 = mapper(8);
+        let mut m2 = mapper(8);
+        let input = input_rowset(&[
+            "ts=1 cluster=a method=M user=u1 dur=1\nts=2 cluster=b method=M user=u2 dur=2",
+        ]);
+        let a = m1.map(input.clone());
+        let b = m2.map(input);
+        assert_eq!(a.rowset, b.rowset);
+        assert_eq!(a.partition_indexes, b.partition_indexes);
+    }
+
+    #[test]
+    fn mapper_same_key_same_reducer() {
+        let mut m = mapper(4);
+        let out = m.map(input_rowset(&[
+            "ts=1 cluster=hahn method=A user=bob dur=1",
+            "ts=9 cluster=hahn method=B user=bob dur=2",
+        ]));
+        assert_eq!(out.partition_indexes[0], out.partition_indexes[1]);
+    }
+
+    #[test]
+    fn mapper_survives_garbage_payloads() {
+        let mut m = mapper(2);
+        let out = m.map(input_rowset(&["%%% not a log line", ""]));
+        assert_eq!(out.rowset.len(), 0);
+    }
+
+    #[test]
+    fn reducer_aggregates_into_output_table() {
+        let env = ClusterEnv::new(Clock::realtime(), 1);
+        let client = env.client();
+        ensure_output_table(&client);
+        let mut r = LogAnalyticsReducer {
+            stage: Arc::new(NativeStage),
+            client: client.clone(),
+        };
+        let mut b = RowsetBuilder::new(mapped_name_table());
+        b.push(row!["alice", "hahn", 100i64]);
+        b.push(row!["alice", "hahn", 300i64]);
+        b.push(row!["root", "freud", 200i64]);
+        let txn = r.reduce(b.build()).expect("reducer should open a txn");
+        txn.commit().unwrap();
+
+        let rows = client.store.scan(OUTPUT_TABLE).unwrap();
+        assert_eq!(rows.len(), 2);
+        let alice = &rows[0];
+        assert_eq!(alice.get(0).unwrap().as_str(), Some("alice"));
+        assert_eq!(alice.get(2).unwrap().as_i64(), Some(2));
+        assert_eq!(alice.get(3).unwrap().as_i64(), Some(300));
+
+        // Second batch accumulates.
+        let mut b = RowsetBuilder::new(mapped_name_table());
+        b.push(row!["alice", "hahn", 250i64]);
+        let txn = r.reduce(b.build()).unwrap();
+        txn.commit().unwrap();
+        let rows = client.store.scan(OUTPUT_TABLE).unwrap();
+        assert_eq!(rows[0].get(2).unwrap().as_i64(), Some(3));
+        assert_eq!(rows[0].get(3).unwrap().as_i64(), Some(300), "max ts keeps 300");
+    }
+
+    #[test]
+    fn reducer_empty_batch_returns_none() {
+        let env = ClusterEnv::new(Clock::realtime(), 1);
+        let client = env.client();
+        ensure_output_table(&client);
+        let mut r = LogAnalyticsReducer {
+            stage: Arc::new(NativeStage),
+            client,
+        };
+        assert!(r
+            .reduce(UnversionedRowset::empty(mapped_name_table()))
+            .is_none());
+    }
+
+    #[test]
+    fn factories_build_workers() {
+        let env = ClusterEnv::new(Clock::realtime(), 1);
+        let client = env.client();
+        let mf = analytics_mapper_factory(ComputeMode::Native);
+        let rf = analytics_reducer_factory(ComputeMode::Native);
+        let mspec = MapperSpec {
+            processor_guid: crate::util::Guid::from_seed(1),
+            state_table: "t".into(),
+            index: 0,
+            guid: crate::util::Guid::from_seed(2),
+            num_reducers: 2,
+        };
+        let rspec = ReducerSpec {
+            processor_guid: crate::util::Guid::from_seed(1),
+            state_table: "t".into(),
+            index: 0,
+            guid: crate::util::Guid::from_seed(3),
+            num_mappers: 2,
+        };
+        let cfg = Yson::parse("{}").unwrap();
+        let _m = mf(&cfg, &client, input_name_table(), &mspec);
+        let _r = rf(&cfg, &client, &rspec);
+        assert!(client.store.scan(OUTPUT_TABLE).is_ok());
+    }
+}

@@ -1,0 +1,21 @@
+//! The evaluation workload (§5.2), synthesized.
+//!
+//! The paper's testbed consumed the YT master-node log topic: 450
+//! partitions, ~3.5 GB/s of "batched and joined master node log entries",
+//! where 80–90 % of individual messages lack a `user` field and key
+//! frequency is heavily skewed ("root and a few other system users").
+//! [`loggen`] reproduces those *statistical* properties at laptop scale;
+//! [`producer`] feeds the generated batches into the input queues at a
+//! configurable (uneven per-partition) rate; [`analytics`] is the user
+//! code of the experiment: split batched messages, filter rows without a
+//! user, hash-partition by (user, cluster), and aggregate
+//! (count, last-access timestamp) per (user, cluster) into a shared sorted
+//! table.
+
+pub mod loggen;
+pub mod producer;
+pub mod analytics;
+
+pub use analytics::{analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE};
+pub use loggen::{LogGen, LogGenConfig};
+pub use producer::{start_producers, ProducerConfig, ProducerHandle};

@@ -1,0 +1,134 @@
+//! Shared rig for the fault-injection and property test suites: a
+//! deterministic static workload, a fast-timing processor config, and the
+//! exactly-once ground-truth counters.
+
+use std::sync::Arc;
+
+use yt_stream::coordinator::processor::ClusterEnv;
+use yt_stream::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+use yt_stream::figures::scenario::fill_static_input;
+use yt_stream::queue::input_name_table;
+use yt_stream::queue::ordered_table::OrderedTable;
+use yt_stream::rows::Value;
+use yt_stream::util::yson::Yson;
+use yt_stream::util::Clock;
+use yt_stream::workload::analytics::{
+    analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE,
+};
+use yt_stream::workload::loggen::parse_line;
+
+pub struct Rig {
+    pub env: ClusterEnv,
+    pub input: InputSpec,
+    pub table: Arc<OrderedTable>,
+    /// Ground truth: input log lines carrying a user field.
+    pub expected_lines: u64,
+}
+
+/// Count lines with a user field in the (untrimmed) input.
+pub fn count_user_lines(table: &Arc<OrderedTable>) -> u64 {
+    use yt_stream::queue::{ContinuationToken, PartitionReader};
+    let mut total = 0;
+    for p in 0..table.tablet_count() {
+        let mut reader = table.reader(p);
+        let batch = reader
+            .read(0, i64::MAX / 2, &ContinuationToken::initial())
+            .unwrap();
+        for row in batch.rowset.rows() {
+            let payload = row.get(0).unwrap().as_str().unwrap();
+            for line in payload.lines() {
+                if parse_line(line).and_then(|p| p.user.map(|_| ())).is_some() {
+                    total += 1;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Sum of the output table's count column (must equal `expected_lines`
+/// when everything drained exactly once).
+pub fn output_count_sum(env: &ClusterEnv) -> i64 {
+    env.store
+        .scan(OUTPUT_TABLE)
+        .map(|rows| {
+            rows.iter()
+                .map(|r| r.get(2).and_then(Value::as_i64).unwrap_or(0))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+pub fn rig(partitions: usize, messages: usize, seed: u64) -> Rig {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), seed);
+    let table = OrderedTable::new(
+        "//input/rig",
+        input_name_table(),
+        partitions,
+        env.accounting.clone(),
+    );
+    fill_static_input(&table, &clock, messages, seed);
+    let expected_lines = count_user_lines(&table);
+    Rig {
+        env,
+        input: InputSpec::Ordered(table.clone()),
+        table,
+        expected_lines,
+    }
+}
+
+pub fn fast_config(partitions: usize, reducers: usize) -> ProcessorConfig {
+    ProcessorConfig {
+        mapper_count: partitions,
+        reducer_count: reducers,
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        split_brain_delay_ms: 50,
+        session_ttl_ms: 1_500,
+        heartbeat_period_ms: 100,
+        ..ProcessorConfig::default()
+    }
+}
+
+pub fn launch(rig: &Rig, cfg: ProcessorConfig) -> StreamingProcessor {
+    StreamingProcessor::launch(
+        cfg,
+        rig.env.clone(),
+        rig.input.clone(),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .expect("launch")
+}
+
+/// Wait until the output count equals `expected` (or return the last
+/// observed value on timeout).
+pub fn wait_for_output(env: &ClusterEnv, expected: i64, wall_ms: u64) -> i64 {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wall_ms);
+    let mut last = -1;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let cur = output_count_sum(env);
+        if cur == expected {
+            return cur;
+        }
+        last = cur;
+    }
+    last
+}
+
+/// Assert the exactly-once invariant with a readable message.
+pub fn assert_exactly_once(rig: &Rig, got: i64, context: &str) {
+    assert_eq!(
+        got, rig.expected_lines as i64,
+        "exactly-once violated ({context}): expected {} user lines, output counted {} \
+         ({} means loss, {} means duplication)",
+        rig.expected_lines,
+        got,
+        if got < rig.expected_lines as i64 { "less" } else { "-" },
+        if got > rig.expected_lines as i64 { "more" } else { "-" },
+    );
+}

@@ -1,0 +1,359 @@
+//! End-to-end integration tests: full streaming processor over the §5.2
+//! analytics workload on a simulated cluster.
+//!
+//! The load-bearing assertion everywhere is **exactly-once**: after the
+//! processor drains a known input, the output table's `count` column must
+//! sum to exactly the number of input log lines that carry a `user` field
+//! — no loss, no duplication, regardless of what happened in between.
+
+use std::sync::Arc;
+
+use yt_stream::coordinator::processor::ClusterEnv;
+use yt_stream::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+use yt_stream::figures::scenario::fill_static_input;
+use yt_stream::metrics::hub::names;
+use yt_stream::queue::input_name_table;
+use yt_stream::queue::ordered_table::OrderedTable;
+use yt_stream::rows::Value;
+use yt_stream::util::yson::Yson;
+use yt_stream::util::Clock;
+use yt_stream::workload::analytics::{
+    analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE,
+};
+use yt_stream::workload::loggen::parse_line;
+
+/// Count the ground truth: lines with a user field currently in the input.
+fn count_user_lines(table: &Arc<OrderedTable>) -> u64 {
+    let mut total = 0;
+    for p in 0..table.tablet_count() {
+        let mut reader = table.reader(p);
+        use yt_stream::queue::{ContinuationToken, PartitionReader};
+        let batch = reader
+            .read(0, i64::MAX / 2, &ContinuationToken::initial())
+            .unwrap();
+        for row in batch.rowset.rows() {
+            let payload = row.get(0).unwrap().as_str().unwrap();
+            for line in payload.lines() {
+                if parse_line(line).and_then(|p| p.user.map(|_| ())).is_some() {
+                    total += 1;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Sum of the output table's `count` column.
+fn output_count_sum(env: &ClusterEnv) -> i64 {
+    env.store
+        .scan(OUTPUT_TABLE)
+        .map(|rows| {
+            rows.iter()
+                .map(|r| r.get(2).and_then(Value::as_i64).unwrap_or(0))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+struct TestRig {
+    env: ClusterEnv,
+    input: InputSpec,
+    table: Arc<OrderedTable>,
+    expected_lines: u64,
+}
+
+fn rig(partitions: usize, messages: usize, seed: u64) -> TestRig {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), seed);
+    let table = OrderedTable::new(
+        "//input/test",
+        input_name_table(),
+        partitions,
+        env.accounting.clone(),
+    );
+    fill_static_input(&table, &clock, messages, seed);
+    let expected_lines = count_user_lines(&table);
+    TestRig {
+        env,
+        input: InputSpec::Ordered(table.clone()),
+        table,
+        expected_lines,
+    }
+}
+
+fn fast_config(partitions: usize, reducers: usize) -> ProcessorConfig {
+    ProcessorConfig {
+        mapper_count: partitions,
+        reducer_count: reducers,
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        split_brain_delay_ms: 50,
+        session_ttl_ms: 1_500,
+        heartbeat_period_ms: 100,
+        ..ProcessorConfig::default()
+    }
+}
+
+fn launch(rig: &TestRig, cfg: ProcessorConfig) -> StreamingProcessor {
+    StreamingProcessor::launch(
+        cfg,
+        rig.env.clone(),
+        rig.input.clone(),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .expect("launch")
+}
+
+/// Wait until the output count matches `expected` (or time out).
+fn wait_for_output(env: &ClusterEnv, expected: i64, wall_ms: u64) -> i64 {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wall_ms);
+    let mut last = -1;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let cur = output_count_sum(env);
+        if cur == expected {
+            return cur;
+        }
+        last = cur;
+    }
+    last
+}
+
+#[test]
+fn drains_static_input_exactly_once() {
+    let rig = rig(4, 120, 0xA11CE);
+    assert!(rig.expected_lines > 0, "workload generated no user lines");
+    let processor = launch(&rig, fast_config(4, 2));
+
+    let got = wait_for_output(&rig.env, rig.expected_lines as i64, 20_000);
+    processor.stop();
+    assert_eq!(
+        got, rig.expected_lines as i64,
+        "exactly-once violated: expected {} user lines, output counted {}",
+        rig.expected_lines, got
+    );
+}
+
+#[test]
+fn input_gets_trimmed_after_processing() {
+    let rig = rig(2, 80, 0x7218);
+    let processor = launch(&rig, fast_config(2, 2));
+    wait_for_output(&rig.env, rig.expected_lines as i64, 20_000);
+
+    // Trims are periodic; give them a beat, then check the input store
+    // shrank (end-to-end exactly-once support, §4.3.5).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(10_000);
+    let mut retained = usize::MAX;
+    while std::time::Instant::now() < deadline {
+        retained = rig.table.retained_rows();
+        if retained == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    processor.stop();
+    assert_eq!(retained, 0, "input rows were never trimmed");
+}
+
+#[test]
+fn write_amplification_is_meta_only() {
+    let rig = rig(2, 150, 0x3B);
+    let processor = launch(&rig, fast_config(2, 2));
+    wait_for_output(&rig.env, rig.expected_lines as i64, 20_000);
+    let report = processor.wa_report("test");
+    processor.stop();
+
+    assert!(
+        report.payload_repersisted_bytes() == 0,
+        "streaming path must not persist payload (got {} bytes)",
+        report.payload_repersisted_bytes()
+    );
+    assert!(
+        report.factor() < 0.5,
+        "WA factor should be far below 1 (meta-state only), got {}",
+        report.factor()
+    );
+    assert!(report.meta_bytes() > 0, "meta-state must be persisted");
+}
+
+#[test]
+fn live_producers_steady_state() {
+    use yt_stream::workload::producer::{start_producers, ProducerConfig};
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0x11FE);
+    let table = OrderedTable::new("//input/live", input_name_table(), 3, env.accounting.clone());
+    let input = InputSpec::Ordered(table);
+    let producers = start_producers(
+        input.clone(),
+        clock.clone(),
+        ProducerConfig {
+            messages_per_sec: 400.0,
+            ..ProducerConfig::default()
+        },
+        0x11FE,
+    );
+    let processor = StreamingProcessor::launch(
+        fast_config(3, 2),
+        env.clone(),
+        input,
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+
+    std::thread::sleep(std::time::Duration::from_millis(2_500));
+    producers.stop();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(15_000);
+    while std::time::Instant::now() < deadline {
+        if env.metrics.get_counter(names::REDUCER_COMMITS) > 3 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    let commits = env.metrics.get_counter(names::REDUCER_COMMITS);
+    let rows_read = env.metrics.get_counter(names::MAPPER_ROWS_READ);
+    // Read lag must have been measured for every mapper.
+    let lag_series = env.metrics.series_with_prefix("mapper/");
+    let lag_count = lag_series
+        .iter()
+        .filter(|s| s.name().ends_with("read_lag_ms") && !s.is_empty())
+        .count();
+    processor.stop();
+
+    assert!(rows_read > 0, "mappers read nothing");
+    assert!(commits > 0, "reducers never committed");
+    assert_eq!(lag_count, 3, "all mappers must report read lag");
+}
+
+#[test]
+fn logbroker_input_end_to_end() {
+    use yt_stream::queue::logbroker::LbTopic;
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0x1B);
+    let topic = LbTopic::new("//lb/test", input_name_table(), 2, env.accounting.clone());
+
+    // Fill deterministically through the LogBroker path (gappy offsets →
+    // exercises continuation tokens in mapper state).
+    use yt_stream::row;
+    use yt_stream::workload::loggen::{LogGen, LogGenConfig};
+    let mut expected = 0u64;
+    for p in 0..2 {
+        let mut gen = LogGen::new(LogGenConfig::default(), clock.clone(), 5, p);
+        let mut rows = Vec::new();
+        for _ in 0..100 {
+            let (msg, _) = gen.next_message();
+            expected += msg
+                .lines()
+                .filter(|l| parse_line(l).and_then(|pl| pl.user.map(|_| ())).is_some())
+                .count() as u64;
+            rows.push(row![msg, clock.now_ms() as i64]);
+        }
+        topic.append(p, rows).unwrap();
+    }
+
+    let processor = StreamingProcessor::launch(
+        fast_config(2, 2),
+        env.clone(),
+        InputSpec::LogBroker(topic.clone()),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+    let got = wait_for_output(&env, expected as i64, 20_000);
+
+    // Continuation tokens must have been persisted in mapper state.
+    let state = env
+        .store
+        .lookup("//sys/processor/mapper_state", &[Value::Int64(0)])
+        .unwrap()
+        .expect("mapper 0 state row");
+    let token = state.get(3).unwrap().as_str().unwrap().to_string();
+    processor.stop();
+
+    assert_eq!(got, expected as i64, "exactly-once violated over LogBroker");
+    assert!(
+        token.starts_with("lb:"),
+        "mapper state must carry a LogBroker continuation token, got {token:?}"
+    );
+}
+
+#[test]
+fn pipelined_reducer_matches_serial_results() {
+    let rig = rig(2, 100, 0x99);
+    let cfg = ProcessorConfig {
+        pipelined_reducer: true,
+        ..fast_config(2, 2)
+    };
+    let processor = launch(&rig, cfg);
+    let got = wait_for_output(&rig.env, rig.expected_lines as i64, 20_000);
+    processor.stop();
+    assert_eq!(
+        got, rig.expected_lines as i64,
+        "pipelined reducer must preserve exactly-once"
+    );
+}
+
+#[test]
+fn many_partition_smoke() {
+    // Scaled-down nod to the paper's 450-partition deployment: many small
+    // mappers, few reducers, everything still exactly-once.
+    let rig = rig(24, 20, 0x450);
+    let processor = launch(&rig, fast_config(24, 3));
+    let got = wait_for_output(&rig.env, rig.expected_lines as i64, 30_000);
+    processor.stop();
+    assert_eq!(got, rig.expected_lines as i64);
+}
+
+#[test]
+fn grouped_input_multi_partition_mappers_exactly_once() {
+    // §6 multi-partition mappers: 8 source partitions, 4 mappers reading
+    // 2 each through the deterministic order log; exactly-once must hold
+    // across a mapper kill (which forces the catch-up replay path).
+    use yt_stream::multipart::GroupedInput;
+
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0x69);
+    let table = OrderedTable::new(
+        "//input/grouped",
+        input_name_table(),
+        8,
+        env.accounting.clone(),
+    );
+    fill_static_input(&table, &clock, 60, 0x69);
+    let expected = count_user_lines(&table);
+    let grouped = GroupedInput::new(
+        InputSpec::Ordered(table),
+        2,
+        env.accounting.clone(),
+    );
+    let input = InputSpec::Grouped(grouped);
+
+    let processor = StreamingProcessor::launch(
+        fast_config(4, 2),
+        env.clone(),
+        input,
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+
+    // Kill a mapper mid-run: its replacement must replay the order log.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    processor
+        .supervisor()
+        .kill(yt_stream::controller::Role::Mapper, 1);
+
+    let got = wait_for_output(&env, expected as i64, 30_000);
+    processor.stop();
+    assert_eq!(
+        got, expected as i64,
+        "exactly-once violated over grouped input (multi-partition mappers)"
+    );
+}

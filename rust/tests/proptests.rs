@@ -1,0 +1,318 @@
+//! Property-based tests for the DESIGN.md §5 invariants, driven by the
+//! in-crate miniprop runner (seeded, replayable via `MINIPROP_SEED`).
+//!
+//! 1. exactly-once under *random fault schedules*;
+//! 2. deterministic shuffle assignment across independent runs;
+//! 3. window/bucket pointer-count consistency under random push/ack;
+//! 4. dynamic-table transactions serialize read-modify-writes.
+
+mod common;
+
+use common::*;
+use yt_stream::controller::Role;
+use yt_stream::util::miniprop::{check_with, Config};
+use yt_stream::{prop_assert, prop_assert_eq};
+
+/// Invariant 1: any schedule of kills, pauses, twins, network faults and
+/// store blips preserves exactly-once once the system heals.
+#[test]
+fn random_fault_schedules_preserve_exactly_once() {
+    check_with(
+        Config {
+            cases: 6, // each case runs a full pipeline (~1-2 s)
+            base_seed: 0xFA11,
+        },
+        "exactly-once under random fault schedule",
+        |rng| {
+            let mappers = rng.gen_range(2, 4) as usize;
+            let reducers = rng.gen_range(1, 3) as usize;
+            let rig = rig(mappers, 80, rng.next_u64());
+            let processor = launch(&rig, fast_config(mappers, reducers));
+            let sup = processor.supervisor().clone();
+
+            let steps = rng.gen_range(2, 6);
+            for _ in 0..steps {
+                std::thread::sleep(std::time::Duration::from_millis(rng.gen_range(50, 250)));
+                match rng.next_below(7) {
+                    0 => sup.kill(Role::Mapper, rng.next_below(mappers as u64) as usize),
+                    1 => sup.kill(Role::Reducer, rng.next_below(reducers as u64) as usize),
+                    2 => {
+                        let m = rng.next_below(mappers as u64) as usize;
+                        sup.set_paused(Role::Mapper, m, true);
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                        sup.set_paused(Role::Mapper, m, false);
+                    }
+                    3 => {
+                        let r = rng.next_below(reducers as u64) as usize;
+                        sup.set_paused(Role::Reducer, r, true);
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                        sup.set_paused(Role::Reducer, r, false);
+                    }
+                    4 => {
+                        sup.duplicate(Role::Mapper, rng.next_below(mappers as u64) as usize);
+                    }
+                    5 => {
+                        let p = rng.next_f64() * 0.4;
+                        rig.env.net.with_faults(|f| f.drop_prob = p);
+                    }
+                    _ => {
+                        rig.env.store.set_unavailable(true);
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                        rig.env.store.set_unavailable(false);
+                    }
+                }
+            }
+            // Heal and drain.
+            rig.env.net.with_faults(|f| f.heal_all());
+            rig.env.store.set_unavailable(false);
+            let got = wait_for_output(&rig.env, rig.expected_lines as i64, 40_000);
+            processor.stop();
+            prop_assert_eq!(
+                got,
+                rig.expected_lines as i64,
+                "schedule with {} steps, {} mappers, {} reducers",
+                steps,
+                mappers,
+                reducers
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 2 (§4.6 determinism): two independent runs over identical
+/// input produce *identical* output tables — same keys, counts and
+/// timestamps — because Map is deterministic and shuffle indexes are
+/// stable across re-reads.
+#[test]
+fn independent_runs_produce_identical_output() {
+    check_with(
+        Config {
+            cases: 4,
+            base_seed: 0xDE7E,
+        },
+        "run-to-run output determinism",
+        |rng| {
+            let seed = rng.next_u64();
+            let mut outputs = Vec::new();
+            for _run in 0..2 {
+                let rig = rig(2, 60, seed);
+                let processor = launch(&rig, fast_config(2, 2));
+                let got = wait_for_output(&rig.env, rig.expected_lines as i64, 30_000);
+                prop_assert_eq!(got, rig.expected_lines as i64);
+                let rows = rig
+                    .env
+                    .store
+                    .scan(yt_stream::workload::analytics::OUTPUT_TABLE)
+                    .unwrap();
+                processor.stop();
+                // Compare (user, cluster, count); the last_ts column depends
+                // on wall-clock produce times, which differ between fills.
+                let projected: Vec<(String, String, i64)> = rows
+                    .iter()
+                    .map(|r| {
+                        (
+                            r.get(0).unwrap().as_str().unwrap().to_string(),
+                            r.get(1).unwrap().as_str().unwrap().to_string(),
+                            r.get(2).unwrap().as_i64().unwrap(),
+                        )
+                    })
+                    .collect();
+                outputs.push(projected);
+            }
+            prop_assert_eq!(&outputs[0], &outputs[1], "outputs diverged");
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 3: the window/bucket pointer-count model. Random pushes and
+/// acks must keep: (a) every entry's bucket_ptr_count == number of buckets
+/// whose head lies in it; (b) trim never pops a pinned entry; (c) trim
+/// advances local state to exactly the last popped entry's end.
+#[test]
+fn window_bucket_pointer_counts_consistent() {
+    use yt_stream::coordinator::bucket::{BucketRow, BucketState};
+    use yt_stream::coordinator::window::{WindowEntry, WindowQueue};
+    use yt_stream::queue::ContinuationToken;
+    use yt_stream::rows::{NameTable, RowsetBuilder};
+
+    fn model_check(
+        window: &WindowQueue,
+        buckets: &[BucketState],
+    ) -> Result<(), String> {
+        // Recompute expected counts from bucket heads.
+        let mut expected: std::collections::HashMap<u64, usize> = Default::default();
+        for b in buckets {
+            if let Some(e) = b.first_entry_index() {
+                *expected.entry(e).or_default() += 1;
+            }
+        }
+        for e in window.iter() {
+            let want = expected.get(&e.entry_index).copied().unwrap_or(0);
+            prop_assert_eq!(
+                e.bucket_ptr_count,
+                want,
+                "entry {} count mismatch",
+                e.entry_index
+            );
+        }
+        Ok(())
+    }
+
+    check_with(
+        Config {
+            cases: 64,
+            base_seed: 0x81C,
+        },
+        "window/bucket invariants",
+        |rng| {
+            let nbuckets = rng.gen_range(1, 5) as usize;
+            let mut window = WindowQueue::new();
+            let mut buckets: Vec<BucketState> =
+                (0..nbuckets).map(|_| BucketState::new()).collect();
+            let nt = NameTable::new(&["v"]);
+            let mut next_shuffle = 0i64;
+            let mut next_input = 0i64;
+
+            for _step in 0..rng.gen_range(5, 40) {
+                if rng.chance(0.6) {
+                    // Push a new entry with 0..6 rows randomly bucketed.
+                    let nrows = rng.next_below(6) as usize;
+                    let mut b = RowsetBuilder::new(nt.clone());
+                    for i in 0..nrows {
+                        b.push(yt_stream::row![next_shuffle + i as i64]);
+                    }
+                    let rowset = b.build();
+                    let byte_size = rowset.byte_size();
+                    let entry_index = window.next_entry_index();
+                    window.push(WindowEntry {
+                        entry_index,
+                        rowset,
+                        input_begin: next_input,
+                        input_end: next_input + 1,
+                        shuffle_begin: next_shuffle,
+                        shuffle_end: next_shuffle + nrows as i64,
+                        continuation_token: ContinuationToken::initial(),
+                        bucket_ptr_count: 0,
+                        byte_size,
+                        read_ts_ms: 0,
+                    });
+                    for i in 0..nrows {
+                        let target = rng.next_below(nbuckets as u64) as usize;
+                        let became_head = buckets[target].push(BucketRow {
+                            shuffle_index: next_shuffle + i as i64,
+                            entry_index,
+                        });
+                        if became_head {
+                            window.get_mut(entry_index).unwrap().bucket_ptr_count += 1;
+                        }
+                    }
+                    next_shuffle += nrows as i64;
+                    next_input += 1;
+                } else {
+                    // Ack a random prefix of a random bucket.
+                    let target = rng.next_below(nbuckets as u64) as usize;
+                    let upto = rng.gen_range(0, (next_shuffle.max(1)) as u64) as i64;
+                    let ack = buckets[target].ack(upto);
+                    if ack.old_head_entry != ack.new_head_entry {
+                        if let Some(old) = ack.old_head_entry {
+                            if let Some(e) = window.get_mut(old) {
+                                e.bucket_ptr_count -= 1;
+                            }
+                        }
+                        if let Some(new) = ack.new_head_entry {
+                            if let Some(e) = window.get_mut(new) {
+                                e.bucket_ptr_count += 1;
+                            }
+                        }
+                    }
+                    let before_first = window.first_entry_index();
+                    if let Some(out) = window.trim_front() {
+                        prop_assert!(
+                            out.entries_popped > 0,
+                            "trim outcome without popped entries"
+                        );
+                        prop_assert!(
+                            window.first_entry_index() == before_first + out.entries_popped as u64,
+                            "first_entry_index out of sync"
+                        );
+                    }
+                    // (b): any bucket head must still be resident.
+                    for b in &buckets {
+                        if let Some(e) = b.first_entry_index() {
+                            prop_assert!(
+                                window.get(e).is_some(),
+                                "bucket head entry {e} was trimmed away"
+                            );
+                        }
+                    }
+                }
+                model_check(&window, &buckets)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 4: optimistic transactions serialize read-modify-writes —
+/// concurrent increments with retry lose nothing.
+#[test]
+fn txn_increments_serialize() {
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::rows::{ColumnSchema, ColumnType, TableSchema, Value};
+    use yt_stream::storage::WriteCategory;
+    use yt_stream::util::Clock;
+
+    check_with(
+        Config {
+            cases: 8,
+            base_seed: 0x7C27,
+        },
+        "txn serializability (counter)",
+        |rng| {
+            let env = ClusterEnv::new(Clock::realtime(), rng.next_u64());
+            env.store
+                .create_table(
+                    "counter",
+                    TableSchema::new(vec![
+                        ColumnSchema::key("k", ColumnType::Int64),
+                        ColumnSchema::value("v", ColumnType::Int64),
+                    ]),
+                    WriteCategory::UserOutput,
+                )
+                .unwrap();
+            let threads = rng.gen_range(2, 6) as usize;
+            let per_thread = rng.gen_range(10, 60) as i64;
+            std::thread::scope(|s| {
+                for _ in 0..threads {
+                    let store = env.store.clone();
+                    s.spawn(move || {
+                        for _ in 0..per_thread {
+                            loop {
+                                let mut txn = store.begin();
+                                let cur = txn
+                                    .lookup("counter", &[Value::Int64(0)])
+                                    .unwrap()
+                                    .and_then(|r| r.get(1).and_then(Value::as_i64))
+                                    .unwrap_or(0);
+                                txn.write("counter", yt_stream::row![0i64, cur + 1]).unwrap();
+                                if txn.commit().is_ok() {
+                                    break;
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            let total = env
+                .store
+                .lookup("counter", &[Value::Int64(0)])
+                .unwrap()
+                .and_then(|r| r.get(1).and_then(Value::as_i64))
+                .unwrap_or(0);
+            prop_assert_eq!(total, threads as i64 * per_thread, "lost increments");
+            Ok(())
+        },
+    );
+}

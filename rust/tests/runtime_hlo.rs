@@ -1,0 +1,150 @@
+//! L3 ↔ L1/L2 bridge tests: the AOT artifacts, executed through the rust
+//! PJRT runtime, must agree exactly with the native reference stage.
+//!
+//! These tests require `artifacts/` (run `make artifacts`); they skip with
+//! a notice when the artifacts are absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::path::Path;
+
+use yt_stream::compute::hlo::HloStage;
+use yt_stream::compute::native::NativeStage;
+use yt_stream::compute::ComputeStage;
+use yt_stream::util::Prng;
+
+fn stage() -> Option<std::sync::Arc<HloStage>> {
+    let dir = Path::new("artifacts");
+    match HloStage::load(dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn map_stage_hlo_matches_native_exact() {
+    let Some(hlo) = stage() else { return };
+    let native = NativeStage;
+    let mut rng = Prng::seeded(0xB01D);
+    for case in 0..8 {
+        let n = match case {
+            0 => 1,
+            1 => 1023,
+            2 => 1024,
+            3 => 1025,
+            _ => rng.gen_range(1, 5000) as usize,
+        };
+        let uh: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        let ch: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        let hu: Vec<bool> = (0..n).map(|_| rng.chance(0.15)).collect();
+        let reducers = rng.gen_range(1, 64) as u32;
+        let a = hlo.map_stage(&uh, &ch, &hu, reducers);
+        let b = native.map_stage(&uh, &ch, &hu, reducers);
+        assert_eq!(a, b, "case {case}: n={n} reducers={reducers}");
+    }
+}
+
+#[test]
+fn reduce_stage_hlo_matches_native_exact() {
+    let Some(hlo) = stage() else { return };
+    let native = NativeStage;
+    let mut rng = Prng::seeded(0xA66);
+    for case in 0..8 {
+        let n = rng.gen_range(1, 4000) as usize;
+        // Cover both within-band and multi-band group counts.
+        let groups = match case {
+            0 => 1,
+            1 => 255,
+            2 => 256,
+            3 => 300, // > GROUPS: exercises slot banding
+            _ => rng.gen_range(1, 700) as u32,
+        };
+        let slots: Vec<u32> = (0..n).map(|_| rng.next_below(groups as u64) as u32).collect();
+        let ts: Vec<f32> = (0..n).map(|_| (rng.next_f64() * 1e6) as f32).collect();
+        let valid: Vec<bool> = (0..n).map(|_| rng.chance(0.8)).collect();
+        let a = hlo.reduce_stage(&slots, &ts, &valid, groups);
+        let b = native.reduce_stage(&slots, &ts, &valid, groups);
+        assert_eq!(a.counts, b.counts, "case {case}: counts n={n} g={groups}");
+        assert_eq!(a.max_ts, b.max_ts, "case {case}: max_ts n={n} g={groups}");
+    }
+}
+
+#[test]
+fn hlo_stage_usable_from_multiple_threads() {
+    let Some(hlo) = stage() else { return };
+    std::thread::scope(|s| {
+        for t in 0..4u32 {
+            let hlo = hlo.clone();
+            s.spawn(move || {
+                let uh: Vec<u32> = (0..500).map(|i| i * 31 + t).collect();
+                let ch: Vec<u32> = (0..500).map(|i| i * 17 + t).collect();
+                let hu = vec![true; 500];
+                let out = hlo.map_stage(&uh, &ch, &hu, 8);
+                assert!(out.reducer.iter().all(|&r| r < 8));
+            });
+        }
+    });
+}
+
+#[test]
+fn end_to_end_pipeline_with_hlo_compute() {
+    // The full streaming processor with ComputeMode::Hlo — the paper's
+    // pipeline with the compiled kernels on the hot path.
+    let Some(_probe) = stage() else { return };
+
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+    use yt_stream::figures::scenario::fill_static_input;
+    use yt_stream::queue::input_name_table;
+    use yt_stream::queue::ordered_table::OrderedTable;
+    use yt_stream::util::yson::Yson;
+    use yt_stream::util::Clock;
+    use yt_stream::workload::analytics::{
+        analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE,
+    };
+
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0x410);
+    let table = OrderedTable::new("//input/hlo", input_name_table(), 2, env.accounting.clone());
+    fill_static_input(&table, &clock, 60, 0x410);
+    let cfg = ProcessorConfig {
+        mapper_count: 2,
+        reducer_count: 2,
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        compute: ComputeMode::Hlo,
+        ..ProcessorConfig::default()
+    };
+    let processor = StreamingProcessor::launch(
+        cfg,
+        env.clone(),
+        InputSpec::Ordered(table),
+        analytics_mapper_factory(ComputeMode::Hlo),
+        analytics_reducer_factory(ComputeMode::Hlo),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+
+    // Wait for some committed output.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(30_000);
+    let mut total = 0i64;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        total = env
+            .store
+            .scan(OUTPUT_TABLE)
+            .map(|rows| {
+                rows.iter()
+                    .map(|r| r.get(2).and_then(|v| v.as_i64()).unwrap_or(0))
+                    .sum()
+            })
+            .unwrap_or(0);
+        if total > 0 {
+            break;
+        }
+    }
+    processor.stop();
+    assert!(total > 0, "HLO-compute pipeline never produced output");
+}
