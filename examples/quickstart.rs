@@ -84,8 +84,11 @@ fn main() {
         Box::new(FnReducer(move |rows: yt_stream::rows::UnversionedRowset| {
             let mut txn = client.begin();
             for r in rows.rows() {
-                let word = r.get(0).unwrap().as_str().unwrap().to_string();
-                let key = vec![Value::Str(word.clone())];
+                // The decoded cell is shared — cloning it is a refcount
+                // bump, no string copy.
+                let word = r.get(0).unwrap().clone();
+                assert!(word.as_str().is_some(), "column 0 must be a string word");
+                let key = vec![word.clone()];
                 let cur = txn
                     .lookup("//out/word_count", &key)
                     .unwrap()

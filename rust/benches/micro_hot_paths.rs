@@ -43,6 +43,14 @@ fn bench_codec() {
         .run(|| {
             black_box(codec::decode_rowset(&bytes).unwrap());
         });
+    // The attachment path: bytes already live in an Arc, decode is fully
+    // zero-copy (string cells are views into `shared`).
+    let shared: Arc<[u8]> = bytes.clone().into();
+    Bench::new("codec/decode_rowset_shared_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            black_box(codec::decode_rowset_shared(&shared).unwrap());
+        });
 }
 
 fn bench_hash_and_stages() {
@@ -93,14 +101,17 @@ fn bench_hash_and_stages() {
 }
 
 fn bench_rpc_getrows() {
-    use yt_stream::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService};
+    use yt_stream::rpc::{Attachment, ReqGetRows, Request, Response, RpcNet, RpcService};
 
     struct Server {
-        attachment: Vec<u8>,
+        attachment: Attachment,
     }
     impl RpcService for Server {
         fn handle(&self, req: Request) -> Result<Response, String> {
             match req {
+                // Serve the shared Arc bytes: the clone below is a
+                // refcount bump, so the bench measures transport, not
+                // memcpy of the attachment.
                 Request::GetRows(_) => Ok(Response::GetRows(yt_stream::rpc::RspGetRows {
                     row_count: 1024,
                     last_shuffle_row_index: 1023,
@@ -112,7 +123,7 @@ fn bench_rpc_getrows() {
     }
 
     let net = RpcNet::new(Clock::realtime(), Prng::seeded(3));
-    let attachment = codec::encode_rowset(&sample_rowset(1024));
+    let attachment: Attachment = codec::encode_rowset(&sample_rowset(1024)).into();
     let bytes = attachment.len() as u64;
     net.register("m0", Arc::new(Server { attachment }));
     Bench::new("rpc/getrows_roundtrip_1024rows")

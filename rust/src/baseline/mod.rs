@@ -130,7 +130,7 @@ pub fn run_persistent_shuffle(
         for (i, chunk) in chunks.iter().enumerate() {
             let bytes = chunk_store.get(*chunk).expect("chunk vanished");
             let rowset: UnversionedRowset =
-                codec::decode_rowset(&bytes).expect("chunk self-corruption");
+                codec::decode_rowset_shared(&bytes).expect("chunk self-corruption");
             if let Some(txn) = reducer.reduce(rowset) {
                 txn.commit().expect("baseline commit failed");
             }

@@ -189,11 +189,14 @@ impl MapperService {
             );
         }
         let row_count = refs.len() as i64;
+        // One exactly-sized encode plus one bulk Vec→Arc copy; after that
+        // every downstream holder (transport, reducer decode, retries)
+        // bumps a refcount instead of copying the payload.
         let attachment = codec::encode_rowset_refs(&nt, &refs);
         Ok(RspGetRows {
             row_count,
             last_shuffle_row_index: last_shuffle,
-            attachment,
+            attachment: attachment.into(),
         })
     }
 }

@@ -245,12 +245,15 @@ impl ReducerRt {
         let state_table = &self.spec.state_table;
         let state_key = ReducerState::key(self.spec.index);
 
-        // Step 5: deserialize and combine into one batch.
+        // Step 5: deserialize and combine into one batch. Attachments are
+        // Arc'd, so the decode is zero-copy: string cells are views into
+        // the attachment buffers, and the combine below moves rows without
+        // touching payload bytes.
         let mut parts = Vec::new();
         let mut total_rows = 0i64;
         for f in fetches {
             if f.rsp.row_count > 0 {
-                match codec::decode_rowset(&f.rsp.attachment) {
+                match codec::decode_rowset_shared(&f.rsp.attachment) {
                     Ok(rs) => {
                         total_rows += rs.len() as i64;
                         parts.push(rs);

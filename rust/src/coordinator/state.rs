@@ -45,7 +45,7 @@ impl MapperState {
             Value::Int64(mapper_index as i64),
             Value::Int64(self.input_unread_row_index),
             Value::Int64(self.shuffle_unread_row_index),
-            Value::Str(self.continuation_token.0.clone()),
+            Value::from(self.continuation_token.0.as_str()),
         ])
     }
 
@@ -93,7 +93,7 @@ impl ReducerState {
         );
         UnversionedRow::new(vec![
             Value::Int64(reducer_index as i64),
-            Value::Str(list.to_string()),
+            Value::from(list.to_string()),
         ])
     }
 

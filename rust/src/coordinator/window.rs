@@ -9,6 +9,15 @@
 //! This queue **is** the paper's write-amplification win: mapped rows live
 //! here, in memory, until every designated reducer has committed them —
 //! they are never persisted (unless the §6 spill feature evicts them).
+//!
+//! Row payloads are shared, not owned: string cells are
+//! [`crate::rows::ByteStr`] views, so buffering a mapped batch here and
+//! cloning rows out of it are refcount bumps, never payload copies.
+//! (Serving and spilling still *encode*, which performs the one bulk copy
+//! into the attachment/record buffer.) `total_bytes` tracks the *logical*
+//! payload footprint used by the memory semaphore — a retained cell can
+//! pin a larger shared backing buffer; long-lived sinks detach
+//! ([`crate::rows::UnversionedRow::detached`]).
 
 use std::collections::VecDeque;
 

@@ -193,11 +193,15 @@ impl Transaction {
                     self.store
                         .accounting
                         .record(t.category, encoded.len() as u64);
+                    // Persist boundary: detach string cells — in the key
+                    // too, it is stored for the table's lifetime — so a
+                    // committed row owns minimal buffers instead of
+                    // pinning the whole decoded attachment it came from.
                     t.rows.insert(
-                        key.clone(),
+                        key.iter().map(Value::detached).collect(),
                         VersionedRow {
                             version: commit_id,
-                            row: row.clone(),
+                            row: row.detached(),
                         },
                     );
                     rows_written += 1;

@@ -1,0 +1,256 @@
+//! `ByteStr` — a cheaply-clonable string cell over a shared byte buffer.
+//!
+//! The row data plane moves string payloads around constantly: decode,
+//! window buffering, GetRows serving, spill, reducer combine. With
+//! `Value::Str(String)` every one of those steps deep-copied the payload.
+//! `ByteStr` replaces the owned `String` with an *(Arc backing buffer,
+//! offset, length)* triple:
+//!
+//! * cloning a cell (and therefore a row or a rowset) is a refcount bump;
+//! * [`crate::rows::codec`] decodes every string cell of an attachment as
+//!   a slice of **one** shared buffer — one allocation per attachment
+//!   instead of one per cell;
+//! * equality, ordering, hashing and display are all by *content*, so the
+//!   representation change is invisible to the data model.
+//!
+//! The UTF-8 invariant is established once, at construction: every public
+//! constructor validates its input, after which `as_str` is free.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+/// A shared, immutable UTF-8 slice: `buf[off .. off + len]`.
+///
+/// Invariant: the `off..off+len` range lies inside `buf` and is valid
+/// UTF-8. Both are checked by every constructor; the buffer behind the
+/// `Arc` is never mutated.
+#[derive(Clone)]
+pub struct ByteStr {
+    buf: Arc<[u8]>,
+    off: u32,
+    len: u32,
+}
+
+impl ByteStr {
+    /// Copy `s` into a fresh single-owner backing buffer.
+    ///
+    /// Panics if `s` exceeds the `u32` length representation: the check is
+    /// the soundness boundary for `as_str`'s unchecked UTF-8 read, so it
+    /// must hold in release builds too (a silent `as u32` truncation could
+    /// cut a multi-byte codepoint in half).
+    pub fn new(s: &str) -> ByteStr {
+        assert!(s.len() <= u32::MAX as usize, "string cell exceeds u32 length");
+        ByteStr {
+            buf: Arc::from(s.as_bytes()),
+            off: 0,
+            len: s.len() as u32,
+        }
+    }
+
+    /// A view of `buf[off .. off + len]`, sharing the buffer.
+    ///
+    /// Returns `None` when the range is out of bounds, not valid UTF-8, or
+    /// exceeds the `u32` offset/length representation (attachments are
+    /// well under 4 GiB).
+    pub fn from_utf8_slice(buf: &Arc<[u8]>, off: usize, len: usize) -> Option<ByteStr> {
+        let end = off.checked_add(len)?;
+        if end > buf.len() || off > u32::MAX as usize || len > u32::MAX as usize {
+            return None;
+        }
+        std::str::from_utf8(&buf[off..end]).ok()?;
+        Some(ByteStr {
+            buf: buf.clone(),
+            off: off as u32,
+            len: len as u32,
+        })
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        let off = self.off as usize;
+        &self.buf[off..off + self.len as usize]
+    }
+
+    pub fn as_str(&self) -> &str {
+        // SAFETY: every constructor validates that `off..off+len` is valid
+        // UTF-8 and the Arc'd buffer is immutable.
+        unsafe { std::str::from_utf8_unchecked(self.as_bytes()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Address of the first payload byte. Zero-copy tests compare this
+    /// across clones / decodes to prove payloads were shared, not copied.
+    pub fn payload_ptr(&self) -> *const u8 {
+        self.as_bytes().as_ptr()
+    }
+
+    /// Whether two cells share the same backing buffer allocation.
+    pub fn same_backing(a: &ByteStr, b: &ByteStr) -> bool {
+        Arc::ptr_eq(&a.buf, &b.buf)
+    }
+
+    /// A copy whose backing buffer holds *only* this string.
+    ///
+    /// A decoded cell is a view into its whole attachment/record buffer
+    /// and keeps that buffer alive; long-lived sinks (e.g. dynamic-table
+    /// commits) call this at the persist boundary so one retained cell
+    /// cannot pin a multi-KB attachment. No-op (shared, not copied) when
+    /// the buffer is already exactly this string.
+    pub fn detached(&self) -> ByteStr {
+        if self.off == 0 && self.len as usize == self.buf.len() {
+            return self.clone();
+        }
+        ByteStr::new(self.as_str())
+    }
+}
+
+impl fmt::Debug for ByteStr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_str(), f)
+    }
+}
+
+impl fmt::Display for ByteStr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl PartialEq for ByteStr {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_bytes() == other.as_bytes()
+    }
+}
+
+impl Eq for ByteStr {}
+
+impl PartialEq<str> for ByteStr {
+    fn eq(&self, other: &str) -> bool {
+        self.as_str() == other
+    }
+}
+
+impl PartialEq<&str> for ByteStr {
+    fn eq(&self, other: &&str) -> bool {
+        self.as_str() == *other
+    }
+}
+
+impl Ord for ByteStr {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.as_str().cmp(other.as_str())
+    }
+}
+
+impl PartialOrd for ByteStr {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Hash for ByteStr {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        // Hash exactly like `String`/`str` so the switch from
+        // `Value::Str(String)` is invisible to hashed collections.
+        self.as_str().hash(state);
+    }
+}
+
+impl From<&str> for ByteStr {
+    fn from(s: &str) -> Self {
+        ByteStr::new(s)
+    }
+}
+
+impl From<String> for ByteStr {
+    fn from(s: String) -> Self {
+        ByteStr::new(&s)
+    }
+}
+
+impl From<&String> for ByteStr {
+    fn from(s: &String) -> Self {
+        ByteStr::new(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_content() {
+        let b = ByteStr::new("hello");
+        assert_eq!(b.as_str(), "hello");
+        assert_eq!(b.len(), 5);
+        assert!(!b.is_empty());
+        assert!(ByteStr::new("").is_empty());
+    }
+
+    #[test]
+    fn clone_shares_payload() {
+        let a = ByteStr::new("shared payload");
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(a.payload_ptr(), b.payload_ptr());
+        assert!(ByteStr::same_backing(&a, &b));
+        // Distinct constructions do NOT share.
+        let c = ByteStr::new("shared payload");
+        assert_eq!(a, c);
+        assert!(!ByteStr::same_backing(&a, &c));
+    }
+
+    #[test]
+    fn slice_of_shared_buffer() {
+        let buf: Arc<[u8]> = Arc::from(&b"xxhelloyy"[..]);
+        let b = ByteStr::from_utf8_slice(&buf, 2, 5).unwrap();
+        assert_eq!(b.as_str(), "hello");
+        assert_eq!(b.payload_ptr(), buf[2..].as_ptr());
+        // Out of bounds and invalid UTF-8 rejected.
+        assert!(ByteStr::from_utf8_slice(&buf, 8, 5).is_none());
+        let bad: Arc<[u8]> = Arc::from(&[0xFFu8, 0xFE][..]);
+        assert!(ByteStr::from_utf8_slice(&bad, 0, 2).is_none());
+    }
+
+    #[test]
+    fn detached_severs_large_backing() {
+        let buf: Arc<[u8]> = Arc::from(&b"a-large-shared-attachment-buffer"[..]);
+        let view = ByteStr::from_utf8_slice(&buf, 2, 5).unwrap();
+        let det = view.detached();
+        assert_eq!(det, view);
+        assert!(!ByteStr::same_backing(&det, &view));
+        assert_eq!(det.len(), 5);
+        // Already-minimal buffers are shared, not copied.
+        let minimal = ByteStr::new("abc");
+        assert!(ByteStr::same_backing(&minimal, &minimal.detached()));
+    }
+
+    #[test]
+    fn ordering_and_eq_by_content() {
+        let a = ByteStr::new("a");
+        let b = ByteStr::new("b");
+        assert!(a < b);
+        assert_eq!(a, "a");
+        assert_eq!(format!("{a}"), "a");
+        assert_eq!(format!("{a:?}"), "\"a\"");
+    }
+
+    #[test]
+    fn hashes_like_str() {
+        use std::collections::hash_map::DefaultHasher;
+        fn hash_of<T: Hash + ?Sized>(t: &T) -> u64 {
+            let mut s = DefaultHasher::new();
+            t.hash(&mut s);
+            s.finish()
+        }
+        assert_eq!(hash_of(&ByteStr::new("key")), hash_of("key"));
+    }
+}

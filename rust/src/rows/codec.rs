@@ -17,9 +17,30 @@
 //! Varint is deliberately not used: fixed-width ints make the encoder ~2×
 //! faster and the shuffle payload is dominated by strings anyway (profiled
 //! in EXPERIMENTS.md §Perf).
+//!
+//! # Zero-copy decode (§Perf)
+//!
+//! String cells decode as [`ByteStr`]s — *(Arc buffer, offset, length)*
+//! views into a **single shared backing buffer** per attachment — so a
+//! string-bearing rowset costs one heap allocation for payload bytes, not
+//! one per cell, and cloning any decoded row afterwards is a refcount
+//! bump. Use [`decode_rowset_shared`]/[`decode_rows_shared`] when the
+//! encoded bytes already live in an `Arc<[u8]>` (the RPC attachment path):
+//! that is fully zero-copy. The `&[u8]` entry points
+//! ([`decode_rowset`]/[`decode_rows`]) first copy the input into a fresh
+//! `Arc<[u8]>` — still a single bulk memcpy rather than per-cell
+//! allocations.
+//!
+//! # Exact-size encode (§Perf)
+//!
+//! [`encoded_size_rowset`] (and friends) compute the exact wire size from
+//! the name table + rows, so every `encode_*` preallocates precisely
+//! instead of guessing; debug builds assert `buf.len()` matches the
+//! prediction.
 
 use std::sync::Arc;
 
+use super::bytestr::ByteStr;
 use super::name_table::NameTable;
 use super::row::UnversionedRow;
 use super::rowset::UnversionedRowset;
@@ -48,6 +69,45 @@ pub enum CodecError {
     BadTag(u8),
     #[error("codec: invalid utf-8 in string")]
     BadUtf8,
+    #[error("codec: string cell at byte {0} exceeds the 4 GiB ByteStr offset range")]
+    OffsetOverflow(usize),
+}
+
+/// Exact wire size of one value (`u8` tag + payload).
+#[inline]
+pub fn encoded_size_value(v: &Value) -> usize {
+    match v {
+        Value::Null | Value::Bool(_) => 1,
+        Value::Int64(_) | Value::Uint64(_) | Value::Double(_) => 1 + 8,
+        Value::Str(s) => 1 + 4 + s.len(),
+    }
+}
+
+/// Exact wire size of one row (`u16` count + values).
+#[inline]
+pub fn encoded_size_row(row: &UnversionedRow) -> usize {
+    2 + row.values().iter().map(encoded_size_value).sum::<usize>()
+}
+
+/// Exact wire size of [`encode_rowset`]'s output.
+pub fn encoded_size_rowset(rs: &UnversionedRowset) -> usize {
+    4 + 2
+        + rs.name_table().wire_size()
+        + 4
+        + rs.rows().iter().map(encoded_size_row).sum::<usize>()
+}
+
+/// Exact wire size of [`encode_rowset_refs`]'s output.
+pub fn encoded_size_rowset_refs(nt: &NameTable, rows: &[&UnversionedRow]) -> usize {
+    4 + 2
+        + nt.wire_size()
+        + 4
+        + rows.iter().map(|r| encoded_size_row(r)).sum::<usize>()
+}
+
+/// Exact wire size of [`encode_rows`]'s output.
+pub fn encoded_size_rows(rows: &[UnversionedRow]) -> usize {
+    4 + rows.iter().map(encoded_size_row).sum::<usize>()
 }
 
 /// Streaming encoder over a byte buffer.
@@ -134,62 +194,76 @@ impl Default for Encoder {
     }
 }
 
-/// Encode a full rowset (name table + rows).
-pub fn encode_rowset(rs: &UnversionedRowset) -> Vec<u8> {
-    let mut e = Encoder::with_capacity(16 + rs.byte_size() * 2);
-    e.u32(MAGIC);
-    e.u16(VERSION);
-    e.u16(rs.name_table().len() as u16);
-    for name in rs.name_table().names() {
+fn encode_name_table(e: &mut Encoder, nt: &NameTable) {
+    e.u16(nt.len() as u16);
+    for name in nt.names() {
         e.u16(name.len() as u16);
         e.bytes(name.as_bytes());
     }
+}
+
+/// Encode a full rowset (name table + rows).
+pub fn encode_rowset(rs: &UnversionedRowset) -> Vec<u8> {
+    let predicted = encoded_size_rowset(rs);
+    let mut e = Encoder::with_capacity(predicted);
+    e.u32(MAGIC);
+    e.u16(VERSION);
+    encode_name_table(&mut e, rs.name_table());
     e.u32(rs.len() as u32);
     for row in rs.rows() {
         e.row(row);
     }
-    e.finish()
+    let buf = e.finish();
+    debug_assert_eq!(buf.len(), predicted, "encoded_size_rowset mispredicted");
+    buf
 }
 
 /// Encode a rowset directly from borrowed rows, without building an
 /// intermediate `UnversionedRowset` (§Perf: the mapper's GetRows serving
 /// path was cloning every served value just to encode it).
 pub fn encode_rowset_refs(nt: &NameTable, rows: &[&UnversionedRow]) -> Vec<u8> {
-    let payload: usize = rows.iter().map(|r| r.byte_size()).sum();
-    let mut e = Encoder::with_capacity(16 + payload * 2);
+    let predicted = encoded_size_rowset_refs(nt, rows);
+    let mut e = Encoder::with_capacity(predicted);
     e.u32(MAGIC);
     e.u16(VERSION);
-    e.u16(nt.len() as u16);
-    for name in nt.names() {
-        e.u16(name.len() as u16);
-        e.bytes(name.as_bytes());
-    }
+    encode_name_table(&mut e, nt);
     e.u32(rows.len() as u32);
     for row in rows {
         e.row(row);
     }
-    e.finish()
+    let buf = e.finish();
+    debug_assert_eq!(buf.len(), predicted, "encoded_size_rowset_refs mispredicted");
+    buf
 }
 
 /// Encode only the rows (for journal accounting where the name table is
 /// amortized away).
 pub fn encode_rows(rows: &[UnversionedRow]) -> Vec<u8> {
-    let mut e = Encoder::new();
+    let predicted = encoded_size_rows(rows);
+    let mut e = Encoder::with_capacity(predicted);
     e.u32(rows.len() as u32);
     for r in rows {
         e.row(r);
     }
-    e.finish()
+    let buf = e.finish();
+    debug_assert_eq!(buf.len(), predicted, "encoded_size_rows mispredicted");
+    buf
 }
 
+/// Decoder over a shared backing buffer: string cells are produced as
+/// [`ByteStr`] views into `arc` instead of freshly-allocated `String`s.
 struct Decoder<'a> {
-    b: &'a [u8],
+    arc: &'a Arc<[u8]>,
     i: usize,
 }
 
 impl<'a> Decoder<'a> {
+    fn b(&self) -> &[u8] {
+        self.arc
+    }
+
     fn need(&self, n: usize) -> Result<(), CodecError> {
-        if self.i + n > self.b.len() {
+        if self.i + n > self.b().len() {
             Err(CodecError::Truncated(self.i))
         } else {
             Ok(())
@@ -198,37 +272,52 @@ impl<'a> Decoder<'a> {
 
     fn u8(&mut self) -> Result<u8, CodecError> {
         self.need(1)?;
-        let v = self.b[self.i];
+        let v = self.b()[self.i];
         self.i += 1;
         Ok(v)
     }
 
     fn u16(&mut self) -> Result<u16, CodecError> {
         self.need(2)?;
-        let v = u16::from_le_bytes(self.b[self.i..self.i + 2].try_into().unwrap());
+        let v = u16::from_le_bytes(self.b()[self.i..self.i + 2].try_into().unwrap());
         self.i += 2;
         Ok(v)
     }
 
     fn u32(&mut self) -> Result<u32, CodecError> {
         self.need(4)?;
-        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        let v = u32::from_le_bytes(self.b()[self.i..self.i + 4].try_into().unwrap());
         self.i += 4;
         Ok(v)
     }
 
     fn u64(&mut self) -> Result<u64, CodecError> {
         self.need(8)?;
-        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap());
+        let v = u64::from_le_bytes(self.b()[self.i..self.i + 8].try_into().unwrap());
         self.i += 8;
         Ok(v)
     }
 
+    /// Owned string (name-table entries: few, amortized over the rowset).
     fn str(&mut self, n: usize) -> Result<String, CodecError> {
         self.need(n)?;
-        let s = std::str::from_utf8(&self.b[self.i..self.i + n])
+        let s = std::str::from_utf8(&self.b()[self.i..self.i + n])
             .map_err(|_| CodecError::BadUtf8)?
             .to_string();
+        self.i += n;
+        Ok(s)
+    }
+
+    /// Shared-slice string cell: validates UTF-8 once, allocates nothing.
+    fn bytestr(&mut self, n: usize) -> Result<ByteStr, CodecError> {
+        self.need(n)?;
+        // Distinguish the ByteStr u32 offset limit from actual UTF-8
+        // corruption so huge attachments get a diagnosable error. (`n`
+        // itself comes from a u32 field and cannot overflow.)
+        if self.i > u32::MAX as usize {
+            return Err(CodecError::OffsetOverflow(self.i));
+        }
+        let s = ByteStr::from_utf8_slice(self.arc, self.i, n).ok_or(CodecError::BadUtf8)?;
         self.i += n;
         Ok(s)
     }
@@ -243,7 +332,7 @@ impl<'a> Decoder<'a> {
             TAG_DOUBLE => Value::Double(f64::from_bits(self.u64()?)),
             TAG_STR => {
                 let n = self.u32()? as usize;
-                Value::Str(self.str(n)?)
+                Value::Str(self.bytestr(n)?)
             }
             t => return Err(CodecError::BadTag(t)),
         })
@@ -260,8 +349,35 @@ impl<'a> Decoder<'a> {
 }
 
 /// Decode a rowset produced by [`encode_rowset`].
+///
+/// Copies `bytes` once into a fresh shared backing buffer; all string
+/// cells then reference that single allocation. Prefer
+/// [`decode_rowset_shared`] when the bytes are already `Arc`'d.
 pub fn decode_rowset(bytes: &[u8]) -> Result<UnversionedRowset, CodecError> {
-    let mut d = Decoder { b: bytes, i: 0 };
+    // Reject a bad header before paying the bulk copy into shared
+    // storage; error positions mirror the decoder's own checks.
+    if bytes.len() < 4 {
+        return Err(CodecError::Truncated(0));
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    if bytes.len() < 6 {
+        return Err(CodecError::Truncated(4));
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let shared: Arc<[u8]> = Arc::from(bytes);
+    decode_rowset_shared(&shared)
+}
+
+/// Decode a rowset from an already-shared buffer — fully zero-copy: every
+/// string cell is a [`ByteStr`] view into `buf`.
+pub fn decode_rowset_shared(buf: &Arc<[u8]>) -> Result<UnversionedRowset, CodecError> {
+    let mut d = Decoder { arc: buf, i: 0 };
     let magic = d.u32()?;
     if magic != MAGIC {
         return Err(CodecError::BadMagic(magic));
@@ -282,15 +398,22 @@ pub fn decode_rowset(bytes: &[u8]) -> Result<UnversionedRowset, CodecError> {
     for _ in 0..nrows {
         rows.push(d.row()?);
     }
-    if d.i != bytes.len() {
+    if d.i != buf.len() {
         return Err(CodecError::Truncated(d.i));
     }
     Ok(UnversionedRowset::new(nt, rows))
 }
 
-/// Decode rows produced by [`encode_rows`].
+/// Decode rows produced by [`encode_rows`] (copies `bytes` once into a
+/// shared backing buffer; see [`decode_rows_shared`]).
 pub fn decode_rows(bytes: &[u8]) -> Result<Vec<UnversionedRow>, CodecError> {
-    let mut d = Decoder { b: bytes, i: 0 };
+    let shared: Arc<[u8]> = Arc::from(bytes);
+    decode_rows_shared(&shared)
+}
+
+/// Decode rows from an already-shared buffer — zero-copy string cells.
+pub fn decode_rows_shared(buf: &Arc<[u8]>) -> Result<Vec<UnversionedRow>, CodecError> {
+    let mut d = Decoder { arc: buf, i: 0 };
     let n = d.u32()? as usize;
     let mut rows = Vec::with_capacity(n);
     for _ in 0..n {
@@ -326,6 +449,7 @@ mod tests {
     fn rowset_roundtrip() {
         let rs = sample();
         let bytes = encode_rowset(&rs);
+        assert_eq!(bytes.len(), encoded_size_rowset(&rs));
         let back = decode_rowset(&bytes).unwrap();
         assert_eq!(back.name_table().names(), rs.name_table().names());
         assert_eq!(back.len(), rs.len());
@@ -339,6 +463,7 @@ mod tests {
     fn rows_roundtrip() {
         let rows = vec![row![1i64, "x"], row![2i64, "y"]];
         let bytes = encode_rows(&rows);
+        assert_eq!(bytes.len(), encoded_size_rows(&rows));
         assert_eq!(decode_rows(&bytes).unwrap(), rows);
     }
 
@@ -375,6 +500,49 @@ mod tests {
         assert_eq!(back.name_table().names(), &["a".to_string()]);
     }
 
+    #[test]
+    fn decode_shares_one_backing_buffer() {
+        // Every string cell of a decoded rowset must be a view into the
+        // same single payload allocation (acceptance: one heap allocation
+        // per string-bearing rowset).
+        let rs = sample();
+        let shared: Arc<[u8]> = encode_rowset(&rs).into();
+        let back = decode_rowset_shared(&shared).unwrap();
+        let cells: Vec<&ByteStr> = back
+            .rows()
+            .iter()
+            .flat_map(|r| r.values())
+            .filter_map(|v| match v {
+                Value::Str(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        assert!(cells.len() >= 4, "sample must contain string cells");
+        for c in &cells {
+            assert!(ByteStr::same_backing(c, cells[0]));
+            // Zero-copy: the cell points straight into the attachment.
+            let start = shared.as_ptr() as usize;
+            let p = c.payload_ptr() as usize;
+            assert!(p >= start && p + c.len() <= start + shared.len());
+        }
+    }
+
+    #[test]
+    fn cloning_decoded_rowset_copies_no_payloads() {
+        let rs = sample();
+        let bytes = encode_rowset(&rs);
+        let back = decode_rowset(&bytes).unwrap();
+        let cloned = back.clone();
+        for (a, b) in back.rows().iter().zip(cloned.rows()) {
+            for (va, vb) in a.values().iter().zip(b.values()) {
+                if let (Value::Str(sa), Value::Str(sb)) = (va, vb) {
+                    assert_eq!(sa.payload_ptr(), sb.payload_ptr());
+                    assert!(ByteStr::same_backing(sa, sb));
+                }
+            }
+        }
+    }
+
     fn arbitrary_value(rng: &mut Prng) -> Value {
         match rng.next_below(6) {
             0 => Value::Null,
@@ -384,25 +552,28 @@ mod tests {
             4 => Value::Double(f64::from_bits(rng.next_u64())),
             _ => {
                 let n = rng.next_below(20) as usize;
-                Value::Str(rng.ident(n))
+                Value::from(rng.ident(n))
             }
         }
+    }
+
+    fn arbitrary_rowset(rng: &mut Prng) -> UnversionedRowset {
+        let ncols = rng.gen_range(1, 6) as usize;
+        let names: Vec<String> = (0..ncols).map(|i| format!("c{i}_{}", rng.ident(3))).collect();
+        let nt = NameTable::from_names(names);
+        let nrows = rng.next_below(20) as usize;
+        let mut b = RowsetBuilder::new(nt);
+        for _ in 0..nrows {
+            let vals = (0..ncols).map(|_| arbitrary_value(rng)).collect();
+            b.push_values(vals);
+        }
+        b.build()
     }
 
     #[test]
     fn property_roundtrip_arbitrary_rowsets() {
         miniprop::check("codec roundtrip", |rng| {
-            let ncols = rng.gen_range(1, 6) as usize;
-            let names: Vec<String> =
-                (0..ncols).map(|i| format!("c{i}_{}", rng.ident(3))).collect();
-            let nt = NameTable::from_names(names);
-            let nrows = rng.next_below(20) as usize;
-            let mut b = RowsetBuilder::new(nt);
-            for _ in 0..nrows {
-                let vals = (0..ncols).map(|_| arbitrary_value(rng)).collect();
-                b.push_values(vals);
-            }
-            let rs = b.build();
+            let rs = arbitrary_rowset(rng);
             let back = decode_rowset(&encode_rowset(&rs))
                 .map_err(|e| format!("decode failed: {e}"))?;
             crate::prop_assert_eq!(back.len(), rs.len());
@@ -410,6 +581,46 @@ mod tests {
                 crate::prop_assert!(
                     a.cmp(b) == std::cmp::Ordering::Equal,
                     "row mismatch: {a:?} vs {b:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_encoded_size_is_exact() {
+        miniprop::check("encoded_size exact", |rng| {
+            let rs = arbitrary_rowset(rng);
+            let bytes = encode_rowset(&rs);
+            crate::prop_assert_eq!(bytes.len(), encoded_size_rowset(&rs));
+
+            let rows: Vec<UnversionedRow> = rs.rows().to_vec();
+            let bytes = encode_rows(&rows);
+            crate::prop_assert_eq!(bytes.len(), encoded_size_rows(&rows));
+
+            let refs: Vec<&UnversionedRow> = rs.rows().iter().collect();
+            let bytes = encode_rowset_refs(rs.name_table(), &refs);
+            crate::prop_assert_eq!(
+                bytes.len(),
+                encoded_size_rowset_refs(rs.name_table(), &refs)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_shared_decode_equals_plain_decode() {
+        miniprop::check("shared decode equivalence", |rng| {
+            let rs = arbitrary_rowset(rng);
+            let bytes = encode_rowset(&rs);
+            let shared: Arc<[u8]> = bytes.clone().into();
+            let a = decode_rowset(&bytes).map_err(|e| format!("plain: {e}"))?;
+            let b = decode_rowset_shared(&shared).map_err(|e| format!("shared: {e}"))?;
+            crate::prop_assert_eq!(a.len(), b.len());
+            for (x, y) in a.rows().iter().zip(b.rows()) {
+                crate::prop_assert!(
+                    x.cmp(y) == std::cmp::Ordering::Equal,
+                    "row mismatch: {x:?} vs {y:?}"
                 );
             }
             Ok(())

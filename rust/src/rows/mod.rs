@@ -11,6 +11,7 @@
 //! (§4.3.4: "the actual rows are returned as attachments in a binary
 //! format") and for journal byte accounting.
 
+pub mod bytestr;
 pub mod value;
 pub mod name_table;
 pub mod schema;
@@ -18,6 +19,7 @@ pub mod row;
 pub mod rowset;
 pub mod codec;
 
+pub use bytestr::ByteStr;
 pub use name_table::NameTable;
 pub use row::UnversionedRow;
 pub use rowset::{RowsetBuilder, UnversionedRowset};

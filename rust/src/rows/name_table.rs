@@ -48,6 +48,12 @@ impl NameTable {
     pub fn names(&self) -> &[String] {
         &self.names
     }
+
+    /// Exact wire footprint of this table in the [`super::codec`] rowset
+    /// layout: `u16` count + per name `u16` length + bytes.
+    pub fn wire_size(&self) -> usize {
+        2 + self.names.iter().map(|n| 2 + n.len()).sum::<usize>()
+    }
 }
 
 #[cfg(test)]
@@ -74,5 +80,12 @@ mod tests {
     fn empty_table() {
         let nt = NameTable::new(&[]);
         assert!(nt.is_empty());
+        assert_eq!(nt.wire_size(), 2);
+    }
+
+    #[test]
+    fn wire_size_counts_lengths() {
+        let nt = NameTable::new(&["ab", "cde"]);
+        assert_eq!(nt.wire_size(), 2 + (2 + 2) + (2 + 3));
     }
 }

@@ -39,6 +39,15 @@ impl UnversionedRow {
     pub fn byte_size(&self) -> usize {
         8 + self.values.iter().map(Value::byte_size).sum::<usize>()
     }
+
+    /// A copy whose string cells own minimal backing buffers, so retaining
+    /// this row cannot pin the (much larger) shared attachment it was
+    /// decoded from. Used at persist boundaries (dynamic-table commits).
+    pub fn detached(&self) -> UnversionedRow {
+        UnversionedRow {
+            values: self.values.iter().map(Value::detached).collect(),
+        }
+    }
 }
 
 impl From<Vec<Value>> for UnversionedRow {

@@ -64,7 +64,9 @@ impl UnversionedRowset {
         Some(self.rows.iter().map(move |r| &r.values()[id]))
     }
 
-    /// Select a subset of rows by index, sharing the name table.
+    /// Select a subset of rows by index, sharing the name table. Row
+    /// clones are cheap: string payloads are refcounted [`super::ByteStr`]
+    /// views, never copied.
     pub fn select(&self, indexes: &[usize]) -> UnversionedRowset {
         UnversionedRowset {
             name_table: self.name_table.clone(),

@@ -3,10 +3,16 @@
 use std::cmp::Ordering;
 use std::fmt;
 
+use super::bytestr::ByteStr;
+
 /// A single typed cell of an [`super::UnversionedRow`].
 ///
 /// `Value` has a *total* order (variant rank first, then payload; doubles
 /// via `total_cmp`) so rows can serve as keys of sorted dynamic tables.
+///
+/// String cells are [`ByteStr`]s — shared slices of an `Arc`'d backing
+/// buffer — so cloning a `Value` (and hence a row or rowset) never copies
+/// string payloads (§Perf: the zero-copy row pipeline).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
     Null,
@@ -14,7 +20,7 @@ pub enum Value {
     Int64(i64),
     Uint64(u64),
     Double(f64),
-    Str(String),
+    Str(ByteStr),
 }
 
 impl Value {
@@ -33,12 +39,26 @@ impl Value {
 
     /// Approximate in-memory/wire footprint in bytes; drives the mapper
     /// memory semaphore (§4.3.3 step 6) and all throughput metrics.
+    ///
+    /// This is the *logical* size: a `Str` cell that views a larger shared
+    /// buffer pins that whole buffer while retained (see
+    /// [`Value::detached`]).
     pub fn byte_size(&self) -> usize {
         match self {
             Value::Null => 1,
             Value::Bool(_) => 1,
             Value::Int64(_) | Value::Uint64(_) | Value::Double(_) => 8,
             Value::Str(s) => 4 + s.len(),
+        }
+    }
+
+    /// A copy whose string payload (if any) owns a minimal backing buffer
+    /// — severs the tie to a shared attachment at persist boundaries
+    /// ([`super::bytestr::ByteStr::detached`]).
+    pub fn detached(&self) -> Value {
+        match self {
+            Value::Str(s) => Value::Str(s.detached()),
+            other => other.clone(),
         }
     }
 
@@ -67,7 +87,7 @@ impl Value {
 
     pub fn as_str(&self) -> Option<&str> {
         match self {
-            Value::Str(s) => Some(s),
+            Value::Str(s) => Some(s.as_str()),
             _ => None,
         }
     }
@@ -154,11 +174,16 @@ impl From<bool> for Value {
 }
 impl From<&str> for Value {
     fn from(v: &str) -> Self {
-        Value::Str(v.to_string())
+        Value::Str(ByteStr::new(v))
     }
 }
 impl From<String> for Value {
     fn from(v: String) -> Self {
+        Value::Str(ByteStr::new(&v))
+    }
+}
+impl From<ByteStr> for Value {
+    fn from(v: ByteStr) -> Self {
         Value::Str(v)
     }
 }
@@ -218,6 +243,19 @@ mod tests {
         assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
         assert_eq!(Value::Bool(true).as_bool(), Some(true));
         assert!(Value::Null.is_null());
+    }
+
+    #[test]
+    fn clone_shares_string_payload() {
+        let v = Value::from("not copied on clone");
+        let w = v.clone();
+        match (&v, &w) {
+            (Value::Str(a), Value::Str(b)) => {
+                assert_eq!(a.payload_ptr(), b.payload_ptr());
+                assert!(ByteStr::same_backing(a, b));
+            }
+            _ => unreachable!(),
+        }
     }
 
     #[test]

@@ -17,6 +17,26 @@
 //!
 //! "The actual rows are returned as attachments in a binary format" — the
 //! attachment carries a [`crate::rows::codec`]-encoded rowset.
+//!
+//! Attachments are [`Attachment`]s (`Arc<[u8]>`): every hop that used to
+//! memcpy the payload — the bench/replay servers, fault-plan duplication,
+//! spill records, journal reads — is now a refcount bump, and the reducer
+//! decodes them zero-copy via
+//! [`crate::rows::codec::decode_rowset_shared`].
+
+use std::sync::{Arc, OnceLock};
+
+/// Shared immutable payload bytes carried alongside an RPC response.
+/// Cloning is a refcount bump; the decoder borrows string cells straight
+/// out of this buffer.
+pub type Attachment = Arc<[u8]>;
+
+/// The empty [`Attachment`], shared process-wide: empty responses are the
+/// common idle-poll case, so they must not allocate per call.
+pub fn empty_attachment() -> Attachment {
+    static EMPTY: OnceLock<Attachment> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::from(&[][..])).clone()
+}
 
 /// Reducer → mapper row pull (§4.3.4).
 #[derive(Debug, Clone, PartialEq)]
@@ -42,8 +62,9 @@ pub struct RspGetRows {
     /// Shuffle index of the *last* returned row. Needed because rows
     /// assigned to one reducer do not have sequential shuffle indexes.
     pub last_shuffle_row_index: i64,
-    /// codec-encoded rowset ([`crate::rows::codec::encode_rowset`]).
-    pub attachment: Vec<u8>,
+    /// codec-encoded rowset ([`crate::rows::codec::encode_rowset`]),
+    /// shared rather than copied across RPC/bench/replay paths.
+    pub attachment: Attachment,
 }
 
 impl RspGetRows {
@@ -52,7 +73,7 @@ impl RspGetRows {
         RspGetRows {
             row_count: 0,
             last_shuffle_row_index: -1,
-            attachment: Vec::new(),
+            attachment: empty_attachment(),
         }
     }
 }
@@ -115,8 +136,19 @@ mod tests {
         let rsp = Response::GetRows(RspGetRows {
             row_count: 1,
             last_shuffle_row_index: 0,
-            attachment: vec![0; 100],
+            attachment: vec![0; 100].into(),
         });
         assert_eq!(rsp.wire_bytes(), 116);
+    }
+
+    #[test]
+    fn attachment_clone_is_shared() {
+        let rsp = RspGetRows {
+            row_count: 1,
+            last_shuffle_row_index: 0,
+            attachment: vec![1, 2, 3].into(),
+        };
+        let dup = rsp.clone();
+        assert!(Arc::ptr_eq(&rsp.attachment, &dup.attachment));
     }
 }

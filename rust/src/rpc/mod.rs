@@ -13,5 +13,5 @@ pub mod fault;
 pub mod transport;
 
 pub use fault::FaultPlan;
-pub use messages::{ReqGetRows, Request, Response, RspGetRows};
+pub use messages::{empty_attachment, Attachment, ReqGetRows, Request, Response, RspGetRows};
 pub use transport::{RpcError, RpcNet, RpcService};

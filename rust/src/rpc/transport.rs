@@ -166,7 +166,7 @@ mod tests {
                 Request::GetRows(r) => Ok(Response::GetRows(RspGetRows {
                     row_count: r.count,
                     last_shuffle_row_index: r.committed_row_index + r.count,
-                    attachment: vec![],
+                    attachment: crate::rpc::empty_attachment(),
                 })),
             }
         }

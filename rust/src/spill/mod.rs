@@ -26,9 +26,11 @@ use crate::storage::Journal;
 /// Persisted overflow queue for one straggler bucket.
 #[derive(Debug)]
 pub struct SpillQueue {
-    /// (shuffle_index, encoded row). The in-memory copy models reading the
-    /// spill table back; the journal models (and accounts) the write.
-    queue: VecDeque<(i64, Vec<u8>)>,
+    /// (shuffle_index, encoded row). The record buffer is **shared** with
+    /// the journal (`Arc<[u8]>`): the queue entry models reading the spill
+    /// table back, the journal models (and accounts) the write — one
+    /// encoded buffer serves both, no copy.
+    queue: VecDeque<(i64, Arc<[u8]>)>,
     journal: Arc<Journal>,
     /// Total rows ever spilled through this queue (metrics).
     pub rows_spilled_total: u64,
@@ -63,7 +65,9 @@ impl SpillQueue {
         if let Some((last, _)) = self.queue.back() {
             debug_assert!(shuffle_index > *last, "spill must preserve shuffle order");
         }
-        let encoded = codec::encode_rows(std::slice::from_ref(row));
+        // One bulk Vec→Arc copy of the encoded record; the journal append
+        // and queue entry then share it by refcount.
+        let encoded: Arc<[u8]> = codec::encode_rows(std::slice::from_ref(row)).into();
         self.journal.append(encoded.clone());
         self.queue.push_back((shuffle_index, encoded));
         self.rows_spilled_total += 1;
@@ -83,13 +87,15 @@ impl SpillQueue {
         popped
     }
 
-    /// Decode up to `count` rows from the front (not removed).
+    /// Decode up to `count` rows from the front (not removed). String
+    /// cells of the returned rows are zero-copy views into the spill
+    /// records' shared buffers.
     pub fn peek(&self, count: usize) -> Vec<(i64, UnversionedRow)> {
         self.queue
             .iter()
             .take(count)
             .map(|(s, bytes)| {
-                let rows = codec::decode_rows(bytes).expect("spill self-corruption");
+                let rows = codec::decode_rows_shared(bytes).expect("spill self-corruption");
                 (*s, rows.into_iter().next().expect("one row per record"))
             })
             .collect()
@@ -177,6 +183,38 @@ mod tests {
         assert_eq!(rows[0], (3, row![30i64]));
         assert_eq!(rows[1], (8, row![80i64]));
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn record_buffer_shared_with_journal() {
+        let (mut q, _) = queue();
+        q.push(1, &row!["payload", 1i64]);
+        let (_, rec) = q.queue.front().unwrap();
+        let journaled = q.journal.read(0).unwrap();
+        assert!(
+            Arc::ptr_eq(rec, &journaled),
+            "queue and journal must share one encoded buffer"
+        );
+    }
+
+    #[test]
+    fn peek_is_zero_copy() {
+        let (mut q, _) = queue();
+        q.push(1, &row!["spilled-string"]);
+        let rows = q.peek(1);
+        let cell = rows[0].1.get(0).unwrap();
+        let (_, rec) = q.queue.front().unwrap();
+        let start = rec.as_ptr() as usize;
+        match cell {
+            crate::rows::Value::Str(s) => {
+                let p = s.payload_ptr() as usize;
+                assert!(
+                    p >= start && p < start + rec.len(),
+                    "decoded cell must point into the spill record buffer"
+                );
+            }
+            other => panic!("unexpected cell {other:?}"),
+        }
     }
 
     #[test]

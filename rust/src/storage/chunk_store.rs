@@ -17,12 +17,14 @@ use super::accounting::{WriteAccounting, WriteCategory};
 pub struct ChunkId(pub u64);
 
 /// Content store with accounted writes and delete (for trim-after-read).
+/// Chunks are shared `Arc<[u8]>` buffers so readers decode them zero-copy
+/// ([`crate::rows::codec::decode_rowset_shared`]).
 #[derive(Debug)]
 pub struct ChunkStore {
     accounting: Arc<WriteAccounting>,
     category: WriteCategory,
     next_id: AtomicU64,
-    chunks: Mutex<HashMap<ChunkId, Arc<Vec<u8>>>>,
+    chunks: Mutex<HashMap<ChunkId, Arc<[u8]>>>,
 }
 
 #[derive(Debug, thiserror::Error, PartialEq)]
@@ -41,15 +43,19 @@ impl ChunkStore {
         })
     }
 
-    /// Persist a chunk; every byte is accounted.
-    pub fn put(&self, data: Vec<u8>) -> ChunkId {
+    /// Persist a chunk; every byte is accounted. Accepts an already-shared
+    /// `Arc<[u8]>` (stored without copying) or a `Vec<u8>` (one bulk copy
+    /// into shared storage — the price of zero-copy reads via
+    /// [`Self::get`] + `decode_rowset_shared`).
+    pub fn put(&self, data: impl Into<Arc<[u8]>>) -> ChunkId {
+        let data: Arc<[u8]> = data.into();
         self.accounting.record(self.category, data.len() as u64);
         let id = ChunkId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        self.chunks.lock().unwrap().insert(id, Arc::new(data));
+        self.chunks.lock().unwrap().insert(id, data);
         id
     }
 
-    pub fn get(&self, id: ChunkId) -> Result<Arc<Vec<u8>>, ChunkError> {
+    pub fn get(&self, id: ChunkId) -> Result<Arc<[u8]>, ChunkError> {
         self.chunks
             .lock()
             .unwrap()

@@ -6,10 +6,70 @@
 //! simulation — durability is modeled, not provided) but *accounts* every
 //! byte against its [`WriteCategory`], and can replay records for recovery
 //! tests.
+//!
+//! Append cost model (§Perf): a `Vec<u8>` record is **moved** in (no
+//! copy — the high-rate ingest paths), an already-shared `Arc<[u8]>`
+//! record is stored by refcount (the spill path, which shares one buffer
+//! between its queue and the journal). Reads promote an owned record to
+//! shared storage on first access (one copy, cold recovery/test path),
+//! after which every read is a refcount bump. [`Journal::total_bytes`] is
+//! a running atomic counter maintained on append — O(1), never re-summed
+//! under the record lock (the old O(n) lock-held re-scan skewed the
+//! write-amplification bench at scale).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::accounting::{WriteAccounting, WriteCategory};
+
+/// One journal record: owned when appended as `Vec` (move, no copy),
+/// shared when appended as / promoted to `Arc<[u8]>`.
+#[derive(Debug)]
+pub enum Record {
+    Owned(Vec<u8>),
+    Shared(Arc<[u8]>),
+}
+
+impl Record {
+    fn len(&self) -> usize {
+        match self {
+            Record::Owned(v) => v.len(),
+            Record::Shared(a) => a.len(),
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Record::Owned(v) => v,
+            Record::Shared(a) => a,
+        }
+    }
+
+    /// Shared handle to this record, promoting `Owned` storage in place
+    /// (one copy on first read, refcount bumps thereafter).
+    fn share(&mut self) -> Arc<[u8]> {
+        match self {
+            Record::Shared(a) => a.clone(),
+            Record::Owned(v) => {
+                let a: Arc<[u8]> = std::mem::take(v).into();
+                *self = Record::Shared(a.clone());
+                a
+            }
+        }
+    }
+}
+
+impl From<Vec<u8>> for Record {
+    fn from(v: Vec<u8>) -> Record {
+        Record::Owned(v)
+    }
+}
+
+impl From<Arc<[u8]>> for Record {
+    fn from(a: Arc<[u8]>) -> Record {
+        Record::Shared(a)
+    }
+}
 
 /// An append-only record log with byte accounting.
 #[derive(Debug)]
@@ -17,7 +77,9 @@ pub struct Journal {
     name: String,
     category: WriteCategory,
     accounting: Arc<WriteAccounting>,
-    records: Mutex<Vec<Vec<u8>>>,
+    records: Mutex<Vec<Record>>,
+    /// Running sum of record payload lengths, maintained on append.
+    total_bytes: AtomicU64,
 }
 
 impl Journal {
@@ -31,22 +93,32 @@ impl Journal {
             category,
             accounting,
             records: Mutex::new(Vec::new()),
+            total_bytes: AtomicU64::new(0),
         })
     }
 
-    /// Append a record; returns its sequence number.
-    pub fn append(&self, record: Vec<u8>) -> u64 {
+    /// Append a record; returns its sequence number. `Vec<u8>` is moved in
+    /// without copying; `Arc<[u8]>` is stored by refcount.
+    pub fn append(&self, record: impl Into<Record>) -> u64 {
+        let record: Record = record.into();
         self.accounting.record(self.category, record.len() as u64);
         let mut g = self.records.lock().unwrap();
+        // Incremented under the record lock so the counter never runs
+        // ahead of (or behind) what read()/replay() can observe.
+        self.total_bytes
+            .fetch_add(record.len() as u64, Ordering::Relaxed);
         g.push(record);
         (g.len() - 1) as u64
     }
 
     /// Append with an explicit accounted size (when the logical record is
     /// larger than the stored index entry, e.g. chunk metadata).
-    pub fn append_accounted(&self, record: Vec<u8>, accounted_bytes: u64) -> u64 {
+    pub fn append_accounted(&self, record: impl Into<Record>, accounted_bytes: u64) -> u64 {
+        let record: Record = record.into();
         self.accounting.record(self.category, accounted_bytes);
         let mut g = self.records.lock().unwrap();
+        self.total_bytes
+            .fetch_add(record.len() as u64, Ordering::Relaxed);
         g.push(record);
         (g.len() - 1) as u64
     }
@@ -59,16 +131,18 @@ impl Journal {
         self.len() == 0
     }
 
-    /// Read back a record (recovery / tests).
-    pub fn read(&self, seqno: u64) -> Option<Vec<u8>> {
-        self.records.lock().unwrap().get(seqno as usize).cloned()
+    /// Read back a record (recovery / tests). Shares the stored buffer,
+    /// promoting owned storage on first access.
+    pub fn read(&self, seqno: u64) -> Option<Arc<[u8]>> {
+        let mut g = self.records.lock().unwrap();
+        g.get_mut(seqno as usize).map(Record::share)
     }
 
     /// Replay all records in order.
     pub fn replay(&self, mut f: impl FnMut(u64, &[u8])) {
         let g = self.records.lock().unwrap();
         for (i, r) in g.iter().enumerate() {
-            f(i as u64, r);
+            f(i as u64, r.bytes());
         }
     }
 
@@ -80,14 +154,9 @@ impl Journal {
         self.category
     }
 
-    /// Total payload bytes appended so far.
+    /// Total payload bytes appended so far — O(1), lock-free.
     pub fn total_bytes(&self) -> u64 {
-        self.records
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|r| r.len() as u64)
-            .sum()
+        self.total_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -113,11 +182,32 @@ mod tests {
         let j = Journal::new("j", WriteCategory::ReducerMeta, acc);
         j.append(b"abc".to_vec());
         j.append(b"de".to_vec());
-        assert_eq!(j.read(0), Some(b"abc".to_vec()));
-        assert_eq!(j.read(9), None);
+        assert_eq!(j.read(0).as_deref(), Some(&b"abc"[..]));
+        assert!(j.read(9).is_none());
         let mut seen = Vec::new();
         j.replay(|i, r| seen.push((i, r.len())));
         assert_eq!(seen, vec![(0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn shared_append_does_not_copy() {
+        let acc = WriteAccounting::new();
+        let j = Journal::new("s", WriteCategory::Spill, acc);
+        let rec: Arc<[u8]> = vec![7, 8, 9].into();
+        j.append(rec.clone());
+        let back = j.read(0).unwrap();
+        assert!(Arc::ptr_eq(&rec, &back));
+    }
+
+    #[test]
+    fn owned_read_promotes_once_then_shares() {
+        let acc = WriteAccounting::new();
+        let j = Journal::new("o", WriteCategory::SourceIngest, acc);
+        j.append(vec![1, 2, 3]);
+        let a = j.read(0).unwrap();
+        let b = j.read(0).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "promotion must happen exactly once");
+        assert_eq!(a.as_ref(), &[1, 2, 3]);
     }
 
     #[test]
@@ -145,5 +235,6 @@ mod tests {
         });
         assert_eq!(j.len(), 1000);
         assert_eq!(acc.bytes(WriteCategory::Spill), 2000);
+        assert_eq!(j.total_bytes(), 2000);
     }
 }

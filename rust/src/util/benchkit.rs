@@ -34,12 +34,23 @@ pub struct BenchReport {
     pub mitems_per_s: Option<f64>,
 }
 
+/// Millisecond duration from an env var (smoke runs shrink the budget:
+/// `BENCHKIT_WARMUP_MS` / `BENCHKIT_MIN_TIME_MS`, see
+/// `scripts/bench_smoke.sh`).
+fn env_ms(name: &str, default_ms: u64) -> Duration {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(default_ms))
+}
+
 impl Bench {
     pub fn new(name: impl Into<String>) -> Self {
         Bench {
             name: name.into(),
-            warmup: Duration::from_millis(200),
-            min_time: Duration::from_millis(800),
+            warmup: env_ms("BENCHKIT_WARMUP_MS", 200),
+            min_time: env_ms("BENCHKIT_MIN_TIME_MS", 800),
             min_iters: 10,
             bytes_per_iter: None,
             items_per_iter: None,

@@ -137,11 +137,12 @@ impl Reducer for LogAnalyticsReducer {
             return None;
         }
         // 1. Slot assignment in first-seen order (deterministic). Group
-        // keys stay *borrowed* from the batch — only one pair of string
-        // allocations per distinct group at write-out, not per row
-        // (§Perf iteration 7).
+        // keys are cheap clones of the decoded cells (ByteStr refcount
+        // bumps) — zero string copies per group, per row, or at write-out
+        // (§Perf iteration 7; the dyntable commit detaches at the persist
+        // boundary).
         let mut slot_of: HashMap<(&str, &str), u32> = HashMap::new();
-        let mut keys: Vec<(&str, &str)> = Vec::new();
+        let mut keys: Vec<(Value, Value)> = Vec::new();
         let mut slots = Vec::with_capacity(rows.len());
         let mut ts_off = Vec::with_capacity(rows.len());
         let mut valid = Vec::with_capacity(rows.len());
@@ -156,17 +157,20 @@ impl Reducer for LogAnalyticsReducer {
             .min()
             .unwrap_or(0);
         for r in rows.rows() {
-            let (Some(u), Some(c), Some(t)) = (
-                r.get(u_col).and_then(Value::as_str),
-                r.get(c_col).and_then(Value::as_str),
+            let (Some(uv), Some(cv), Some(t)) = (
+                r.get(u_col),
+                r.get(c_col),
                 r.get(t_col).and_then(Value::as_i64),
             ) else {
+                continue;
+            };
+            let (Some(u), Some(c)) = (uv.as_str(), cv.as_str()) else {
                 continue;
             };
             let key = (u, c);
             let next = slot_of.len() as u32;
             let slot = *slot_of.entry(key).or_insert_with(|| {
-                keys.push(key);
+                keys.push((uv.clone(), cv.clone()));
                 next
             });
             slots.push(slot);
@@ -189,15 +193,19 @@ impl Reducer for LogAnalyticsReducer {
             if agg.counts[slot] == 0 {
                 continue;
             }
-            let (user, cluster) = (user.to_string(), cluster.to_string());
             let last_ts = base_ts + agg.max_ts[slot] as i64;
-            let key = vec![Value::Str(user.clone()), Value::Str(cluster.clone())];
+            let key = vec![user.clone(), cluster.clone()];
             let (mut count, mut max_ts) = (0i64, i64::MIN);
             if let Ok(Some(existing)) = txn.lookup(OUTPUT_TABLE, &key) {
                 count = existing.get(2).and_then(Value::as_i64).unwrap_or(0);
                 max_ts = existing.get(3).and_then(Value::as_i64).unwrap_or(i64::MIN);
             }
-            let row = row![user, cluster, count + agg.counts[slot], max_ts.max(last_ts)];
+            let row = row![
+                user.clone(),
+                cluster.clone(),
+                count + agg.counts[slot],
+                max_ts.max(last_ts)
+            ];
             txn.write(OUTPUT_TABLE, row).ok()?;
         }
         Some(txn)

@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Perf-path smoke: make sure the release build and every bench target still
+# compile, then run one fast micro-bench iteration so hot-path regressions
+# (or bench bit-rot) fail loudly in tier-1 workflows.
+#
+# Usage: scripts/bench_smoke.sh [--full]
+#   --full   also run the complete micro_hot_paths suite (slower; prints
+#            the numbers EXPERIMENTS.md §Perf tables are built from)
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench_smoke: SKIP — cargo not on PATH (offline/analysis container)" >&2
+    exit 0
+fi
+
+manifest=""
+for cand in "$repo_root/rust/Cargo.toml" "$repo_root/Cargo.toml"; do
+    if [ -f "$cand" ]; then
+        manifest="$cand"
+        break
+    fi
+done
+if [ -z "$manifest" ]; then
+    echo "bench_smoke: SKIP — no Cargo.toml found under $repo_root" >&2
+    exit 0
+fi
+
+cd "$(dirname "$manifest")"
+
+echo "== bench_smoke: release build =="
+cargo build --release
+
+echo "== bench_smoke: compile bench targets =="
+cargo bench --no-run
+
+if [ "${1:-}" = "--full" ]; then
+    echo "== bench_smoke: full micro_hot_paths suite =="
+    cargo bench --bench micro_hot_paths
+else
+    echo "== bench_smoke: one fast micro_hot_paths pass =="
+    # Shrink the per-bench time budget via benchkit's env knobs: enough to
+    # catch panics/regressions in the measured hot paths without paying
+    # the full measurement cost. `timeout` guards against a hung bench
+    # wedging CI.
+    BENCHKIT_WARMUP_MS=10 BENCHKIT_MIN_TIME_MS=40 \
+        timeout 300 cargo bench --bench micro_hot_paths || {
+        echo "bench_smoke: FAIL — micro_hot_paths did not complete" >&2
+        exit 1
+    }
+fi
+
+echo "bench_smoke: OK"
