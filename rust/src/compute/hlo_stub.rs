@@ -1,0 +1,51 @@
+//! Offline stand-in for [`crate::compute::hlo`], compiled when the `pjrt`
+//! feature is off. [`HloStage::load`] always fails with
+//! [`RuntimeError::PjrtDisabled`], so every consumer (the `ComputeMode::Hlo`
+//! factories, the hlo benches, `runtime_hlo` tests, selfcheck) takes its
+//! existing "artifacts unavailable" skip/error path; the pure-rust
+//! [`super::native::NativeStage`] remains the default compute path.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::runtime::RuntimeError;
+
+use super::{ComputeStage, MapStageOut, ReduceStageOut};
+
+/// Uninstantiable placeholder for the PJRT-backed compute stage.
+pub struct HloStage {
+    never: std::convert::Infallible,
+}
+
+impl HloStage {
+    /// Always fails: PJRT support was not compiled in.
+    pub fn load(_dir: &Path) -> Result<Arc<HloStage>, RuntimeError> {
+        Err(RuntimeError::PjrtDisabled)
+    }
+}
+
+impl ComputeStage for HloStage {
+    fn map_stage(
+        &self,
+        _user_hash: &[u32],
+        _cluster_hash: &[u32],
+        _has_user: &[bool],
+        _num_reducers: u32,
+    ) -> MapStageOut {
+        match self.never {}
+    }
+
+    fn reduce_stage(
+        &self,
+        _slots: &[u32],
+        _ts: &[f32],
+        _valid: &[bool],
+        _num_groups: u32,
+    ) -> ReduceStageOut {
+        match self.never {}
+    }
+
+    fn name(&self) -> &'static str {
+        match self.never {}
+    }
+}

@@ -22,6 +22,10 @@
 //! other breaks the cross-checks by design.
 
 pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod hlo;
+#[cfg(not(feature = "pjrt"))]
+#[path = "hlo_stub.rs"]
 pub mod hlo;
 
 /// Output of the map stage for a batch of parsed log lines.

@@ -214,6 +214,12 @@ impl Supervisor {
             .store(true, Ordering::SeqCst);
     }
 
+    /// Number of supervised worker slots (dataflow topologies sum this
+    /// across their stages' fleets).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
     /// GUID of the incumbent instance, if alive.
     pub fn current_guid(&self, role: Role, index: usize) -> Option<Guid> {
         self.slot(role, index)

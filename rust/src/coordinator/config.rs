@@ -84,6 +84,10 @@ pub struct ProcessorConfig {
     /// the state update becomes a blind element-wise max — rows can be
     /// processed more than once under races, but never lost.
     pub at_least_once: bool,
+    /// Write-accounting scope this processor's persisted bytes are
+    /// attributed to (set by [`crate::dataflow`] topologies so the WA
+    /// report can be broken down per stage). `None` = global-only.
+    pub scope_label: Option<String>,
 }
 
 impl Default for ProcessorConfig {
@@ -109,6 +113,7 @@ impl Default for ProcessorConfig {
             artifacts_dir: "artifacts".into(),
             pipelined_reducer: false,
             at_least_once: false,
+            scope_label: None,
         }
     }
 }
@@ -157,6 +162,10 @@ impl ProcessorConfig {
             artifacts_dir: y.get_str_or("artifacts_dir", &d.artifacts_dir).to_string(),
             pipelined_reducer: y.get_bool_or("pipelined_reducer", d.pipelined_reducer),
             at_least_once: y.get_bool_or("at_least_once", d.at_least_once),
+            scope_label: y
+                .get_opt("scope_label")
+                .and_then(|v| v.as_str().ok())
+                .map(str::to_string),
         })
     }
 

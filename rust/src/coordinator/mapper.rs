@@ -280,10 +280,11 @@ pub fn spawn_mapper(
         client: deps.client.clone(),
         metrics: deps.metrics.clone(),
         inner: Mutex::new(MapperInner::new(num_reducers, |r| {
-            Journal::new(
+            Journal::new_scoped(
                 format!("spill/m{mapper_index}/r{r}"),
                 WriteCategory::Spill,
                 accounting.clone(),
+                cfg.scope_label.clone(),
             )
         })),
         mem_freed: Condvar::new(),

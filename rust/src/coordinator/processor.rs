@@ -252,18 +252,20 @@ impl StreamingProcessor {
 /// worker index that has none yet.
 fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), String> {
     use crate::dyntable::store::StoreError;
-    match env.store.create_table(
+    match env.store.create_table_scoped(
         &cfg.mapper_state_table,
         MapperState::schema(),
         WriteCategory::MapperMeta,
+        cfg.scope_label.clone(),
     ) {
         Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
         Err(e) => return Err(e.to_string()),
     }
-    match env.store.create_table(
+    match env.store.create_table_scoped(
         &cfg.reducer_state_table,
         ReducerState::schema(),
         WriteCategory::ReducerMeta,
+        cfg.scope_label.clone(),
     ) {
         Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
         Err(e) => return Err(e.to_string()),

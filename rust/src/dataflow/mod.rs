@@ -1,0 +1,41 @@
+//! Multi-stage streaming topologies (dataflow chaining).
+//!
+//! The paper's system is a *single* map→shuffle→reduce stage whose
+//! reducers commit user output plus meta-state in one transaction. Real
+//! deployments compose such stages: Muppet-style chained map/update
+//! pipelines are the workhorse shape of streaming MapReduce. This module
+//! chains N streaming processors end to end:
+//!
+//! ```text
+//!   source ──stage 0──▶ handoff table ──stage 1──▶ … ──stage N-1──▶ user output
+//!   (ordered table)     (ordered table,            (final stage's Reduce
+//!                        WriteCategory::InterStage)  writes its own tables)
+//! ```
+//!
+//! * **Handoff** — stage *k*'s reducers emit rows through an
+//!   [`sink::EmitReducer`]; the [`sink::SinkReducer`] adapter buffers them
+//!   into the reducer's commit transaction via
+//!   [`crate::dyntable::Transaction::append_ordered`], so the append rides
+//!   the existing row-index meta-state CAS. Exactly-once needs no new
+//!   mechanism: a split-brain or conflicting commit aborts, and its
+//!   buffered rows never reach the queue. Each stage-*k* reducer owns
+//!   tablet *k* of the handoff table, so committed row indexes per tablet
+//!   are dense and deterministic.
+//! * **Consumption** — stage *k*+1's mappers read the handoff table through
+//!   the ordinary [`crate::coordinator::InputSpec::Ordered`] reader; their
+//!   `TrimInputRows` cadence advances the table's trim low-water marks, so
+//!   intermediate tables stay bounded (trim-after-consume).
+//! * **Drain** — a stage is drained only when its upstream is drained AND
+//!   its own backlog is empty ([`topology::RunningTopology::wait_drained`]).
+//! * **Accounting** — every stage gets its own metrics hub and accounting
+//!   scope; [`topology::RunningTopology::wa_report`] renders per-stage WA
+//!   factors plus an end-to-end factor whose denominator is only the
+//!   original source ingest.
+
+pub mod sink;
+pub mod topology;
+
+pub use sink::{EmitReducer, EmitterFactory, FnEmitReducer};
+pub use topology::{
+    RunningTopology, StageHandle, StageReduce, StageSpec, Topology, TopologyError,
+};

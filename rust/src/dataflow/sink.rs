@@ -1,0 +1,167 @@
+//! The ordered-table sink: how an intermediate stage's reducers hand rows
+//! to the next stage exactly once.
+//!
+//! User code for an intermediate stage implements [`EmitReducer`] — a pure
+//! transform from one combined shuffle batch to the rows the downstream
+//! stage should see. The [`SinkReducer`] adapter turns that into the
+//! coordinator's [`Reducer`] contract: it opens the commit transaction,
+//! buffers the emitted rows onto this reducer's own tablet of the handoff
+//! table with [`Transaction::append_ordered`], and returns the transaction
+//! for the reducer main procedure to finish (split-brain CAS, meta-state
+//! write, atomic commit — §4.4.2 steps 6–8). The append is applied iff the
+//! meta-state CAS wins, which is exactly the existing row-index dedup: a
+//! batch of shuffle rows is turned into downstream rows at most once.
+
+use std::sync::Arc;
+
+use crate::api::{Client, Reducer, ReducerSpec};
+use crate::dyntable::Transaction;
+use crate::queue::ordered_table::OrderedTable;
+use crate::rows::{UnversionedRow, UnversionedRowset};
+use crate::util::yson::Yson;
+
+/// User code of an intermediate dataflow stage: transform one combined
+/// batch of shuffled rows into the rows handed to the next stage.
+///
+/// **Must be deterministic** for a given input rowset (like
+/// [`crate::api::Mapper`]): under split-brain races the commit CAS picks
+/// one twin's emission, and correctness of the pipeline's *contents*
+/// relies on any twin emitting equivalent rows for the same batch.
+pub trait EmitReducer: Send {
+    fn emit(&mut self, rows: UnversionedRowset) -> Vec<UnversionedRow>;
+}
+
+/// `CreateReducer` analogue for intermediate stages.
+pub type EmitterFactory =
+    Arc<dyn Fn(&Yson, &Client, &ReducerSpec) -> Box<dyn EmitReducer> + Send + Sync>;
+
+/// Adapter: build an [`EmitReducer`] from a plain function (tests,
+/// examples).
+pub struct FnEmitReducer<F>(pub F);
+
+impl<F: FnMut(UnversionedRowset) -> Vec<UnversionedRow> + Send> EmitReducer for FnEmitReducer<F> {
+    fn emit(&mut self, rows: UnversionedRowset) -> Vec<UnversionedRow> {
+        (self.0)(rows)
+    }
+}
+
+/// The coordinator-facing wrapper around an intermediate stage's
+/// [`EmitReducer`]: reducer *k* appends into tablet *k* of the handoff
+/// table, inside the exactly-once commit transaction.
+pub(crate) struct SinkReducer {
+    pub inner: Box<dyn EmitReducer>,
+    pub handoff: Arc<OrderedTable>,
+    pub tablet: usize,
+    pub client: Client,
+}
+
+impl Reducer for SinkReducer {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction> {
+        if rows.is_empty() {
+            return None;
+        }
+        let out = self.inner.emit(rows);
+        // Always hand back a transaction, even for an empty emission: the
+        // reducer main procedure still advances the meta-state (the batch
+        // was consumed, it just produced nothing downstream).
+        let mut txn = self.client.begin();
+        if !out.is_empty() {
+            let width = self.handoff.name_table().len();
+            for r in &out {
+                assert_eq!(
+                    r.len(),
+                    width,
+                    "stage emitted a row of arity {} into handoff table '{}' (schema arity {})",
+                    r.len(),
+                    self.handoff.name(),
+                    width
+                );
+            }
+            txn.append_ordered(self.handoff.clone(), self.tablet, out)
+                .expect("append_ordered on an open transaction");
+        }
+        Some(txn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::processor::ClusterEnv;
+    use crate::queue::input_name_table;
+    use crate::row;
+    use crate::rows::RowsetBuilder;
+    use crate::storage::WriteCategory;
+    use crate::util::Clock;
+
+    fn rig() -> (ClusterEnv, Arc<OrderedTable>) {
+        let env = ClusterEnv::new(Clock::realtime(), 7);
+        let handoff = OrderedTable::new_with_category(
+            "//dataflow/test/handoff",
+            input_name_table(),
+            2,
+            env.accounting.clone(),
+            WriteCategory::InterStage,
+        );
+        (env, handoff)
+    }
+
+    fn batch(payloads: &[&str]) -> UnversionedRowset {
+        let mut b = RowsetBuilder::new(input_name_table());
+        for p in payloads {
+            b.push(row![*p, 0i64]);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn sink_appends_land_only_on_commit() {
+        let (env, handoff) = rig();
+        let mut r = SinkReducer {
+            inner: Box::new(FnEmitReducer(|rows: UnversionedRowset| {
+                rows.rows().to_vec()
+            })),
+            handoff: handoff.clone(),
+            tablet: 1,
+            client: env.client(),
+        };
+        let txn = r.reduce(batch(&["a", "b"])).expect("txn");
+        assert_eq!(handoff.end_index(1), 0, "nothing lands before commit");
+        txn.commit().unwrap();
+        assert_eq!(handoff.end_index(1), 2);
+        assert_eq!(handoff.end_index(0), 0, "reducer owns its own tablet");
+    }
+
+    #[test]
+    fn sink_aborted_txn_emits_nothing() {
+        let (env, handoff) = rig();
+        let mut r = SinkReducer {
+            inner: Box::new(FnEmitReducer(|rows: UnversionedRowset| {
+                rows.rows().to_vec()
+            })),
+            handoff: handoff.clone(),
+            tablet: 0,
+            client: env.client(),
+        };
+        let txn = r.reduce(batch(&["a"])).expect("txn");
+        txn.abort();
+        assert_eq!(handoff.end_index(0), 0);
+    }
+
+    #[test]
+    fn sink_empty_emission_still_returns_txn() {
+        let (env, handoff) = rig();
+        let mut r = SinkReducer {
+            inner: Box::new(FnEmitReducer(
+                |_rows: UnversionedRowset| -> Vec<UnversionedRow> { Vec::new() },
+            )),
+            handoff,
+            tablet: 0,
+            client: env.client(),
+        };
+        // The meta-state must still be able to advance on a filtered-out
+        // batch, so a transaction comes back.
+        assert!(r.reduce(batch(&["x"])).is_some());
+        assert!(r.reduce(UnversionedRowset::empty(input_name_table())).is_none());
+    }
+}

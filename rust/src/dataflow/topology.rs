@@ -1,0 +1,701 @@
+//! Declarative topology of chained streaming-MapReduce stages.
+//!
+//! A [`Topology`] is a list of [`StageSpec`]s. [`Topology::launch`]
+//! validates the wiring (schema compatibility between adjacent stages,
+//! partition-count wiring: stage *k*+1 runs one mapper per stage-*k*
+//! reducer tablet), namespaces every stage's state tables and discovery
+//! directory under `//sys/dataflow/<topology>/<stage>/`, creates the
+//! inter-stage handoff tables, and launches one supervised
+//! [`StreamingProcessor`] fleet per stage against a shared [`ClusterEnv`]
+//! — each with its own metrics hub and write-accounting scope so the
+//! report can be broken down per stage.
+
+use std::sync::Arc;
+
+use crate::api::{Client, MapperFactory, Reducer, ReducerFactory, ReducerSpec};
+use crate::controller::Supervisor;
+use crate::coordinator::processor::{ClusterEnv, LaunchError};
+use crate::coordinator::{InputSpec, ProcessorConfig, StreamingProcessor};
+use crate::metrics::hub::names;
+use crate::metrics::{MetricsHub, PipelineWaReport, WaReport};
+use crate::queue::ordered_table::OrderedTable;
+use crate::rows::NameTable;
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+
+use super::sink::{EmitterFactory, SinkReducer};
+
+/// How a stage's reducers dispose of their results.
+pub enum StageReduce {
+    /// Intermediate hop: emitted rows are committed into the ordered
+    /// handoff table feeding the next stage (exactly once, accounted as
+    /// [`WriteCategory::InterStage`]).
+    Emit(EmitterFactory),
+    /// Final stage: the user's [`Reducer`] writes its own output tables in
+    /// the commit transaction (accounted as whatever category those tables
+    /// were created with, conventionally `UserOutput`).
+    Final(ReducerFactory),
+}
+
+/// One stage of a topology.
+pub struct StageSpec {
+    /// Stage name, unique within the topology (used for state-table
+    /// namespacing and the per-stage WA report).
+    pub name: String,
+    /// Base tunables. `mapper_count`/`reducer_count` define the stage's
+    /// shape; state-table paths, discovery dir, `name` and `scope_label`
+    /// are overwritten by the topology's namespacing at launch.
+    pub config: ProcessorConfig,
+    /// Columns this stage's mappers expect from their input stream.
+    pub input_columns: Arc<NameTable>,
+    /// Columns of the rows handed downstream (required for
+    /// [`StageReduce::Emit`] stages; ignored for the final stage).
+    pub output_columns: Option<Arc<NameTable>>,
+    pub mapper_factory: MapperFactory,
+    pub reduce: StageReduce,
+    /// The user config node passed to this stage's factories.
+    pub user_config: Yson,
+}
+
+impl StageSpec {
+    /// Convenience constructor for an intermediate (emitting) stage.
+    pub fn intermediate(
+        name: impl Into<String>,
+        config: ProcessorConfig,
+        input_columns: Arc<NameTable>,
+        output_columns: Arc<NameTable>,
+        mapper_factory: MapperFactory,
+        emitter_factory: EmitterFactory,
+    ) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            config,
+            input_columns,
+            output_columns: Some(output_columns),
+            mapper_factory,
+            reduce: StageReduce::Emit(emitter_factory),
+            user_config: Yson::parse("{}").unwrap(),
+        }
+    }
+
+    /// Convenience constructor for the final stage.
+    pub fn final_stage(
+        name: impl Into<String>,
+        config: ProcessorConfig,
+        input_columns: Arc<NameTable>,
+        mapper_factory: MapperFactory,
+        reducer_factory: ReducerFactory,
+    ) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            config,
+            input_columns,
+            output_columns: None,
+            mapper_factory,
+            reduce: StageReduce::Final(reducer_factory),
+            user_config: Yson::parse("{}").unwrap(),
+        }
+    }
+}
+
+/// Errors surfaced by topology validation / launch.
+#[derive(Debug, thiserror::Error)]
+pub enum TopologyError {
+    #[error("topology has no stages")]
+    Empty,
+    #[error("duplicate stage name '{0}'")]
+    DuplicateStageName(String),
+    #[error("stage '{0}' is intermediate and must use StageReduce::Emit")]
+    IntermediateMustEmit(String),
+    #[error("stage '{0}': intermediate stage is missing its output columns")]
+    MissingOutputSchema(String),
+    #[error("stage '{0}' is the final stage and must use StageReduce::Final")]
+    FinalMustBeFinal(String),
+    #[error(
+        "stage '{0}': ordered-table handoff requires exactly-once commits \
+         (at_least_once must be off)"
+    )]
+    ExactlyOnceRequired(String),
+    #[error("stage '{stage}': mapper_count {mappers} != source partition count {partitions}")]
+    SourceWiring {
+        stage: String,
+        mappers: usize,
+        partitions: usize,
+    },
+    #[error(
+        "stage '{stage}': mapper_count {mappers} != upstream stage '{upstream}' \
+         reducer_count {upstream_reducers}"
+    )]
+    PartitionWiring {
+        stage: String,
+        mappers: usize,
+        upstream: String,
+        upstream_reducers: usize,
+    },
+    #[error("stage '{stage}': expects input columns {expected:?} but upstream provides {found:?}")]
+    SchemaMismatch {
+        stage: String,
+        expected: Vec<String>,
+        found: Vec<String>,
+    },
+    #[error("stage launch failed: {0}")]
+    Launch(#[from] LaunchError),
+}
+
+/// A declarative chain of stages, built with [`Topology::stage`] and run
+/// with [`Topology::launch`].
+pub struct Topology {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>) -> Topology {
+        Topology {
+            name: name.into(),
+            stages: Vec::new(),
+        }
+    }
+
+    /// Append a stage (builder style).
+    pub fn stage(mut self, spec: StageSpec) -> Topology {
+        self.stages.push(spec);
+        self
+    }
+
+    /// Check the whole chain's wiring against a source without launching
+    /// anything.
+    pub fn validate(&self, source: &InputSpec) -> Result<(), TopologyError> {
+        if self.stages.is_empty() {
+            return Err(TopologyError::Empty);
+        }
+        let mut seen: Vec<&str> = Vec::new();
+        for name in self.stages.iter().map(|s| s.name.as_str()) {
+            if seen.contains(&name) {
+                return Err(TopologyError::DuplicateStageName(name.to_string()));
+            }
+            seen.push(name);
+        }
+        let last = self.stages.len() - 1;
+        for (k, spec) in self.stages.iter().enumerate() {
+            match (&spec.reduce, k == last) {
+                (StageReduce::Final(_), false) => {
+                    return Err(TopologyError::IntermediateMustEmit(spec.name.clone()))
+                }
+                (StageReduce::Emit(_), true) => {
+                    return Err(TopologyError::FinalMustBeFinal(spec.name.clone()))
+                }
+                (StageReduce::Emit(_), false) => {
+                    if spec.output_columns.is_none() {
+                        return Err(TopologyError::MissingOutputSchema(spec.name.clone()));
+                    }
+                    if spec.config.at_least_once {
+                        return Err(TopologyError::ExactlyOnceRequired(spec.name.clone()));
+                    }
+                }
+                (StageReduce::Final(_), true) => {}
+            }
+
+            // Partition wiring + schema compatibility against the upstream.
+            let (upstream_columns, upstream_partitions): (Arc<NameTable>, usize) = if k == 0 {
+                (source.name_table(), source.partition_count())
+            } else {
+                let up = &self.stages[k - 1];
+                (
+                    up.output_columns.clone().expect("checked above"),
+                    up.config.reducer_count,
+                )
+            };
+            if spec.config.mapper_count != upstream_partitions {
+                if k == 0 {
+                    return Err(TopologyError::SourceWiring {
+                        stage: spec.name.clone(),
+                        mappers: spec.config.mapper_count,
+                        partitions: upstream_partitions,
+                    });
+                }
+                return Err(TopologyError::PartitionWiring {
+                    stage: spec.name.clone(),
+                    mappers: spec.config.mapper_count,
+                    upstream: self.stages[k - 1].name.clone(),
+                    upstream_reducers: upstream_partitions,
+                });
+            }
+            if spec.input_columns.names() != upstream_columns.names() {
+                return Err(TopologyError::SchemaMismatch {
+                    stage: spec.name.clone(),
+                    expected: spec.input_columns.names().to_vec(),
+                    found: upstream_columns.names().to_vec(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate, create the handoff tables, and launch one supervised
+    /// processor fleet per stage. On a mid-chain launch failure the
+    /// already-launched stages are stopped before the error is returned.
+    pub fn launch(
+        self,
+        env: &ClusterEnv,
+        source: InputSpec,
+    ) -> Result<RunningTopology, TopologyError> {
+        self.validate(&source)?;
+        let Topology {
+            name: topo_name,
+            stages: specs,
+        } = self;
+
+        let mut stages: Vec<StageHandle> = Vec::new();
+        let mut input = source.clone();
+        for spec in specs {
+            let scope = format!("{}/{}", topo_name, spec.name);
+            let base = format!("//sys/dataflow/{}/{}", topo_name, spec.name);
+            let mut cfg = spec.config.clone();
+            cfg.name = scope.clone();
+            cfg.scope_label = Some(scope.clone());
+            cfg.mapper_state_table = format!("{base}/mapper_state");
+            cfg.reducer_state_table = format!("{base}/reducer_state");
+            cfg.discovery_dir = format!("{base}/discovery");
+
+            // Each stage gets its own hub so per-stage ingest/commit
+            // counters stay separable; storage substrates stay shared.
+            let mut stage_env = env.clone();
+            stage_env.metrics = MetricsHub::new();
+
+            let (reducer_factory, handoff): (ReducerFactory, Option<Arc<OrderedTable>>) =
+                match spec.reduce {
+                    StageReduce::Final(rf) => (rf, None),
+                    StageReduce::Emit(emitter) => {
+                        let out_nt = spec.output_columns.clone().expect("validated");
+                        let handoff = OrderedTable::new_scoped(
+                            &format!("{base}/handoff"),
+                            out_nt,
+                            cfg.reducer_count,
+                            env.accounting.clone(),
+                            WriteCategory::InterStage,
+                            Some(scope.clone()),
+                        );
+                        let sink = handoff.clone();
+                        let rf: ReducerFactory = Arc::new(
+                            move |user_cfg: &Yson, client: &Client, rspec: &ReducerSpec| {
+                                Box::new(SinkReducer {
+                                    inner: emitter(user_cfg, client, rspec),
+                                    handoff: sink.clone(),
+                                    tablet: rspec.index,
+                                    client: client.clone(),
+                                }) as Box<dyn Reducer>
+                            },
+                        );
+                        (rf, Some(handoff))
+                    }
+                };
+
+            let processor = match StreamingProcessor::launch(
+                cfg,
+                stage_env,
+                input.clone(),
+                spec.mapper_factory.clone(),
+                reducer_factory,
+                spec.user_config.clone(),
+            ) {
+                Ok(p) => p,
+                Err(e) => {
+                    for s in stages {
+                        s.processor.stop();
+                    }
+                    return Err(TopologyError::Launch(e));
+                }
+            };
+
+            if let Some(h) = &handoff {
+                input = InputSpec::Ordered(h.clone());
+            }
+            stages.push(StageHandle {
+                name: spec.name,
+                scope,
+                processor,
+                handoff,
+            });
+        }
+
+        Ok(RunningTopology {
+            name: topo_name,
+            env: env.clone(),
+            source,
+            stages,
+        })
+    }
+}
+
+/// A running stage within a [`RunningTopology`].
+pub struct StageHandle {
+    pub name: String,
+    /// Write-accounting scope label (`<topology>/<stage>`).
+    scope: String,
+    pub processor: StreamingProcessor,
+    /// The ordered table this stage feeds (None for the final stage).
+    pub handoff: Option<Arc<OrderedTable>>,
+}
+
+impl StageHandle {
+    pub fn scope(&self) -> &str {
+        &self.scope
+    }
+
+    pub fn supervisor(&self) -> &Arc<Supervisor> {
+        self.processor.supervisor()
+    }
+
+    /// This stage's private metrics hub.
+    pub fn metrics(&self) -> &Arc<MetricsHub> {
+        &self.processor.env.metrics
+    }
+
+    /// Rows still retained in this stage's input (its backlog).
+    pub fn backlog_rows(&self) -> usize {
+        self.processor.input.retained_rows()
+    }
+
+    /// Rows this stage's reducers have committed so far.
+    pub fn reduced_rows(&self) -> u64 {
+        self.metrics().get_counter(names::REDUCER_ROWS)
+    }
+}
+
+/// A launched topology: the user-facing handle over the whole chain.
+pub struct RunningTopology {
+    pub name: String,
+    env: ClusterEnv,
+    source: InputSpec,
+    stages: Vec<StageHandle>,
+}
+
+impl RunningTopology {
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn stage(&self, index: usize) -> &StageHandle {
+        &self.stages[index]
+    }
+
+    pub fn stages(&self) -> &[StageHandle] {
+        &self.stages
+    }
+
+    pub fn env(&self) -> &ClusterEnv {
+        &self.env
+    }
+
+    pub fn source(&self) -> &InputSpec {
+        &self.source
+    }
+
+    /// End-to-end drain predicate for one stage: a stage is drained only
+    /// when its upstream is drained AND its own backlog is empty. (Backlog
+    /// emptiness is trim-driven, so it implies every retained input row's
+    /// effects were committed downstream of it.)
+    pub fn stage_drained(&self, index: usize) -> bool {
+        self.stages[..=index]
+            .iter()
+            .all(|s| s.backlog_rows() == 0)
+    }
+
+    /// Is the whole chain drained right now? (Instantaneous check; use
+    /// [`RunningTopology::wait_drained`] for a stable verdict.)
+    pub fn drained(&self) -> bool {
+        self.stage_drained(self.stages.len() - 1)
+    }
+
+    /// Rows committed by the final stage's reducers.
+    pub fn final_reduced_rows(&self) -> u64 {
+        self.stages.last().expect("validated non-empty").reduced_rows()
+    }
+
+    /// Total supervised worker slots across every stage's fleet.
+    pub fn worker_count(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| s.supervisor().slot_count())
+            .sum()
+    }
+
+    /// Rows currently retained across all inter-stage handoff tables
+    /// (bounded-ness metric for trim-after-consume).
+    pub fn handoff_retained_rows(&self) -> usize {
+        self.stages
+            .iter()
+            .filter_map(|s| s.handoff.as_ref())
+            .map(|h| h.retained_rows())
+            .sum()
+    }
+
+    /// Wait (wall-clock bounded) until every stage is drained — observed
+    /// on two consecutive polls with a stable final-stage commit count, so
+    /// a topology whose final stage legitimately commits zero rows still
+    /// reports drained. Producers into the source must already be stopped,
+    /// else this can only time out.
+    pub fn wait_drained(&self, wall_timeout_ms: u64) -> bool {
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_millis(wall_timeout_ms);
+        // Some(count) = previous poll saw a drained chain with this many
+        // final-stage rows committed.
+        let mut prev_drained_at: Option<u64> = None;
+        while std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let drained = self.drained();
+            let reduced = self.final_reduced_rows();
+            if drained && prev_drained_at == Some(reduced) {
+                return true;
+            }
+            prev_drained_at = drained.then_some(reduced);
+        }
+        false
+    }
+
+    /// Per-stage plus end-to-end write-amplification report. Per-stage
+    /// denominators are each stage's own ingest; the end-to-end denominator
+    /// is only the original source ingest (stage 0's mapper bytes).
+    pub fn wa_report(&self) -> PipelineWaReport {
+        let source_ingest = self.stages[0].processor.ingested_bytes();
+        let total = WaReport::new(
+            format!("{} (end-to-end)", self.name),
+            source_ingest,
+            self.env.accounting.snapshot(),
+        );
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                WaReport::new(
+                    s.scope.clone(),
+                    s.processor.ingested_bytes(),
+                    self.env.accounting.scope_snapshot(&s.scope),
+                )
+            })
+            .collect();
+        PipelineWaReport { stages, total }
+    }
+
+    /// Stop every stage's fleet; returns the shared env for post-mortem
+    /// queries.
+    pub fn stop(self) -> ClusterEnv {
+        let env = self.env.clone();
+        for s in self.stages {
+            s.processor.stop();
+        }
+        env
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{FnMapper, FnReducer, PartitionedRowset};
+    use crate::dataflow::sink::FnEmitReducer;
+    use crate::queue::input_name_table;
+    use crate::rows::UnversionedRowset;
+    use crate::storage::WriteAccounting;
+
+    fn noop_mapper_factory() -> MapperFactory {
+        Arc::new(
+            |_cfg: &Yson,
+             _client: &Client,
+             _nt: Arc<NameTable>,
+             _spec: &crate::api::MapperSpec| {
+                Box::new(FnMapper(|rows: UnversionedRowset| {
+                    let n = rows.len();
+                    PartitionedRowset {
+                        rowset: rows,
+                        partition_indexes: vec![0; n],
+                    }
+                })) as Box<dyn crate::api::Mapper>
+            },
+        )
+    }
+
+    fn noop_emitter_factory() -> EmitterFactory {
+        Arc::new(|_cfg: &Yson, _client: &Client, _spec: &ReducerSpec| {
+            Box::new(FnEmitReducer(
+                |_rows: UnversionedRowset| -> Vec<crate::rows::UnversionedRow> { Vec::new() },
+            )) as Box<dyn crate::dataflow::EmitReducer>
+        })
+    }
+
+    fn noop_reducer_factory() -> ReducerFactory {
+        Arc::new(|_cfg: &Yson, _client: &Client, _spec: &ReducerSpec| {
+            Box::new(FnReducer(
+                |_rows: UnversionedRowset| -> Option<crate::dyntable::Transaction> { None },
+            )) as Box<dyn Reducer>
+        })
+    }
+
+    fn source(partitions: usize) -> InputSpec {
+        InputSpec::Ordered(OrderedTable::new(
+            "//input/topo_test",
+            input_name_table(),
+            partitions,
+            WriteAccounting::new(),
+        ))
+    }
+
+    fn cfg(mappers: usize, reducers: usize) -> ProcessorConfig {
+        ProcessorConfig {
+            mapper_count: mappers,
+            reducer_count: reducers,
+            ..ProcessorConfig::default()
+        }
+    }
+
+    fn two_stage(s1: ProcessorConfig, s2: ProcessorConfig) -> Topology {
+        Topology::new("t")
+            .stage(StageSpec::intermediate(
+                "first",
+                s1,
+                input_name_table(),
+                input_name_table(),
+                noop_mapper_factory(),
+                noop_emitter_factory(),
+            ))
+            .stage(StageSpec::final_stage(
+                "second",
+                s2,
+                input_name_table(),
+                noop_mapper_factory(),
+                noop_reducer_factory(),
+            ))
+    }
+
+    #[test]
+    fn empty_topology_rejected() {
+        assert!(matches!(
+            Topology::new("t").validate(&source(1)),
+            Err(TopologyError::Empty)
+        ));
+    }
+
+    #[test]
+    fn valid_two_stage_wiring_passes() {
+        // stage1: 4 mappers over 4 source partitions, 2 reducers;
+        // stage2: 2 mappers over the 2 handoff tablets.
+        two_stage(cfg(4, 2), cfg(2, 1)).validate(&source(4)).unwrap();
+    }
+
+    #[test]
+    fn source_wiring_mismatch_rejected() {
+        assert!(matches!(
+            two_stage(cfg(3, 2), cfg(2, 1)).validate(&source(4)),
+            Err(TopologyError::SourceWiring { mappers: 3, partitions: 4, .. })
+        ));
+    }
+
+    #[test]
+    fn partition_wiring_mismatch_rejected() {
+        assert!(matches!(
+            two_stage(cfg(4, 2), cfg(3, 1)).validate(&source(4)),
+            Err(TopologyError::PartitionWiring {
+                mappers: 3,
+                upstream_reducers: 2,
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let t = Topology::new("t")
+            .stage(StageSpec::intermediate(
+                "first",
+                cfg(2, 2),
+                input_name_table(),
+                crate::rows::NameTable::new(&["session", "count"]),
+                noop_mapper_factory(),
+                noop_emitter_factory(),
+            ))
+            .stage(StageSpec::final_stage(
+                "second",
+                cfg(2, 1),
+                input_name_table(), // wrong: upstream hands (session, count)
+                noop_mapper_factory(),
+                noop_reducer_factory(),
+            ));
+        assert!(matches!(
+            t.validate(&source(2)),
+            Err(TopologyError::SchemaMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn final_stage_must_be_final() {
+        let t = Topology::new("t").stage(StageSpec::intermediate(
+            "only",
+            cfg(2, 2),
+            input_name_table(),
+            input_name_table(),
+            noop_mapper_factory(),
+            noop_emitter_factory(),
+        ));
+        assert!(matches!(
+            t.validate(&source(2)),
+            Err(TopologyError::FinalMustBeFinal(_))
+        ));
+    }
+
+    #[test]
+    fn intermediate_stage_must_emit() {
+        let t = Topology::new("t")
+            .stage(StageSpec::final_stage(
+                "first",
+                cfg(2, 2),
+                input_name_table(),
+                noop_mapper_factory(),
+                noop_reducer_factory(),
+            ))
+            .stage(StageSpec::final_stage(
+                "second",
+                cfg(2, 1),
+                input_name_table(),
+                noop_mapper_factory(),
+                noop_reducer_factory(),
+            ));
+        assert!(matches!(
+            t.validate(&source(2)),
+            Err(TopologyError::IntermediateMustEmit(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_stage_names_rejected() {
+        let t = Topology::new("t")
+            .stage(StageSpec::intermediate(
+                "same",
+                cfg(2, 2),
+                input_name_table(),
+                input_name_table(),
+                noop_mapper_factory(),
+                noop_emitter_factory(),
+            ))
+            .stage(StageSpec::final_stage(
+                "same",
+                cfg(2, 1),
+                input_name_table(),
+                noop_mapper_factory(),
+                noop_reducer_factory(),
+            ));
+        assert!(matches!(
+            t.validate(&source(2)),
+            Err(TopologyError::DuplicateStageName(_))
+        ));
+    }
+
+    #[test]
+    fn at_least_once_emit_stage_rejected() {
+        let mut s1 = cfg(2, 2);
+        s1.at_least_once = true;
+        assert!(matches!(
+            two_stage(s1, cfg(2, 1)).validate(&source(2)),
+            Err(TopologyError::ExactlyOnceRequired(_))
+        ));
+    }
+}

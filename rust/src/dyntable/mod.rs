@@ -14,12 +14,15 @@
 //! through the storage journal instead (every committed byte lands in a
 //! [`crate::storage::WriteCategory`] bucket).
 //!
-//! Exactly-once hinges on this module twice:
+//! Exactly-once hinges on this module three times:
 //! * mappers CAS their persistent state row inside a transaction
 //!   (§4.3.5 `TrimInputRows`),
 //! * reducers commit user-table effects and their own meta-state in one
 //!   transaction (§4.4.2 steps 6–8), so "the effect of processing a batch
-//!   of rows is applied exactly once".
+//!   of rows is applied exactly once",
+//! * dataflow stages buffer their ordered-table handoff rows into that
+//!   same transaction ([`Transaction::append_ordered`]), so a chained
+//!   hop's output lands iff the stage's meta-state CAS wins.
 
 pub mod store;
 pub mod txn;

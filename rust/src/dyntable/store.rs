@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::rows::{TableSchema, UnversionedRow, Value};
+use crate::storage::accounting::ScopeHandle;
 use crate::storage::{WriteAccounting, WriteCategory};
 
 use super::txn::{Transaction, TxnError};
@@ -24,6 +25,9 @@ pub(crate) struct VersionedRow {
 pub(crate) struct TableData {
     pub schema: TableSchema,
     pub category: WriteCategory,
+    /// Accounting scope (dataflow stage) commit bytes are attributed to;
+    /// resolved to a lock-free handle at table creation.
+    pub scope: Option<ScopeHandle>,
     pub rows: BTreeMap<Key, VersionedRow>,
 }
 
@@ -74,8 +78,21 @@ impl DynTableStore {
         schema: TableSchema,
         category: WriteCategory,
     ) -> Result<TableDescriptor, StoreError> {
+        self.create_table_scoped(name, schema, category, None)
+    }
+
+    /// Like [`DynTableStore::create_table`] but also attributing committed
+    /// bytes to a named accounting scope (per-stage WA reports).
+    pub fn create_table_scoped(
+        &self,
+        name: &str,
+        schema: TableSchema,
+        category: WriteCategory,
+        scope: Option<String>,
+    ) -> Result<TableDescriptor, StoreError> {
         self.check_available()?;
         assert!(schema.key_count() > 0, "sorted table needs key columns");
+        let scope = scope.map(|s| self.accounting.scope_handle(&s));
         let mut tables = self.tables.lock().unwrap();
         if tables.contains_key(name) {
             return Err(StoreError::AlreadyExists(name.to_string()));
@@ -85,6 +102,7 @@ impl DynTableStore {
             TableData {
                 schema,
                 category,
+                scope,
                 rows: BTreeMap::new(),
             },
         );

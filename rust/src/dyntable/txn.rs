@@ -14,17 +14,27 @@
 //! split-brain duplicates lose the race in §4.6: "a produced row is only
 //! sent … if the corresponding mapper's state was not modified by some
 //! other worker", and dually for reducers in §4.4.2 step 7.
+//!
+//! Ordered dynamic tables are transactional write targets too (as in YT):
+//! [`Transaction::append_ordered`] buffers rows for a queue tablet and the
+//! commit applies them in the same critical section as the sorted-table
+//! writes. This is what gives a dataflow stage's ordered-table handoff its
+//! exactly-once guarantee — the append rides the reducer's meta-state CAS,
+//! so a split-brain loser's buffered rows never reach the queue.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
+use crate::queue::ordered_table::OrderedTable;
 use crate::rows::{codec, UnversionedRow, Value};
 
 use super::store::{DynTableStore, Key, VersionedRow};
 
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum TxnError {
+    #[error("ordered tablet {tablet} of '{table}' unavailable (injected fault)")]
+    TabletUnavailable { table: String, tablet: usize },
     #[error("commit conflict on table '{table}' key {key:?}: expected version {expected}, found {found}")]
     Conflict {
         table: String,
@@ -57,6 +67,9 @@ pub struct Transaction {
     /// deterministic journaling.
     write_set: Vec<((String, Key), Mutation)>,
     write_index: HashMap<(String, Key), usize>,
+    /// Buffered ordered-table appends, applied atomically with the write
+    /// set at commit (one entry = one tablet's batch).
+    ordered_appends: Vec<(Arc<OrderedTable>, usize, Vec<UnversionedRow>)>,
     finished: bool,
 }
 
@@ -74,6 +87,7 @@ impl Transaction {
             read_set: HashMap::new(),
             write_set: Vec::new(),
             write_index: HashMap::new(),
+            ordered_appends: Vec::new(),
             finished: false,
         }
     }
@@ -144,16 +158,47 @@ impl Transaction {
         }
     }
 
+    /// Buffer rows to append onto one tablet of an ordered table. Applied
+    /// at commit, atomically with the sorted-table write set: if the
+    /// commit conflicts (or the transaction is dropped) the rows never
+    /// reach the queue. Row indexes are assigned at apply time, under the
+    /// store-wide commit lock, so the committed sequence per tablet is
+    /// dense and deterministic.
+    pub fn append_ordered(
+        &mut self,
+        table: Arc<OrderedTable>,
+        tablet: usize,
+        rows: Vec<UnversionedRow>,
+    ) -> Result<(), TxnError> {
+        self.check_open()?;
+        assert!(
+            tablet < table.tablet_count(),
+            "append_ordered: tablet {tablet} out of range (table has {})",
+            table.tablet_count()
+        );
+        if !rows.is_empty() {
+            self.ordered_appends.push((table, tablet, rows));
+        }
+        Ok(())
+    }
+
     /// Number of buffered mutations.
     pub fn pending_writes(&self) -> usize {
         self.write_set.len()
     }
 
-    /// Validate the read set and atomically apply the write set.
+    /// Number of rows buffered for ordered-table appends.
+    pub fn pending_appends(&self) -> usize {
+        self.ordered_appends.iter().map(|(_, _, r)| r.len()).sum()
+    }
+
+    /// Validate the read set and atomically apply the write set (sorted
+    /// rows and buffered ordered-table appends).
     pub fn commit(mut self) -> Result<CommitResult, TxnError> {
         self.check_open()?;
         self.finished = true;
         self.store.check_available()?;
+        let ordered_appends = std::mem::take(&mut self.ordered_appends);
 
         // The tables mutex doubles as the commit lock: validation and
         // application are one critical section, which is what 2PC's
@@ -181,6 +226,17 @@ impl Transaction {
                 return Err(TxnError::NoSuchTable(table.clone()));
             }
         }
+        // Validate ordered-append targets are available. An outage injected
+        // after this point does not tear the commit: the apply below uses
+        // the unconditional append path.
+        for (table, tablet, _) in &ordered_appends {
+            if !table.is_available(*tablet) {
+                return Err(TxnError::TabletUnavailable {
+                    table: table.name().to_string(),
+                    tablet: *tablet,
+                });
+            }
+        }
 
         // Phase 2: apply under a fresh commit id, journal the bytes.
         let commit_id = self.store.commit_counter.fetch_add(1, Ordering::Relaxed);
@@ -190,9 +246,10 @@ impl Transaction {
             match m {
                 Mutation::Upsert(row) => {
                     let encoded = codec::encode_rows(std::slice::from_ref(row));
-                    self.store
-                        .accounting
-                        .record(t.category, encoded.len() as u64);
+                    self.store.accounting.record(t.category, encoded.len() as u64);
+                    if let Some(scope) = &t.scope {
+                        scope.record(t.category, encoded.len() as u64);
+                    }
                     // Persist boundary: detach string cells — in the key
                     // too, it is stored for the table's lifetime — so a
                     // committed row owns minimal buffers instead of
@@ -209,13 +266,20 @@ impl Transaction {
                 Mutation::Delete => {
                     // A tombstone still costs a small persisted record.
                     let encoded = codec::encode_rows(&[UnversionedRow::new(key.clone())]);
-                    self.store
-                        .accounting
-                        .record(t.category, encoded.len() as u64);
+                    self.store.accounting.record(t.category, encoded.len() as u64);
+                    if let Some(scope) = &t.scope {
+                        scope.record(t.category, encoded.len() as u64);
+                    }
                     t.rows.remove(key);
                     rows_written += 1;
                 }
             }
+        }
+        // Apply the ordered appends inside the same critical section; the
+        // tablet assigns dense absolute row indexes in commit order.
+        for (table, tablet, rows) in ordered_appends {
+            rows_written += rows.len();
+            table.append_committed(tablet, rows);
         }
         Ok(CommitResult {
             commit_id,
@@ -428,6 +492,131 @@ mod tests {
         a.lookup("state", &[Value::Int64(1)]).unwrap();
         a.write("state", row![1i64, "v2"]).unwrap();
         assert!(matches!(a.commit(), Err(TxnError::Conflict { .. })));
+    }
+
+    #[test]
+    fn ordered_append_commits_atomically_with_state() {
+        use crate::queue::input_name_table;
+        use crate::queue::ordered_table::OrderedTable;
+
+        let acc = WriteAccounting::new();
+        let s = DynTableStore::new(acc.clone());
+        s.create_table(
+            "state",
+            TableSchema::new(vec![
+                ColumnSchema::key("idx", ColumnType::Int64),
+                ColumnSchema::value("val", ColumnType::Str),
+            ]),
+            WriteCategory::ReducerMeta,
+        )
+        .unwrap();
+        let q = OrderedTable::new_with_category(
+            "handoff",
+            input_name_table(),
+            2,
+            acc.clone(),
+            WriteCategory::InterStage,
+        );
+
+        let mut t = s.begin();
+        t.write("state", row![0i64, "advanced"]).unwrap();
+        t.append_ordered(q.clone(), 1, vec![row!["sess", 1i64], row!["sess2", 2i64]])
+            .unwrap();
+        assert_eq!(t.pending_appends(), 2);
+        let r = t.commit().unwrap();
+        assert_eq!(r.rows_written, 3, "1 sorted row + 2 appended rows");
+        assert_eq!(q.end_index(1), 2);
+        assert_eq!(q.end_index(0), 0);
+        assert!(acc.bytes(WriteCategory::InterStage) > 0);
+    }
+
+    #[test]
+    fn conflicting_commit_drops_ordered_appends() {
+        use crate::queue::input_name_table;
+        use crate::queue::ordered_table::OrderedTable;
+
+        let acc = WriteAccounting::new();
+        let s = DynTableStore::new(acc.clone());
+        s.create_table(
+            "state",
+            TableSchema::new(vec![
+                ColumnSchema::key("idx", ColumnType::Int64),
+                ColumnSchema::value("val", ColumnType::Str),
+            ]),
+            WriteCategory::ReducerMeta,
+        )
+        .unwrap();
+        let mut seed = s.begin();
+        seed.write("state", row![0i64, "v0"]).unwrap();
+        seed.commit().unwrap();
+        let q = OrderedTable::new_with_category(
+            "handoff",
+            input_name_table(),
+            1,
+            acc,
+            WriteCategory::InterStage,
+        );
+
+        // Split-brain shape: both twins read the state, both buffer output
+        // rows; only the CAS winner's rows may land.
+        let mut a = s.begin();
+        let mut b = s.begin();
+        a.lookup("state", &[Value::Int64(0)]).unwrap();
+        b.lookup("state", &[Value::Int64(0)]).unwrap();
+        a.write("state", row![0i64, "from_a"]).unwrap();
+        b.write("state", row![0i64, "from_b"]).unwrap();
+        a.append_ordered(q.clone(), 0, vec![row!["a_out", 1i64]]).unwrap();
+        b.append_ordered(q.clone(), 0, vec![row!["b_out", 2i64]]).unwrap();
+        a.commit().unwrap();
+        assert!(matches!(b.commit(), Err(TxnError::Conflict { .. })));
+        assert_eq!(q.end_index(0), 1, "loser's append must not land");
+    }
+
+    #[test]
+    fn unavailable_tablet_fails_commit_without_applying() {
+        use crate::queue::input_name_table;
+        use crate::queue::ordered_table::OrderedTable;
+
+        let acc = WriteAccounting::new();
+        let s = store();
+        let q = OrderedTable::new_with_category(
+            "handoff",
+            input_name_table(),
+            1,
+            acc,
+            WriteCategory::InterStage,
+        );
+        q.set_unavailable(0, true);
+        let mut t = s.begin();
+        t.write("state", row![3i64, "x"]).unwrap();
+        t.append_ordered(q.clone(), 0, vec![row!["y", 1i64]]).unwrap();
+        assert!(matches!(
+            t.commit(),
+            Err(TxnError::TabletUnavailable { tablet: 0, .. })
+        ));
+        // Nothing applied: the sorted write rolled back with the append.
+        assert_eq!(s.lookup("state", &[Value::Int64(3)]).unwrap(), None);
+        assert_eq!(q.end_index(0), 0);
+    }
+
+    #[test]
+    fn dropped_txn_discards_ordered_appends() {
+        use crate::queue::input_name_table;
+        use crate::queue::ordered_table::OrderedTable;
+
+        let acc = WriteAccounting::new();
+        let s = store();
+        let q = OrderedTable::new_with_category(
+            "handoff",
+            input_name_table(),
+            1,
+            acc,
+            WriteCategory::InterStage,
+        );
+        let mut t = s.begin();
+        t.append_ordered(q.clone(), 0, vec![row!["z", 1i64]]).unwrap();
+        t.abort();
+        assert_eq!(q.end_index(0), 0);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! | data model | [`rows`] |
 //! | substrates | [`storage`], [`queue`], [`dyntable`], [`cypress`], [`rpc`] |
 //! | the paper's system | [`api`], [`coordinator`], [`controller`] |
+//! | multi-stage chaining | [`dataflow`] |
 //! | compiled compute | [`runtime`], [`compute`] |
 //! | evaluation | [`workload`], [`baseline`], [`metrics`], [`figures`] |
 //! | future work (§6) | [`spill`], [`pipelined`] |
@@ -40,6 +41,7 @@ pub mod rpc;
 pub mod api;
 pub mod coordinator;
 pub mod controller;
+pub mod dataflow;
 pub mod runtime;
 pub mod compute;
 pub mod workload;

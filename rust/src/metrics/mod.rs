@@ -14,4 +14,4 @@ pub mod wa;
 
 pub use hub::MetricsHub;
 pub use timeseries::TimeSeries;
-pub use wa::WaReport;
+pub use wa::{PipelineWaReport, WaReport};

@@ -49,6 +49,12 @@ impl WaReport {
             + self.snapshot.bytes_of(WriteCategory::Spill)
     }
 
+    /// Inter-stage handoff bytes (dataflow topologies): payload a stage's
+    /// reducers persisted into the ordered table feeding the next stage.
+    pub fn inter_stage_bytes(&self) -> u64 {
+        self.snapshot.bytes_of(WriteCategory::InterStage)
+    }
+
     /// One CSV row: label, ingested, per-category bytes, factor.
     pub fn csv_row(&self) -> String {
         let mut cells = vec![self.label.clone(), self.ingested_bytes.to_string()];
@@ -80,7 +86,65 @@ impl fmt::Display for WaReport {
             "  payload re-persisted{:>14} bytes",
             self.payload_repersisted_bytes()
         )?;
+        if self.inter_stage_bytes() > 0 {
+            writeln!(
+                f,
+                "  inter-stage handoff {:>14} bytes",
+                self.inter_stage_bytes()
+            )?;
+        }
         writeln!(f, "  WA factor           {:>14.4}", self.factor())
+    }
+}
+
+/// Multi-stage (dataflow) write-amplification report: one [`WaReport`] per
+/// stage — each stage's denominator is *its own* mapper ingest, so a hop's
+/// factor answers "what does this stage persist per byte it reads" — plus
+/// an end-to-end report whose denominator is **only the original source
+/// ingest** (stage 0's mapper bytes) and whose numerator spans every
+/// stage's meta-state and every inter-stage handoff.
+#[derive(Debug, Clone)]
+pub struct PipelineWaReport {
+    pub stages: Vec<WaReport>,
+    pub total: WaReport,
+}
+
+impl PipelineWaReport {
+    /// End-to-end WA factor (the chained pipeline's headline number).
+    pub fn end_to_end_factor(&self) -> f64 {
+        self.total.factor()
+    }
+
+    /// Fixed-width per-stage breakdown table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>14} {:>14} {:>14} {:>9}\n",
+            "stage", "ingested", "meta_bytes", "inter_stage", "WA"
+        ));
+        for r in self.stages.iter().chain(std::iter::once(&self.total)) {
+            out.push_str(&format!(
+                "{:<28} {:>14} {:>14} {:>14} {:>9.4}\n",
+                r.label,
+                r.ingested_bytes,
+                r.meta_bytes(),
+                r.inter_stage_bytes(),
+                r.factor()
+            ));
+        }
+        out
+    }
+}
+
+impl fmt::Display for PipelineWaReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "pipeline write-amplification report")?;
+        write!(f, "{}", self.table())?;
+        writeln!(
+            f,
+            "end-to-end WA factor {:.4} (denominator: original source ingest only)",
+            self.end_to_end_factor()
+        )
     }
 }
 
@@ -158,5 +222,37 @@ mod tests {
         let r = WaReport::new("ours", 100, snapshot(4, 0, 0));
         let text = r.to_string();
         assert!(text.contains("WA factor"));
+    }
+
+    fn snapshot_with_interstage(meta: u64, inter: u64) -> AccountingSnapshot {
+        let acc = WriteAccounting::new();
+        acc.record(WriteCategory::ReducerMeta, meta);
+        acc.record(WriteCategory::InterStage, inter);
+        acc.snapshot()
+    }
+
+    #[test]
+    fn pipeline_report_math_and_render() {
+        // Stage 0 ingests 1000 source bytes, persists 10 meta + 500 handoff;
+        // stage 1 ingests those 500, persists 10 meta. End-to-end: 520/1000.
+        let s0 = WaReport::new("sessionize", 1_000, snapshot_with_interstage(10, 500));
+        let s1 = WaReport::new("aggregate", 500, snapshot_with_interstage(10, 0));
+        let acc = WriteAccounting::new();
+        acc.record(WriteCategory::ReducerMeta, 20);
+        acc.record(WriteCategory::InterStage, 500);
+        let total = WaReport::new("end-to-end", 1_000, acc.snapshot());
+        let p = PipelineWaReport {
+            stages: vec![s0, s1],
+            total,
+        };
+        assert!((p.end_to_end_factor() - 0.52).abs() < 1e-9);
+        assert!((p.stages[0].factor() - 0.51).abs() < 1e-9);
+        assert!((p.stages[1].factor() - 0.02).abs() < 1e-9);
+        assert_eq!(p.stages[0].inter_stage_bytes(), 500);
+        let text = p.to_string();
+        assert!(text.contains("sessionize"));
+        assert!(text.contains("end-to-end"));
+        assert!(text.contains("inter_stage"));
+        assert_eq!(p.table().lines().count(), 4, "header + 2 stages + total");
     }
 }

@@ -54,6 +54,20 @@ impl OrderedTable {
         accounting: Arc<WriteAccounting>,
         category: WriteCategory,
     ) -> Arc<OrderedTable> {
+        Self::new_scoped(name, name_table, tablet_count, accounting, category, None)
+    }
+
+    /// Full-control constructor: explicit category *and* accounting scope
+    /// (a dataflow inter-stage handoff table attributes its bytes to the
+    /// producing stage).
+    pub fn new_scoped(
+        name: &str,
+        name_table: Arc<NameTable>,
+        tablet_count: usize,
+        accounting: Arc<WriteAccounting>,
+        category: WriteCategory,
+        scope: Option<String>,
+    ) -> Arc<OrderedTable> {
         Arc::new(OrderedTable {
             name_table,
             tablets: (0..tablet_count)
@@ -65,12 +79,17 @@ impl OrderedTable {
                     })
                 })
                 .collect(),
-            journal: Journal::new(name, category, accounting),
+            journal: Journal::new_scoped(name, category, accounting, scope),
         })
     }
 
     pub fn tablet_count(&self) -> usize {
         self.tablets.len()
+    }
+
+    /// Table name (the journal's name).
+    pub fn name(&self) -> &str {
+        self.journal.name()
     }
 
     pub fn name_table(&self) -> Arc<NameTable> {
@@ -91,6 +110,27 @@ impl OrderedTable {
         Ok(first)
     }
 
+    /// Transactional append path, called by [`crate::dyntable`] while it
+    /// holds the store-wide commit lock, *after* availability was validated
+    /// (an outage injected mid-commit must not tear the commit, so this
+    /// path ignores the flag). Rows are detached at this persist boundary
+    /// so the retained queue never pins a decoded attachment buffer.
+    /// Returns the absolute index of the first appended row.
+    pub(crate) fn append_committed(&self, tablet: usize, rows: Vec<UnversionedRow>) -> i64 {
+        let encoded = codec::encode_rows(&rows);
+        let mut t = self.tablets[tablet].lock().unwrap();
+        self.journal.append(encoded);
+        let first = t.first_index + t.rows.len() as i64;
+        t.rows.extend(rows.iter().map(UnversionedRow::detached));
+        first
+    }
+
+    /// Is the tablet currently serving requests? (False during an injected
+    /// partition outage.)
+    pub fn is_available(&self, tablet: usize) -> bool {
+        !self.tablets[tablet].lock().unwrap().unavailable
+    }
+
     /// Absolute index one past the last appended row.
     pub fn end_index(&self, tablet: usize) -> i64 {
         let t = self.tablets[tablet].lock().unwrap();
@@ -108,6 +148,18 @@ impl OrderedTable {
             .iter()
             .map(|t| t.lock().unwrap().rows.len())
             .sum()
+    }
+
+    /// Per-tablet trim low-water marks: the first retained absolute index
+    /// of every tablet. For a dataflow handoff table these are advanced by
+    /// the downstream stage's mappers (their `TrimInputRows` persists the
+    /// continuation state, then trims), so the marks trail the downstream
+    /// consumers' committed positions and bound the table's memory.
+    pub fn low_water_marks(&self) -> Vec<i64> {
+        self.tablets
+            .iter()
+            .map(|t| t.lock().unwrap().first_index)
+            .collect()
     }
 
     /// Inject or clear a partition outage (used by §5.2-style drills:
@@ -290,6 +342,51 @@ mod tests {
         assert!(t.append(0, rows(1, 1)).is_err());
         t.set_unavailable(0, false);
         assert_eq!(r.read(0, 1, &ContinuationToken::initial()).unwrap().rowset.len(), 1);
+    }
+
+    #[test]
+    fn committed_append_ignores_outage_and_numbers_rows() {
+        let t = table(1);
+        t.append(0, rows(2, 0)).unwrap();
+        t.set_unavailable(0, true);
+        assert!(!t.is_available(0));
+        // The transactional path lands even mid-outage (availability was
+        // validated before the commit point).
+        assert_eq!(t.append_committed(0, rows(3, 2)), 2);
+        t.set_unavailable(0, false);
+        assert_eq!(t.end_index(0), 5);
+        let mut r = t.reader(0);
+        assert_eq!(r.read(0, 5, &ContinuationToken::initial()).unwrap().rowset.len(), 5);
+    }
+
+    #[test]
+    fn scoped_table_attributes_interstage_bytes() {
+        let acc = WriteAccounting::new();
+        let t = OrderedTable::new_scoped(
+            "//dataflow/handoff",
+            input_name_table(),
+            1,
+            acc.clone(),
+            WriteCategory::InterStage,
+            Some("topo/sessionize".into()),
+        );
+        t.append(0, rows(4, 0)).unwrap();
+        assert!(acc.bytes(WriteCategory::InterStage) > 0);
+        assert_eq!(
+            acc.scope_snapshot("topo/sessionize").bytes_of(WriteCategory::InterStage),
+            acc.bytes(WriteCategory::InterStage)
+        );
+        assert_eq!(t.name(), "//dataflow/handoff");
+    }
+
+    #[test]
+    fn low_water_marks_follow_trims() {
+        let t = table(2);
+        t.append(0, rows(6, 0)).unwrap();
+        t.append(1, rows(3, 0)).unwrap();
+        assert_eq!(t.low_water_marks(), vec![0, 0]);
+        t.trim(0, 4).unwrap();
+        assert_eq!(t.low_water_marks(), vec![4, 0]);
     }
 
     #[test]

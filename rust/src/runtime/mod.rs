@@ -11,6 +11,17 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see `/opt/xla-example/README.md`).
 //!
+//! ## Feature gating
+//!
+//! The `xla` crate (PJRT bindings) is an **optional** dependency behind
+//! the off-by-default `pjrt` cargo feature, so the crate builds offline
+//! with the pure-rust [`crate::compute::native`] stage as the default
+//! compute path. Without the feature, [`PjRtRuntime::cpu`] returns
+//! [`RuntimeError::PjrtDisabled`] and every PJRT consumer (selfcheck,
+//! `ComputeMode::Hlo`, the hlo benches/tests) degrades to a clean skip or
+//! error. The shapes/constants and [`pad_to`] stay available either way —
+//! they define the artifact contract with `python/compile`.
+//!
 //! ## Fixed artifact shapes
 //!
 //! AOT compilation freezes shapes. The contract with `python/compile`:
@@ -23,8 +34,7 @@
 //! with `B = 1024`, `G = 256` ([`BATCH`], [`GROUPS`]). The rust callers pad
 //! and chunk arbitrary batch sizes to fit (see `compute::hlo`).
 
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::PathBuf;
 
 /// Rows per compiled batch (must match `python/compile/aot.py`).
 pub const BATCH: usize = 1024;
@@ -37,93 +47,14 @@ pub enum RuntimeError {
     MissingArtifact(PathBuf),
     #[error("xla: {0}")]
     Xla(String),
+    #[error("PJRT support not compiled in — rebuild with `--features pjrt`")]
+    PjrtDisabled,
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())
-    }
-}
-
-/// A compiled, loaded stage ready for execution.
-///
-/// # Safety / threading
-///
-/// The `xla` crate's wrappers hold raw pointers and are not `Send`. The
-/// PJRT CPU client is internally synchronized for execution, but we stay
-/// conservative: every [`LoadedStage`] serializes `run` behind a `Mutex`
-/// and the `unsafe impl Send/Sync` below is justified by that exclusive
-/// access (no concurrent mutation of the underlying executable).
-pub struct LoadedStage {
-    name: String,
-    exe: Mutex<xla::PjRtLoadedExecutable>,
-}
-
-unsafe impl Send for LoadedStage {}
-unsafe impl Sync for LoadedStage {}
-
-impl LoadedStage {
-    /// Execute with the given argument literals; returns the un-tupled
-    /// results (artifacts are lowered with `return_tuple=True`).
-    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
-        let exe = self.exe.lock().unwrap();
-        let result = exe.execute::<xla::Literal>(args)?;
-        let literal = result[0][0].to_literal_sync()?;
-        Ok(literal.to_tuple()?)
-    }
-
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-}
-
-/// The PJRT CPU client plus artifact loading.
-pub struct PjRtRuntime {
-    client: xla::PjRtClient,
-}
-
-unsafe impl Send for PjRtRuntime {}
-unsafe impl Sync for PjRtRuntime {}
-
-impl PjRtRuntime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<PjRtRuntime, RuntimeError> {
-        Ok(PjRtRuntime {
-            client: xla::PjRtClient::cpu()?,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedStage, RuntimeError> {
-        if !path.exists() {
-            return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().expect("artifact path must be utf-8"),
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(LoadedStage {
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-            exe: Mutex::new(exe),
-        })
-    }
-
-    /// Load both stage artifacts from a directory.
-    pub fn load_stage_artifacts(
-        &self,
-        dir: &Path,
-    ) -> Result<(LoadedStage, LoadedStage), RuntimeError> {
-        let mapper = self.load_hlo_text(&dir.join("mapper_stage.hlo.txt"))?;
-        let reducer = self.load_hlo_text(&dir.join("reducer_stage.hlo.txt"))?;
-        Ok((mapper, reducer))
     }
 }
 
@@ -135,6 +66,146 @@ pub fn pad_to<T: Copy>(xs: &[T], n: usize, fill: T) -> Vec<T> {
     v.resize(n, fill);
     v
 }
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::Path;
+    use std::sync::Mutex;
+
+    use super::RuntimeError;
+
+    /// A compiled, loaded stage ready for execution.
+    ///
+    /// # Safety / threading
+    ///
+    /// The `xla` crate's wrappers hold raw pointers and are not `Send`. The
+    /// PJRT CPU client is internally synchronized for execution, but we stay
+    /// conservative: every [`LoadedStage`] serializes `run` behind a `Mutex`
+    /// and the `unsafe impl Send/Sync` below is justified by that exclusive
+    /// access (no concurrent mutation of the underlying executable).
+    pub struct LoadedStage {
+        name: String,
+        exe: Mutex<xla::PjRtLoadedExecutable>,
+    }
+
+    unsafe impl Send for LoadedStage {}
+    unsafe impl Sync for LoadedStage {}
+
+    impl LoadedStage {
+        /// Execute with the given argument literals; returns the un-tupled
+        /// results (artifacts are lowered with `return_tuple=True`).
+        pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+            let exe = self.exe.lock().unwrap();
+            let result = exe.execute::<xla::Literal>(args)?;
+            let literal = result[0][0].to_literal_sync()?;
+            Ok(literal.to_tuple()?)
+        }
+
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+    }
+
+    /// The PJRT CPU client plus artifact loading.
+    pub struct PjRtRuntime {
+        client: xla::PjRtClient,
+    }
+
+    unsafe impl Send for PjRtRuntime {}
+    unsafe impl Sync for PjRtRuntime {}
+
+    impl PjRtRuntime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<PjRtRuntime, RuntimeError> {
+            Ok(PjRtRuntime {
+                client: xla::PjRtClient::cpu()?,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedStage, RuntimeError> {
+            if !path.exists() {
+                return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path must be utf-8"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(LoadedStage {
+                name: path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+                exe: Mutex::new(exe),
+            })
+        }
+
+        /// Load both stage artifacts from a directory.
+        pub fn load_stage_artifacts(
+            &self,
+            dir: &Path,
+        ) -> Result<(LoadedStage, LoadedStage), RuntimeError> {
+            let mapper = self.load_hlo_text(&dir.join("mapper_stage.hlo.txt"))?;
+            let reducer = self.load_hlo_text(&dir.join("reducer_stage.hlo.txt"))?;
+            Ok((mapper, reducer))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use std::path::Path;
+
+    use super::RuntimeError;
+
+    /// Offline stand-in: the crate was built without the `pjrt` feature,
+    /// so there is nothing to load or run. Exists so the CLI/bench/test
+    /// surfaces that *mention* PJRT still compile and degrade to a clean
+    /// error / skip.
+    pub struct LoadedStage {
+        never: std::convert::Infallible,
+    }
+
+    impl LoadedStage {
+        pub fn name(&self) -> &str {
+            match self.never {}
+        }
+    }
+
+    /// Offline stand-in for the PJRT CPU client; every constructor fails
+    /// with [`RuntimeError::PjrtDisabled`].
+    pub struct PjRtRuntime {
+        _private: (),
+    }
+
+    impl PjRtRuntime {
+        pub fn cpu() -> Result<PjRtRuntime, RuntimeError> {
+            Err(RuntimeError::PjrtDisabled)
+        }
+
+        pub fn platform(&self) -> String {
+            "disabled".into()
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<LoadedStage, RuntimeError> {
+            Err(RuntimeError::PjrtDisabled)
+        }
+
+        pub fn load_stage_artifacts(
+            &self,
+            _dir: &Path,
+        ) -> Result<(LoadedStage, LoadedStage), RuntimeError> {
+            Err(RuntimeError::PjrtDisabled)
+        }
+    }
+}
+
+pub use pjrt_impl::{LoadedStage, PjRtRuntime};
 
 #[cfg(test)]
 mod tests {
@@ -158,12 +229,22 @@ mod tests {
     fn missing_artifact_is_clean_error() {
         let rt = match PjRtRuntime::cpu() {
             Ok(rt) => rt,
-            Err(_) => return, // PJRT unavailable in this environment
+            Err(_) => return, // PJRT unavailable (feature off / no plugin)
         };
-        match rt.load_hlo_text(Path::new("/nonexistent/stage.hlo.txt")) {
+        match rt.load_hlo_text(std::path::Path::new("/nonexistent/stage.hlo.txt")) {
             Err(RuntimeError::MissingArtifact(_)) => {}
             Err(e) => panic!("unexpected error: {e}"),
             Ok(_) => panic!("loading a nonexistent artifact must fail"),
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn disabled_runtime_reports_clean_error() {
+        match PjRtRuntime::cpu() {
+            Err(RuntimeError::PjrtDisabled) => {}
+            Err(e) => panic!("expected PjrtDisabled, got {e}"),
+            Ok(_) => panic!("cpu() must fail when built without the pjrt feature"),
         }
     }
 }

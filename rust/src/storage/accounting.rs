@@ -1,8 +1,15 @@
 //! Global write-byte accounting — the write-amplification meter.
+//!
+//! Counters are kept twice: one global per-category array (lock-free, the
+//! hot path every journal append hits) and an optional per-*scope* map for
+//! multi-stage pipelines, where a scope is one stage of a
+//! [`crate::dataflow`] topology and the per-stage WA report needs its own
+//! numerator.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// What a persisted byte was written *for*. The WA factor of the streaming
 /// processor counts only the categories the processor itself is responsible
@@ -26,9 +33,17 @@ pub enum WriteCategory {
     Spill,
     /// Cypress / discovery metadata writes.
     CypressMeta,
+    /// Inter-stage handoff rows: payload a dataflow stage's reducers
+    /// persist into the ordered table feeding the next stage. Unlike
+    /// [`WriteCategory::UserOutput`] this *is* system overhead the chained
+    /// design pays per hop, so it counts toward WA.
+    InterStage,
 }
 
-pub const ALL_CATEGORIES: [WriteCategory; 7] = [
+/// Number of [`WriteCategory`] variants (array sizing).
+pub const CATEGORY_COUNT: usize = 8;
+
+pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::SourceIngest,
     WriteCategory::MapperMeta,
     WriteCategory::ReducerMeta,
@@ -36,6 +51,7 @@ pub const ALL_CATEGORIES: [WriteCategory; 7] = [
     WriteCategory::ShufflePersist,
     WriteCategory::Spill,
     WriteCategory::CypressMeta,
+    WriteCategory::InterStage,
 ];
 
 impl WriteCategory {
@@ -48,6 +64,7 @@ impl WriteCategory {
             WriteCategory::ShufflePersist => 4,
             WriteCategory::Spill => 5,
             WriteCategory::CypressMeta => 6,
+            WriteCategory::InterStage => 7,
         }
     }
 
@@ -60,6 +77,7 @@ impl WriteCategory {
             WriteCategory::ShufflePersist => "shuffle_persist",
             WriteCategory::Spill => "spill",
             WriteCategory::CypressMeta => "cypress_meta",
+            WriteCategory::InterStage => "inter_stage",
         }
     }
 
@@ -79,15 +97,44 @@ impl WriteCategory {
 /// every journal in a simulated cluster.
 #[derive(Debug, Default)]
 pub struct WriteAccounting {
-    bytes: [AtomicU64; 7],
-    ops: [AtomicU64; 7],
+    bytes: [AtomicU64; CATEGORY_COUNT],
+    ops: [AtomicU64; CATEGORY_COUNT],
+    /// Per-scope cells (dataflow stages). The map lock is taken only to
+    /// resolve a [`ScopeHandle`] (once per journal/table construction) or
+    /// to snapshot; recording through a handle is lock-free.
+    scoped: Mutex<HashMap<String, Arc<ScopeCells>>>,
+}
+
+#[derive(Debug, Default)]
+struct ScopeCells {
+    bytes: [AtomicU64; CATEGORY_COUNT],
+    ops: [AtomicU64; CATEGORY_COUNT],
+}
+
+/// Lock-free recording handle for one accounting scope, resolved once
+/// (map lock + key allocation) via [`WriteAccounting::scope_handle`] and
+/// then shared by that scope's journals and tables. Records **scope cells
+/// only** — callers pair it with [`WriteAccounting::record`] for the
+/// global tally.
+#[derive(Debug, Clone)]
+pub struct ScopeHandle {
+    cells: Arc<ScopeCells>,
+}
+
+impl ScopeHandle {
+    #[inline]
+    pub fn record(&self, cat: WriteCategory, bytes: u64) {
+        let i = cat.index();
+        self.cells.bytes[i].fetch_add(bytes, Ordering::Relaxed);
+        self.cells.ops[i].fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// A point-in-time copy of the counters.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct AccountingSnapshot {
-    pub bytes: [u64; 7],
-    pub ops: [u64; 7],
+    pub bytes: [u64; CATEGORY_COUNT],
+    pub ops: [u64; CATEGORY_COUNT],
 }
 
 impl WriteAccounting {
@@ -100,6 +147,16 @@ impl WriteAccounting {
         let i = cat.index();
         self.bytes[i].fetch_add(bytes, Ordering::Relaxed);
         self.ops[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Get-or-create the lock-free recording handle for a scope.
+    pub fn scope_handle(&self, scope: &str) -> ScopeHandle {
+        let mut g = self.scoped.lock().unwrap();
+        let cells = g
+            .entry(scope.to_string())
+            .or_insert_with(|| Arc::new(ScopeCells::default()))
+            .clone();
+        ScopeHandle { cells }
     }
 
     pub fn bytes(&self, cat: WriteCategory) -> u64 {
@@ -118,6 +175,24 @@ impl WriteAccounting {
         }
         s
     }
+
+    /// Snapshot of one scope's counters (all-zero if the scope never
+    /// recorded anything).
+    pub fn scope_snapshot(&self, scope: &str) -> AccountingSnapshot {
+        let cells = {
+            let g = self.scoped.lock().unwrap();
+            g.get(scope).cloned()
+        };
+        let mut s = AccountingSnapshot::default();
+        if let Some(c) = cells {
+            for i in 0..CATEGORY_COUNT {
+                s.bytes[i] = c.bytes[i].load(Ordering::Relaxed);
+                s.ops[i] = c.ops[i].load(Ordering::Relaxed);
+            }
+        }
+        s
+    }
+
 }
 
 impl AccountingSnapshot {
@@ -150,7 +225,7 @@ impl AccountingSnapshot {
     /// Difference against an earlier snapshot (per-window accounting).
     pub fn delta_since(&self, earlier: &AccountingSnapshot) -> AccountingSnapshot {
         let mut d = AccountingSnapshot::default();
-        for i in 0..7 {
+        for i in 0..CATEGORY_COUNT {
             d.bytes[i] = self.bytes[i] - earlier.bytes[i];
             d.ops[i] = self.ops[i] - earlier.ops[i];
         }
@@ -236,6 +311,46 @@ mod tests {
         });
         assert_eq!(a.bytes(WriteCategory::ReducerMeta), 24_000);
         assert_eq!(a.ops(WriteCategory::ReducerMeta), 8_000);
+    }
+
+    #[test]
+    fn inter_stage_counts_toward_wa() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::SourceIngest, 1_000);
+        a.record(WriteCategory::InterStage, 500);
+        let s = a.snapshot();
+        assert_eq!(s.system_bytes(), 500);
+        assert!((s.wa_factor(1_000) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scoped_recording_is_isolated_per_scope() {
+        let a = WriteAccounting::new();
+        a.scope_handle("stage-0").record(WriteCategory::MapperMeta, 100);
+        a.scope_handle("stage-1").record(WriteCategory::MapperMeta, 40);
+        let s0 = a.scope_snapshot("stage-0");
+        assert_eq!(s0.bytes_of(WriteCategory::MapperMeta), 100);
+        assert_eq!(s0.ops_of(WriteCategory::MapperMeta), 1);
+        assert_eq!(
+            a.scope_snapshot("stage-1").bytes_of(WriteCategory::MapperMeta),
+            40
+        );
+        // Unknown scope: all-zero, not a panic.
+        assert_eq!(a.scope_snapshot("nope"), AccountingSnapshot::default());
+    }
+
+    #[test]
+    fn scope_handles_share_cells_and_skip_globals() {
+        let a = WriteAccounting::new();
+        let h1 = a.scope_handle("s");
+        let h2 = a.scope_handle("s");
+        h1.record(WriteCategory::InterStage, 5);
+        h2.record(WriteCategory::InterStage, 7);
+        assert_eq!(a.scope_snapshot("s").bytes_of(WriteCategory::InterStage), 12);
+        assert_eq!(a.scope_snapshot("s").ops_of(WriteCategory::InterStage), 2);
+        // A handle records scope cells only; journals pair it with the
+        // global `record`.
+        assert_eq!(a.bytes(WriteCategory::InterStage), 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::accounting::{WriteAccounting, WriteCategory};
+use super::accounting::{ScopeHandle, WriteAccounting, WriteCategory};
 
 /// One journal record: owned when appended as `Vec` (move, no copy),
 /// shared when appended as / promoted to `Arc<[u8]>`.
@@ -76,6 +76,10 @@ impl From<Arc<[u8]>> for Record {
 pub struct Journal {
     name: String,
     category: WriteCategory,
+    /// Accounting scope (dataflow stage) the bytes are attributed to, on
+    /// top of the global per-category counters. Resolved once at
+    /// construction; recording through it is lock-free.
+    scope: Option<ScopeHandle>,
     accounting: Arc<WriteAccounting>,
     records: Mutex<Vec<Record>>,
     /// Running sum of record payload lengths, maintained on append.
@@ -88,20 +92,41 @@ impl Journal {
         category: WriteCategory,
         accounting: Arc<WriteAccounting>,
     ) -> Arc<Journal> {
+        Self::new_scoped(name, category, accounting, None)
+    }
+
+    /// Like [`Journal::new`] but attributing every appended byte to a
+    /// named accounting scope as well (per-stage WA reports).
+    pub fn new_scoped(
+        name: impl Into<String>,
+        category: WriteCategory,
+        accounting: Arc<WriteAccounting>,
+        scope: Option<String>,
+    ) -> Arc<Journal> {
+        let scope = scope.map(|s| accounting.scope_handle(&s));
         Arc::new(Journal {
             name: name.into(),
             category,
+            scope,
             accounting,
             records: Mutex::new(Vec::new()),
             total_bytes: AtomicU64::new(0),
         })
     }
 
+    #[inline]
+    fn account(&self, bytes: u64) {
+        self.accounting.record(self.category, bytes);
+        if let Some(scope) = &self.scope {
+            scope.record(self.category, bytes);
+        }
+    }
+
     /// Append a record; returns its sequence number. `Vec<u8>` is moved in
     /// without copying; `Arc<[u8]>` is stored by refcount.
     pub fn append(&self, record: impl Into<Record>) -> u64 {
         let record: Record = record.into();
-        self.accounting.record(self.category, record.len() as u64);
+        self.account(record.len() as u64);
         let mut g = self.records.lock().unwrap();
         // Incremented under the record lock so the counter never runs
         // ahead of (or behind) what read()/replay() can observe.
@@ -115,7 +140,7 @@ impl Journal {
     /// larger than the stored index entry, e.g. chunk metadata).
     pub fn append_accounted(&self, record: impl Into<Record>, accounted_bytes: u64) -> u64 {
         let record: Record = record.into();
-        self.accounting.record(self.category, accounted_bytes);
+        self.account(accounted_bytes);
         let mut g = self.records.lock().unwrap();
         self.total_bytes
             .fetch_add(record.len() as u64, Ordering::Relaxed);
@@ -217,6 +242,23 @@ mod tests {
         j.append_accounted(vec![0; 4], 1_000);
         assert_eq!(acc.bytes(WriteCategory::ShufflePersist), 1_000);
         assert_eq!(j.total_bytes(), 4);
+    }
+
+    #[test]
+    fn scoped_journal_attributes_bytes() {
+        let acc = WriteAccounting::new();
+        let j = Journal::new_scoped(
+            "handoff",
+            WriteCategory::InterStage,
+            acc.clone(),
+            Some("topo/stage-0".into()),
+        );
+        j.append(vec![0u8; 10]);
+        assert_eq!(acc.bytes(WriteCategory::InterStage), 10);
+        assert_eq!(
+            acc.scope_snapshot("topo/stage-0").bytes_of(WriteCategory::InterStage),
+            10
+        );
     }
 
     #[test]

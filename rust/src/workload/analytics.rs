@@ -69,7 +69,7 @@ pub fn stage_for(mode: ComputeMode, artifacts_dir: &str) -> Arc<dyn ComputeStage
         ComputeMode::Hlo => crate::compute::hlo::HloStage::load(std::path::Path::new(
             artifacts_dir,
         ))
-        .expect("loading AOT artifacts (run `make artifacts`)"),
+        .expect("loading AOT artifacts (build with `--features pjrt`, run `make artifacts`)"),
     }
 }
 

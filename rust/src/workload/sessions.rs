@@ -1,0 +1,438 @@
+//! The two-stage chained workload: **sessionize** raw logs (stage 1),
+//! **aggregate** sessions (stage 2).
+//!
+//! Stage 1 reuses the §5.2 analytics mapper (split batched messages,
+//! parse, filter lines without a user, hash-partition by (user, cluster))
+//! and sessionizes each reducer batch: one *session row* per (user,
+//! cluster) per batch — `(user, cluster, events, first_ts_ms, last_ts_ms)`
+//! — handed to stage 2 through the ordered handoff table.
+//!
+//! Stage 2 re-shuffles session rows by (user, cluster) and folds them into
+//! the sorted [`SESSIONS_TABLE`]: `events` sums, `first_ts_ms` takes the
+//! min, `last_ts_ms` the max. All three folds are **batch-invariant**:
+//! however the stream was batched (or re-batched by retries and failure
+//! drills), the drained output table is byte-identical — which is exactly
+//! what the chained exactly-once tests assert. The total `events` sum
+//! equals the number of input log lines carrying a user field, the same
+//! ground truth the single-stage suite counts.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::api::{
+    hash_partition, Client, Mapper, MapperFactory, MapperSpec, PartitionedRowset, Reducer,
+    ReducerFactory, ReducerSpec,
+};
+use crate::coordinator::config::ComputeMode;
+use crate::dataflow::{EmitReducer, EmitterFactory, StageSpec, Topology};
+use crate::dyntable::Transaction;
+use crate::queue::input_name_table;
+use crate::row;
+use crate::rows::{
+    ColumnSchema, ColumnType, NameTable, RowsetBuilder, TableSchema, UnversionedRow,
+    UnversionedRowset, Value,
+};
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+use crate::coordinator::ProcessorConfig;
+
+use super::analytics::analytics_mapper_factory;
+
+/// The chained pipeline's final output table:
+/// (user, cluster) → (events, first_ts_ms, last_ts_ms).
+pub const SESSIONS_TABLE: &str = "//out/user_sessions";
+
+/// Columns of the stage-1 → stage-2 handoff rows.
+pub fn session_name_table() -> Arc<NameTable> {
+    NameTable::new(&["user", "cluster", "events", "first_ts_ms", "last_ts_ms"])
+}
+
+/// Schema of [`SESSIONS_TABLE`].
+pub fn sessions_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("user", ColumnType::Str),
+        ColumnSchema::key("cluster", ColumnType::Str),
+        ColumnSchema::value("events", ColumnType::Int64),
+        ColumnSchema::value("first_ts_ms", ColumnType::Int64),
+        ColumnSchema::value("last_ts_ms", ColumnType::Int64),
+    ])
+}
+
+/// Create [`SESSIONS_TABLE`] if missing.
+pub fn ensure_sessions_table(client: &Client) {
+    use crate::dyntable::store::StoreError;
+    match client
+        .store
+        .create_table(SESSIONS_TABLE, sessions_schema(), WriteCategory::UserOutput)
+    {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
+        Err(e) => panic!("cannot create sessions table: {e}"),
+    }
+}
+
+/// Per-key accumulators of the shared (user, cluster) fold: keys in
+/// first-seen order, event sums, min/max timestamps.
+struct KeyedFold {
+    keys: Vec<(Value, Value)>,
+    events: Vec<i64>,
+    first_ts: Vec<i64>,
+    last_ts: Vec<i64>,
+}
+
+/// The grouped fold both stages share. `stats` extracts one row's
+/// contribution `(events, first_ts, last_ts)` — weight 1 and the raw `ts`
+/// for stage 1, the session row's own columns for stage 2 — or `None` to
+/// skip a malformed row. All three accumulators are **batch-invariant**
+/// (sum / min / max), which is what makes the drained chain output
+/// byte-identical across fault schedules; keep them that way.
+fn fold_by_user_cluster(
+    rows: &UnversionedRowset,
+    u_col: usize,
+    c_col: usize,
+    stats: impl Fn(&UnversionedRow) -> Option<(i64, i64, i64)>,
+) -> KeyedFold {
+    // Interned keys borrow the decoded cells; the stored keys are cheap
+    // ByteStr clones — no string copies per group (same zero-copy policy
+    // as the analytics reducer).
+    let mut slot_of: HashMap<(&str, &str), usize> = HashMap::new();
+    let mut fold = KeyedFold {
+        keys: Vec::new(),
+        events: Vec::new(),
+        first_ts: Vec::new(),
+        last_ts: Vec::new(),
+    };
+    for r in rows.rows() {
+        let (Some(uv), Some(cv), Some((e, f, l))) = (r.get(u_col), r.get(c_col), stats(r))
+        else {
+            continue;
+        };
+        let (Some(u), Some(c)) = (uv.as_str(), cv.as_str()) else {
+            continue;
+        };
+        let next = fold.keys.len();
+        let slot = *slot_of.entry((u, c)).or_insert_with(|| {
+            fold.keys.push((uv.clone(), cv.clone()));
+            fold.events.push(0);
+            fold.first_ts.push(i64::MAX);
+            fold.last_ts.push(i64::MIN);
+            next
+        });
+        fold.events[slot] += e;
+        fold.first_ts[slot] = fold.first_ts[slot].min(f);
+        fold.last_ts[slot] = fold.last_ts[slot].max(l);
+    }
+    fold
+}
+
+/// Stage-1 sessionizer: fold one shuffled batch of (user, cluster, ts)
+/// rows into one session row per distinct key, in first-seen order
+/// (deterministic for a given batch).
+pub struct SessionizeEmitter;
+
+impl EmitReducer for SessionizeEmitter {
+    fn emit(&mut self, rows: UnversionedRowset) -> Vec<UnversionedRow> {
+        let nt = rows.name_table();
+        let (Some(u_col), Some(c_col), Some(t_col)) =
+            (nt.id("user"), nt.id("cluster"), nt.id("ts"))
+        else {
+            return Vec::new();
+        };
+        let KeyedFold {
+            keys,
+            events,
+            first_ts,
+            last_ts,
+        } = fold_by_user_cluster(&rows, u_col, c_col, |r| {
+            r.get(t_col).and_then(Value::as_i64).map(|t| (1, t, t))
+        });
+        keys.into_iter()
+            .enumerate()
+            .map(|(slot, (user, cluster))| {
+                row![user, cluster, events[slot], first_ts[slot], last_ts[slot]]
+            })
+            .collect()
+    }
+}
+
+/// `CreateReducer` analogue for the sessionize stage.
+pub fn sessionize_emitter_factory() -> EmitterFactory {
+    Arc::new(|_cfg: &Yson, _client: &Client, _spec: &ReducerSpec| {
+        Box::new(SessionizeEmitter) as Box<dyn EmitReducer>
+    })
+}
+
+/// Stage-2 mapper: route session rows to reducers by (user, cluster);
+/// pass the columns through unchanged. Deterministic by construction.
+pub struct SessionRouteMapper {
+    num_reducers: usize,
+    out_nt: Arc<NameTable>,
+}
+
+impl Mapper for SessionRouteMapper {
+    fn map(&mut self, rows: UnversionedRowset) -> PartitionedRowset {
+        let nt = rows.name_table();
+        let (Some(u_col), Some(c_col)) = (nt.id("user"), nt.id("cluster")) else {
+            return PartitionedRowset::empty(self.out_nt.clone());
+        };
+        let mut b = RowsetBuilder::new(self.out_nt.clone());
+        let mut partitions = Vec::with_capacity(rows.len());
+        for r in rows.rows() {
+            let (Some(u), Some(c)) = (
+                r.get(u_col).and_then(Value::as_str),
+                r.get(c_col).and_then(Value::as_str),
+            ) else {
+                continue; // malformed handoff row: drop deterministically
+            };
+            partitions.push(hash_partition(&format!("{u}\u{1f}{c}"), self.num_reducers));
+            b.push(r.clone());
+        }
+        PartitionedRowset {
+            rowset: b.build(),
+            partition_indexes: partitions,
+        }
+    }
+}
+
+/// `CreateMapper` for the aggregate stage.
+pub fn session_route_mapper_factory() -> MapperFactory {
+    Arc::new(
+        |_cfg: &Yson, _client: &Client, _input_nt: Arc<NameTable>, spec: &MapperSpec| {
+            Box::new(SessionRouteMapper {
+                num_reducers: spec.num_reducers,
+                out_nt: session_name_table(),
+            }) as Box<dyn Mapper>
+        },
+    )
+}
+
+/// Stage-2 reducer: fold session rows into [`SESSIONS_TABLE`] inside the
+/// exactly-once commit transaction.
+pub struct SessionAggregateReducer {
+    client: Client,
+}
+
+impl Reducer for SessionAggregateReducer {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction> {
+        if rows.is_empty() {
+            return None;
+        }
+        let nt = rows.name_table();
+        let (u_col, c_col, e_col, f_col, l_col) = (
+            nt.id("user")?,
+            nt.id("cluster")?,
+            nt.id("events")?,
+            nt.id("first_ts_ms")?,
+            nt.id("last_ts_ms")?,
+        );
+
+        // Pre-aggregate the batch per key, then one lookup+upsert per key.
+        let KeyedFold {
+            keys,
+            events,
+            first_ts,
+            last_ts,
+        } = fold_by_user_cluster(&rows, u_col, c_col, |r| {
+            match (
+                r.get(e_col).and_then(Value::as_i64),
+                r.get(f_col).and_then(Value::as_i64),
+                r.get(l_col).and_then(Value::as_i64),
+            ) {
+                (Some(e), Some(f), Some(l)) => Some((e, f, l)),
+                _ => None,
+            }
+        });
+        if keys.is_empty() {
+            return None;
+        }
+
+        let mut txn = self.client.begin();
+        for (slot, (user, cluster)) in keys.iter().enumerate() {
+            let key = vec![user.clone(), cluster.clone()];
+            let (mut ev, mut fts, mut lts) = (0i64, i64::MAX, i64::MIN);
+            if let Ok(Some(existing)) = txn.lookup(SESSIONS_TABLE, &key) {
+                ev = existing.get(2).and_then(Value::as_i64).unwrap_or(0);
+                fts = existing.get(3).and_then(Value::as_i64).unwrap_or(i64::MAX);
+                lts = existing.get(4).and_then(Value::as_i64).unwrap_or(i64::MIN);
+            }
+            let out = row![
+                user.clone(),
+                cluster.clone(),
+                ev + events[slot],
+                fts.min(first_ts[slot]),
+                lts.max(last_ts[slot])
+            ];
+            txn.write(SESSIONS_TABLE, out).ok()?;
+        }
+        Some(txn)
+    }
+}
+
+/// `CreateReducer` for the aggregate stage.
+pub fn session_aggregate_reducer_factory() -> ReducerFactory {
+    Arc::new(|_cfg: &Yson, client: &Client, _spec: &ReducerSpec| {
+        ensure_sessions_table(client);
+        Box::new(SessionAggregateReducer {
+            client: client.clone(),
+        }) as Box<dyn Reducer>
+    })
+}
+
+/// Assemble the two-stage sessionize→aggregate [`Topology`].
+///
+/// * stage `sessionize`: `s1_mappers` mappers (must equal the source's
+///   partition count) and `s1_reducers` reducers emitting session rows.
+/// * stage `aggregate`: one mapper per stage-1 reducer, `s2_reducers`
+///   reducers folding into [`SESSIONS_TABLE`].
+///
+/// `base` carries the shared timing tunables (backoffs, trim period, …).
+pub fn two_stage_topology(
+    base: ProcessorConfig,
+    s1_mappers: usize,
+    s1_reducers: usize,
+    s2_reducers: usize,
+    compute: ComputeMode,
+) -> Topology {
+    let s1_cfg = ProcessorConfig {
+        mapper_count: s1_mappers,
+        reducer_count: s1_reducers,
+        ..base.clone()
+    };
+    let s2_cfg = ProcessorConfig {
+        mapper_count: s1_reducers,
+        reducer_count: s2_reducers,
+        ..base
+    };
+    Topology::new("two_stage_sessions")
+        .stage(StageSpec::intermediate(
+            "sessionize",
+            s1_cfg,
+            input_name_table(),
+            session_name_table(),
+            analytics_mapper_factory(compute),
+            sessionize_emitter_factory(),
+        ))
+        .stage(StageSpec::final_stage(
+            "aggregate",
+            s2_cfg,
+            session_name_table(),
+            session_route_mapper_factory(),
+            session_aggregate_reducer_factory(),
+        ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::processor::ClusterEnv;
+    use crate::util::Clock;
+
+    fn session_rowset(rows: &[(&str, &str, i64)]) -> UnversionedRowset {
+        let mut b = RowsetBuilder::new(NameTable::new(&["user", "cluster", "ts"]));
+        for (u, c, t) in rows {
+            b.push(row![*u, *c, *t]);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn sessionize_folds_per_key_deterministically() {
+        let mut e = SessionizeEmitter;
+        let out = e.emit(session_rowset(&[
+            ("alice", "hahn", 100),
+            ("root", "freud", 50),
+            ("alice", "hahn", 300),
+            ("alice", "hahn", 200),
+        ]));
+        assert_eq!(out.len(), 2);
+        // First-seen order: alice first.
+        assert_eq!(out[0].get(0).unwrap().as_str(), Some("alice"));
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(3));
+        assert_eq!(out[0].get(3).unwrap().as_i64(), Some(100));
+        assert_eq!(out[0].get(4).unwrap().as_i64(), Some(300));
+        assert_eq!(out[1].get(0).unwrap().as_str(), Some("root"));
+        assert_eq!(out[1].get(2).unwrap().as_i64(), Some(1));
+
+        // Determinism: identical batch, identical emission.
+        let again = SessionizeEmitter.emit(session_rowset(&[
+            ("alice", "hahn", 100),
+            ("root", "freud", 50),
+            ("alice", "hahn", 300),
+            ("alice", "hahn", 200),
+        ]));
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn sessionize_skips_malformed_rows() {
+        let mut b = RowsetBuilder::new(NameTable::new(&["user", "cluster", "ts"]));
+        b.push(row!["alice", "hahn", 5i64]);
+        b.push(UnversionedRow::new(vec![
+            Value::Int64(9), // wrong type in the user column
+            Value::from("hahn"),
+            Value::Int64(6),
+        ]));
+        let out = SessionizeEmitter.emit(b.build());
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn route_mapper_same_key_same_partition_and_passthrough() {
+        let mut m = SessionRouteMapper {
+            num_reducers: 4,
+            out_nt: session_name_table(),
+        };
+        let mut b = RowsetBuilder::new(session_name_table());
+        b.push(row!["alice", "hahn", 2i64, 10i64, 20i64]);
+        b.push(row!["alice", "hahn", 1i64, 30i64, 30i64]);
+        b.push(row!["root", "bohr", 5i64, 1i64, 9i64]);
+        let out = m.map(b.build());
+        assert_eq!(out.rowset.len(), 3);
+        assert_eq!(out.partition_indexes.len(), 3);
+        assert_eq!(out.partition_indexes[0], out.partition_indexes[1]);
+        assert!(out.partition_indexes.iter().all(|&p| p < 4));
+        assert_eq!(out.rowset.cell(2, "events").unwrap().as_i64(), Some(5));
+    }
+
+    #[test]
+    fn aggregate_reducer_folds_batch_invariantly() {
+        let env = ClusterEnv::new(Clock::realtime(), 3);
+        let client = env.client();
+        ensure_sessions_table(&client);
+        let mut r = SessionAggregateReducer {
+            client: client.clone(),
+        };
+
+        let mut b = RowsetBuilder::new(session_name_table());
+        b.push(row!["alice", "hahn", 2i64, 100i64, 300i64]);
+        b.push(row!["alice", "hahn", 1i64, 50i64, 120i64]);
+        let txn = r.reduce(b.build()).expect("txn");
+        txn.commit().unwrap();
+
+        let mut b = RowsetBuilder::new(session_name_table());
+        b.push(row!["alice", "hahn", 4i64, 400i64, 500i64]);
+        let txn = r.reduce(b.build()).expect("txn");
+        txn.commit().unwrap();
+
+        let rows = client.store.scan(SESSIONS_TABLE).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get(2).unwrap().as_i64(), Some(7), "events sum");
+        assert_eq!(rows[0].get(3).unwrap().as_i64(), Some(50), "min first_ts");
+        assert_eq!(rows[0].get(4).unwrap().as_i64(), Some(500), "max last_ts");
+    }
+
+    #[test]
+    fn two_stage_topology_validates_against_matching_source() {
+        use crate::coordinator::InputSpec;
+        use crate::queue::ordered_table::OrderedTable;
+        use crate::storage::WriteAccounting;
+
+        let t = two_stage_topology(ProcessorConfig::default(), 4, 2, 2, ComputeMode::Native);
+        let source = InputSpec::Ordered(OrderedTable::new(
+            "//input/x",
+            input_name_table(),
+            4,
+            WriteAccounting::new(),
+        ));
+        t.validate(&source).unwrap();
+    }
+}

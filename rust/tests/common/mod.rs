@@ -1,6 +1,11 @@
 //! Shared rig for the fault-injection and property test suites: a
 //! deterministic static workload, a fast-timing processor config, and the
-//! exactly-once ground-truth counters.
+//! exactly-once ground-truth counters — plus the two-stage dataflow rig
+//! (chained sessionize→aggregate with a fully deterministic input so two
+//! runs can be compared byte for byte).
+
+// Each test binary includes this module and uses a different subset.
+#![allow(dead_code)]
 
 use std::sync::Arc;
 
@@ -118,6 +123,181 @@ pub fn wait_for_output(env: &ClusterEnv, expected: i64, wall_ms: u64) -> i64 {
         last = cur;
     }
     last
+}
+
+// ---------------------------------------------------------------------------
+// Two-stage dataflow rig (sessionize → aggregate).
+// ---------------------------------------------------------------------------
+
+use yt_stream::dataflow::RunningTopology;
+use yt_stream::metrics::PipelineWaReport;
+use yt_stream::rows::UnversionedRow;
+use yt_stream::workload::sessions::{two_stage_topology, SESSIONS_TABLE};
+
+/// Fill an ordered table with *fully deterministic* log messages: fixed
+/// timestamps, users and clusters derived from (partition, message, line)
+/// indexes only. Two fills with the same shape are byte-identical, so the
+/// drained output of two pipeline runs can be compared row for row.
+/// Returns the ground truth: the number of lines carrying a user field.
+pub fn fill_deterministic_chain_input(
+    table: &Arc<OrderedTable>,
+    messages_per_partition: usize,
+) -> i64 {
+    use yt_stream::row;
+    const CLUSTERS: [&str; 3] = ["hahn", "freud", "bohr"];
+    const USERS: [&str; 5] = ["root", "alice", "bob", "carol", "dave"];
+    const METHODS: [&str; 4] = ["GetNode", "SetNode", "Commit", "Heartbeat"];
+
+    let mut user_lines = 0i64;
+    for p in 0..table.tablet_count() {
+        let cluster = CLUSTERS[p % CLUSTERS.len()];
+        for m in 0..messages_per_partition {
+            let lines = 3 + (p + m) % 4;
+            let mut payload = String::new();
+            for l in 0..lines {
+                if l > 0 {
+                    payload.push('\n');
+                }
+                let ts = 10_000 + (p as i64) * 1_000_000 + (m as i64) * 100 + l as i64;
+                let method = METHODS[(p + m + l) % METHODS.len()];
+                if (p + m + l) % 3 == 0 {
+                    let user = USERS[(m + l) % USERS.len()];
+                    payload.push_str(&format!(
+                        "ts={ts} cluster={cluster} method={method} user={user} dur=42"
+                    ));
+                    user_lines += 1;
+                } else {
+                    payload.push_str(&format!(
+                        "ts={ts} cluster={cluster} method={method} dur=42"
+                    ));
+                }
+            }
+            let write_ts = 10_000 + (p as i64) * 1_000_000 + (m as i64) * 100;
+            table.append(p, vec![row![payload, write_ts]]).unwrap();
+        }
+    }
+    user_lines
+}
+
+/// Everything a chained run leaves behind for assertions.
+pub struct ChainOutcome {
+    pub drained: bool,
+    /// Ground truth: input lines with a user field (== expected sum of the
+    /// output `events` column).
+    pub expected_events: i64,
+    /// Observed sum of the output `events` column after drain.
+    pub events: i64,
+    /// Full drained output table, in key order (byte-identical across
+    /// fault-free and drilled runs over the same input).
+    pub rows: Vec<UnversionedRow>,
+    /// Rows still retained in the handoff table after drain (0 = bounded).
+    pub handoff_retained: usize,
+    /// Per-tablet trim low-water marks of the handoff table after drain
+    /// (advanced by the downstream mappers' TrimInputRows).
+    pub handoff_low_water: Vec<i64>,
+    /// Per-tablet end indexes of the handoff table after drain.
+    pub handoff_end: Vec<i64>,
+    pub report: PipelineWaReport,
+    pub env: ClusterEnv,
+}
+
+/// Sum of the sessions table's `events` column.
+pub fn sessions_events_sum(env: &ClusterEnv) -> i64 {
+    env.store
+        .scan(SESSIONS_TABLE)
+        .map(|rows| {
+            rows.iter()
+                .map(|r| r.get(2).and_then(Value::as_i64).unwrap_or(0))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+/// Run the two-stage sessionize→aggregate topology over a deterministic
+/// input to drain, applying `drill` (failure injections) once the chain is
+/// warmed up. Returns the drained outcome for exactly-once / identical-
+/// output assertions.
+pub fn run_chain_to_drain(
+    partitions: usize,
+    messages: usize,
+    s1_reducers: usize,
+    s2_reducers: usize,
+    drill: impl FnOnce(&RunningTopology),
+) -> ChainOutcome {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0xC4A1);
+    let table = OrderedTable::new(
+        "//input/chain_rig",
+        input_name_table(),
+        partitions,
+        env.accounting.clone(),
+    );
+    let expected_events = fill_deterministic_chain_input(&table, messages);
+
+    let base = ProcessorConfig {
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        split_brain_delay_ms: 50,
+        session_ttl_ms: 1_500,
+        heartbeat_period_ms: 100,
+        ..ProcessorConfig::default()
+    };
+    let topo = two_stage_topology(
+        base,
+        partitions,
+        s1_reducers,
+        s2_reducers,
+        ComputeMode::Native,
+    );
+    let running = topo
+        .launch(&env, InputSpec::Ordered(table))
+        .expect("launch chain");
+
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    drill(&running);
+
+    let drained = running.wait_drained(45_000);
+    let report = running.wa_report();
+    let handoff_retained = running.handoff_retained_rows();
+    let handoff = running.stage(0).handoff.as_ref().expect("stage 0 emits");
+    let handoff_low_water = handoff.low_water_marks();
+    let handoff_end = (0..handoff.tablet_count())
+        .map(|t| handoff.end_index(t))
+        .collect();
+    let env = running.stop();
+
+    let events = sessions_events_sum(&env);
+    let rows = env.store.scan(SESSIONS_TABLE).unwrap_or_default();
+    ChainOutcome {
+        drained,
+        expected_events,
+        events,
+        rows,
+        handoff_retained,
+        handoff_low_water,
+        handoff_end,
+        report,
+        env,
+    }
+}
+
+/// Assert the chained exactly-once invariant with a readable message.
+pub fn assert_chain_exactly_once(outcome: &ChainOutcome, context: &str) {
+    assert!(
+        outcome.drained,
+        "chain did not drain ({context}): {} of {} expected events committed",
+        outcome.events, outcome.expected_events
+    );
+    assert_eq!(
+        outcome.events, outcome.expected_events,
+        "chained exactly-once violated ({context}): expected {} events, output summed {} \
+         ({} means loss across a hop, {} means duplicated handoff rows)",
+        outcome.expected_events,
+        outcome.events,
+        if outcome.events < outcome.expected_events { "less" } else { "-" },
+        if outcome.events > outcome.expected_events { "more" } else { "-" },
+    );
 }
 
 /// Assert the exactly-once invariant with a readable message.

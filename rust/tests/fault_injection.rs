@@ -289,6 +289,102 @@ fn chaos_mix_exactly_once() {
 }
 
 #[test]
+fn chain_fault_free_run_is_exact() {
+    // Baseline for the chained drills: the two-stage topology drains a
+    // deterministic input with no faults, the output events sum matches
+    // the ground truth, the handoff table is fully trimmed, and the WA
+    // report carries per-stage + end-to-end factors.
+    let outcome = run_chain_to_drain(3, 60, 2, 2, |_running| {});
+    assert_chain_exactly_once(&outcome, "fault-free chain");
+    assert_eq!(
+        outcome.handoff_retained, 0,
+        "trim-after-consume must leave the handoff table empty after drain"
+    );
+    assert_eq!(
+        outcome.handoff_low_water, outcome.handoff_end,
+        "downstream mappers' trims must advance every tablet's low-water mark to its end"
+    );
+
+    let report = &outcome.report;
+    assert_eq!(report.stages.len(), 2);
+    assert!(
+        report.stages[0].inter_stage_bytes() > 0,
+        "sessionize stage must account its handoff bytes as inter_stage"
+    );
+    assert_eq!(
+        report.stages[1].inter_stage_bytes(),
+        0,
+        "the final stage writes user output, not handoff rows"
+    );
+    assert!(report.stages[0].meta_bytes() > 0);
+    assert!(report.stages[1].meta_bytes() > 0);
+    assert!(report.stages[1].ingested_bytes > 0);
+    // End-to-end numerator spans both stages; denominator is only the
+    // original source ingest.
+    assert!(
+        report.total.meta_bytes()
+            >= report.stages[0].meta_bytes() + report.stages[1].meta_bytes()
+    );
+    assert_eq!(
+        report.total.ingested_bytes, report.stages[0].ingested_bytes,
+        "end-to-end denominator must be the original source ingest only"
+    );
+    assert!(report.end_to_end_factor() > 0.0);
+}
+
+#[test]
+fn chain_stage1_reducer_kill_and_twin_identical_output() {
+    // The ISSUE drill: kill and duplicate a stage-1 reducer mid-handoff.
+    // The stage-2 output must have no duplicated or lost rows — asserted
+    // the strongest way available: the drained output table is
+    // byte-identical to a fault-free run over the same input.
+    let fault_free = run_chain_to_drain(3, 60, 2, 2, |_running| {});
+    assert_chain_exactly_once(&fault_free, "chain baseline");
+
+    let drilled = run_chain_to_drain(3, 60, 2, 2, |running| {
+        let sup1 = running.stage(0).supervisor().clone();
+        sup1.kill(Role::Reducer, 0); // crash mid-handoff; controller restarts
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        sup1.duplicate(Role::Reducer, 0); // split-brain twin on the same slot
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        sup1.duplicate(Role::Reducer, 1);
+    });
+    assert_chain_exactly_once(&drilled, "stage-1 reducer kill + twins");
+    assert_eq!(
+        drilled.rows, fault_free.rows,
+        "stage-2 output must be byte-identical to the fault-free run"
+    );
+    assert_eq!(drilled.handoff_retained, 0);
+}
+
+#[test]
+fn chain_drills_in_both_stages_exactly_once() {
+    // Kill / pause / duplicate across *both* stages of the chain, plus a
+    // lossy+duplicating network underneath the whole run.
+    let outcome = run_chain_to_drain(3, 80, 2, 2, |running| {
+        running.env().net.with_faults(|f| {
+            f.drop_prob = 0.1;
+            f.dup_prob = 0.1;
+        });
+        let sup1 = running.stage(0).supervisor().clone();
+        let sup2 = running.stage(1).supervisor().clone();
+        sup1.set_paused(Role::Mapper, 1, true);
+        sup2.kill(Role::Reducer, 0);
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        sup2.duplicate(Role::Mapper, 0); // twin consumer of handoff tablet 0
+        sup1.set_paused(Role::Mapper, 1, false);
+        sup1.kill(Role::Mapper, 0);
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        running.env().net.with_faults(|f| {
+            f.drop_prob = 0.0;
+            f.dup_prob = 0.0;
+        });
+    });
+    assert_chain_exactly_once(&outcome, "drills in both stages");
+    assert_eq!(outcome.handoff_retained, 0);
+}
+
+#[test]
 fn at_least_once_mode_never_loses_rows() {
     // §6 relaxed delivery: with split-brain twins racing, the relaxed
     // reducer may duplicate effects but must never lose a row.

@@ -1,0 +1,135 @@
+//! Offline stand-in for the internal `xla` PJRT bindings.
+//!
+//! Mirrors exactly the API subset `yt_stream::runtime` and
+//! `yt_stream::compute::hlo` consume — `PjRtClient`, `HloModuleProto`,
+//! `XlaComputation`, `PjRtLoadedExecutable`, `PjRtBuffer`, `Literal`,
+//! `Error` — but [`PjRtClient::cpu`] fails immediately, so everything
+//! downstream degrades to the artifact-unavailable skip/error paths.
+//! Replace the path dependency with the real bindings to execute AOT
+//! artifacts.
+
+use std::fmt;
+
+/// The stub's only error: PJRT is not actually linked in.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn stub() -> Error {
+        Error("xla stub: PJRT bindings not linked (vendor/xla is an offline stand-in)".into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types a [`Literal`] can carry (the subset the stages use).
+pub trait ElementType: Copy {}
+impl ElementType for u32 {}
+impl ElementType for i32 {}
+impl ElementType for i64 {}
+impl ElementType for u64 {}
+impl ElementType for f32 {}
+impl ElementType for f64 {}
+
+/// A host-side literal (stub: carries nothing).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: ElementType>(_xs: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn scalar<T: ElementType>(_x: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::stub())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation built from a proto (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer returned by execution (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::stub())
+    }
+}
+
+/// A compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::stub())
+    }
+}
+
+/// The PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::stub())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("stub"));
+    }
+}
