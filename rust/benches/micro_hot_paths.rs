@@ -116,6 +116,7 @@ fn bench_rpc_getrows() {
                     row_count: 1024,
                     last_shuffle_row_index: 1023,
                     attachment: self.attachment.clone(),
+                    drained: false,
                 })),
                 Request::Ping => Ok(Response::Pong),
             }
@@ -136,6 +137,7 @@ fn bench_rpc_getrows() {
                     Request::GetRows(ReqGetRows {
                         count: 1024,
                         reducer_index: 0,
+                        epoch: 0,
                         committed_row_index: -1,
                         mapper_id: "g".into(),
                     }),

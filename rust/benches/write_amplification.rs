@@ -58,7 +58,7 @@ fn baseline(messages: usize) -> WaReport {
     let clock = Clock::realtime();
     let env = ClusterEnv::new(clock.clone(), 7);
     let client = env.client();
-    ensure_output_table(&client);
+    ensure_output_table(&client).expect("create analytics output table");
     let table =
         OrderedTable::new("//in/base", input_name_table(), partitions, env.accounting.clone());
     fill_static_input(&table, &clock, messages, 7);
@@ -99,6 +99,7 @@ fn baseline(messages: usize) -> WaReport {
                     index: r,
                     guid: Guid::from_seed(100 + r as u64),
                     num_mappers: partitions,
+                    epoch: 0,
                 },
             )
         },

@@ -7,6 +7,8 @@
 //! [`Client`] for talking to the rest of YT, the input schema (mappers)
 //! and the worker's spec within the processor.
 
+pub mod partitioning;
+
 use std::sync::Arc;
 
 use crate::cypress::Cypress;
@@ -104,10 +106,16 @@ pub struct MapperSpec {
 #[derive(Debug, Clone)]
 pub struct ReducerSpec {
     pub processor_guid: Guid,
+    /// This reducer's epoch-specific state table (see
+    /// [`crate::reshard::plan::reducer_state_table`]).
     pub state_table: String,
     pub index: usize,
     pub guid: Guid,
     pub num_mappers: usize,
+    /// Partition-map epoch this reducer belongs to. 0 for the launch
+    /// fleet; bumped by each reshard. Routed in every GetRows request so
+    /// mappers serve the matching bucket set.
+    pub epoch: i64,
 }
 
 /// `CreateMapper` (§4.1.1): user config node, client, input schema, spec.
@@ -118,22 +126,7 @@ pub type MapperFactory =
 pub type ReducerFactory =
     Arc<dyn Fn(&Yson, &Client, &ReducerSpec) -> Box<dyn Reducer> + Send + Sync>;
 
-/// Deterministic hash-partitioning helper (the "common functionality, such
-/// as hash partitioning" the paper's §6 wants in base classes). FNV-1a over
-/// the key bytes, reduced modulo `num_reducers`.
-pub fn hash_partition(key: &str, num_reducers: usize) -> usize {
-    debug_assert!(num_reducers > 0);
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in key.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    // Final avalanche so short keys spread well.
-    h ^= h >> 33;
-    h = h.wrapping_mul(0xff51afd7ed558ccd);
-    h ^= h >> 33;
-    (h % num_reducers as u64) as usize
-}
+pub use partitioning::hash_partition;
 
 /// Adapter: build a [`Mapper`] from a plain function (tests, examples).
 pub struct FnMapper<F>(pub F);

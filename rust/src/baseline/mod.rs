@@ -196,7 +196,7 @@ mod tests {
     fn baseline_persists_payload_and_produces_output() {
         let env = ClusterEnv::new(Clock::realtime(), 3);
         let client = env.client();
-        ensure_output_table(&client);
+        ensure_output_table(&client).unwrap();
         let table = OrderedTable::new("in", input_name_table(), 2, env.accounting.clone());
         fill_input(&table, 2, 50);
         let input = InputSpec::Ordered(table);
@@ -230,6 +230,7 @@ mod tests {
                     index: r,
                     guid: Guid::from_seed(100 + r as u64),
                     num_mappers: 2,
+                    epoch: 0,
                 })
             },
         );
@@ -248,7 +249,7 @@ mod tests {
     fn baseline_empty_input_is_clean() {
         let env = ClusterEnv::new(Clock::realtime(), 3);
         let client = env.client();
-        ensure_output_table(&client);
+        ensure_output_table(&client).unwrap();
         let table = OrderedTable::new("in", input_name_table(), 1, env.accounting.clone());
         let input = InputSpec::Ordered(table);
         let mf = analytics_mapper_factory(ComputeMode::Native);
@@ -276,6 +277,7 @@ mod tests {
                     index: r,
                     guid: Guid::from_seed(100 + r as u64),
                     num_mappers: 1,
+                    epoch: 0,
                 })
             },
         );

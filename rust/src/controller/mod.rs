@@ -86,9 +86,12 @@ struct Slot {
     died_at_ms: Mutex<Option<u64>>,
 }
 
-/// Supervises all workers of one streaming processor.
+/// Supervises all workers of one streaming processor. The slot list can
+/// grow at runtime: a reshard adds the new epoch's reducer fleet beside
+/// the draining old one ([`Supervisor::add_slot`]) and retires the old
+/// slots once the migration finalizes.
 pub struct Supervisor {
-    slots: Vec<Arc<Slot>>,
+    slots: Mutex<Vec<Arc<Slot>>>,
     clock: Clock,
     restart_delay_ms: u64,
     shutdown: Arc<AtomicBool>,
@@ -105,21 +108,10 @@ impl Supervisor {
     ) -> Arc<Supervisor> {
         let slots: Vec<Arc<Slot>> = slots
             .into_iter()
-            .map(|(role, index, spawner)| {
-                let handle = spawner();
-                Arc::new(Slot {
-                    role,
-                    index,
-                    spawner,
-                    current: Mutex::new(Some(handle)),
-                    extras: Mutex::new(Vec::new()),
-                    want_running: AtomicBool::new(true),
-                    died_at_ms: Mutex::new(None),
-                })
-            })
+            .map(|(role, index, spawner)| Self::new_slot(role, index, spawner))
             .collect();
         let sup = Arc::new(Supervisor {
-            slots,
+            slots: Mutex::new(slots),
             clock: clock.clone(),
             restart_delay_ms,
             shutdown: Arc::new(AtomicBool::new(false)),
@@ -136,9 +128,47 @@ impl Supervisor {
         sup
     }
 
+    fn new_slot(role: Role, index: usize, spawner: Spawner) -> Arc<Slot> {
+        let handle = spawner();
+        Arc::new(Slot {
+            role,
+            index,
+            spawner,
+            current: Mutex::new(Some(handle)),
+            extras: Mutex::new(Vec::new()),
+            want_running: AtomicBool::new(true),
+            died_at_ms: Mutex::new(None),
+        })
+    }
+
+    /// Add (and immediately spawn) a new supervised slot at runtime.
+    /// Panics if (role, index) is already taken.
+    pub fn add_slot(&self, role: Role, index: usize, spawner: Spawner) {
+        let slot = Self::new_slot(role, index, spawner);
+        let mut slots = self.slots.lock().unwrap();
+        assert!(
+            !slots.iter().any(|s| s.role == role && s.index == index),
+            "{role:?} slot {index} already exists"
+        );
+        slots.push(slot);
+    }
+
+    /// Does a slot exist for (role, index)?
+    pub fn has_slot(&self, role: Role, index: usize) -> bool {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|s| s.role == role && s.index == index)
+    }
+
+    fn snapshot(&self) -> Vec<Arc<Slot>> {
+        self.slots.lock().unwrap().clone()
+    }
+
     fn monitor_loop(&self) {
         while !self.shutdown.load(Ordering::SeqCst) {
-            for slot in &self.slots {
+            for slot in self.snapshot() {
                 if !slot.want_running.load(Ordering::SeqCst) {
                     continue;
                 }
@@ -163,10 +193,13 @@ impl Supervisor {
         }
     }
 
-    fn slot(&self, role: Role, index: usize) -> &Arc<Slot> {
+    fn slot(&self, role: Role, index: usize) -> Arc<Slot> {
         self.slots
+            .lock()
+            .unwrap()
             .iter()
             .find(|s| s.role == role && s.index == index)
+            .cloned()
             .unwrap_or_else(|| panic!("no {role:?} slot {index}"))
     }
 
@@ -217,7 +250,27 @@ impl Supervisor {
     /// Number of supervised worker slots (dataflow topologies sum this
     /// across their stages' fleets).
     pub fn slot_count(&self) -> usize {
-        self.slots.len()
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Is the slot present *and* still wanted running (not retired)?
+    pub fn is_active(&self, role: Role, index: usize) -> bool {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|s| s.role == role && s.index == index && s.want_running.load(Ordering::SeqCst))
+    }
+
+    /// Slots of one role that are still wanted running (a reshard's
+    /// retired fleets drop out of this count).
+    pub fn active_slot_count(&self, role: Role) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.role == role && s.want_running.load(Ordering::SeqCst))
+            .count()
     }
 
     /// GUID of the incumbent instance, if alive.
@@ -236,7 +289,7 @@ impl Supervisor {
         if let Some(m) = self.monitor.lock().unwrap().take() {
             let _ = m.join();
         }
-        for slot in &self.slots {
+        for slot in self.snapshot() {
             slot.want_running.store(false, Ordering::SeqCst);
             if let Some(h) = slot.current.lock().unwrap().take() {
                 h.kill();

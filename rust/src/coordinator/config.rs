@@ -64,7 +64,12 @@ pub struct ProcessorConfig {
 
     /// Sorted-table paths for persistent state.
     pub mapper_state_table: String,
+    /// Base path of the reducer state tables; reshard epochs derive their
+    /// own tables from it (see [`crate::reshard::plan::reducer_state_table`]).
     pub reducer_state_table: String,
+    /// The reshard plan table (one row: the live partition-map state
+    /// machine every worker polls and CAS-validates against).
+    pub reshard_plan_table: String,
     /// Cypress directory for discovery groups.
     pub discovery_dir: String,
     /// Discovery session TTL / heartbeat period, simulated ms.
@@ -104,6 +109,7 @@ impl Default for ProcessorConfig {
             fetch_count: 1024,
             mapper_state_table: "//sys/processor/mapper_state".into(),
             reducer_state_table: "//sys/processor/reducer_state".into(),
+            reshard_plan_table: "//sys/processor/reshard_plan".into(),
             discovery_dir: "//sys/processor/discovery".into(),
             session_ttl_ms: 3_000,
             heartbeat_period_ms: 500,
@@ -152,6 +158,9 @@ impl ProcessorConfig {
                 .to_string(),
             reducer_state_table: y
                 .get_str_or("reducer_state_table", &d.reducer_state_table)
+                .to_string(),
+            reshard_plan_table: y
+                .get_str_or("reshard_plan_table", &d.reshard_plan_table)
                 .to_string(),
             discovery_dir: y.get_str_or("discovery_dir", &d.discovery_dir).to_string(),
             session_ttl_ms: y.get_u64_or("session_ttl_ms", d.session_ttl_ms),

@@ -1,69 +1,148 @@
 //! The mapper worker (§4.3): input ingestion, in-memory window, GetRows
-//! service, trimming, split-brain defence.
+//! service, trimming, split-brain defence — and, for elastic resharding,
+//! per-epoch bucket sets with a CAS-adopted cutover.
+//!
+//! A mapper routes every mapped row to exactly one `(epoch, reducer)`
+//! bucket. While a reshard is in flight it keeps **two** bucket sets: the
+//! old epoch's (rows with shuffle index in `[prev_cutover, cutover)`,
+//! partitioned over the old reducer count) and the new epoch's (rows at or
+//! above `cutover`, partitioned over the new count). The cutover is chosen
+//! in the adoption transaction as
+//! `max(rows this instance already routed, 1 + max shuffle index any old
+//! reducer has committed from this mapper)` — the latter read *inside* the
+//! transaction, so an old-fleet commit racing the adoption serializes
+//! against it. Together with the reducer-side commit fencing this makes
+//! "routed old" and "routed new" disjoint even under split-brain twins
+//! and crash-recovery re-maps.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::api::{Client, Mapper, MapperSpec};
+use crate::api::{Client, Mapper, MapperFactory, MapperSpec};
 use crate::coordinator::bucket::{BucketRow, BucketState};
 use crate::coordinator::config::ProcessorConfig;
-use crate::coordinator::state::MapperState;
+use crate::coordinator::state::{MapperState, ReducerState};
 use crate::coordinator::window::{WindowEntry, WindowQueue};
 use crate::cypress::DiscoveryGroup;
 use crate::dyntable::TxnError;
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
 use crate::queue::{PartitionReader, INPUT_COL_WRITE_TS};
+use crate::reshard::plan::{reducer_state_table, PlanPhase, ReshardPlan};
 use crate::rows::{codec, NameTable};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService, RspGetRows};
 use crate::spill::{pick_straggler_buckets, SpillQueue};
 use crate::storage::{Journal, WriteCategory};
+use crate::util::yson::Yson;
 use crate::util::Guid;
+
+/// One epoch's bucket set: the routing surface one reducer fleet pulls
+/// from.
+pub(crate) struct EpochBuckets {
+    pub epoch: i64,
+    pub partitions: usize,
+    pub buckets: Vec<BucketState>,
+    pub spilled: Vec<SpillQueue>,
+}
 
 /// Mutable mapper internals shared between the ingestion thread and the
 /// GetRows RPC handler (§4.3.1's "internal state").
 pub(crate) struct MapperInner {
     pub window: WindowQueue,
-    pub buckets: Vec<BucketState>,
-    pub spilled: Vec<SpillQueue>,
-    /// LocalMapperState: lower bound advanced by TrimWindowEntries.
+    /// Bucket sets in ascending epoch order; the last is the routing
+    /// target for fresh rows. At most two during a migration.
+    pub epochs: Vec<EpochBuckets>,
+    /// LocalMapperState: lower bound advanced by TrimWindowEntries (epoch
+    /// fields mirror the adoption state).
     pub local_state: MapperState,
     /// PersistedMapperState: last state this instance committed/observed.
     pub persisted_state: MapperState,
     /// Output name table, known after the first mapped batch.
     pub out_name_table: Option<Arc<NameTable>>,
+    /// Shuffle index one past the last row this instance has mapped —
+    /// feeds the drain signal (an old epoch is only drained once the
+    /// instance has mapped everything below the cutover).
+    pub mapped_end: i64,
+    /// Builds the spill journal of one `(epoch, reducer)` queue.
+    spill_journal: Arc<dyn Fn(i64, usize) -> Arc<Journal> + Send + Sync>,
 }
 
 impl MapperInner {
-    fn new(num_reducers: usize, spill_journal: impl Fn(usize) -> Arc<Journal>) -> MapperInner {
+    fn new(spill_journal: Arc<dyn Fn(i64, usize) -> Arc<Journal> + Send + Sync>) -> MapperInner {
         MapperInner {
             window: WindowQueue::new(),
-            buckets: (0..num_reducers).map(|_| BucketState::new()).collect(),
-            spilled: (0..num_reducers)
-                .map(|r| SpillQueue::new(spill_journal(r)))
-                .collect(),
+            epochs: Vec::new(),
             local_state: MapperState::initial(),
             persisted_state: MapperState::initial(),
             out_name_table: None,
+            mapped_end: 0,
+            spill_journal,
         }
     }
 
+    fn make_set(&self, epoch: i64, partitions: usize) -> EpochBuckets {
+        EpochBuckets {
+            epoch,
+            partitions,
+            buckets: (0..partitions).map(|_| BucketState::new()).collect(),
+            spilled: (0..partitions)
+                .map(|r| SpillQueue::new((self.spill_journal)(epoch, r)))
+                .collect(),
+        }
+    }
+
+    /// Replace every bucket set (init / split-brain reset).
+    fn install_epochs(&mut self, sets: &[(i64, usize)]) {
+        let fresh: Vec<EpochBuckets> = sets.iter().map(|&(e, p)| self.make_set(e, p)).collect();
+        self.epochs = fresh;
+    }
+
+    /// Add the new epoch's set at adoption (no-op if present).
+    fn ensure_epoch(&mut self, epoch: i64, partitions: usize) {
+        if !self.epochs.iter().any(|s| s.epoch == epoch) {
+            let set = self.make_set(epoch, partitions);
+            self.epochs.push(set);
+            self.epochs.sort_by_key(|s| s.epoch);
+        }
+    }
+
+    /// Drop bucket sets of epochs below `epoch` once the plan finalized
+    /// past them, releasing any window pins they still hold.
+    fn drop_epochs_below(&mut self, epoch: i64) {
+        let (drop, keep): (Vec<EpochBuckets>, Vec<EpochBuckets>) =
+            std::mem::take(&mut self.epochs)
+                .into_iter()
+                .partition(|s| s.epoch < epoch);
+        self.epochs = keep;
+        for set in drop {
+            for b in &set.buckets {
+                if let Some(e) = b.first_entry_index() {
+                    if let Some(entry) = self.window.get_mut(e) {
+                        entry.bucket_ptr_count -= 1;
+                    }
+                }
+            }
+        }
+        self.trim_window_entries();
+    }
+
+    fn set_pos(&self, epoch: i64) -> Option<usize> {
+        self.epochs.iter().position(|s| s.epoch == epoch)
+    }
+
     /// Split-brain reset: "the internal state is dropped" (§4.3.3 step 3).
-    fn reset(&mut self, fresh: MapperState) {
+    fn reset(&mut self, fresh: MapperState, sets: &[(i64, usize)]) {
         self.window.clear();
-        for b in &mut self.buckets {
-            b.clear();
-        }
-        for s in &mut self.spilled {
-            s.clear();
-        }
+        self.install_epochs(sets);
+        self.mapped_end = fresh.shuffle_unread_row_index;
         self.local_state = fresh.clone();
         self.persisted_state = fresh;
     }
 
     /// `TrimWindowEntries` (§4.3.5): advance past fully-acknowledged
-    /// entries and fold the result into LocalMapperState.
+    /// entries and fold the result into LocalMapperState (position fields
+    /// only — the epoch/cutover fields track adoption, not trimming).
     fn trim_window_entries(&mut self) -> usize {
         match self.window.trim_front() {
             Some(outcome) => {
@@ -71,6 +150,7 @@ impl MapperInner {
                     input_unread_row_index: outcome.input_unread_row_index,
                     shuffle_unread_row_index: outcome.shuffle_unread_row_index,
                     continuation_token: outcome.continuation_token.clone(),
+                    ..self.local_state.clone()
                 };
                 outcome.entries_popped
             }
@@ -108,7 +188,7 @@ pub(crate) struct MapperService {
 }
 
 impl MapperService {
-    /// Steps 1–4 of the GetRows procedure.
+    /// Steps 1–4 of the GetRows procedure, epoch-routed.
     fn get_rows(&self, req: ReqGetRows) -> Result<RspGetRows, String> {
         let sh = &self.shared;
         // Step 1: stale-discovery defence.
@@ -120,13 +200,31 @@ impl MapperService {
         }
         let reducer = req.reducer_index as usize;
         let mut inner = sh.inner.lock().unwrap();
-        if reducer >= inner.buckets.len() {
-            return Err(format!("reducer index {reducer} out of range"));
+        let Some(pos) = inner.set_pos(req.epoch) else {
+            // An epoch this instance does not route for. Older than our
+            // newest set ⇒ it was finalized away (everything it could own
+            // is committed) — report it drained so a zombie retires.
+            // Newer (or we are not initialized yet) ⇒ plain empty.
+            let newest = inner.epochs.last().map(|s| s.epoch);
+            return Ok(if newest.is_some_and(|n| req.epoch < n) {
+                RspGetRows::empty_drained()
+            } else {
+                RspGetRows::empty()
+            });
+        };
+        if reducer >= inner.epochs[pos].partitions {
+            return Err(format!(
+                "reducer index {reducer} out of range for epoch {}",
+                req.epoch
+            ));
         }
 
         // Step 2: pop acknowledged rows and maintain bucket pointers.
-        inner.spilled[reducer].ack(req.committed_row_index);
-        let ack = inner.buckets[reducer].ack(req.committed_row_index);
+        let ack = {
+            let set = &mut inner.epochs[pos];
+            set.spilled[reducer].ack(req.committed_row_index);
+            set.buckets[reducer].ack(req.committed_row_index)
+        };
         if ack.old_head_entry != ack.new_head_entry {
             if let Some(old) = ack.old_head_entry {
                 if let Some(e) = inner.window.get_mut(old) {
@@ -157,18 +255,33 @@ impl MapperService {
         let want = req.count.max(0) as usize;
         let mut last_shuffle = -1i64;
         let spilled_rows: Vec<(i64, crate::rows::UnversionedRow)> =
-            inner.spilled[reducer].peek(want);
+            inner.epochs[pos].spilled[reducer].peek(want);
         if let Some((s, _)) = spilled_rows.last() {
             last_shuffle = *s;
         }
         let remaining = want - spilled_rows.len();
-        let picks: Vec<BucketRow> = inner.buckets[reducer].peek(remaining).copied().collect();
+        let picks: Vec<BucketRow> = inner.epochs[pos].buckets[reducer]
+            .peek(remaining)
+            .copied()
+            .collect();
         if let Some(r) = picks.last() {
             last_shuffle = r.shuffle_index;
         }
 
+        // Drain signal: this epoch is older than the routing epoch, the
+        // instance has mapped everything below the cutover, and nothing is
+        // queued or spilled for (epoch, reducer).
+        let drained = pos + 1 < inner.epochs.len()
+            && spilled_rows.is_empty()
+            && picks.is_empty()
+            && inner.epochs[pos].buckets[reducer].is_empty()
+            && inner.mapped_end >= inner.local_state.cutover_index;
+
         if spilled_rows.is_empty() && picks.is_empty() {
-            return Ok(RspGetRows::empty());
+            return Ok(RspGetRows {
+                drained,
+                ..RspGetRows::empty()
+            });
         }
         let nt = inner
             .out_name_table
@@ -197,6 +310,7 @@ impl MapperService {
             row_count,
             last_shuffle_row_index: last_shuffle,
             attachment: attachment.into(),
+            drained: false,
         })
     }
 }
@@ -214,12 +328,18 @@ impl RpcService for MapperService {
     }
 }
 
-/// Dependencies handed to a mapper instance at spawn.
+/// Dependencies handed to a mapper instance at spawn. The factory (plus
+/// its config node and the input schema) stays available so the worker can
+/// rebuild its user mapper against a new reducer count when it adopts a
+/// reshard epoch.
 pub struct MapperDeps {
     pub client: Client,
     pub net: Arc<RpcNet>,
     pub metrics: Arc<MetricsHub>,
     pub discovery: DiscoveryGroup,
+    pub factory: MapperFactory,
+    pub user_config: Arc<Yson>,
+    pub input_name_table: Arc<NameTable>,
 }
 
 /// Control handle for one running mapper instance.
@@ -256,21 +376,22 @@ impl MapperHandle {
 }
 
 /// Spawn a mapper instance: ingestion thread + RPC registration +
-/// discovery membership. `user_mapper` is the product of the user's
-/// factory; `reader` is the partition reader for this mapper's partition.
+/// discovery membership. The user mapper is built inside the worker (from
+/// `deps.factory`) once the authoritative reducer count is known from the
+/// reshard plan; `reader` is the partition reader for this mapper's
+/// partition.
 pub fn spawn_mapper(
     cfg: ProcessorConfig,
     spec: MapperSpec,
     deps: MapperDeps,
-    mut user_mapper: Box<dyn Mapper>,
     mut reader: Box<dyn PartitionReader>,
 ) -> MapperHandle {
     let kill = Arc::new(AtomicBool::new(false));
     let pause = Arc::new(AtomicBool::new(false));
     let address = format!("mapper-{}/{}", spec.index, spec.guid);
     let accounting = deps.client.store.accounting();
-    let num_reducers = spec.num_reducers;
     let mapper_index = spec.index;
+    let scope_label = cfg.scope_label.clone();
 
     let shared = Arc::new(MapperShared {
         cfg: cfg.clone(),
@@ -279,14 +400,14 @@ pub fn spawn_mapper(
         address: address.clone(),
         client: deps.client.clone(),
         metrics: deps.metrics.clone(),
-        inner: Mutex::new(MapperInner::new(num_reducers, |r| {
+        inner: Mutex::new(MapperInner::new(Arc::new(move |epoch, r| {
             Journal::new_scoped(
-                format!("spill/m{mapper_index}/r{r}"),
+                format!("spill/m{mapper_index}/e{epoch}/r{r}"),
                 WriteCategory::Spill,
                 accounting.clone(),
-                cfg.scope_label.clone(),
+                scope_label.clone(),
             )
-        })),
+        }))),
         mem_freed: Condvar::new(),
         pause: pause.clone(),
         kill: kill.clone(),
@@ -304,9 +425,8 @@ pub fn spawn_mapper(
         .spawn({
             let shared = shared.clone();
             let net = deps.net.clone();
-            let discovery = deps.discovery.clone();
             move || {
-                run_ingestion(&shared, &spec, &discovery, user_mapper.as_mut(), reader.as_mut());
+                run_ingestion(&shared, &spec, &deps, reader.as_mut());
                 net.unregister(&shared.address);
             }
         })
@@ -322,18 +442,88 @@ pub fn spawn_mapper(
     }
 }
 
-/// The input ingestion procedure (§4.3.3) plus the TrimInputRows cadence.
+/// The user mapper instances the worker routes through: one per live
+/// partition map. Rebuilt from the factory at adoption; the old-count
+/// instance sticks around while the old epoch drains so crash-recovery
+/// re-maps can partition sub-cutover rows exactly as the original life
+/// did.
+struct UserMappers {
+    current: Box<dyn Mapper>,
+    current_count: usize,
+    old: Option<(Box<dyn Mapper>, usize)>,
+}
+
+impl UserMappers {
+    fn adopt(&mut self, fresh: Box<dyn Mapper>, count: usize) {
+        let prev = std::mem::replace(&mut self.current, fresh);
+        self.old = Some((prev, self.current_count));
+        self.current_count = count;
+    }
+}
+
+/// Fetch + parse the reshard plan (None on store error / missing row).
+fn fetch_plan(sh: &MapperShared) -> Option<ReshardPlan> {
+    ReshardPlan::fetch(&sh.client.store, &sh.cfg.reshard_plan_table)
+}
+
+/// The `(epoch, partitions)` bucket sets implied by a state/plan pair.
+fn epoch_sets(state: &MapperState, plan: &ReshardPlan) -> Vec<(i64, usize)> {
+    if plan.phase == PlanPhase::Migrating && state.epoch == plan.next_epoch() {
+        // Adopted; the old fleet still drains.
+        vec![
+            (plan.epoch, plan.partitions),
+            (state.epoch, plan.next_partitions),
+        ]
+    } else {
+        // Not (yet) adopted, stable, or a state/plan skew the adoption
+        // poll will repair: route only the state's own epoch, at the
+        // plan's count for it.
+        vec![(state.epoch, plan.partitions)]
+    }
+}
+
+/// Build one user mapper against a specific reducer count.
+fn build_user_mapper(spec: &MapperSpec, deps: &MapperDeps, count: usize) -> Box<dyn Mapper> {
+    let mut s = spec.clone();
+    s.num_reducers = count;
+    (deps.factory)(
+        &deps.user_config,
+        &deps.client,
+        deps.input_name_table.clone(),
+        &s,
+    )
+}
+
+/// Build the user-mapper pair matching the bucket sets.
+fn build_user_mappers(
+    sets: &[(i64, usize)],
+    spec: &MapperSpec,
+    deps: &MapperDeps,
+) -> UserMappers {
+    let (_, current_count) = *sets.last().expect("at least one epoch set");
+    UserMappers {
+        current: build_user_mapper(spec, deps, current_count),
+        current_count,
+        old: (sets.len() > 1).then(|| {
+            let (_, old_count) = sets[0];
+            (build_user_mapper(spec, deps, old_count), old_count)
+        }),
+    }
+}
+
+/// The input ingestion procedure (§4.3.3) plus the TrimInputRows and
+/// plan-poll cadences.
 fn run_ingestion(
     sh: &Arc<MapperShared>,
     spec: &MapperSpec,
-    discovery: &DiscoveryGroup,
-    user_mapper: &mut dyn Mapper,
+    deps: &MapperDeps,
     reader: &mut dyn PartitionReader,
 ) {
     let clock = sh.client.clock.clone();
     let cfg = &sh.cfg;
     let state_table = &spec.state_table;
     let state_key = MapperState::key(sh.index);
+    let discovery = &deps.discovery;
 
     // Join discovery, waiting out a live predecessor if needed.
     let session = sh.client.cypress.open_session(cfg.session_ttl_ms);
@@ -372,14 +562,29 @@ fn run_ingestion(
             Err(_) => clock.sleep_ms(cfg.backoff_ms),
         }
     };
+    // Initial plan fetch (the processor seeds it at launch).
+    let plan = loop {
+        if sh.kill.load(Ordering::SeqCst) {
+            return;
+        }
+        match fetch_plan(sh) {
+            Some(p) => break p,
+            None => clock.sleep_ms(cfg.backoff_ms),
+        }
+    };
+    let sets = epoch_sets(&cur, &plan);
+    let mut mappers = build_user_mappers(&sets, spec, deps);
     {
         let mut inner = sh.inner.lock().unwrap();
+        inner.install_epochs(&sets);
+        inner.mapped_end = cur.shuffle_unread_row_index;
         inner.local_state = cur.clone();
         inner.persisted_state = cur.clone();
     }
 
     let lag_series = sh.metrics.series(&names::mapper_read_lag(sh.index));
     let mut last_trim_ms = clock.now_ms();
+    let mut last_plan_ms = clock.now_ms();
     let mut last_heartbeat_ms = clock.now_ms();
     let mut last_batch_empty = false;
 
@@ -421,13 +626,26 @@ fn run_ingestion(
             // "we are in a split-brain situation and the mapper waits out a
             // configurable delay, after which the internal state is dropped
             // and the whole input ingestion procedure is restarted."
+            // A twin's epoch adoption takes this same path: the fresh state
+            // carries the agreed cutover and the bucket sets are rebuilt
+            // from it.
             sh.metrics.add(names::MAPPER_SPLIT_BRAIN, 1);
             clock.sleep_ms(cfg.split_brain_delay_ms);
             let fresh = match sh.client.store.lookup(state_table, &state_key) {
                 Ok(Some(row)) => MapperState::from_row(&row).unwrap_or_else(MapperState::initial),
                 _ => continue,
             };
-            sh.inner.lock().unwrap().reset(fresh.clone());
+            // The reset needs a *real* plan: fabricating one could drop
+            // the old epoch's bucket set mid-migration (rows silently
+            // treated as committed). On a transient failure keep the
+            // stale internal state and retry — step 3 will re-detect the
+            // mismatch next cycle.
+            let Some(fresh_plan) = fetch_plan(sh) else {
+                continue;
+            };
+            let sets = epoch_sets(&fresh, &fresh_plan);
+            mappers = build_user_mappers(&sets, spec, deps);
+            sh.inner.lock().unwrap().reset(fresh.clone(), &sets);
             cur = fresh;
             sh.record_window_gauge(0);
             continue;
@@ -436,6 +654,7 @@ fn run_ingestion(
         // Step 4: empty batch → next iteration (with backoff).
         if batch.rowset.is_empty() {
             maybe_trim_input(sh, reader, &mut last_trim_ms);
+            maybe_poll_plan(sh, spec, deps, &mut cur, &mut mappers, &mut last_plan_ms);
             continue;
         }
         last_batch_empty = false;
@@ -451,18 +670,45 @@ fn run_ingestion(
             }
         }
 
-        // Step 5: run the user Map and build the window entry.
-        let mapped = user_mapper.map(batch.rowset);
-        if let Err(e) = mapped.validate(sh.cfg.reducer_count) {
+        // Step 5: run the user Map. Fresh ingestion runs only the current
+        // map; a crash-recovery re-map of rows below the cutover also
+        // needs the *old-count* partition assignment, so the batch may be
+        // mapped under both counts (Map output rows must not depend on the
+        // partition count — the §4.6 determinism contract, extended).
+        let may_straddle_old =
+            mappers.old.is_some() && cur.shuffle_unread_row_index < cur.cutover_index;
+        let old_partitions: Option<Vec<usize>> = if may_straddle_old {
+            let (old_mapper, old_count) = mappers.old.as_mut().expect("checked");
+            let mapped_old = old_mapper.map(batch.rowset.clone());
+            if let Err(e) = mapped_old.validate(*old_count) {
+                panic!("user Map produced invalid output (old epoch): {e}");
+            }
+            Some(mapped_old.partition_indexes)
+        } else {
+            None
+        };
+        let mapped = mappers.current.map(batch.rowset);
+        if let Err(e) = mapped.validate(mappers.current_count) {
             panic!("user Map produced invalid output: {e}");
         }
         let n_out = mapped.rowset.len() as i64;
+        if let Some(old) = &old_partitions {
+            assert_eq!(
+                old.len(),
+                n_out as usize,
+                "Map output row count must not depend on the partition count"
+            );
+        }
 
         sh.metrics.add(names::MAPPER_ROWS_READ, n_in as u64);
         sh.metrics.add(names::MAPPER_ROWS_MAPPED, n_out as u64);
         sh.metrics.add(names::MAPPER_BYTES_READ, input_bytes as u64);
 
-        // Step 6: push into the window and distribute to buckets.
+        // Step 6: push into the window and distribute to the epoch bucket
+        // sets: rows at or above the cutover to the current map, rows in
+        // [prev_cutover, cutover) to the draining old map, anything lower
+        // was committed before the last finalized reshard and gets no
+        // bucket at all (the entry trims as soon as live rows ack).
         {
             let mut inner = sh.inner.lock().unwrap();
             if inner.out_name_table.is_none() && n_out > 0 {
@@ -483,9 +729,20 @@ fn run_ingestion(
                 read_ts_ms: clock.now_ms(),
             };
             inner.window.push(entry);
+            let newest_pos = inner.epochs.len() - 1;
             for (i, &reducer) in mapped.partition_indexes.iter().enumerate() {
                 let shuffle_index = cur.shuffle_unread_row_index + i as i64;
-                let became_head = inner.buckets[reducer].push(BucketRow {
+                let (pos, target) = if shuffle_index >= cur.cutover_index {
+                    (newest_pos, reducer)
+                } else if shuffle_index >= cur.prev_cutover_index && newest_pos > 0 {
+                    (
+                        newest_pos - 1,
+                        old_partitions.as_ref().map_or(reducer, |o| o[i]),
+                    )
+                } else {
+                    continue; // committed before the last finalized reshard
+                };
+                let became_head = inner.epochs[pos].buckets[target].push(BucketRow {
                     shuffle_index,
                     entry_index,
                 });
@@ -497,6 +754,7 @@ fn run_ingestion(
                         .bucket_ptr_count += 1;
                 }
             }
+            inner.mapped_end = cur.shuffle_unread_row_index + n_out;
             // An entry no bucket points into (all rows filtered, or zero
             // output) is immediately trimmable; fold it into local state.
             inner.trim_window_entries();
@@ -514,8 +772,9 @@ fn run_ingestion(
         }
 
         // TrimInputRows cadence (§4.3.5: "regularly with a
-        // configuration-defined period").
+        // configuration-defined period") and the reshard-plan poll.
         maybe_trim_input(sh, reader, &mut last_trim_ms);
+        maybe_poll_plan(sh, spec, deps, &mut cur, &mut mappers, &mut last_plan_ms);
 
         // Step 8: memory semaphore.
         {
@@ -551,6 +810,124 @@ fn heartbeat_if_due(sh: &MapperShared, session: crate::cypress::SessionId, last:
     if now.saturating_sub(*last) >= sh.cfg.heartbeat_period_ms {
         let _ = sh.client.cypress.heartbeat(session);
         *last = now;
+    }
+}
+
+/// Poll the reshard plan on the trim cadence: adopt a newly announced
+/// epoch (CAS), or drop drained old bucket sets once the plan finalized.
+fn maybe_poll_plan(
+    sh: &Arc<MapperShared>,
+    spec: &MapperSpec,
+    deps: &MapperDeps,
+    cur: &mut MapperState,
+    mappers: &mut UserMappers,
+    last_plan_ms: &mut u64,
+) {
+    let now = sh.client.clock.now_ms();
+    if now.saturating_sub(*last_plan_ms) < sh.cfg.trim_period_ms {
+        return;
+    }
+    *last_plan_ms = now;
+    let Some(plan) = fetch_plan(sh) else { return };
+
+    match plan.phase {
+        PlanPhase::Migrating if plan.next_epoch() > cur.epoch => {
+            // Live adoption: rows routed so far stay old, rows from here
+            // on route new — the in-memory position is the base cutover.
+            if let Some(adopted) =
+                try_adopt(sh, spec, &plan, plan.next_epoch(), cur.shuffle_unread_row_index)
+            {
+                {
+                    let mut inner = sh.inner.lock().unwrap();
+                    inner.persisted_state = adopted.clone();
+                    inner.local_state = inner
+                        .local_state
+                        .adopted(adopted.epoch, adopted.cutover_index);
+                    inner.ensure_epoch(adopted.epoch, plan.next_partitions);
+                }
+                *cur = cur.adopted(adopted.epoch, adopted.cutover_index);
+                let fresh = build_user_mapper(spec, deps, plan.next_partitions);
+                mappers.adopt(fresh, plan.next_partitions);
+            }
+        }
+        PlanPhase::Stable if plan.epoch > cur.epoch => {
+            // Slept through an entire migration (defensive: the finalize
+            // gate makes this unreachable, since every old reducer needed
+            // our drain flag, which needed adoption). Adopt from the
+            // *persisted* floor and hard-reset, so everything above the
+            // trim point re-maps under the new partition map and nothing
+            // this instance routed under the dead map can leak out.
+            let persisted = sh.inner.lock().unwrap().persisted_state.clone();
+            if let Some(adopted) =
+                try_adopt(sh, spec, &plan, plan.epoch, persisted.shuffle_unread_row_index)
+            {
+                let sets = epoch_sets(&adopted, &plan);
+                *mappers = build_user_mappers(&sets, spec, deps);
+                sh.inner.lock().unwrap().reset(adopted.clone(), &sets);
+                *cur = adopted;
+                sh.record_window_gauge(0);
+            }
+        }
+        PlanPhase::Stable if plan.epoch == cur.epoch => {
+            let mut inner = sh.inner.lock().unwrap();
+            if inner.epochs.len() > 1 {
+                inner.drop_epochs_below(cur.epoch);
+                mappers.old = None;
+                let bytes = inner.window.total_bytes();
+                drop(inner);
+                sh.record_window_gauge(bytes);
+                sh.mem_freed.notify_all();
+            }
+        }
+        _ => {}
+    }
+}
+
+/// The adoption transaction: CAS the mapper state row to the new epoch
+/// with a cutover no old-fleet commit can ever have exceeded —
+/// `max(base_cutover, 1 + max committed shuffle index across the old
+/// fleet)`, the latter read *inside* the transaction. An old-fleet commit
+/// racing this adoption reads this mapper's state row in its own fencing
+/// pass, so the two serialize: one retries with a consistent view.
+/// Returns the adopted persisted state on success.
+fn try_adopt(
+    sh: &Arc<MapperShared>,
+    spec: &MapperSpec,
+    plan: &ReshardPlan,
+    new_epoch: i64,
+    base_cutover: i64,
+) -> Option<MapperState> {
+    let persisted = sh.inner.lock().unwrap().persisted_state.clone();
+    let old_state_table = reducer_state_table(&sh.cfg.reducer_state_table, plan.epoch);
+
+    let mut txn = sh.client.begin();
+    // CAS base: the persisted mapper state must be what we believe it is.
+    match txn.lookup(&spec.state_table, &MapperState::key(sh.index)) {
+        Ok(Some(row)) if MapperState::from_row(&row).as_ref() == Some(&persisted) => {}
+        _ => return None,
+    }
+    let mut cutover = base_cutover;
+    for r in 0..plan.partitions {
+        let committed = match txn.lookup(&old_state_table, &ReducerState::key(r)) {
+            Ok(row) => row
+                .as_ref()
+                .and_then(ReducerState::from_row)
+                .and_then(|s| s.committed_row_indices.get(sh.index).copied())
+                .unwrap_or(-1),
+            Err(_) => return None,
+        };
+        cutover = cutover.max(committed + 1);
+    }
+    let adopted = persisted.adopted(new_epoch, cutover);
+    txn.write(&spec.state_table, adopted.to_row(sh.index)).ok()?;
+    match txn.commit() {
+        Ok(_) => {
+            sh.metrics.add(names::RESHARD_ADOPTIONS, 1);
+            Some(adopted)
+        }
+        // Conflict: a twin adopted or the old fleet raced; re-polled.
+        // Other errors: transient store failure; retried next poll.
+        Err(_) => None,
     }
 }
 
@@ -604,10 +981,19 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
     }
 }
 
-/// §6 spill: detach straggler buckets' rows from the window.
+/// §6 spill: detach straggler buckets' rows from the window. Operates on
+/// the *active* (newest) epoch's buckets — a draining epoch's buckets are
+/// short-lived by construction and are never spilled.
 fn try_spill(sh: &Arc<MapperShared>) {
     let mut inner = sh.inner.lock().unwrap();
-    let heads: Vec<Option<u64>> = inner.buckets.iter().map(|b| b.first_entry_index()).collect();
+    let Some(pos) = inner.epochs.len().checked_sub(1) else {
+        return;
+    };
+    let heads: Vec<Option<u64>> = inner.epochs[pos]
+        .buckets
+        .iter()
+        .map(|b| b.first_entry_index())
+        .collect();
     let front = inner.window.first_entry_index();
     let victims = pick_straggler_buckets(
         inner.window.total_bytes(),
@@ -624,8 +1010,11 @@ fn try_spill(sh: &Arc<MapperShared>) {
     for b in victims {
         // Detach the bucket's whole queue: every queued row moves to the
         // persisted spill queue, the window loses the pin.
-        let rows: Vec<BucketRow> = inner.buckets[b].peek(usize::MAX).copied().collect();
-        let old_head = inner.buckets[b].first_entry_index();
+        let rows: Vec<BucketRow> = inner.epochs[pos].buckets[b]
+            .peek(usize::MAX)
+            .copied()
+            .collect();
+        let old_head = inner.epochs[pos].buckets[b].first_entry_index();
         for r in &rows {
             let row = inner
                 .window
@@ -633,10 +1022,10 @@ fn try_spill(sh: &Arc<MapperShared>) {
                 .and_then(|e| e.row_at_shuffle_index(r.shuffle_index))
                 .expect("spill source row must be resident")
                 .clone();
-            inner.spilled[b].push(r.shuffle_index, &row);
+            inner.epochs[pos].spilled[b].push(r.shuffle_index, &row);
             spilled_rows += 1;
         }
-        inner.buckets[b].ack(i64::MAX); // drain the in-memory queue
+        inner.epochs[pos].buckets[b].ack(i64::MAX); // drain the in-memory queue
         if let Some(old) = old_head {
             if let Some(e) = inner.window.get_mut(old) {
                 e.bucket_ptr_count -= 1;

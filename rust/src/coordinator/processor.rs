@@ -1,6 +1,10 @@
 //! Streaming-processor assembly: wire config + substrates + user code into
-//! a supervised fleet of mappers and reducers (§4.5, §4.6).
+//! a supervised fleet of mappers and reducers (§4.5, §4.6), with live
+//! elasticity: the reducer fleet can be resharded N → M while running
+//! ([`StreamingProcessor::reshard`]), and the mapper fleet can grow when an
+//! upstream dataflow stage reshards its handoff partitioning.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::api::{Client, MapperFactory, MapperSpec, ReducerFactory, ReducerSpec};
@@ -15,6 +19,9 @@ use crate::metrics::{MetricsHub, WaReport};
 use crate::queue::logbroker::LbTopic;
 use crate::queue::ordered_table::OrderedTable;
 use crate::queue::PartitionReader;
+use crate::reshard::plan::{reducer_slot, reducer_state_table, PlanPhase, ReshardPlan};
+use crate::reshard::resharder::{self, ReshardContext, ReshardError, ReshardStats};
+use crate::reshard::ReshardRuntime;
 use crate::rows::NameTable;
 use crate::rpc::RpcNet;
 use crate::storage::{WriteAccounting, WriteCategory};
@@ -117,6 +124,11 @@ pub struct StreamingProcessor {
     pub input: InputSpec,
     supervisor: Arc<Supervisor>,
     processor_guid: Guid,
+    reshard_runtime: Arc<ReshardRuntime>,
+    spawn_mapper_slot: Arc<dyn Fn(usize) -> WorkerHandle + Send + Sync>,
+    spawn_reducer_slot: Arc<dyn Fn(i64, usize) -> WorkerHandle + Send + Sync>,
+    /// Live mapper-slot count (grows on upstream re-wiring).
+    mapper_count: Arc<AtomicUsize>,
 }
 
 impl StreamingProcessor {
@@ -129,6 +141,26 @@ impl StreamingProcessor {
         mapper_factory: MapperFactory,
         reducer_factory: ReducerFactory,
         user_config: Yson,
+    ) -> Result<StreamingProcessor, LaunchError> {
+        Self::launch_with_runtime(cfg.clone(), env.clone(), input, mapper_factory, reducer_factory, user_config, {
+            ReshardRuntime::new(
+                cfg.reshard_plan_table.clone(),
+                env.accounting.clone(),
+                cfg.scope_label.clone(),
+            )
+        })
+    }
+
+    /// Like [`StreamingProcessor::launch`] but with a caller-provided
+    /// reshard runtime (custom residual exporter/importer).
+    pub fn launch_with_runtime(
+        cfg: ProcessorConfig,
+        env: ClusterEnv,
+        input: InputSpec,
+        mapper_factory: MapperFactory,
+        reducer_factory: ReducerFactory,
+        user_config: Yson,
+        reshard_runtime: Arc<ReshardRuntime>,
     ) -> Result<StreamingProcessor, LaunchError> {
         if cfg.mapper_count != input.partition_count() {
             return Err(LaunchError::PartitionMismatch {
@@ -145,16 +177,16 @@ impl StreamingProcessor {
             .map_err(|e| LaunchError::Setup(e.to_string()))?;
 
         let user_config = Arc::new(user_config);
-        let mut slots: Vec<(Role, usize, Spawner)> = Vec::new();
+        let mapper_count = Arc::new(AtomicUsize::new(cfg.mapper_count));
 
-        for index in 0..cfg.mapper_count {
+        let spawn_mapper_slot: Arc<dyn Fn(usize) -> WorkerHandle + Send + Sync> = {
             let cfg = cfg.clone();
             let env = env.clone();
             let input = input.clone();
             let factory = mapper_factory.clone();
             let user_config = user_config.clone();
             let group = mapper_group.clone();
-            let spawner: Spawner = Box::new(move || {
+            Arc::new(move |index: usize| {
                 let guid = Guid::generate();
                 let spec = MapperSpec {
                     processor_guid,
@@ -163,40 +195,37 @@ impl StreamingProcessor {
                     guid,
                     num_reducers: cfg.reducer_count,
                 };
-                let client = env.client();
-                let user_mapper = factory(&user_config, &client, input.name_table(), &spec);
                 let deps = MapperDeps {
-                    client,
+                    client: env.client(),
                     net: env.net.clone(),
                     metrics: env.metrics.clone(),
                     discovery: group.clone(),
+                    factory: factory.clone(),
+                    user_config: user_config.clone(),
+                    input_name_table: input.name_table(),
                 };
-                WorkerHandle::Mapper(spawn_mapper(
-                    cfg.clone(),
-                    spec,
-                    deps,
-                    user_mapper,
-                    input.reader(index),
-                ))
-            });
-            slots.push((Role::Mapper, index, spawner));
-        }
+                WorkerHandle::Mapper(spawn_mapper(cfg.clone(), spec, deps, input.reader(index)))
+            })
+        };
 
-        for index in 0..cfg.reducer_count {
+        let spawn_reducer_slot: Arc<dyn Fn(i64, usize) -> WorkerHandle + Send + Sync> = {
             let cfg = cfg.clone();
             let env = env.clone();
             let factory = reducer_factory.clone();
             let user_config = user_config.clone();
             let mapper_group = mapper_group.clone();
             let reducer_group = reducer_group.clone();
-            let spawner: Spawner = Box::new(move || {
+            let runtime = reshard_runtime.clone();
+            let mapper_count = mapper_count.clone();
+            Arc::new(move |epoch: i64, index: usize| {
                 let guid = Guid::generate();
                 let spec = ReducerSpec {
                     processor_guid,
-                    state_table: cfg.reducer_state_table.clone(),
+                    state_table: reducer_state_table(&cfg.reducer_state_table, epoch),
                     index,
                     guid,
-                    num_mappers: cfg.mapper_count,
+                    num_mappers: mapper_count.load(Ordering::SeqCst),
+                    epoch,
                 };
                 let client = env.client();
                 let user_reducer = factory(&user_config, &client, &spec);
@@ -206,10 +235,24 @@ impl StreamingProcessor {
                     metrics: env.metrics.clone(),
                     mapper_discovery: mapper_group.clone(),
                     reducer_discovery: reducer_group.clone(),
+                    reshard: runtime.clone(),
                 };
                 WorkerHandle::Reducer(spawn_reducer(cfg.clone(), spec, deps, user_reducer))
-            });
-            slots.push((Role::Reducer, index, spawner));
+            })
+        };
+
+        let mut slots: Vec<(Role, usize, Spawner)> = Vec::new();
+        for index in 0..cfg.mapper_count {
+            let spawn = spawn_mapper_slot.clone();
+            slots.push((Role::Mapper, index, Box::new(move || spawn(index))));
+        }
+        for index in 0..cfg.reducer_count {
+            let spawn = spawn_reducer_slot.clone();
+            slots.push((
+                Role::Reducer,
+                reducer_slot(0, index),
+                Box::new(move || spawn(0, index)),
+            ));
         }
 
         let supervisor = Supervisor::start(env.clock.clone(), cfg.restart_delay_ms, slots);
@@ -219,6 +262,10 @@ impl StreamingProcessor {
             input,
             supervisor,
             processor_guid,
+            reshard_runtime,
+            spawn_mapper_slot,
+            spawn_reducer_slot,
+            mapper_count,
         })
     }
 
@@ -228,6 +275,99 @@ impl StreamingProcessor {
 
     pub fn supervisor(&self) -> &Arc<Supervisor> {
         &self.supervisor
+    }
+
+    pub fn reshard_runtime(&self) -> &Arc<ReshardRuntime> {
+        &self.reshard_runtime
+    }
+
+    /// The live reshard plan (None before setup / on store outage).
+    pub fn current_plan(&self) -> Option<ReshardPlan> {
+        ReshardPlan::fetch(&self.env.store, &self.cfg.reshard_plan_table)
+    }
+
+    /// Reducer count of the epoch currently being routed to (the target
+    /// fleet while a migration is in flight).
+    pub fn current_reducer_count(&self) -> usize {
+        match self.current_plan() {
+            Some(p) if p.phase == PlanPhase::Migrating => p.next_partitions,
+            Some(p) => p.partitions,
+            None => self.cfg.reducer_count,
+        }
+    }
+
+    fn reshard_ctx(&self) -> ReshardContext {
+        let spawn = self.spawn_reducer_slot.clone();
+        ReshardContext {
+            store: self.env.store.clone(),
+            runtime: self.reshard_runtime.clone(),
+            reducer_state_base: self.cfg.reducer_state_table.clone(),
+            num_mappers: self.mapper_count.load(Ordering::SeqCst),
+            supervisor: self.supervisor.clone(),
+            spawn_reducer: Arc::new(move |epoch, index| spawn(epoch, index)),
+            metrics: self.env.metrics.clone(),
+            scope: self.cfg.scope_label.clone(),
+        }
+    }
+
+    /// Start a live reshard towards `new_count` reducers. Returns the
+    /// in-flight plan; the migration proceeds in the background (workers
+    /// carry it) until [`StreamingProcessor::finish_reshard`].
+    pub fn begin_reshard(&self, new_count: usize) -> Result<ReshardPlan, ReshardError> {
+        resharder::begin(&self.reshard_ctx(), new_count)
+    }
+
+    /// Wait for the in-flight migration to drain and finalize it.
+    pub fn finish_reshard(&self, wall_timeout_ms: u64) -> Result<ReshardStats, ReshardError> {
+        resharder::finalize(&self.reshard_ctx(), wall_timeout_ms)
+    }
+
+    /// Convenience: begin + finish in one call.
+    pub fn reshard(
+        &self,
+        new_count: usize,
+        wall_timeout_ms: u64,
+    ) -> Result<ReshardStats, ReshardError> {
+        self.begin_reshard(new_count)?;
+        self.finish_reshard(wall_timeout_ms)
+    }
+
+    /// Resume an interrupted migration (driver crash / timeout).
+    pub fn resume_reshard(&self, wall_timeout_ms: u64) -> Result<ReshardStats, ReshardError> {
+        resharder::resume(&self.reshard_ctx(), wall_timeout_ms)
+    }
+
+    /// Grow the mapper fleet to `new_count` (used by dataflow re-wiring
+    /// when an upstream stage reshards its handoff partitioning; the input
+    /// spec must already expose the new partitions). No-op when not
+    /// larger.
+    pub fn grow_mappers(&self, new_count: usize) {
+        let old = self.mapper_count.load(Ordering::SeqCst);
+        if new_count <= old {
+            return;
+        }
+        assert!(
+            new_count <= self.input.partition_count(),
+            "grow_mappers({new_count}) exceeds input partition count {}",
+            self.input.partition_count()
+        );
+        for index in old..new_count {
+            let spawn = self.spawn_mapper_slot.clone();
+            self.supervisor
+                .add_slot(Role::Mapper, index, Box::new(move || spawn(index)));
+        }
+        self.mapper_count.store(new_count, Ordering::SeqCst);
+    }
+
+    /// Current mapper-slot count.
+    pub fn mapper_count(&self) -> usize {
+        self.mapper_count.load(Ordering::SeqCst)
+    }
+
+    /// Retire one mapper slot (downstream shrink re-wiring: its upstream
+    /// handoff tablet went quiet and drained).
+    pub fn retire_mapper(&self, index: usize) {
+        self.supervisor.retire(Role::Mapper, index);
     }
 
     /// Total input payload bytes mappers have read so far.
@@ -248,8 +388,8 @@ impl StreamingProcessor {
     }
 }
 
-/// Create the state tables (idempotent) and seed initial rows for every
-/// worker index that has none yet.
+/// Create the state + plan tables (idempotent) and seed initial rows for
+/// every worker index (and the plan) that has none yet.
 fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), String> {
     use crate::dyntable::store::StoreError;
     match env.store.create_table_scoped(
@@ -265,6 +405,15 @@ fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), Str
         &cfg.reducer_state_table,
         ReducerState::schema(),
         WriteCategory::ReducerMeta,
+        cfg.scope_label.clone(),
+    ) {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
+        Err(e) => return Err(e.to_string()),
+    }
+    match env.store.create_table_scoped(
+        &cfg.reshard_plan_table,
+        ReshardPlan::schema(),
+        WriteCategory::Reshard,
         cfg.scope_label.clone(),
     ) {
         Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
@@ -295,6 +444,16 @@ fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), Str
             )
             .map_err(|e| e.to_string())?;
         }
+    }
+    let plan_existing = txn
+        .lookup(&cfg.reshard_plan_table, &ReshardPlan::key())
+        .map_err(|e| e.to_string())?;
+    if plan_existing.is_none() {
+        txn.write(
+            &cfg.reshard_plan_table,
+            ReshardPlan::initial(cfg.reducer_count).to_row(),
+        )
+        .map_err(|e| e.to_string())?;
     }
     txn.commit().map_err(|e| e.to_string())?;
     Ok(())

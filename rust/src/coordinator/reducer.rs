@@ -14,11 +14,13 @@ use std::time::Duration;
 
 use crate::api::{Client, Reducer, ReducerSpec};
 use crate::coordinator::config::ProcessorConfig;
-use crate::coordinator::state::ReducerState;
+use crate::coordinator::state::{MapperState, ReducerState};
 use crate::cypress::{DiscoveryGroup, MemberInfo, SessionId};
 use crate::dyntable::TxnError;
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
+use crate::reshard::migration::{ExportCtx, ImportCtx, ReshardRuntime};
+use crate::reshard::plan::{PlanPhase, ReshardPlan};
 use crate::rows::{codec, UnversionedRowset};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RspGetRows};
 use crate::util::Guid;
@@ -32,6 +34,9 @@ pub struct ReducerDeps {
     pub mapper_discovery: DiscoveryGroup,
     /// Where this reducer registers itself.
     pub reducer_discovery: DiscoveryGroup,
+    /// The processor's shared reshard runtime: plan table, migration
+    /// handoffs, residual exporter/importer.
+    pub reshard: Arc<ReshardRuntime>,
 }
 
 /// Control handle for one running reducer instance.
@@ -139,6 +144,8 @@ pub(crate) struct ReducerRt {
 
 impl ReducerRt {
     /// Join the reducer discovery group, waiting out a live predecessor.
+    /// Keys are epoch-qualified so a reshard's new fleet can register
+    /// beside the draining old one.
     pub(crate) fn join_discovery(&self, kill: &AtomicBool) -> Option<SessionId> {
         let clock = &self.deps.client.clock;
         let session = self
@@ -152,7 +159,7 @@ impl ReducerRt {
             }
             match self.deps.reducer_discovery.join(
                 session,
-                &format!("reducer-{}", self.spec.index),
+                &format!("e{}-reducer-{}", self.spec.epoch, self.spec.index),
                 &self.address,
                 self.spec.index as i64,
                 self.spec.guid,
@@ -163,6 +170,11 @@ impl ReducerRt {
         }
     }
 
+    /// Plain (non-transactional) read of the reshard plan.
+    pub(crate) fn fetch_plan(&self) -> Option<ReshardPlan> {
+        ReshardPlan::fetch(&self.deps.client.store, &self.deps.reshard.plan_table)
+    }
+
     pub(crate) fn heartbeat_if_due(&self, session: SessionId, last: &mut u64) {
         let now = self.deps.client.clock.now_ms();
         if now.saturating_sub(*last) >= self.cfg.heartbeat_period_ms {
@@ -171,7 +183,9 @@ impl ReducerRt {
         }
     }
 
-    /// Step 2: fetch (or lazily create) the persistent state.
+    /// Step 2: fetch (or lazily create) the persistent state. A reducer
+    /// born by a reshard (epoch > 0) starts un-bootstrapped: it must
+    /// import its migration tablet before serving.
     pub(crate) fn fetch_state(&self) -> Option<ReducerState> {
         let key = ReducerState::key(self.spec.index);
         match self
@@ -183,7 +197,11 @@ impl ReducerRt {
             Ok(Some(row)) => ReducerState::from_row(&row),
             Ok(None) => {
                 let mut txn = self.deps.client.begin();
-                let init = ReducerState::initial(self.spec.num_mappers);
+                let init = if self.spec.epoch > 0 {
+                    ReducerState::initial_migrating(self.spec.num_mappers)
+                } else {
+                    ReducerState::initial(self.spec.num_mappers)
+                };
                 if txn
                     .write(&self.spec.state_table, init.to_row(self.spec.index))
                     .is_ok()
@@ -215,7 +233,10 @@ impl ReducerRt {
         )
     }
 
-    /// Step 4: the tentative new state + total fetched rows.
+    /// Step 4: the tentative new state + total fetched rows. The committed
+    /// vector grows on demand — a resharded intermediate stage can gain
+    /// mapper indexes mid-life (downstream re-wiring), and a fresh index
+    /// simply starts from -1.
     pub(crate) fn tentative_state(
         &self,
         state: &ReducerState,
@@ -225,6 +246,9 @@ impl ReducerRt {
         let mut total = 0;
         for f in fetches {
             if f.rsp.row_count > 0 {
+                if new_state.committed_row_indices.len() <= f.mapper_index {
+                    new_state.committed_row_indices.resize(f.mapper_index + 1, -1);
+                }
                 new_state.committed_row_indices[f.mapper_index] = f.rsp.last_shuffle_row_index;
                 total += f.rsp.row_count;
             }
@@ -286,6 +310,61 @@ impl ReducerRt {
             return CommitOutcome::SplitBrain;
         }
 
+        // Step 7b: reshard fencing, also inside the transaction. The plan
+        // row joins the read set of *every* commit (so a reshard starting
+        // or finalizing mid-commit conflicts us into a retry), and while a
+        // migration is in flight an old-epoch reducer additionally
+        // validates each contributing mapper's cutover: a row at or past
+        // it belongs to the new epoch — it can only have been served by a
+        // stale twin that had not adopted yet — and committing it here
+        // would double it against the new fleet. Adoption writes the
+        // mapper state row this fence reads, so the two serialize.
+        let plan = match txn.lookup(&self.deps.reshard.plan_table, &ReshardPlan::key()) {
+            Ok(Some(row)) => ReshardPlan::from_row(&row),
+            _ => None,
+        };
+        let Some(plan) = plan else {
+            txn.abort();
+            return CommitOutcome::TransientError;
+        };
+        let fence_ok = match plan.phase {
+            PlanPhase::Stable => plan.epoch == self.spec.epoch,
+            PlanPhase::Migrating if self.spec.epoch == plan.next_epoch() => true,
+            PlanPhase::Migrating if self.spec.epoch == plan.epoch => {
+                let mut ok = true;
+                for f in fetches {
+                    if f.rsp.row_count == 0 {
+                        continue;
+                    }
+                    let ms = match txn
+                        .lookup(&self.cfg.mapper_state_table, &MapperState::key(f.mapper_index))
+                    {
+                        Ok(Some(row)) => MapperState::from_row(&row),
+                        Ok(None) => None,
+                        Err(_) => {
+                            ok = false;
+                            break;
+                        }
+                    };
+                    if let Some(ms) = ms {
+                        if ms.epoch > self.spec.epoch
+                            && f.rsp.last_shuffle_row_index >= ms.cutover_index
+                        {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                ok
+            }
+            PlanPhase::Migrating => false, // zombie of an already-drained epoch
+        };
+        if !fence_ok {
+            self.deps.metrics.add(names::RESHARD_COMMIT_FENCED, 1);
+            txn.abort();
+            return CommitOutcome::TransientError;
+        }
+
         // Step 8: write the new state; commit everything atomically.
         if txn
             .write(state_table, new_state.to_row(self.spec.index))
@@ -312,6 +391,145 @@ impl ReducerRt {
                 CommitOutcome::Conflict
             }
             Err(_) => CommitOutcome::TransientError,
+        }
+    }
+
+    /// Is this reducer's epoch fully drained on every mapper? Requires a
+    /// `drained` response (empty, flag set) from *every* known mapper
+    /// index in this cycle's fetch results. "Known" is the max of the
+    /// spec, the live discovery listing, and `min_mappers` — the caller's
+    /// high-water mark of indexes ever fetched from, so a grown-fleet
+    /// mapper whose discovery session lapsed (crash + TTL expiry) cannot
+    /// silently drop out of the retirement gate while it may still hold
+    /// undrained rows.
+    pub(crate) fn ready_to_retire(&self, fetches: &[FetchResult], min_mappers: usize) -> bool {
+        let Ok(members) = self.deps.mapper_discovery.list() else {
+            return false;
+        };
+        let n = members
+            .iter()
+            .map(|m| m.index + 1)
+            .fold(self.spec.num_mappers.max(min_mappers) as i64, i64::max)
+            .max(0) as usize;
+        if n == 0 {
+            return false;
+        }
+        let mut drained = vec![false; n];
+        for f in fetches {
+            if f.rsp.drained && f.rsp.row_count == 0 && f.mapper_index < n {
+                drained[f.mapper_index] = true;
+            }
+        }
+        drained.iter().all(|&d| d)
+    }
+
+    /// The retirement transaction: CAS this reducer's state row to
+    /// retired and `append_ordered` its residual state into the migration
+    /// handoff table, atomically. Returns true when this instance won the
+    /// retirement (it must then exit).
+    pub(crate) fn try_retire(&self, state: &ReducerState, plan: &ReshardPlan) -> bool {
+        if plan.phase != PlanPhase::Migrating || plan.epoch != self.spec.epoch {
+            return false;
+        }
+        let mig = self
+            .deps
+            .reshard
+            .migration_for(plan.next_epoch(), plan.next_partitions);
+        let mut txn = self.deps.client.begin();
+        // The migration we observed must still be the live one.
+        match txn.lookup(&self.deps.reshard.plan_table, &ReshardPlan::key()) {
+            Ok(Some(row)) if ReshardPlan::from_row(&row).as_ref() == Some(plan) => {}
+            _ => return false,
+        }
+        // CAS base: our state must be exactly what we drained against.
+        match txn.lookup(&self.spec.state_table, &ReducerState::key(self.spec.index)) {
+            Ok(Some(row)) if ReducerState::from_row(&row).as_ref() == Some(state) => {}
+            _ => return false,
+        }
+        let mut retired = state.clone();
+        retired.retired = true;
+        if txn
+            .write(&self.spec.state_table, retired.to_row(self.spec.index))
+            .is_err()
+        {
+            return false;
+        }
+        let ctx = ExportCtx {
+            old_index: self.spec.index,
+            old_partitions: plan.partitions,
+            new_partitions: plan.next_partitions,
+            new_epoch: plan.next_epoch(),
+            state: state.clone(),
+        };
+        let exports = match self.deps.reshard.exporter.export(&ctx, &mut txn) {
+            Ok(e) => e,
+            Err(_) => return false,
+        };
+        for (tablet, rows) in exports {
+            if txn.append_ordered(mig.clone(), tablet, rows).is_err() {
+                return false;
+            }
+        }
+        match txn.commit() {
+            Ok(_) => {
+                self.deps.metrics.add(names::RESHARD_RETIRED, 1);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// The bootstrap transaction of a resharded-in reducer: once our
+    /// epoch is the plan's authoritative one (⇒ the migration that bred
+    /// us finalized ⇒ every exporter committed), consume our migration
+    /// tablet and CAS-mark ourselves bootstrapped. This stays true when a
+    /// *further* migration is already draining us away (`Migrating` with
+    /// `plan.epoch == ours`) — a late bootstrapper must still import and
+    /// serve, or its buckets could never drain. Returns true when this
+    /// instance performed the import.
+    pub(crate) fn try_bootstrap(&self, state: &ReducerState) -> bool {
+        let Some(plan) = self.fetch_plan() else {
+            return false;
+        };
+        if plan.epoch != self.spec.epoch {
+            return false; // the migration breeding us has not finalized yet
+        }
+        let mig = self.deps.reshard.migration_for(self.spec.epoch, plan.partitions);
+        if self.spec.index >= mig.tablet_count() {
+            return false;
+        }
+        let end = mig.end_index(self.spec.index);
+        let rows = match mig.read_tablet(self.spec.index, 0, end) {
+            Ok(r) => r,
+            Err(_) => return false,
+        };
+        let mut txn = self.deps.client.begin();
+        match txn.lookup(&self.spec.state_table, &ReducerState::key(self.spec.index)) {
+            Ok(Some(row)) if ReducerState::from_row(&row).as_ref() == Some(state) => {}
+            _ => return false, // a twin already imported; refetch next cycle
+        }
+        let ctx = ImportCtx {
+            new_index: self.spec.index,
+            new_partitions: plan.partitions,
+            epoch: self.spec.epoch,
+        };
+        if self.deps.reshard.importer.import(&ctx, &rows, &mut txn).is_err() {
+            return false;
+        }
+        let mut s = state.clone();
+        s.bootstrapped = true;
+        if txn
+            .write(&self.spec.state_table, s.to_row(self.spec.index))
+            .is_err()
+        {
+            return false;
+        }
+        match txn.commit() {
+            Ok(_) => {
+                self.deps.metrics.add(names::RESHARD_BOOTSTRAPPED, 1);
+                true
+            }
+            Err(_) => false,
         }
     }
 
@@ -358,6 +576,9 @@ fn run_reducer_serial(
     let mut last_heartbeat_ms = clock.now_ms();
     let mut last_cycle_committed = true;
     let mut cycle: u64 = 0;
+    // Highest mapper index (+1) this instance has ever fetched from —
+    // floors the retirement gate against discovery-listing gaps.
+    let mut max_mapper_seen = rt.spec.num_mappers;
 
     while !kill.load(Ordering::SeqCst) {
         if pause.load(Ordering::SeqCst) {
@@ -377,14 +598,35 @@ fn run_reducer_serial(
         let Some(state) = rt.fetch_state() else {
             continue;
         };
-        if state.committed_row_indices.len() != rt.spec.num_mappers {
-            return; // config/state mismatch: unrecoverable for this instance
+        if state.retired {
+            return; // this epoch was resharded away; the slot is done
+        }
+        if !state.bootstrapped {
+            // Born by a reshard: import the migration tablet before
+            // serving the key range.
+            rt.try_bootstrap(&state);
+            clock.sleep_ms(rt.cfg.backoff_ms);
+            continue;
         }
 
         // Steps 3–4.
         let fetches = rt.fetch_cycle(&state, cycle);
+        for f in &fetches {
+            max_mapper_seen = max_mapper_seen.max(f.mapper_index + 1);
+        }
         let (new_state, total_rows) = rt.tentative_state(&state, &fetches);
         if total_rows == 0 {
+            // A drained old-epoch reducer retires: final transaction flips
+            // its state to retired and exports its residual rows.
+            if let Some(plan) = rt.fetch_plan() {
+                if plan.phase == PlanPhase::Migrating
+                    && plan.epoch == rt.spec.epoch
+                    && rt.ready_to_retire(&fetches, max_mapper_seen)
+                    && rt.try_retire(&state, &plan)
+                {
+                    return;
+                }
+            }
             continue;
         }
 
@@ -416,16 +658,23 @@ pub(crate) fn fetch_from_mappers(
     state: &ReducerState,
     cycle: u64,
 ) -> Vec<FetchResult> {
-    // Group members by mapper index.
-    let mut by_index: Vec<Vec<&MemberInfo>> = vec![Vec::new(); spec.num_mappers];
+    // Group members by mapper index. The index space can outgrow the spec
+    // (downstream re-wiring after an upstream reshard), so size by what
+    // discovery actually shows.
+    let num_mappers = members
+        .iter()
+        .map(|m| m.index + 1)
+        .fold(spec.num_mappers as i64, i64::max)
+        .max(0) as usize;
+    let mut by_index: Vec<Vec<&MemberInfo>> = vec![Vec::new(); num_mappers];
     for m in members {
-        if (0..spec.num_mappers as i64).contains(&m.index) {
+        if (0..num_mappers as i64).contains(&m.index) {
             by_index[m.index as usize].push(m);
         }
     }
 
-    let mut results: Vec<Option<FetchResult>> = Vec::with_capacity(spec.num_mappers);
-    for _ in 0..spec.num_mappers {
+    let mut results: Vec<Option<FetchResult>> = Vec::with_capacity(num_mappers);
+    for _ in 0..num_mappers {
         results.push(None);
     }
 
@@ -437,10 +686,15 @@ pub(crate) fn fetch_from_mappers(
             }
             // Only one request per mapper index per cycle (§4.4.2 step 3).
             let target = candidates[(cycle as usize) % candidates.len()];
-            let committed = state.committed_row_indices[mapper_index];
+            let committed = state
+                .committed_row_indices
+                .get(mapper_index)
+                .copied()
+                .unwrap_or(-1);
             let req = Request::GetRows(ReqGetRows {
                 count: cfg.fetch_count as i64,
                 reducer_index: spec.index as i64,
+                epoch: spec.epoch,
                 committed_row_index: committed,
                 mapper_id: target.guid.to_string(),
             });

@@ -3,12 +3,25 @@
 //! Mapper state table columns: `mapper_index` (key),
 //! `input_unread_row_index`, `shuffle_unread_row_index`,
 //! `continuation_token` — "the index … of the first row that was not yet
-//! successfully processed and committed by its corresponding reducer".
+//! successfully processed and committed by its corresponding reducer" —
+//! plus the elastic-resharding columns `epoch`, `cutover_index` and
+//! `prev_cutover_index`: the partition-map epoch this mapper routes for
+//! and the shuffle-index boundaries of the current epoch transition
+//! (rows in `[prev_cutover, cutover)` belong to the previous epoch's
+//! partition map, rows `>= cutover` to the current one). The columns are
+//! CAS-updated like everything else, so split-brain twins always agree on
+//! where the partition map changed.
 //!
 //! Reducer state table columns: `reducer_index` (key),
 //! `committed_row_indices` — "a list of shuffle row indices, one for each
 //! mapper, indicating that all rows up to said index were reliably
-//! processed by the reducer". The list is serialized as a YSON list.
+//! processed by the reducer" — plus `retired` (this reducer drained its
+//! buckets and handed off its residual state; set exactly once by the
+//! retirement transaction) and `bootstrapped` (a new-epoch reducer has
+//! imported its migration-handoff tablet and may serve its key range).
+//! The list is serialized as a YSON list. Reducer state tables are
+//! per-epoch (see [`crate::reshard::plan::reducer_state_table`]), so the
+//! row key stays the plain reducer index.
 
 use crate::queue::ContinuationToken;
 use crate::rows::{ColumnSchema, ColumnType, TableSchema, UnversionedRow, Value};
@@ -20,6 +33,16 @@ pub struct MapperState {
     pub input_unread_row_index: i64,
     pub shuffle_unread_row_index: i64,
     pub continuation_token: ContinuationToken,
+    /// Partition-map epoch this mapper currently routes new rows for.
+    pub epoch: i64,
+    /// Shuffle index where `epoch`'s partition map took over. Rows below
+    /// it belong to earlier epochs (already-retired partition maps when
+    /// the plan is stable).
+    pub cutover_index: i64,
+    /// Cutover of the *previous* epoch transition: rows below it were
+    /// fully committed before the previous reshard finalized and are
+    /// never re-routed.
+    pub prev_cutover_index: i64,
 }
 
 impl MapperState {
@@ -28,6 +51,9 @@ impl MapperState {
             input_unread_row_index: 0,
             shuffle_unread_row_index: 0,
             continuation_token: ContinuationToken::initial(),
+            epoch: 0,
+            cutover_index: 0,
+            prev_cutover_index: 0,
         }
     }
 
@@ -37,6 +63,9 @@ impl MapperState {
             ColumnSchema::value("input_unread_row_index", ColumnType::Int64),
             ColumnSchema::value("shuffle_unread_row_index", ColumnType::Int64),
             ColumnSchema::value("continuation_token", ColumnType::Str),
+            ColumnSchema::value("epoch", ColumnType::Int64),
+            ColumnSchema::value("cutover_index", ColumnType::Int64),
+            ColumnSchema::value("prev_cutover_index", ColumnType::Int64),
         ])
     }
 
@@ -46,6 +75,9 @@ impl MapperState {
             Value::Int64(self.input_unread_row_index),
             Value::Int64(self.shuffle_unread_row_index),
             Value::from(self.continuation_token.0.as_str()),
+            Value::Int64(self.epoch),
+            Value::Int64(self.cutover_index),
+            Value::Int64(self.prev_cutover_index),
         ])
     }
 
@@ -54,26 +86,59 @@ impl MapperState {
             input_unread_row_index: row.get(1)?.as_i64()?,
             shuffle_unread_row_index: row.get(2)?.as_i64()?,
             continuation_token: ContinuationToken(row.get(3)?.as_str()?.to_string()),
+            epoch: row.get(4)?.as_i64()?,
+            cutover_index: row.get(5)?.as_i64()?,
+            prev_cutover_index: row.get(6)?.as_i64()?,
         })
     }
 
     pub fn key(mapper_index: usize) -> Vec<Value> {
         vec![Value::Int64(mapper_index as i64)]
     }
+
+    /// The state after adopting a new partition-map epoch at the given
+    /// shuffle boundary: positions are untouched (the adoption transaction
+    /// must not lose trim progress), the epoch window shifts.
+    pub fn adopted(&self, new_epoch: i64, cutover_index: i64) -> MapperState {
+        MapperState {
+            epoch: new_epoch,
+            prev_cutover_index: self.cutover_index,
+            cutover_index,
+            ..self.clone()
+        }
+    }
 }
 
-/// A reducer's persistent state (one row of the reducer state table).
+/// A reducer's persistent state (one row of its epoch's state table).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ReducerState {
     /// `committed_row_indices[m]` = shuffle index of the last row from
     /// mapper `m` this reducer has committed; -1 = none yet.
     pub committed_row_indices: Vec<i64>,
+    /// Set by the retirement transaction when this reducer's epoch was
+    /// resharded away: buckets drained, residual state exported. A retired
+    /// row is terminal — instances observing it exit.
+    pub retired: bool,
+    /// A new-epoch reducer has consumed its migration-handoff tablet and
+    /// may serve its key range. Epoch-0 reducers are born bootstrapped.
+    pub bootstrapped: bool,
 }
 
 impl ReducerState {
     pub fn initial(num_mappers: usize) -> ReducerState {
         ReducerState {
             committed_row_indices: vec![-1; num_mappers],
+            retired: false,
+            bootstrapped: true,
+        }
+    }
+
+    /// Initial state for a reducer born by a reshard: it must import its
+    /// migration-handoff tablet before serving.
+    pub fn initial_migrating(num_mappers: usize) -> ReducerState {
+        ReducerState {
+            bootstrapped: false,
+            ..ReducerState::initial(num_mappers)
         }
     }
 
@@ -81,6 +146,8 @@ impl ReducerState {
         TableSchema::new(vec![
             ColumnSchema::key("reducer_index", ColumnType::Int64),
             ColumnSchema::value("committed_row_indices", ColumnType::Str),
+            ColumnSchema::value("retired", ColumnType::Int64),
+            ColumnSchema::value("bootstrapped", ColumnType::Int64),
         ])
     }
 
@@ -94,6 +161,8 @@ impl ReducerState {
         UnversionedRow::new(vec![
             Value::Int64(reducer_index as i64),
             Value::from(list.to_string()),
+            Value::Int64(self.retired as i64),
+            Value::Int64(self.bootstrapped as i64),
         ])
     }
 
@@ -108,6 +177,8 @@ impl ReducerState {
             .collect::<Option<Vec<i64>>>()?;
         Some(ReducerState {
             committed_row_indices: committed,
+            retired: row.get(2)?.as_i64()? != 0,
+            bootstrapped: row.get(3)?.as_i64()? != 0,
         })
     }
 
@@ -126,6 +197,9 @@ mod tests {
             input_unread_row_index: 42,
             shuffle_unread_row_index: 99,
             continuation_token: ContinuationToken("lb:123".into()),
+            epoch: 2,
+            cutover_index: 80,
+            prev_cutover_index: 30,
         };
         let row = s.to_row(3);
         MapperState::schema().validate(&row).unwrap();
@@ -138,12 +212,32 @@ mod tests {
         let s = MapperState::initial();
         assert_eq!(s.input_unread_row_index, 0);
         assert!(s.continuation_token.is_initial());
+        assert_eq!(s.epoch, 0);
+        assert_eq!(s.cutover_index, 0);
+        assert_eq!(s.prev_cutover_index, 0);
+    }
+
+    #[test]
+    fn mapper_adoption_shifts_epoch_window() {
+        let mut s = MapperState::initial();
+        s.input_unread_row_index = 10;
+        s.shuffle_unread_row_index = 25;
+        let a = s.adopted(1, 40);
+        assert_eq!(a.epoch, 1);
+        assert_eq!(a.cutover_index, 40);
+        assert_eq!(a.prev_cutover_index, 0);
+        assert_eq!(a.input_unread_row_index, 10, "trim progress untouched");
+        let b = a.adopted(2, 90);
+        assert_eq!(b.prev_cutover_index, 40, "old cutover becomes the floor");
+        assert_eq!(b.cutover_index, 90);
     }
 
     #[test]
     fn reducer_state_roundtrip() {
         let s = ReducerState {
             committed_row_indices: vec![-1, 0, 12345, 7],
+            retired: true,
+            bootstrapped: false,
         };
         let row = s.to_row(1);
         ReducerState::schema().validate(&row).unwrap();
@@ -154,11 +248,21 @@ mod tests {
     fn reducer_initial_all_minus_one() {
         let s = ReducerState::initial(5);
         assert_eq!(s.committed_row_indices, vec![-1; 5]);
+        assert!(!s.retired);
+        assert!(s.bootstrapped, "epoch-0 reducers are born bootstrapped");
+        let m = ReducerState::initial_migrating(5);
+        assert!(!m.bootstrapped, "resharded-in reducers must import first");
+        assert!(!m.retired);
     }
 
     #[test]
     fn from_row_rejects_garbage() {
-        let bad = UnversionedRow::new(vec![Value::Int64(0), Value::Str("not yson list {".into())]);
+        let bad = UnversionedRow::new(vec![
+            Value::Int64(0),
+            Value::Str("not yson list {".into()),
+            Value::Int64(0),
+            Value::Int64(1),
+        ]);
         assert_eq!(ReducerState::from_row(&bad), None);
         let wrong_ty = UnversionedRow::new(vec![Value::Int64(0), Value::Int64(7)]);
         assert_eq!(ReducerState::from_row(&wrong_ty), None);
@@ -168,6 +272,8 @@ mod tests {
     fn empty_committed_list_roundtrip() {
         let s = ReducerState {
             committed_row_indices: vec![],
+            retired: false,
+            bootstrapped: true,
         };
         let row = s.to_row(0);
         assert_eq!(ReducerState::from_row(&row), Some(s));

@@ -256,6 +256,7 @@ impl Topology {
             cfg.scope_label = Some(scope.clone());
             cfg.mapper_state_table = format!("{base}/mapper_state");
             cfg.reducer_state_table = format!("{base}/reducer_state");
+            cfg.reshard_plan_table = format!("{base}/reshard_plan");
             cfg.discovery_dir = format!("{base}/discovery");
 
             // Each stage gets its own hub so per-stage ingest/commit
@@ -452,6 +453,70 @@ impl RunningTopology {
             prev_drained_at = drained.then_some(reduced);
         }
         false
+    }
+
+    /// Reshard stage `k`'s reducer fleet to `new_count` while the whole
+    /// chain keeps running, re-wiring the adjacent partition mapping:
+    /// an emitting stage's handoff table grows to one tablet per new
+    /// reducer *before* the new fleet serves, and the downstream stage's
+    /// mapper fleet re-specs against the new tablet count (grown
+    /// immediately; on a shrink the surplus mappers idle until their
+    /// tablets drain — see
+    /// [`RunningTopology::retire_quiet_downstream_mappers`]).
+    pub fn reshard_stage(
+        &self,
+        stage_index: usize,
+        new_count: usize,
+        wall_timeout_ms: u64,
+    ) -> Result<crate::reshard::ReshardStats, crate::reshard::ReshardError> {
+        let stage = &self.stages[stage_index];
+        if let Some(h) = &stage.handoff {
+            h.ensure_tablets(new_count);
+        }
+        let stats = stage.processor.reshard(new_count, wall_timeout_ms)?;
+        if stage.handoff.is_some() && stage_index + 1 < self.stages.len() {
+            self.stages[stage_index + 1]
+                .processor
+                .grow_mappers(new_count);
+        }
+        Ok(stats)
+    }
+
+    /// After a shrink of stage `k`, retire downstream mapper slots whose
+    /// handoff tablet went quiet (no longer written) and fully drained.
+    /// Returns how many were retired this call; safe to poll. A tablet is
+    /// only "quiet" once the stage's plan is **stable** — while a
+    /// migration is still in flight the draining old fleet can still
+    /// append, and a transiently-empty tablet must not cost its consumer.
+    /// (After finalize, appends to tablets at or past the stable count
+    /// can never land: the retired fleet's commits are fenced.)
+    pub fn retire_quiet_downstream_mappers(&self, stage_index: usize) -> usize {
+        use crate::reshard::PlanPhase;
+
+        let Some(h) = &self.stages[stage_index].handoff else {
+            return 0;
+        };
+        if stage_index + 1 >= self.stages.len() {
+            return 0;
+        }
+        let Some(plan) = self.stages[stage_index].processor.current_plan() else {
+            return 0;
+        };
+        if plan.phase != PlanPhase::Stable {
+            return 0;
+        }
+        let live = plan.partitions;
+        let down = &self.stages[stage_index + 1].processor;
+        let mut retired = 0;
+        for t in live..h.tablet_count().min(down.mapper_count()) {
+            if down.supervisor().is_active(crate::controller::Role::Mapper, t)
+                && h.first_index(t) == h.end_index(t)
+            {
+                down.retire_mapper(t);
+                retired += 1;
+            }
+        }
+        retired
     }
 
     /// Per-stage plus end-to-end write-amplification report. Per-stage

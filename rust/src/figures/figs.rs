@@ -53,9 +53,10 @@ pub fn run_figure(id: &str, opts: &FigureOpts) {
         "scale" => table_scale(opts),
         "spill" => ablation_spill(opts),
         "chain" => table_chain(opts),
+        "reshard" => table_reshard(opts),
         other => {
             eprintln!(
-                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain"
+                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard"
             );
             std::process::exit(2);
         }
@@ -298,7 +299,7 @@ fn table_wa(opts: &FigureOpts) {
         let clock = Clock::realtime();
         let env = ClusterEnv::new(clock.clone(), opts.seed);
         let client = env.client();
-        ensure_output_table(&client);
+        ensure_output_table(&client).expect("create analytics output table");
         let table = OrderedTable::new(
             "//input/wa_baseline",
             input_name_table(),
@@ -335,6 +336,7 @@ fn table_wa(opts: &FigureOpts) {
                     index: r,
                     guid: Guid::from_seed(100 + r as u64),
                     num_mappers: partitions,
+                    epoch: 0,
                 })
             },
         );
@@ -467,6 +469,153 @@ fn table_chain(opts: &FigureOpts) {
          (denominator: source ingest only; inter-stage handoff is the chained cost)",
         report.end_to_end_factor(),
         report.stages.len(),
+    );
+}
+
+/// Elastic-resharding table: a live 4→8→4 reducer resize under
+/// kill/duplicate/lossy-net drills, drained output compared byte-for-byte
+/// against a static fault-free run over the identical input, with the
+/// migration's WA contribution reported as its own `reshard` line — plus
+/// a backlog-driven autoscaler demo executing its own proposal.
+fn table_reshard(opts: &FigureOpts) {
+    use crate::controller::Role;
+    use crate::reshard::plan::reducer_slot;
+    use crate::reshard::{Autoscaler, AutoscalerConfig};
+    use crate::storage::WriteCategory;
+    use crate::workload::elastic::{run_elastic, ElasticCfg};
+
+    println!("# table reshard: live partition-count changes (4 -> 8 -> 4) under drills");
+    let cfg = ElasticCfg {
+        seed: opts.seed,
+        ..ElasticCfg::default()
+    };
+
+    // Static fault-free baseline over the identical wave plan.
+    let baseline = run_elastic(
+        &ElasticCfg {
+            reshard_to: vec![],
+            ..cfg.clone()
+        },
+        |_, _| {},
+    );
+
+    // The live run: grow 4→8 while killing + duplicating an old reducer
+    // mid-migration under a lossy/duplicating net, then shrink 8→4 with a
+    // twin on the incoming fleet.
+    let elastic = run_elastic(&cfg, |processor, migration| {
+        let sup = processor.supervisor().clone();
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.1;
+            f.dup_prob = 0.1;
+        });
+        sup.kill(Role::Reducer, reducer_slot(migration as i64, 0));
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64, 1));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64 + 1, 0));
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.0;
+            f.dup_prob = 0.0;
+        });
+    });
+
+    println!("migration,from,to,epoch,migrated_rows");
+    for s in &elastic.reshards {
+        println!(
+            "{},{},{},{},{}",
+            s.epoch - 1,
+            s.from_partitions,
+            s.to_partitions,
+            s.epoch,
+            s.migrated_rows
+        );
+    }
+    println!(
+        "elastic: expected={} output={} retired={} bootstrapped={} final_plan={:?}",
+        elastic.expected_lines,
+        elastic.output_lines,
+        elastic.retired_reducers,
+        elastic.bootstrapped_reducers,
+        elastic.final_plan,
+    );
+    println!("{}", elastic.report);
+    let identical = elastic.rows == baseline.rows;
+    println!(
+        "byte-identity: drilled elastic output == static fault-free output: {identical} \
+         ({} rows vs {} rows)",
+        elastic.rows.len(),
+        baseline.rows.len(),
+    );
+    let reshard_bytes = elastic.report.snapshot.bytes_of(WriteCategory::Reshard);
+    let exact = identical && elastic.output_lines == elastic.expected_lines;
+    println!(
+        "summary: WA = {:.4} with {} reshard bytes (plan CAS + residual migration) — \
+         rescaling costs bytes, honestly accounted; output {}",
+        elastic.report.factor(),
+        reshard_bytes,
+        if exact {
+            "byte-identical to the static run (exactly-once held across both resizes)"
+        } else {
+            "MISMATCH — exactly-once violated"
+        },
+    );
+    if !exact {
+        // This figure doubles as the bench_smoke exactly-once gate: a
+        // mismatch must fail the process, not just print.
+        eprintln!("figure reshard: FAIL — elastic output diverged from the static run");
+        std::process::exit(1);
+    }
+
+    // --- autoscaler demo: the policy loop proposing + executing ---------
+    println!("## autoscaler: backlog-driven proposal over a live overload");
+    let scenario = start(ScenarioCfg {
+        mappers: 4,
+        reducers: 2,
+        msgs_per_sec: 600.0,
+        compute: opts.compute,
+        seed: opts.seed,
+        ..ScenarioCfg::default()
+    });
+    let mut scaler = Autoscaler::new(AutoscalerConfig {
+        backlog_high_per_reducer: 150.0,
+        backlog_low_per_reducer: 5.0,
+        hysteresis_ticks: 3,
+        cooldown_ms: 2_000,
+        min_reducers: 2,
+        max_reducers: 8,
+    });
+    println!("t_ms,backlog_rows,reducers,decision");
+    let mut executed = None;
+    for _ in 0..40 {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let now = scenario.env.clock.now_ms();
+        let backlog = scenario.input.retained_rows();
+        let current = scenario.processor.current_reducer_count();
+        let decision = scaler.tick(now, backlog, current);
+        println!(
+            "{now},{backlog},{current},{}",
+            decision
+                .map(|d| format!("{}->{}", d.from, d.to))
+                .unwrap_or_else(|| "-".into())
+        );
+        if let (Some(d), None) = (decision, executed) {
+            match scenario.processor.reshard(d.to, 20_000) {
+                Ok(stats) => {
+                    executed = Some(stats.to_partitions);
+                    println!("# executed proposal: now {} reducers (epoch {})", d.to, stats.epoch);
+                }
+                Err(e) => println!("# proposal failed: {e}"),
+            }
+        }
+    }
+    let final_count = scenario.processor.current_reducer_count();
+    scenario.stop();
+    println!(
+        "summary: autoscaler {} (final fleet: {final_count} reducers)",
+        match executed {
+            Some(n) => format!("proposed and executed a live scale-up to {n}"),
+            None => "made no proposal within the window (backlog stayed in band)".into(),
+        }
     );
 }
 

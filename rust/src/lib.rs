@@ -27,6 +27,7 @@
 //! | substrates | [`storage`], [`queue`], [`dyntable`], [`cypress`], [`rpc`] |
 //! | the paper's system | [`api`], [`coordinator`], [`controller`] |
 //! | multi-stage chaining | [`dataflow`] |
+//! | elastic resharding | [`reshard`] |
 //! | compiled compute | [`runtime`], [`compute`] |
 //! | evaluation | [`workload`], [`baseline`], [`metrics`], [`figures`] |
 //! | future work (§6) | [`spill`], [`pipelined`] |
@@ -42,6 +43,7 @@ pub mod api;
 pub mod coordinator;
 pub mod controller;
 pub mod dataflow;
+pub mod reshard;
 pub mod runtime;
 pub mod compute;
 pub mod workload;

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! yt-stream figure <id> [--seconds N] [--compute native|hlo] [--seed N]
-//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain
+//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard
 //! yt-stream run [--config path.yson] [--seconds N]
 //!     run the log-analytics streaming processor and print live stats
 //! yt-stream selfcheck
@@ -40,7 +40,7 @@ fn main() {
         _ => {
             eprintln!(
                 "yt-stream — streaming MapReduce with low write amplification\n\
-                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain> [--seconds N] [--compute native|hlo] [--seed N]\n\
+                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard> [--seconds N] [--compute native|hlo] [--seed N]\n\
                  \x20 yt-stream run [--config path.yson] [--seconds N] [--compute native|hlo]\n\
                  \x20 yt-stream selfcheck"
             );

@@ -100,6 +100,12 @@ pub mod names {
     pub const REDUCER_SPLIT_BRAIN: &str = "reducer/split_brain_detected_total";
     pub const SPILL_ROWS: &str = "spill/rows_spilled_total";
     pub const SPILL_RESTORED: &str = "spill/rows_restored_total";
+    pub const RESHARD_MIGRATIONS: &str = "reshard/migrations_started_total";
+    pub const RESHARD_FINALIZED: &str = "reshard/migrations_finalized_total";
+    pub const RESHARD_RETIRED: &str = "reshard/reducers_retired_total";
+    pub const RESHARD_BOOTSTRAPPED: &str = "reshard/reducers_bootstrapped_total";
+    pub const RESHARD_ADOPTIONS: &str = "reshard/mapper_cutovers_adopted_total";
+    pub const RESHARD_COMMIT_FENCED: &str = "reshard/commits_fenced_total";
 }
 
 #[cfg(test)]

@@ -41,6 +41,8 @@ pub(crate) fn run_reducer_pipelined(
     let mut last_commit_ms = clock.now_ms();
     let mut last_heartbeat_ms = clock.now_ms();
     let mut cycle: u64 = 0;
+    // Highest mapper index (+1) ever fetched from (retirement-gate floor).
+    let mut max_mapper_seen = rt.spec.num_mappers;
 
     // The in-flight batch: (state it was fetched against, tentative new
     // state, fetched rows).
@@ -56,7 +58,10 @@ pub(crate) fn run_reducer_pipelined(
         cycle += 1;
 
         // Ensure we have a batch to process: fetch against the durable
-        // state when the pipeline is empty.
+        // state when the pipeline is empty. The reshard gates (retired
+        // exit, bootstrap import, drain-and-retire) live on this refill
+        // path — a reshard quiesces the pipeline anyway, so the overlap
+        // machinery never runs mid-migration-boundary.
         let (state, new_state, fetches) = match inflight.take() {
             Some(x) => x,
             None => {
@@ -64,12 +69,29 @@ pub(crate) fn run_reducer_pipelined(
                     clock.sleep_ms(rt.cfg.backoff_ms);
                     continue;
                 };
-                if state.committed_row_indices.len() != rt.spec.num_mappers {
-                    return;
+                if state.retired {
+                    return; // this epoch was resharded away
+                }
+                if !state.bootstrapped {
+                    rt.try_bootstrap(&state);
+                    clock.sleep_ms(rt.cfg.backoff_ms);
+                    continue;
                 }
                 let fetches = rt.fetch_cycle(&state, cycle);
+                for f in &fetches {
+                    max_mapper_seen = max_mapper_seen.max(f.mapper_index + 1);
+                }
                 let (new_state, total) = rt.tentative_state(&state, &fetches);
                 if total == 0 {
+                    if let Some(plan) = rt.fetch_plan() {
+                        if plan.phase == crate::reshard::plan::PlanPhase::Migrating
+                            && plan.epoch == rt.spec.epoch
+                            && rt.ready_to_retire(&fetches, max_mapper_seen)
+                            && rt.try_retire(&state, &plan)
+                        {
+                            return;
+                        }
+                    }
                     clock.sleep_ms(rt.cfg.backoff_ms);
                     continue;
                 }

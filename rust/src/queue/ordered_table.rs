@@ -11,7 +11,7 @@
 //! processor overhead.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 use super::{ContinuationToken, PartitionReader, QueueError, ReadBatch};
 use crate::rows::{codec, NameTable, UnversionedRow, UnversionedRowset};
@@ -27,11 +27,22 @@ struct Tablet {
     unavailable: bool,
 }
 
+fn fresh_tablet() -> Arc<Mutex<Tablet>> {
+    Arc::new(Mutex::new(Tablet {
+        first_index: 0,
+        rows: VecDeque::new(),
+        unavailable: false,
+    }))
+}
+
 /// An ordered dynamic table: a vector of independently trimmable tablets.
+/// The tablet count can *grow* at runtime ([`OrderedTable::ensure_tablets`])
+/// — elastic resharding re-partitions a dataflow handoff table in place;
+/// existing tablet indexes and their contents are never disturbed.
 #[derive(Debug)]
 pub struct OrderedTable {
     name_table: Arc<NameTable>,
-    tablets: Vec<Mutex<Tablet>>,
+    tablets: RwLock<Vec<Arc<Mutex<Tablet>>>>,
     journal: Arc<Journal>,
 }
 
@@ -70,21 +81,28 @@ impl OrderedTable {
     ) -> Arc<OrderedTable> {
         Arc::new(OrderedTable {
             name_table,
-            tablets: (0..tablet_count)
-                .map(|_| {
-                    Mutex::new(Tablet {
-                        first_index: 0,
-                        rows: VecDeque::new(),
-                        unavailable: false,
-                    })
-                })
-                .collect(),
+            tablets: RwLock::new((0..tablet_count).map(|_| fresh_tablet()).collect()),
             journal: Journal::new_scoped(name, category, accounting, scope),
         })
     }
 
     pub fn tablet_count(&self) -> usize {
-        self.tablets.len()
+        self.tablets.read().unwrap().len()
+    }
+
+    /// Grow to at least `count` tablets (no-op when already that large;
+    /// shrinking is never done in place — a reshard that reduces the
+    /// partition count simply stops writing the tail tablets).
+    pub fn ensure_tablets(&self, count: usize) {
+        let mut tablets = self.tablets.write().unwrap();
+        while tablets.len() < count {
+            tablets.push(fresh_tablet());
+        }
+    }
+
+    /// The tablet handle (panics on out-of-range, like the old indexing).
+    fn tablet(&self, index: usize) -> Arc<Mutex<Tablet>> {
+        self.tablets.read().unwrap()[index].clone()
     }
 
     /// Table name (the journal's name).
@@ -100,7 +118,8 @@ impl OrderedTable {
     /// row. Durable: bytes are journal-accounted.
     pub fn append(&self, tablet: usize, rows: Vec<UnversionedRow>) -> Result<i64, QueueError> {
         let encoded = codec::encode_rows(&rows);
-        let mut t = self.tablets[tablet].lock().unwrap();
+        let t = self.tablet(tablet);
+        let mut t = t.lock().unwrap();
         if t.unavailable {
             return Err(QueueError::Unavailable(tablet));
         }
@@ -118,7 +137,8 @@ impl OrderedTable {
     /// Returns the absolute index of the first appended row.
     pub(crate) fn append_committed(&self, tablet: usize, rows: Vec<UnversionedRow>) -> i64 {
         let encoded = codec::encode_rows(&rows);
-        let mut t = self.tablets[tablet].lock().unwrap();
+        let t = self.tablet(tablet);
+        let mut t = t.lock().unwrap();
         self.journal.append(encoded);
         let first = t.first_index + t.rows.len() as i64;
         t.rows.extend(rows.iter().map(UnversionedRow::detached));
@@ -128,26 +148,25 @@ impl OrderedTable {
     /// Is the tablet currently serving requests? (False during an injected
     /// partition outage.)
     pub fn is_available(&self, tablet: usize) -> bool {
-        !self.tablets[tablet].lock().unwrap().unavailable
+        !self.tablet(tablet).lock().unwrap().unavailable
     }
 
     /// Absolute index one past the last appended row.
     pub fn end_index(&self, tablet: usize) -> i64 {
-        let t = self.tablets[tablet].lock().unwrap();
+        let t = self.tablet(tablet);
+        let t = t.lock().unwrap();
         t.first_index + t.rows.len() as i64
     }
 
     /// Absolute index of the first retained (untrimmed) row.
     pub fn first_index(&self, tablet: usize) -> i64 {
-        self.tablets[tablet].lock().unwrap().first_index
+        self.tablet(tablet).lock().unwrap().first_index
     }
 
     /// Rows currently retained across all tablets (for backlog metrics).
     pub fn retained_rows(&self) -> usize {
-        self.tablets
-            .iter()
-            .map(|t| t.lock().unwrap().rows.len())
-            .sum()
+        let tablets: Vec<_> = self.tablets.read().unwrap().clone();
+        tablets.iter().map(|t| t.lock().unwrap().rows.len()).sum()
     }
 
     /// Per-tablet trim low-water marks: the first retained absolute index
@@ -156,7 +175,8 @@ impl OrderedTable {
     /// continuation state, then trims), so the marks trail the downstream
     /// consumers' committed positions and bound the table's memory.
     pub fn low_water_marks(&self) -> Vec<i64> {
-        self.tablets
+        let tablets: Vec<_> = self.tablets.read().unwrap().clone();
+        tablets
             .iter()
             .map(|t| t.lock().unwrap().first_index)
             .collect()
@@ -165,7 +185,7 @@ impl OrderedTable {
     /// Inject or clear a partition outage (used by §5.2-style drills:
     /// "failures of individual partitions").
     pub fn set_unavailable(&self, tablet: usize, unavailable: bool) {
-        self.tablets[tablet].lock().unwrap().unavailable = unavailable;
+        self.tablet(tablet).lock().unwrap().unavailable = unavailable;
     }
 
     /// Public indexed read over one tablet (used by the §6 order log).
@@ -184,7 +204,8 @@ impl OrderedTable {
     }
 
     fn read(&self, tablet: usize, begin: i64, end: i64) -> Result<Vec<UnversionedRow>, QueueError> {
-        let t = self.tablets[tablet].lock().unwrap();
+        let t = self.tablet(tablet);
+        let t = t.lock().unwrap();
         if t.unavailable {
             return Err(QueueError::Unavailable(tablet));
         }
@@ -206,7 +227,8 @@ impl OrderedTable {
     }
 
     fn trim(&self, tablet: usize, row_index: i64) -> Result<(), QueueError> {
-        let mut t = self.tablets[tablet].lock().unwrap();
+        let t = self.tablet(tablet);
+        let mut t = t.lock().unwrap();
         if t.unavailable {
             return Err(QueueError::Unavailable(tablet));
         }
@@ -387,6 +409,22 @@ mod tests {
         assert_eq!(t.low_water_marks(), vec![0, 0]);
         t.trim(0, 4).unwrap();
         assert_eq!(t.low_water_marks(), vec![4, 0]);
+    }
+
+    #[test]
+    fn ensure_tablets_grows_without_disturbing_existing() {
+        let t = table(2);
+        t.append(0, rows(3, 0)).unwrap();
+        t.ensure_tablets(5);
+        assert_eq!(t.tablet_count(), 5);
+        assert_eq!(t.end_index(0), 3, "existing tablets untouched");
+        assert_eq!(t.end_index(4), 0);
+        t.append(4, rows(2, 0)).unwrap();
+        assert_eq!(t.end_index(4), 2);
+        // Shrink requests are no-ops.
+        t.ensure_tablets(1);
+        assert_eq!(t.tablet_count(), 5);
+        assert_eq!(t.low_water_marks().len(), 5);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Residual-state migration: how a retiring reducer hands what it owns to
+//! the new partition map, exactly once.
+//!
+//! A retiring reducer's final transaction (a) CAS-bumps its state row to
+//! retired and (b) `append_ordered`s its residual rows into the epoch's
+//! **migration handoff table** — an ordered table with one tablet per
+//! *new* reducer, exactly like a dataflow inter-stage handoff. The append
+//! rides the retirement CAS, so split-brain twins cannot double-export.
+//! New reducers bootstrap by consuming their tablet inside a transaction
+//! that CAS-marks their state row `bootstrapped` — so the import also
+//! happens exactly once. All migration bytes are accounted as
+//! [`WriteCategory::Reshard`].
+//!
+//! What counts as residual state is workload-defined through
+//! [`ResidualExporter`]/[`ResidualImporter`]. The default pair exports the
+//! retiring reducer's committed row-index vector as an audit record (the
+//! shared-output workloads keep their grouped state in key-addressed
+//! tables that survive any partition map) and imports it as a no-op;
+//! stateful workloads plug in their own.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::state::ReducerState;
+use crate::dyntable::{Transaction, TxnError};
+use crate::queue::ordered_table::OrderedTable;
+use crate::rows::{NameTable, UnversionedRow, Value};
+use crate::storage::{WriteAccounting, WriteCategory};
+use crate::util::yson::Yson;
+
+use super::plan::migration_table;
+
+/// Columns of a migration-handoff row: which old reducer exported it, a
+/// workload-defined kind tag, and an opaque payload.
+pub fn residual_name_table() -> Arc<NameTable> {
+    NameTable::new(&["origin_index", "kind", "payload"])
+}
+
+/// Context handed to a [`ResidualExporter`].
+pub struct ExportCtx {
+    /// Index of the retiring reducer within the old partition map.
+    pub old_index: usize,
+    pub old_partitions: usize,
+    pub new_partitions: usize,
+    /// The epoch being bootstrapped (old epoch + 1).
+    pub new_epoch: i64,
+    /// The retiring reducer's final committed state.
+    pub state: ReducerState,
+}
+
+/// Context handed to a [`ResidualImporter`].
+pub struct ImportCtx {
+    /// Index of the importing reducer within the new partition map.
+    pub new_index: usize,
+    pub new_partitions: usize,
+    pub epoch: i64,
+}
+
+/// Selects the residual rows a retiring reducer must hand off, grouped by
+/// destination tablet (= new owner). Runs inside the retirement
+/// transaction: lookups join its read set, so the export is CAS-protected
+/// like everything else.
+pub trait ResidualExporter: Send + Sync {
+    fn export(
+        &self,
+        ctx: &ExportCtx,
+        txn: &mut Transaction,
+    ) -> Result<Vec<(usize, Vec<UnversionedRow>)>, TxnError>;
+}
+
+/// Applies one tablet's residual rows before the new reducer serves its
+/// key range. Runs inside the bootstrap transaction (which also CAS-marks
+/// the reducer bootstrapped), so it applies exactly once.
+pub trait ResidualImporter: Send + Sync {
+    fn import(
+        &self,
+        ctx: &ImportCtx,
+        rows: &[UnversionedRow],
+        txn: &mut Transaction,
+    ) -> Result<(), TxnError>;
+}
+
+/// Default exporter: one audit row carrying the retiring reducer's
+/// committed row-index vector, owned by `old_index % new_partitions`. It
+/// keeps the migration path (and its WA accounting) exercised even for
+/// workloads whose grouped state lives in shared key-addressed tables.
+pub struct MetaStateExporter;
+
+impl ResidualExporter for MetaStateExporter {
+    fn export(
+        &self,
+        ctx: &ExportCtx,
+        _txn: &mut Transaction,
+    ) -> Result<Vec<(usize, Vec<UnversionedRow>)>, TxnError> {
+        let payload = Yson::List(
+            ctx.state
+                .committed_row_indices
+                .iter()
+                .map(|v| Yson::Int(*v))
+                .collect(),
+        )
+        .to_string();
+        let row = UnversionedRow::new(vec![
+            Value::Int64(ctx.old_index as i64),
+            Value::from("committed_row_indices"),
+            Value::from(payload.as_str()),
+        ]);
+        Ok(vec![(ctx.old_index % ctx.new_partitions, vec![row])])
+    }
+}
+
+/// Default importer: the audit rows need no application.
+pub struct NoopImporter;
+
+impl ResidualImporter for NoopImporter {
+    fn import(
+        &self,
+        _ctx: &ImportCtx,
+        _rows: &[UnversionedRow],
+        _txn: &mut Transaction,
+    ) -> Result<(), TxnError> {
+        Ok(())
+    }
+}
+
+/// Shared reshard runtime of one streaming processor: the plan-table path
+/// every worker polls, the exporter/importer pair, and the per-epoch
+/// migration handoff tables (created lazily by whoever needs one first —
+/// the same `Arc` is handed to every caller, so retiring appends and
+/// bootstrap reads meet on one table).
+pub struct ReshardRuntime {
+    pub plan_table: String,
+    pub exporter: Arc<dyn ResidualExporter>,
+    pub importer: Arc<dyn ResidualImporter>,
+    accounting: Arc<WriteAccounting>,
+    scope: Option<String>,
+    migrations: Mutex<HashMap<i64, Arc<OrderedTable>>>,
+}
+
+impl ReshardRuntime {
+    pub fn new(
+        plan_table: impl Into<String>,
+        accounting: Arc<WriteAccounting>,
+        scope: Option<String>,
+    ) -> Arc<ReshardRuntime> {
+        Arc::new(ReshardRuntime {
+            plan_table: plan_table.into(),
+            exporter: Arc::new(MetaStateExporter),
+            importer: Arc::new(NoopImporter),
+            accounting,
+            scope,
+            migrations: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Constructor with a custom exporter/importer pair (stateful
+    /// workloads). Build this *before* launch and hand it to
+    /// [`crate::coordinator::StreamingProcessor::launch_with_runtime`] —
+    /// the runtime's identity is the sharing contract (retiring appends
+    /// and bootstrap reads must meet on one `Arc`), so swapping migrators
+    /// on a runtime that workers already hold is not offered.
+    pub fn new_with_migrators(
+        plan_table: impl Into<String>,
+        accounting: Arc<WriteAccounting>,
+        scope: Option<String>,
+        exporter: Arc<dyn ResidualExporter>,
+        importer: Arc<dyn ResidualImporter>,
+    ) -> Arc<ReshardRuntime> {
+        Arc::new(ReshardRuntime {
+            plan_table: plan_table.into(),
+            exporter,
+            importer,
+            accounting,
+            scope,
+            migrations: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The migration handoff table for the fleet bootstrapping `epoch`,
+    /// with one tablet per new reducer. Idempotent get-or-create.
+    pub fn migration_for(&self, epoch: i64, new_partitions: usize) -> Arc<OrderedTable> {
+        let mut g = self.migrations.lock().unwrap();
+        g.entry(epoch)
+            .or_insert_with(|| {
+                OrderedTable::new_scoped(
+                    &migration_table(&self.plan_table, epoch),
+                    residual_name_table(),
+                    new_partitions,
+                    self.accounting.clone(),
+                    WriteCategory::Reshard,
+                    self.scope.clone(),
+                )
+            })
+            .clone()
+    }
+
+    /// Total rows ever appended to migration handoff tables (stats).
+    pub fn migrated_rows(&self) -> i64 {
+        let g = self.migrations.lock().unwrap();
+        g.values()
+            .map(|t| (0..t.tablet_count()).map(|i| t.end_index(i)).sum::<i64>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dyntable::DynTableStore;
+
+    #[test]
+    fn migration_table_is_shared_and_sized() {
+        let acc = WriteAccounting::new();
+        let rt = ReshardRuntime::new("//sys/p/reshard_plan", acc, None);
+        let a = rt.migration_for(1, 8);
+        let b = rt.migration_for(1, 8);
+        assert!(Arc::ptr_eq(&a, &b), "one table per epoch");
+        assert_eq!(a.tablet_count(), 8);
+        assert_eq!(a.name(), "//sys/p/reshard_plan/migration/e1");
+        assert_eq!(rt.migrated_rows(), 0);
+    }
+
+    #[test]
+    fn default_exporter_emits_one_audit_row_to_stable_owner() {
+        let acc = WriteAccounting::new();
+        let store = DynTableStore::new(acc);
+        let mut txn = store.begin();
+        let ctx = ExportCtx {
+            old_index: 5,
+            old_partitions: 8,
+            new_partitions: 4,
+            new_epoch: 1,
+            state: ReducerState {
+                committed_row_indices: vec![10, -1, 7],
+                retired: false,
+                bootstrapped: true,
+            },
+        };
+        let out = MetaStateExporter.export(&ctx, &mut txn).unwrap();
+        assert_eq!(out.len(), 1);
+        let (tablet, rows) = &out[0];
+        assert_eq!(*tablet, 5 % 4);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get(0).unwrap().as_i64(), Some(5));
+        assert_eq!(rows[0].get(1).unwrap().as_str(), Some("committed_row_indices"));
+        assert!(rows[0].get(2).unwrap().as_str().unwrap().contains("10"));
+        txn.abort();
+    }
+
+    #[test]
+    fn residual_rows_are_accounted_as_reshard() {
+        let acc = WriteAccounting::new();
+        let rt = ReshardRuntime::new("//sys/p/plan", acc.clone(), Some("stage-x".into()));
+        let mig = rt.migration_for(1, 2);
+        mig.append(
+            1,
+            vec![UnversionedRow::new(vec![
+                Value::Int64(0),
+                Value::from("k"),
+                Value::from("payload"),
+            ])],
+        )
+        .unwrap();
+        assert!(acc.bytes(WriteCategory::Reshard) > 0);
+        assert_eq!(
+            acc.scope_snapshot("stage-x").bytes_of(WriteCategory::Reshard),
+            acc.bytes(WriteCategory::Reshard)
+        );
+        assert_eq!(rt.migrated_rows(), 1);
+    }
+}

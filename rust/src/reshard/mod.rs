@@ -1,0 +1,55 @@
+//! Elastic resharding: live partition-count changes with exactly-once
+//! state migration, plus the backlog-driven autoscaler that proposes them.
+//!
+//! The paper's processor bakes its reducer count in for life; a production
+//! system serving heavy traffic must resize while running. This subsystem
+//! changes a live stage's reducer partition count N → M without stopping
+//! ingestion and without breaking exactly-once or batch-invariant output.
+//! A reshard epoch is itself a small state machine persisted in the
+//! stage's dyntable meta-state ([`plan::ReshardPlan`]):
+//!
+//! 1. **Begin** — the driver CASes the plan `Stable(e,N)` →
+//!    `Migrating(e→e+1, N→M)` and spawns the epoch-e+1 fleet beside the
+//!    old one ([`resharder::begin`]).
+//! 2. **Cutover** — each mapper observes the plan (discovery-by-lookup on
+//!    its trim cadence), CAS-adopts a per-mapper *cutover shuffle index*
+//!    into its own state row, and from then on dual-routes: rows below the
+//!    cutover stay in the old epoch's bucket set, rows at or above it go
+//!    to the new epoch's buckets under the new partition map. Because the
+//!    cutover rides the mapper-state CAS, split-brain twins always agree
+//!    on where the map changed — and the reducer-side commit validation
+//!    (plan + mapper state in the commit read set) makes a stale twin's
+//!    mis-routed serve unable to commit.
+//! 3. **Drain & retire** — each old reducer keeps its normal
+//!    fetch/process/commit cycle until every mapper reports its (epoch,
+//!    reducer) bucket drained, then commits a final transaction that (a)
+//!    CAS-bumps its state row to retired and (b) `append_ordered`s its
+//!    residual grouped state into the migration handoff table
+//!    ([`migration`]) — exactly like a dataflow inter-stage handoff,
+//!    accounted as [`crate::storage::WriteCategory::Reshard`] so the WA
+//!    cost of rescaling is measured honestly.
+//! 4. **Bootstrap** — new reducers consume their migration tablet inside
+//!    a transaction that CAS-marks them bootstrapped, then serve their
+//!    key range.
+//! 5. **Finalize** — once every old reducer retired, the driver CASes the
+//!    plan `Stable(e+1, M)` with all retirements in the read set
+//!    ([`resharder::finalize`]); mappers then drop the old bucket sets.
+//!
+//! On top sits the [`autoscaler`]: a pure policy loop that watches
+//! per-stage backlog and proposes scale-up/down with hysteresis and
+//! cooldown. [`crate::dataflow`] re-wires adjacent stages when an
+//! intermediate stage reshards (handoff tablets grow, downstream mapper
+//! fleets re-spec against the new tablet count).
+
+pub mod autoscaler;
+pub mod migration;
+pub mod plan;
+pub mod resharder;
+
+pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use migration::{
+    ExportCtx, ImportCtx, MetaStateExporter, NoopImporter, ReshardRuntime, ResidualExporter,
+    ResidualImporter,
+};
+pub use plan::{EpochRouting, PlanPhase, ReshardPlan, RouteTarget};
+pub use resharder::{ReshardContext, ReshardError, ReshardStats};

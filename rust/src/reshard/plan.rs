@@ -1,0 +1,306 @@
+//! The reshard plan: a small state machine persisted in the stage's
+//! dyntable meta-state.
+//!
+//! One row (key `stage = 0`) in the processor's plan table holds the
+//! current partition map and, while a reshard is in flight, the target
+//! map:
+//!
+//! ```text
+//!   Stable(epoch e, N partitions)
+//!       │ Resharder::begin — CAS
+//!       ▼
+//!   Migrating(epoch e → e+1, N → M)
+//!       │ every mapper CAS-adopts a cutover; every epoch-e reducer
+//!       │ drains, exports residual state, CAS-retires
+//!       │ Resharder::finalize — CAS, validates all retirements
+//!       ▼
+//!   Stable(epoch e+1, M partitions)
+//! ```
+//!
+//! Everything reads the plan through ordinary lookups and validates it
+//! inside commit transactions — the migration rides the existing
+//! split-brain CAS, no new consensus mechanism. Plan bytes are accounted
+//! as [`crate::storage::WriteCategory::Reshard`].
+
+use crate::rows::{ColumnSchema, ColumnType, TableSchema, UnversionedRow, Value};
+
+/// Phase of the plan state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanPhase {
+    /// One partition map, `epoch`/`partitions`, is authoritative.
+    Stable,
+    /// Epoch `epoch` (with `partitions` reducers) is being drained in
+    /// favour of epoch `epoch + 1` (with `next_partitions` reducers).
+    Migrating,
+}
+
+/// The persisted plan row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReshardPlan {
+    pub phase: PlanPhase,
+    /// Current authoritative epoch (the *old* epoch while migrating).
+    pub epoch: i64,
+    /// Reducer count of `epoch`.
+    pub partitions: usize,
+    /// Reducer count of `epoch + 1` while migrating; meaningless (0) when
+    /// stable.
+    pub next_partitions: usize,
+}
+
+impl ReshardPlan {
+    /// The plan a freshly launched processor persists.
+    pub fn initial(partitions: usize) -> ReshardPlan {
+        ReshardPlan {
+            phase: PlanPhase::Stable,
+            epoch: 0,
+            partitions,
+            next_partitions: 0,
+        }
+    }
+
+    /// Epoch mappers must adopt and new reducers belong to, while
+    /// migrating.
+    pub fn next_epoch(&self) -> i64 {
+        self.epoch + 1
+    }
+
+    /// Begin a migration towards `new_partitions` (pure transition; the
+    /// caller CASes it in).
+    pub fn begin_migration(&self, new_partitions: usize) -> Option<ReshardPlan> {
+        if self.phase != PlanPhase::Stable
+            || new_partitions == 0
+            || new_partitions == self.partitions
+        {
+            return None;
+        }
+        Some(ReshardPlan {
+            phase: PlanPhase::Migrating,
+            epoch: self.epoch,
+            partitions: self.partitions,
+            next_partitions: new_partitions,
+        })
+    }
+
+    /// Finalize the in-flight migration (pure transition).
+    pub fn finalized(&self) -> Option<ReshardPlan> {
+        if self.phase != PlanPhase::Migrating {
+            return None;
+        }
+        Some(ReshardPlan {
+            phase: PlanPhase::Stable,
+            epoch: self.epoch + 1,
+            partitions: self.next_partitions,
+            next_partitions: 0,
+        })
+    }
+
+    pub fn schema() -> TableSchema {
+        TableSchema::new(vec![
+            ColumnSchema::key("stage", ColumnType::Int64),
+            ColumnSchema::value("phase", ColumnType::Str),
+            ColumnSchema::value("epoch", ColumnType::Int64),
+            ColumnSchema::value("partitions", ColumnType::Int64),
+            ColumnSchema::value("next_partitions", ColumnType::Int64),
+        ])
+    }
+
+    pub fn to_row(&self) -> UnversionedRow {
+        UnversionedRow::new(vec![
+            Value::Int64(0),
+            Value::from(match self.phase {
+                PlanPhase::Stable => "stable",
+                PlanPhase::Migrating => "migrating",
+            }),
+            Value::Int64(self.epoch),
+            Value::Int64(self.partitions as i64),
+            Value::Int64(self.next_partitions as i64),
+        ])
+    }
+
+    pub fn from_row(row: &UnversionedRow) -> Option<ReshardPlan> {
+        let phase = match row.get(1)?.as_str()? {
+            "stable" => PlanPhase::Stable,
+            "migrating" => PlanPhase::Migrating,
+            _ => return None,
+        };
+        Some(ReshardPlan {
+            phase,
+            epoch: row.get(2)?.as_i64()?,
+            partitions: row.get(3)?.as_i64()? as usize,
+            next_partitions: row.get(4)?.as_i64()? as usize,
+        })
+    }
+
+    /// The plan table's single row key.
+    pub fn key() -> Vec<Value> {
+        vec![Value::Int64(0)]
+    }
+
+    /// Plain (non-transactional) fetch from a store: `None` on a store
+    /// error, a missing row, or a corrupt row. The one shared poll every
+    /// worker and driver uses; transactional validation goes through
+    /// `txn.lookup` + [`ReshardPlan::from_row`] instead.
+    pub fn fetch(
+        store: &crate::dyntable::DynTableStore,
+        plan_table: &str,
+    ) -> Option<ReshardPlan> {
+        match store.lookup(plan_table, &Self::key()) {
+            Ok(Some(row)) => Self::from_row(&row),
+            _ => None,
+        }
+    }
+}
+
+/// Per-epoch reducer state table path: epoch 0 keeps the configured path
+/// (backwards compatible), later epochs get their own table so the CAS
+/// domains of concurrent fleets never collide.
+pub fn reducer_state_table(base: &str, epoch: i64) -> String {
+    if epoch == 0 {
+        base.to_string()
+    } else {
+        format!("{base}/e{epoch}")
+    }
+}
+
+/// Migration handoff table path for the fleet bootstrapping epoch `epoch`.
+pub fn migration_table(plan_table: &str, epoch: i64) -> String {
+    format!("{plan_table}/migration/e{epoch}")
+}
+
+/// Supervisor slot index of reducer `index` in `epoch` — epochs get
+/// disjoint slot ranges so a reshard can add its fleet next to the old one
+/// under one supervisor.
+pub fn reducer_slot(epoch: i64, index: usize) -> usize {
+    epoch as usize * EPOCH_SLOT_STRIDE + index
+}
+
+/// Reducer slot stride between epochs (bounds a single epoch's fleet).
+pub const EPOCH_SLOT_STRIDE: usize = 10_000;
+
+/// A mapper's view of the partition maps it routes for: the pure model of
+/// "which epoch and which reducer owns a shuffle row". The miniprop suite
+/// checks this function is total and exclusive over (shuffle index, key).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EpochRouting {
+    /// Current epoch and its reducer count.
+    pub epoch: i64,
+    pub partitions: usize,
+    /// Previous epoch's reducer count while its fleet still drains
+    /// (`None` once the plan went stable past it).
+    pub old_partitions: Option<usize>,
+    /// Shuffle index where `epoch`'s map took over.
+    pub cutover: i64,
+    /// Shuffle index where the previous epoch's map took over; rows below
+    /// it were committed before that epoch retired.
+    pub prev_cutover: i64,
+}
+
+/// Where one shuffle row goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteTarget {
+    /// Owned by reducer `.1` of epoch `.0`.
+    Epoch(i64, usize),
+    /// Below every live epoch's range: committed before the last finalized
+    /// reshard, never re-routed.
+    Committed,
+}
+
+impl EpochRouting {
+    /// Routing for a processor that never resharded.
+    pub fn stable(epoch: i64, partitions: usize, cutover: i64, prev_cutover: i64) -> EpochRouting {
+        EpochRouting {
+            epoch,
+            partitions,
+            old_partitions: None,
+            cutover,
+            prev_cutover,
+        }
+    }
+
+    /// Route one shuffle row given its key hash. Total: every
+    /// (shuffle index, hash) has exactly one target.
+    pub fn route(&self, shuffle_index: i64, key_hash: u64) -> RouteTarget {
+        if shuffle_index >= self.cutover {
+            return RouteTarget::Epoch(
+                self.epoch,
+                crate::api::partitioning::owner(key_hash, self.partitions),
+            );
+        }
+        match self.old_partitions {
+            Some(old) if shuffle_index >= self.prev_cutover => {
+                RouteTarget::Epoch(self.epoch - 1, crate::api::partitioning::owner(key_hash, old))
+            }
+            // Either below the previous cutover (committed before the
+            // previous reshard finalized) or the old fleet is fully
+            // retired (plan stable ⇒ everything below cutover committed).
+            _ => RouteTarget::Committed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_roundtrip_and_transitions() {
+        let p = ReshardPlan::initial(4);
+        assert_eq!(ReshardPlan::from_row(&p.to_row()), Some(p.clone()));
+        assert_eq!(p.phase, PlanPhase::Stable);
+
+        let m = p.begin_migration(8).unwrap();
+        assert_eq!(m.phase, PlanPhase::Migrating);
+        assert_eq!(m.partitions, 4);
+        assert_eq!(m.next_partitions, 8);
+        assert_eq!(m.next_epoch(), 1);
+        assert_eq!(ReshardPlan::from_row(&m.to_row()), Some(m.clone()));
+        ReshardPlan::schema().validate(&m.to_row()).unwrap();
+
+        let f = m.finalized().unwrap();
+        assert_eq!(f, ReshardPlan {
+            phase: PlanPhase::Stable,
+            epoch: 1,
+            partitions: 8,
+            next_partitions: 0,
+        });
+
+        // Illegal transitions are rejected.
+        assert!(p.begin_migration(4).is_none(), "no-op resize");
+        assert!(p.begin_migration(0).is_none());
+        assert!(m.begin_migration(2).is_none(), "already migrating");
+        assert!(p.finalized().is_none(), "nothing to finalize");
+    }
+
+    #[test]
+    fn state_table_paths_per_epoch() {
+        assert_eq!(reducer_state_table("//sys/p/reducer_state", 0), "//sys/p/reducer_state");
+        assert_eq!(
+            reducer_state_table("//sys/p/reducer_state", 2),
+            "//sys/p/reducer_state/e2"
+        );
+        assert_eq!(migration_table("//sys/p/reshard_plan", 1), "//sys/p/reshard_plan/migration/e1");
+        assert_eq!(reducer_slot(0, 3), 3);
+        assert_eq!(reducer_slot(2, 3), 2 * EPOCH_SLOT_STRIDE + 3);
+    }
+
+    #[test]
+    fn routing_is_total_and_exclusive() {
+        // Migrating 4 → 8 with cutover at 100 over [40, ∞).
+        let r = EpochRouting {
+            epoch: 1,
+            partitions: 8,
+            old_partitions: Some(4),
+            cutover: 100,
+            prev_cutover: 40,
+        };
+        assert_eq!(r.route(39, 7), RouteTarget::Committed);
+        assert!(matches!(r.route(40, 7), RouteTarget::Epoch(0, o) if o < 4));
+        assert!(matches!(r.route(99, 7), RouteTarget::Epoch(0, _)));
+        assert!(matches!(r.route(100, 7), RouteTarget::Epoch(1, o) if o < 8));
+
+        // After the old fleet retires, sub-cutover rows are committed.
+        let s = EpochRouting::stable(1, 8, 100, 40);
+        assert_eq!(s.route(99, 7), RouteTarget::Committed);
+        assert!(matches!(s.route(100, 7), RouteTarget::Epoch(1, _)));
+    }
+}

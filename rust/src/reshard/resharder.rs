@@ -1,0 +1,290 @@
+//! The reshard driver: executes one partition-count change N → M against
+//! a running processor.
+//!
+//! [`begin`] CASes the plan from `Stable(e, N)` to `Migrating(e→e+1,
+//! N→M)`, creates the new epoch's reducer state table and migration
+//! handoff table, and adds the new fleet's supervision slots. From that
+//! point the migration is carried by the workers themselves — mappers
+//! adopt cutovers, old reducers drain and retire, new reducers bootstrap
+//! — and [`finalize`] just waits for every old reducer's `retired` mark,
+//! then CASes the plan to `Stable(e+1, M)` (validating all retirements in
+//! the same transaction) and retires the old supervision slots.
+//!
+//! Crash-safety: the plan row *is* the recovery point. A driver that dies
+//! mid-migration leaves `Migrating` persisted; re-running [`finalize`]
+//! (or [`resume`]) picks the migration back up. Workers never depend on
+//! the driver being alive.
+
+use std::sync::Arc;
+
+use crate::controller::{Role, Supervisor, WorkerHandle};
+use crate::coordinator::state::ReducerState;
+use crate::dyntable::{DynTableStore, TxnError};
+use crate::metrics::hub::names;
+use crate::metrics::MetricsHub;
+use crate::storage::WriteCategory;
+
+use super::migration::ReshardRuntime;
+use super::plan::{reducer_slot, reducer_state_table, PlanPhase, ReshardPlan};
+
+/// Everything the driver needs from the processor it reshapes.
+pub struct ReshardContext {
+    pub store: Arc<DynTableStore>,
+    pub runtime: Arc<ReshardRuntime>,
+    /// Base path of the reducer state tables (epoch suffixes are derived).
+    pub reducer_state_base: String,
+    /// Current mapper count (sizes new reducers' committed vectors).
+    pub num_mappers: usize,
+    pub supervisor: Arc<Supervisor>,
+    /// Build + register a reducer worker for (epoch, index).
+    pub spawn_reducer: Arc<dyn Fn(i64, usize) -> WorkerHandle + Send + Sync>,
+    pub metrics: Arc<MetricsHub>,
+    /// Accounting scope for the new epoch's state table.
+    pub scope: Option<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ReshardError {
+    #[error("plan is not stable (a migration is already in flight or was never finalized)")]
+    NotStable,
+    #[error("invalid target partition count {to} (current {from})")]
+    InvalidTarget { from: usize, to: usize },
+    #[error("plan transaction failed: {0}")]
+    Txn(#[from] TxnError),
+    #[error("store error: {0}")]
+    Store(String),
+    #[error(
+        "migration to epoch {epoch} timed out: {retired} of {total} old reducers retired \
+         (plan left Migrating; re-run finalize to resume)"
+    )]
+    Timeout {
+        epoch: i64,
+        retired: usize,
+        total: usize,
+    },
+}
+
+/// Outcome of a completed migration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReshardStats {
+    pub from_partitions: usize,
+    pub to_partitions: usize,
+    /// The epoch the new fleet serves.
+    pub epoch: i64,
+    /// Rows ever handed through migration tables (cumulative).
+    pub migrated_rows: i64,
+}
+
+/// Read the current plan (non-transactionally).
+pub fn read_plan(ctx: &ReshardContext) -> Result<ReshardPlan, ReshardError> {
+    let row = ctx
+        .store
+        .lookup(&ctx.runtime.plan_table, &ReshardPlan::key())
+        .map_err(|e| ReshardError::Store(e.to_string()))?
+        .ok_or_else(|| ReshardError::Store("plan row missing".into()))?;
+    ReshardPlan::from_row(&row).ok_or_else(|| ReshardError::Store("plan row corrupt".into()))
+}
+
+/// Start a migration towards `new_partitions`. Returns the in-flight plan.
+pub fn begin(ctx: &ReshardContext, new_partitions: usize) -> Result<ReshardPlan, ReshardError> {
+    // CAS Stable → Migrating.
+    let mut txn = ctx.store.begin();
+    let row = txn
+        .lookup(&ctx.runtime.plan_table, &ReshardPlan::key())?
+        .ok_or_else(|| ReshardError::Store("plan row missing".into()))?;
+    let plan = ReshardPlan::from_row(&row)
+        .ok_or_else(|| ReshardError::Store("plan row corrupt".into()))?;
+    if plan.phase != PlanPhase::Stable {
+        return Err(ReshardError::NotStable);
+    }
+    let migrating = plan
+        .begin_migration(new_partitions)
+        .ok_or(ReshardError::InvalidTarget {
+            from: plan.partitions,
+            to: new_partitions,
+        })?;
+    txn.write(&ctx.runtime.plan_table, migrating.to_row())?;
+    txn.commit()?;
+
+    ensure_new_fleet(ctx, &migrating)?;
+    ctx.metrics.add(names::RESHARD_MIGRATIONS, 1);
+    Ok(migrating)
+}
+
+/// Idempotently materialize everything the incoming fleet needs: the
+/// migration handoff table, the new epoch's seeded state table, and the
+/// supervision slots. Called by [`begin`] right after the plan CAS and
+/// again by [`resume`] — a driver that crashed anywhere between the CAS
+/// and the last slot must leave a resumable migration, so every step here
+/// tolerates already-done work.
+fn ensure_new_fleet(ctx: &ReshardContext, migrating: &ReshardPlan) -> Result<(), ReshardError> {
+    let epoch = migrating.next_epoch();
+    let new_partitions = migrating.next_partitions;
+    // The handoff the retiring fleet will export into.
+    ctx.runtime.migration_for(epoch, new_partitions);
+
+    // New epoch's state table, seeded un-bootstrapped.
+    let table = reducer_state_table(&ctx.reducer_state_base, epoch);
+    match ctx.store.create_table_scoped(
+        &table,
+        ReducerState::schema(),
+        WriteCategory::ReducerMeta,
+        ctx.scope.clone(),
+    ) {
+        Ok(_) | Err(crate::dyntable::store::StoreError::AlreadyExists(_)) => {}
+        Err(e) => return Err(ReshardError::Store(e.to_string())),
+    }
+    let mut seed = ctx.store.begin();
+    for index in 0..new_partitions {
+        if seed.lookup(&table, &ReducerState::key(index))?.is_none() {
+            seed.write(
+                &table,
+                ReducerState::initial_migrating(ctx.num_mappers).to_row(index),
+            )?;
+        }
+    }
+    match seed.commit() {
+        Ok(_) => {}
+        // On the resume path the fleet may already be running and a
+        // reducer's lazy fetch_state init can race this seed; its write
+        // is the same initial row, so losing the CAS is success.
+        Err(TxnError::Conflict { .. }) => {}
+        Err(e) => return Err(e.into()),
+    }
+
+    // Grow the fleet: the new reducers run beside the draining old ones.
+    for index in 0..new_partitions {
+        let slot = reducer_slot(epoch, index);
+        if !ctx.supervisor.has_slot(Role::Reducer, slot) {
+            let spawn = ctx.spawn_reducer.clone();
+            ctx.supervisor
+                .add_slot(Role::Reducer, slot, Box::new(move || spawn(epoch, index)));
+        }
+    }
+    Ok(())
+}
+
+/// How many old reducers have retired so far.
+fn count_retired(ctx: &ReshardContext, plan: &ReshardPlan) -> Result<usize, ReshardError> {
+    let table = reducer_state_table(&ctx.reducer_state_base, plan.epoch);
+    let mut retired = 0;
+    for index in 0..plan.partitions {
+        let row = ctx
+            .store
+            .lookup(&table, &ReducerState::key(index))
+            .map_err(|e| ReshardError::Store(e.to_string()))?;
+        if row
+            .as_ref()
+            .and_then(ReducerState::from_row)
+            .is_some_and(|s| s.retired)
+        {
+            retired += 1;
+        }
+    }
+    Ok(retired)
+}
+
+/// Wait (wall-clock bounded) for every old reducer to retire, then CAS
+/// the plan stable and retire the old supervision slots. Idempotent: safe
+/// to re-run after a timeout or driver crash.
+pub fn finalize(ctx: &ReshardContext, wall_timeout_ms: u64) -> Result<ReshardStats, ReshardError> {
+    let plan = read_plan(ctx)?;
+    if plan.phase == PlanPhase::Stable {
+        // Already finalized (idempotent resume path).
+        return Ok(ReshardStats {
+            from_partitions: plan.partitions,
+            to_partitions: plan.partitions,
+            epoch: plan.epoch,
+            migrated_rows: ctx.runtime.migrated_rows(),
+        });
+    }
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wall_timeout_ms);
+    loop {
+        let retired = count_retired(ctx, &plan)?;
+        if retired == plan.partitions {
+            break;
+        }
+        if std::time::Instant::now() >= deadline {
+            return Err(ReshardError::Timeout {
+                epoch: plan.next_epoch(),
+                retired,
+                total: plan.partitions,
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // CAS Migrating → Stable, re-validating every retirement in the same
+    // transaction (a racing finalizer or a resurrected zombie loses here).
+    // Everything below derives from the *re-read* plan, never the one we
+    // polled against — a racing finalize+begin pair could have advanced
+    // the live migration to a different epoch in between, and validating
+    // the old epoch's (all-retired) table against the new migration would
+    // finalize a fleet that never drained.
+    let mut txn = ctx.store.begin();
+    let row = txn
+        .lookup(&ctx.runtime.plan_table, &ReshardPlan::key())?
+        .ok_or_else(|| ReshardError::Store("plan row missing".into()))?;
+    let current = ReshardPlan::from_row(&row)
+        .ok_or_else(|| ReshardError::Store("plan row corrupt".into()))?;
+    if current.phase == PlanPhase::Stable {
+        // A racing finalizer beat us to the CAS. If it finalized the very
+        // migration we were waiting on, report its true origin count;
+        // otherwise we only know the current state.
+        let from = if current.epoch == plan.next_epoch() {
+            plan.partitions
+        } else {
+            current.partitions
+        };
+        return Ok(ReshardStats {
+            from_partitions: from,
+            to_partitions: current.partitions,
+            epoch: current.epoch,
+            migrated_rows: ctx.runtime.migrated_rows(),
+        });
+    }
+    if current != plan {
+        // A different migration is in flight now; re-enter the wait.
+        return Err(ReshardError::NotStable);
+    }
+    let old_table = reducer_state_table(&ctx.reducer_state_base, current.epoch);
+    for index in 0..current.partitions {
+        let state = txn
+            .lookup(&old_table, &ReducerState::key(index))?
+            .as_ref()
+            .and_then(ReducerState::from_row);
+        if !state.is_some_and(|s| s.retired) {
+            return Err(ReshardError::NotStable);
+        }
+    }
+    let finalized = current.finalized().ok_or(ReshardError::NotStable)?;
+    txn.write(&ctx.runtime.plan_table, finalized.to_row())?;
+    txn.commit()?;
+
+    // Stop respawning the retired fleet.
+    for index in 0..current.partitions {
+        ctx.supervisor
+            .retire(Role::Reducer, reducer_slot(current.epoch, index));
+    }
+    ctx.metrics.add(names::RESHARD_FINALIZED, 1);
+    Ok(ReshardStats {
+        from_partitions: current.partitions,
+        to_partitions: finalized.partitions,
+        epoch: finalized.epoch,
+        migrated_rows: ctx.runtime.migrated_rows(),
+    })
+}
+
+/// Resume an interrupted migration: if the plan is mid-flight, make sure
+/// the new fleet's slots exist (a crashed driver may have died between the
+/// plan CAS and the spawn), then finalize.
+pub fn resume(ctx: &ReshardContext, wall_timeout_ms: u64) -> Result<ReshardStats, ReshardError> {
+    let plan = read_plan(ctx)?;
+    if plan.phase == PlanPhase::Migrating {
+        // Re-materialize whatever begin() did not get to: migration
+        // table, seeded state table, supervision slots — all idempotent.
+        ensure_new_fleet(ctx, &plan)?;
+    }
+    finalize(ctx, wall_timeout_ms)
+}

@@ -46,6 +46,10 @@ pub struct ReqGetRows {
     pub count: i64,
     /// Index of the requesting reducer.
     pub reducer_index: i64,
+    /// Partition-map epoch the requesting reducer belongs to. The mapper
+    /// serves each epoch from that epoch's own bucket set; an epoch it
+    /// does not (yet) route for gets an empty response.
+    pub epoch: i64,
     /// Shuffle index of the last row this reducer successfully processed
     /// and committed; everything at or below is acknowledged.
     pub committed_row_index: i64,
@@ -65,6 +69,13 @@ pub struct RspGetRows {
     /// codec-encoded rowset ([`crate::rows::codec::encode_rowset`]),
     /// shared rather than copied across RPC/bench/replay paths.
     pub attachment: Attachment,
+    /// Reshard drain signal: true iff the requested epoch is older than
+    /// the mapper's current routing epoch, the mapper has mapped every row
+    /// below the cutover, and the requested epoch's bucket and spill queue
+    /// for this reducer are empty — i.e. this mapper will never again hold
+    /// unacknowledged rows for (epoch, reducer). A retiring reducer needs
+    /// this flag from every mapper in one cycle before it may retire.
+    pub drained: bool,
 }
 
 impl RspGetRows {
@@ -74,6 +85,15 @@ impl RspGetRows {
             row_count: 0,
             last_shuffle_row_index: -1,
             attachment: empty_attachment(),
+            drained: false,
+        }
+    }
+
+    /// An empty response that also reports the requested epoch drained.
+    pub fn empty_drained() -> RspGetRows {
+        RspGetRows {
+            drained: true,
+            ..RspGetRows::empty()
         }
     }
 }
@@ -97,7 +117,7 @@ impl Request {
     /// Approximate wire size (for network metrics).
     pub fn wire_bytes(&self) -> usize {
         match self {
-            Request::GetRows(r) => 8 * 3 + r.mapper_id.len(),
+            Request::GetRows(r) => 8 * 4 + r.mapper_id.len(),
             Request::Ping => 1,
         }
     }
@@ -106,7 +126,7 @@ impl Request {
 impl Response {
     pub fn wire_bytes(&self) -> usize {
         match self {
-            Response::GetRows(r) => 16 + r.attachment.len(),
+            Response::GetRows(r) => 17 + r.attachment.len(),
             Response::Pong => 1,
         }
     }
@@ -122,6 +142,8 @@ mod tests {
         assert_eq!(r.row_count, 0);
         assert_eq!(r.last_shuffle_row_index, -1);
         assert!(r.attachment.is_empty());
+        assert!(!r.drained);
+        assert!(RspGetRows::empty_drained().drained);
     }
 
     #[test]
@@ -129,16 +151,18 @@ mod tests {
         let req = Request::GetRows(ReqGetRows {
             count: 10,
             reducer_index: 1,
+            epoch: 0,
             committed_row_index: -1,
             mapper_id: "a-b-c-d".into(),
         });
-        assert!(req.wire_bytes() > 24);
+        assert!(req.wire_bytes() > 32);
         let rsp = Response::GetRows(RspGetRows {
             row_count: 1,
             last_shuffle_row_index: 0,
             attachment: vec![0; 100].into(),
+            drained: false,
         });
-        assert_eq!(rsp.wire_bytes(), 116);
+        assert_eq!(rsp.wire_bytes(), 117);
     }
 
     #[test]
@@ -147,6 +171,7 @@ mod tests {
             row_count: 1,
             last_shuffle_row_index: 0,
             attachment: vec![1, 2, 3].into(),
+            drained: false,
         };
         let dup = rsp.clone();
         assert!(Arc::ptr_eq(&rsp.attachment, &dup.attachment));

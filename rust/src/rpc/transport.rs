@@ -167,6 +167,7 @@ mod tests {
                     row_count: r.count,
                     last_shuffle_row_index: r.committed_row_index + r.count,
                     attachment: crate::rpc::empty_attachment(),
+                    drained: false,
                 })),
             }
         }
@@ -269,6 +270,7 @@ mod tests {
                 Request::GetRows(ReqGetRows {
                     count: 5,
                     reducer_index: 2,
+                    epoch: 0,
                     committed_row_index: 10,
                     mapper_id: "g".into(),
                 }),

@@ -38,10 +38,16 @@ pub enum WriteCategory {
     /// [`WriteCategory::UserOutput`] this *is* system overhead the chained
     /// design pays per hop, so it counts toward WA.
     InterStage,
+    /// Elastic-resharding migration bytes: plan-table state-machine
+    /// updates and the residual state retiring reducers hand to the new
+    /// partition map through the migration handoff table. Rescaling is a
+    /// system activity, so its bytes count toward WA — `figure reshard`
+    /// reports this line separately as the honest cost of elasticity.
+    Reshard,
 }
 
 /// Number of [`WriteCategory`] variants (array sizing).
-pub const CATEGORY_COUNT: usize = 8;
+pub const CATEGORY_COUNT: usize = 9;
 
 pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::SourceIngest,
@@ -52,6 +58,7 @@ pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::Spill,
     WriteCategory::CypressMeta,
     WriteCategory::InterStage,
+    WriteCategory::Reshard,
 ];
 
 impl WriteCategory {
@@ -65,6 +72,7 @@ impl WriteCategory {
             WriteCategory::Spill => 5,
             WriteCategory::CypressMeta => 6,
             WriteCategory::InterStage => 7,
+            WriteCategory::Reshard => 8,
         }
     }
 
@@ -78,6 +86,7 @@ impl WriteCategory {
             WriteCategory::Spill => "spill",
             WriteCategory::CypressMeta => "cypress_meta",
             WriteCategory::InterStage => "inter_stage",
+            WriteCategory::Reshard => "reshard",
         }
     }
 
@@ -311,6 +320,17 @@ mod tests {
         });
         assert_eq!(a.bytes(WriteCategory::ReducerMeta), 24_000);
         assert_eq!(a.ops(WriteCategory::ReducerMeta), 8_000);
+    }
+
+    #[test]
+    fn reshard_counts_toward_wa() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::SourceIngest, 1_000);
+        a.record(WriteCategory::Reshard, 250);
+        let s = a.snapshot();
+        assert_eq!(s.system_bytes(), 250);
+        assert!((s.wa_factor(1_000) - 0.25).abs() < 1e-9);
+        assert!(s.to_string().contains("reshard"));
     }
 
     #[test]

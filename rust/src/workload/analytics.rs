@@ -23,6 +23,7 @@ use crate::api::{
 use crate::compute::native::NativeStage;
 use crate::compute::{fnv1a32, ComputeStage};
 use crate::coordinator::config::ComputeMode;
+use crate::dyntable::store::StoreError;
 use crate::dyntable::Transaction;
 use crate::queue::INPUT_COL_PAYLOAD;
 use crate::row;
@@ -45,15 +46,17 @@ pub fn output_schema() -> TableSchema {
     ])
 }
 
-/// Create [`OUTPUT_TABLE`] if missing (examples / figures call this once).
-pub fn ensure_output_table(client: &Client) {
-    use crate::dyntable::store::StoreError;
+/// Create [`OUTPUT_TABLE`] if missing (examples / figures call this once
+/// up front and propagate the error; worker factories re-invoke it
+/// best-effort, where a transient failure surfaces later as a retried
+/// store error rather than a crash).
+pub fn ensure_output_table(client: &Client) -> Result<(), StoreError> {
     match client
         .store
         .create_table(OUTPUT_TABLE, output_schema(), WriteCategory::UserOutput)
     {
-        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
-        Err(e) => panic!("cannot create output table: {e}"),
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => Ok(()),
+        Err(e) => Err(e),
     }
 }
 
@@ -230,7 +233,9 @@ pub fn analytics_mapper_factory(mode: ComputeMode) -> MapperFactory {
 pub fn analytics_reducer_factory(mode: ComputeMode) -> ReducerFactory {
     Arc::new(move |user_cfg: &Yson, client: &Client, _spec: &ReducerSpec| {
         let artifacts = user_cfg.get_str_or("artifacts_dir", "artifacts").to_string();
-        ensure_output_table(client);
+        // Best-effort in the factory (it cannot propagate): a failure here
+        // surfaces as retried lookup errors in the reducer loop.
+        let _ = ensure_output_table(client);
         Box::new(LogAnalyticsReducer {
             stage: stage_for(mode, &artifacts),
             client: client.clone(),
@@ -313,7 +318,7 @@ mod tests {
     fn reducer_aggregates_into_output_table() {
         let env = ClusterEnv::new(Clock::realtime(), 1);
         let client = env.client();
-        ensure_output_table(&client);
+        ensure_output_table(&client).unwrap();
         let mut r = LogAnalyticsReducer {
             stage: Arc::new(NativeStage),
             client: client.clone(),
@@ -346,7 +351,7 @@ mod tests {
     fn reducer_empty_batch_returns_none() {
         let env = ClusterEnv::new(Clock::realtime(), 1);
         let client = env.client();
-        ensure_output_table(&client);
+        ensure_output_table(&client).unwrap();
         let mut r = LogAnalyticsReducer {
             stage: Arc::new(NativeStage),
             client,
@@ -375,6 +380,7 @@ mod tests {
             index: 0,
             guid: crate::util::Guid::from_seed(3),
             num_mappers: 2,
+            epoch: 0,
         };
         let cfg = Yson::parse("{}").unwrap();
         let _m = mf(&cfg, &client, input_name_table(), &mspec);

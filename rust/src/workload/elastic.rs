@@ -1,0 +1,302 @@
+//! The elastic workload scenario: the §5.2 analytics pipeline under live
+//! partition-count changes.
+//!
+//! A run feeds fully **deterministic** log waves into the input table and
+//! performs one reshard between consecutive waves (optionally injecting
+//! failure drills mid-migration), then drains. Because the input is a pure
+//! function of (wave, partition, message, line) and the analytics fold is
+//! batch-invariant, the drained output table of *any* run over the same
+//! wave plan — resharded or static, drilled or fault-free — must be
+//! byte-identical. That is the scenario's headline assertion, used by
+//! `figure reshard` and the fault-injection suite.
+
+use std::sync::Arc;
+
+use crate::coordinator::processor::ClusterEnv;
+use crate::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+use crate::metrics::hub::names;
+use crate::metrics::WaReport;
+use crate::queue::input_name_table;
+use crate::queue::ordered_table::OrderedTable;
+use crate::reshard::{ReshardPlan, ReshardStats};
+use crate::row;
+use crate::rows::{UnversionedRow, Value};
+use crate::util::yson::Yson;
+use crate::util::Clock;
+use crate::workload::analytics::{
+    analytics_mapper_factory, analytics_reducer_factory, ensure_output_table, OUTPUT_TABLE,
+};
+
+/// Fill one deterministic wave of log messages: fixed timestamps, users
+/// and clusters derived from (wave, partition, message, line) indexes
+/// only. Two fills with the same coordinates are byte-identical, so two
+/// drained pipeline runs can be compared row for row. Returns the ground
+/// truth: the number of lines carrying a user field.
+pub fn fill_deterministic_wave(
+    table: &Arc<OrderedTable>,
+    wave: usize,
+    messages_per_partition: usize,
+) -> i64 {
+    const CLUSTERS: [&str; 3] = ["hahn", "freud", "bohr"];
+    const USERS: [&str; 5] = ["root", "alice", "bob", "carol", "dave"];
+    const METHODS: [&str; 4] = ["GetNode", "SetNode", "Commit", "Heartbeat"];
+
+    let mut user_lines = 0i64;
+    for p in 0..table.tablet_count() {
+        let cluster = CLUSTERS[(p + wave) % CLUSTERS.len()];
+        for m in 0..messages_per_partition {
+            let lines = 3 + (p + m + wave) % 4;
+            let mut payload = String::new();
+            for l in 0..lines {
+                if l > 0 {
+                    payload.push('\n');
+                }
+                // Keep every timestamp below 2^24: the analytics reducer
+                // aggregates per-batch ts *offsets* in f32, and offsets
+                // must stay exactly representable or the reconstructed
+                // last_ts would depend on batching — breaking the
+                // byte-identity this scenario asserts across runs.
+                let ts = 10_000
+                    + (wave as i64) * 4_000_000
+                    + (p as i64) * 500_000
+                    + (m as i64) * 100
+                    + l as i64;
+                let method = METHODS[(p + m + l) % METHODS.len()];
+                if (p + m + l) % 3 == 0 {
+                    let user = USERS[(m + l + wave) % USERS.len()];
+                    payload.push_str(&format!(
+                        "ts={ts} cluster={cluster} method={method} user={user} dur=42"
+                    ));
+                    user_lines += 1;
+                } else {
+                    payload.push_str(&format!(
+                        "ts={ts} cluster={cluster} method={method} dur=42"
+                    ));
+                }
+            }
+            let write_ts = 10_000 + (p as i64) * 1_000_000 + (m as i64) * 100;
+            table
+                .append(p, vec![row![payload, write_ts]])
+                .expect("deterministic wave fill");
+        }
+    }
+    user_lines
+}
+
+/// Scenario knobs.
+#[derive(Debug, Clone)]
+pub struct ElasticCfg {
+    pub partitions: usize,
+    pub initial_reducers: usize,
+    /// Total input waves. **Independent of `reshard_to`** so a static
+    /// baseline (`reshard_to: []`) over the same `waves` ingests input
+    /// byte-identical to a resharded run — the whole point of the
+    /// comparison. Must be > `reshard_to.len()` (each reshard runs after
+    /// one wave, with at least one wave left to drain through the final
+    /// fleet).
+    pub waves: usize,
+    /// Reducer-count targets applied between waves: `[8, 4]` means wave 0
+    /// runs at `initial_reducers`, then a live reshard to 8, wave 1, a
+    /// live reshard to 4, then the remaining waves, drain. Empty = static
+    /// run (the byte-identity baseline).
+    pub reshard_to: Vec<usize>,
+    pub messages_per_wave: usize,
+    pub seed: u64,
+    /// Base timings (worker cadences); counts are overwritten.
+    pub base: ProcessorConfig,
+    /// Wall-clock budget for each migration to drain + finalize.
+    pub reshard_timeout_ms: u64,
+    /// Wall-clock budget for the final drain.
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for ElasticCfg {
+    fn default() -> Self {
+        ElasticCfg {
+            partitions: 4,
+            initial_reducers: 4,
+            waves: 3,
+            reshard_to: vec![8, 4],
+            messages_per_wave: 60,
+            seed: 0xE1A5,
+            base: ProcessorConfig {
+                backoff_ms: 5,
+                trim_period_ms: 100,
+                restart_delay_ms: 100,
+                split_brain_delay_ms: 50,
+                session_ttl_ms: 1_500,
+                heartbeat_period_ms: 100,
+                ..ProcessorConfig::default()
+            },
+            reshard_timeout_ms: 30_000,
+            drain_timeout_ms: 45_000,
+        }
+    }
+}
+
+/// Everything an elastic run leaves behind for assertions and reporting.
+pub struct ElasticOutcome {
+    /// Ground truth: input lines with a user field.
+    pub expected_lines: i64,
+    /// Observed sum of the output `count` column after drain.
+    pub output_lines: i64,
+    /// Full drained output table in key order (byte-identical across
+    /// resharded/drilled/static runs over the same wave plan).
+    pub rows: Vec<UnversionedRow>,
+    pub report: WaReport,
+    /// One entry per completed migration.
+    pub reshards: Vec<ReshardStats>,
+    /// The final persisted plan.
+    pub final_plan: Option<ReshardPlan>,
+    pub retired_reducers: u64,
+    pub bootstrapped_reducers: u64,
+    pub env: ClusterEnv,
+}
+
+/// Sum of the output table's `count` column.
+fn output_count_sum(env: &ClusterEnv) -> i64 {
+    env.store
+        .scan(OUTPUT_TABLE)
+        .map(|rows| {
+            rows.iter()
+                .map(|r| r.get(2).and_then(Value::as_i64).unwrap_or(0))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+fn wait_for_output(env: &ClusterEnv, expected: i64, wall_ms: u64) -> i64 {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wall_ms);
+    let mut last = -1;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let cur = output_count_sum(env);
+        if cur == expected {
+            return cur;
+        }
+        last = cur;
+    }
+    last
+}
+
+/// Run the elastic scenario. `drill` fires once per migration, right
+/// after [`StreamingProcessor::begin_reshard`] — mid-cutover, before the
+/// old fleet finished draining — with `(processor, migration_index)`;
+/// the old fleet is epoch `migration_index`, the incoming fleet epoch
+/// `migration_index + 1` (slot ids via [`crate::reshard::plan::reducer_slot`]).
+pub fn run_elastic(
+    cfg: &ElasticCfg,
+    drill: impl Fn(&StreamingProcessor, usize),
+) -> ElasticOutcome {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    let table = OrderedTable::new(
+        "//input/elastic",
+        input_name_table(),
+        cfg.partitions,
+        env.accounting.clone(),
+    );
+    ensure_output_table(&env.client()).expect("create analytics output table");
+
+    let proc_cfg = ProcessorConfig {
+        mapper_count: cfg.partitions,
+        reducer_count: cfg.initial_reducers,
+        ..cfg.base.clone()
+    };
+    let processor = StreamingProcessor::launch(
+        proc_cfg,
+        env.clone(),
+        InputSpec::Ordered(table.clone()),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .expect("launch elastic processor");
+
+    assert!(
+        cfg.waves > cfg.reshard_to.len(),
+        "need more waves ({}) than reshards ({})",
+        cfg.waves,
+        cfg.reshard_to.len()
+    );
+    // Enforce the generator's f32-exactness precondition up front: the
+    // largest timestamp any wave can emit must stay below 2^24, or the
+    // byte-identity this scenario asserts becomes batching-dependent.
+    let max_ts = 10_000
+        + (cfg.waves.saturating_sub(1) as i64) * 4_000_000
+        + (cfg.partitions.saturating_sub(1) as i64) * 500_000
+        + (cfg.messages_per_wave as i64) * 100
+        + 8;
+    assert!(
+        max_ts < (1 << 24),
+        "wave plan would emit ts {max_ts} >= 2^24; shrink waves/partitions/messages \
+         (f32 ts offsets must stay exactly representable)"
+    );
+    let mut expected = 0i64;
+    let mut reshards = Vec::new();
+    for wave in 0..cfg.waves {
+        expected += fill_deterministic_wave(&table, wave, cfg.messages_per_wave);
+        if let Some(&target) = cfg.reshard_to.get(wave) {
+            // Let the wave start flowing before resizing under it.
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            processor
+                .begin_reshard(target)
+                .expect("begin live reshard");
+            drill(&processor, wave);
+            let stats = processor
+                .finish_reshard(cfg.reshard_timeout_ms)
+                .expect("migration must drain and finalize");
+            reshards.push(stats);
+        }
+    }
+
+    let output_lines = wait_for_output(&env, expected, cfg.drain_timeout_ms);
+    let report = processor.wa_report("elastic analytics");
+    let final_plan = processor.current_plan();
+    let retired = env.metrics.get_counter(names::RESHARD_RETIRED);
+    let bootstrapped = env.metrics.get_counter(names::RESHARD_BOOTSTRAPPED);
+    processor.stop();
+
+    let rows = env.store.scan(OUTPUT_TABLE).unwrap_or_default();
+    ElasticOutcome {
+        expected_lines: expected,
+        output_lines,
+        rows,
+        report,
+        reshards,
+        final_plan,
+        retired_reducers: retired,
+        bootstrapped_reducers: bootstrapped,
+        env,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::WriteAccounting;
+
+    #[test]
+    fn deterministic_wave_is_reproducible() {
+        let acc = WriteAccounting::new();
+        let a = OrderedTable::new("a", input_name_table(), 2, acc.clone());
+        let b = OrderedTable::new("b", input_name_table(), 2, acc);
+        let na = fill_deterministic_wave(&a, 1, 5);
+        let nb = fill_deterministic_wave(&b, 1, 5);
+        assert_eq!(na, nb);
+        assert!(na > 0);
+        // Byte-identical payloads.
+        for p in 0..2 {
+            assert_eq!(a.end_index(p), b.end_index(p));
+            let ra = a.read_tablet(p, 0, a.end_index(p)).unwrap();
+            let rb = b.read_tablet(p, 0, b.end_index(p)).unwrap();
+            assert_eq!(ra, rb);
+        }
+        // Different waves differ.
+        let c = OrderedTable::new("c", input_name_table(), 2, WriteAccounting::new());
+        fill_deterministic_wave(&c, 2, 5);
+        let r1 = a.read_tablet(0, 0, 1).unwrap();
+        let r2 = c.read_tablet(0, 0, 1).unwrap();
+        assert_ne!(r1, r2);
+    }
+}

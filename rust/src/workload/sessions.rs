@@ -58,15 +58,16 @@ pub fn sessions_schema() -> TableSchema {
     ])
 }
 
-/// Create [`SESSIONS_TABLE`] if missing.
-pub fn ensure_sessions_table(client: &Client) {
+/// Create [`SESSIONS_TABLE`] if missing. Drivers call this once up front
+/// and propagate; worker factories re-invoke it best-effort.
+pub fn ensure_sessions_table(client: &Client) -> Result<(), crate::dyntable::store::StoreError> {
     use crate::dyntable::store::StoreError;
     match client
         .store
         .create_table(SESSIONS_TABLE, sessions_schema(), WriteCategory::UserOutput)
     {
-        Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
-        Err(e) => panic!("cannot create sessions table: {e}"),
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => Ok(()),
+        Err(e) => Err(e),
     }
 }
 
@@ -183,7 +184,10 @@ impl Mapper for SessionRouteMapper {
             ) else {
                 continue; // malformed handoff row: drop deterministically
             };
-            partitions.push(hash_partition(&format!("{u}\u{1f}{c}"), self.num_reducers));
+            partitions.push(hash_partition(
+                &crate::api::partitioning::composite_key(&[u, c]),
+                self.num_reducers,
+            ));
             b.push(r.clone());
         }
         PartitionedRowset {
@@ -270,7 +274,9 @@ impl Reducer for SessionAggregateReducer {
 /// `CreateReducer` for the aggregate stage.
 pub fn session_aggregate_reducer_factory() -> ReducerFactory {
     Arc::new(|_cfg: &Yson, client: &Client, _spec: &ReducerSpec| {
-        ensure_sessions_table(client);
+        // Best-effort in the factory (it cannot propagate): a failure here
+        // surfaces as retried lookup errors in the reducer loop.
+        let _ = ensure_sessions_table(client);
         Box::new(SessionAggregateReducer {
             client: client.clone(),
         }) as Box<dyn Reducer>
@@ -397,7 +403,7 @@ mod tests {
     fn aggregate_reducer_folds_batch_invariantly() {
         let env = ClusterEnv::new(Clock::realtime(), 3);
         let client = env.client();
-        ensure_sessions_table(&client);
+        ensure_sessions_table(&client).unwrap();
         let mut r = SessionAggregateReducer {
             client: client.clone(),
         };

@@ -134,49 +134,17 @@ use yt_stream::metrics::PipelineWaReport;
 use yt_stream::rows::UnversionedRow;
 use yt_stream::workload::sessions::{two_stage_topology, SESSIONS_TABLE};
 
-/// Fill an ordered table with *fully deterministic* log messages: fixed
-/// timestamps, users and clusters derived from (partition, message, line)
-/// indexes only. Two fills with the same shape are byte-identical, so the
-/// drained output of two pipeline runs can be compared row for row.
-/// Returns the ground truth: the number of lines carrying a user field.
+/// Fill an ordered table with *fully deterministic* log messages (wave 0
+/// of the shared elastic generator): fixed timestamps, users and clusters
+/// derived from (partition, message, line) indexes only. Two fills with
+/// the same shape are byte-identical, so the drained output of two
+/// pipeline runs can be compared row for row. Returns the ground truth:
+/// the number of lines carrying a user field.
 pub fn fill_deterministic_chain_input(
     table: &Arc<OrderedTable>,
     messages_per_partition: usize,
 ) -> i64 {
-    use yt_stream::row;
-    const CLUSTERS: [&str; 3] = ["hahn", "freud", "bohr"];
-    const USERS: [&str; 5] = ["root", "alice", "bob", "carol", "dave"];
-    const METHODS: [&str; 4] = ["GetNode", "SetNode", "Commit", "Heartbeat"];
-
-    let mut user_lines = 0i64;
-    for p in 0..table.tablet_count() {
-        let cluster = CLUSTERS[p % CLUSTERS.len()];
-        for m in 0..messages_per_partition {
-            let lines = 3 + (p + m) % 4;
-            let mut payload = String::new();
-            for l in 0..lines {
-                if l > 0 {
-                    payload.push('\n');
-                }
-                let ts = 10_000 + (p as i64) * 1_000_000 + (m as i64) * 100 + l as i64;
-                let method = METHODS[(p + m + l) % METHODS.len()];
-                if (p + m + l) % 3 == 0 {
-                    let user = USERS[(m + l) % USERS.len()];
-                    payload.push_str(&format!(
-                        "ts={ts} cluster={cluster} method={method} user={user} dur=42"
-                    ));
-                    user_lines += 1;
-                } else {
-                    payload.push_str(&format!(
-                        "ts={ts} cluster={cluster} method={method} dur=42"
-                    ));
-                }
-            }
-            let write_ts = 10_000 + (p as i64) * 1_000_000 + (m as i64) * 100;
-            table.append(p, vec![row![payload, write_ts]]).unwrap();
-        }
-    }
-    user_lines
+    yt_stream::workload::elastic::fill_deterministic_wave(table, 0, messages_per_partition)
 }
 
 /// Everything a chained run leaves behind for assertions.

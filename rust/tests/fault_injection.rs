@@ -385,6 +385,153 @@ fn chain_drills_in_both_stages_exactly_once() {
 }
 
 #[test]
+fn reshard_grow_and_shrink_under_drills_byte_identical_output() {
+    // The ISSUE acceptance drill: a live N=4→M=8 reshard (then 8→4) with
+    // a reducer killed + duplicated mid-migration and a lossy/duplicating
+    // network underneath, drained to output *byte-identical* to a static
+    // fault-free run over the identical input, with the migration's bytes
+    // accounted as WriteCategory::Reshard.
+    use yt_stream::controller::Role;
+    use yt_stream::reshard::plan::reducer_slot;
+    use yt_stream::reshard::PlanPhase;
+    use yt_stream::storage::WriteCategory;
+    use yt_stream::workload::elastic::{run_elastic, ElasticCfg};
+
+    let cfg = ElasticCfg {
+        partitions: 4,
+        initial_reducers: 4,
+        reshard_to: vec![8, 4],
+        messages_per_wave: 40,
+        seed: 0x4E58,
+        ..ElasticCfg::default()
+    };
+
+    let baseline = run_elastic(
+        &ElasticCfg {
+            reshard_to: vec![],
+            ..cfg.clone()
+        },
+        |_, _| {},
+    );
+    assert_eq!(
+        baseline.output_lines, baseline.expected_lines,
+        "static baseline must drain exactly once"
+    );
+
+    let drilled = run_elastic(&cfg, |processor, migration| {
+        let sup = processor.supervisor().clone();
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.15;
+            f.dup_prob = 0.15;
+        });
+        // Kill an old-fleet reducer mid-migration (controller restarts it)
+        // and race split-brain twins on both fleets.
+        sup.kill(Role::Reducer, reducer_slot(migration as i64, 0));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64, 1));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64 + 1, 0));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.0;
+            f.dup_prob = 0.0;
+        });
+    });
+
+    assert_eq!(
+        drilled.output_lines, drilled.expected_lines,
+        "exactly-once violated across the live reshards"
+    );
+    assert_eq!(
+        drilled.rows, baseline.rows,
+        "drilled elastic output must be byte-identical to the static fault-free run"
+    );
+    assert_eq!(drilled.reshards.len(), 2);
+    assert_eq!(drilled.reshards[0].from_partitions, 4);
+    assert_eq!(drilled.reshards[0].to_partitions, 8);
+    assert_eq!(drilled.reshards[1].from_partitions, 8);
+    assert_eq!(drilled.reshards[1].to_partitions, 4);
+    assert!(
+        drilled.reshards[1].migrated_rows >= drilled.reshards[0].migrated_rows,
+        "migrated-row tally is cumulative"
+    );
+    assert!(drilled.reshards[0].migrated_rows > 0, "residual state must flow");
+    // Every old reducer of both migrations retired exactly once: 4 + 8.
+    assert_eq!(drilled.retired_reducers, 12);
+    // Every incoming reducer bootstrapped exactly once: 8 + 4.
+    assert_eq!(drilled.bootstrapped_reducers, 12);
+    let plan = drilled.final_plan.expect("plan row must exist");
+    assert_eq!(plan.phase, PlanPhase::Stable);
+    assert_eq!(plan.epoch, 2);
+    assert_eq!(plan.partitions, 4);
+    // The honest cost of rescaling is visible on its own WA line.
+    assert!(
+        drilled.report.snapshot.bytes_of(WriteCategory::Reshard) > 0,
+        "migration bytes must be accounted as WriteCategory::Reshard"
+    );
+    assert_eq!(
+        baseline.report.snapshot.bytes_of(WriteCategory::Reshard),
+        0,
+        "a static run pays no reshard bytes"
+    );
+}
+
+#[test]
+fn reshard_survives_driver_interruption_via_resume() {
+    // A migration whose driver dies mid-flight is resumable: the plan row
+    // is the recovery point. Simulate by beginning a reshard, *not*
+    // finalizing, and then resuming from a fresh context.
+    use yt_stream::workload::elastic::{fill_deterministic_wave, ElasticCfg};
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+    use yt_stream::queue::ordered_table::OrderedTable;
+    use yt_stream::queue::input_name_table;
+    use yt_stream::reshard::PlanPhase;
+    use yt_stream::util::yson::Yson;
+    use yt_stream::util::Clock;
+    use yt_stream::workload::analytics::{
+        analytics_mapper_factory, analytics_reducer_factory, ensure_output_table,
+    };
+
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0x4E59);
+    let table = OrderedTable::new("//input/resume", input_name_table(), 3, env.accounting.clone());
+    ensure_output_table(&env.client()).unwrap();
+    let base = ElasticCfg::default().base;
+    let processor = StreamingProcessor::launch(
+        ProcessorConfig {
+            mapper_count: 3,
+            reducer_count: 2,
+            ..base
+        },
+        env.clone(),
+        InputSpec::Ordered(table.clone()),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .unwrap();
+    let expected = fill_deterministic_wave(&table, 0, 30);
+
+    let plan = processor.begin_reshard(4).unwrap();
+    assert_eq!(plan.next_epoch(), 1);
+    // "Driver crash": nobody finalizes for a while; workers carry the
+    // migration anyway (mappers adopt, old fleet drains + retires).
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let stats = processor.resume_reshard(30_000).expect("resume must finalize");
+    assert_eq!(stats.to_partitions, 4);
+    assert_eq!(stats.epoch, 1);
+    assert_eq!(
+        processor.current_plan().unwrap().phase,
+        PlanPhase::Stable,
+        "plan must be stable after resume"
+    );
+
+    let got = wait_for_output(&env, expected, 30_000);
+    processor.stop();
+    assert_eq!(got, expected, "exactly-once across an interrupted migration");
+}
+
+#[test]
 fn at_least_once_mode_never_loses_rows() {
     // §6 relaxed delivery: with split-brain twins racing, the relaxed
     // reducer may duplicate effects but must never lose a row.

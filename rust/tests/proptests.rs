@@ -255,6 +255,100 @@ fn window_bucket_pointer_counts_consistent() {
     );
 }
 
+/// Invariant 5 (elastic resharding): partition ownership is a *total,
+/// exclusive* function over (shuffle index, key) before, during and after
+/// a reshard epoch — no routable row is unowned, none is dual-owned at
+/// commit time, and owners always lie inside their epoch's fleet. Also:
+/// the during-migration map agrees with the before-map below the cutover
+/// and with the after-map at or above it, so finalizing never re-routes.
+#[test]
+fn partition_ownership_total_exclusive_across_reshard() {
+    use yt_stream::api::partitioning;
+    use yt_stream::reshard::{EpochRouting, RouteTarget};
+
+    check_with(
+        Config {
+            cases: 128,
+            base_seed: 0x4E5A,
+        },
+        "reshard ownership total + exclusive",
+        |rng| {
+            let old_n = rng.gen_range(1, 16) as usize;
+            let new_n = rng.gen_range(1, 16) as usize;
+            let prev_cutover = rng.gen_range(0, 500) as i64;
+            let cutover = prev_cutover + rng.gen_range(0, 500) as i64;
+            let epoch = rng.gen_range(1, 5) as i64;
+
+            let before = EpochRouting::stable(epoch - 1, old_n, prev_cutover, 0);
+            let during = EpochRouting {
+                epoch,
+                partitions: new_n,
+                old_partitions: Some(old_n),
+                cutover,
+                prev_cutover,
+            };
+            let after = EpochRouting::stable(epoch, new_n, cutover, prev_cutover);
+
+            for _ in 0..64 {
+                let key = format!("user{}", rng.next_below(1000));
+                let hash = partitioning::key_hash(&key);
+                let s = rng.gen_range(0, 1100) as i64;
+
+                // Totality: every phase routes every (s, key) somewhere.
+                for routing in [&before, &during, &after] {
+                    match routing.route(s, hash) {
+                        RouteTarget::Epoch(e, owner) => {
+                            let fleet = if e == epoch { new_n } else { old_n };
+                            prop_assert!(
+                                owner < fleet,
+                                "owner {owner} outside epoch {e}'s fleet of {fleet}"
+                            );
+                            prop_assert!(
+                                e == epoch || e == epoch - 1,
+                                "routed to an unknown epoch {e}"
+                            );
+                        }
+                        RouteTarget::Committed => {}
+                    }
+                }
+
+                // Exclusivity at commit time: during the migration, a row
+                // is owned by exactly one epoch — and deterministically so
+                // (same inputs, same owner).
+                let d1 = during.route(s, hash);
+                let d2 = during.route(s, hash);
+                prop_assert_eq!(&d1, &d2, "routing must be deterministic");
+                if s >= cutover {
+                    prop_assert!(
+                        matches!(d1, RouteTarget::Epoch(e, _) if e == epoch),
+                        "rows at/above the cutover belong to the new epoch only (s={s})"
+                    );
+                } else if s >= prev_cutover {
+                    prop_assert!(
+                        matches!(d1, RouteTarget::Epoch(e, _) if e == epoch - 1),
+                        "rows in the old window belong to the old epoch only (s={s})"
+                    );
+                } else {
+                    prop_assert_eq!(
+                        &d1,
+                        &RouteTarget::Committed,
+                        "rows below the previous cutover were committed before it"
+                    );
+                }
+
+                // Phase agreement: migration vs after-map at/above the
+                // cutover; migration vs before-map inside the old window.
+                if s >= cutover {
+                    prop_assert_eq!(&d1, &after.route(s, hash));
+                } else if s >= prev_cutover {
+                    prop_assert_eq!(&d1, &before.route(s, hash));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Invariant 4: optimistic transactions serialize read-modify-writes —
 /// concurrent increments with retry lose nothing.
 #[test]

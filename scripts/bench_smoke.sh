@@ -35,6 +35,14 @@ cargo build --release
 echo "== bench_smoke: compile bench targets =="
 cargo bench --no-run
 
+echo "== bench_smoke: figure reshard (live 4->8->4 resize under drills) =="
+# The elastic-resharding figure doubles as an end-to-end smoke: it fails
+# loudly if a live resize loses exactly-once or the migration wedges.
+timeout 600 cargo run --release --quiet -- figure reshard --seconds 5 || {
+    echo "bench_smoke: FAIL — figure reshard did not complete" >&2
+    exit 1
+}
+
 if [ "${1:-}" = "--full" ]; then
     echo "== bench_smoke: full micro_hot_paths suite =="
     cargo bench --bench micro_hot_paths
