@@ -19,6 +19,7 @@ use crate::metrics::{MetricsHub, WaReport};
 use crate::queue::logbroker::LbTopic;
 use crate::queue::ordered_table::OrderedTable;
 use crate::queue::PartitionReader;
+use crate::reshard::driver::{AutoscaleDriver, DriverConfig, DriverDeps};
 use crate::reshard::plan::{reducer_slot, reducer_state_table, PlanPhase, ReshardPlan};
 use crate::reshard::resharder::{self, ReshardContext, ReshardError, ReshardStats};
 use crate::reshard::ReshardRuntime;
@@ -129,6 +130,9 @@ pub struct StreamingProcessor {
     spawn_reducer_slot: Arc<dyn Fn(i64, usize) -> WorkerHandle + Send + Sync>,
     /// Live mapper-slot count (grows on upstream re-wiring).
     mapper_count: Arc<AtomicUsize>,
+    /// The resident autoscale loop, when started ([`StreamingProcessor::
+    /// start_autoscaler`]); stopped with the processor.
+    autoscaler: std::sync::Mutex<Option<AutoscaleDriver>>,
 }
 
 impl StreamingProcessor {
@@ -266,6 +270,7 @@ impl StreamingProcessor {
             spawn_mapper_slot,
             spawn_reducer_slot,
             mapper_count,
+            autoscaler: std::sync::Mutex::new(None),
         })
     }
 
@@ -297,17 +302,71 @@ impl StreamingProcessor {
     }
 
     fn reshard_ctx(&self) -> ReshardContext {
-        let spawn = self.spawn_reducer_slot.clone();
-        ReshardContext {
+        (self.reshard_ctx_factory())()
+    }
+
+    /// A factory the resident driver can hold without borrowing the
+    /// processor: each call snapshots the *current* mapper count (dataflow
+    /// re-wiring changes it mid-life).
+    pub(crate) fn reshard_ctx_factory(&self) -> Arc<dyn Fn() -> ReshardContext + Send + Sync> {
+        let store = self.env.store.clone();
+        let runtime = self.reshard_runtime.clone();
+        let reducer_state_base = self.cfg.reducer_state_table.clone();
+        let mapper_count = self.mapper_count.clone();
+        let supervisor = self.supervisor.clone();
+        let spawn_reducer = self.spawn_reducer_slot.clone();
+        let metrics = self.env.metrics.clone();
+        let scope = self.cfg.scope_label.clone();
+        Arc::new(move || ReshardContext {
+            store: store.clone(),
+            runtime: runtime.clone(),
+            reducer_state_base: reducer_state_base.clone(),
+            num_mappers: mapper_count.load(Ordering::SeqCst),
+            supervisor: supervisor.clone(),
+            spawn_reducer: spawn_reducer.clone(),
+            metrics: metrics.clone(),
+            scope: scope.clone(),
+        })
+    }
+
+    /// Start the resident autoscale loop: every `tick_period_ms` it fuses
+    /// the fleet's lag signals with the input backlog, and executes its
+    /// own proposals through the same begin/finish/resume path as manual
+    /// resharding. A plan left `Migrating` (crashed driver, interrupted
+    /// manual call) is resumed before any new proposal — starting the
+    /// driver is therefore also the crash-recovery action. Replaces a
+    /// previously started driver. Stopped automatically by
+    /// [`StreamingProcessor::stop`].
+    pub fn start_autoscaler(&self, cfg: DriverConfig) {
+        let deps = DriverDeps {
+            clock: self.env.clock.clone(),
             store: self.env.store.clone(),
-            runtime: self.reshard_runtime.clone(),
-            reducer_state_base: self.cfg.reducer_state_table.clone(),
-            num_mappers: self.mapper_count.load(Ordering::SeqCst),
-            supervisor: self.supervisor.clone(),
-            spawn_reducer: Arc::new(move |epoch, index| spawn(epoch, index)),
+            plan_table: self.cfg.reshard_plan_table.clone(),
             metrics: self.env.metrics.clone(),
-            scope: self.cfg.scope_label.clone(),
+            input: self.input.clone(),
+            ctx: self.reshard_ctx_factory(),
+            pre_begin: None,
+            post_stable: None,
+        };
+        let driver = AutoscaleDriver::start(cfg, deps);
+        if let Some(old) = self.autoscaler.lock().unwrap().replace(driver) {
+            old.stop();
         }
+    }
+
+    /// Stop the resident autoscale loop, if one is running. A migration
+    /// it was mid-way through stays `Migrating` in the plan row and is
+    /// picked up by the next driver start (or a manual
+    /// [`StreamingProcessor::resume_reshard`]).
+    pub fn stop_autoscaler(&self) {
+        if let Some(driver) = self.autoscaler.lock().unwrap().take() {
+            driver.stop();
+        }
+    }
+
+    /// Is a resident autoscale loop currently attached?
+    pub fn autoscaler_running(&self) -> bool {
+        self.autoscaler.lock().unwrap().is_some()
     }
 
     /// Start a live reshard towards `new_count` reducers. Returns the
@@ -339,10 +398,20 @@ impl StreamingProcessor {
 
     /// Grow the mapper fleet to `new_count` (used by dataflow re-wiring
     /// when an upstream stage reshards its handoff partitioning; the input
-    /// spec must already expose the new partitions). No-op when not
-    /// larger.
+    /// spec must already expose the new partitions). Previously retired
+    /// slots below `new_count` are revived (their state-row `retired` flag
+    /// cleared *before* the worker respawns, so reducers re-include the
+    /// index in their drain gates no later than it can serve rows again).
     pub fn grow_mappers(&self, new_count: usize) {
         let old = self.mapper_count.load(Ordering::SeqCst);
+        for index in 0..new_count.min(old) {
+            if self.supervisor.has_slot(Role::Mapper, index)
+                && !self.supervisor.is_active(Role::Mapper, index)
+            {
+                self.set_mapper_retired_flag(index, false);
+                self.supervisor.revive(Role::Mapper, index);
+            }
+        }
         if new_count <= old {
             return;
         }
@@ -365,9 +434,49 @@ impl StreamingProcessor {
     }
 
     /// Retire one mapper slot (downstream shrink re-wiring: its upstream
-    /// handoff tablet went quiet and drained).
+    /// handoff tablet went quiet and drained). Kills the worker, disables
+    /// its respawn, then CAS-marks its state row `retired` so reducer
+    /// drain gates drop the index — without the flag, the dead index would
+    /// block every later reshard of this stage's reducers (shrink
+    /// hygiene).
     pub fn retire_mapper(&self, index: usize) {
         self.supervisor.retire(Role::Mapper, index);
+        self.set_mapper_retired_flag(index, true);
+    }
+
+    /// CAS the `retired` column of one mapper state row. The retired
+    /// instance is already dead (or, on revival, not yet respawned), so
+    /// contention is limited to its last in-flight trim commit — a short
+    /// retry absorbs it. A *missing* row (a grown mapper killed before
+    /// its lazy startup write) is created retired: leaving no row would
+    /// leave the index looking live to reducer drain gates forever —
+    /// exactly the deadlock the flag exists to prevent.
+    fn set_mapper_retired_flag(&self, index: usize, retired: bool) {
+        for _ in 0..64 {
+            let mut txn = self.env.store.begin();
+            let state = match txn.lookup(&self.cfg.mapper_state_table, &MapperState::key(index)) {
+                Ok(Some(row)) => MapperState::from_row(&row),
+                Ok(None) if retired => Some(MapperState::initial()),
+                Ok(None) => return, // nothing to clear
+                Err(_) => {
+                    self.env.clock.sleep_ms(2);
+                    continue;
+                }
+            };
+            let Some(mut state) = state else { return };
+            if state.retired == retired {
+                return;
+            }
+            state.retired = retired;
+            if txn
+                .write(&self.cfg.mapper_state_table, state.to_row(index))
+                .is_ok()
+                && txn.commit().is_ok()
+            {
+                return;
+            }
+            self.env.clock.sleep_ms(2);
+        }
     }
 
     /// Total input payload bytes mappers have read so far.
@@ -382,9 +491,17 @@ impl StreamingProcessor {
         WaReport::new(label, self.ingested_bytes(), self.env.accounting.snapshot())
     }
 
+    /// Stop the resident autoscaler (if any), all workers, and the
+    /// supervisor, without consuming the handle — what `Arc`-shared
+    /// owners (topology autoscalers) call.
+    pub fn shutdown(&self) {
+        self.stop_autoscaler();
+        self.supervisor.stop();
+    }
+
     /// Stop all workers and the supervisor. Consumes the processor.
     pub fn stop(self) {
-        self.supervisor.stop();
+        self.shutdown();
     }
 }
 

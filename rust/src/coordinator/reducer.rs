@@ -394,40 +394,75 @@ impl ReducerRt {
         }
     }
 
-    /// Is this reducer's epoch fully drained on every mapper? Requires a
-    /// `drained` response (empty, flag set) from *every* known mapper
-    /// index in this cycle's fetch results. "Known" is the max of the
-    /// spec, the live discovery listing, and `min_mappers` — the caller's
-    /// high-water mark of indexes ever fetched from, so a grown-fleet
-    /// mapper whose discovery session lapsed (crash + TTL expiry) cannot
-    /// silently drop out of the retirement gate while it may still hold
-    /// undrained rows.
-    pub(crate) fn ready_to_retire(&self, fetches: &[FetchResult], min_mappers: usize) -> bool {
-        let Ok(members) = self.deps.mapper_discovery.list() else {
-            return false;
-        };
+    /// Is this reducer's epoch fully drained on every *live* mapper?
+    /// Requires a `drained` response (empty, flag set) from every known
+    /// mapper index in this cycle's fetch results. "Known" is the max of
+    /// the spec, the live discovery listing, and `min_mappers` — the
+    /// caller's high-water mark of indexes ever fetched from, so a
+    /// grown-fleet mapper whose discovery session lapsed (crash + TTL
+    /// expiry) cannot silently drop out of the retirement gate while it
+    /// may still hold undrained rows.
+    ///
+    /// Indexes whose mapper state row carries the `retired` flag are
+    /// excluded: a decommissioned slot (e.g. a downstream fleet shrunk
+    /// after an upstream reshard) was only retired once its partition
+    /// drained for good, so it can hold no rows for any epoch — and it
+    /// will never answer a fetch again, so gating on the historical
+    /// high-water mark would deadlock every later reshard of this stage.
+    /// Returns the retired index set on success so the retirement
+    /// transaction can re-validate it (a racing revival must conflict).
+    pub(crate) fn ready_to_retire(
+        &self,
+        fetches: &[FetchResult],
+        min_mappers: usize,
+    ) -> Option<Vec<usize>> {
+        let members = self.deps.mapper_discovery.list().ok()?;
         let n = members
             .iter()
             .map(|m| m.index + 1)
             .fold(self.spec.num_mappers.max(min_mappers) as i64, i64::max)
             .max(0) as usize;
         if n == 0 {
-            return false;
+            return None;
         }
+        let mut dead = Vec::new();
         let mut drained = vec![false; n];
+        for index in 0..n {
+            let state = self
+                .deps
+                .client
+                .store
+                .lookup(&self.cfg.mapper_state_table, &MapperState::key(index))
+                .ok()?
+                .as_ref()
+                .and_then(MapperState::from_row);
+            if state.is_some_and(|s| s.retired) {
+                dead.push(index);
+                drained[index] = true;
+            }
+        }
         for f in fetches {
             if f.rsp.drained && f.rsp.row_count == 0 && f.mapper_index < n {
                 drained[f.mapper_index] = true;
             }
         }
-        drained.iter().all(|&d| d)
+        drained.iter().all(|&d| d).then_some(dead)
     }
 
     /// The retirement transaction: CAS this reducer's state row to
     /// retired and `append_ordered` its residual state into the migration
-    /// handoff table, atomically. Returns true when this instance won the
-    /// retirement (it must then exit).
-    pub(crate) fn try_retire(&self, state: &ReducerState, plan: &ReshardPlan) -> bool {
+    /// handoff table, atomically. `dead_mappers` is the retired index set
+    /// the drain gate observed — each row joins the read set, so a mapper
+    /// slot revived between the gate and this commit conflicts us into a
+    /// re-check instead of retiring against rows that may reappear.
+    /// Returns true when this instance won the retirement (it must then
+    /// exit).
+    pub(crate) fn try_retire(
+        &self,
+        state: &ReducerState,
+        plan: &ReshardPlan,
+        dead_mappers: &[usize],
+    ) -> bool {
         if plan.phase != PlanPhase::Migrating || plan.epoch != self.spec.epoch {
             return false;
         }
@@ -440,6 +475,14 @@ impl ReducerRt {
         match txn.lookup(&self.deps.reshard.plan_table, &ReshardPlan::key()) {
             Ok(Some(row)) if ReshardPlan::from_row(&row).as_ref() == Some(plan) => {}
             _ => return false,
+        }
+        // Every mapper the drain gate skipped must still be retired.
+        for &index in dead_mappers {
+            match txn.lookup(&self.cfg.mapper_state_table, &MapperState::key(index)) {
+                Ok(Some(row))
+                    if MapperState::from_row(&row).is_some_and(|s| s.retired) => {}
+                _ => return false,
+            }
         }
         // CAS base: our state must be exactly what we drained against.
         match txn.lookup(&self.spec.state_table, &ReducerState::key(self.spec.index)) {
@@ -619,12 +662,12 @@ fn run_reducer_serial(
             // A drained old-epoch reducer retires: final transaction flips
             // its state to retired and exports its residual rows.
             if let Some(plan) = rt.fetch_plan() {
-                if plan.phase == PlanPhase::Migrating
-                    && plan.epoch == rt.spec.epoch
-                    && rt.ready_to_retire(&fetches, max_mapper_seen)
-                    && rt.try_retire(&state, &plan)
-                {
-                    return;
+                if plan.phase == PlanPhase::Migrating && plan.epoch == rt.spec.epoch {
+                    if let Some(dead) = rt.ready_to_retire(&fetches, max_mapper_seen) {
+                        if rt.try_retire(&state, &plan, &dead) {
+                            return;
+                        }
+                    }
                 }
             }
             continue;

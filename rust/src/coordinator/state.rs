@@ -8,9 +8,11 @@
 //! `prev_cutover_index`: the partition-map epoch this mapper routes for
 //! and the shuffle-index boundaries of the current epoch transition
 //! (rows in `[prev_cutover, cutover)` belong to the previous epoch's
-//! partition map, rows `>= cutover` to the current one). The columns are
-//! CAS-updated like everything else, so split-brain twins always agree on
-//! where the partition map changed.
+//! partition map, rows `>= cutover` to the current one) and `retired`
+//! (this mapper slot was drained and decommissioned; reducers exclude it
+//! from their drain gate). The columns are CAS-updated like everything
+//! else, so split-brain twins always agree on where the partition map
+//! changed.
 //!
 //! Reducer state table columns: `reducer_index` (key),
 //! `committed_row_indices` — "a list of shuffle row indices, one for each
@@ -43,6 +45,13 @@ pub struct MapperState {
     /// fully committed before the previous reshard finalized and are
     /// never re-routed.
     pub prev_cutover_index: i64,
+    /// This mapper slot was retired (its partition drained for good —
+    /// e.g. a downstream fleet shrank after an upstream reshard). Set by
+    /// a CAS write in [`crate::coordinator::StreamingProcessor::retire_mapper`];
+    /// reducers gate their drain check on the *live* (non-retired) set,
+    /// so a dead index can never block a later reshard. Cleared (CAS)
+    /// before the slot is revived.
+    pub retired: bool,
 }
 
 impl MapperState {
@@ -54,6 +63,7 @@ impl MapperState {
             epoch: 0,
             cutover_index: 0,
             prev_cutover_index: 0,
+            retired: false,
         }
     }
 
@@ -66,6 +76,7 @@ impl MapperState {
             ColumnSchema::value("epoch", ColumnType::Int64),
             ColumnSchema::value("cutover_index", ColumnType::Int64),
             ColumnSchema::value("prev_cutover_index", ColumnType::Int64),
+            ColumnSchema::value("retired", ColumnType::Int64),
         ])
     }
 
@@ -78,6 +89,7 @@ impl MapperState {
             Value::Int64(self.epoch),
             Value::Int64(self.cutover_index),
             Value::Int64(self.prev_cutover_index),
+            Value::Int64(self.retired as i64),
         ])
     }
 
@@ -89,6 +101,7 @@ impl MapperState {
             epoch: row.get(4)?.as_i64()?,
             cutover_index: row.get(5)?.as_i64()?,
             prev_cutover_index: row.get(6)?.as_i64()?,
+            retired: row.get(7)?.as_i64()? != 0,
         })
     }
 
@@ -200,6 +213,7 @@ mod tests {
             epoch: 2,
             cutover_index: 80,
             prev_cutover_index: 30,
+            retired: true,
         };
         let row = s.to_row(3);
         MapperState::schema().validate(&row).unwrap();
@@ -215,6 +229,7 @@ mod tests {
         assert_eq!(s.epoch, 0);
         assert_eq!(s.cutover_index, 0);
         assert_eq!(s.prev_cutover_index, 0);
+        assert!(!s.retired, "mappers are born live");
     }
 
     #[test]

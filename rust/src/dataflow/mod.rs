@@ -31,11 +31,17 @@
 //!   scope; [`topology::RunningTopology::wa_report`] renders per-stage WA
 //!   factors plus an end-to-end factor whose denominator is only the
 //!   original source ingest.
+//! * **Elasticity** — [`topology::RunningTopology::reshard_stage`] resizes
+//!   one stage's reducer fleet live and re-wires the adjacent stages; the
+//!   resident [`topology::TopologyAutoscaler`] runs the fused lag+backlog
+//!   policy loop ([`crate::reshard::driver`]) over *every* stage, each
+//!   against its own metrics scope.
 
 pub mod sink;
 pub mod topology;
 
 pub use sink::{EmitReducer, EmitterFactory, FnEmitReducer};
 pub use topology::{
-    RunningTopology, StageHandle, StageReduce, StageSpec, Topology, TopologyError,
+    RunningTopology, StageHandle, StageReduce, StageSpec, Topology, TopologyAutoscaler,
+    TopologyError,
 };

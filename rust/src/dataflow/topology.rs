@@ -482,6 +482,33 @@ impl RunningTopology {
         Ok(stats)
     }
 
+    /// Resume stage `k`'s interrupted migration (crashed driver / timed-out
+    /// [`RunningTopology::reshard_stage`]): re-grow the handoff to the
+    /// in-flight target (idempotent — the interrupted driver may have died
+    /// before the re-wiring), resume the migration, then re-wire the
+    /// downstream mapper fleet against the now-stable count.
+    pub fn resume_stage(
+        &self,
+        stage_index: usize,
+        wall_timeout_ms: u64,
+    ) -> Result<crate::reshard::ReshardStats, crate::reshard::ReshardError> {
+        use crate::reshard::PlanPhase;
+
+        let stage = &self.stages[stage_index];
+        if let (Some(h), Some(plan)) = (&stage.handoff, stage.processor.current_plan()) {
+            if plan.phase == PlanPhase::Migrating {
+                h.ensure_tablets(plan.next_partitions);
+            }
+        }
+        let stats = stage.processor.resume_reshard(wall_timeout_ms)?;
+        if stage.handoff.is_some() && stage_index + 1 < self.stages.len() {
+            self.stages[stage_index + 1]
+                .processor
+                .grow_mappers(stats.to_partitions);
+        }
+        Ok(stats)
+    }
+
     /// After a shrink of stage `k`, retire downstream mapper slots whose
     /// handoff tablet went quiet (no longer written) and fully drained.
     /// Returns how many were retired this call; safe to poll. A tablet is
@@ -543,14 +570,115 @@ impl RunningTopology {
         PipelineWaReport { stages, total }
     }
 
+    /// Stop every stage's fleet without consuming the handle — what
+    /// `Arc`-shared owners (a [`TopologyAutoscaler`] caller) use; query
+    /// the env afterwards via [`RunningTopology::env`].
+    pub fn shutdown(&self) {
+        for s in &self.stages {
+            s.processor.shutdown();
+        }
+    }
+
     /// Stop every stage's fleet; returns the shared env for post-mortem
     /// queries.
     pub fn stop(self) -> ClusterEnv {
-        let env = self.env.clone();
-        for s in self.stages {
-            s.processor.stop();
+        self.shutdown();
+        self.env
+    }
+}
+
+/// The resident *topology-wide* autoscale loop: one fused lag+backlog
+/// policy instance per stage, each reading that stage's private metrics
+/// hub and input backlog, all proposals executed through the same
+/// stage-re-wiring path as [`RunningTopology::reshard_stage`] — an
+/// intermediate stage's handoff table grows before its new fleet serves,
+/// and the downstream mapper fleet re-specs after the migration
+/// finalizes. After every sweep the loop also retires downstream mapper
+/// slots whose handoff tablet went quiet (post-shrink hygiene), so a
+/// shrunk chain converges to its minimal fleet without operator help.
+///
+/// Crash-resumable like the single-stage driver: any stage whose plan row
+/// was left `Migrating` is resumed (with its re-wiring) before new
+/// proposals, so starting the autoscaler doubles as topology-wide reshard
+/// recovery.
+pub struct TopologyAutoscaler {
+    inner: crate::reshard::driver::LoopHandle,
+}
+
+impl TopologyAutoscaler {
+    /// Spawn the loop over every stage of `topo`. One shared
+    /// [`crate::reshard::DriverConfig`] applies to all stages.
+    pub fn start(
+        topo: Arc<RunningTopology>,
+        cfg: crate::reshard::DriverConfig,
+    ) -> TopologyAutoscaler {
+        TopologyAutoscaler {
+            inner: crate::reshard::driver::LoopHandle::spawn("topology-autoscaler", move |stop| {
+                run_topology_autoscaler(&topo, &cfg, stop)
+            }),
         }
-        env
+    }
+
+    /// Signal the loop to exit and join it. Stages left `Migrating` are
+    /// resumed by the next start (or manual [`RunningTopology::resume_stage`]).
+    pub fn stop(&self) {
+        self.inner.stop();
+    }
+}
+
+fn run_topology_autoscaler(
+    topo: &Arc<RunningTopology>,
+    cfg: &crate::reshard::DriverConfig,
+    stop: &std::sync::atomic::AtomicBool,
+) {
+    use crate::reshard::driver::{drive_stage_tick, DriverDeps};
+    use crate::reshard::Autoscaler;
+
+    let clock = topo.env.clock.clone();
+    let mut scalers: Vec<Autoscaler> = topo
+        .stages
+        .iter()
+        .map(|_| Autoscaler::new(cfg.autoscaler.clone()))
+        .collect();
+    // Per-stage deps, built once: the ctx factory snapshots live mapper
+    // counts per use, and the hooks encode the stage coupling.
+    let deps: Vec<DriverDeps> = (0..topo.stages.len())
+        .map(|k| {
+            let stage = &topo.stages[k];
+            let pre_begin = stage.handoff.clone().map(|h| {
+                Arc::new(move |n: usize| h.ensure_tablets(n)) as Arc<dyn Fn(usize) + Send + Sync>
+            });
+            let post_stable = (stage.handoff.is_some() && k + 1 < topo.stages.len()).then(|| {
+                let topo = topo.clone();
+                Arc::new(move |n: usize| topo.stages[k + 1].processor.grow_mappers(n))
+                    as Arc<dyn Fn(usize) + Send + Sync>
+            });
+            DriverDeps {
+                clock: clock.clone(),
+                store: topo.env.store.clone(),
+                plan_table: stage.processor.cfg.reshard_plan_table.clone(),
+                metrics: stage.metrics().clone(),
+                input: stage.processor.input.clone(),
+                ctx: stage.processor.reshard_ctx_factory(),
+                pre_begin,
+                post_stable,
+            }
+        })
+        .collect();
+
+    while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+        for (k, stage_deps) in deps.iter().enumerate() {
+            if stop.load(std::sync::atomic::Ordering::SeqCst) {
+                return;
+            }
+            drive_stage_tick(cfg, stage_deps, &mut scalers[k], stop);
+            // Post-shrink hygiene: downstream mapper slots whose handoff
+            // tablet drained for good are retired (their state row gets
+            // the CAS'd `retired` flag, unblocking later reducer reshards
+            // of the downstream stage).
+            topo.retire_quiet_downstream_mappers(k);
+        }
+        clock.sleep_ms(cfg.tick_period_ms);
     }
 }
 

@@ -30,6 +30,9 @@ pub struct FigureOpts {
     pub compute: ComputeMode,
     /// Scale multiplier on mappers (scale sweep).
     pub seed: u64,
+    /// Hands-off mode for `figure reshard`: the resident autoscale driver
+    /// performs every resize (no manual `reshard()` calls).
+    pub auto: bool,
 }
 
 impl Default for FigureOpts {
@@ -38,6 +41,7 @@ impl Default for FigureOpts {
             sim_seconds: 40,
             compute: ComputeMode::Native,
             seed: 0xE7A1,
+            auto: false,
         }
     }
 }
@@ -53,6 +57,7 @@ pub fn run_figure(id: &str, opts: &FigureOpts) {
         "scale" => table_scale(opts),
         "spill" => ablation_spill(opts),
         "chain" => table_chain(opts),
+        "reshard" if opts.auto => table_reshard_auto(opts),
         "reshard" => table_reshard(opts),
         other => {
             eprintln!(
@@ -583,6 +588,7 @@ fn table_reshard(opts: &FigureOpts) {
         cooldown_ms: 2_000,
         min_reducers: 2,
         max_reducers: 8,
+        ..AutoscalerConfig::default()
     });
     println!("t_ms,backlog_rows,reducers,decision");
     let mut executed = None;
@@ -601,6 +607,9 @@ fn table_reshard(opts: &FigureOpts) {
         if let (Some(d), None) = (decision, executed) {
             match scenario.processor.reshard(d.to, 20_000) {
                 Ok(stats) => {
+                    // The reshard began: only now arm the policy cooldown
+                    // (a rejected proposal would be retried instead).
+                    scaler.acknowledge(scenario.env.clock.now_ms());
                     executed = Some(stats.to_partitions);
                     println!("# executed proposal: now {} reducers (epoch {})", d.to, stats.epoch);
                 }
@@ -617,6 +626,200 @@ fn table_reshard(opts: &FigureOpts) {
             None => "made no proposal within the window (backlog stayed in band)".into(),
         }
     );
+}
+
+/// Hands-off elastic-resharding figure (`figure reshard --auto`): the
+/// resident autoscale driver — fusing read-lag / commit-latency series
+/// with retained-row backlog — performs a live grow and a shrink entirely
+/// on its own (no manual `reshard()` calls), under the same
+/// kill/duplicate/lossy-net drills as the manual figure, with the drained
+/// output compared byte-for-byte against a static fault-free run. A
+/// second section replays the shrink-hygiene regression topology-wide: a
+/// two-stage chain shrinks its upstream stage, retires the now-quiet
+/// downstream mapper slots, and the resident [`TopologyAutoscaler`] then
+/// shrinks the downstream *reducers* — which deadlocked before the
+/// live-mapper drain gate fix.
+fn table_reshard_auto(opts: &FigureOpts) {
+    use crate::controller::Role;
+    use crate::dataflow::TopologyAutoscaler;
+    use crate::reshard::plan::reducer_slot;
+    use crate::reshard::{AutoscalerConfig, DriverConfig, PlanPhase};
+    use crate::storage::WriteCategory;
+    use crate::workload::elastic::{auto_driver_config, run_elastic, run_elastic_auto, ElasticCfg};
+    use std::sync::Arc;
+
+    println!("# table reshard --auto: unattended grow+shrink by the resident lag+backlog driver");
+    let cfg = ElasticCfg {
+        seed: opts.seed,
+        reshard_to: vec![],
+        ..ElasticCfg::default()
+    };
+
+    // Static fault-free baseline over the identical wave plan.
+    let baseline = run_elastic(&cfg, |_, _| {});
+
+    // The hands-off run: every resize is decided and executed by the
+    // resident driver; the drill fires on each migration it starts.
+    let elastic = run_elastic_auto(&cfg, auto_driver_config(&cfg), |processor, migration| {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let sup = processor.supervisor().clone();
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.1;
+            f.dup_prob = 0.1;
+        });
+        let old = reducer_slot(migration as i64, 0);
+        if sup.has_slot(Role::Reducer, old) {
+            sup.kill(Role::Reducer, old);
+        }
+        let incoming = reducer_slot(migration as i64 + 1, 0);
+        if sup.has_slot(Role::Reducer, incoming) {
+            sup.duplicate(Role::Reducer, incoming);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.0;
+            f.dup_prob = 0.0;
+        });
+    });
+
+    let m = &elastic.env.metrics;
+    let (proposals, grows, shrinks, rejected, resumes) = (
+        m.get_counter(names::AUTOSCALE_PROPOSALS),
+        m.get_counter(names::AUTOSCALE_GROWS),
+        m.get_counter(names::AUTOSCALE_SHRINKS),
+        m.get_counter(names::AUTOSCALE_REJECTED),
+        m.get_counter(names::AUTOSCALE_RESUMES),
+    );
+    println!(
+        "autoscale: proposals={proposals} grows={grows} shrinks={shrinks} \
+         rejected={rejected} resumes={resumes}"
+    );
+    println!(
+        "elastic: expected={} output={} retired={} bootstrapped={} final_plan={:?}",
+        elastic.expected_lines,
+        elastic.output_lines,
+        elastic.retired_reducers,
+        elastic.bootstrapped_reducers,
+        elastic.final_plan,
+    );
+    println!("{}", elastic.report);
+    let identical = elastic.rows == baseline.rows;
+    let exact = identical && elastic.output_lines == elastic.expected_lines;
+    let settled = elastic
+        .final_plan
+        .as_ref()
+        .is_some_and(|p| p.phase == PlanPhase::Stable);
+    println!(
+        "byte-identity: hands-off drilled output == static fault-free output: {identical} \
+         ({} rows vs {} rows)",
+        elastic.rows.len(),
+        baseline.rows.len(),
+    );
+    println!(
+        "summary: driver performed {grows} grow(s) + {shrinks} shrink(s) unattended, \
+         WA = {:.4} with {} reshard bytes; output {}",
+        elastic.report.factor(),
+        elastic.report.snapshot.bytes_of(WriteCategory::Reshard),
+        if exact {
+            "byte-identical to the static run (exactly-once held, zero manual reshard calls)"
+        } else {
+            "MISMATCH — exactly-once violated"
+        },
+    );
+    if !exact || !settled || grows < 1 || shrinks < 1 {
+        eprintln!(
+            "figure reshard --auto: FAIL — exact={exact} settled={settled} \
+             grows={grows} shrinks={shrinks}"
+        );
+        std::process::exit(1);
+    }
+
+    // --- topology: shrink-hygiene regression, resident loop -------------
+    // Shrink the upstream stage, retire the downstream mappers its quiet
+    // tablets orphaned, then let the TopologyAutoscaler shrink the
+    // downstream reducers past the dead indexes.
+    println!("## topology: reducer shrink after a downstream mapper-fleet shrink");
+    use crate::workload::sessions::two_stage_topology;
+    const PARTITIONS: usize = 4;
+    let clock = Clock::scaled(8);
+    let env = ClusterEnv::new(clock.clone(), opts.seed);
+    let source_table = OrderedTable::new(
+        "//input/auto_topo",
+        input_name_table(),
+        PARTITIONS,
+        env.accounting.clone(),
+    );
+    fill_static_input(&source_table, &clock, 120, opts.seed);
+    let base = crate::coordinator::ProcessorConfig {
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        ..crate::coordinator::ProcessorConfig::default()
+    };
+    let topo = two_stage_topology(base, PARTITIONS, 4, 2, opts.compute);
+    let running = Arc::new(
+        topo.launch(&env, InputSpec::Ordered(source_table))
+            .expect("launch topology"),
+    );
+    let drained = running.wait_drained(60_000);
+    running
+        .reshard_stage(0, 2, 30_000)
+        .expect("shrink upstream stage");
+    let mut mappers_retired = 0;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while mappers_retired < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        mappers_retired += running.retire_quiet_downstream_mappers(0);
+    }
+    println!(
+        "topology: drained={drained} upstream 4->2, downstream mappers retired={mappers_retired}"
+    );
+
+    // Everything is idle now: the resident loop reads it as
+    // over-provisioning and shrinks both stages to the floor — the
+    // downstream reducer migration must drain past the retired mapper
+    // indexes (the regression).
+    let scaler = TopologyAutoscaler::start(
+        running.clone(),
+        DriverConfig {
+            autoscaler: AutoscalerConfig {
+                backlog_high_per_reducer: 1e9,
+                backlog_low_per_reducer: 1.0,
+                hysteresis_ticks: 2,
+                cooldown_ms: 500,
+                min_reducers: 1,
+                max_reducers: 4,
+                ..AutoscalerConfig::default()
+            },
+            tick_period_ms: 100,
+            signal_window_ms: 1_500,
+            reshard_timeout_ms: 30_000,
+        },
+    );
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let mut shrunk = false;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        if running
+            .stage(1)
+            .processor
+            .current_plan()
+            .is_some_and(|p| p.phase == PlanPhase::Stable && p.partitions == 1)
+        {
+            shrunk = true;
+            break;
+        }
+    }
+    scaler.stop();
+    running.shutdown();
+    println!(
+        "summary: downstream reducer shrink with a previously-shrunk mapper fleet: {}",
+        if shrunk { "PASS (no drain-gate deadlock)" } else { "FAIL" }
+    );
+    if !shrunk {
+        eprintln!("figure reshard --auto: FAIL — downstream reducer shrink deadlocked");
+        std::process::exit(1);
+    }
 }
 
 /// Spill ablation (§6): reducer outage with spill off vs on.

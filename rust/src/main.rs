@@ -1,8 +1,10 @@
 //! `yt-stream` CLI — launcher and evaluation harness.
 //!
 //! ```text
-//! yt-stream figure <id> [--seconds N] [--compute native|hlo] [--seed N]
+//! yt-stream figure <id> [--seconds N] [--compute native|hlo] [--seed N] [--auto]
 //!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard
+//!     (--auto: hands-off `figure reshard` — the resident autoscale driver
+//!      performs the resizes, no manual reshard() calls)
 //! yt-stream run [--config path.yson] [--seconds N]
 //!     run the log-analytics streaming processor and print live stats
 //! yt-stream selfcheck
@@ -40,7 +42,7 @@ fn main() {
         _ => {
             eprintln!(
                 "yt-stream — streaming MapReduce with low write amplification\n\
-                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard> [--seconds N] [--compute native|hlo] [--seed N]\n\
+                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard> [--seconds N] [--compute native|hlo] [--seed N] [--auto]\n\
                  \x20 yt-stream run [--config path.yson] [--seconds N] [--compute native|hlo]\n\
                  \x20 yt-stream selfcheck"
             );
@@ -68,6 +70,7 @@ fn parse_common(rest: &[String], opts: &mut FigureOpts) {
                     _ => ComputeMode::Native,
                 }
             }
+            "--auto" => opts.auto = true,
             "--config" => {
                 let _ = it.next();
             }

@@ -65,6 +65,31 @@ impl MetricsHub {
         names.sort();
         names
     }
+
+    /// Worst (max) per-series mean over `[from_ms, now]` across every
+    /// series named `<prefix>…<suffix>` — the lag-aggregation query the
+    /// autoscale driver runs each tick. `None` when no matching series
+    /// has a sample in the window (e.g. a drained input: no reads, no
+    /// lag — which the policy deliberately treats as "not overloaded").
+    pub fn max_mean_since(&self, prefix: &str, suffix: &str, from_ms: u64) -> Option<f64> {
+        let g = self.series.lock().unwrap();
+        g.iter()
+            .filter(|(k, _)| k.starts_with(prefix) && k.ends_with(suffix))
+            .filter_map(|(_, s)| s.mean_since(from_ms))
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Fleet-wide read-lag signal: worst per-mapper `read_lag_ms` mean
+    /// since `from_ms`.
+    pub fn read_lag_signal(&self, from_ms: u64) -> Option<f64> {
+        self.max_mean_since("mapper/", "/read_lag_ms", from_ms)
+    }
+
+    /// Fleet-wide commit-latency signal: worst per-reducer
+    /// `commit_latency_ms` mean since `from_ms`.
+    pub fn commit_latency_signal(&self, from_ms: u64) -> Option<f64> {
+        self.max_mean_since("reducer/", "/commit_latency_ms", from_ms)
+    }
 }
 
 /// Well-known metric name builders, so workers and figures agree.
@@ -106,6 +131,11 @@ pub mod names {
     pub const RESHARD_BOOTSTRAPPED: &str = "reshard/reducers_bootstrapped_total";
     pub const RESHARD_ADOPTIONS: &str = "reshard/mapper_cutovers_adopted_total";
     pub const RESHARD_COMMIT_FENCED: &str = "reshard/commits_fenced_total";
+    pub const AUTOSCALE_PROPOSALS: &str = "autoscale/proposals_total";
+    pub const AUTOSCALE_GROWS: &str = "autoscale/grows_executed_total";
+    pub const AUTOSCALE_SHRINKS: &str = "autoscale/shrinks_executed_total";
+    pub const AUTOSCALE_REJECTED: &str = "autoscale/proposals_rejected_total";
+    pub const AUTOSCALE_RESUMES: &str = "autoscale/migrations_resumed_total";
 }
 
 #[cfg(test)]
@@ -139,6 +169,22 @@ mod tests {
         let lags = h.series_with_prefix("mapper/");
         assert_eq!(lags.len(), 2);
         assert!(lags[0].name() < lags[1].name());
+    }
+
+    #[test]
+    fn lag_aggregation_queries() {
+        let h = MetricsHub::new();
+        h.series(&names::mapper_read_lag(0)).record(100, 50.0);
+        h.series(&names::mapper_read_lag(1)).record(100, 400.0);
+        h.series(&names::mapper_read_lag(1)).record(200, 600.0);
+        // Unrelated mapper series must not pollute the lag signal.
+        h.series(&names::mapper_window_bytes(0)).record(100, 1e9);
+        assert_eq!(h.read_lag_signal(0), Some(500.0), "max of per-series means");
+        assert_eq!(h.read_lag_signal(150), Some(600.0), "window skips old samples");
+        assert_eq!(h.read_lag_signal(300), None, "no samples in window");
+        assert_eq!(h.commit_latency_signal(0), None, "no reducer committed yet");
+        h.series(&names::reducer_commit_latency(3)).record(50, 75.0);
+        assert_eq!(h.commit_latency_signal(0), Some(75.0));
     }
 
     #[test]

@@ -86,10 +86,12 @@ pub(crate) fn run_reducer_pipelined(
                     if let Some(plan) = rt.fetch_plan() {
                         if plan.phase == crate::reshard::plan::PlanPhase::Migrating
                             && plan.epoch == rt.spec.epoch
-                            && rt.ready_to_retire(&fetches, max_mapper_seen)
-                            && rt.try_retire(&state, &plan)
                         {
-                            return;
+                            if let Some(dead) = rt.ready_to_retire(&fetches, max_mapper_seen) {
+                                if rt.try_retire(&state, &plan, &dead) {
+                                    return;
+                                }
+                            }
                         }
                     }
                     clock.sleep_ms(rt.cfg.backoff_ms);

@@ -1,21 +1,66 @@
-//! Backlog-driven autoscaling policy.
+//! Lag- and backlog-driven autoscaling policy.
 //!
-//! A pure decision loop: feed it periodic backlog observations (rows
-//! retained in the stage's input — the same number
-//! [`crate::coordinator::InputSpec::retained_rows`] and the per-stage
-//! backlog metrics report) and it proposes partition-count changes with
-//! hysteresis, so transient spikes and the post-reshard catch-up dip do
-//! not thrash the fleet. The caller (figure drivers, the elastic workload
-//! scenario, an operator loop) executes proposals via
-//! [`crate::coordinator::StreamingProcessor::reshard`].
+//! A pure decision loop: feed it periodic [`LoadSignal`] observations and
+//! it proposes partition-count changes with hysteresis, so transient
+//! spikes and the post-reshard catch-up dip do not thrash the fleet. The
+//! resident driver ([`crate::reshard::driver`]) gathers the signals from
+//! [`crate::metrics::MetricsHub`] and executes proposals through
+//! [`crate::coordinator::StreamingProcessor::begin_reshard`] /
+//! `finish_reshard`; manual callers (figure drivers, operator loops) can
+//! still tick it by hand.
+//!
+//! Signal fusion: retained-row backlog alone under-reports overload when
+//! trims stall (a wedged trim keeps the backlog *constant* while consumers
+//! fall behind), so the policy fuses three signals:
+//!
+//! * **backlog per reducer** — rows retained in the stage's input;
+//! * **read lag** — worst per-mapper `read_lag_ms` mean over the recent
+//!   window (how stale the rows being ingested are);
+//! * **commit latency** — worst per-reducer `commit_latency_ms` mean over
+//!   the recent window (how long a row waits producer→commit).
+//!
+//! The stage is *overloaded* when **any** signal crosses its high
+//! watermark (scale up fast), and *over-provisioned* only when **all**
+//! signals sit below their low watermarks (scale down conservatively). A
+//! missing lag signal (no samples in the window — e.g. a fully drained
+//! input) counts as "below": an idle stage must still be able to shrink.
 //!
 //! Policy shape (Muppet-style load-watermark scaling):
-//! * scale **up** (double, capped) when backlog per reducer stays above
-//!   the high watermark for `hysteresis_ticks` consecutive observations;
-//! * scale **down** (halve, floored) when it stays below the low
-//!   watermark just as long;
-//! * after any proposal, hold off for `cooldown_ms` — a migration must
-//!   drain before its effect is measurable.
+//! * scale **up** (double, capped) when overloaded for `hysteresis_ticks`
+//!   consecutive observations;
+//! * scale **down** (halve, floored) when over-provisioned just as long;
+//! * after an **executed** proposal, hold off for `cooldown_ms` — a
+//!   migration must drain before its effect is measurable.
+//!
+//! Propose vs. acknowledge: [`Autoscaler::observe`] never arms the
+//! cooldown itself. The driver calls [`Autoscaler::acknowledge`] once the
+//! reshard actually *began*; a proposal that was rejected (e.g. a
+//! migration already in flight, a store outage) leaves the cooldown
+//! unarmed so the very next observation can re-propose, instead of the
+//! lost proposal silencing the policy for a full cooldown.
+
+/// One fused observation of a stage's load.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LoadSignal {
+    /// Rows retained in the stage's input.
+    pub backlog_rows: usize,
+    /// Worst per-mapper read-lag mean (ms) over the recent window; `None`
+    /// when no mapper recorded a sample in the window.
+    pub read_lag_ms: Option<f64>,
+    /// Worst per-reducer commit-latency mean (ms) over the recent window;
+    /// `None` when no reducer committed in the window.
+    pub commit_latency_ms: Option<f64>,
+}
+
+impl LoadSignal {
+    /// A backlog-only observation (manual ticking, unit tests).
+    pub fn backlog(rows: usize) -> LoadSignal {
+        LoadSignal {
+            backlog_rows: rows,
+            ..LoadSignal::default()
+        }
+    }
+}
 
 /// Tunables of the policy loop.
 #[derive(Debug, Clone)]
@@ -24,9 +69,19 @@ pub struct AutoscalerConfig {
     pub backlog_high_per_reducer: f64,
     /// Backlog rows per reducer below which the stage is over-provisioned.
     pub backlog_low_per_reducer: f64,
+    /// Read lag (ms) above which the stage is overloaded regardless of
+    /// backlog (the trim-stall case).
+    pub lag_high_ms: f64,
+    /// Read lag (ms) the stage must sit below before a scale-down.
+    pub lag_low_ms: f64,
+    /// Commit latency (ms) above which the stage is overloaded.
+    pub latency_high_ms: f64,
+    /// Commit latency (ms) the stage must sit below before a scale-down.
+    pub latency_low_ms: f64,
     /// Consecutive out-of-band observations required before proposing.
     pub hysteresis_ticks: u32,
-    /// Minimum simulated time between proposals.
+    /// Minimum simulated time between *executed* proposals (armed by
+    /// [`Autoscaler::acknowledge`], not by proposing).
     pub cooldown_ms: u64,
     pub min_reducers: usize,
     pub max_reducers: usize,
@@ -37,6 +92,10 @@ impl Default for AutoscalerConfig {
         AutoscalerConfig {
             backlog_high_per_reducer: 2_000.0,
             backlog_low_per_reducer: 200.0,
+            lag_high_ms: 30_000.0,
+            lag_low_ms: 5_000.0,
+            latency_high_ms: 20_000.0,
+            latency_low_ms: 5_000.0,
             hysteresis_ticks: 3,
             cooldown_ms: 5_000,
             min_reducers: 1,
@@ -58,7 +117,8 @@ pub struct Autoscaler {
     cfg: AutoscalerConfig,
     above_streak: u32,
     below_streak: u32,
-    last_proposal_ms: Option<u64>,
+    /// Time of the last *acknowledged* (actually begun) reshard.
+    last_executed_ms: Option<u64>,
 }
 
 impl Autoscaler {
@@ -67,7 +127,7 @@ impl Autoscaler {
             cfg,
             above_streak: 0,
             below_streak: 0,
-            last_proposal_ms: None,
+            last_executed_ms: None,
         }
     }
 
@@ -75,21 +135,42 @@ impl Autoscaler {
         &self.cfg
     }
 
-    /// Feed one observation; returns a proposal when the watermark streak
-    /// and cooldown both allow one. The caller decides whether to execute
-    /// it (and keeps ticking either way).
-    pub fn tick(
+    /// Is any high watermark crossed?
+    fn overloaded(&self, s: &LoadSignal, current: usize) -> bool {
+        let per_reducer = s.backlog_rows as f64 / current as f64;
+        per_reducer > self.cfg.backlog_high_per_reducer
+            || s.read_lag_ms.is_some_and(|l| l > self.cfg.lag_high_ms)
+            || s.commit_latency_ms
+                .is_some_and(|l| l > self.cfg.latency_high_ms)
+    }
+
+    /// Are *all* signals below their low watermarks? Missing lag signals
+    /// count as below (an idle stage must be able to shrink).
+    fn underloaded(&self, s: &LoadSignal, current: usize) -> bool {
+        let per_reducer = s.backlog_rows as f64 / current as f64;
+        per_reducer < self.cfg.backlog_low_per_reducer
+            && s.read_lag_ms.map_or(true, |l| l < self.cfg.lag_low_ms)
+            && s.commit_latency_ms
+                .map_or(true, |l| l < self.cfg.latency_low_ms)
+    }
+
+    /// Feed one fused observation; returns a proposal when the watermark
+    /// streak and cooldown both allow one. Proposing does **not** arm the
+    /// cooldown — the caller reports execution via
+    /// [`Autoscaler::acknowledge`]; an unexecuted proposal may be
+    /// re-proposed on the next observation (the streak is kept).
+    pub fn observe(
         &mut self,
         now_ms: u64,
-        backlog_rows: usize,
+        signal: &LoadSignal,
         current_reducers: usize,
     ) -> Option<ScaleDecision> {
         // During the cooldown the stage is mid-migration (or just out of
-        // one): its backlog says nothing about the new fleet yet, so
-        // these observations must not count toward a streak — otherwise
-        // the first tick past the cooldown would fire on pre-drain data,
+        // one): its signals say nothing about the new fleet yet, so these
+        // observations must not count toward a streak — otherwise the
+        // first tick past the cooldown would fire on pre-drain data,
         // exactly the thrash the cooldown exists to prevent.
-        if let Some(last) = self.last_proposal_ms {
+        if let Some(last) = self.last_executed_ms {
             if now_ms.saturating_sub(last) < self.cfg.cooldown_ms {
                 self.above_streak = 0;
                 self.below_streak = 0;
@@ -98,12 +179,10 @@ impl Autoscaler {
         }
 
         let current = current_reducers.max(1);
-        let per_reducer = backlog_rows as f64 / current as f64;
-
-        if per_reducer > self.cfg.backlog_high_per_reducer {
+        if self.overloaded(signal, current) {
             self.above_streak += 1;
             self.below_streak = 0;
-        } else if per_reducer < self.cfg.backlog_low_per_reducer {
+        } else if self.underloaded(signal, current) {
             self.below_streak += 1;
             self.above_streak = 0;
         } else {
@@ -121,13 +200,32 @@ impl Autoscaler {
         if target == current {
             return None;
         }
-        self.above_streak = 0;
-        self.below_streak = 0;
-        self.last_proposal_ms = Some(now_ms);
         Some(ScaleDecision {
             from: current,
             to: target,
         })
+    }
+
+    /// The driver reports that a proposed reshard actually *began*: arm
+    /// the cooldown and reset the streaks. Never called for rejected
+    /// proposals — their streak survives, so the retry is immediate once
+    /// the blocker (an in-flight migration, a store outage) clears.
+    pub fn acknowledge(&mut self, now_ms: u64) {
+        self.above_streak = 0;
+        self.below_streak = 0;
+        self.last_executed_ms = Some(now_ms);
+    }
+
+    /// Backlog-only convenience wrapper around [`Autoscaler::observe`]
+    /// (manual ticking; the figure demo and older call sites). Same
+    /// propose/acknowledge contract.
+    pub fn tick(
+        &mut self,
+        now_ms: u64,
+        backlog_rows: usize,
+        current_reducers: usize,
+    ) -> Option<ScaleDecision> {
+        self.observe(now_ms, &LoadSignal::backlog(backlog_rows), current_reducers)
     }
 }
 
@@ -139,6 +237,10 @@ mod tests {
         AutoscalerConfig {
             backlog_high_per_reducer: 100.0,
             backlog_low_per_reducer: 10.0,
+            lag_high_ms: 1_000.0,
+            lag_low_ms: 100.0,
+            latency_high_ms: 1_000.0,
+            latency_low_ms: 100.0,
             hysteresis_ticks: 3,
             cooldown_ms: 1_000,
             min_reducers: 2,
@@ -183,19 +285,29 @@ mod tests {
     }
 
     #[test]
-    fn cooldown_suppresses_back_to_back_proposals() {
+    fn cooldown_arms_on_acknowledge_only() {
         let mut a = Autoscaler::new(cfg());
-        for t in 0..3 {
-            a.tick(t * 100, 10_000, 4);
+        for t in 0..2 {
+            assert_eq!(a.tick(t * 100, 10_000, 4), None);
         }
-        // Proposal fired at t=200. Keep observing high backlog within the
-        // cooldown window: silence.
-        for t in 3..10 {
-            assert_eq!(a.tick(t * 100, 10_000, 8), None);
+        let d = a.tick(200, 10_000, 4).expect("streak complete");
+        assert_eq!(d, ScaleDecision { from: 4, to: 8 });
+        // The proposal was NOT executed (say, a migration was already in
+        // flight): no cooldown — the streak survives and the very next
+        // high observation re-proposes.
+        assert_eq!(
+            a.tick(300, 10_000, 4),
+            Some(ScaleDecision { from: 4, to: 8 }),
+            "rejected proposal must be retried, not swallowed by a cooldown"
+        );
+        // Now the driver executes it and acknowledges.
+        a.acknowledge(400);
+        for t in 4..13 {
+            assert_eq!(a.tick(t * 100, 10_000, 8), None, "cooldown holds");
         }
         // Past the cooldown the streak (rebuilt) may propose again.
         let mut fired = None;
-        for t in 13..30 {
+        for t in 15..40 {
             if let Some(d) = a.tick(t * 100, 10_000, 8) {
                 fired = Some(d);
                 break;
@@ -212,5 +324,69 @@ mod tests {
                 panic!("proposed past the cap: {d:?}");
             }
         }
+    }
+
+    #[test]
+    fn lag_alone_scales_up_despite_small_backlog() {
+        // The trim-stall case: backlog looks tame (trims wedged, retained
+        // rows constant) but read lag climbs — the fused policy must still
+        // scale up.
+        let mut a = Autoscaler::new(cfg());
+        let stalled = LoadSignal {
+            backlog_rows: 40, // 10/reducer: between the watermarks
+            read_lag_ms: Some(5_000.0),
+            commit_latency_ms: None,
+        };
+        assert_eq!(a.observe(0, &stalled, 4), None);
+        assert_eq!(a.observe(100, &stalled, 4), None);
+        assert_eq!(
+            a.observe(200, &stalled, 4),
+            Some(ScaleDecision { from: 4, to: 8 }),
+            "high read lag must trigger a scale-up on its own"
+        );
+    }
+
+    #[test]
+    fn commit_latency_alone_scales_up() {
+        let mut a = Autoscaler::new(cfg());
+        let slow = LoadSignal {
+            backlog_rows: 0,
+            read_lag_ms: None,
+            commit_latency_ms: Some(9_999.0),
+        };
+        a.observe(0, &slow, 2);
+        a.observe(100, &slow, 2);
+        assert_eq!(
+            a.observe(200, &slow, 2),
+            Some(ScaleDecision { from: 2, to: 4 })
+        );
+    }
+
+    #[test]
+    fn shrink_requires_all_signals_low() {
+        let mut a = Autoscaler::new(cfg());
+        // Backlog is near zero but commit latency is still high: no shrink.
+        let mixed = LoadSignal {
+            backlog_rows: 0,
+            read_lag_ms: None,
+            commit_latency_ms: Some(500.0),
+        };
+        for t in 0..10 {
+            assert_eq!(a.observe(t * 100, &mixed, 8), None, "latency in band blocks shrink");
+        }
+        // All signals quiet (lag None = drained input counts as below).
+        let quiet = LoadSignal {
+            backlog_rows: 0,
+            read_lag_ms: None,
+            commit_latency_ms: Some(50.0),
+        };
+        let mut fired = None;
+        for t in 10..20 {
+            if let Some(d) = a.observe(t * 100, &quiet, 8) {
+                fired = Some(d);
+                break;
+            }
+        }
+        assert_eq!(fired, Some(ScaleDecision { from: 8, to: 4 }));
     }
 }

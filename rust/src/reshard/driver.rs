@@ -1,0 +1,281 @@
+//! The resident autoscale driver: the policy half of elastic resharding,
+//! running *inside* the processor instead of in the caller's hands.
+//!
+//! PR 3 built the mechanism (live N→M migrations) but left the policy
+//! manual: callers ticked [`Autoscaler`] themselves, fed it only
+//! retained-row backlog, and executed proposals by hand. This module
+//! closes that loop (Muppet's load-watermark scaling and StreamShield's
+//! resident resiliency controller are the shape targets):
+//!
+//! * **Resident** — [`AutoscaleDriver::start`] spawns a loop owned by the
+//!   [`crate::coordinator::StreamingProcessor`] (started via
+//!   `start_autoscaler`, stopped with the processor), so scaling needs no
+//!   operator in the loop.
+//! * **Signal-rich** — each tick fuses retained-row backlog with the
+//!   fleet's `read_lag_ms` / `commit_latency_ms` series from
+//!   [`MetricsHub`] ([`gather_signal`]); backlog alone under-reports
+//!   overload when trims stall.
+//! * **Self-healing** — the persisted plan row is the recovery point: a
+//!   loop that starts (or restarts) over a plan left `Migrating` by a
+//!   crashed driver resumes and finalizes that migration before making
+//!   any new proposal.
+//! * **Honest about rejection** — the cooldown arms only when a proposal's
+//!   reshard actually *begins* ([`Autoscaler::acknowledge`]); a rejected
+//!   proposal (migration already in flight, store outage) is retried on
+//!   the next tick instead of being swallowed for a cooldown period.
+//!
+//! The driver executes through the same [`resharder`] entry points as the
+//! manual path (`begin`/`finalize`/`resume`), so everything the workers
+//! enforce — commit fencing, CAS retirement, bootstrap — is identical
+//! whether a human or the driver asked for the resize.
+//! [`crate::dataflow::TopologyAutoscaler`] runs the same loop body over
+//! every stage of a running topology.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::InputSpec;
+use crate::dyntable::DynTableStore;
+use crate::metrics::hub::names;
+use crate::metrics::MetricsHub;
+use crate::util::Clock;
+
+use super::autoscaler::{Autoscaler, AutoscalerConfig, LoadSignal, ScaleDecision};
+use super::plan::{PlanPhase, ReshardPlan};
+use super::resharder::{self, ReshardContext, ReshardError};
+
+/// Tunables of the resident loop.
+#[derive(Debug, Clone)]
+pub struct DriverConfig {
+    /// The watermark policy the loop feeds.
+    pub autoscaler: AutoscalerConfig,
+    /// Observation cadence, simulated ms.
+    pub tick_period_ms: u64,
+    /// Lookback window for the lag/latency means, simulated ms. Series
+    /// with no sample inside the window contribute `None` (treated as
+    /// "not overloaded" — a drained input has no read lag).
+    pub signal_window_ms: u64,
+    /// Wall-clock budget for one migration to drain and finalize. The
+    /// loop waits at most [`TICK_DRAIN_BUDGET_MS`] of it inside a single
+    /// tick (so a topology sweep is never starved by one slow stage);
+    /// the remainder is spent across subsequent ticks' resume branch —
+    /// the plan stays `Migrating` in between and nothing is lost.
+    pub reshard_timeout_ms: u64,
+}
+
+/// Longest a single tick blocks waiting for a migration to drain; slower
+/// drains complete across later ticks via the resume branch.
+pub const TICK_DRAIN_BUDGET_MS: u64 = 2_000;
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        DriverConfig {
+            autoscaler: AutoscalerConfig::default(),
+            tick_period_ms: 500,
+            signal_window_ms: 5_000,
+            reshard_timeout_ms: 30_000,
+        }
+    }
+}
+
+/// Everything the loop needs from the processor it scales, detached from
+/// the processor's lifetime so the thread owns no borrow of it.
+pub struct DriverDeps {
+    pub clock: Clock,
+    pub store: Arc<DynTableStore>,
+    /// The stage's reshard plan table (the single-row state machine).
+    pub plan_table: String,
+    /// The stage's metrics hub: lag signals in, autoscale counters out.
+    pub metrics: Arc<MetricsHub>,
+    /// The stage's input (backlog signal).
+    pub input: InputSpec,
+    /// Builds a fresh [`ReshardContext`] per use — the mapper count baked
+    /// into a context can change under dataflow re-wiring.
+    pub ctx: Arc<dyn Fn() -> ReshardContext + Send + Sync>,
+    /// Called with the target partition count right before a migration
+    /// begins (and again on resume — idempotent): a dataflow stage grows
+    /// its handoff table here, so the incoming fleet owns a tablet before
+    /// it ever serves. `None` for a stand-alone processor.
+    pub pre_begin: Option<Arc<dyn Fn(usize) + Send + Sync>>,
+    /// Called with the stable partition count after a migration
+    /// finalizes (fresh or resumed): a dataflow stage re-wires its
+    /// downstream mapper fleet here. `None` for a stand-alone processor.
+    pub post_stable: Option<Arc<dyn Fn(usize) + Send + Sync>>,
+}
+
+/// Gather one fused observation from a stage's metrics hub + input.
+pub fn gather_signal(
+    metrics: &MetricsHub,
+    backlog_rows: usize,
+    now_ms: u64,
+    window_ms: u64,
+) -> LoadSignal {
+    let from = now_ms.saturating_sub(window_ms);
+    LoadSignal {
+        backlog_rows,
+        read_lag_ms: metrics.read_lag_signal(from),
+        commit_latency_ms: metrics.commit_latency_signal(from),
+    }
+}
+
+/// Stop-flag + join-handle pair shared by the resident loops
+/// ([`AutoscaleDriver`], [`crate::dataflow::TopologyAutoscaler`]), so
+/// their shutdown semantics can never drift apart. Dropping it does
+/// *not* stop the thread; call [`LoopHandle::stop`].
+pub(crate) struct LoopHandle {
+    stop: Arc<AtomicBool>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl LoopHandle {
+    /// Spawn `body` on a named thread; `body` polls the passed stop flag.
+    pub(crate) fn spawn(
+        name: &'static str,
+        body: impl FnOnce(&AtomicBool) + Send + 'static,
+    ) -> LoopHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let join = std::thread::Builder::new()
+            .name(name.into())
+            .spawn({
+                let stop = stop.clone();
+                move || body(&stop)
+            })
+            .unwrap_or_else(|e| panic!("spawn {name} thread: {e}"));
+        LoopHandle {
+            stop,
+            join: Mutex::new(Some(join)),
+        }
+    }
+
+    /// Signal the loop to exit and join it (idempotent).
+    pub(crate) fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(join) = self.join.lock().unwrap().take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Handle to a running resident loop. Dropping it does *not* stop the
+/// thread; call [`AutoscaleDriver::stop`] (the owning processor does, on
+/// shutdown).
+pub struct AutoscaleDriver {
+    inner: LoopHandle,
+}
+
+impl AutoscaleDriver {
+    /// Spawn the resident loop.
+    pub fn start(cfg: DriverConfig, deps: DriverDeps) -> AutoscaleDriver {
+        AutoscaleDriver {
+            inner: LoopHandle::spawn("autoscale-driver", move |stop| {
+                run_driver(&cfg, &deps, stop)
+            }),
+        }
+    }
+
+    /// Signal the loop to exit and join it. If a migration is mid-drain
+    /// the loop abandons the wait at the next slice boundary; the plan row
+    /// stays `Migrating` and is resumed by the next driver (or a manual
+    /// `resume_reshard`).
+    pub fn stop(&self) {
+        self.inner.stop();
+    }
+}
+
+/// One stage's worth of the resident loop body: resume-if-migrating,
+/// otherwise observe and (maybe) execute. Shared verbatim by the
+/// single-processor driver and the topology autoscaler so the two can
+/// never drift. Returns the decision it executed, if any.
+pub(crate) fn drive_stage_tick(
+    cfg: &DriverConfig,
+    deps: &DriverDeps,
+    scaler: &mut Autoscaler,
+    stop: &AtomicBool,
+) -> Option<ScaleDecision> {
+    let now = deps.clock.now_ms();
+    let plan = ReshardPlan::fetch(&deps.store, &deps.plan_table)?;
+    if plan.phase == PlanPhase::Migrating {
+        // Crash-resume: someone (a dead driver, an interrupted manual
+        // call) left a migration in flight. Finish it before proposing
+        // anything — the plan row is the recovery point. The dead driver
+        // may have died before the stage re-wiring too, so the pre-begin
+        // hook runs again (idempotent).
+        deps.metrics.add(names::AUTOSCALE_RESUMES, 1);
+        if let Some(pre) = &deps.pre_begin {
+            pre(plan.next_partitions);
+        }
+        if finish_migration(cfg, deps, stop) {
+            scaler.acknowledge(deps.clock.now_ms());
+            if let Some(post) = &deps.post_stable {
+                post(plan.next_partitions);
+            }
+        }
+        return None;
+    }
+
+    let signal = gather_signal(
+        &deps.metrics,
+        deps.input.retained_rows(),
+        now,
+        cfg.signal_window_ms,
+    );
+    let decision = scaler.observe(now, &signal, plan.partitions)?;
+    deps.metrics.add(names::AUTOSCALE_PROPOSALS, 1);
+    if let Some(pre) = &deps.pre_begin {
+        pre(decision.to);
+    }
+    match resharder::begin(&(deps.ctx)(), decision.to) {
+        Ok(_) => {
+            // The reshard began: arm the cooldown and count the resize
+            // now — even if the drain below outlives this tick's budget,
+            // the migration is real and the resume branch finishes it.
+            scaler.acknowledge(deps.clock.now_ms());
+            deps.metrics.add(
+                if decision.to > decision.from {
+                    names::AUTOSCALE_GROWS
+                } else {
+                    names::AUTOSCALE_SHRINKS
+                },
+                1,
+            );
+            if finish_migration(cfg, deps, stop) {
+                if let Some(post) = &deps.post_stable {
+                    post(decision.to);
+                }
+            }
+            Some(decision)
+        }
+        Err(_) => {
+            // Rejected (plan raced to Migrating, store outage, …): no
+            // cooldown — the streak survives and the next tick retries.
+            deps.metrics.add(names::AUTOSCALE_REJECTED, 1);
+            None
+        }
+    }
+}
+
+/// Wait for the in-flight migration to drain and finalize, in short
+/// slices so a stop request interrupts promptly, bounded per call so one
+/// slow stage cannot starve a topology sweep. True = finalized.
+fn finish_migration(cfg: &DriverConfig, deps: &DriverDeps, stop: &AtomicBool) -> bool {
+    let budget = cfg.reshard_timeout_ms.min(TICK_DRAIN_BUDGET_MS);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(budget);
+    while !stop.load(Ordering::SeqCst) && std::time::Instant::now() < deadline {
+        match resharder::resume(&(deps.ctx)(), 250) {
+            Ok(_) => return true,
+            // Still draining (or a racing driver swapped the migration):
+            // keep waiting out the budget.
+            Err(ReshardError::Timeout { .. }) | Err(ReshardError::NotStable) => {}
+            Err(_) => return false,
+        }
+    }
+    false
+}
+
+fn run_driver(cfg: &DriverConfig, deps: &DriverDeps, stop: &AtomicBool) {
+    let mut scaler = Autoscaler::new(cfg.autoscaler.clone());
+    while !stop.load(Ordering::SeqCst) {
+        drive_stage_tick(cfg, deps, &mut scaler, stop);
+        deps.clock.sleep_ms(cfg.tick_period_ms);
+    }
+}

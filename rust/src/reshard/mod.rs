@@ -35,18 +35,25 @@
 //!    plan `Stable(e+1, M)` with all retirements in the read set
 //!    ([`resharder::finalize`]); mappers then drop the old bucket sets.
 //!
-//! On top sits the [`autoscaler`]: a pure policy loop that watches
-//! per-stage backlog and proposes scale-up/down with hysteresis and
-//! cooldown. [`crate::dataflow`] re-wires adjacent stages when an
-//! intermediate stage reshards (handoff tablets grow, downstream mapper
-//! fleets re-spec against the new tablet count).
+//! On top sits the policy half: the [`autoscaler`] is a pure watermark
+//! loop fusing backlog with read-lag / commit-latency signals, and the
+//! [`driver`] is the *resident* incarnation — owned by the processor,
+//! gathering its own signals from [`crate::metrics::MetricsHub`],
+//! executing its own proposals, and resuming any migration a crashed
+//! driver left behind (the plan row is the recovery point).
+//! [`crate::dataflow`] re-wires adjacent stages when an intermediate
+//! stage reshards (handoff tablets grow, downstream mapper fleets re-spec
+//! against the new tablet count) and runs the same loop topology-wide
+//! ([`crate::dataflow::TopologyAutoscaler`]).
 
 pub mod autoscaler;
+pub mod driver;
 pub mod migration;
 pub mod plan;
 pub mod resharder;
 
-pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleDecision};
+pub use autoscaler::{Autoscaler, AutoscalerConfig, LoadSignal, ScaleDecision};
+pub use driver::{gather_signal, AutoscaleDriver, DriverConfig, DriverDeps};
 pub use migration::{
     ExportCtx, ImportCtx, MetaStateExporter, NoopImporter, ReshardRuntime, ResidualExporter,
     ResidualImporter,

@@ -18,7 +18,7 @@ use crate::metrics::hub::names;
 use crate::metrics::WaReport;
 use crate::queue::input_name_table;
 use crate::queue::ordered_table::OrderedTable;
-use crate::reshard::{ReshardPlan, ReshardStats};
+use crate::reshard::{AutoscalerConfig, DriverConfig, PlanPhase, ReshardPlan, ReshardStats};
 use crate::row;
 use crate::rows::{UnversionedRow, Value};
 use crate::util::yson::Yson;
@@ -81,6 +81,24 @@ pub fn fill_deterministic_wave(
         }
     }
     user_lines
+}
+
+/// Enforce the generator's f32-exactness precondition: the largest
+/// timestamp any wave can emit must stay below 2^24, or the byte-identity
+/// the scenarios assert becomes batching-dependent (the analytics reducer
+/// aggregates per-batch ts *offsets* in f32). Must mirror the timestamp
+/// formula in [`fill_deterministic_wave`].
+fn assert_wave_plan_f32_exact(cfg: &ElasticCfg) {
+    let max_ts = 10_000
+        + (cfg.waves.saturating_sub(1) as i64) * 4_000_000
+        + (cfg.partitions.saturating_sub(1) as i64) * 500_000
+        + (cfg.messages_per_wave as i64) * 100
+        + 8;
+    assert!(
+        max_ts < (1 << 24),
+        "wave plan would emit ts {max_ts} >= 2^24; shrink waves/partitions/messages \
+         (f32 ts offsets must stay exactly representable)"
+    );
 }
 
 /// Scenario knobs.
@@ -219,19 +237,7 @@ pub fn run_elastic(
         cfg.waves,
         cfg.reshard_to.len()
     );
-    // Enforce the generator's f32-exactness precondition up front: the
-    // largest timestamp any wave can emit must stay below 2^24, or the
-    // byte-identity this scenario asserts becomes batching-dependent.
-    let max_ts = 10_000
-        + (cfg.waves.saturating_sub(1) as i64) * 4_000_000
-        + (cfg.partitions.saturating_sub(1) as i64) * 500_000
-        + (cfg.messages_per_wave as i64) * 100
-        + 8;
-    assert!(
-        max_ts < (1 << 24),
-        "wave plan would emit ts {max_ts} >= 2^24; shrink waves/partitions/messages \
-         (f32 ts offsets must stay exactly representable)"
-    );
+    assert_wave_plan_f32_exact(cfg);
     let mut expected = 0i64;
     let mut reshards = Vec::new();
     for wave in 0..cfg.waves {
@@ -264,6 +270,157 @@ pub fn run_elastic(
         rows,
         report,
         reshards,
+        final_plan,
+        retired_reducers: retired,
+        bootstrapped_reducers: bootstrapped,
+        env,
+    }
+}
+
+/// The resident-driver tuning the hands-off scenario (and `figure reshard
+/// --auto`) uses: watermarks low enough that one deterministic wave
+/// reliably reads as overload against `initial` reducers, a floor at
+/// `initial` so the fleet settles back where it started, and a cap one
+/// doubling above it — so an unattended run performs at least one grow
+/// and one shrink, both decided purely from lag+backlog signals.
+pub fn auto_driver_config(cfg: &ElasticCfg) -> DriverConfig {
+    DriverConfig {
+        autoscaler: AutoscalerConfig {
+            backlog_high_per_reducer: 8.0,
+            backlog_low_per_reducer: 2.0,
+            // The deterministic waves carry synthetic (small) write
+            // timestamps, so read-lag/commit-latency means are clamped
+            // near zero while rows flow and vanish when drained — the
+            // backlog watermarks are the decisive signals here.
+            lag_high_ms: 60_000.0,
+            lag_low_ms: 60_000.0,
+            latency_high_ms: 60_000.0,
+            latency_low_ms: 60_000.0,
+            hysteresis_ticks: 2,
+            cooldown_ms: 1_000,
+            min_reducers: cfg.initial_reducers,
+            max_reducers: cfg.initial_reducers * 2,
+        },
+        tick_period_ms: 100,
+        signal_window_ms: 1_500,
+        reshard_timeout_ms: cfg.reshard_timeout_ms,
+    }
+}
+
+/// Hands-off variant of [`run_elastic`]: **no manual `reshard()` calls**.
+/// The processor's resident autoscale driver watches the fused lag+backlog
+/// signals and performs every resize itself — each wave's backlog reads as
+/// overload (grow), the post-drain quiet reads as over-provisioning
+/// (shrink back to the floor). `drill` fires once per *observed* migration
+/// — the harness polls the plan row and calls it the first time each new
+/// epoch appears mid-flight, so fault drills land mid-cutover exactly like
+/// the manual scenario's. Returns once the output drained and the driver
+/// settled the fleet back to the configured floor with a stable plan (or
+/// the respective timeouts expired; the caller asserts).
+///
+/// `ElasticOutcome::reshards` is empty here — the driver owns the
+/// migrations; counts live in the `autoscale/*` counters of
+/// `ElasticOutcome::env.metrics`.
+pub fn run_elastic_auto(
+    cfg: &ElasticCfg,
+    dcfg: DriverConfig,
+    drill: impl Fn(&StreamingProcessor, usize),
+) -> ElasticOutcome {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    let table = OrderedTable::new(
+        "//input/elastic",
+        input_name_table(),
+        cfg.partitions,
+        env.accounting.clone(),
+    );
+    ensure_output_table(&env.client()).expect("create analytics output table");
+
+    let proc_cfg = ProcessorConfig {
+        mapper_count: cfg.partitions,
+        reducer_count: cfg.initial_reducers,
+        ..cfg.base.clone()
+    };
+    let processor = StreamingProcessor::launch(
+        proc_cfg,
+        env.clone(),
+        InputSpec::Ordered(table.clone()),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .expect("launch elastic processor");
+    assert_wave_plan_f32_exact(cfg);
+
+    let settle_floor = dcfg.autoscaler.min_reducers;
+    processor.start_autoscaler(dcfg);
+
+    // Poll-observe the plan and fire the drill hook on each migration the
+    // driver starts.
+    let mut next_drill_epoch = 1i64;
+    let mut migrations_seen = 0usize;
+    let mut observe_and_drill = |processor: &StreamingProcessor| {
+        if let Some(plan) = processor.current_plan() {
+            if plan.phase == PlanPhase::Migrating && plan.next_epoch() >= next_drill_epoch {
+                drill(processor, migrations_seen);
+                migrations_seen += 1;
+                next_drill_epoch = plan.next_epoch() + 1;
+            }
+        }
+    };
+
+    let mut expected = 0i64;
+    for wave in 0..cfg.waves {
+        expected += fill_deterministic_wave(&table, wave, cfg.messages_per_wave);
+        // Let the wave flow (and the driver react to it) before the next.
+        let until = std::time::Instant::now() + std::time::Duration::from_millis(700);
+        while std::time::Instant::now() < until {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            observe_and_drill(&processor);
+        }
+    }
+
+    // Drain, still watching for driver-started migrations.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(cfg.drain_timeout_ms);
+    let mut output_lines = -1i64;
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        observe_and_drill(&processor);
+        output_lines = output_count_sum(&env);
+        if output_lines == expected {
+            break;
+        }
+    }
+
+    // Let the driver settle the fleet back to its floor (the unattended
+    // shrink) before reporting.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(cfg.reshard_timeout_ms);
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        observe_and_drill(&processor);
+        if processor
+            .current_plan()
+            .is_some_and(|p| p.phase == PlanPhase::Stable && p.partitions <= settle_floor)
+        {
+            break;
+        }
+    }
+
+    let report = processor.wa_report("elastic analytics (hands-off)");
+    let final_plan = processor.current_plan();
+    let retired = env.metrics.get_counter(names::RESHARD_RETIRED);
+    let bootstrapped = env.metrics.get_counter(names::RESHARD_BOOTSTRAPPED);
+    processor.stop();
+
+    let rows = env.store.scan(OUTPUT_TABLE).unwrap_or_default();
+    ElasticOutcome {
+        expected_lines: expected,
+        output_lines,
+        rows,
+        report,
+        reshards: Vec::new(),
         final_plan,
         retired_reducers: retired,
         bootstrapped_reducers: bootstrapped,

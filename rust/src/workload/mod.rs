@@ -19,7 +19,9 @@ pub mod sessions;
 pub mod elastic;
 
 pub use analytics::{analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE};
-pub use elastic::{run_elastic, ElasticCfg, ElasticOutcome};
+pub use elastic::{
+    auto_driver_config, run_elastic, run_elastic_auto, ElasticCfg, ElasticOutcome,
+};
 pub use loggen::{LogGen, LogGenConfig};
 pub use producer::{start_producers, ProducerConfig, ProducerHandle};
 pub use sessions::{two_stage_topology, SESSIONS_TABLE};

@@ -532,6 +532,148 @@ fn reshard_survives_driver_interruption_via_resume() {
 }
 
 #[test]
+fn resident_driver_unattended_grow_shrink_under_drills_byte_identical() {
+    // The PR-4 tentpole drill: **no manual `reshard()` calls** — the
+    // resident lag+backlog driver decides and executes every resize
+    // itself, while reducers are killed and duplicated mid-migration
+    // under a lossy/duplicating net. The drained output must still be
+    // byte-identical to a static fault-free run over identical input, and
+    // the driver must have performed at least one grow and one shrink,
+    // settling the fleet back at its floor.
+    use yt_stream::reshard::plan::reducer_slot;
+    use yt_stream::reshard::PlanPhase;
+    use yt_stream::workload::elastic::{
+        auto_driver_config, run_elastic, run_elastic_auto, ElasticCfg,
+    };
+
+    let cfg = ElasticCfg {
+        partitions: 4,
+        initial_reducers: 4,
+        reshard_to: vec![],
+        messages_per_wave: 40,
+        seed: 0x4E60,
+        ..ElasticCfg::default()
+    };
+    let baseline = run_elastic(&cfg, |_, _| {});
+    assert_eq!(
+        baseline.output_lines, baseline.expected_lines,
+        "static baseline must drain exactly once"
+    );
+
+    let auto = run_elastic_auto(&cfg, auto_driver_config(&cfg), |processor, migration| {
+        // Fires on each migration the driver starts (observed via the
+        // plan row). Old fleet = epoch `migration`, incoming fleet =
+        // epoch `migration + 1`.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let sup = processor.supervisor().clone();
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.15;
+            f.dup_prob = 0.15;
+        });
+        let old = reducer_slot(migration as i64, 0);
+        if sup.has_slot(Role::Reducer, old) {
+            sup.kill(Role::Reducer, old);
+        }
+        let incoming = reducer_slot(migration as i64 + 1, 0);
+        if sup.has_slot(Role::Reducer, incoming) {
+            sup.duplicate(Role::Reducer, incoming);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.0;
+            f.dup_prob = 0.0;
+        });
+    });
+
+    assert_eq!(
+        auto.output_lines, auto.expected_lines,
+        "exactly-once violated under the unattended driver"
+    );
+    assert_eq!(
+        auto.rows, baseline.rows,
+        "hands-off drilled output must be byte-identical to the static fault-free run"
+    );
+    let grows = auto.env.metrics.get_counter(names::AUTOSCALE_GROWS);
+    let shrinks = auto.env.metrics.get_counter(names::AUTOSCALE_SHRINKS);
+    assert!(grows >= 1, "driver never grew the fleet");
+    assert!(shrinks >= 1, "driver never shrank the fleet back");
+    let plan = auto.final_plan.expect("plan row must exist");
+    assert_eq!(plan.phase, PlanPhase::Stable, "driver must settle the plan");
+    assert_eq!(
+        plan.partitions, cfg.initial_reducers,
+        "fleet must settle back at the configured floor"
+    );
+    assert!(auto.retired_reducers > 0, "migrations must have retired old reducers");
+    assert!(auto.bootstrapped_reducers > 0, "migrations must have bootstrapped new reducers");
+}
+
+#[test]
+fn reducer_shrink_after_downstream_mapper_shrink_does_not_deadlock() {
+    // Shrink-hygiene regression (`ReducerRt::ready_to_retire`): shrink
+    // the upstream stage (4→2 reducers), retire the downstream mapper
+    // slots its quiet handoff tablets orphaned, then reshard the
+    // downstream stage's *reducers*. Before the live-mapper drain gate,
+    // the old reducers waited forever for `drained` responses from the
+    // dead mapper indexes (historical high-water mark) and the migration
+    // could only time out.
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::coordinator::{ComputeMode, InputSpec};
+    use yt_stream::queue::input_name_table;
+    use yt_stream::queue::ordered_table::OrderedTable;
+    use yt_stream::reshard::PlanPhase;
+    use yt_stream::util::Clock;
+    use yt_stream::workload::elastic::fill_deterministic_wave;
+    use yt_stream::workload::sessions::two_stage_topology;
+
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0x4E61);
+    let table = OrderedTable::new(
+        "//input/shrink_hygiene",
+        input_name_table(),
+        4,
+        env.accounting.clone(),
+    );
+    fill_deterministic_wave(&table, 0, 40);
+
+    let base = ProcessorConfig {
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        split_brain_delay_ms: 50,
+        session_ttl_ms: 1_500,
+        heartbeat_period_ms: 100,
+        ..ProcessorConfig::default()
+    };
+    let topo = two_stage_topology(base, 4, 4, 2, ComputeMode::Native);
+    let running = topo
+        .launch(&env, InputSpec::Ordered(table))
+        .expect("launch two-stage topology");
+    assert!(running.wait_drained(45_000), "chain must drain first");
+
+    running
+        .reshard_stage(0, 2, 30_000)
+        .expect("upstream reducer shrink");
+    let mut retired = 0;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    while retired < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        retired += running.retire_quiet_downstream_mappers(0);
+    }
+    assert_eq!(retired, 2, "quiet downstream mapper slots must retire");
+
+    // The regression: two of the downstream stage's mapper indexes are
+    // dead and flagged retired — its reducer reshard must still drain.
+    let stats = running
+        .reshard_stage(1, 1, 30_000)
+        .expect("downstream reducer shrink must not deadlock on retired mapper indexes");
+    assert_eq!(stats.to_partitions, 1);
+    let plan = running.stage(1).processor.current_plan().unwrap();
+    assert_eq!(plan.phase, PlanPhase::Stable);
+    assert_eq!(plan.partitions, 1);
+    running.stop();
+}
+
+#[test]
 fn at_least_once_mode_never_loses_rows() {
     // §6 relaxed delivery: with split-brain twins racing, the relaxed
     // reducer may duplicate effects but must never lose a row.

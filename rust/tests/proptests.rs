@@ -349,6 +349,72 @@ fn partition_ownership_total_exclusive_across_reshard() {
     );
 }
 
+/// Invariant 6 (autoscale policy): under arbitrary fused lag+backlog
+/// signal sequences — and arbitrary acknowledge/reject interleavings —
+/// every proposal stays inside `[min_reducers, max_reducers]`, starts
+/// from the current count, is never a no-op, and is exactly a capped
+/// doubling or floored halving.
+#[test]
+fn fused_autoscaler_proposals_stay_in_bounds() {
+    use yt_stream::reshard::{Autoscaler, AutoscalerConfig, LoadSignal};
+
+    check_with(
+        Config {
+            cases: 128,
+            base_seed: 0x4E62,
+        },
+        "fused autoscaler proposals bounded",
+        |rng| {
+            let min = 1 + rng.next_below(4) as usize;
+            let max = min + rng.next_below(32) as usize;
+            let cfg = AutoscalerConfig {
+                backlog_high_per_reducer: 50.0 + rng.next_below(100) as f64,
+                backlog_low_per_reducer: rng.next_below(40) as f64,
+                lag_high_ms: 200.0 + rng.next_below(1_000) as f64,
+                lag_low_ms: rng.next_below(200) as f64,
+                latency_high_ms: 200.0 + rng.next_below(1_000) as f64,
+                latency_low_ms: rng.next_below(200) as f64,
+                hysteresis_ticks: 1 + rng.next_below(3) as u32,
+                cooldown_ms: rng.next_below(1_000),
+                min_reducers: min,
+                max_reducers: max,
+            };
+            let mut scaler = Autoscaler::new(cfg);
+            let mut current = min + rng.next_below((max - min + 1) as u64) as usize;
+            let mut now = 0u64;
+            for _ in 0..200 {
+                now += rng.next_below(300);
+                let signal = LoadSignal {
+                    backlog_rows: rng.next_below(100_000) as usize,
+                    read_lag_ms: (rng.next_below(2) == 0)
+                        .then(|| rng.next_below(10_000) as f64),
+                    commit_latency_ms: (rng.next_below(2) == 0)
+                        .then(|| rng.next_below(10_000) as f64),
+                };
+                if let Some(d) = scaler.observe(now, &signal, current) {
+                    prop_assert!(
+                        d.to >= min && d.to <= max,
+                        "proposal {d:?} escaped [{min}, {max}]"
+                    );
+                    prop_assert_eq!(d.from, current, "proposal must start from the live count");
+                    prop_assert!(d.to != d.from, "no-op proposal");
+                    prop_assert!(
+                        d.to == (current * 2).min(max) || d.to == (current / 2).max(min),
+                        "proposal {d:?} is neither a capped doubling nor a floored halving"
+                    );
+                    // Randomly execute (acknowledge) or reject the
+                    // proposal — bounds must hold either way.
+                    if rng.next_below(2) == 0 {
+                        scaler.acknowledge(now);
+                        current = d.to;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Invariant 4: optimistic transactions serialize read-modify-writes —
 /// concurrent increments with retry lose nothing.
 #[test]

@@ -43,6 +43,16 @@ timeout 600 cargo run --release --quiet -- figure reshard --seconds 5 || {
     exit 1
 }
 
+echo "== bench_smoke: figure reshard --auto (hands-off resident driver) =="
+# Hands-off mode: the resident lag+backlog driver must perform a grow and
+# a shrink on its own (byte-identical output, no manual reshard calls),
+# and the topology section must shrink reducers past a previously-shrunk
+# downstream mapper fleet (the drain-gate regression).
+timeout 600 cargo run --release --quiet -- figure reshard --auto --seconds 5 || {
+    echo "bench_smoke: FAIL — figure reshard --auto did not complete" >&2
+    exit 1
+}
+
 if [ "${1:-}" = "--full" ]; then
     echo "== bench_smoke: full micro_hot_paths suite =="
     cargo bench --bench micro_hot_paths
