@@ -200,6 +200,7 @@ fn bench_window() {
                 bucket_ptr_count: 0,
                 byte_size,
                 read_ts_ms: 0,
+                min_event_ts: None,
             });
             for i in 0..64 {
                 if bucket.push(BucketRow {

@@ -72,6 +72,18 @@ pub trait Mapper: Send {
 /// Returning `None` makes the reducer open the transaction itself.
 pub trait Reducer: Send {
     fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction>;
+
+    /// Optional empty-cycle hook: called when a fetch cycle brought no
+    /// rows. Returning a transaction makes the reducer main procedure
+    /// commit it under the full exactly-once protocol (split-brain CAS +
+    /// reshard fence + meta-state rewrite) even though the row-index
+    /// vector does not advance. This is how time-driven work — e.g.
+    /// final-firing event-time windows whose watermark passed while the
+    /// stream was quiet ([`crate::eventtime::WindowedReducer`]) — gets an
+    /// exactly-once commit without new rows. The default does nothing.
+    fn tick(&mut self) -> Option<Transaction> {
+        None
+    }
 }
 
 /// Handle to YT services, passed to user factories (the paper's

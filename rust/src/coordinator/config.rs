@@ -40,6 +40,17 @@ impl Default for SpillConfig {
     }
 }
 
+/// Event-time tracking knobs (the [`crate::eventtime`] subsystem). When
+/// present, mappers track a low-water event time over their routed rows
+/// and persist it as the `watermark_ms` column of their meta-state row;
+/// windowed reducers consult the fleet minimum to final-fire windows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventTimeConfig {
+    /// Column of the *mapped* (shuffled) rows carrying the event time in
+    /// ms. Rows without it are transparent to the watermark.
+    pub column: String,
+}
+
 /// All tunables of one streaming processor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProcessorConfig {
@@ -93,6 +104,16 @@ pub struct ProcessorConfig {
     /// attributed to (set by [`crate::dataflow`] topologies so the WA
     /// report can be broken down per stage). `None` = global-only.
     pub scope_label: Option<String>,
+    /// Event-time tracking (`None` = disabled; the `watermark_ms` meta
+    /// column stays at [`crate::eventtime::NO_WATERMARK`]).
+    pub event_time: Option<EventTimeConfig>,
+    /// Mapper state table of the *upstream* dataflow stage, when this
+    /// processor consumes an event-timed handoff: the local watermark is
+    /// capped by the upstream fleet watermark, so rows still buffered
+    /// upstream (and their future emissions into the handoff) can never be
+    /// overtaken. Wired by [`crate::dataflow::Topology::launch`]; `None`
+    /// for source stages.
+    pub upstream_watermark_table: Option<String>,
 }
 
 impl Default for ProcessorConfig {
@@ -120,6 +141,8 @@ impl Default for ProcessorConfig {
             pipelined_reducer: false,
             at_least_once: false,
             scope_label: None,
+            event_time: None,
+            upstream_watermark_table: None,
         }
     }
 }
@@ -173,6 +196,13 @@ impl ProcessorConfig {
             at_least_once: y.get_bool_or("at_least_once", d.at_least_once),
             scope_label: y
                 .get_opt("scope_label")
+                .and_then(|v| v.as_str().ok())
+                .map(str::to_string),
+            event_time: y.get_opt("event_time").map(|ey| EventTimeConfig {
+                column: ey.get_str_or("column", "ts").to_string(),
+            }),
+            upstream_watermark_table: y
+                .get_opt("upstream_watermark_table")
                 .and_then(|v| v.as_str().ok())
                 .map(str::to_string),
         })
@@ -230,6 +260,20 @@ mod tests {
         // Untouched keys keep defaults.
         assert_eq!(c.backoff_ms, ProcessorConfig::default().backoff_ms);
         assert!((c.spill.straggler_quorum - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_event_time_section() {
+        let c = ProcessorConfig::parse("{event_time = {column = first_ts_ms}}").unwrap();
+        assert_eq!(
+            c.event_time,
+            Some(EventTimeConfig {
+                column: "first_ts_ms".into()
+            })
+        );
+        assert_eq!(c.upstream_watermark_table, None);
+        let d = ProcessorConfig::parse("{}").unwrap();
+        assert_eq!(d.event_time, None, "disabled by default");
     }
 
     #[test]

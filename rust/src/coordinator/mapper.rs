@@ -26,11 +26,12 @@ use crate::coordinator::state::{MapperState, ReducerState};
 use crate::coordinator::window::{WindowEntry, WindowQueue};
 use crate::cypress::DiscoveryGroup;
 use crate::dyntable::TxnError;
+use crate::eventtime::{fetch_close, WatermarkTracker, NO_WATERMARK};
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
 use crate::queue::{PartitionReader, INPUT_COL_WRITE_TS};
 use crate::reshard::plan::{reducer_state_table, PlanPhase, ReshardPlan};
-use crate::rows::{codec, NameTable};
+use crate::rows::{codec, NameTable, Value};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService, RspGetRows};
 use crate::spill::{pick_straggler_buckets, SpillQueue};
 use crate::storage::{Journal, WriteCategory};
@@ -44,6 +45,47 @@ pub(crate) struct EpochBuckets {
     pub partitions: usize,
     pub buckets: Vec<BucketState>,
     pub spilled: Vec<SpillQueue>,
+}
+
+/// Event-time tracking of one mapper instance (present iff
+/// `ProcessorConfig::event_time` is set). See [`crate::eventtime`].
+pub(crate) struct EventTimeState {
+    /// Configured column name of the event time in mapped rows.
+    col_name: String,
+    /// Resolved column id (known after the first mapped batch).
+    col: Option<usize>,
+    /// Max event time ever ingested by this instance (the frontier).
+    frontier: i64,
+    /// Source-close timestamp, once observed in the close table.
+    closed_at: Option<i64>,
+    /// The last input read returned empty *after* the close marker was
+    /// observed — given the close contract (marker written after the
+    /// final append), the partition is fully consumed.
+    exhausted_after_close: bool,
+    /// Upstream fleet watermark fetched on the trim cadence — the value
+    /// the next caught-up observation locks in. Only meaningful when the
+    /// stage consumes an event-timed handoff.
+    pending_upstream_cap: Option<i64>,
+    /// The upstream cap that was current *before* the most recent empty
+    /// read. An empty read proves every row appended before it has been
+    /// ingested; any row appended after it was still buffered upstream at
+    /// that moment, so (by the emit contract) its event time is at or
+    /// above this cap — the local watermark must never exceed it.
+    caught_up_cap: Option<i64>,
+}
+
+impl EventTimeState {
+    fn new(col_name: String) -> EventTimeState {
+        EventTimeState {
+            col_name,
+            col: None,
+            frontier: NO_WATERMARK,
+            closed_at: None,
+            exhausted_after_close: false,
+            pending_upstream_cap: None,
+            caught_up_cap: None,
+        }
+    }
 }
 
 /// Mutable mapper internals shared between the ingestion thread and the
@@ -64,12 +106,17 @@ pub(crate) struct MapperInner {
     /// feeds the drain signal (an old epoch is only drained once the
     /// instance has mapped everything below the cutover).
     pub mapped_end: i64,
+    /// Event-time tracking (None = disabled).
+    pub event: Option<EventTimeState>,
     /// Builds the spill journal of one `(epoch, reducer)` queue.
     spill_journal: Arc<dyn Fn(i64, usize) -> Arc<Journal> + Send + Sync>,
 }
 
 impl MapperInner {
-    fn new(spill_journal: Arc<dyn Fn(i64, usize) -> Arc<Journal> + Send + Sync>) -> MapperInner {
+    fn new(
+        spill_journal: Arc<dyn Fn(i64, usize) -> Arc<Journal> + Send + Sync>,
+        event_col: Option<String>,
+    ) -> MapperInner {
         MapperInner {
             window: WindowQueue::new(),
             epochs: Vec::new(),
@@ -77,6 +124,7 @@ impl MapperInner {
             persisted_state: MapperState::initial(),
             out_name_table: None,
             mapped_end: 0,
+            event: event_col.map(EventTimeState::new),
             spill_journal,
         }
     }
@@ -138,6 +186,12 @@ impl MapperInner {
         self.mapped_end = fresh.shuffle_unread_row_index;
         self.local_state = fresh.clone();
         self.persisted_state = fresh;
+        if let Some(ev) = &mut self.event {
+            // Conservative: re-establish "input fully consumed" with a
+            // fresh empty read after the reset. The frontier stays — it is
+            // a monotone fact about what was ever ingested.
+            ev.exhausted_after_close = false;
+        }
     }
 
     /// `TrimWindowEntries` (§4.3.5): advance past fully-acknowledged
@@ -393,6 +447,7 @@ pub fn spawn_mapper(
     let mapper_index = spec.index;
     let scope_label = cfg.scope_label.clone();
 
+    let event_col = cfg.event_time.as_ref().map(|e| e.column.clone());
     let shared = Arc::new(MapperShared {
         cfg: cfg.clone(),
         index: spec.index,
@@ -400,14 +455,17 @@ pub fn spawn_mapper(
         address: address.clone(),
         client: deps.client.clone(),
         metrics: deps.metrics.clone(),
-        inner: Mutex::new(MapperInner::new(Arc::new(move |epoch, r| {
-            Journal::new_scoped(
-                format!("spill/m{mapper_index}/e{epoch}/r{r}"),
-                WriteCategory::Spill,
-                accounting.clone(),
-                scope_label.clone(),
-            )
-        }))),
+        inner: Mutex::new(MapperInner::new(
+            Arc::new(move |epoch, r| {
+                Journal::new_scoped(
+                    format!("spill/m{mapper_index}/e{epoch}/r{r}"),
+                    WriteCategory::Spill,
+                    accounting.clone(),
+                    scope_label.clone(),
+                )
+            }),
+            event_col,
+        )),
         mem_freed: Condvar::new(),
         pause: pause.clone(),
         kill: kill.clone(),
@@ -651,8 +709,28 @@ fn run_ingestion(
             continue;
         }
 
-        // Step 4: empty batch → next iteration (with backoff).
+        // Step 4: empty batch → next iteration (with backoff). An empty
+        // read after the source-close marker was observed means the
+        // partition is fully consumed (the marker is written after the
+        // final append), unlocking the watermark's lift to the close
+        // timestamp once the window drains.
         if batch.rowset.is_empty() {
+            {
+                let mut inner = sh.inner.lock().unwrap();
+                if let Some(ev) = &mut inner.event {
+                    if ev.closed_at.is_some() {
+                        ev.exhausted_after_close = true;
+                    }
+                    // Caught up: everything appended before this read is
+                    // ingested, so the upstream cap fetched *before* it
+                    // now bounds every not-yet-read row. Locked caps only
+                    // ever improve (the upstream fleet value is monotone).
+                    if let Some(pending) = ev.pending_upstream_cap {
+                        ev.caught_up_cap =
+                            Some(ev.caught_up_cap.map_or(pending, |c: i64| c.max(pending)));
+                    }
+                }
+            }
             maybe_trim_input(sh, reader, &mut last_trim_ms);
             maybe_poll_plan(sh, spec, deps, &mut cur, &mut mappers, &mut last_plan_ms);
             continue;
@@ -714,6 +792,27 @@ fn run_ingestion(
             if inner.out_name_table.is_none() && n_out > 0 {
                 inner.out_name_table = Some(mapped.rowset.name_table().clone());
             }
+            // Event-time bookkeeping: the entry's min pins the watermark
+            // while any of its rows is unacked; the max advances the
+            // ingest frontier.
+            let mut min_event_ts = None;
+            if let Some(ev) = &mut inner.event {
+                ev.exhausted_after_close = false;
+                if ev.col.is_none() {
+                    ev.col = mapped.rowset.name_table().id(&ev.col_name);
+                }
+                if let Some(col) = ev.col {
+                    for r in mapped.rowset.rows() {
+                        if let Some(ts) = r.get(col).and_then(Value::as_i64) {
+                            min_event_ts =
+                                Some(min_event_ts.map_or(ts, |m: i64| m.min(ts)));
+                            if ts > ev.frontier {
+                                ev.frontier = ts;
+                            }
+                        }
+                    }
+                }
+            }
             let entry_index = inner.window.next_entry_index();
             let byte_size = mapped.rowset.byte_size();
             let entry = WindowEntry {
@@ -727,6 +826,7 @@ fn run_ingestion(
                 bucket_ptr_count: 0,
                 byte_size,
                 read_ts_ms: clock.now_ms(),
+                min_event_ts,
             };
             inner.window.push(entry);
             let newest_pos = inner.epochs.len() - 1;
@@ -931,20 +1031,130 @@ fn try_adopt(
     }
 }
 
+/// Smallest event time over rows this instance still buffers (window
+/// entries + spill queues) — the value the watermark can never pass.
+/// Both sources keep the minimum cached (per window entry; per spill
+/// record at push time), so this is an O(entries + spilled) integer scan
+/// with no decoding.
+fn buffered_event_min(inner: &MapperInner) -> Option<i64> {
+    let mut min = inner.window.min_event_ts();
+    for set in &inner.epochs {
+        for q in &set.spilled {
+            if let Some(ts) = q.min_event_ts() {
+                min = Some(min.map_or(ts, |m: i64| m.min(ts)));
+            }
+        }
+    }
+    min
+}
+
+/// Recompute the event-time watermark into `local_state.watermark_ms`
+/// (clamped monotone). When `upstream_required` (this stage consumes an
+/// event-timed handoff), the data-derived candidate is additionally
+/// bounded by the *locked* upstream cap — the upstream fleet watermark
+/// that was current before the most recent caught-up (empty) read. Every
+/// row ingested before that read is covered by the buffered/frontier
+/// terms; every row appended after it was still buffered upstream at that
+/// moment, so the [`crate::dataflow::EmitReducer`] event-time contract
+/// puts its event time at or above the cap. Without a locked cap the
+/// watermark holds entirely.
+fn update_event_watermark(inner: &mut MapperInner, upstream_required: bool) {
+    let (frontier, closed_at, exhausted, caught_up_cap) = match &inner.event {
+        Some(ev) => (
+            ev.frontier,
+            ev.closed_at,
+            ev.exhausted_after_close,
+            ev.caught_up_cap,
+        ),
+        None => return,
+    };
+    let data = match buffered_event_min(inner) {
+        Some(m) => m,
+        None => {
+            // Nothing buffered: everything ingested so far is committed,
+            // so the watermark is the frontier (exclusive). After a close
+            // + a post-close empty read, the partition is complete and
+            // the watermark lifts to the close timestamp.
+            let base = if frontier == NO_WATERMARK {
+                NO_WATERMARK
+            } else {
+                frontier.saturating_add(1)
+            };
+            match closed_at {
+                Some(c) if exhausted => base.max(c),
+                _ => base,
+            }
+        }
+    };
+    let candidate = if upstream_required {
+        match caught_up_cap {
+            Some(cap) => data.min(cap),
+            None => NO_WATERMARK,
+        }
+    } else {
+        data
+    };
+    if candidate != NO_WATERMARK && candidate > inner.local_state.watermark_ms {
+        inner.local_state.watermark_ms = candidate;
+    }
+}
+
+/// Event-time housekeeping, on the trim cadence: poll the close marker,
+/// refresh the pending upstream cap (the next empty read locks it in),
+/// recompute the local watermark and record the gauge. No-op when event
+/// time is disabled.
+fn maybe_update_event_time(sh: &Arc<MapperShared>) {
+    if sh.cfg.event_time.is_none() {
+        return;
+    }
+    // Both reads happen outside the window lock (plain store reads).
+    let closed = fetch_close(&sh.client.store, &sh.cfg.mapper_state_table);
+    let upstream_required = sh.cfg.upstream_watermark_table.is_some();
+    let upstream = sh.cfg.upstream_watermark_table.as_ref().and_then(|t| {
+        WatermarkTracker::new(sh.client.store.clone(), t.clone()).fleet_watermark()
+    });
+    let wm = {
+        let mut inner = sh.inner.lock().unwrap();
+        if let Some(ev) = inner.event.as_mut() {
+            if let Some(c) = closed {
+                if ev.closed_at < Some(c) {
+                    ev.closed_at = Some(c);
+                }
+            }
+            if let Some(u) = upstream {
+                ev.pending_upstream_cap =
+                    Some(ev.pending_upstream_cap.map_or(u, |p: i64| p.max(u)));
+            }
+        }
+        update_event_watermark(&mut inner, upstream_required);
+        inner.local_state.watermark_ms
+    };
+    if wm != NO_WATERMARK {
+        sh.metrics
+            .series(&names::mapper_watermark(sh.index))
+            .record(sh.client.clock.now_ms(), wm as f64);
+    }
+}
+
 /// `TrimInputRows` (§4.3.5): transactional CAS of the persistent state to
-/// LocalMapperState, then trim the input partition.
+/// LocalMapperState, then trim the input partition. Also the watermark's
+/// persistence point: the `watermark_ms` column rides the same CAS, so
+/// event time adds **no** new write path.
 fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, last_trim_ms: &mut u64) {
     let now = sh.client.clock.now_ms();
     if now.saturating_sub(*last_trim_ms) < sh.cfg.trim_period_ms {
         return;
     }
     *last_trim_ms = now;
+    maybe_update_event_time(sh);
 
     let (local, persisted) = {
         let inner = sh.inner.lock().unwrap();
         (inner.local_state.clone(), inner.persisted_state.clone())
     };
-    if local.input_unread_row_index <= persisted.input_unread_row_index {
+    if local.input_unread_row_index <= persisted.input_unread_row_index
+        && local.watermark_ms <= persisted.watermark_ms
+    {
         return; // nothing new to persist
     }
 
@@ -1015,6 +1225,7 @@ fn try_spill(sh: &Arc<MapperShared>) {
             .copied()
             .collect();
         let old_head = inner.epochs[pos].buckets[b].first_entry_index();
+        let event_col = inner.event.as_ref().and_then(|ev| ev.col);
         for r in &rows {
             let row = inner
                 .window
@@ -1022,7 +1233,10 @@ fn try_spill(sh: &Arc<MapperShared>) {
                 .and_then(|e| e.row_at_shuffle_index(r.shuffle_index))
                 .expect("spill source row must be resident")
                 .clone();
-            inner.epochs[pos].spilled[b].push(r.shuffle_index, &row);
+            // Cache the event time with the record so the watermark query
+            // never decodes spilled rows.
+            let event_ts = event_col.and_then(|c| row.get(c).and_then(Value::as_i64));
+            inner.epochs[pos].spilled[b].push_with_event_ts(r.shuffle_index, &row, event_ts);
             spilled_rows += 1;
         }
         inner.epochs[pos].buckets[b].ack(i64::MAX); // drain the in-memory queue

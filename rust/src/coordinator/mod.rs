@@ -27,6 +27,6 @@ pub mod reducer;
 pub mod state;
 pub mod window;
 
-pub use config::{ComputeMode, ProcessorConfig, SpillConfig};
+pub use config::{ComputeMode, EventTimeConfig, ProcessorConfig, SpillConfig};
 pub use processor::{ClusterEnv, InputSpec, StreamingProcessor};
 pub use state::{MapperState, ReducerState};

@@ -479,6 +479,31 @@ impl StreamingProcessor {
         }
     }
 
+    /// Fleet event-time watermark: min over live mappers' persisted
+    /// watermarks (None when event time is disabled, unobserved, or any
+    /// live mapper has not reported yet). See [`crate::eventtime`].
+    pub fn fleet_watermark(&self) -> Option<i64> {
+        self.cfg.event_time.as_ref()?;
+        crate::eventtime::WatermarkTracker::new(
+            self.env.store.clone(),
+            self.cfg.mapper_state_table.clone(),
+        )
+        .fleet_watermark()
+    }
+
+    /// Declare the input closed for event time: asserts no further rows
+    /// will ever be appended to this processor's input and every event
+    /// time already appended is `< close_ts_ms`
+    /// ([`crate::eventtime::EVENT_TIME_CLOSED`] is the conventional +∞).
+    /// Mappers lift their watermarks to the close timestamp once they
+    /// drain, which lets windowed reducers final-fire everything.
+    pub fn close_event_time(&self, close_ts_ms: i64) -> Result<(), String> {
+        if self.cfg.event_time.is_none() {
+            return Err("close_event_time: event time is not enabled".into());
+        }
+        crate::eventtime::close_source(&self.env.store, &self.cfg.mapper_state_table, close_ts_ms)
+    }
+
     /// Total input payload bytes mappers have read so far.
     pub fn ingested_bytes(&self) -> u64 {
         self.env
@@ -535,6 +560,13 @@ fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), Str
     ) {
         Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
         Err(e) => return Err(e.to_string()),
+    }
+    if cfg.event_time.is_some() {
+        crate::eventtime::watermark::ensure_close_table(
+            &env.store,
+            &cfg.mapper_state_table,
+            cfg.scope_label.clone(),
+        )?;
     }
 
     let mut txn = env.store.begin();

@@ -576,6 +576,63 @@ impl ReducerRt {
         }
     }
 
+    /// Commit a time-driven (row-less) transaction from
+    /// [`Reducer::tick`] under the full exactly-once protocol: the
+    /// split-brain CAS (step 7), the reshard plan fence (step 7b — with
+    /// no fetched rows the per-mapper cutover checks are vacuous), and a
+    /// rewrite of the unchanged state row so racing twins serialize on
+    /// its version exactly like a normal commit.
+    pub(crate) fn commit_tick(&self, state: &ReducerState, mut txn: Transaction) -> CommitOutcome {
+        let state_table = &self.spec.state_table;
+        let state_key = ReducerState::key(self.spec.index);
+
+        let in_txn = match txn.lookup(state_table, &state_key) {
+            Ok(Some(row)) => ReducerState::from_row(&row),
+            _ => None,
+        };
+        if in_txn.as_ref() != Some(state) {
+            self.deps.metrics.add(names::REDUCER_SPLIT_BRAIN, 1);
+            txn.abort();
+            return CommitOutcome::SplitBrain;
+        }
+        let plan = match txn.lookup(&self.deps.reshard.plan_table, &ReshardPlan::key()) {
+            Ok(Some(row)) => ReshardPlan::from_row(&row),
+            _ => None,
+        };
+        let Some(plan) = plan else {
+            txn.abort();
+            return CommitOutcome::TransientError;
+        };
+        let fence_ok = match plan.phase {
+            PlanPhase::Stable => plan.epoch == self.spec.epoch,
+            PlanPhase::Migrating => {
+                self.spec.epoch == plan.next_epoch() || self.spec.epoch == plan.epoch
+            }
+        };
+        if !fence_ok {
+            self.deps.metrics.add(names::RESHARD_COMMIT_FENCED, 1);
+            txn.abort();
+            return CommitOutcome::TransientError;
+        }
+        if txn
+            .write(state_table, state.to_row(self.spec.index))
+            .is_err()
+        {
+            return CommitOutcome::TransientError;
+        }
+        match txn.commit() {
+            Ok(_) => {
+                self.deps.metrics.add(names::REDUCER_COMMITS, 1);
+                CommitOutcome::Committed { rows: 0, bytes: 0 }
+            }
+            Err(TxnError::Conflict { .. }) => {
+                self.deps.metrics.add(names::REDUCER_COMMIT_CONFLICTS, 1);
+                CommitOutcome::Conflict
+            }
+            Err(_) => CommitOutcome::TransientError,
+        }
+    }
+
     /// Record post-commit metrics; returns the new `last_commit_ms`.
     pub(crate) fn record_commit(&self, rows: i64, bytes: usize, last_commit_ms: u64) -> u64 {
         let now = self.deps.client.clock.now_ms();
@@ -668,6 +725,17 @@ fn run_reducer_serial(
                             return;
                         }
                     }
+                }
+            }
+            // Time-driven work on a quiet stream (e.g. final-firing
+            // event-time windows): the user hook may hand back a
+            // transaction, committed under the full exactly-once protocol.
+            if let Some(txn) = user_reducer.tick() {
+                if matches!(
+                    rt.commit_tick(&state, txn),
+                    CommitOutcome::Committed { .. }
+                ) {
+                    last_cycle_committed = true;
                 }
             }
             continue;

@@ -10,9 +10,13 @@
 //! (rows in `[prev_cutover, cutover)` belong to the previous epoch's
 //! partition map, rows `>= cutover` to the current one) and `retired`
 //! (this mapper slot was drained and decommissioned; reducers exclude it
-//! from their drain gate). The columns are CAS-updated like everything
-//! else, so split-brain twins always agree on where the partition map
-//! changed.
+//! from their drain gate), plus the event-time column `watermark_ms`:
+//! this mapper's low-water event time — every row it routed with event
+//! time strictly below the watermark has been committed by its reducer
+//! (see [`crate::eventtime`]). Monotone per mapper; the fleet watermark
+//! is the min over live (non-retired) mappers. The columns are
+//! CAS-updated like everything else, so split-brain twins always agree on
+//! where the partition map changed.
 //!
 //! Reducer state table columns: `reducer_index` (key),
 //! `committed_row_indices` — "a list of shuffle row indices, one for each
@@ -52,6 +56,12 @@ pub struct MapperState {
     /// so a dead index can never block a later reshard. Cleared (CAS)
     /// before the slot is revived.
     pub retired: bool,
+    /// Event-time low water of this mapper: every row it routed with event
+    /// time `< watermark_ms` has been committed by its reducer. Monotone
+    /// (the mapper clamps before persisting); stays
+    /// [`crate::eventtime::NO_WATERMARK`] when event time is disabled or
+    /// nothing was ingested yet.
+    pub watermark_ms: i64,
 }
 
 impl MapperState {
@@ -64,6 +74,7 @@ impl MapperState {
             cutover_index: 0,
             prev_cutover_index: 0,
             retired: false,
+            watermark_ms: crate::eventtime::NO_WATERMARK,
         }
     }
 
@@ -77,6 +88,7 @@ impl MapperState {
             ColumnSchema::value("cutover_index", ColumnType::Int64),
             ColumnSchema::value("prev_cutover_index", ColumnType::Int64),
             ColumnSchema::value("retired", ColumnType::Int64),
+            ColumnSchema::value("watermark_ms", ColumnType::Int64),
         ])
     }
 
@@ -90,6 +102,7 @@ impl MapperState {
             Value::Int64(self.cutover_index),
             Value::Int64(self.prev_cutover_index),
             Value::Int64(self.retired as i64),
+            Value::Int64(self.watermark_ms),
         ])
     }
 
@@ -102,6 +115,7 @@ impl MapperState {
             cutover_index: row.get(5)?.as_i64()?,
             prev_cutover_index: row.get(6)?.as_i64()?,
             retired: row.get(7)?.as_i64()? != 0,
+            watermark_ms: row.get(8)?.as_i64()?,
         })
     }
 
@@ -214,6 +228,7 @@ mod tests {
             cutover_index: 80,
             prev_cutover_index: 30,
             retired: true,
+            watermark_ms: 12_345,
         };
         let row = s.to_row(3);
         MapperState::schema().validate(&row).unwrap();
@@ -230,6 +245,11 @@ mod tests {
         assert_eq!(s.cutover_index, 0);
         assert_eq!(s.prev_cutover_index, 0);
         assert!(!s.retired, "mappers are born live");
+        assert_eq!(
+            s.watermark_ms,
+            crate::eventtime::NO_WATERMARK,
+            "no event time observed yet"
+        );
     }
 
     #[test]

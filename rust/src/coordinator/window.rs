@@ -46,6 +46,11 @@ pub struct WindowEntry {
     pub byte_size: usize,
     /// Simulated timestamp when the batch was read (metrics).
     pub read_ts_ms: u64,
+    /// Smallest event time among this entry's mapped rows (`None` when
+    /// event time is disabled or no row carried one). The mapper's
+    /// watermark can never pass a retained entry's minimum — retained
+    /// means some routed row was not yet committed by its reducer.
+    pub min_event_ts: Option<i64>,
 }
 
 impl WindowEntry {
@@ -172,6 +177,12 @@ impl WindowQueue {
         )
     }
 
+    /// Smallest `min_event_ts` across retained entries — the buffered
+    /// event-time low water the mapper's watermark is clamped by.
+    pub fn min_event_ts(&self) -> Option<i64> {
+        self.entries.iter().filter_map(|e| e.min_event_ts).min()
+    }
+
     /// Drop everything (split-brain reset, §4.3.3 step 3).
     pub fn clear(&mut self) {
         self.entries.clear();
@@ -211,6 +222,7 @@ mod tests {
             bucket_ptr_count: 0,
             byte_size,
             read_ts_ms: 0,
+            min_event_ts: Some(sh_range.0),
         }
     }
 
@@ -290,6 +302,26 @@ mod tests {
         assert!(q.total_bytes() > b1);
         q.trim_front().unwrap();
         assert_eq!(q.total_bytes(), 0);
+    }
+
+    #[test]
+    fn min_event_ts_tracks_retained_entries() {
+        let mut q = WindowQueue::new();
+        assert_eq!(q.min_event_ts(), None);
+        let mut a = entry(&q, (0, 1), (0, 3), 3);
+        a.min_event_ts = Some(10);
+        q.push(a);
+        let mut b = entry(&q, (1, 2), (3, 6), 3);
+        b.min_event_ts = Some(5); // out-of-order event time
+        q.push(b);
+        assert_eq!(q.min_event_ts(), Some(5));
+        q.trim_front().unwrap(); // both unpinned: everything pops
+        assert_eq!(q.min_event_ts(), None);
+        // Entries without event time are transparent to the minimum.
+        let mut e = entry(&q, (2, 3), (6, 7), 1);
+        e.min_event_ts = None;
+        q.push(e);
+        assert_eq!(q.min_event_ts(), None);
     }
 
     #[test]

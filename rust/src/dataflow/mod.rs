@@ -35,7 +35,16 @@
 //!   one stage's reducer fleet live and re-wires the adjacent stages; the
 //!   resident [`topology::TopologyAutoscaler`] runs the fused lag+backlog
 //!   policy loop ([`crate::reshard::driver`]) over *every* stage, each
-//!   against its own metrics scope.
+//!   against its own metrics scope — with optional per-stage
+//!   [`crate::reshard::DriverConfig`] overrides
+//!   ([`topology::TopologyAutoscaler::start_with_stage_configs`]).
+//! * **Event time** — an event-timed stage's fleet watermark caps its
+//!   downstream consumer's watermark (wired automatically at launch via
+//!   `upstream_watermark_table`), so stage k+1 windows on *true* event
+//!   time, and
+//!   [`topology::RunningTopology::close_event_time_cascade`] walks the
+//!   source-close marker down the chain — cascaded drain extended to
+//!   "the watermark reached +∞" ([`crate::eventtime`]).
 
 pub mod sink;
 pub mod topology;

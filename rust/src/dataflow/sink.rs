@@ -27,6 +27,14 @@ use crate::util::yson::Yson;
 /// [`crate::api::Mapper`]): under split-brain races the commit CAS picks
 /// one twin's emission, and correctness of the pipeline's *contents*
 /// relies on any twin emitting equivalent rows for the same batch.
+///
+/// **Event-time contract** (only when the downstream stage windows on
+/// event time): an emitted row's event-time column must be **no lower
+/// than the minimum event time of the batch it was derived from**. The
+/// upstream fleet watermark then bounds every future handoff append, and
+/// [`crate::coordinator::ProcessorConfig::upstream_watermark_table`]
+/// makes the downstream stage's watermark safe. Aggregating emitters
+/// satisfy this naturally (a session's `first_ts` *is* a batch minimum).
 pub trait EmitReducer: Send {
     fn emit(&mut self, rows: UnversionedRowset) -> Vec<UnversionedRow>;
 }

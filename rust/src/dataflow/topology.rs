@@ -116,6 +116,13 @@ pub enum TopologyError {
          (at_least_once must be off)"
     )]
     ExactlyOnceRequired(String),
+    #[error(
+        "stage '{stage}' windows on event time but its upstream stage '{upstream}' does not \
+         track it: rows buffered upstream would be invisible to the watermark, so final-fired \
+         windows could silently miss them. Enable event_time on '{upstream}' (its watermark \
+         caps '{stage}') or disable it on '{stage}'."
+    )]
+    EventTimeChainBroken { stage: String, upstream: String },
     #[error("stage '{stage}': mapper_count {mappers} != source partition count {partitions}")]
     SourceWiring {
         stage: String,
@@ -228,6 +235,22 @@ impl Topology {
                     found: upstream_columns.names().to_vec(),
                 });
             }
+            // Event-time safety: a stage windowing on event time must be
+            // able to trust its watermark. For stage 0 that is the
+            // source's ordering contract (the user's assumption, like any
+            // stream system); for a later stage it is the upstream fleet
+            // watermark cap — which only exists if the upstream stage
+            // tracks event time too. Without it the stage would window on
+            // its own ingest frontier while rows sit buffered upstream.
+            if k > 0
+                && spec.config.event_time.is_some()
+                && self.stages[k - 1].config.event_time.is_none()
+            {
+                return Err(TopologyError::EventTimeChainBroken {
+                    stage: spec.name.clone(),
+                    upstream: self.stages[k - 1].name.clone(),
+                });
+            }
         }
         Ok(())
     }
@@ -248,6 +271,14 @@ impl Topology {
 
         let mut stages: Vec<StageHandle> = Vec::new();
         let mut input = source.clone();
+        // Mapper state table of the nearest upstream event-timed stage:
+        // wired into the next event-timed stage as its watermark cap, so
+        // stage k+1 windows on *true* event time — rows still buffered in
+        // stage k (and their future emissions into the handoff) can never
+        // be overtaken. Requires the emit contract documented on
+        // [`crate::dataflow::EmitReducer`]: an emitted row's event time is
+        // never below the minimum event time of the batch it came from.
+        let mut upstream_watermark: Option<String> = None;
         for spec in specs {
             let scope = format!("{}/{}", topo_name, spec.name);
             let base = format!("//sys/dataflow/{}/{}", topo_name, spec.name);
@@ -258,6 +289,19 @@ impl Topology {
             cfg.reducer_state_table = format!("{base}/reducer_state");
             cfg.reshard_plan_table = format!("{base}/reshard_plan");
             cfg.discovery_dir = format!("{base}/discovery");
+            cfg.upstream_watermark_table = match (&cfg.event_time, &upstream_watermark) {
+                (Some(_), Some(up)) => Some(up.clone()),
+                _ => None,
+            };
+            // A stage without event time breaks the chain: its buffering
+            // is invisible to watermarks, so nothing downstream of it may
+            // trust an older stage's value. (Validation already rejects
+            // an event-timed stage behind such a break; this reset is
+            // defense in depth.)
+            upstream_watermark = cfg
+                .event_time
+                .is_some()
+                .then(|| cfg.mapper_state_table.clone());
 
             // Each stage gets its own hub so per-stage ingest/commit
             // counters stay separable; storage substrates stay shared.
@@ -455,6 +499,70 @@ impl RunningTopology {
         false
     }
 
+    /// Walk the event-time source-close marker down the chain: close
+    /// stage 0, wait until its fleet watermark reaches `close_ts_ms` and
+    /// its backlog (and handoff, if any) drained, then close stage 1, and
+    /// so on — extending cascaded drain to "the watermark reached +∞"
+    /// ([`crate::eventtime::EVENT_TIME_CLOSED`] is the conventional
+    /// value). A stage's close is only written once everything that could
+    /// still append to its input has flushed, preserving the close
+    /// contract (marker after the final append). Stages without event
+    /// time only contribute their drain condition. Returns `true` when
+    /// every event-timed stage's watermark reached the close timestamp
+    /// within the wall-clock budget. Producers into the source must
+    /// already be stopped.
+    pub fn close_event_time_cascade(&self, close_ts_ms: i64, wall_timeout_ms: u64) -> bool {
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_millis(wall_timeout_ms);
+        for (k, stage) in self.stages.iter().enumerate() {
+            // Everything upstream of stage k (including its own input
+            // backlog and the handoff feeding it) must be flushed before
+            // its close marker may be written.
+            loop {
+                let upstream_flushed = k == 0 || self.stage_drained(k - 1);
+                let input_flushed = stage.backlog_rows() == 0;
+                let upstream_watermark_done = k == 0
+                    || self.stages[k - 1]
+                        .processor
+                        .cfg
+                        .event_time
+                        .is_none()
+                    || self.stages[k - 1]
+                        .processor
+                        .fleet_watermark()
+                        .is_some_and(|w| w >= close_ts_ms);
+                if upstream_flushed && input_flushed && upstream_watermark_done {
+                    break;
+                }
+                if std::time::Instant::now() >= deadline {
+                    return false;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            if stage.processor.cfg.event_time.is_some() {
+                if stage.processor.close_event_time(close_ts_ms).is_err() {
+                    return false;
+                }
+                // Wait for this stage's own fleet to reach the close mark
+                // before descending further.
+                loop {
+                    if stage
+                        .processor
+                        .fleet_watermark()
+                        .is_some_and(|w| w >= close_ts_ms)
+                    {
+                        break;
+                    }
+                    if std::time::Instant::now() >= deadline {
+                        return false;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+            }
+        }
+        true
+    }
+
     /// Reshard stage `k`'s reducer fleet to `new_count` while the whole
     /// chain keeps running, re-wiring the adjacent partition mapping:
     /// an emitting stage's handoff table grows to one tablet per new
@@ -612,9 +720,26 @@ impl TopologyAutoscaler {
         topo: Arc<RunningTopology>,
         cfg: crate::reshard::DriverConfig,
     ) -> TopologyAutoscaler {
+        Self::start_with_stage_configs(topo, cfg, Vec::new())
+    }
+
+    /// Like [`TopologyAutoscaler::start`], but with optional per-stage
+    /// [`crate::reshard::DriverConfig`] overrides: `overrides[k]`, when
+    /// `Some`, replaces the shared config for stage `k` — heterogeneous
+    /// chains can run different watermarks/floors per stage (a wide
+    /// sessionize stage and a narrow aggregate stage rarely want the same
+    /// thresholds). Missing or `None` entries fall back to the shared
+    /// config; extra entries are ignored. The sweep cadence stays the
+    /// shared config's `tick_period_ms` (one loop drives every stage).
+    pub fn start_with_stage_configs(
+        topo: Arc<RunningTopology>,
+        shared: crate::reshard::DriverConfig,
+        overrides: Vec<Option<crate::reshard::DriverConfig>>,
+    ) -> TopologyAutoscaler {
         TopologyAutoscaler {
             inner: crate::reshard::driver::LoopHandle::spawn("topology-autoscaler", move |stop| {
-                run_topology_autoscaler(&topo, &cfg, stop)
+                let cfgs = resolve_stage_configs(topo.stage_count(), &shared, overrides);
+                run_topology_autoscaler(&topo, &shared, &cfgs, stop)
             }),
         }
     }
@@ -626,19 +751,33 @@ impl TopologyAutoscaler {
     }
 }
 
+/// Resolve the effective per-stage driver configs: override when given,
+/// shared otherwise. Extra override entries are ignored.
+fn resolve_stage_configs(
+    stage_count: usize,
+    shared: &crate::reshard::DriverConfig,
+    mut overrides: Vec<Option<crate::reshard::DriverConfig>>,
+) -> Vec<crate::reshard::DriverConfig> {
+    overrides.resize(stage_count, None);
+    overrides
+        .into_iter()
+        .map(|o| o.unwrap_or_else(|| shared.clone()))
+        .collect()
+}
+
 fn run_topology_autoscaler(
     topo: &Arc<RunningTopology>,
-    cfg: &crate::reshard::DriverConfig,
+    shared: &crate::reshard::DriverConfig,
+    cfgs: &[crate::reshard::DriverConfig],
     stop: &std::sync::atomic::AtomicBool,
 ) {
     use crate::reshard::driver::{drive_stage_tick, DriverDeps};
     use crate::reshard::Autoscaler;
 
     let clock = topo.env.clock.clone();
-    let mut scalers: Vec<Autoscaler> = topo
-        .stages
+    let mut scalers: Vec<Autoscaler> = cfgs
         .iter()
-        .map(|_| Autoscaler::new(cfg.autoscaler.clone()))
+        .map(|c| Autoscaler::new(c.autoscaler.clone()))
         .collect();
     // Per-stage deps, built once: the ctx factory snapshots live mapper
     // counts per use, and the hooks encode the stage coupling.
@@ -671,14 +810,14 @@ fn run_topology_autoscaler(
             if stop.load(std::sync::atomic::Ordering::SeqCst) {
                 return;
             }
-            drive_stage_tick(cfg, stage_deps, &mut scalers[k], stop);
+            drive_stage_tick(&cfgs[k], stage_deps, &mut scalers[k], stop);
             // Post-shrink hygiene: downstream mapper slots whose handoff
             // tablet drained for good are retired (their state row gets
             // the CAS'd `retired` flag, unblocking later reducer reshards
             // of the downstream stage).
             topo.retire_quiet_downstream_mappers(k);
         }
-        clock.sleep_ms(cfg.tick_period_ms);
+        clock.sleep_ms(shared.tick_period_ms);
     }
 }
 
@@ -879,6 +1018,77 @@ mod tests {
         assert!(matches!(
             t.validate(&source(2)),
             Err(TopologyError::DuplicateStageName(_))
+        ));
+    }
+
+    #[test]
+    fn per_stage_driver_configs_resolve_with_fallback() {
+        use crate::reshard::DriverConfig;
+
+        let shared = DriverConfig {
+            tick_period_ms: 500,
+            ..DriverConfig::default()
+        };
+        let special = DriverConfig {
+            tick_period_ms: 50,
+            signal_window_ms: 123,
+            ..DriverConfig::default()
+        };
+        // No overrides: every stage runs the shared config.
+        let all = resolve_stage_configs(3, &shared, Vec::new());
+        assert_eq!(all.len(), 3);
+        assert!(all.iter().all(|c| c.tick_period_ms == 500));
+        // Sparse overrides: stage 1 gets its own, the rest fall back;
+        // extra entries are ignored.
+        let mixed = resolve_stage_configs(
+            2,
+            &shared,
+            vec![None, Some(special.clone()), Some(special.clone())],
+        );
+        assert_eq!(mixed.len(), 2);
+        assert_eq!(mixed[0].tick_period_ms, 500);
+        assert_eq!(mixed[1].tick_period_ms, 50);
+        assert_eq!(mixed[1].signal_window_ms, 123);
+    }
+
+    #[test]
+    fn upstream_watermark_wiring_follows_event_time_stages() {
+        use crate::coordinator::EventTimeConfig;
+
+        // stage1 event-timed, stage2 event-timed: stage2 must be capped
+        // by stage1's (namespaced) mapper state table.
+        let mut s1 = cfg(4, 2);
+        s1.event_time = Some(EventTimeConfig { column: "ts".into() });
+        let mut s2 = cfg(2, 1);
+        s2.event_time = Some(EventTimeConfig { column: "ts".into() });
+        let env = crate::coordinator::processor::ClusterEnv::new(
+            crate::util::Clock::realtime(),
+            3,
+        );
+        let running = two_stage(s1, s2)
+            .launch(&env, source(4))
+            .expect("launch");
+        assert_eq!(
+            running.stage(0).processor.cfg.upstream_watermark_table,
+            None,
+            "source stage has no upstream"
+        );
+        assert_eq!(
+            running.stage(1).processor.cfg.upstream_watermark_table.as_deref(),
+            Some("//sys/dataflow/t/first/mapper_state"),
+        );
+        running.stop();
+
+        // A non-event-timed upstream breaks the chain — and validation
+        // rejects the wiring outright: the downstream stage would window
+        // on an unsafe frontier-derived watermark while rows sit buffered
+        // upstream, invisible to it.
+        let s1 = cfg(4, 2);
+        let mut s2 = cfg(2, 1);
+        s2.event_time = Some(EventTimeConfig { column: "ts".into() });
+        assert!(matches!(
+            two_stage(s1, s2).validate(&source(4)),
+            Err(TopologyError::EventTimeChainBroken { .. })
         ));
     }
 

@@ -1,0 +1,495 @@
+//! Cross-reshard window-state migration: the first *real*
+//! [`ResidualExporter`]/[`ResidualImporter`] pair.
+//!
+//! Open windows are state a retiring reducer genuinely owns — unlike the
+//! shared key-addressed output tables, a `(window, key)` accumulator in
+//! the old epoch's window-state table is invisible to the new fleet
+//! (window-state tables are per-epoch, like reducer state tables, so the
+//! CAS domains of concurrent fleets never collide). This pair serializes
+//! the retiring reducer's open windows into the migration handoff —
+//! grouped by the *post-reshard* owner, `hash(key) % new_partitions` —
+//! and rehydrates them on the new fleet inside the bootstrap transaction.
+//! Both ends ride the existing retirement/bootstrap CAS, so windows
+//! survive N→M resizes with exactly-once final-fire: `figure window`
+//! proves the drained output byte-identical to a run that never
+//! resharded.
+//!
+//! Two row kinds travel through the handoff (see
+//! [`crate::reshard::migration::residual_name_table`]):
+//! * `window_state` — one row per open `(window, key)` the retiring
+//!   reducer owned; payload `{w; k; a}` (window start, key, accumulator).
+//!   Imports merge via [`WindowFold::merge`], so accumulators arriving
+//!   from several old owners (impossible for one key, but harmless)
+//!   compose batch-invariantly.
+//! * `window_fired` — the retiring reducer's fired-watermark marker,
+//!   broadcast to every new tablet; imports keep the max. Without it a
+//!   post-reshard late row could re-open a window the old fleet already
+//!   fired and emit a duplicate.
+
+use std::sync::Arc;
+
+use crate::dyntable::{DynTableStore, Transaction, TxnError};
+use crate::reshard::migration::{ExportCtx, ImportCtx, ResidualExporter, ResidualImporter};
+use crate::rows::{UnversionedRow, Value};
+use crate::util::yson::Yson;
+
+use super::windowed::{
+    ensure_window_state_table, fired_marker_row, lookup_fired_marker, window_state_table,
+    WindowFold, MARKER_WINDOW,
+};
+use crate::api::partitioning;
+
+/// Payload kind of an open-window accumulator row.
+pub const KIND_WINDOW_STATE: &str = "window_state";
+/// Payload kind of a fired-watermark broadcast row.
+pub const KIND_WINDOW_FIRED: &str = "window_fired";
+
+/// Shared configuration of the exporter/importer pair. Build one and hand
+/// both halves to [`crate::reshard::ReshardRuntime::new_with_migrators`].
+pub struct WindowMigrators {
+    pub store: Arc<DynTableStore>,
+    pub fold: Arc<dyn WindowFold>,
+    /// Base path of the per-epoch window-state tables (same value the
+    /// stage's [`super::windowed::WindowedDeps`] carries).
+    pub state_base: String,
+    /// Accounting scope for lazily-created epoch tables (must match
+    /// [`super::windowed::WindowedDeps::scope`]).
+    pub scope: Option<String>,
+}
+
+impl WindowMigrators {
+    pub fn new(
+        store: Arc<DynTableStore>,
+        fold: Arc<dyn WindowFold>,
+        state_base: impl Into<String>,
+        scope: Option<String>,
+    ) -> Arc<WindowMigrators> {
+        Arc::new(WindowMigrators {
+            store,
+            fold,
+            state_base: state_base.into(),
+            scope,
+        })
+    }
+
+    /// The exporter/importer pair over this configuration.
+    pub fn pair(self: &Arc<Self>) -> (Arc<dyn ResidualExporter>, Arc<dyn ResidualImporter>) {
+        (
+            Arc::new(WindowResidualExporter(self.clone())),
+            Arc::new(WindowResidualImporter(self.clone())),
+        )
+    }
+}
+
+fn payload(w: i64, key: &str, acc: &str) -> String {
+    Yson::map(vec![
+        ("w", Yson::Int(w)),
+        ("k", Yson::str(key)),
+        ("a", Yson::str(acc)),
+    ])
+    .to_string()
+}
+
+fn parse_payload(text: &str) -> Option<(i64, String, String)> {
+    let y = Yson::parse(text).ok()?;
+    Some((
+        y.get("w").ok()?.as_i64().ok()?,
+        y.get("k").ok()?.as_str().ok()?.to_string(),
+        y.get("a").ok()?.as_str().ok()?.to_string(),
+    ))
+}
+
+/// Runs inside the retirement transaction: selects the retiring reducer's
+/// open windows (and its fired marker) and routes them to their
+/// post-reshard owners.
+pub struct WindowResidualExporter(Arc<WindowMigrators>);
+
+impl ResidualExporter for WindowResidualExporter {
+    fn export(
+        &self,
+        ctx: &ExportCtx,
+        txn: &mut Transaction,
+    ) -> Result<Vec<(usize, Vec<UnversionedRow>)>, TxnError> {
+        let m = &self.0;
+        let old_epoch = ctx.new_epoch - 1;
+        let table = window_state_table(&m.state_base, old_epoch);
+        // The candidate list comes from a plain scan; every candidate is
+        // then re-read through the retirement transaction, so the export
+        // payload is CAS-consistent with the retirement itself (a racing
+        // twin's fold or fire conflicts one of the two commits). A
+        // *failed* scan must fail the export — swallowing it would let
+        // the retirement commit with zero windows migrated, silently
+        // dropping every open accumulator of this reducer.
+        let scanned = m
+            .store
+            .scan(&table)
+            .map_err(|_| TxnError::Unavailable)?;
+        let mut per_tablet: Vec<Vec<UnversionedRow>> = vec![Vec::new(); ctx.new_partitions];
+        let fired_wm = lookup_fired_marker(txn, &table, ctx.old_index)?;
+        for row in scanned {
+            let (Some(w), Some(key)) = (
+                row.get(0).and_then(Value::as_i64),
+                row.get(1).and_then(Value::as_str).map(str::to_string),
+            ) else {
+                continue;
+            };
+            if w == MARKER_WINDOW {
+                continue; // markers are exported via the lookup above
+            }
+            if partitioning::hash_partition(&key, ctx.old_partitions) != ctx.old_index {
+                continue; // another old reducer's window
+            }
+            let Some(current) = txn.lookup(&table, &[Value::Int64(w), Value::from(key.as_str())])?
+            else {
+                continue; // fired between the scan and now (read set has it)
+            };
+            let Some(acc) = current.get(2).and_then(Value::as_str) else {
+                continue;
+            };
+            let dest = partitioning::hash_partition(&key, ctx.new_partitions);
+            per_tablet[dest].push(UnversionedRow::new(vec![
+                Value::Int64(ctx.old_index as i64),
+                Value::from(KIND_WINDOW_STATE),
+                Value::from(payload(w, &key, acc).as_str()),
+            ]));
+        }
+        if let Some(wm) = fired_wm {
+            // Broadcast: any new owner might receive a late row for a
+            // window this reducer already fired.
+            let text = Yson::Int(wm).to_string();
+            for rows in per_tablet.iter_mut() {
+                rows.push(UnversionedRow::new(vec![
+                    Value::Int64(ctx.old_index as i64),
+                    Value::from(KIND_WINDOW_FIRED),
+                    Value::from(text.as_str()),
+                ]));
+            }
+        }
+        Ok(per_tablet
+            .into_iter()
+            .enumerate()
+            .filter(|(_, rows)| !rows.is_empty())
+            .collect())
+    }
+}
+
+/// Runs inside the bootstrap transaction: merges migrated accumulators
+/// into the new epoch's window-state table and installs the fired marker.
+pub struct WindowResidualImporter(Arc<WindowMigrators>);
+
+impl ResidualImporter for WindowResidualImporter {
+    fn import(
+        &self,
+        ctx: &ImportCtx,
+        rows: &[UnversionedRow],
+        txn: &mut Transaction,
+    ) -> Result<(), TxnError> {
+        let m = &self.0;
+        let table = window_state_table(&m.state_base, ctx.epoch);
+        ensure_window_state_table(&m.store, &table, m.scope.clone())
+            .map_err(TxnError::NoSuchTable)?;
+        let mut fired_max: Option<i64> = None;
+        for row in rows {
+            let kind = row.get(1).and_then(Value::as_str).unwrap_or("");
+            let text = row.get(2).and_then(Value::as_str).unwrap_or("");
+            match kind {
+                KIND_WINDOW_FIRED => {
+                    if let Ok(y) = Yson::parse(text) {
+                        if let Ok(v) = y.as_i64() {
+                            fired_max = Some(fired_max.map_or(v, |f: i64| f.max(v)));
+                        }
+                    }
+                }
+                KIND_WINDOW_STATE => {
+                    let Some((w, key, acc_text)) = parse_payload(text) else {
+                        continue;
+                    };
+                    if partitioning::hash_partition(&key, ctx.new_partitions) != ctx.new_index {
+                        continue; // defensive: not ours under the new map
+                    }
+                    let Ok(acc) = Yson::parse(&acc_text) else {
+                        continue;
+                    };
+                    let row_key = vec![Value::Int64(w), Value::from(key.as_str())];
+                    let merged = match txn.lookup(&table, &row_key)? {
+                        Some(existing) => {
+                            let mut cur = existing
+                                .get(2)
+                                .and_then(Value::as_str)
+                                .and_then(|s| Yson::parse(s).ok())
+                                .unwrap_or_else(|| m.fold.zero());
+                            m.fold.merge(&mut cur, &acc);
+                            cur
+                        }
+                        None => acc,
+                    };
+                    txn.write(
+                        &table,
+                        UnversionedRow::new(vec![
+                            Value::Int64(w),
+                            Value::from(key.as_str()),
+                            Value::from(merged.to_string().as_str()),
+                        ]),
+                    )?;
+                }
+                // Unknown kinds (e.g. the default committed-vector audit
+                // rows) are transparent.
+                _ => {}
+            }
+        }
+        if let Some(wm) = fired_max {
+            let existing = lookup_fired_marker(txn, &table, ctx.new_index)?;
+            if existing < Some(wm) {
+                txn.write(&table, fired_marker_row(ctx.new_index, wm))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ReducerState;
+    use crate::storage::{WriteAccounting, WriteCategory};
+
+    const BASE: &str = "//sys/wm/window_state";
+
+    struct SumFold;
+
+    impl WindowFold for SumFold {
+        fn event_ts(&self, row: &UnversionedRow) -> Option<i64> {
+            row.get(1).and_then(Value::as_i64)
+        }
+        fn key(&self, row: &UnversionedRow) -> Option<String> {
+            row.get(0).and_then(Value::as_str).map(str::to_string)
+        }
+        fn zero(&self) -> Yson {
+            Yson::Int(0)
+        }
+        fn fold(&self, acc: &mut Yson, _row: &UnversionedRow) {
+            *acc = Yson::Int(acc.as_i64().unwrap_or(0) + 1);
+        }
+        fn merge(&self, into: &mut Yson, other: &Yson) {
+            *into = Yson::Int(into.as_i64().unwrap_or(0) + other.as_i64().unwrap_or(0));
+        }
+        fn emit(
+            &self,
+            _w: i64,
+            _e: i64,
+            _k: &str,
+            _a: &Yson,
+            _t: &mut Transaction,
+        ) -> Result<(), TxnError> {
+            Ok(())
+        }
+    }
+
+    fn write_state(store: &Arc<DynTableStore>, table: &str, w: i64, key: &str, acc: i64) {
+        let mut txn = store.begin();
+        txn.write(
+            table,
+            UnversionedRow::new(vec![
+                Value::Int64(w),
+                Value::from(key),
+                Value::from(Yson::Int(acc).to_string().as_str()),
+            ]),
+        )
+        .unwrap();
+        txn.commit().unwrap();
+    }
+
+    #[test]
+    fn export_routes_windows_to_new_owners_and_import_merges() {
+        let store = DynTableStore::new(WriteAccounting::new());
+        let migrators = WindowMigrators::new(store.clone(), Arc::new(SumFold), BASE, None);
+        let (exporter, importer) = migrators.pair();
+
+        // Old epoch 0: 1 reducer owns everything.
+        let old_table = window_state_table(BASE, 0);
+        ensure_window_state_table(&store, &old_table, None).unwrap();
+        write_state(&store, &old_table, 0, "alice", 3);
+        write_state(&store, &old_table, 100, "bob", 2);
+        // Fired marker of old reducer 0.
+        let mut txn = store.begin();
+        txn.write(
+            &old_table,
+            UnversionedRow::new(vec![
+                Value::Int64(MARKER_WINDOW),
+                Value::from("fired/0"),
+                Value::from(Yson::Int(77).to_string().as_str()),
+            ]),
+        )
+        .unwrap();
+        txn.commit().unwrap();
+
+        let ctx = ExportCtx {
+            old_index: 0,
+            old_partitions: 1,
+            new_partitions: 2,
+            new_epoch: 1,
+            state: ReducerState::initial(1),
+        };
+        let mut txn = store.begin();
+        let exports = exporter.export(&ctx, &mut txn).unwrap();
+        txn.abort();
+        // Every exported row is kind-tagged; the fired marker is broadcast
+        // to both new tablets.
+        let mut fired_rows = 0;
+        let mut state_rows = 0;
+        let mut tablets_with_fired = 0;
+        for (tablet, rows) in &exports {
+            assert!(*tablet < 2);
+            let mut saw_fired = false;
+            for r in rows {
+                match r.get(1).unwrap().as_str().unwrap() {
+                    KIND_WINDOW_FIRED => {
+                        fired_rows += 1;
+                        saw_fired = true;
+                    }
+                    KIND_WINDOW_STATE => {
+                        state_rows += 1;
+                        let (w, key, _acc) =
+                            parse_payload(r.get(2).unwrap().as_str().unwrap()).unwrap();
+                        assert_eq!(
+                            partitioning::hash_partition(&key, 2),
+                            *tablet,
+                            "window {w} routed to its new owner"
+                        );
+                    }
+                    other => panic!("unexpected kind {other}"),
+                }
+            }
+            if saw_fired {
+                tablets_with_fired += 1;
+            }
+        }
+        assert_eq!(state_rows, 2);
+        assert_eq!(fired_rows, tablets_with_fired);
+        assert_eq!(tablets_with_fired, exports.len());
+
+        // Import each tablet into the new epoch; then every window lives
+        // in the new table under its new owner, markers installed.
+        let new_table = window_state_table(BASE, 1);
+        for (tablet, rows) in &exports {
+            let ictx = ImportCtx {
+                new_index: *tablet,
+                new_partitions: 2,
+                epoch: 1,
+            };
+            let mut txn = store.begin();
+            importer.import(&ictx, rows, &mut txn).unwrap();
+            txn.commit().unwrap();
+        }
+        let rows = store.scan(&new_table).unwrap();
+        let states: Vec<_> = rows
+            .iter()
+            .filter(|r| r.get(0).unwrap().as_i64() != Some(MARKER_WINDOW))
+            .collect();
+        assert_eq!(states.len(), 2);
+        for r in &states {
+            let key = r.get(1).unwrap().as_str().unwrap();
+            let acc = Yson::parse(r.get(2).unwrap().as_str().unwrap())
+                .unwrap()
+                .as_i64()
+                .unwrap();
+            match key {
+                "alice" => assert_eq!(acc, 3),
+                "bob" => assert_eq!(acc, 2),
+                other => panic!("unexpected key {other}"),
+            }
+        }
+        let markers: Vec<_> = rows
+            .iter()
+            .filter(|r| r.get(0).unwrap().as_i64() == Some(MARKER_WINDOW))
+            .collect();
+        assert_eq!(markers.len(), exports.len(), "one marker per importing tablet");
+        for m in markers {
+            assert_eq!(
+                Yson::parse(m.get(2).unwrap().as_str().unwrap())
+                    .unwrap()
+                    .as_i64()
+                    .unwrap(),
+                77
+            );
+        }
+    }
+
+    #[test]
+    fn import_merges_with_existing_accumulators() {
+        let store = DynTableStore::new(WriteAccounting::new());
+        let migrators = WindowMigrators::new(store.clone(), Arc::new(SumFold), BASE, None);
+        let (_, importer) = migrators.pair();
+        let new_table = window_state_table(BASE, 2);
+        ensure_window_state_table(&store, &new_table, None).unwrap();
+        write_state(&store, &new_table, 0, "alice", 5);
+
+        let owner = partitioning::hash_partition("alice", 1);
+        let ictx = ImportCtx {
+            new_index: owner,
+            new_partitions: 1,
+            epoch: 2,
+        };
+        let rows = vec![UnversionedRow::new(vec![
+            Value::Int64(0),
+            Value::from(KIND_WINDOW_STATE),
+            Value::from(payload(0, "alice", &Yson::Int(4).to_string()).as_str()),
+        ])];
+        let mut txn = store.begin();
+        importer.import(&ictx, &rows, &mut txn).unwrap();
+        txn.commit().unwrap();
+        let out = store.scan(&new_table).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            Yson::parse(out[0].get(2).unwrap().as_str().unwrap())
+                .unwrap()
+                .as_i64()
+                .unwrap(),
+            9,
+            "merge folded 5 + 4"
+        );
+    }
+
+    #[test]
+    fn foreign_kinds_are_transparent_to_import() {
+        let store = DynTableStore::new(WriteAccounting::new());
+        let migrators = WindowMigrators::new(store.clone(), Arc::new(SumFold), BASE, None);
+        let (_, importer) = migrators.pair();
+        let ictx = ImportCtx {
+            new_index: 0,
+            new_partitions: 1,
+            epoch: 3,
+        };
+        let rows = vec![UnversionedRow::new(vec![
+            Value::Int64(0),
+            Value::from("committed_row_indices"),
+            Value::from("[1;2;3]"),
+        ])];
+        let mut txn = store.begin();
+        importer.import(&ictx, &rows, &mut txn).unwrap();
+        txn.commit().unwrap();
+        assert_eq!(store.scan(&window_state_table(BASE, 3)).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn accounting_category_of_migrated_state_is_event_time_at_rest() {
+        let acc = WriteAccounting::new();
+        let store = DynTableStore::new(acc.clone());
+        let migrators = WindowMigrators::new(store.clone(), Arc::new(SumFold), BASE, None);
+        let (_, importer) = migrators.pair();
+        let ictx = ImportCtx {
+            new_index: partitioning::hash_partition("k", 1),
+            new_partitions: 1,
+            epoch: 1,
+        };
+        let rows = vec![UnversionedRow::new(vec![
+            Value::Int64(9),
+            Value::from(KIND_WINDOW_STATE),
+            Value::from(payload(0, "k", &Yson::Int(1).to_string()).as_str()),
+        ])];
+        let mut txn = store.begin();
+        importer.import(&ictx, &rows, &mut txn).unwrap();
+        txn.commit().unwrap();
+        assert!(acc.bytes(WriteCategory::EventTime) > 0);
+    }
+}

@@ -1,0 +1,49 @@
+//! Event-time windowing: watermarks, final-fire window reducers, and
+//! cross-reshard window-state migration.
+//!
+//! The paper's processor persists only meta-state, yet every shared-table
+//! workload still re-commits per-batch *upserts* into the output dyntable
+//! — a key touched by k batches is written k times, so `UserOutput` bytes
+//! dominate the WA numerator. This subsystem turns that O(batches per
+//! key) term into O(1) per window:
+//!
+//! * [`watermark`] — each mapper tracks a low-water event time over its
+//!   routed rows and persists it as the `watermark_ms` column of its
+//!   meta-state row (no new write path: it rides the `TrimInputRows`
+//!   CAS). The **fleet watermark** is the min over live (non-retired)
+//!   mappers, computed by [`WatermarkTracker`]; it never regresses across
+//!   kills, twins, or reshards. "+∞" is an explicit *source close*
+//!   marker written by the driver after the last append.
+//! * [`windowed`] — [`WindowedReducer`] adapts a [`WindowFold`] into the
+//!   reducer contract: tumbling windows + allowed lateness + a late-row
+//!   side channel, with open-window accumulators persisted in the commit
+//!   transaction (accounted [`crate::storage::WriteCategory::EventTime`])
+//!   and each window's result emitted into `UserOutput` exactly once when
+//!   the watermark passes window end — final-fire rides the existing
+//!   row-index CAS, no new mechanism.
+//! * [`migrate`] — [`WindowMigrators`] is the first real
+//!   [`crate::reshard::ResidualExporter`]/`Importer` pair: retiring
+//!   reducers serialize their open windows (and fired markers) into the
+//!   migration handoff, new reducers rehydrate them keyed by the
+//!   post-reshard partition map — windows survive N→M resizes with
+//!   exactly-once final-fire.
+//!
+//! Topology propagation lives in [`crate::dataflow`]: an emitting stage's
+//! watermark caps its downstream consumers (rows still buffered upstream
+//! can never be overtaken), and
+//! [`crate::dataflow::RunningTopology::close_event_time_cascade`] walks
+//! the close marker down the chain so cascaded drain extends to
+//! "watermark reached +∞".
+
+pub mod migrate;
+pub mod watermark;
+pub mod windowed;
+
+pub use migrate::{WindowMigrators, WindowResidualExporter, WindowResidualImporter};
+pub use watermark::{
+    close_source, close_table_path, fetch_close, WatermarkTracker, EVENT_TIME_CLOSED, NO_WATERMARK,
+};
+pub use windowed::{
+    window_state_table, windowed_reducer_factory, WindowFold, WindowSpec, WindowedDeps,
+    WindowedReducer,
+};

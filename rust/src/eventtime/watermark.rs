@@ -1,0 +1,284 @@
+//! Watermarks: the event-time low water of a mapper fleet.
+//!
+//! **Definition.** A mapper's watermark `W` asserts: *every row this
+//! mapper ever routed whose event time is `< W` has been committed by its
+//! reducer.* The mapper derives it from what it can observe locally —
+//! the minimum event time over rows still buffered (window entries and
+//! spill queues pin exactly the not-yet-acked rows), falling back to the
+//! ingest frontier (max event time ever ingested, exclusive) when nothing
+//! is buffered — clamps it monotone, and persists it as the
+//! `watermark_ms` column of its meta-state row on the existing
+//! `TrimInputRows` CAS cadence. No new write path, no new consensus: the
+//! watermark rides the same row that already carries the trim cursor.
+//!
+//! **Fleet watermark** = min over *live* (non-retired) mappers, computed
+//! by [`WatermarkTracker`] from the mapper state table. Retired mappers
+//! drop out of the min (they can never serve a row again); a live mapper
+//! that has not reported yet holds the fleet at "no watermark" — firing
+//! cannot outrun an unobserved partition. Because each mapper's column is
+//! monotone and dropping a term can only raise a minimum, the fleet
+//! watermark never regresses across kills, split-brain twins, or a
+//! mid-stream reshard (the miniprop suite checks this).
+//!
+//! **Source close.** A drained source cannot be distinguished from a slow
+//! one, so "the watermark reached +∞" is an explicit control decision:
+//! the driver writes a close marker (one row in the `eventtime_close`
+//! table beside the mapper state table) *after* the last append, and each
+//! mapper lifts its watermark to the close timestamp once it has observed
+//! the marker, read an empty batch after observing it, and flushed every
+//! buffered row. [`EVENT_TIME_CLOSED`] is the conventional +∞ stand-in.
+
+use std::sync::Arc;
+
+use crate::coordinator::state::MapperState;
+use crate::dyntable::DynTableStore;
+use crate::rows::{ColumnSchema, ColumnType, TableSchema, UnversionedRow, Value};
+use crate::storage::WriteCategory;
+
+/// Sentinel for "no watermark observed yet" (also the column default when
+/// event time is disabled). Smaller than every real event time.
+pub const NO_WATERMARK: i64 = i64::MIN;
+
+/// Conventional "+∞" close timestamp: strictly above any real event time
+/// a workload emits, with headroom so `window_end + lateness` arithmetic
+/// can never overflow.
+pub const EVENT_TIME_CLOSED: i64 = i64::MAX / 4;
+
+/// Path of the source-close control table, derived from the stage's
+/// mapper state table path.
+pub fn close_table_path(mapper_state_table: &str) -> String {
+    format!("{mapper_state_table}/eventtime_close")
+}
+
+/// Schema of the close table: a single row (key 0) carrying the close
+/// timestamp.
+pub fn close_table_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("k", ColumnType::Int64),
+        ColumnSchema::value("close_ts_ms", ColumnType::Int64),
+    ])
+}
+
+/// Create the close table (idempotent). Called by processor setup when
+/// event time is enabled.
+pub fn ensure_close_table(
+    store: &Arc<DynTableStore>,
+    mapper_state_table: &str,
+    scope: Option<String>,
+) -> Result<(), String> {
+    use crate::dyntable::store::StoreError;
+    match store.create_table_scoped(
+        &close_table_path(mapper_state_table),
+        close_table_schema(),
+        WriteCategory::EventTime,
+        scope,
+    ) {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => Ok(()),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+/// Persist the close marker: asserts *no further rows will ever be
+/// appended to this stage's input*, and that every event time already
+/// appended is `< close_ts_ms`. Idempotent for the same timestamp; a
+/// higher timestamp overwrites (re-opening is not supported). Retries
+/// transient store errors a bounded number of times.
+pub fn close_source(
+    store: &Arc<DynTableStore>,
+    mapper_state_table: &str,
+    close_ts_ms: i64,
+) -> Result<(), String> {
+    let table = close_table_path(mapper_state_table);
+    let mut last_err = String::from("close_source: retries exhausted");
+    for _ in 0..64 {
+        let mut txn = store.begin();
+        match txn.lookup(&table, &[Value::Int64(0)]) {
+            Ok(Some(row)) => {
+                let existing = row.get(1).and_then(Value::as_i64).unwrap_or(NO_WATERMARK);
+                if existing >= close_ts_ms {
+                    return Ok(()); // already closed at or beyond this point
+                }
+            }
+            Ok(None) => {}
+            Err(e) => {
+                last_err = e.to_string();
+                continue;
+            }
+        }
+        if let Err(e) = txn.write(
+            &table,
+            UnversionedRow::new(vec![Value::Int64(0), Value::Int64(close_ts_ms)]),
+        ) {
+            last_err = e.to_string();
+            continue;
+        }
+        match txn.commit() {
+            Ok(_) => return Ok(()),
+            Err(e) => last_err = e.to_string(),
+        }
+    }
+    Err(last_err)
+}
+
+/// Non-transactional read of the close marker (`None` = not closed, or
+/// table missing / store outage — all safely "not closed").
+pub fn fetch_close(store: &DynTableStore, mapper_state_table: &str) -> Option<i64> {
+    store
+        .lookup(&close_table_path(mapper_state_table), &[Value::Int64(0)])
+        .ok()
+        .flatten()
+        .and_then(|row| row.get(1).and_then(Value::as_i64))
+}
+
+/// Computes the fleet watermark from a mapper state table. Stateless —
+/// every call reads the live rows, so a consult after a crash or reshard
+/// sees at least the value any earlier consult saw (per-mapper columns
+/// are monotone, retired mappers only ever leave the min).
+#[derive(Clone)]
+pub struct WatermarkTracker {
+    store: Arc<DynTableStore>,
+    mapper_state_table: String,
+}
+
+impl WatermarkTracker {
+    pub fn new(store: Arc<DynTableStore>, mapper_state_table: impl Into<String>) -> WatermarkTracker {
+        WatermarkTracker {
+            store,
+            mapper_state_table: mapper_state_table.into(),
+        }
+    }
+
+    pub fn mapper_state_table(&self) -> &str {
+        &self.mapper_state_table
+    }
+
+    /// The fleet watermark: min over live (non-retired) mappers'
+    /// `watermark_ms`. `None` when the table is unreadable, empty, or any
+    /// live mapper has not reported a watermark yet — all of which must
+    /// hold firing, never advance it.
+    pub fn fleet_watermark(&self) -> Option<i64> {
+        let rows = self.store.scan(&self.mapper_state_table).ok()?;
+        let mut min: Option<i64> = None;
+        let mut live = 0usize;
+        for row in &rows {
+            let Some(state) = MapperState::from_row(row) else {
+                return None; // corrupt row: hold
+            };
+            if state.retired {
+                continue;
+            }
+            live += 1;
+            if state.watermark_ms == NO_WATERMARK {
+                return None; // an unobserved live partition gates the fleet
+            }
+            min = Some(min.map_or(state.watermark_ms, |m: i64| m.min(state.watermark_ms)));
+        }
+        if live == 0 {
+            return None; // nothing live: a fleet of zero reports nothing
+        }
+        min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::WriteAccounting;
+
+    const TABLE: &str = "//sys/p/mapper_state";
+
+    fn store_with_states(states: &[(usize, i64, bool)]) -> Arc<DynTableStore> {
+        let store = DynTableStore::new(WriteAccounting::new());
+        store
+            .create_table(TABLE, MapperState::schema(), WriteCategory::MapperMeta)
+            .unwrap();
+        let mut txn = store.begin();
+        for &(index, wm, retired) in states {
+            let mut s = MapperState::initial();
+            s.watermark_ms = wm;
+            s.retired = retired;
+            txn.write(TABLE, s.to_row(index)).unwrap();
+        }
+        txn.commit().unwrap();
+        store
+    }
+
+    #[test]
+    fn fleet_watermark_is_min_over_live() {
+        let store = store_with_states(&[(0, 100, false), (1, 70, false), (2, 250, false)]);
+        let t = WatermarkTracker::new(store, TABLE);
+        assert_eq!(t.fleet_watermark(), Some(70));
+    }
+
+    #[test]
+    fn retired_mappers_drop_out_of_the_min() {
+        let store = store_with_states(&[(0, 100, false), (1, 30, true), (2, 250, false)]);
+        let t = WatermarkTracker::new(store.clone(), TABLE);
+        assert_eq!(
+            t.fleet_watermark(),
+            Some(100),
+            "a retired slot's stale low watermark must not hold the fleet"
+        );
+        // Retiring the minimum live mapper can only raise the fleet value.
+        let mut txn = store.begin();
+        let mut s = MapperState::initial();
+        s.watermark_ms = 100;
+        s.retired = true;
+        txn.write(TABLE, s.to_row(0)).unwrap();
+        txn.commit().unwrap();
+        assert_eq!(t.fleet_watermark(), Some(250));
+    }
+
+    #[test]
+    fn unreported_live_mapper_holds_the_fleet() {
+        let store = store_with_states(&[(0, 100, false), (1, NO_WATERMARK, false)]);
+        let t = WatermarkTracker::new(store, TABLE);
+        assert_eq!(t.fleet_watermark(), None);
+    }
+
+    #[test]
+    fn empty_or_missing_table_reports_nothing() {
+        let store = store_with_states(&[]);
+        assert_eq!(WatermarkTracker::new(store.clone(), TABLE).fleet_watermark(), None);
+        assert_eq!(
+            WatermarkTracker::new(store, "//no/such/table").fleet_watermark(),
+            None
+        );
+    }
+
+    #[test]
+    fn all_retired_reports_nothing() {
+        let store = store_with_states(&[(0, 10, true), (1, 20, true)]);
+        assert_eq!(WatermarkTracker::new(store, TABLE).fleet_watermark(), None);
+    }
+
+    #[test]
+    fn close_marker_roundtrip_and_idempotence() {
+        let store = DynTableStore::new(WriteAccounting::new());
+        ensure_close_table(&store, TABLE, None).unwrap();
+        assert_eq!(fetch_close(&store, TABLE), None);
+        close_source(&store, TABLE, 1_000).unwrap();
+        assert_eq!(fetch_close(&store, TABLE), Some(1_000));
+        // Re-closing at the same or a lower point is a no-op.
+        close_source(&store, TABLE, 1_000).unwrap();
+        close_source(&store, TABLE, 500).unwrap();
+        assert_eq!(fetch_close(&store, TABLE), Some(1_000));
+        close_source(&store, TABLE, EVENT_TIME_CLOSED).unwrap();
+        assert_eq!(fetch_close(&store, TABLE), Some(EVENT_TIME_CLOSED));
+    }
+
+    #[test]
+    fn fetch_close_on_missing_table_is_not_closed() {
+        let store = DynTableStore::new(WriteAccounting::new());
+        assert_eq!(fetch_close(&store, "//sys/none"), None);
+    }
+
+    #[test]
+    fn close_bytes_are_accounted_as_event_time() {
+        let acc = WriteAccounting::new();
+        let store = DynTableStore::new(acc.clone());
+        ensure_close_table(&store, TABLE, None).unwrap();
+        close_source(&store, TABLE, 99).unwrap();
+        assert!(acc.bytes(WriteCategory::EventTime) > 0);
+    }
+}

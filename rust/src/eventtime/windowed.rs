@@ -1,0 +1,791 @@
+//! Final-fire window reducers: tumbling event-time windows whose results
+//! are written to the user output **exactly once**, when the fleet
+//! watermark passes window end (+ allowed lateness).
+//!
+//! The write-amplification story: a per-batch-upsert reducer touches a
+//! `(key)` output row once per batch that mentions the key — `UserOutput`
+//! bytes scale with O(batches per key). A [`WindowedReducer`] instead
+//! accumulates per-`(window, key)` state and emits each window's result
+//! a single time — `UserOutput` becomes O(1) per window, the dominant WA
+//! term gone. The open-window accumulators are compact
+//! meta-state-sized records persisted in the commit transaction
+//! (accounted as [`WriteCategory::EventTime`], reported honestly by
+//! `figure window`), so a crashed or split-brain instance rehydrates from
+//! the table instead of losing window contents.
+//!
+//! Exactly-once rides the existing row-index CAS, with **no new
+//! mechanism**: accumulator upserts, fired-watermark markers, final
+//! emissions, deletes and late-row side-channel appends all happen inside
+//! the transaction the reducer main procedure commits together with its
+//! meta-state row. A split-brain loser's folds and fires never land; a
+//! winner's land atomically with the row-index advance, so a re-fetched
+//! batch can never double-fold and a window can never double-fire.
+//!
+//! Why firing is safe: a mapper's watermark only passes a row once that
+//! row was *committed* by its reducer (buffered rows pin the watermark —
+//! see [`crate::eventtime::watermark`]). So when the fleet watermark
+//! reaches `window_end + lateness`, every row of that window is already
+//! folded into some reducer's persisted accumulator, and the fire emits a
+//! complete result. Rows that arrive for an already-fired window (only
+//! possible with out-of-order event times beyond the allowed lateness) go
+//! to the **late side channel** — an ordered table appended within the
+//! same transaction, so even lateness handling is exactly-once.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::api::{partitioning, Client, Reducer, ReducerSpec};
+use crate::dyntable::{DynTableStore, Transaction, TxnError};
+use crate::metrics::hub::names;
+use crate::metrics::MetricsHub;
+use crate::queue::ordered_table::OrderedTable;
+use crate::reshard::plan::{PlanPhase, ReshardPlan};
+use crate::rows::{ColumnSchema, ColumnType, TableSchema, UnversionedRow, UnversionedRowset, Value};
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+
+use super::watermark::{WatermarkTracker, NO_WATERMARK};
+
+/// Tumbling-window geometry plus allowed lateness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window length in event-time ms.
+    pub size_ms: i64,
+    /// How long past window end the watermark must travel before the
+    /// window final-fires. Rows arriving later than that are late.
+    pub allowed_lateness_ms: i64,
+}
+
+impl WindowSpec {
+    pub fn tumbling(size_ms: i64) -> WindowSpec {
+        assert!(size_ms > 0, "window size must be positive");
+        WindowSpec {
+            size_ms,
+            allowed_lateness_ms: 0,
+        }
+    }
+
+    pub fn with_lateness(self, allowed_lateness_ms: i64) -> WindowSpec {
+        assert!(allowed_lateness_ms >= 0);
+        WindowSpec {
+            allowed_lateness_ms,
+            ..self
+        }
+    }
+
+    /// Start of the window containing `ts` (floor division, negative-safe).
+    pub fn window_start(&self, ts: i64) -> i64 {
+        ts.div_euclid(self.size_ms) * self.size_ms
+    }
+
+    /// Exclusive end of the window starting at `window_start`.
+    pub fn window_end(&self, window_start: i64) -> i64 {
+        window_start + self.size_ms
+    }
+
+    /// Is the window starting at `window_start` final under `watermark`?
+    /// (Watermark semantics: all rows with event time `< watermark` are
+    /// committed — so the window is complete once the watermark reaches
+    /// `end + lateness`.)
+    pub fn is_final(&self, window_start: i64, watermark: i64) -> bool {
+        watermark
+            >= self
+                .window_end(window_start)
+                .saturating_add(self.allowed_lateness_ms)
+    }
+}
+
+/// User logic of a windowed stage: how rows map to (event time, key), how
+/// they fold into a compact accumulator, and what the final fire writes.
+///
+/// Contracts (all required for the byte-identical-output guarantees):
+/// * `key` must equal the routing key the stage's mapper hash-partitions
+///   by — ownership of persisted window state is re-derived from it.
+/// * `fold`/`merge` must be **batch-invariant** (commutative, associative
+///   over row multisets), like every reducer in this system.
+/// * `emit` must be deterministic in its inputs and write only
+///   key-addressed rows (so firing order cannot matter).
+pub trait WindowFold: Send + Sync {
+    /// Event time of one row (`None` = row is dropped, deterministically).
+    fn event_ts(&self, row: &UnversionedRow) -> Option<i64>;
+    /// Grouping/routing key of one row (`None` = dropped).
+    fn key(&self, row: &UnversionedRow) -> Option<String>;
+    /// Fresh accumulator.
+    fn zero(&self) -> Yson;
+    /// Fold one row into an accumulator.
+    fn fold(&self, acc: &mut Yson, row: &UnversionedRow);
+    /// Merge another accumulator in (rehydration, reshard import).
+    fn merge(&self, into: &mut Yson, other: &Yson);
+    /// Write the final window result into the firing transaction. Called
+    /// exactly once per (window, key) across the stage's whole lifetime.
+    fn emit(
+        &self,
+        window_start: i64,
+        window_end: i64,
+        key: &str,
+        acc: &Yson,
+        txn: &mut Transaction,
+    ) -> Result<(), TxnError>;
+}
+
+/// Per-epoch window-state table path (same convention as the reducer
+/// state tables: epoch 0 keeps the base path).
+pub fn window_state_table(base: &str, epoch: i64) -> String {
+    if epoch == 0 {
+        base.to_string()
+    } else {
+        format!("{base}/e{epoch}")
+    }
+}
+
+/// Schema of a window-state table: `(window_start, win_key) → acc`.
+/// Fired-watermark markers live in the same table under
+/// `window_start == MARKER_WINDOW` with `win_key = "fired/<index>"`.
+pub fn window_state_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("window_start", ColumnType::Int64),
+        ColumnSchema::key("win_key", ColumnType::Str),
+        ColumnSchema::value("acc", ColumnType::Str),
+    ])
+}
+
+/// Reserved `window_start` of the per-reducer fired-watermark marker rows.
+pub const MARKER_WINDOW: i64 = i64::MIN;
+
+fn marker_key(index: usize) -> String {
+    format!("fired/{index}")
+}
+
+/// Table key of reducer `index`'s fired-watermark marker row.
+pub(crate) fn marker_row_key(index: usize) -> Vec<Value> {
+    vec![
+        Value::Int64(MARKER_WINDOW),
+        Value::from(marker_key(index).as_str()),
+    ]
+}
+
+/// The marker row itself (the single encoding every reader/writer —
+/// reducer, exporter, importer — must share).
+pub(crate) fn fired_marker_row(index: usize, fired_wm: i64) -> UnversionedRow {
+    UnversionedRow::new(vec![
+        Value::Int64(MARKER_WINDOW),
+        Value::from(marker_key(index).as_str()),
+        Value::from(Yson::Int(fired_wm).to_string().as_str()),
+    ])
+}
+
+/// Read reducer `index`'s fired watermark through `txn` (`None` when the
+/// marker is absent or unparsable).
+pub(crate) fn lookup_fired_marker(
+    txn: &mut Transaction,
+    table: &str,
+    index: usize,
+) -> Result<Option<i64>, TxnError> {
+    Ok(txn
+        .lookup(table, &marker_row_key(index))?
+        .and_then(|r| r.get(2).and_then(Value::as_str).map(str::to_string))
+        .and_then(|s| Yson::parse(&s).ok())
+        .and_then(|y| y.as_i64().ok()))
+}
+
+/// Create a window-state table (idempotent).
+pub fn ensure_window_state_table(
+    store: &Arc<DynTableStore>,
+    path: &str,
+    scope: Option<String>,
+) -> Result<(), String> {
+    use crate::dyntable::store::StoreError;
+    match store.create_table_scoped(path, window_state_schema(), WriteCategory::EventTime, scope) {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => Ok(()),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+/// Everything a [`WindowedReducer`] (and the reshard migrators) need to
+/// know about their stage, shared by the whole fleet.
+pub struct WindowedDeps {
+    pub spec: WindowSpec,
+    pub fold: Arc<dyn WindowFold>,
+    /// Base path of the per-epoch window-state tables.
+    pub state_base: String,
+    /// The stage's reshard plan table (resolves an epoch's fleet size).
+    pub plan_table: String,
+    /// The stage's mapper state table (fleet watermark source).
+    pub mapper_state_table: String,
+    /// Late side channel: rows whose window already final-fired. One
+    /// tablet per reducer index (grown on demand).
+    pub late: Arc<OrderedTable>,
+    pub metrics: Arc<MetricsHub>,
+    /// Write-accounting scope the window-state tables are attributed to
+    /// (the stage's scope label in a topology; `None` standalone) — keeps
+    /// the per-stage `event_time` WA line honest.
+    pub scope: Option<String>,
+}
+
+/// `CreateReducer` for a windowed final stage: every spawned instance
+/// shares the stage's [`WindowedDeps`].
+pub fn windowed_reducer_factory(deps: Arc<WindowedDeps>) -> crate::api::ReducerFactory {
+    Arc::new(move |_cfg: &Yson, client: &Client, spec: &ReducerSpec| {
+        Box::new(WindowedReducer::new(deps.clone(), client, spec)) as Box<dyn Reducer>
+    })
+}
+
+/// The final-fire adapter: implements [`Reducer`] over a [`WindowFold`].
+pub struct WindowedReducer {
+    deps: Arc<WindowedDeps>,
+    client: Client,
+    index: usize,
+    epoch: i64,
+    /// Fleet size of this reducer's epoch (lazily resolved from the plan;
+    /// immutable once known).
+    partitions: Option<usize>,
+    tracker: WatermarkTracker,
+    /// Monotone clamp over observed fleet watermarks.
+    local_watermark: i64,
+}
+
+impl WindowedReducer {
+    pub fn new(deps: Arc<WindowedDeps>, client: &Client, spec: &ReducerSpec) -> WindowedReducer {
+        let tracker = WatermarkTracker::new(client.store.clone(), deps.mapper_state_table.clone());
+        // Best-effort here; a transient failure surfaces as retried txn
+        // errors in the reducer loop.
+        let _ = ensure_window_state_table(
+            &client.store,
+            &window_state_table(&deps.state_base, spec.epoch),
+            deps.scope.clone(),
+        );
+        WindowedReducer {
+            deps,
+            client: client.clone(),
+            index: spec.index,
+            epoch: spec.epoch,
+            partitions: None,
+            tracker,
+            local_watermark: NO_WATERMARK,
+        }
+    }
+
+    fn state_table(&self) -> String {
+        window_state_table(&self.deps.state_base, self.epoch)
+    }
+
+    /// This epoch's fleet size, from the plan row (an epoch's size never
+    /// changes once announced, so the first resolution is cached).
+    fn partitions(&mut self) -> Option<usize> {
+        if self.partitions.is_some() {
+            return self.partitions;
+        }
+        let plan = ReshardPlan::fetch(&self.client.store, &self.deps.plan_table)?;
+        let p = if plan.epoch == self.epoch {
+            Some(plan.partitions)
+        } else if plan.phase == PlanPhase::Migrating && plan.next_epoch() == self.epoch {
+            Some(plan.next_partitions)
+        } else {
+            None // zombie of a finalized-away epoch: never fires
+        };
+        self.partitions = p;
+        p
+    }
+
+    fn refresh_watermark(&mut self) {
+        if let Some(w) = self.tracker.fleet_watermark() {
+            self.local_watermark = self.local_watermark.max(w);
+        }
+        if self.local_watermark != NO_WATERMARK {
+            self.deps
+                .metrics
+                .series("eventtime/fleet_watermark_ms")
+                .record(self.client.clock.now_ms(), self.local_watermark as f64);
+        }
+    }
+
+    fn read_fired(&self, txn: &mut Transaction) -> Result<i64, TxnError> {
+        Ok(lookup_fired_marker(txn, &self.state_table(), self.index)?.unwrap_or(NO_WATERMARK))
+    }
+
+    fn write_fired(&self, txn: &mut Transaction, fired_wm: i64) -> Result<(), TxnError> {
+        txn.write(&self.state_table(), fired_marker_row(self.index, fired_wm))
+    }
+
+    /// Fire every final window this reducer owns into `txn`. Candidates
+    /// come from a table scan (cheap: open windows only) plus the
+    /// accumulators touched by this very transaction; every candidate is
+    /// re-read through the transaction, so the scan itself needs no
+    /// consistency — but a *failed* scan must fail the attempt: silently
+    /// firing only the touched subset would advance the fired marker past
+    /// scan-missed windows and strand them forever. Returns the number of
+    /// windows fired.
+    fn fire_into(
+        &mut self,
+        txn: &mut Transaction,
+        fired_wm: i64,
+        touched: &BTreeMap<(i64, String), Yson>,
+    ) -> Result<u64, TxnError> {
+        let wm = self.local_watermark;
+        if wm == NO_WATERMARK || wm <= fired_wm {
+            // Nothing can be final beyond the last firing pass: rows for
+            // windows final under `fired_wm` were routed late before they
+            // could open state, and every fire deletes its state row — so
+            // neither the table nor `touched` can hold a candidate. Skips
+            // the per-batch table scan on the hot path.
+            return Ok(0);
+        }
+        let Some(partitions) = self.partitions() else {
+            return Ok(0); // ownership unresolvable: hold fire, lose nothing
+        };
+        let table = self.state_table();
+        let mut candidates: BTreeSet<(i64, String)> = BTreeSet::new();
+        let scanned = self
+            .client
+            .store
+            .scan(&table)
+            .map_err(|_| TxnError::Unavailable)?;
+        for row in scanned {
+            let (Some(w), Some(key)) = (
+                row.get(0).and_then(Value::as_i64),
+                row.get(1).and_then(Value::as_str),
+            ) else {
+                continue;
+            };
+            if w == MARKER_WINDOW
+                || !self.deps.spec.is_final(w, wm)
+                || partitioning::hash_partition(key, partitions) != self.index
+            {
+                continue;
+            }
+            candidates.insert((w, key.to_string()));
+        }
+        for (w, key) in touched.keys() {
+            if self.deps.spec.is_final(*w, wm) {
+                candidates.insert((*w, key.clone()));
+            }
+        }
+
+        let mut fired = 0u64;
+        for (w, key) in &candidates {
+            let row_key = vec![Value::Int64(*w), Value::from(key.as_str())];
+            // Read through the transaction: validates against twins and
+            // picks up this commit's own folds (read-your-writes).
+            let Some(row) = txn.lookup(&table, &row_key)? else {
+                continue; // already fired by a winner we'll conflict with
+            };
+            let acc = row
+                .get(2)
+                .and_then(Value::as_str)
+                .and_then(|s| Yson::parse(s).ok())
+                .unwrap_or_else(|| self.deps.fold.zero());
+            self.deps
+                .fold
+                .emit(*w, self.deps.spec.window_end(*w), key, &acc, txn)?;
+            txn.delete(&table, row_key)?;
+            fired += 1;
+        }
+        if fired > 0 && wm > fired_wm {
+            self.write_fired(txn, wm)?;
+        }
+        if fired > 0 {
+            // Advisory (pre-commit) counter; conflicts are rare and only
+            // ever over-count.
+            self.deps.metrics.add(names::EVENTTIME_WINDOWS_FIRED, fired);
+        }
+        Ok(fired)
+    }
+
+    /// One attempt at the fold+fire transaction for a batch.
+    fn attempt_reduce(&mut self, rows: &UnversionedRowset) -> Result<Transaction, TxnError> {
+        let table = self.state_table();
+        let mut txn = self.client.begin();
+        let fired_wm = self.read_fired(&mut txn)?;
+
+        let mut touched: BTreeMap<(i64, String), Yson> = BTreeMap::new();
+        let mut late: Vec<UnversionedRow> = Vec::new();
+        for row in rows.rows() {
+            let (Some(ts), Some(key)) = (self.deps.fold.event_ts(row), self.deps.fold.key(row))
+            else {
+                continue; // malformed row: dropped deterministically
+            };
+            let w = self.deps.spec.window_start(ts);
+            if fired_wm != NO_WATERMARK && self.deps.spec.is_final(w, fired_wm) {
+                // This reducer already final-fired past this window: the
+                // row is late and goes to the side channel, exactly once
+                // (the append rides this same transaction).
+                late.push(row.clone());
+                continue;
+            }
+            let slot = (w, key);
+            if !touched.contains_key(&slot) {
+                let existing = txn
+                    .lookup(&table, &[Value::Int64(slot.0), Value::from(slot.1.as_str())])?
+                    .and_then(|r| r.get(2).and_then(Value::as_str).map(str::to_string))
+                    .and_then(|s| Yson::parse(&s).ok())
+                    .unwrap_or_else(|| self.deps.fold.zero());
+                touched.insert(slot.clone(), existing);
+            }
+            self.deps
+                .fold
+                .fold(touched.get_mut(&slot).expect("just inserted"), row);
+        }
+        for ((w, key), acc) in &touched {
+            txn.write(
+                &table,
+                UnversionedRow::new(vec![
+                    Value::Int64(*w),
+                    Value::from(key.as_str()),
+                    Value::from(acc.to_string().as_str()),
+                ]),
+            )?;
+        }
+
+        self.refresh_watermark();
+        self.fire_into(&mut txn, fired_wm, &touched)?;
+
+        if !late.is_empty() {
+            self.deps
+                .metrics
+                .add(names::EVENTTIME_LATE_ROWS, late.len() as u64);
+            self.deps.late.ensure_tablets(self.index + 1);
+            txn.append_ordered(self.deps.late.clone(), self.index, late)?;
+        }
+        Ok(txn)
+    }
+}
+
+impl Reducer for WindowedReducer {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction> {
+        if rows.is_empty() {
+            return None;
+        }
+        // Returning `None` for a non-empty batch would let the main
+        // procedure advance the meta-state *without* our folds — silent
+        // row loss. So a transient store failure is retried here, and a
+        // persistent one crashes the worker (panic = simulated process
+        // death): nothing committed, the supervisor restarts us, the
+        // batch is re-fetched. Exactly-once is preserved either way.
+        for _ in 0..500 {
+            match self.attempt_reduce(&rows) {
+                Ok(txn) => return Some(txn),
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+        panic!(
+            "windowed reducer {} (epoch {}): store kept failing; crashing for restart",
+            self.index, self.epoch
+        );
+    }
+
+    /// Empty-cycle hook: fire windows the advancing watermark finalized
+    /// even though no new rows arrived (end-of-stream drain, quiet keys).
+    fn tick(&mut self) -> Option<Transaction> {
+        self.refresh_watermark();
+        if self.local_watermark == NO_WATERMARK {
+            return None;
+        }
+        self.partitions()?;
+        let mut txn = self.client.begin();
+        let fired_wm = self.read_fired(&mut txn).ok()?;
+        if self.local_watermark <= fired_wm {
+            // Everything final was already fired at this watermark; scans
+            // can't produce new candidates. (Windows can still be *open*
+            // above the watermark — they are not final yet.)
+            txn.abort();
+            return None;
+        }
+        match self.fire_into(&mut txn, fired_wm, &BTreeMap::new()) {
+            Ok(0) | Err(_) => {
+                txn.abort();
+                None // nothing to do (or transient failure: retried next cycle)
+            }
+            Ok(_) => Some(txn),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::processor::ClusterEnv;
+    use crate::coordinator::state::MapperState;
+    use crate::row;
+    use crate::rows::{NameTable, RowsetBuilder};
+    use crate::util::{Clock, Guid};
+
+    const MAPPER_STATE: &str = "//sys/w/mapper_state";
+    const PLAN: &str = "//sys/w/reshard_plan";
+    const STATE_BASE: &str = "//sys/w/window_state";
+    const OUT: &str = "//out/windowed_test";
+
+    /// Toy fold: count rows per key; emit (window, key, count).
+    struct CountFold;
+
+    impl WindowFold for CountFold {
+        fn event_ts(&self, row: &UnversionedRow) -> Option<i64> {
+            row.get(2).and_then(Value::as_i64)
+        }
+        fn key(&self, row: &UnversionedRow) -> Option<String> {
+            row.get(0).and_then(Value::as_str).map(str::to_string)
+        }
+        fn zero(&self) -> Yson {
+            Yson::Int(0)
+        }
+        fn fold(&self, acc: &mut Yson, _row: &UnversionedRow) {
+            *acc = Yson::Int(acc.as_i64().unwrap_or(0) + 1);
+        }
+        fn merge(&self, into: &mut Yson, other: &Yson) {
+            *into = Yson::Int(into.as_i64().unwrap_or(0) + other.as_i64().unwrap_or(0));
+        }
+        fn emit(
+            &self,
+            window_start: i64,
+            _window_end: i64,
+            key: &str,
+            acc: &Yson,
+            txn: &mut Transaction,
+        ) -> Result<(), TxnError> {
+            txn.write(
+                OUT,
+                row![window_start, key, acc.as_i64().unwrap_or(0)],
+            )
+        }
+    }
+
+    struct TestRig {
+        env: ClusterEnv,
+        deps: Arc<WindowedDeps>,
+    }
+
+    fn rig(partitions: usize) -> TestRig {
+        let env = ClusterEnv::new(Clock::realtime(), 11);
+        env.store
+            .create_table(MAPPER_STATE, MapperState::schema(), WriteCategory::MapperMeta)
+            .unwrap();
+        env.store
+            .create_table(PLAN, ReshardPlan::schema(), WriteCategory::Reshard)
+            .unwrap();
+        env.store
+            .create_table(
+                OUT,
+                TableSchema::new(vec![
+                    ColumnSchema::key("window_start", ColumnType::Int64),
+                    ColumnSchema::key("key", ColumnType::Str),
+                    ColumnSchema::value("count", ColumnType::Int64),
+                ]),
+                WriteCategory::UserOutput,
+            )
+            .unwrap();
+        let mut txn = env.store.begin();
+        txn.write(PLAN, ReshardPlan::initial(partitions).to_row()).unwrap();
+        txn.commit().unwrap();
+        let late = OrderedTable::new_with_category(
+            "//sys/w/late",
+            NameTable::new(&["key", "payload", "ts"]),
+            partitions,
+            env.accounting.clone(),
+            WriteCategory::UserOutput,
+        );
+        let deps = Arc::new(WindowedDeps {
+            spec: WindowSpec::tumbling(100),
+            fold: Arc::new(CountFold),
+            state_base: STATE_BASE.into(),
+            plan_table: PLAN.into(),
+            mapper_state_table: MAPPER_STATE.into(),
+            late,
+            metrics: env.metrics.clone(),
+            scope: None,
+        });
+        TestRig { env, deps }
+    }
+
+    fn set_watermark(env: &ClusterEnv, index: usize, wm: i64) {
+        let mut txn = env.store.begin();
+        let mut s = MapperState::initial();
+        s.watermark_ms = wm;
+        txn.write(MAPPER_STATE, s.to_row(index)).unwrap();
+        txn.commit().unwrap();
+    }
+
+    fn reducer(rig: &TestRig, index: usize) -> WindowedReducer {
+        let spec = ReducerSpec {
+            processor_guid: Guid::from_seed(1),
+            state_table: "unused".into(),
+            index,
+            guid: Guid::from_seed(2),
+            num_mappers: 1,
+            epoch: 0,
+        };
+        WindowedReducer::new(rig.deps.clone(), &rig.env.client(), &spec)
+    }
+
+    fn batch(rows: &[(&str, i64)]) -> UnversionedRowset {
+        let mut b = RowsetBuilder::new(NameTable::new(&["key", "payload", "ts"]));
+        for (k, ts) in rows {
+            b.push(row![*k, "x", *ts]);
+        }
+        b.build()
+    }
+
+    /// The key used throughout these tests must be owned by reducer 0
+    /// under 1 partition (trivially true).
+    #[test]
+    fn accumulates_then_final_fires_exactly_once() {
+        let rig = rig(1);
+        let mut r = reducer(&rig, 0);
+
+        // Watermark below window end: fold only, no fire.
+        set_watermark(&rig.env, 0, 50);
+        let txn = r.reduce(batch(&[("a", 10), ("a", 20), ("b", 30)])).unwrap();
+        txn.commit().unwrap();
+        assert_eq!(rig.env.store.scan(OUT).unwrap().len(), 0, "window still open");
+        let state = rig.env.store.scan(&window_state_table(STATE_BASE, 0)).unwrap();
+        assert_eq!(state.len(), 2, "two open (window,key) accumulators");
+
+        // Another batch folds into the same accumulators.
+        let txn = r.reduce(batch(&[("a", 40)])).unwrap();
+        txn.commit().unwrap();
+
+        // Watermark passes window end: tick final-fires.
+        set_watermark(&rig.env, 0, 100);
+        let txn = r.tick().expect("windows are final");
+        txn.commit().unwrap();
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get(1).unwrap().as_str(), Some("a"));
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(3));
+        assert_eq!(out[1].get(1).unwrap().as_str(), Some("b"));
+        assert_eq!(out[1].get(2).unwrap().as_i64(), Some(1));
+        // Fired state deleted; only the marker row remains.
+        let state = rig.env.store.scan(&window_state_table(STATE_BASE, 0)).unwrap();
+        assert_eq!(state.len(), 1);
+        assert_eq!(state[0].get(0).unwrap().as_i64(), Some(MARKER_WINDOW));
+        // Nothing more to fire.
+        assert!(r.tick().is_none());
+    }
+
+    #[test]
+    fn fire_rides_the_commit_cas_split_brain_loser_fires_nothing() {
+        let rig = rig(1);
+        let mut a = reducer(&rig, 0);
+        let mut b = reducer(&rig, 0); // split-brain twin
+
+        set_watermark(&rig.env, 0, 10);
+        a.reduce(batch(&[("a", 5)])).unwrap().commit().unwrap();
+        set_watermark(&rig.env, 0, 200);
+
+        let ta = a.tick().expect("final window");
+        let tb = b.tick().expect("twin sees it too");
+        ta.commit().unwrap();
+        assert!(tb.commit().is_err(), "loser conflicts on the window row");
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1, "fired exactly once");
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn rows_and_fires_in_one_batch_when_watermark_already_passed() {
+        let rig = rig(1);
+        let mut r = reducer(&rig, 0);
+        // Watermark already past the window when its first row arrives:
+        // not late (never fired here) — fold and fire in the same commit.
+        set_watermark(&rig.env, 0, 500);
+        let txn = r.reduce(batch(&[("a", 10)])).unwrap();
+        txn.commit().unwrap();
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(1));
+        assert_eq!(rig.deps.late.retained_rows(), 0);
+    }
+
+    #[test]
+    fn late_rows_go_to_the_side_channel_not_the_output() {
+        let rig = rig(1);
+        let mut r = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 500);
+        // Fire window [0,100) with one row.
+        r.reduce(batch(&[("a", 10)])).unwrap().commit().unwrap();
+        // A straggler for the fired window: late.
+        let txn = r.reduce(batch(&[("a", 20)])).unwrap();
+        txn.commit().unwrap();
+        assert_eq!(rig.deps.late.end_index(0), 1, "late row appended");
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(1), "result not rewritten");
+    }
+
+    #[test]
+    fn allowed_lateness_keeps_windows_open_longer() {
+        let spec = WindowSpec::tumbling(100).with_lateness(50);
+        assert_eq!(spec.window_start(0), 0);
+        assert_eq!(spec.window_start(99), 0);
+        assert_eq!(spec.window_start(100), 100);
+        assert_eq!(spec.window_start(-1), -100);
+        assert!(!spec.is_final(0, 100));
+        assert!(!spec.is_final(0, 149));
+        assert!(spec.is_final(0, 150));
+
+        let rig = rig(1);
+        // Same geometry in the rig but with lateness.
+        let deps = Arc::new(WindowedDeps {
+            spec,
+            fold: rig.deps.fold.clone(),
+            state_base: rig.deps.state_base.clone(),
+            plan_table: rig.deps.plan_table.clone(),
+            mapper_state_table: rig.deps.mapper_state_table.clone(),
+            late: rig.deps.late.clone(),
+            metrics: rig.deps.metrics.clone(),
+            scope: None,
+        });
+        let spec0 = ReducerSpec {
+            processor_guid: Guid::from_seed(1),
+            state_table: "unused".into(),
+            index: 0,
+            guid: Guid::from_seed(3),
+            num_mappers: 1,
+            epoch: 0,
+        };
+        let mut r = WindowedReducer::new(deps, &rig.env.client(), &spec0);
+        set_watermark(&rig.env, 0, 120);
+        r.reduce(batch(&[("a", 10)])).unwrap().commit().unwrap();
+        assert!(r.tick().is_none(), "within lateness: window still open");
+        set_watermark(&rig.env, 0, 150);
+        r.tick().expect("now final").commit().unwrap();
+        assert_eq!(rig.env.store.scan(OUT).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn crash_rehydrates_from_the_persisted_accumulators() {
+        let rig = rig(1);
+        {
+            let mut r = reducer(&rig, 0);
+            set_watermark(&rig.env, 0, 10);
+            r.reduce(batch(&[("a", 5), ("a", 7)])).unwrap().commit().unwrap();
+            // r dropped here = crash; its memory is gone.
+        }
+        let mut fresh = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 10);
+        fresh.reduce(batch(&[("a", 9)])).unwrap().commit().unwrap();
+        set_watermark(&rig.env, 0, 999);
+        fresh.tick().expect("final").commit().unwrap();
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].get(2).unwrap().as_i64(),
+            Some(3),
+            "pre-crash folds survived in the window-state table"
+        );
+    }
+
+    #[test]
+    fn window_state_bytes_are_accounted_as_event_time() {
+        let rig = rig(1);
+        let mut r = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 10);
+        r.reduce(batch(&[("a", 5)])).unwrap().commit().unwrap();
+        assert!(rig.env.accounting.bytes(WriteCategory::EventTime) > 0);
+        assert_eq!(rig.env.accounting.bytes(WriteCategory::UserOutput), 0);
+    }
+
+    #[test]
+    fn state_table_paths_per_epoch() {
+        assert_eq!(window_state_table("//b", 0), "//b");
+        assert_eq!(window_state_table("//b", 3), "//b/e3");
+    }
+}

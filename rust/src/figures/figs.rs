@@ -59,9 +59,10 @@ pub fn run_figure(id: &str, opts: &FigureOpts) {
         "chain" => table_chain(opts),
         "reshard" if opts.auto => table_reshard_auto(opts),
         "reshard" => table_reshard(opts),
+        "window" => table_window(opts),
         other => {
             eprintln!(
-                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard"
+                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window"
             );
             std::process::exit(2);
         }
@@ -818,6 +819,107 @@ fn table_reshard_auto(opts: &FigureOpts) {
     );
     if !shrunk {
         eprintln!("figure reshard --auto: FAIL — downstream reducer shrink deadlocked");
+        std::process::exit(1);
+    }
+}
+
+/// Event-time windowing figure (`figure window`): per-batch-upsert WA vs
+/// watermark-driven final-fire WA over identical input — the headline
+/// `UserOutput` comparison — plus the fault drill: a final-fire run under
+/// kill + duplicate reducer and one mid-window 4→8 reshard (open windows
+/// migrate through the residual exporter/importer) must drain to output
+/// byte-identical to the fault-free static run. Exits non-zero on any
+/// violation, so `bench_smoke.sh` can gate on it.
+fn table_window(opts: &FigureOpts) {
+    use crate::controller::Role;
+    use crate::reshard::plan::reducer_slot;
+    use crate::storage::WriteCategory;
+    use crate::workload::windowed::{run_windowed, WindowedCfg, WindowedMode};
+
+    println!("# table window: per-batch upsert vs watermark final-fire, identical input");
+    let cfg = WindowedCfg {
+        seed: opts.seed,
+        ..WindowedCfg::default()
+    };
+
+    // --- per-batch upsert baseline (fault-free) -------------------------
+    let upsert = run_windowed(&cfg, WindowedMode::PerBatchUpsert, |_, _| {});
+    // --- final-fire (fault-free static run) -----------------------------
+    let finalfire = run_windowed(&cfg, WindowedMode::FinalFire, |_, _| {});
+    // --- final-fire under drills + one mid-window 4→8 reshard -----------
+    let drilled_cfg = WindowedCfg {
+        reshard_to: vec![8],
+        ..cfg.clone()
+    };
+    let drilled = run_windowed(&drilled_cfg, WindowedMode::FinalFire, |processor, migration| {
+        let sup = processor.supervisor().clone();
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.1;
+            f.dup_prob = 0.1;
+        });
+        sup.kill(Role::Reducer, reducer_slot(migration as i64, 0));
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64, 1));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64 + 1, 0));
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        processor.env.net.with_faults(|f| {
+            f.drop_prob = 0.0;
+            f.dup_prob = 0.0;
+        });
+    });
+
+    println!("{}", WaReport::csv_header());
+    for r in [&upsert.report, &finalfire.report, &drilled.report] {
+        println!("{}", r.csv_row());
+    }
+    let user_upsert = upsert.report.snapshot.bytes_of(WriteCategory::UserOutput);
+    let user_final = finalfire.report.snapshot.bytes_of(WriteCategory::UserOutput);
+    let event_bytes = finalfire.report.snapshot.bytes_of(WriteCategory::EventTime);
+    let reduction = if user_final > 0 {
+        format!("{:.1}", user_upsert as f64 / user_final as f64)
+    } else {
+        "inf".into()
+    };
+    println!(
+        "user_output: upsert={user_upsert} final_fire={user_final} ({reduction}x reduction); \
+         final-fire event_time bookkeeping={event_bytes} bytes"
+    );
+    println!(
+        "final-fire: windows_fired={} late_rows={} correct={}",
+        finalfire.windows_fired,
+        finalfire.late_rows,
+        finalfire.rows == finalfire.expected,
+    );
+    for s in &drilled.reshards {
+        println!(
+            "drilled reshard: {} -> {} (epoch {}, migrated_rows={})",
+            s.from_partitions, s.to_partitions, s.epoch, s.migrated_rows
+        );
+    }
+
+    let upsert_ok = upsert.rows == upsert.expected;
+    let final_ok = finalfire.rows == finalfire.expected;
+    let drill_ok = drilled.rows == drilled.expected && drilled.rows == finalfire.rows;
+    let strictly_lower = user_final < user_upsert;
+    println!(
+        "byte-identity: upsert=={}expected, final-fire=={}expected, \
+         drilled(kill+dup+4->8 reshard)==static: {}",
+        if upsert_ok { "" } else { "!" },
+        if final_ok { "" } else { "!" },
+        drill_ok,
+    );
+    println!(
+        "summary: final-fire UserOutput WA strictly lower: {strictly_lower} \
+         ({user_final} vs {user_upsert} bytes over identical input); \
+         fault drill byte-identical: {drill_ok}; late rows: {} (in-order waves ⇒ none expected)",
+        drilled.late_rows,
+    );
+    if !(upsert_ok && final_ok && drill_ok && strictly_lower) || drilled.late_rows != 0 {
+        eprintln!(
+            "figure window: FAIL — upsert_ok={upsert_ok} final_ok={final_ok} \
+             drill_ok={drill_ok} strictly_lower={strictly_lower} late={}",
+            drilled.late_rows
+        );
         std::process::exit(1);
     }
 }

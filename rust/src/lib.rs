@@ -28,6 +28,7 @@
 //! | the paper's system | [`api`], [`coordinator`], [`controller`] |
 //! | multi-stage chaining | [`dataflow`] |
 //! | elastic resharding | [`reshard`] |
+//! | event-time windowing | [`eventtime`] |
 //! | compiled compute | [`runtime`], [`compute`] |
 //! | evaluation | [`workload`], [`baseline`], [`metrics`], [`figures`] |
 //! | future work (§6) | [`spill`], [`pipelined`] |
@@ -44,6 +45,7 @@ pub mod coordinator;
 pub mod controller;
 pub mod dataflow;
 pub mod reshard;
+pub mod eventtime;
 pub mod runtime;
 pub mod compute;
 pub mod workload;

@@ -104,6 +104,11 @@ pub mod names {
         format!("mapper/{index:03}/window_bytes")
     }
 
+    /// Event-time watermark (ms) of one mapper — `figure window`.
+    pub fn mapper_watermark(index: usize) -> String {
+        format!("mapper/{index:03}/watermark_ms")
+    }
+
     /// Reducer ingest throughput (bytes per second) — fig. 5.1.
     pub fn reducer_throughput(index: usize) -> String {
         format!("reducer/{index:03}/ingest_bytes_per_s")
@@ -136,6 +141,8 @@ pub mod names {
     pub const AUTOSCALE_SHRINKS: &str = "autoscale/shrinks_executed_total";
     pub const AUTOSCALE_REJECTED: &str = "autoscale/proposals_rejected_total";
     pub const AUTOSCALE_RESUMES: &str = "autoscale/migrations_resumed_total";
+    pub const EVENTTIME_WINDOWS_FIRED: &str = "eventtime/windows_fired_total";
+    pub const EVENTTIME_LATE_ROWS: &str = "eventtime/late_rows_total";
 }
 
 #[cfg(test)]

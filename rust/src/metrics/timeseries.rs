@@ -1,20 +1,41 @@
 //! Append-only time series of (simulated-ms, value) samples.
+//!
+//! Retention is **bounded**: every series is a ring buffer capped at
+//! [`DEFAULT_MAX_SAMPLES`] samples — once full, recording a new sample
+//! drops the oldest. Long resident-driver runs (autoscale loops recording
+//! lag/latency/watermark gauges forever) therefore hold O(1) memory per
+//! series, and the sliding-window queries (`mean_since`-style) are
+//! unaffected because they only ever look at the recent tail.
 
+use std::collections::VecDeque;
 use std::sync::Mutex;
+
+/// Default per-series retention cap. At the workers' sub-second recording
+/// cadences this spans hours of simulated time — far wider than any
+/// sliding-window signal query — while bounding a series to ~1 MB.
+pub const DEFAULT_MAX_SAMPLES: usize = 65_536;
 
 /// One named series. Thread-safe; samples must arrive in roughly
 /// monotonic time order (enforced loosely — the clock is shared).
 #[derive(Debug)]
 pub struct TimeSeries {
     name: String,
-    samples: Mutex<Vec<(u64, f64)>>,
+    cap: usize,
+    samples: Mutex<VecDeque<(u64, f64)>>,
 }
 
 impl TimeSeries {
     pub fn new(name: impl Into<String>) -> TimeSeries {
+        Self::with_capacity(name, DEFAULT_MAX_SAMPLES)
+    }
+
+    /// A series with an explicit retention cap (tests; specialized hubs).
+    pub fn with_capacity(name: impl Into<String>, cap: usize) -> TimeSeries {
+        assert!(cap > 0, "a time series must retain at least one sample");
         TimeSeries {
             name: name.into(),
-            samples: Mutex::new(Vec::new()),
+            cap,
+            samples: Mutex::new(VecDeque::new()),
         }
     }
 
@@ -22,8 +43,17 @@ impl TimeSeries {
         &self.name
     }
 
+    /// Retention cap (samples); recording beyond it evicts the oldest.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     pub fn record(&self, t_ms: u64, value: f64) {
-        self.samples.lock().unwrap().push((t_ms, value));
+        let mut g = self.samples.lock().unwrap();
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back((t_ms, value));
     }
 
     pub fn len(&self) -> usize {
@@ -35,11 +65,11 @@ impl TimeSeries {
     }
 
     pub fn samples(&self) -> Vec<(u64, f64)> {
-        self.samples.lock().unwrap().clone()
+        self.samples.lock().unwrap().iter().copied().collect()
     }
 
     pub fn last(&self) -> Option<(u64, f64)> {
-        self.samples.lock().unwrap().last().copied()
+        self.samples.lock().unwrap().back().copied()
     }
 
     pub fn max_value(&self) -> Option<f64> {
@@ -63,15 +93,17 @@ impl TimeSeries {
     /// warmup).
     pub fn mean_since(&self, from_ms: u64) -> Option<f64> {
         let g = self.samples.lock().unwrap();
-        let xs: Vec<f64> = g
-            .iter()
-            .filter(|(t, _)| *t >= from_ms)
-            .map(|(_, v)| *v)
-            .collect();
-        if xs.is_empty() {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for (t, v) in g.iter() {
+            if *t >= from_ms {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
             None
         } else {
-            Some(xs.iter().sum::<f64>() / xs.len() as f64)
+            Some(sum / n as f64)
         }
     }
 
@@ -155,5 +187,28 @@ mod tests {
         assert_eq!(s.first_below_after(0, 10.0), Some(200));
         assert_eq!(s.first_below_after(250, 10.0), Some(300));
         assert_eq!(s.first_below_after(0, 0.5), None);
+    }
+
+    #[test]
+    fn retention_is_capped_ring_buffer() {
+        let s = TimeSeries::with_capacity("bounded", 4);
+        assert_eq!(s.capacity(), 4);
+        for i in 0..10u64 {
+            s.record(i * 100, i as f64);
+        }
+        // Only the newest 4 samples survive.
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.samples(), vec![(600, 6.0), (700, 7.0), (800, 8.0), (900, 9.0)]);
+        assert_eq!(s.last(), Some((900, 9.0)));
+        // Sliding-window queries see the retained tail.
+        assert!((s.mean_since(700).unwrap() - 8.0).abs() < 1e-9);
+        assert_eq!(s.max_value(), Some(9.0));
+        assert_eq!(s.first_below_after(0, 6.5), Some(600));
+    }
+
+    #[test]
+    fn default_capacity_is_generous() {
+        let s = TimeSeries::new("x");
+        assert_eq!(s.capacity(), DEFAULT_MAX_SAMPLES);
     }
 }

@@ -94,6 +94,12 @@ pub(crate) fn run_reducer_pipelined(
                             }
                         }
                     }
+                    // Time-driven work on a quiet stream (event-time
+                    // final-fires): same hook as the serial loop; the
+                    // pipeline is empty here, so no prefetch is at risk.
+                    if let Some(txn) = user_reducer.tick() {
+                        let _ = rt.commit_tick(&state, txn);
+                    }
                     clock.sleep_ms(rt.cfg.backoff_ms);
                     continue;
                 }

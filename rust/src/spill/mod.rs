@@ -26,11 +26,13 @@ use crate::storage::Journal;
 /// Persisted overflow queue for one straggler bucket.
 #[derive(Debug)]
 pub struct SpillQueue {
-    /// (shuffle_index, encoded row). The record buffer is **shared** with
-    /// the journal (`Arc<[u8]>`): the queue entry models reading the spill
-    /// table back, the journal models (and accounts) the write — one
-    /// encoded buffer serves both, no copy.
-    queue: VecDeque<(i64, Arc<[u8]>)>,
+    /// (shuffle_index, event time, encoded row). The record buffer is
+    /// **shared** with the journal (`Arc<[u8]>`): the queue entry models
+    /// reading the spill table back, the journal models (and accounts)
+    /// the write — one encoded buffer serves both, no copy. The event
+    /// time is cached at push so the mapper's watermark query
+    /// ([`SpillQueue::min_event_ts`]) never has to decode records.
+    queue: VecDeque<(i64, Option<i64>, Arc<[u8]>)>,
     journal: Arc<Journal>,
     /// Total rows ever spilled through this queue (metrics).
     pub rows_spilled_total: u64,
@@ -55,21 +57,32 @@ impl SpillQueue {
 
     /// Shuffle index of the newest spilled row.
     pub fn last_shuffle_index(&self) -> Option<i64> {
-        self.queue.back().map(|(s, _)| *s)
+        self.queue.back().map(|(s, _, _)| *s)
     }
 
     /// Persist a detached row. Rows must arrive in shuffle order and the
     /// entire spill queue must stay *older* than any in-memory bucket row
     /// (the mapper spills whole bucket prefixes, which guarantees it).
     pub fn push(&mut self, shuffle_index: i64, row: &UnversionedRow) {
-        if let Some((last, _)) = self.queue.back() {
+        self.push_with_event_ts(shuffle_index, row, None);
+    }
+
+    /// [`SpillQueue::push`] with the row's event time cached for the
+    /// watermark query (see [`crate::eventtime`]).
+    pub fn push_with_event_ts(
+        &mut self,
+        shuffle_index: i64,
+        row: &UnversionedRow,
+        event_ts: Option<i64>,
+    ) {
+        if let Some((last, _, _)) = self.queue.back() {
             debug_assert!(shuffle_index > *last, "spill must preserve shuffle order");
         }
         // One bulk Vec→Arc copy of the encoded record; the journal append
         // and queue entry then share it by refcount.
         let encoded: Arc<[u8]> = codec::encode_rows(std::slice::from_ref(row)).into();
         self.journal.append(encoded.clone());
-        self.queue.push_back((shuffle_index, encoded));
+        self.queue.push_back((shuffle_index, event_ts, encoded));
         self.rows_spilled_total += 1;
     }
 
@@ -79,12 +92,19 @@ impl SpillQueue {
         while self
             .queue
             .front()
-            .is_some_and(|(s, _)| *s <= committed_row_index)
+            .is_some_and(|(s, _, _)| *s <= committed_row_index)
         {
             self.queue.pop_front();
             popped += 1;
         }
         popped
+    }
+
+    /// Smallest cached event time among retained spilled rows — an O(len)
+    /// integer scan, no decoding or allocation (this runs under the
+    /// mapper's inner lock on the trim cadence).
+    pub fn min_event_ts(&self) -> Option<i64> {
+        self.queue.iter().filter_map(|(_, ts, _)| *ts).min()
     }
 
     /// Decode up to `count` rows from the front (not removed). String
@@ -94,7 +114,7 @@ impl SpillQueue {
         self.queue
             .iter()
             .take(count)
-            .map(|(s, bytes)| {
+            .map(|(s, _, bytes)| {
                 let rows = codec::decode_rows_shared(bytes).expect("spill self-corruption");
                 (*s, rows.into_iter().next().expect("one row per record"))
             })
@@ -174,6 +194,20 @@ mod tests {
     }
 
     #[test]
+    fn min_event_ts_is_cached_and_follows_acks() {
+        let (mut q, _) = queue();
+        assert_eq!(q.min_event_ts(), None);
+        q.push_with_event_ts(1, &row![10i64], Some(100));
+        q.push_with_event_ts(2, &row![20i64], Some(40));
+        q.push(3, &row![30i64]); // no event time: transparent
+        assert_eq!(q.min_event_ts(), Some(40));
+        q.ack(1); // drops the ts=100 record
+        assert_eq!(q.min_event_ts(), Some(40));
+        q.ack(3);
+        assert_eq!(q.min_event_ts(), None);
+    }
+
+    #[test]
     fn peek_decodes_without_consuming() {
         let (mut q, _) = queue();
         q.push(3, &row![30i64]);
@@ -189,7 +223,7 @@ mod tests {
     fn record_buffer_shared_with_journal() {
         let (mut q, _) = queue();
         q.push(1, &row!["payload", 1i64]);
-        let (_, rec) = q.queue.front().unwrap();
+        let (_, _, rec) = q.queue.front().unwrap();
         let journaled = q.journal.read(0).unwrap();
         assert!(
             Arc::ptr_eq(rec, &journaled),
@@ -203,7 +237,7 @@ mod tests {
         q.push(1, &row!["spilled-string"]);
         let rows = q.peek(1);
         let cell = rows[0].1.get(0).unwrap();
-        let (_, rec) = q.queue.front().unwrap();
+        let (_, _, rec) = q.queue.front().unwrap();
         let start = rec.as_ptr() as usize;
         match cell {
             crate::rows::Value::Str(s) => {

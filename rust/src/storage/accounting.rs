@@ -44,10 +44,17 @@ pub enum WriteCategory {
     /// system activity, so its bytes count toward WA — `figure reshard`
     /// reports this line separately as the honest cost of elasticity.
     Reshard,
+    /// Event-time bookkeeping of the [`crate::eventtime`] subsystem:
+    /// open-window accumulator upserts, fired-watermark markers and
+    /// source-close markers. Compact meta-state-sized records (never the
+    /// row payload), but still system overhead final-fire windowing pays
+    /// per batch — so it counts toward WA and `figure window` reports it
+    /// as its own line against the per-batch-upsert `UserOutput` savings.
+    EventTime,
 }
 
 /// Number of [`WriteCategory`] variants (array sizing).
-pub const CATEGORY_COUNT: usize = 9;
+pub const CATEGORY_COUNT: usize = 10;
 
 pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::SourceIngest,
@@ -59,6 +66,7 @@ pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::CypressMeta,
     WriteCategory::InterStage,
     WriteCategory::Reshard,
+    WriteCategory::EventTime,
 ];
 
 impl WriteCategory {
@@ -73,6 +81,7 @@ impl WriteCategory {
             WriteCategory::CypressMeta => 6,
             WriteCategory::InterStage => 7,
             WriteCategory::Reshard => 8,
+            WriteCategory::EventTime => 9,
         }
     }
 
@@ -87,6 +96,7 @@ impl WriteCategory {
             WriteCategory::CypressMeta => "cypress_meta",
             WriteCategory::InterStage => "inter_stage",
             WriteCategory::Reshard => "reshard",
+            WriteCategory::EventTime => "event_time",
         }
     }
 
@@ -331,6 +341,18 @@ mod tests {
         assert_eq!(s.system_bytes(), 250);
         assert!((s.wa_factor(1_000) - 0.25).abs() < 1e-9);
         assert!(s.to_string().contains("reshard"));
+    }
+
+    #[test]
+    fn event_time_counts_toward_wa() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::SourceIngest, 1_000);
+        a.record(WriteCategory::EventTime, 100);
+        a.record(WriteCategory::UserOutput, 400);
+        let s = a.snapshot();
+        assert_eq!(s.system_bytes(), 100, "user output stays excluded");
+        assert!((s.wa_factor(1_000) - 0.1).abs() < 1e-9);
+        assert!(s.to_string().contains("event_time"));
     }
 
     #[test]

@@ -27,6 +27,40 @@ use crate::workload::analytics::{
     analytics_mapper_factory, analytics_reducer_factory, ensure_output_table, OUTPUT_TABLE,
 };
 
+const CLUSTERS: [&str; 3] = ["hahn", "freud", "bohr"];
+const USERS: [&str; 5] = ["root", "alice", "bob", "carol", "dave"];
+const METHODS: [&str; 4] = ["GetNode", "SetNode", "Commit", "Heartbeat"];
+
+/// The pure ground truth of one deterministic wave: every log line that
+/// carries a user field, as `(partition, user, cluster, ts)`. **Must
+/// mirror [`fill_deterministic_wave`]'s formula exactly** — the windowed
+/// workload folds this directly to predict its output tables.
+pub fn deterministic_wave_user_events(
+    partitions: usize,
+    wave: usize,
+    messages_per_partition: usize,
+) -> Vec<(usize, &'static str, &'static str, i64)> {
+    let mut out = Vec::new();
+    for p in 0..partitions {
+        let cluster = CLUSTERS[(p + wave) % CLUSTERS.len()];
+        for m in 0..messages_per_partition {
+            let lines = 3 + (p + m + wave) % 4;
+            for l in 0..lines {
+                if (p + m + l) % 3 == 0 {
+                    let ts = 10_000
+                        + (wave as i64) * 4_000_000
+                        + (p as i64) * 500_000
+                        + (m as i64) * 100
+                        + l as i64;
+                    let user = USERS[(m + l + wave) % USERS.len()];
+                    out.push((p, user, cluster, ts));
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Fill one deterministic wave of log messages: fixed timestamps, users
 /// and clusters derived from (wave, partition, message, line) indexes
 /// only. Two fills with the same coordinates are byte-identical, so two
@@ -37,14 +71,25 @@ pub fn fill_deterministic_wave(
     wave: usize,
     messages_per_partition: usize,
 ) -> i64 {
-    const CLUSTERS: [&str; 3] = ["hahn", "freud", "bohr"];
-    const USERS: [&str; 5] = ["root", "alice", "bob", "carol", "dave"];
-    const METHODS: [&str; 4] = ["GetNode", "SetNode", "Commit", "Heartbeat"];
+    fill_deterministic_wave_slice(table, wave, 0, messages_per_partition)
+}
 
+/// Append only the message range `[m_begin, m_end)` of a deterministic
+/// wave — byte-identical content and per-tablet order to the full fill,
+/// just pausable between slices. The windowed scenario uses this to
+/// spread one wave over several reducer commits, so the per-batch-upsert
+/// baseline demonstrably re-writes its output keys. Returns the user
+/// lines in the slice.
+pub fn fill_deterministic_wave_slice(
+    table: &Arc<OrderedTable>,
+    wave: usize,
+    m_begin: usize,
+    m_end: usize,
+) -> i64 {
     let mut user_lines = 0i64;
     for p in 0..table.tablet_count() {
         let cluster = CLUSTERS[(p + wave) % CLUSTERS.len()];
-        for m in 0..messages_per_partition {
+        for m in m_begin..m_end {
             let lines = 3 + (p + m + wave) % 4;
             let mut payload = String::new();
             for l in 0..lines {
@@ -432,6 +477,44 @@ pub fn run_elastic_auto(
 mod tests {
     use super::*;
     use crate::storage::WriteAccounting;
+
+    #[test]
+    fn ground_truth_matches_fill() {
+        let acc = WriteAccounting::new();
+        let t = OrderedTable::new("gt", input_name_table(), 3, acc);
+        let filled_user_lines = fill_deterministic_wave(&t, 2, 7);
+        let events = deterministic_wave_user_events(3, 2, 7);
+        assert_eq!(events.len() as i64, filled_user_lines);
+        // Spot-check: every predicted event appears verbatim in the fill.
+        for (p, user, cluster, ts) in events.iter().take(5) {
+            let rows = t.read_tablet(*p, 0, t.end_index(*p)).unwrap();
+            let needle = format!("ts={ts} cluster={cluster}");
+            let found = rows.iter().any(|r| {
+                r.get(0)
+                    .and_then(crate::rows::Value::as_str)
+                    .is_some_and(|s| s.contains(&needle) && s.contains(&format!("user={user}")))
+            });
+            assert!(found, "event {user}@{cluster} ts={ts} missing from partition {p}");
+        }
+    }
+
+    #[test]
+    fn sliced_fill_is_byte_identical_to_whole_fill() {
+        let acc = WriteAccounting::new();
+        let whole = OrderedTable::new("w", input_name_table(), 2, acc.clone());
+        let sliced = OrderedTable::new("s", input_name_table(), 2, acc);
+        let a = fill_deterministic_wave(&whole, 1, 8);
+        let b1 = fill_deterministic_wave_slice(&sliced, 1, 0, 3);
+        let b2 = fill_deterministic_wave_slice(&sliced, 1, 3, 8);
+        assert_eq!(a, b1 + b2);
+        for p in 0..2 {
+            assert_eq!(whole.end_index(p), sliced.end_index(p));
+            assert_eq!(
+                whole.read_tablet(p, 0, whole.end_index(p)).unwrap(),
+                sliced.read_tablet(p, 0, sliced.end_index(p)).unwrap(),
+            );
+        }
+    }
 
     #[test]
     fn deterministic_wave_is_reproducible() {

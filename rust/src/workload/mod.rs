@@ -17,6 +17,7 @@ pub mod producer;
 pub mod analytics;
 pub mod sessions;
 pub mod elastic;
+pub mod windowed;
 
 pub use analytics::{analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE};
 pub use elastic::{
@@ -25,3 +26,4 @@ pub use elastic::{
 pub use loggen::{LogGen, LogGenConfig};
 pub use producer::{start_producers, ProducerConfig, ProducerHandle};
 pub use sessions::{two_stage_topology, SESSIONS_TABLE};
+pub use windowed::{run_windowed, WindowedCfg, WindowedMode, WindowedOutcome, WINDOWED_TABLE};

@@ -1,0 +1,646 @@
+//! The event-time windowing scenario: per-(user, cluster) activity counts
+//! over tumbling event-time windows, run two ways over **identical**
+//! input:
+//!
+//! * **per-batch upsert** — the classic shape every shared-table workload
+//!   here uses: each reducer batch re-commits the touched
+//!   `(window, user, cluster)` output rows, so `UserOutput` bytes scale
+//!   with O(batches per key);
+//! * **final-fire** — the [`crate::eventtime`] subsystem: open windows
+//!   accumulate in compact `EventTime` state and each output row is
+//!   written exactly once when the fleet watermark passes window end.
+//!
+//! Both variants drain to the *same* output table contents (the fold is
+//! batch-invariant), so `figure window` can compare their WA honestly and
+//! assert byte-identity — including a drilled final-fire run (kill +
+//! duplicate reducer, one mid-window 4→8 reshard migrating the open
+//! windows) against the fault-free static run.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::api::{
+    hash_partition, partitioning, Client, FnMapper, Mapper, MapperFactory, MapperSpec,
+    PartitionedRowset, Reducer, ReducerFactory, ReducerSpec,
+};
+use crate::coordinator::processor::ClusterEnv;
+use crate::coordinator::{EventTimeConfig, InputSpec, ProcessorConfig, StreamingProcessor};
+use crate::dyntable::{Transaction, TxnError};
+use crate::eventtime::{
+    windowed_reducer_factory, WindowFold, WindowMigrators, WindowSpec, WindowedDeps,
+    EVENT_TIME_CLOSED,
+};
+use crate::metrics::hub::names;
+use crate::metrics::WaReport;
+use crate::queue::ordered_table::OrderedTable;
+use crate::queue::{input_name_table, INPUT_COL_PAYLOAD};
+use crate::reshard::{ReshardRuntime, ReshardStats};
+use crate::row;
+use crate::rows::{
+    ColumnSchema, ColumnType, NameTable, RowsetBuilder, TableSchema, UnversionedRow,
+    UnversionedRowset, Value,
+};
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+use crate::util::Clock;
+use crate::workload::elastic::{deterministic_wave_user_events, fill_deterministic_wave_slice};
+use crate::workload::loggen::parse_line;
+
+/// The windowed output table:
+/// (window_start, user, cluster) → (count, last_ts).
+pub const WINDOWED_TABLE: &str = "//out/windowed_activity";
+
+/// Columns of the mapped (shuffled) rows; `ts` is the event-time column.
+pub fn windowed_mapped_name_table() -> Arc<NameTable> {
+    NameTable::new(&["user", "cluster", "ts"])
+}
+
+const COL_USER: usize = 0;
+const COL_CLUSTER: usize = 1;
+const COL_TS: usize = 2;
+
+/// Schema of [`WINDOWED_TABLE`].
+pub fn windowed_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("window_start", ColumnType::Int64),
+        ColumnSchema::key("user", ColumnType::Str),
+        ColumnSchema::key("cluster", ColumnType::Str),
+        ColumnSchema::value("count", ColumnType::Int64),
+        ColumnSchema::value("last_ts", ColumnType::Int64),
+    ])
+}
+
+/// Create [`WINDOWED_TABLE`] if missing.
+pub fn ensure_windowed_table(client: &Client) -> Result<(), crate::dyntable::store::StoreError> {
+    use crate::dyntable::store::StoreError;
+    match client
+        .store
+        .create_table(WINDOWED_TABLE, windowed_schema(), WriteCategory::UserOutput)
+    {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
+/// `CreateMapper`: parse log lines, filter rows without a user, route by
+/// `hash_partition(composite(user, cluster))` — the *same* ownership
+/// function the window state uses, which is what lets the final-fire
+/// reducer (and the reshard migrators) re-derive who owns a window.
+pub fn windowed_mapper_factory() -> MapperFactory {
+    Arc::new(
+        |_cfg: &Yson, _client: &Client, _nt: Arc<NameTable>, spec: &MapperSpec| {
+            let reducers = spec.num_reducers;
+            Box::new(FnMapper(move |rows: UnversionedRowset| {
+                let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+                let mut partitions = Vec::new();
+                for r in rows.rows() {
+                    let Some(payload) = r.get(INPUT_COL_PAYLOAD).and_then(Value::as_str) else {
+                        continue;
+                    };
+                    for raw in payload.lines() {
+                        let Some(p) = parse_line(raw) else { continue };
+                        let Some(user) = p.user else { continue };
+                        partitions.push(hash_partition(
+                            &partitioning::composite_key(&[user, p.cluster]),
+                            reducers,
+                        ));
+                        b.push(row![user, p.cluster, p.ts]);
+                    }
+                }
+                PartitionedRowset {
+                    rowset: b.build(),
+                    partition_indexes: partitions,
+                }
+            })) as Box<dyn Mapper>
+        },
+    )
+}
+
+/// The windowed activity fold: count rows + max ts per
+/// (window, user, cluster); accumulator `[count; last_ts]`.
+pub struct ActivityWindowFold;
+
+impl ActivityWindowFold {
+    fn unpack(acc: &Yson) -> (i64, i64) {
+        let list = acc.as_list().ok().unwrap_or(&[]);
+        (
+            list.first().and_then(|v| v.as_i64().ok()).unwrap_or(0),
+            list.get(1).and_then(|v| v.as_i64().ok()).unwrap_or(i64::MIN),
+        )
+    }
+
+    fn pack(count: i64, last_ts: i64) -> Yson {
+        Yson::List(vec![Yson::Int(count), Yson::Int(last_ts)])
+    }
+}
+
+impl WindowFold for ActivityWindowFold {
+    fn event_ts(&self, row: &UnversionedRow) -> Option<i64> {
+        row.get(COL_TS).and_then(Value::as_i64)
+    }
+
+    fn key(&self, row: &UnversionedRow) -> Option<String> {
+        let user = row.get(COL_USER).and_then(Value::as_str)?;
+        let cluster = row.get(COL_CLUSTER).and_then(Value::as_str)?;
+        Some(partitioning::composite_key(&[user, cluster]))
+    }
+
+    fn zero(&self) -> Yson {
+        Self::pack(0, i64::MIN)
+    }
+
+    fn fold(&self, acc: &mut Yson, row: &UnversionedRow) {
+        let (count, last) = Self::unpack(acc);
+        let ts = row.get(COL_TS).and_then(Value::as_i64).unwrap_or(i64::MIN);
+        *acc = Self::pack(count + 1, last.max(ts));
+    }
+
+    fn merge(&self, into: &mut Yson, other: &Yson) {
+        let (c1, l1) = Self::unpack(into);
+        let (c2, l2) = Self::unpack(other);
+        *into = Self::pack(c1 + c2, l1.max(l2));
+    }
+
+    fn emit(
+        &self,
+        window_start: i64,
+        _window_end: i64,
+        key: &str,
+        acc: &Yson,
+        txn: &mut Transaction,
+    ) -> Result<(), TxnError> {
+        let mut parts = key.split('\u{1f}');
+        let (Some(user), Some(cluster)) = (parts.next(), parts.next()) else {
+            return Ok(()); // unreachable for keys this workload builds
+        };
+        let (count, last_ts) = Self::unpack(acc);
+        txn.write(
+            WINDOWED_TABLE,
+            row![window_start, user, cluster, count, last_ts],
+        )
+    }
+}
+
+/// The per-batch-upsert baseline reducer: identical fold, but every batch
+/// re-commits the touched output rows (read-modify-write in the
+/// exactly-once transaction) — the classic WA shape.
+pub struct WindowedUpsertReducer {
+    client: Client,
+    window: WindowSpec,
+}
+
+impl WindowedUpsertReducer {
+    fn attempt(
+        &self,
+        folds: &BTreeMap<(i64, String, String), (i64, i64)>,
+    ) -> Result<Transaction, crate::dyntable::TxnError> {
+        let mut txn = self.client.begin();
+        for ((w, user, cluster), (count, last_ts)) in folds {
+            let key = vec![
+                Value::Int64(*w),
+                Value::from(user.as_str()),
+                Value::from(cluster.as_str()),
+            ];
+            // Lookup errors must propagate: treating an unreadable row as
+            // absent would blind-write a reset count without the read
+            // joining the CAS set.
+            let (mut c, mut l) = (0i64, i64::MIN);
+            if let Some(existing) = txn.lookup(WINDOWED_TABLE, &key)? {
+                c = existing.get(3).and_then(Value::as_i64).unwrap_or(0);
+                l = existing.get(4).and_then(Value::as_i64).unwrap_or(i64::MIN);
+            }
+            txn.write(
+                WINDOWED_TABLE,
+                row![*w, user.as_str(), cluster.as_str(), c + count, l.max(*last_ts)],
+            )?;
+        }
+        Ok(txn)
+    }
+}
+
+impl Reducer for WindowedUpsertReducer {
+    fn reduce(&mut self, rows: UnversionedRowset) -> Option<Transaction> {
+        if rows.is_empty() {
+            return None;
+        }
+        // Pre-aggregate the batch per (window, user, cluster).
+        let mut folds: BTreeMap<(i64, String, String), (i64, i64)> = BTreeMap::new();
+        for r in rows.rows() {
+            let (Some(user), Some(cluster), Some(ts)) = (
+                r.get(COL_USER).and_then(Value::as_str),
+                r.get(COL_CLUSTER).and_then(Value::as_str),
+                r.get(COL_TS).and_then(Value::as_i64),
+            ) else {
+                continue;
+            };
+            let w = self.window.window_start(ts);
+            let e = folds
+                .entry((w, user.to_string(), cluster.to_string()))
+                .or_insert((0, i64::MIN));
+            e.0 += 1;
+            e.1 = e.1.max(ts);
+        }
+        if folds.is_empty() {
+            return None;
+        }
+        // Returning `None` here would let the main procedure advance the
+        // meta-state without these folds (silent row loss) — same policy
+        // as [`crate::eventtime::WindowedReducer`]: retry transient
+        // failures, crash for a supervisor restart if they persist.
+        for _ in 0..500 {
+            match self.attempt(&folds) {
+                Ok(txn) => return Some(txn),
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
+            }
+        }
+        panic!("windowed upsert reducer: store kept failing; crashing for restart");
+    }
+}
+
+/// `CreateReducer` for the upsert baseline.
+pub fn windowed_upsert_reducer_factory(window: WindowSpec) -> ReducerFactory {
+    Arc::new(move |_cfg: &Yson, client: &Client, _spec: &ReducerSpec| {
+        let _ = ensure_windowed_table(client);
+        Box::new(WindowedUpsertReducer {
+            client: client.clone(),
+            window,
+        }) as Box<dyn Reducer>
+    })
+}
+
+/// Which output discipline a run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowedMode {
+    /// Watermark-driven final-fire through [`crate::eventtime`].
+    FinalFire,
+    /// Classic per-batch upsert (the WA baseline).
+    PerBatchUpsert,
+}
+
+/// Scenario knobs (same deterministic wave plan as the elastic scenario).
+#[derive(Debug, Clone)]
+pub struct WindowedCfg {
+    pub partitions: usize,
+    pub initial_reducers: usize,
+    /// Total input waves (each wave's events are fully deterministic).
+    pub waves: usize,
+    /// Reducer-count targets applied after the matching wave, exactly
+    /// like [`crate::workload::elastic::ElasticCfg::reshard_to`] — with
+    /// open windows, every reshard is a *mid-window* reshard.
+    pub reshard_to: Vec<usize>,
+    pub messages_per_wave: usize,
+    pub seed: u64,
+    pub window: WindowSpec,
+    pub base: ProcessorConfig,
+    pub reshard_timeout_ms: u64,
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for WindowedCfg {
+    fn default() -> Self {
+        WindowedCfg {
+            partitions: 4,
+            initial_reducers: 4,
+            waves: 2,
+            reshard_to: vec![],
+            messages_per_wave: 40,
+            seed: 0x51DE,
+            window: WindowSpec::tumbling(250_000),
+            base: ProcessorConfig {
+                backoff_ms: 5,
+                trim_period_ms: 100,
+                restart_delay_ms: 100,
+                split_brain_delay_ms: 50,
+                session_ttl_ms: 1_500,
+                heartbeat_period_ms: 100,
+                ..ProcessorConfig::default()
+            },
+            reshard_timeout_ms: 30_000,
+            drain_timeout_ms: 45_000,
+        }
+    }
+}
+
+/// What a windowed run leaves behind.
+pub struct WindowedOutcome {
+    /// Predicted output rows, in table key order.
+    pub expected: Vec<UnversionedRow>,
+    /// Drained output rows, in table key order.
+    pub rows: Vec<UnversionedRow>,
+    pub report: WaReport,
+    /// Rows that landed on the late side channel (0 for the in-order
+    /// deterministic waves — asserted by the figure).
+    pub late_rows: i64,
+    /// Windows final-fired (0 for the upsert baseline).
+    pub windows_fired: u64,
+    pub reshards: Vec<ReshardStats>,
+    pub env: ClusterEnv,
+}
+
+/// Fold the pure wave ground truth into the expected output rows.
+pub fn expected_windowed_rows(cfg: &WindowedCfg) -> Vec<UnversionedRow> {
+    let mut folds: BTreeMap<(i64, String, String), (i64, i64)> = BTreeMap::new();
+    for wave in 0..cfg.waves {
+        for (_p, user, cluster, ts) in
+            deterministic_wave_user_events(cfg.partitions, wave, cfg.messages_per_wave)
+        {
+            let w = cfg.window.window_start(ts);
+            let e = folds
+                .entry((w, user.to_string(), cluster.to_string()))
+                .or_insert((0, i64::MIN));
+            e.0 += 1;
+            e.1 = e.1.max(ts);
+        }
+    }
+    folds
+        .into_iter()
+        .map(|((w, user, cluster), (count, last_ts))| {
+            row![w, user.as_str(), cluster.as_str(), count, last_ts]
+        })
+        .collect()
+}
+
+fn scan_output(env: &ClusterEnv) -> Vec<UnversionedRow> {
+    env.store.scan(WINDOWED_TABLE).unwrap_or_default()
+}
+
+/// Run the windowed scenario in the given mode. `drill` fires once per
+/// migration, right after `begin_reshard` — mid-window, mid-cutover —
+/// with `(processor, migration_index)` (same contract as
+/// [`crate::workload::elastic::run_elastic`]).
+pub fn run_windowed(
+    cfg: &WindowedCfg,
+    mode: WindowedMode,
+    drill: impl Fn(&StreamingProcessor, usize),
+) -> WindowedOutcome {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    let table = OrderedTable::new(
+        "//input/windowed",
+        input_name_table(),
+        cfg.partitions,
+        env.accounting.clone(),
+    );
+    ensure_windowed_table(&env.client()).expect("create windowed output table");
+
+    let mut proc_cfg = ProcessorConfig {
+        mapper_count: cfg.partitions,
+        reducer_count: cfg.initial_reducers,
+        ..cfg.base.clone()
+    };
+
+    let mut late_table: Option<Arc<OrderedTable>> = None;
+    let processor = match mode {
+        WindowedMode::PerBatchUpsert => StreamingProcessor::launch(
+            proc_cfg,
+            env.clone(),
+            InputSpec::Ordered(table.clone()),
+            windowed_mapper_factory(),
+            windowed_upsert_reducer_factory(cfg.window),
+            Yson::parse("{}").unwrap(),
+        )
+        .expect("launch upsert processor"),
+        WindowedMode::FinalFire => {
+            proc_cfg.event_time = Some(EventTimeConfig {
+                column: "ts".into(),
+            });
+            let fold: Arc<dyn WindowFold> = Arc::new(ActivityWindowFold);
+            let late = OrderedTable::new_with_category(
+                "//sys/windowed/late",
+                windowed_mapped_name_table(),
+                cfg.initial_reducers,
+                env.accounting.clone(),
+                WriteCategory::UserOutput,
+            );
+            late_table = Some(late.clone());
+            let deps = Arc::new(WindowedDeps {
+                spec: cfg.window,
+                fold: fold.clone(),
+                state_base: "//sys/windowed/window_state".into(),
+                plan_table: proc_cfg.reshard_plan_table.clone(),
+                mapper_state_table: proc_cfg.mapper_state_table.clone(),
+                late,
+                metrics: env.metrics.clone(),
+                scope: proc_cfg.scope_label.clone(),
+            });
+            let migrators = WindowMigrators::new(
+                env.store.clone(),
+                fold,
+                deps.state_base.clone(),
+                proc_cfg.scope_label.clone(),
+            );
+            let (exporter, importer) = migrators.pair();
+            let runtime = ReshardRuntime::new_with_migrators(
+                proc_cfg.reshard_plan_table.clone(),
+                env.accounting.clone(),
+                proc_cfg.scope_label.clone(),
+                exporter,
+                importer,
+            );
+            StreamingProcessor::launch_with_runtime(
+                proc_cfg,
+                env.clone(),
+                InputSpec::Ordered(table.clone()),
+                windowed_mapper_factory(),
+                windowed_reducer_factory(deps),
+                Yson::parse("{}").unwrap(),
+                runtime,
+            )
+            .expect("launch final-fire processor")
+        }
+    };
+
+    assert!(
+        cfg.waves > cfg.reshard_to.len(),
+        "need more waves ({}) than reshards ({})",
+        cfg.waves,
+        cfg.reshard_to.len()
+    );
+    let mut reshards = Vec::new();
+    for wave in 0..cfg.waves {
+        // Fill in two paced slices: every (window, key) of the wave
+        // receives rows in both (users cycle with the message index), so
+        // the per-batch-upsert baseline demonstrably re-commits its
+        // output keys — the WA contrast `figure window` gates on cannot
+        // degenerate into a single-batch tie.
+        let half = cfg.messages_per_wave / 2;
+        fill_deterministic_wave_slice(&table, wave, 0, half);
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        fill_deterministic_wave_slice(&table, wave, half, cfg.messages_per_wave);
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        if let Some(&target) = cfg.reshard_to.get(wave) {
+            // Let the wave start flowing, then resize under the open
+            // windows (every window spans the whole run until close, so
+            // this is a genuinely mid-window migration).
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            processor.begin_reshard(target).expect("begin live reshard");
+            drill(&processor, wave);
+            let stats = processor
+                .finish_reshard(cfg.reshard_timeout_ms)
+                .expect("migration must drain and finalize");
+            reshards.push(stats);
+        }
+    }
+
+    if mode == WindowedMode::FinalFire {
+        // The waves are all appended: declare the stream closed so the
+        // fleet watermark can reach +∞ and every window final-fires.
+        processor
+            .close_event_time(EVENT_TIME_CLOSED)
+            .expect("close event time");
+    }
+
+    let expected = expected_windowed_rows(cfg);
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(cfg.drain_timeout_ms);
+    let mut rows = Vec::new();
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        rows = scan_output(&env);
+        if rows == expected {
+            break;
+        }
+    }
+
+    let report = processor.wa_report(match mode {
+        WindowedMode::FinalFire => "windowed (final-fire)",
+        WindowedMode::PerBatchUpsert => "windowed (per-batch upsert)",
+    });
+    let windows_fired = env.metrics.get_counter(names::EVENTTIME_WINDOWS_FIRED);
+    processor.stop();
+
+    // Late side-channel rows that actually **committed** (final-fire
+    // only). The `eventtime/late_rows_total` counter is advisory and
+    // pre-commit — a split-brain loser that classified rows late before
+    // its CAS aborted bumps it without landing anything — so gates must
+    // count the table, not the metric.
+    let late_rows = late_table
+        .map(|t| (0..t.tablet_count()).map(|i| t.end_index(i)).sum())
+        .unwrap_or(0);
+
+    WindowedOutcome {
+        expected,
+        rows,
+        report,
+        late_rows,
+        windows_fired,
+        reshards,
+        env,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_rows_are_deterministic_and_sorted() {
+        let cfg = WindowedCfg::default();
+        let a = expected_windowed_rows(&cfg);
+        let b = expected_windowed_rows(&cfg);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // Key-ordered like a table scan: (window_start, user, cluster).
+        for pair in a.windows(2) {
+            let k = |r: &UnversionedRow| {
+                (
+                    r.get(0).unwrap().as_i64().unwrap(),
+                    r.get(1).unwrap().as_str().unwrap().to_string(),
+                    r.get(2).unwrap().as_str().unwrap().to_string(),
+                )
+            };
+            assert!(k(&pair[0]) < k(&pair[1]));
+        }
+        // Counts sum to the ground-truth user lines.
+        let total: i64 = a.iter().map(|r| r.get(3).unwrap().as_i64().unwrap()).sum();
+        let lines: usize = (0..cfg.waves)
+            .map(|w| {
+                deterministic_wave_user_events(cfg.partitions, w, cfg.messages_per_wave).len()
+            })
+            .sum();
+        assert_eq!(total, lines as i64);
+    }
+
+    #[test]
+    fn mapper_routes_by_composite_key_ownership() {
+        let mf = windowed_mapper_factory();
+        let env = ClusterEnv::new(Clock::realtime(), 5);
+        let spec = MapperSpec {
+            processor_guid: crate::util::Guid::from_seed(1),
+            state_table: "t".into(),
+            index: 0,
+            guid: crate::util::Guid::from_seed(2),
+            num_reducers: 4,
+        };
+        let mut m = mf(
+            &Yson::parse("{}").unwrap(),
+            &env.client(),
+            input_name_table(),
+            &spec,
+        );
+        let mut b = RowsetBuilder::new(input_name_table());
+        b.push(row![
+            "ts=100 cluster=hahn method=GetNode user=alice dur=5\n\
+             ts=101 cluster=hahn method=SetNode dur=6",
+            0i64
+        ]);
+        let out = m.map(b.build());
+        assert_eq!(out.rowset.len(), 1, "line without user filtered");
+        assert_eq!(
+            out.partition_indexes[0],
+            hash_partition(&partitioning::composite_key(&["alice", "hahn"]), 4),
+            "routing must match the window-state ownership function"
+        );
+    }
+
+    #[test]
+    fn upsert_reducer_folds_batch_invariantly() {
+        let env = ClusterEnv::new(Clock::realtime(), 6);
+        let client = env.client();
+        ensure_windowed_table(&client).unwrap();
+        let mut r = WindowedUpsertReducer {
+            client: client.clone(),
+            window: WindowSpec::tumbling(100),
+        };
+        let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+        b.push(row!["alice", "hahn", 10i64]);
+        b.push(row!["alice", "hahn", 120i64]);
+        r.reduce(b.build()).unwrap().commit().unwrap();
+        let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+        b.push(row!["alice", "hahn", 20i64]);
+        r.reduce(b.build()).unwrap().commit().unwrap();
+
+        let rows = client.store.scan(WINDOWED_TABLE).unwrap();
+        assert_eq!(rows.len(), 2, "two windows");
+        assert_eq!(rows[0].get(0).unwrap().as_i64(), Some(0));
+        assert_eq!(rows[0].get(3).unwrap().as_i64(), Some(2));
+        assert_eq!(rows[0].get(4).unwrap().as_i64(), Some(20));
+        assert_eq!(rows[1].get(0).unwrap().as_i64(), Some(100));
+        assert_eq!(rows[1].get(3).unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn activity_fold_roundtrip_and_merge() {
+        let f = ActivityWindowFold;
+        let mut acc = f.zero();
+        let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+        b.push(row!["alice", "hahn", 50i64]);
+        let rs = b.build();
+        let r = &rs.rows()[0];
+        assert_eq!(f.event_ts(r), Some(50));
+        assert_eq!(
+            f.key(r).unwrap(),
+            partitioning::composite_key(&["alice", "hahn"])
+        );
+        f.fold(&mut acc, r);
+        f.fold(&mut acc, r);
+        let mut other = f.zero();
+        f.fold(&mut other, r);
+        f.merge(&mut acc, &other);
+        assert_eq!(ActivityWindowFold::unpack(&acc), (3, 50));
+        // Accumulators survive the Yson text roundtrip the state table
+        // applies.
+        let reparsed = Yson::parse(&acc.to_string()).unwrap();
+        assert_eq!(ActivityWindowFold::unpack(&reparsed), (3, 50));
+    }
+}

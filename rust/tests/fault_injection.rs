@@ -714,3 +714,59 @@ fn at_least_once_mode_never_loses_rows() {
         rig.expected_lines
     );
 }
+
+#[test]
+fn windowed_final_fire_under_drills_and_reshard_byte_identical() {
+    // The event-time acceptance drill: a final-fire windowed run under a
+    // reducer kill + split-brain twins + a lossy/duplicating net + one
+    // mid-window 4→8 reshard (open windows migrate through the residual
+    // exporter/importer) must drain to output byte-identical to the
+    // fault-free static run — and to the pure ground truth.
+    use yt_stream::reshard::plan::reducer_slot;
+    use yt_stream::workload::windowed::{run_windowed, WindowedCfg, WindowedMode};
+
+    let cfg = WindowedCfg {
+        seed: 0x77AE,
+        messages_per_wave: 25,
+        ..WindowedCfg::default()
+    };
+    let baseline = run_windowed(&cfg, WindowedMode::FinalFire, |_, _| {});
+    assert_eq!(
+        baseline.rows, baseline.expected,
+        "fault-free final-fire must drain to the ground truth"
+    );
+    assert!(baseline.windows_fired > 0, "something must actually fire");
+    assert_eq!(baseline.late_rows, 0, "in-order waves produce no late rows");
+
+    let drilled_cfg = WindowedCfg {
+        reshard_to: vec![8],
+        ..cfg
+    };
+    let drilled = run_windowed(
+        &drilled_cfg,
+        WindowedMode::FinalFire,
+        |processor, migration| {
+            let sup = processor.supervisor().clone();
+            processor.env.net.with_faults(|f| {
+                f.drop_prob = 0.1;
+                f.dup_prob = 0.1;
+            });
+            sup.kill(Role::Reducer, reducer_slot(migration as i64, 0));
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            sup.duplicate(Role::Reducer, reducer_slot(migration as i64, 1));
+            sup.duplicate(Role::Reducer, reducer_slot(migration as i64 + 1, 0));
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            processor.env.net.with_faults(|f| {
+                f.drop_prob = 0.0;
+                f.dup_prob = 0.0;
+            });
+        },
+    );
+    assert_eq!(drilled.reshards.len(), 1, "the 4→8 migration must finalize");
+    assert_eq!(drilled.rows, drilled.expected, "drilled run must reach ground truth");
+    assert_eq!(
+        drilled.rows, baseline.rows,
+        "mid-window reshard + drills must be byte-identical to the static run"
+    );
+    assert_eq!(drilled.late_rows, 0);
+}

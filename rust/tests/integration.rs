@@ -357,3 +357,185 @@ fn grouped_input_multi_partition_mappers_exactly_once() {
         "exactly-once violated over grouped input (multi-partition mappers)"
     );
 }
+
+#[test]
+fn two_stage_event_time_cascade_fires_downstream_windows() {
+    // Tentpole item 3 (topology propagation): stage 2 windows on *true*
+    // event time — its watermark is capped by stage 1's fleet watermark
+    // through the handoff path — and `close_event_time_cascade` walks the
+    // close marker down the chain until every window final-fires.
+    use yt_stream::api::{
+        hash_partition, partitioning, FnMapper, Mapper, MapperFactory, PartitionedRowset,
+    };
+    use yt_stream::coordinator::EventTimeConfig;
+    use yt_stream::dataflow::{FnEmitReducer, StageSpec, Topology};
+    use yt_stream::eventtime::{
+        windowed_reducer_factory, WindowFold, WindowSpec, WindowedDeps, EVENT_TIME_CLOSED,
+    };
+    use yt_stream::rows::{NameTable, RowsetBuilder, UnversionedRow, UnversionedRowset};
+    use yt_stream::storage::WriteCategory;
+    use yt_stream::workload::elastic::fill_deterministic_wave;
+    use yt_stream::workload::windowed::{
+        ensure_windowed_table, expected_windowed_rows, windowed_mapped_name_table,
+        windowed_mapper_factory, ActivityWindowFold, WindowedCfg, WINDOWED_TABLE,
+    };
+
+    const PARTITIONS: usize = 4;
+    const S1_REDUCERS: usize = 2;
+    const S2_REDUCERS: usize = 2;
+    const WAVES: usize = 2;
+    const MESSAGES: usize = 20;
+
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0xE7C);
+    let source_table = OrderedTable::new(
+        "//input/evt_chain",
+        input_name_table(),
+        PARTITIONS,
+        env.accounting.clone(),
+    );
+    ensure_windowed_table(&env.client()).unwrap();
+
+    let window = WindowSpec::tumbling(250_000);
+    let base = ProcessorConfig {
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        split_brain_delay_ms: 50,
+        session_ttl_ms: 1_500,
+        heartbeat_period_ms: 100,
+        event_time: Some(EventTimeConfig { column: "ts".into() }),
+        ..ProcessorConfig::default()
+    };
+    let s1_cfg = ProcessorConfig {
+        mapper_count: PARTITIONS,
+        reducer_count: S1_REDUCERS,
+        ..base.clone()
+    };
+    let s2_cfg = ProcessorConfig {
+        mapper_count: S1_REDUCERS,
+        reducer_count: S2_REDUCERS,
+        ..base
+    };
+
+    // Stage 2's windowed deps point at its (namespaced) state tables —
+    // the paths the topology will assign at launch.
+    let s2_base = "//sys/dataflow/evt/window";
+    let fold: Arc<dyn WindowFold> = Arc::new(ActivityWindowFold);
+    let late = OrderedTable::new_with_category(
+        "//sys/dataflow/evt/window/late",
+        windowed_mapped_name_table(),
+        S2_REDUCERS,
+        env.accounting.clone(),
+        WriteCategory::UserOutput,
+    );
+    let deps = Arc::new(WindowedDeps {
+        spec: window,
+        fold,
+        state_base: format!("{s2_base}/window_state"),
+        plan_table: format!("{s2_base}/reshard_plan"),
+        mapper_state_table: format!("{s2_base}/mapper_state"),
+        late: late.clone(),
+        metrics: env.metrics.clone(),
+        scope: Some("evt/window".into()),
+    });
+
+    // Stage-2 mapper: route (user, cluster, ts) handoff rows by the same
+    // composite-key ownership function the window state uses.
+    let s2_mapper: MapperFactory = Arc::new(
+        |_cfg: &Yson,
+         _client: &yt_stream::api::Client,
+         _nt: Arc<NameTable>,
+         spec: &yt_stream::api::MapperSpec| {
+            let reducers = spec.num_reducers;
+            Box::new(FnMapper(move |rows: UnversionedRowset| {
+                let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+                let mut partitions = Vec::new();
+                for r in rows.rows() {
+                    let (Some(user), Some(cluster)) = (
+                        r.get(0).and_then(Value::as_str),
+                        r.get(1).and_then(Value::as_str),
+                    ) else {
+                        continue;
+                    };
+                    partitions.push(hash_partition(
+                        &partitioning::composite_key(&[user, cluster]),
+                        reducers,
+                    ));
+                    b.push(r.clone());
+                }
+                PartitionedRowset {
+                    rowset: b.build(),
+                    partition_indexes: partitions,
+                }
+            })) as Box<dyn Mapper>
+        },
+    );
+
+    let topo = Topology::new("evt")
+        .stage(StageSpec::intermediate(
+            "route",
+            s1_cfg,
+            input_name_table(),
+            windowed_mapped_name_table(),
+            windowed_mapper_factory(),
+            // Pass-through emitter: every emitted row keeps its own event
+            // time, trivially satisfying the EmitReducer event-time
+            // contract (ts ≥ the batch minimum).
+            Arc::new(
+                |_cfg: &Yson,
+                 _client: &yt_stream::api::Client,
+                 _spec: &yt_stream::api::ReducerSpec| {
+                    Box::new(FnEmitReducer(
+                        |rows: UnversionedRowset| -> Vec<UnversionedRow> {
+                            rows.rows().to_vec()
+                        },
+                    )) as Box<dyn yt_stream::dataflow::EmitReducer>
+                },
+            ),
+        ))
+        .stage(StageSpec::final_stage(
+            "window",
+            s2_cfg,
+            windowed_mapped_name_table(),
+            s2_mapper,
+            windowed_reducer_factory(deps),
+        ));
+    let running = topo
+        .launch(&env, InputSpec::Ordered(source_table.clone()))
+        .expect("launch event-time topology");
+    assert!(
+        running.stage(1).processor.cfg.upstream_watermark_table.is_some(),
+        "stage 2's watermark must be capped by stage 1"
+    );
+
+    for wave in 0..WAVES {
+        fill_deterministic_wave(&source_table, wave, MESSAGES);
+    }
+    assert!(
+        running.close_event_time_cascade(EVENT_TIME_CLOSED, 90_000),
+        "the close marker must cascade down the chain"
+    );
+
+    // With both stages closed and drained, every window fires; the output
+    // equals the single-stage ground truth (stage 1 is a pass-through).
+    let expected = expected_windowed_rows(&WindowedCfg {
+        partitions: PARTITIONS,
+        waves: WAVES,
+        messages_per_wave: MESSAGES,
+        window,
+        ..WindowedCfg::default()
+    });
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(45);
+    let mut rows = Vec::new();
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        rows = env.store.scan(WINDOWED_TABLE).unwrap_or_default();
+        if rows == expected {
+            break;
+        }
+    }
+    running.stop();
+    assert_eq!(rows, expected, "downstream windows fired on true event time");
+    assert_eq!(late.retained_rows(), 0, "no late rows on in-order input");
+}

