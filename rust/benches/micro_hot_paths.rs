@@ -1,9 +1,11 @@
 //! Micro-benchmarks of the hot paths identified in EXPERIMENTS.md §Perf:
 //! row codec, shuffle hash, compute stages (native + HLO), GetRows round
-//! trip, dynamic-table commit, window push/ack.
+//! trip, dynamic-table commit, window push/ack — plus the per-row vs
+//! batched comparisons backing the PR 6 columnar/group-commit work.
 //!
 //! Run with `cargo bench --bench micro_hot_paths`. Output is one line per
-//! benchmark (benchkit format).
+//! benchmark (benchkit format); set `BENCHKIT_JSON=/path/BENCH_<pr>.json`
+//! to additionally emit the machine-readable document.
 
 use std::sync::Arc;
 
@@ -220,6 +222,119 @@ fn bench_window() {
         });
 }
 
+/// Per-row vs batched encode+hash: the same rowset pays either one codec
+/// dispatch and hash-state setup per ROW, or one per BATCH.
+fn bench_row_batch() {
+    use yt_stream::api::partitioning;
+    use yt_stream::rows::RowBatch;
+
+    let rs = sample_rowset(1024);
+    let payload = rs.byte_size() as u64;
+
+    Bench::new("rows/per_row_encode_hash_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            for row in rs.rows() {
+                black_box(codec::encode_rows(std::slice::from_ref(row)));
+                let user = row.get(0).and_then(|v| v.as_str()).unwrap();
+                let cluster = row.get(1).and_then(|v| v.as_str()).unwrap();
+                black_box(partitioning::composite_key_hash(&[user, cluster]));
+            }
+        });
+    Bench::new("rows/batch_encode_hash_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            let batch = RowBatch::from_rowset(&rs);
+            black_box(batch.encode());
+            black_box(batch.key_hash_column(&[0, 1]));
+        });
+    // Vectorized hash column straight off the row-major set (the mapper
+    // fast path when no columnar conversion is wanted).
+    Bench::new("rows/hash_column_of_1024")
+        .throughput_items(1024)
+        .run(|| {
+            black_box(RowBatch::key_hash_column_of(&rs, &[0, 1]));
+        });
+}
+
+/// Grouped vs per-row CAS validation: a commit that must fence N rows
+/// pays either N store round trips or one `lookup_many` pass.
+fn bench_group_commit() {
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::rows::{ColumnSchema, ColumnType, TableSchema, Value};
+    use yt_stream::storage::WriteCategory;
+
+    let env = ClusterEnv::new(Clock::realtime(), 4);
+    env.store
+        .create_table(
+            "cas",
+            TableSchema::new(vec![
+                ColumnSchema::key("k", ColumnType::Int64),
+                ColumnSchema::value("v", ColumnType::Str),
+            ]),
+            WriteCategory::ReducerMeta,
+        )
+        .unwrap();
+    for k in 0..10i64 {
+        let mut txn = env.store.begin();
+        txn.write("cas", row![k, "seed"]).unwrap();
+        txn.commit().unwrap();
+    }
+
+    let mut n = 0i64;
+    Bench::new("dyntable/commit_cas10_per_row").run(|| {
+        n += 1;
+        let mut txn = env.store.begin();
+        for k in 0..10i64 {
+            black_box(txn.lookup("cas", &[Value::Int64(k)]).unwrap());
+        }
+        txn.write("cas", row![n % 10, "w"]).unwrap();
+        txn.commit().unwrap();
+    });
+    let reads: Vec<(&str, Vec<Value>)> =
+        (0..10i64).map(|k| ("cas", vec![Value::Int64(k)])).collect();
+    Bench::new("dyntable/commit_cas10_grouped").run(|| {
+        n += 1;
+        let mut txn = env.store.begin();
+        black_box(txn.lookup_many(&reads).unwrap());
+        txn.write("cas", row![n % 10, "w"]).unwrap();
+        txn.commit().unwrap();
+    });
+}
+
+/// Per-row vs batched spill push: N journal appends vs one.
+fn bench_spill_batch() {
+    use yt_stream::spill::SpillQueue;
+    use yt_stream::storage::{Journal, WriteAccounting, WriteCategory};
+
+    let rs = sample_rowset(256);
+    let rows: Vec<_> = rs.rows().to_vec();
+    let acc = WriteAccounting::new();
+    Bench::new("spill/push_per_row_256")
+        .throughput_items(256)
+        .run(|| {
+            let j = Journal::new("b", WriteCategory::Spill, acc.clone());
+            let mut q = SpillQueue::new(j);
+            for (i, r) in rows.iter().enumerate() {
+                q.push(i as i64, r);
+            }
+            black_box(q.len());
+        });
+    let batch: Vec<(i64, Option<i64>, &yt_stream::rows::UnversionedRow)> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (i as i64, None, r))
+        .collect();
+    Bench::new("spill/push_batch_256")
+        .throughput_items(256)
+        .run(|| {
+            let j = Journal::new("b", WriteCategory::Spill, acc.clone());
+            let mut q = SpillQueue::new(j);
+            q.push_batch(&batch);
+            black_box(q.len());
+        });
+}
+
 fn main() {
     println!("== micro hot paths ==");
     bench_codec();
@@ -227,4 +342,9 @@ fn main() {
     bench_rpc_getrows();
     bench_dyntable();
     bench_window();
+    bench_row_batch();
+    bench_group_commit();
+    bench_spill_batch();
+    // BENCHKIT_JSON=<path> → machine-readable BENCH_<pr>.json document.
+    yt_stream::util::benchkit::write_json_env("rust/micro_hot_paths");
 }

@@ -27,6 +27,16 @@ use crate::util::{Clock, Guid};
 pub struct PartitionedRowset {
     pub rowset: UnversionedRowset,
     pub partition_indexes: Vec<usize>,
+    /// Optional routing-hash column: `key_hashes[i]` is the
+    /// [`partitioning::key_hash`] of row `i`'s routing key, with
+    /// `partition_indexes[i] == partitioning::owner(key_hashes[i], n)`
+    /// for the mapper's own reducer count `n`. A mapper that publishes it
+    /// (see [`Mapper::publishes_key_hashes`]) lets the runtime re-derive
+    /// the row's owner under *any other* partition count — the reshard
+    /// dual-route window — without a second full `map` call per batch.
+    /// Typically produced by one vectorized pass
+    /// ([`crate::rows::RowBatch::key_hash_column`]).
+    pub key_hashes: Option<Vec<u64>>,
 }
 
 impl PartitionedRowset {
@@ -34,11 +44,38 @@ impl PartitionedRowset {
         PartitionedRowset {
             rowset: UnversionedRowset::empty(name_table),
             partition_indexes: Vec::new(),
+            key_hashes: None,
+        }
+    }
+
+    /// A batch routed purely by partition index (no published hash
+    /// column) — the shape every pre-existing mapper produces.
+    pub fn new(rowset: UnversionedRowset, partition_indexes: Vec<usize>) -> PartitionedRowset {
+        PartitionedRowset {
+            rowset,
+            partition_indexes,
+            key_hashes: None,
+        }
+    }
+
+    /// A batch carrying its vectorized routing-hash column. The
+    /// `owner(hash, n) == index` consistency contract is enforced by
+    /// [`PartitionedRowset::validate`].
+    pub fn with_key_hashes(
+        rowset: UnversionedRowset,
+        partition_indexes: Vec<usize>,
+        key_hashes: Vec<u64>,
+    ) -> PartitionedRowset {
+        PartitionedRowset {
+            rowset,
+            partition_indexes,
+            key_hashes: Some(key_hashes),
         }
     }
 
     /// Internal consistency check: one partition index per row, all within
-    /// `num_reducers`.
+    /// `num_reducers`; a published hash column must match row count and
+    /// re-derive exactly the published indexes.
     pub fn validate(&self, num_reducers: usize) -> Result<(), String> {
         if self.rowset.len() != self.partition_indexes.len() {
             return Err(format!(
@@ -52,6 +89,24 @@ impl PartitionedRowset {
                 "PartitionedRowset: partition index {bad} out of range (num_reducers={num_reducers})"
             ));
         }
+        if let Some(hashes) = &self.key_hashes {
+            if hashes.len() != self.partition_indexes.len() {
+                return Err(format!(
+                    "PartitionedRowset: {} partition indexes but {} key hashes",
+                    self.partition_indexes.len(),
+                    hashes.len()
+                ));
+            }
+            for (i, (&h, &p)) in hashes.iter().zip(&self.partition_indexes).enumerate() {
+                if partitioning::owner(h, num_reducers) != p {
+                    return Err(format!(
+                        "PartitionedRowset: row {i} key hash {h:#x} owns partition {} \
+                         but index column says {p}",
+                        partitioning::owner(h, num_reducers)
+                    ));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -62,6 +117,15 @@ impl PartitionedRowset {
 /// (§4.6).
 pub trait Mapper: Send {
     fn map(&mut self, rows: UnversionedRowset) -> PartitionedRowset;
+
+    /// Does every batch from this mapper carry the `key_hashes` column
+    /// with `partition_indexes[i] == owner(key_hashes[i], num_reducers)`?
+    /// Opting in (return `true` and populate the column) lets the runtime
+    /// derive old-epoch routing during a reshard from the same hashes —
+    /// the batch is mapped **once** instead of once per live epoch.
+    fn publishes_key_hashes(&self) -> bool {
+        false
+    }
 }
 
 /// The user's reduce function (§4.1.2).
@@ -170,10 +234,7 @@ mod tests {
         let mut b = RowsetBuilder::new(nt.clone());
         b.push(row![1i64]);
         b.push(row![2i64]);
-        let ok = PartitionedRowset {
-            rowset: b.build(),
-            partition_indexes: vec![0, 1],
-        };
+        let ok = PartitionedRowset::new(b.build(), vec![0, 1]);
         assert!(ok.validate(2).is_ok());
         assert!(ok.validate(1).is_err(), "partition index out of range");
 
@@ -182,11 +243,37 @@ mod tests {
 
         let mut b2 = RowsetBuilder::new(nt);
         b2.push(row![1i64]);
-        let mismatched = PartitionedRowset {
-            rowset: b2.build(),
-            partition_indexes: vec![],
-        };
+        let mismatched = PartitionedRowset::new(b2.build(), vec![]);
         assert!(mismatched.validate(1).is_err());
+    }
+
+    #[test]
+    fn key_hash_column_validation() {
+        let nt = NameTable::new(&["k"]);
+        let mut b = RowsetBuilder::new(nt.clone());
+        b.push(row!["alice"]);
+        b.push(row!["bob"]);
+        let n = 4;
+        let hashes: Vec<u64> = ["alice", "bob"].iter().map(|k| partitioning::key_hash(k)).collect();
+        let indexes: Vec<usize> = hashes.iter().map(|&h| partitioning::owner(h, n)).collect();
+        let ok = PartitionedRowset::with_key_hashes(b.build(), indexes.clone(), hashes.clone());
+        assert!(ok.validate(n).is_ok());
+
+        // Hash column inconsistent with the index column: rejected.
+        let mut b2 = RowsetBuilder::new(nt.clone());
+        b2.push(row!["alice"]);
+        b2.push(row!["bob"]);
+        let mut bad_idx = indexes.clone();
+        bad_idx[1] = (bad_idx[1] + 1) % n;
+        let bad = PartitionedRowset::with_key_hashes(b2.build(), bad_idx, hashes.clone());
+        assert!(bad.validate(n).is_err());
+
+        // Length mismatch: rejected.
+        let mut b3 = RowsetBuilder::new(nt);
+        b3.push(row!["alice"]);
+        b3.push(row!["bob"]);
+        let short = PartitionedRowset::with_key_hashes(b3.build(), indexes, hashes[..1].to_vec());
+        assert!(short.validate(n).is_err());
     }
 
     #[test]
@@ -219,10 +306,7 @@ mod tests {
         let nt = NameTable::new(&["k"]);
         let mut m = FnMapper(|rows: UnversionedRowset| {
             let n = rows.len();
-            PartitionedRowset {
-                rowset: rows,
-                partition_indexes: vec![0; n],
-            }
+            PartitionedRowset::new(rows, vec![0; n])
         });
         let mut b = RowsetBuilder::new(nt.clone());
         b.push(row![5i64]);

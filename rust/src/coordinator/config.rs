@@ -72,6 +72,15 @@ pub struct ProcessorConfig {
     pub trim_period_ms: u64,
     /// Rows a reducer requests per mapper per cycle (§4.3.4 `count`).
     pub fetch_count: usize,
+    /// Group-commit coalescing: maximum fetch rounds a serial reducer
+    /// merges into **one** exactly-once commit while the stream is backed
+    /// up (a round is coalesced only when the previous one filled its
+    /// `fetch_count` budget for some mapper, i.e. backlog is the
+    /// bottleneck, not arrival rate). `1` disables coalescing. Amortizes
+    /// the meta-state CAS + plan-fence validation and the `ReducerMeta`
+    /// journal record over several fetched batches; delivery semantics are
+    /// unchanged — a coalesced commit is simply a larger atomic commit.
+    pub commit_coalesce_max: usize,
 
     /// Sorted-table paths for persistent state.
     pub mapper_state_table: String,
@@ -128,6 +137,7 @@ impl Default for ProcessorConfig {
             memory_limit_bytes: 64 << 20,
             trim_period_ms: 500,
             fetch_count: 1024,
+            commit_coalesce_max: 4,
             mapper_state_table: "//sys/processor/mapper_state".into(),
             reducer_state_table: "//sys/processor/reducer_state".into(),
             reshard_plan_table: "//sys/processor/reshard_plan".into(),
@@ -176,6 +186,10 @@ impl ProcessorConfig {
                 as usize,
             trim_period_ms: y.get_u64_or("trim_period_ms", d.trim_period_ms),
             fetch_count: y.get_u64_or("fetch_count", d.fetch_count as u64) as usize,
+            commit_coalesce_max: (y
+                .get_u64_or("commit_coalesce_max", d.commit_coalesce_max as u64)
+                as usize)
+                .max(1),
             mapper_state_table: y
                 .get_str_or("mapper_state_table", &d.mapper_state_table)
                 .to_string(),
@@ -260,6 +274,15 @@ mod tests {
         // Untouched keys keep defaults.
         assert_eq!(c.backoff_ms, ProcessorConfig::default().backoff_ms);
         assert!((c.spill.straggler_quorum - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_commit_coalesce_floors_at_one() {
+        let c = ProcessorConfig::parse("{commit_coalesce_max = 0}").unwrap();
+        assert_eq!(c.commit_coalesce_max, 1, "0 would stall the main loop");
+        let d = ProcessorConfig::parse("{commit_coalesce_max = 8}").unwrap();
+        assert_eq!(d.commit_coalesce_max, 8);
+        assert!(ProcessorConfig::default().commit_coalesce_max >= 1);
     }
 
     #[test]

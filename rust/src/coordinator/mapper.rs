@@ -19,7 +19,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::api::{Client, Mapper, MapperFactory, MapperSpec};
+use crate::api::{partitioning, Client, Mapper, MapperFactory, MapperSpec};
 use crate::coordinator::bucket::{BucketRow, BucketState};
 use crate::coordinator::config::ProcessorConfig;
 use crate::coordinator::state::{MapperState, ReducerState};
@@ -750,18 +750,18 @@ fn run_ingestion(
 
         // Step 5: run the user Map. Fresh ingestion runs only the current
         // map; a crash-recovery re-map of rows below the cutover also
-        // needs the *old-count* partition assignment, so the batch may be
-        // mapped under both counts (Map output rows must not depend on the
-        // partition count — the §4.6 determinism contract, extended).
+        // needs the *old-count* partition assignment. A hash-publishing
+        // mapper gets it for free: `owner(h, n)` holds for any partition
+        // count, so the old assignment is derived from the current map's
+        // hash column — no second Map call and no input clone. Otherwise
+        // the batch is re-mapped under the old count (Map output rows must
+        // not depend on the partition count — the §4.6 determinism
+        // contract, extended).
         let may_straddle_old =
             mappers.old.is_some() && cur.shuffle_unread_row_index < cur.cutover_index;
-        let old_partitions: Option<Vec<usize>> = if may_straddle_old {
-            let (old_mapper, old_count) = mappers.old.as_mut().expect("checked");
-            let mapped_old = old_mapper.map(batch.rowset.clone());
-            if let Err(e) = mapped_old.validate(*old_count) {
-                panic!("user Map produced invalid output (old epoch): {e}");
-            }
-            Some(mapped_old.partition_indexes)
+        let needs_old_remap = may_straddle_old && !mappers.current.publishes_key_hashes();
+        let input_for_old = if needs_old_remap {
+            Some(batch.rowset.clone())
         } else {
             None
         };
@@ -770,13 +770,34 @@ fn run_ingestion(
             panic!("user Map produced invalid output: {e}");
         }
         let n_out = mapped.rowset.len() as i64;
-        if let Some(old) = &old_partitions {
-            assert_eq!(
-                old.len(),
-                n_out as usize,
-                "Map output row count must not depend on the partition count"
-            );
-        }
+        let old_partitions: Option<Vec<usize>> = if may_straddle_old {
+            let (old_mapper, old_count) = mappers.old.as_mut().expect("checked");
+            match (&mapped.key_hashes, input_for_old) {
+                (Some(hashes), _) => Some(
+                    hashes
+                        .iter()
+                        .map(|&h| partitioning::owner(h, *old_count))
+                        .collect(),
+                ),
+                (None, Some(input)) => {
+                    let mapped_old = old_mapper.map(input);
+                    if let Err(e) = mapped_old.validate(*old_count) {
+                        panic!("user Map produced invalid output (old epoch): {e}");
+                    }
+                    assert_eq!(
+                        mapped_old.partition_indexes.len(),
+                        n_out as usize,
+                        "Map output row count must not depend on the partition count"
+                    );
+                    Some(mapped_old.partition_indexes)
+                }
+                (None, None) => {
+                    panic!("mapper declared publishes_key_hashes() but returned no hash column")
+                }
+            }
+        } else {
+            None
+        };
 
         sh.metrics.add(names::MAPPER_ROWS_READ, n_in as u64);
         sh.metrics.add(names::MAPPER_ROWS_MAPPED, n_out as u64);
@@ -1226,19 +1247,27 @@ fn try_spill(sh: &Arc<MapperShared>) {
             .collect();
         let old_head = inner.epochs[pos].buckets[b].first_entry_index();
         let event_col = inner.event.as_ref().and_then(|ev| ev.col);
-        for r in &rows {
-            let row = inner
-                .window
-                .get(r.entry_index)
-                .and_then(|e| e.row_at_shuffle_index(r.shuffle_index))
-                .expect("spill source row must be resident")
-                .clone();
-            // Cache the event time with the record so the watermark query
-            // never decodes spilled rows.
-            let event_ts = event_col.and_then(|c| row.get(c).and_then(Value::as_i64));
-            inner.epochs[pos].spilled[b].push_with_event_ts(r.shuffle_index, &row, event_ts);
-            spilled_rows += 1;
-        }
+        let detached: Vec<(i64, Option<i64>, crate::rows::UnversionedRow)> = rows
+            .iter()
+            .map(|r| {
+                let row = inner
+                    .window
+                    .get(r.entry_index)
+                    .and_then(|e| e.row_at_shuffle_index(r.shuffle_index))
+                    .expect("spill source row must be resident")
+                    .clone();
+                // Cache the event time with the record so the watermark
+                // query never decodes spilled rows.
+                let event_ts = event_col.and_then(|c| row.get(c).and_then(Value::as_i64));
+                (r.shuffle_index, event_ts, row)
+            })
+            .collect();
+        // The whole detached run becomes one spill record batch: one
+        // encode pass and one journal operation instead of per-row ones.
+        let batch: Vec<(i64, Option<i64>, &crate::rows::UnversionedRow)> =
+            detached.iter().map(|(s, ts, r)| (*s, *ts, r)).collect();
+        inner.epochs[pos].spilled[b].push_batch(&batch);
+        spilled_rows += batch.len() as u64;
         inner.epochs[pos].buckets[b].ack(i64::MAX); // drain the in-memory queue
         if let Some(old) = old_head {
             if let Some(e) = inner.window.get_mut(old) {

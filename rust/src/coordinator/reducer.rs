@@ -16,12 +16,12 @@ use crate::api::{Client, Reducer, ReducerSpec};
 use crate::coordinator::config::ProcessorConfig;
 use crate::coordinator::state::{MapperState, ReducerState};
 use crate::cypress::{DiscoveryGroup, MemberInfo, SessionId};
-use crate::dyntable::TxnError;
+use crate::dyntable::{Transaction, TxnError};
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
 use crate::reshard::migration::{ExportCtx, ImportCtx, ReshardRuntime};
 use crate::reshard::plan::{PlanPhase, ReshardPlan};
-use crate::rows::{codec, UnversionedRowset};
+use crate::rows::{codec, UnversionedRowset, Value};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RspGetRows};
 use crate::util::Guid;
 
@@ -299,11 +299,24 @@ impl ReducerRt {
             None => client.begin(),
         };
 
-        // Step 7: split-brain check inside the transaction.
-        let in_txn = match txn.lookup(state_table, &state_key) {
-            Ok(Some(row)) => ReducerState::from_row(&row),
-            _ => None,
+        // Steps 7 + 7b, group-committed: the split-brain state CAS and the
+        // reshard plan fence are *one* batched transactional read
+        // ([`Transaction::lookup_many`]) — one pass under the store lock
+        // instead of a round trip per row. The recorded versions and the
+        // conflict semantics are identical to the former per-row lookups.
+        let meta = match txn.lookup_many(&[
+            (state_table.as_str(), state_key.clone()),
+            (self.deps.reshard.plan_table.as_str(), ReshardPlan::key()),
+        ]) {
+            Ok(rows) => rows,
+            Err(_) => {
+                txn.abort();
+                return CommitOutcome::TransientError;
+            }
         };
+
+        // Step 7: split-brain check inside the transaction.
+        let in_txn = meta[0].as_ref().and_then(ReducerState::from_row);
         if in_txn.as_ref() != Some(state) {
             self.deps.metrics.add(names::REDUCER_SPLIT_BRAIN, 1);
             txn.abort();
@@ -318,11 +331,11 @@ impl ReducerRt {
         // it belongs to the new epoch — it can only have been served by a
         // stale twin that had not adopted yet — and committing it here
         // would double it against the new fleet. Adoption writes the
-        // mapper state row this fence reads, so the two serialize.
-        let plan = match txn.lookup(&self.deps.reshard.plan_table, &ReshardPlan::key()) {
-            Ok(Some(row)) => ReshardPlan::from_row(&row),
-            _ => None,
-        };
+        // mapper state row this fence reads, so the two serialize. The
+        // cutover rows of every contributing mapper are validated in a
+        // second single-pass batch (they must *not* join the read set
+        // outside a migration, so they cannot ride the first one).
+        let plan = meta[1].as_ref().and_then(ReshardPlan::from_row);
         let Some(plan) = plan else {
             txn.abort();
             return CommitOutcome::TransientError;
@@ -331,31 +344,29 @@ impl ReducerRt {
             PlanPhase::Stable => plan.epoch == self.spec.epoch,
             PlanPhase::Migrating if self.spec.epoch == plan.next_epoch() => true,
             PlanPhase::Migrating if self.spec.epoch == plan.epoch => {
-                let mut ok = true;
-                for f in fetches {
-                    if f.rsp.row_count == 0 {
-                        continue;
-                    }
-                    let ms = match txn
-                        .lookup(&self.cfg.mapper_state_table, &MapperState::key(f.mapper_index))
-                    {
-                        Ok(Some(row)) => MapperState::from_row(&row),
-                        Ok(None) => None,
-                        Err(_) => {
-                            ok = false;
-                            break;
+                let contributing: Vec<&FetchResult> =
+                    fetches.iter().filter(|f| f.rsp.row_count > 0).collect();
+                let reads: Vec<(&str, Vec<Value>)> = contributing
+                    .iter()
+                    .map(|f| {
+                        (
+                            self.cfg.mapper_state_table.as_str(),
+                            MapperState::key(f.mapper_index),
+                        )
+                    })
+                    .collect();
+                match txn.lookup_many(&reads) {
+                    Ok(rows) => contributing.iter().zip(&rows).all(|(f, row)| {
+                        match row.as_ref().and_then(MapperState::from_row) {
+                            Some(ms) => {
+                                ms.epoch <= self.spec.epoch
+                                    || f.rsp.last_shuffle_row_index < ms.cutover_index
+                            }
+                            None => true,
                         }
-                    };
-                    if let Some(ms) = ms {
-                        if ms.epoch > self.spec.epoch
-                            && f.rsp.last_shuffle_row_index >= ms.cutover_index
-                        {
-                            ok = false;
-                            break;
-                        }
-                    }
+                    }),
+                    Err(_) => false,
                 }
-                ok
             }
             PlanPhase::Migrating => false, // zombie of an already-drained epoch
         };
@@ -586,20 +597,25 @@ impl ReducerRt {
         let state_table = &self.spec.state_table;
         let state_key = ReducerState::key(self.spec.index);
 
-        let in_txn = match txn.lookup(state_table, &state_key) {
-            Ok(Some(row)) => ReducerState::from_row(&row),
-            _ => None,
+        // Same batched steps-7+7b read as `process_and_commit`: state CAS
+        // and plan fence join the read set in one locked pass.
+        let meta = match txn.lookup_many(&[
+            (state_table.as_str(), state_key.clone()),
+            (self.deps.reshard.plan_table.as_str(), ReshardPlan::key()),
+        ]) {
+            Ok(rows) => rows,
+            Err(_) => {
+                txn.abort();
+                return CommitOutcome::TransientError;
+            }
         };
+        let in_txn = meta[0].as_ref().and_then(ReducerState::from_row);
         if in_txn.as_ref() != Some(state) {
             self.deps.metrics.add(names::REDUCER_SPLIT_BRAIN, 1);
             txn.abort();
             return CommitOutcome::SplitBrain;
         }
-        let plan = match txn.lookup(&self.deps.reshard.plan_table, &ReshardPlan::key()) {
-            Ok(Some(row)) => ReshardPlan::from_row(&row),
-            _ => None,
-        };
-        let Some(plan) = plan else {
+        let Some(plan) = meta[1].as_ref().and_then(ReshardPlan::from_row) else {
             txn.abort();
             return CommitOutcome::TransientError;
         };
@@ -710,11 +726,11 @@ fn run_reducer_serial(
         }
 
         // Steps 3–4.
-        let fetches = rt.fetch_cycle(&state, cycle);
+        let mut fetches = rt.fetch_cycle(&state, cycle);
         for f in &fetches {
             max_mapper_seen = max_mapper_seen.max(f.mapper_index + 1);
         }
-        let (new_state, total_rows) = rt.tentative_state(&state, &fetches);
+        let (mut new_state, total_rows) = rt.tentative_state(&state, &fetches);
         if total_rows == 0 {
             // A drained old-epoch reducer retires: final transaction flips
             // its state to retired and exports its residual rows.
@@ -739,6 +755,34 @@ fn run_reducer_serial(
                 }
             }
             continue;
+        }
+
+        // Group-commit coalescing: while the stream is backed up — the
+        // previous round filled its `fetch_count` budget for some mapper,
+        // so arrival rate is not the limiter — pull further rounds against
+        // the *tentative* state (reads are side-effect-free; nothing is
+        // acknowledged until the commit below) and fold them into one
+        // atomic commit. One state CAS + plan fence + one `ReducerMeta`
+        // journal record then covers every coalesced round. Later fetch
+        // results for a mapper overwrite its tentative index, so the
+        // committed state is exactly the last round's frontier.
+        let full = |fs: &[FetchResult]| {
+            fs.iter()
+                .any(|f| f.rsp.row_count >= rt.cfg.fetch_count as i64)
+        };
+        let mut round_full = full(&fetches);
+        let mut rounds = 1;
+        while round_full && rounds < rt.cfg.commit_coalesce_max {
+            let more = rt.fetch_cycle(&new_state, cycle);
+            let (next_state, more_rows) = rt.tentative_state(&new_state, &more);
+            if more_rows == 0 {
+                break;
+            }
+            round_full = full(&more);
+            new_state = next_state;
+            fetches.extend(more);
+            rounds += 1;
+            rt.deps.metrics.add(names::REDUCER_COALESCED_ROUNDS, 1);
         }
 
         // Steps 5–8.

@@ -23,6 +23,7 @@ use std::collections::VecDeque;
 
 use crate::queue::ContinuationToken;
 use crate::rows::UnversionedRowset;
+use crate::util::slab::Slab;
 
 /// One mapped batch held in the window.
 #[derive(Debug, Clone)]
@@ -76,9 +77,17 @@ pub struct TrimOutcome {
 }
 
 /// FIFO of window entries with absolute indexing.
+///
+/// Entries live in a [`Slab`] and FIFO order is a deque of slot keys:
+/// push/trim churn at batch rate forever, and the slab recycles freed
+/// slots so a steady-state window settles into a fixed pool instead of
+/// round-tripping every entry through the allocator.
 #[derive(Debug, Default)]
 pub struct WindowQueue {
-    entries: VecDeque<WindowEntry>,
+    slab: Slab<WindowEntry>,
+    /// Slab keys in FIFO order; `order[i]` holds absolute entry index
+    /// `first_entry_index + i`.
+    order: VecDeque<usize>,
     first_entry_index: u64,
     total_bytes: usize,
 }
@@ -89,15 +98,27 @@ impl WindowQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.order.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.order.is_empty()
+    }
+
+    /// Entry at FIFO offset `i` (0 = front). Offsets in `[0, len)` are
+    /// always backed by an occupied slot.
+    fn at(&self, i: usize) -> &WindowEntry {
+        self.slab.get(self.order[i]).expect("window order key is live")
     }
 
     pub fn total_bytes(&self) -> usize {
         self.total_bytes
+    }
+
+    /// Slots ever allocated in the entry pool — plateaus at the window's
+    /// peak depth under steady-state churn (diagnostic).
+    pub fn entry_pool_capacity(&self) -> usize {
+        self.slab.capacity()
     }
 
     pub fn first_entry_index(&self) -> u64 {
@@ -106,7 +127,7 @@ impl WindowQueue {
 
     /// Index the next pushed entry will get.
     pub fn next_entry_index(&self) -> u64 {
-        self.first_entry_index + self.entries.len() as u64
+        self.first_entry_index + self.order.len() as u64
     }
 
     /// Push a new entry (must carry `next_entry_index`).
@@ -117,30 +138,42 @@ impl WindowQueue {
             "window entries must be pushed in order"
         );
         self.total_bytes += entry.byte_size;
-        self.entries.push_back(entry);
+        let key = self.slab.insert(entry);
+        self.order.push_back(key);
     }
 
     /// Entry by absolute index.
     pub fn get(&self, entry_index: u64) -> Option<&WindowEntry> {
         let offset = entry_index.checked_sub(self.first_entry_index)? as usize;
-        self.entries.get(offset)
+        let key = *self.order.get(offset)?;
+        self.slab.get(key)
     }
 
     pub fn get_mut(&mut self, entry_index: u64) -> Option<&mut WindowEntry> {
         let offset = entry_index.checked_sub(self.first_entry_index)? as usize;
-        self.entries.get_mut(offset)
+        let key = *self.order.get(offset)?;
+        self.slab.get_mut(key)
     }
 
     /// Entry containing the given shuffle index (binary search — entries
     /// have increasing, contiguous-per-entry shuffle ranges, but there may
     /// be gaps where Map produced zero rows).
     pub fn entry_for_shuffle_index(&self, shuffle_index: i64) -> Option<&WindowEntry> {
-        let idx = self
-            .entries
-            .partition_point(|e| e.shuffle_end <= shuffle_index);
-        self.entries
-            .get(idx)
-            .filter(|e| e.shuffle_begin <= shuffle_index && shuffle_index < e.shuffle_end)
+        // partition_point over FIFO order, resolving keys through the slab.
+        let mut lo = 0;
+        let mut hi = self.order.len();
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.at(mid).shuffle_end <= shuffle_index {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo == self.order.len() {
+            return None;
+        }
+        Some(self.at(lo)).filter(|e| e.shuffle_begin <= shuffle_index && shuffle_index < e.shuffle_end)
     }
 
     /// Absolute entry index containing a shuffle index.
@@ -155,11 +188,12 @@ impl WindowQueue {
         let mut popped = 0;
         let mut freed = 0;
         let mut last: Option<(i64, i64, ContinuationToken)> = None;
-        while let Some(front) = self.entries.front() {
-            if front.bucket_ptr_count != 0 {
+        while let Some(&key) = self.order.front() {
+            if self.slab.get(key).expect("window order key is live").bucket_ptr_count != 0 {
                 break;
             }
-            let e = self.entries.pop_front().unwrap();
+            self.order.pop_front();
+            let e = self.slab.remove(key).unwrap();
             self.first_entry_index += 1;
             popped += 1;
             freed += e.byte_size;
@@ -180,12 +214,14 @@ impl WindowQueue {
     /// Smallest `min_event_ts` across retained entries — the buffered
     /// event-time low water the mapper's watermark is clamped by.
     pub fn min_event_ts(&self) -> Option<i64> {
-        self.entries.iter().filter_map(|e| e.min_event_ts).min()
+        self.iter().filter_map(|e| e.min_event_ts).min()
     }
 
-    /// Drop everything (split-brain reset, §4.3.3 step 3).
+    /// Drop everything (split-brain reset, §4.3.3 step 3). The slab keeps
+    /// its slot pool for the rebuilt window.
     pub fn clear(&mut self) {
-        self.entries.clear();
+        self.slab.clear();
+        self.order.clear();
         self.total_bytes = 0;
         // first_entry_index keeps increasing monotonically so stale
         // BucketRow references can never alias a future entry.
@@ -193,7 +229,9 @@ impl WindowQueue {
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &WindowEntry> {
-        self.entries.iter()
+        self.order
+            .iter()
+            .map(move |&k| self.slab.get(k).expect("window order key is live"))
     }
 }
 
@@ -322,6 +360,48 @@ mod tests {
         e.min_event_ts = None;
         q.push(e);
         assert_eq!(q.min_event_ts(), None);
+    }
+
+    #[test]
+    fn steady_state_churn_reuses_slab_slots() {
+        let mut q = WindowQueue::new();
+        // Push/trim at depth 4 for many rounds: the slab pool must stop
+        // growing once the window depth is reached.
+        let mut next_in = 0i64;
+        let mut next_sh = 0i64;
+        // Push one pinned entry (pinned so trims pop exactly the front we
+        // unpin, one per round).
+        let mut push = |q: &mut WindowQueue| {
+            let mut e = entry(q, (next_in, next_in + 1), (next_sh, next_sh + 2), 2);
+            e.bucket_ptr_count = 1;
+            let idx = e.entry_index;
+            q.push(e);
+            assert!(q.get(idx).is_some());
+            next_in += 1;
+            next_sh += 2;
+        };
+        for _ in 0..4 {
+            push(&mut q);
+        }
+        let plateau = 4;
+        for round in 0..50 {
+            let first = q.first_entry_index();
+            q.get_mut(first).unwrap().bucket_ptr_count = 0;
+            let out = q.trim_front().unwrap();
+            assert_eq!(out.entries_popped, 1);
+            push(&mut q);
+            // Depth returns to 4 and absolute indexing still works.
+            assert_eq!(q.len(), plateau);
+            let first = q.first_entry_index();
+            assert_eq!(q.get(first).unwrap().input_begin, round as i64 + 1);
+        }
+        // The pool never grew past the window's depth: 50 rounds of churn
+        // ran entirely on recycled slots.
+        assert_eq!(q.entry_pool_capacity(), plateau);
+        // Every entry still resolvable by shuffle index after heavy churn.
+        let first = q.first_entry_index();
+        let front_sh = q.get(first).unwrap().shuffle_begin;
+        assert_eq!(q.entry_index_for_shuffle_index(front_sh), Some(first));
     }
 
     #[test]

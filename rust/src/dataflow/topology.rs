@@ -838,10 +838,7 @@ mod tests {
              _spec: &crate::api::MapperSpec| {
                 Box::new(FnMapper(|rows: UnversionedRowset| {
                     let n = rows.len();
-                    PartitionedRowset {
-                        rowset: rows,
-                        partition_indexes: vec![0; n],
-                    }
+                    PartitionedRowset::new(rows, vec![0; n])
                 })) as Box<dyn crate::api::Mapper>
             },
         )

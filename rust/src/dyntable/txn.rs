@@ -122,6 +122,49 @@ impl Transaction {
         Ok(row)
     }
 
+    /// Batched transactional lookups: semantically identical to calling
+    /// [`Transaction::lookup`] once per `(table, key)` pair — same
+    /// read-your-writes shadowing, same first-read-wins version recording,
+    /// same errors — but the store's tables mutex is taken **once** for the
+    /// whole batch instead of once per key. This is the group-commit read
+    /// path: a reducer validating meta-state + reshard plan + per-mapper
+    /// cutover rows (or a windowed reducer touching N accumulator slots)
+    /// joins the CAS set in one pass instead of N round trips.
+    ///
+    /// Results are positionally aligned with `reads`.
+    pub fn lookup_many(
+        &mut self,
+        reads: &[(&str, Vec<Value>)],
+    ) -> Result<Vec<Option<UnversionedRow>>, TxnError> {
+        self.check_open()?;
+        let mut out = Vec::with_capacity(reads.len());
+        if reads.is_empty() {
+            return Ok(out);
+        }
+        self.store.check_available()?;
+        let tables = self.store.tables.lock().unwrap();
+        for (table, key) in reads {
+            let tk = (table.to_string(), key.clone());
+            if let Some(&i) = self.write_index.get(&tk) {
+                out.push(match &self.write_set[i].1 {
+                    Mutation::Upsert(row) => Some(row.clone()),
+                    Mutation::Delete => None,
+                });
+                continue;
+            }
+            let t = tables
+                .get(*table)
+                .ok_or_else(|| TxnError::NoSuchTable(table.to_string()))?;
+            let (version, row) = match t.rows.get(key) {
+                Some(vr) => (vr.version, Some(vr.row.clone())),
+                None => (0, None),
+            };
+            self.read_set.entry(tk).or_insert(version);
+            out.push(row);
+        }
+        Ok(out)
+    }
+
     /// Buffer an upsert. The key is extracted from the row via the table's
     /// schema; the row is validated eagerly.
     pub fn write(&mut self, table: &str, row: UnversionedRow) -> Result<(), TxnError> {
@@ -239,17 +282,22 @@ impl Transaction {
         }
 
         // Phase 2: apply under a fresh commit id, journal the bytes.
+        // Byte accounting is *grouped*: journal sizes are computed from the
+        // codec's exact size functions (no throwaway encode per row) and
+        // recorded once per touched table with [`record_batch`] — two
+        // atomic adds per table instead of two per row. The resulting
+        // counter state (bytes and op counts, global and scoped) is
+        // indistinguishable from the old per-row recording.
         let commit_id = self.store.commit_counter.fetch_add(1, Ordering::Relaxed);
         let mut rows_written = 0;
+        // (table, bytes, ops) — commits touch a handful of tables at most,
+        // so a linear scan beats a map.
+        let mut acct: Vec<(&str, u64, u64)> = Vec::new();
         for ((table, key), m) in &self.write_set {
             let t = tables.get_mut(table).unwrap();
-            match m {
+            let journal_bytes = match m {
                 Mutation::Upsert(row) => {
-                    let encoded = codec::encode_rows(std::slice::from_ref(row));
-                    self.store.accounting.record(t.category, encoded.len() as u64);
-                    if let Some(scope) = &t.scope {
-                        scope.record(t.category, encoded.len() as u64);
-                    }
+                    let bytes = 4 + codec::encoded_size_row(row);
                     // Persist boundary: detach string cells — in the key
                     // too, it is stored for the table's lifetime — so a
                     // committed row owns minimal buffers instead of
@@ -262,17 +310,31 @@ impl Transaction {
                         },
                     );
                     rows_written += 1;
+                    bytes
                 }
                 Mutation::Delete => {
-                    // A tombstone still costs a small persisted record.
-                    let encoded = codec::encode_rows(&[UnversionedRow::new(key.clone())]);
-                    self.store.accounting.record(t.category, encoded.len() as u64);
-                    if let Some(scope) = &t.scope {
-                        scope.record(t.category, encoded.len() as u64);
-                    }
+                    // A tombstone still costs a small persisted record:
+                    // `encode_rows` framing + a key-only row.
+                    let bytes =
+                        4 + 2 + key.iter().map(codec::encoded_size_value).sum::<usize>();
                     t.rows.remove(key);
                     rows_written += 1;
+                    bytes
                 }
+            } as u64;
+            match acct.iter_mut().find(|(n, _, _)| *n == table.as_str()) {
+                Some(e) => {
+                    e.1 += journal_bytes;
+                    e.2 += 1;
+                }
+                None => acct.push((table.as_str(), journal_bytes, 1)),
+            }
+        }
+        for (table, bytes, ops) in acct {
+            let t = tables.get(table).unwrap();
+            self.store.accounting.record_batch(t.category, bytes, ops);
+            if let Some(scope) = &t.scope {
+                scope.record_batch(t.category, bytes, ops);
             }
         }
         // Apply the ordered appends inside the same critical section; the
@@ -617,6 +679,110 @@ mod tests {
         t.append_ordered(q.clone(), 0, vec![row!["z", 1i64]]).unwrap();
         t.abort();
         assert_eq!(q.end_index(0), 0);
+    }
+
+    #[test]
+    fn lookup_many_matches_sequential_lookups() {
+        let s = store();
+        let mut seed = s.begin();
+        seed.write("state", row![1i64, "v1"]).unwrap();
+        seed.write("out", row!["alice", 7i64]).unwrap();
+        seed.commit().unwrap();
+
+        let mut t = s.begin();
+        t.write("state", row![2i64, "buffered"]).unwrap();
+        t.delete("state", vec![Value::Int64(1)]).unwrap();
+        let got = t
+            .lookup_many(&[
+                ("state", vec![Value::Int64(1)]), // shadowed by buffered delete
+                ("state", vec![Value::Int64(2)]), // read-your-writes
+                ("state", vec![Value::Int64(3)]), // absent
+                ("out", vec![Value::from("alice")]), // cross-table in one batch
+            ])
+            .unwrap();
+        assert_eq!(
+            got,
+            vec![
+                None,
+                Some(row![2i64, "buffered"]),
+                None,
+                Some(row!["alice", 7i64])
+            ]
+        );
+        assert!(matches!(
+            t.lookup_many(&[("missing", vec![Value::Int64(0)])]),
+            Err(TxnError::NoSuchTable(_))
+        ));
+        assert_eq!(t.lookup_many(&[]).unwrap(), Vec::<Option<UnversionedRow>>::new());
+    }
+
+    #[test]
+    fn lookup_many_joins_the_cas_set() {
+        let s = store();
+        let mut seed = s.begin();
+        seed.write("state", row![1i64, "v0"]).unwrap();
+        seed.commit().unwrap();
+
+        // Both twins batch-read the same rows; loser's commit must conflict
+        // exactly as with per-key lookups (absent keys join the set too).
+        let mut a = s.begin();
+        let mut b = s.begin();
+        a.lookup_many(&[("state", vec![Value::Int64(1)]), ("state", vec![Value::Int64(9)])])
+            .unwrap();
+        b.lookup_many(&[("state", vec![Value::Int64(1)]), ("state", vec![Value::Int64(9)])])
+            .unwrap();
+        a.write("state", row![9i64, "from_a"]).unwrap();
+        b.write("state", row![1i64, "from_b"]).unwrap();
+        a.commit().unwrap();
+        assert!(matches!(b.commit(), Err(TxnError::Conflict { .. })));
+    }
+
+    #[test]
+    fn lookup_many_keeps_first_read_wins() {
+        let s = store();
+        let mut seed = s.begin();
+        seed.write("state", row![1i64, "v0"]).unwrap();
+        seed.commit().unwrap();
+
+        let mut a = s.begin();
+        a.lookup_many(&[("state", vec![Value::Int64(1)])]).unwrap();
+        let mut w = s.begin();
+        w.write("state", row![1i64, "v1"]).unwrap();
+        w.commit().unwrap();
+        // A batched re-read must not refresh the recorded version.
+        a.lookup_many(&[("state", vec![Value::Int64(1)])]).unwrap();
+        a.write("state", row![1i64, "v2"]).unwrap();
+        assert!(matches!(a.commit(), Err(TxnError::Conflict { .. })));
+    }
+
+    #[test]
+    fn grouped_accounting_matches_per_row_encoding() {
+        let acc = WriteAccounting::new();
+        let s = DynTableStore::new(acc.clone());
+        s.create_table(
+            "m",
+            TableSchema::new(vec![
+                ColumnSchema::key("k", ColumnType::Int64),
+                ColumnSchema::value("v", ColumnType::Str),
+            ]),
+            WriteCategory::MapperMeta,
+        )
+        .unwrap();
+        let rows = vec![row![1i64, "alpha"], row![2i64, "beta-longer-value"]];
+        let mut t = s.begin();
+        for r in &rows {
+            t.write("m", r.clone()).unwrap();
+        }
+        t.delete("m", vec![Value::Int64(3)]).unwrap();
+        t.commit().unwrap();
+        // Grouped recording must equal the sum of per-row journal records.
+        let expected: u64 = rows
+            .iter()
+            .map(|r| codec::encode_rows(std::slice::from_ref(r)).len() as u64)
+            .sum::<u64>()
+            + codec::encode_rows(&[UnversionedRow::new(vec![Value::Int64(3)])]).len() as u64;
+        assert_eq!(acc.bytes(WriteCategory::MapperMeta), expected);
+        assert_eq!(acc.ops(WriteCategory::MapperMeta), 3, "op count per row kept");
     }
 
     #[test]

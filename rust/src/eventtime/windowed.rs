@@ -31,7 +31,7 @@
 //! to the **late side channel** — an ordered table appended within the
 //! same transaction, so even lateness handling is exactly-once.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::api::{partitioning, Client, Reducer, ReducerSpec};
@@ -230,6 +230,20 @@ pub fn windowed_reducer_factory(deps: Arc<WindowedDeps>) -> crate::api::ReducerF
     })
 }
 
+/// Reusable fold-attempt buffers (the slot arena): cleared — capacity
+/// retained — between attempts, so a steady-state reducer stops paying a
+/// fresh allocation per batch for its per-(window, key) working set.
+#[derive(Default)]
+struct SlotArena {
+    /// `(slot, row index)` tag per on-time row, stable-sorted by slot so
+    /// each slot's rows form a contiguous run in arrival order.
+    tags: Vec<((i64, String), usize)>,
+    /// `(slot, accumulator)` per distinct slot, in slot order — the same
+    /// `touched` set (and the same state-row write order) the old
+    /// per-slot map produced.
+    entries: Vec<((i64, String), Yson)>,
+}
+
 /// The final-fire adapter: implements [`Reducer`] over a [`WindowFold`].
 pub struct WindowedReducer {
     deps: Arc<WindowedDeps>,
@@ -242,6 +256,7 @@ pub struct WindowedReducer {
     tracker: WatermarkTracker,
     /// Monotone clamp over observed fleet watermarks.
     local_watermark: i64,
+    arena: SlotArena,
 }
 
 impl WindowedReducer {
@@ -262,6 +277,7 @@ impl WindowedReducer {
             partitions: None,
             tracker,
             local_watermark: NO_WATERMARK,
+            arena: SlotArena::default(),
         }
     }
 
@@ -319,7 +335,7 @@ impl WindowedReducer {
         &mut self,
         txn: &mut Transaction,
         fired_wm: i64,
-        touched: &BTreeMap<(i64, String), Yson>,
+        touched: &[((i64, String), Yson)],
     ) -> Result<u64, TxnError> {
         let wm = self.local_watermark;
         if wm == NO_WATERMARK || wm <= fired_wm {
@@ -355,7 +371,7 @@ impl WindowedReducer {
             }
             candidates.insert((w, key.to_string()));
         }
-        for (w, key) in touched.keys() {
+        for ((w, key), _) in touched {
             if self.deps.spec.is_final(*w, wm) {
                 candidates.insert((*w, key.clone()));
             }
@@ -397,9 +413,14 @@ impl WindowedReducer {
         let mut txn = self.client.begin();
         let fired_wm = self.read_fired(&mut txn)?;
 
-        let mut touched: BTreeMap<(i64, String), Yson> = BTreeMap::new();
+        // Pass 1 (no store access): classify every row as late or tag it
+        // with its (window, key) slot, into the reusable arena.
+        let mut arena = std::mem::take(&mut self.arena);
+        arena.tags.clear();
+        arena.entries.clear();
         let mut late: Vec<UnversionedRow> = Vec::new();
-        for row in rows.rows() {
+        let all_rows = rows.rows();
+        for (i, row) in all_rows.iter().enumerate() {
             let (Some(ts), Some(key)) = (self.deps.fold.event_ts(row), self.deps.fold.key(row))
             else {
                 continue; // malformed row: dropped deterministically
@@ -412,32 +433,66 @@ impl WindowedReducer {
                 late.push(row.clone());
                 continue;
             }
-            let slot = (w, key);
-            if !touched.contains_key(&slot) {
-                let existing = txn
-                    .lookup(&table, &[Value::Int64(slot.0), Value::from(slot.1.as_str())])?
-                    .and_then(|r| r.get(2).and_then(Value::as_str).map(str::to_string))
-                    .and_then(|s| Yson::parse(&s).ok())
-                    .unwrap_or_else(|| self.deps.fold.zero());
-                touched.insert(slot.clone(), existing);
-            }
-            self.deps
-                .fold
-                .fold(touched.get_mut(&slot).expect("just inserted"), row);
+            arena.tags.push(((w, key), i));
         }
-        for ((w, key), acc) in &touched {
-            txn.write(
+        // Stable sort: each slot's rows stay contiguous in arrival order,
+        // so per-accumulator fold sequences are unchanged.
+        arena.tags.sort_by(|a, b| a.0.cmp(&b.0));
+
+        // Pass 2: one batched transactional read for every distinct slot —
+        // the same read set (and thus the same commit-time CAS semantics)
+        // as the former per-slot lookups, in a single pass.
+        let mut reads: Vec<(&str, Vec<Value>)> = Vec::new();
+        for (j, (slot, _)) in arena.tags.iter().enumerate() {
+            if j == 0 || arena.tags[j - 1].0 != *slot {
+                reads.push((
+                    table.as_str(),
+                    vec![Value::Int64(slot.0), Value::from(slot.1.as_str())],
+                ));
+            }
+        }
+        let existing = match txn.lookup_many(&reads) {
+            Ok(rows) => rows,
+            Err(e) => {
+                self.arena = arena;
+                return Err(e);
+            }
+        };
+
+        // Pass 3: fold each slot's run of rows into its accumulator.
+        let mut j = 0;
+        while j < arena.tags.len() {
+            let run_start = j;
+            let mut acc = existing[arena.entries.len()]
+                .as_ref()
+                .and_then(|r| r.get(2).and_then(Value::as_str))
+                .and_then(|s| Yson::parse(s).ok())
+                .unwrap_or_else(|| self.deps.fold.zero());
+            while j < arena.tags.len() && arena.tags[j].0 == arena.tags[run_start].0 {
+                self.deps.fold.fold(&mut acc, &all_rows[arena.tags[j].1]);
+                j += 1;
+            }
+            let slot = arena.tags[run_start].0.clone();
+            arena.entries.push((slot, acc));
+        }
+        for ((w, key), acc) in &arena.entries {
+            if let Err(e) = txn.write(
                 &table,
                 UnversionedRow::new(vec![
                     Value::Int64(*w),
                     Value::from(key.as_str()),
                     Value::from(acc.to_string().as_str()),
                 ]),
-            )?;
+            ) {
+                self.arena = arena;
+                return Err(e);
+            }
         }
 
         self.refresh_watermark();
-        self.fire_into(&mut txn, fired_wm, &touched)?;
+        let fire = self.fire_into(&mut txn, fired_wm, &arena.entries);
+        self.arena = arena; // hand the buffers back for the next attempt
+        fire?;
 
         if !late.is_empty() {
             self.deps
@@ -490,7 +545,7 @@ impl Reducer for WindowedReducer {
             txn.abort();
             return None;
         }
-        match self.fire_into(&mut txn, fired_wm, &BTreeMap::new()) {
+        match self.fire_into(&mut txn, fired_wm, &[]) {
             Ok(0) | Err(_) => {
                 txn.abort();
                 None // nothing to do (or transient failure: retried next cycle)

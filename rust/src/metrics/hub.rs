@@ -127,6 +127,7 @@ pub mod names {
     pub const REDUCER_BYTES: &str = "reducer/bytes_processed_total";
     pub const REDUCER_COMMITS: &str = "reducer/commits_total";
     pub const REDUCER_COMMIT_CONFLICTS: &str = "reducer/commit_conflicts_total";
+    pub const REDUCER_COALESCED_ROUNDS: &str = "reducer/coalesced_fetch_rounds_total";
     pub const REDUCER_SPLIT_BRAIN: &str = "reducer/split_brain_detected_total";
     pub const SPILL_ROWS: &str = "spill/rows_spilled_total";
     pub const SPILL_RESTORED: &str = "spill/rows_restored_total";

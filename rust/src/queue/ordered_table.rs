@@ -132,16 +132,21 @@ impl OrderedTable {
     /// Transactional append path, called by [`crate::dyntable`] while it
     /// holds the store-wide commit lock, *after* availability was validated
     /// (an outage injected mid-commit must not tear the commit, so this
-    /// path ignores the flag). Rows are detached at this persist boundary
-    /// so the retained queue never pins a decoded attachment buffer.
+    /// path ignores the flag). Rows must not keep pinning the decoded
+    /// attachment buffer they came from; instead of detaching each row
+    /// (a per-cell copy), the batch is detached **once**: the journal
+    /// record we encode anyway is exactly sized to the batch, so the
+    /// retained rows are zero-copy views into that one shared buffer.
     /// Returns the absolute index of the first appended row.
     pub(crate) fn append_committed(&self, tablet: usize, rows: Vec<UnversionedRow>) -> i64 {
-        let encoded = codec::encode_rows(&rows);
+        let encoded: Arc<[u8]> = codec::encode_rows(&rows).into();
+        let retained =
+            codec::decode_rows_shared(&encoded).expect("own encode must decode");
         let t = self.tablet(tablet);
         let mut t = t.lock().unwrap();
         self.journal.append(encoded);
         let first = t.first_index + t.rows.len() as i64;
-        t.rows.extend(rows.iter().map(UnversionedRow::detached));
+        t.rows.extend(retained);
         first
     }
 
@@ -379,6 +384,26 @@ mod tests {
         assert_eq!(t.end_index(0), 5);
         let mut r = t.reader(0);
         assert_eq!(r.read(0, 5, &ContinuationToken::initial()).unwrap().rowset.len(), 5);
+    }
+
+    #[test]
+    fn committed_append_detaches_into_journal_record() {
+        let t = table(1);
+        t.append_committed(0, vec![row!["shared-payload", 7i64]]);
+        let rec = t.journal.read(0).unwrap();
+        let mut r = t.reader(0);
+        let b = r.read(0, 1, &ContinuationToken::initial()).unwrap();
+        match b.rowset.rows()[0].get(0).unwrap() {
+            crate::rows::Value::Str(s) => {
+                let p = s.payload_ptr() as usize;
+                let start = rec.as_ptr() as usize;
+                assert!(
+                    p >= start && p < start + rec.len(),
+                    "retained cell must be a view into the journal record"
+                );
+            }
+            other => panic!("unexpected cell {other:?}"),
+        }
     }
 
     #[test]

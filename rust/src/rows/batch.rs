@@ -1,0 +1,358 @@
+//! Columnar row batches (§6 "vectorized execution"): the same rows as an
+//! [`UnversionedRowset`], laid out column-major so the hot loops of the
+//! shuffle path — encode, decode, key hashing — run as tight per-column
+//! passes instead of per-row virtual dispatch.
+//!
+//! A [`RowBatch`] is bit-equivalent to the rowset it came from: `encode`
+//! produces **byte-identical** output to [`codec::encode_rowset`] and
+//! `decode_shared` accepts exactly what [`codec::decode_rowset_shared`]
+//! accepts (same grammar, same error positions, same trailing-garbage
+//! rejection), so the two representations interconvert freely anywhere on
+//! the wire path. Ragged wire input (rows with differing value counts) is
+//! preserved exactly: internally short rows are padded with `Null` so every
+//! column has one cell per row, but a per-row width column remembers the
+//! true cell count and `encode`/`to_rowset` emit only that many.
+//!
+//! The perf claim this module exists for (measured in
+//! `benches/micro_hot_paths.rs`, `batch/*` vs the per-row baselines):
+//! batch-level `encode` walks each row's cells through one monomorphic
+//! loop with a single exact-size preallocation, and [`RowBatch::key_hash_column`]
+//! computes the routing hash of every row in one vectorized pass via
+//! [`partitioning`] — without materializing a composite-key `String` per
+//! row, which the scalar path pays today.
+
+use std::sync::Arc;
+
+use crate::api::partitioning;
+
+use super::codec::{self, CodecError, Decoder, Encoder};
+use super::name_table::NameTable;
+use super::row::UnversionedRow;
+use super::rowset::UnversionedRowset;
+use super::value::Value;
+
+/// A column-major batch of rows sharing one [`NameTable`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowBatch {
+    name_table: Arc<NameTable>,
+    /// `columns[c][r]` = cell `c` of row `r`; every column holds exactly
+    /// `widths.len()` cells (short rows padded with `Null`).
+    columns: Vec<Vec<Value>>,
+    /// True wire cell count of each row (`<= columns.len()`); the padding
+    /// cells beyond it are internal only and never re-encoded.
+    widths: Vec<u16>,
+}
+
+impl RowBatch {
+    /// Transpose a rowset into columnar form. Cheap per cell: string
+    /// payloads are refcounted [`super::ByteStr`] views, never copied.
+    pub fn from_rowset(rs: &UnversionedRowset) -> RowBatch {
+        let nrows = rs.len();
+        let ncols = rs.rows().iter().map(UnversionedRow::len).max().unwrap_or(0);
+        let mut columns: Vec<Vec<Value>> = (0..ncols)
+            .map(|_| Vec::with_capacity(nrows))
+            .collect();
+        let mut widths = Vec::with_capacity(nrows);
+        for row in rs.rows() {
+            let vals = row.values();
+            widths.push(vals.len() as u16);
+            for (c, col) in columns.iter_mut().enumerate() {
+                col.push(vals.get(c).cloned().unwrap_or(Value::Null));
+            }
+        }
+        RowBatch {
+            name_table: rs.name_table().clone(),
+            columns,
+            widths,
+        }
+    }
+
+    /// Decode the [`codec::encode_rowset`] wire format straight into
+    /// columnar form from an already-shared buffer — zero-copy string
+    /// cells, identical acceptance/rejection to
+    /// [`codec::decode_rowset_shared`].
+    pub fn decode_shared(buf: &Arc<[u8]>) -> Result<RowBatch, CodecError> {
+        let mut d = Decoder::new(buf);
+        let magic = d.u32()?;
+        if magic != codec::MAGIC {
+            return Err(CodecError::BadMagic(magic));
+        }
+        let version = d.u16()?;
+        if version != codec::VERSION {
+            return Err(CodecError::BadVersion(version));
+        }
+        let ncols = d.u16()? as usize;
+        let mut names = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let n = d.u16()? as usize;
+            names.push(d.str(n)?);
+        }
+        let name_table = NameTable::from_names(names);
+        let nrows = d.u32()? as usize;
+        let mut columns: Vec<Vec<Value>> = Vec::new();
+        let mut widths = Vec::with_capacity(nrows);
+        for r in 0..nrows {
+            let w = d.u16()? as usize;
+            while columns.len() < w {
+                // A row wider than any before it: open the column and
+                // backfill the padding for the rows already parsed.
+                let mut col = Vec::with_capacity(nrows);
+                col.resize(r, Value::Null);
+                columns.push(col);
+            }
+            for (c, col) in columns.iter_mut().enumerate() {
+                col.push(if c < w { d.value()? } else { Value::Null });
+            }
+            widths.push(w as u16);
+        }
+        if d.pos() != buf.len() {
+            return Err(CodecError::Truncated(d.pos()));
+        }
+        Ok(RowBatch {
+            name_table,
+            columns,
+            widths,
+        })
+    }
+
+    pub fn name_table(&self) -> &Arc<NameTable> {
+        &self.name_table
+    }
+
+    pub fn len(&self) -> usize {
+        self.widths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.widths.is_empty()
+    }
+
+    /// Cell `(row, col)`; `None` beyond the row's true wire width.
+    pub fn value(&self, row: usize, col: usize) -> Option<&Value> {
+        if col < *self.widths.get(row)? as usize {
+            self.columns.get(col)?.get(row)
+        } else {
+            None
+        }
+    }
+
+    /// One full column as a slice (including `Null` padding for rows
+    /// narrower than `col` — check [`RowBatch::value`] semantics when
+    /// raggedness matters; homogeneous batches have none).
+    pub fn column(&self, col: usize) -> Option<&[Value]> {
+        self.columns.get(col).map(Vec::as_slice)
+    }
+
+    /// Exact wire size of [`RowBatch::encode`]'s output.
+    pub fn encoded_size(&self) -> usize {
+        let mut n = 4 + 2 + self.name_table.wire_size() + 4;
+        for r in 0..self.len() {
+            n += 2;
+            for c in 0..self.widths[r] as usize {
+                n += codec::encoded_size_value(&self.columns[c][r]);
+            }
+        }
+        n
+    }
+
+    /// Encode the batch — byte-identical to
+    /// [`codec::encode_rowset`] over [`RowBatch::to_rowset`]'s result, with
+    /// one exact-size preallocation for the whole batch.
+    pub fn encode(&self) -> Vec<u8> {
+        let predicted = self.encoded_size();
+        let mut e = Encoder::with_capacity(predicted);
+        e.u32(codec::MAGIC);
+        e.u16(codec::VERSION);
+        e.u16(self.name_table.len() as u16);
+        for name in self.name_table.names() {
+            e.u16(name.len() as u16);
+            e.bytes(name.as_bytes());
+        }
+        e.u32(self.len() as u32);
+        for r in 0..self.len() {
+            let w = self.widths[r] as usize;
+            e.u16(w as u16);
+            for c in 0..w {
+                e.value(&self.columns[c][r]);
+            }
+        }
+        let buf = e.finish();
+        debug_assert_eq!(buf.len(), predicted, "RowBatch::encoded_size mispredicted");
+        buf
+    }
+
+    /// Transpose back to row-major. Inverse of [`RowBatch::from_rowset`]
+    /// including raggedness (row `r` gets exactly `widths[r]` cells).
+    pub fn to_rowset(&self) -> UnversionedRowset {
+        let rows = (0..self.len())
+            .map(|r| {
+                let w = self.widths[r] as usize;
+                UnversionedRow::new((0..w).map(|c| self.columns[c][r].clone()).collect())
+            })
+            .collect();
+        UnversionedRowset::new(self.name_table.clone(), rows)
+    }
+
+    /// Vectorized routing-hash column: for every row, the
+    /// [`partitioning::key_hash`] of the composite key drawn from
+    /// `key_cols` (joined exactly like [`partitioning::composite_key`] but
+    /// hashed incrementally, so no per-row `String` is built). `None` for
+    /// rows where any key column is missing or not a string — callers drop
+    /// or default-route those, same as the scalar path.
+    pub fn key_hash_column(&self, key_cols: &[usize]) -> Vec<Option<u64>> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut parts: Vec<&str> = Vec::with_capacity(key_cols.len());
+        'rows: for r in 0..self.len() {
+            parts.clear();
+            for &c in key_cols {
+                match self.value(r, c).and_then(Value::as_str) {
+                    Some(s) => parts.push(s),
+                    None => {
+                        out.push(None);
+                        continue 'rows;
+                    }
+                }
+            }
+            out.push(Some(partitioning::composite_key_hash(&parts)));
+        }
+        out
+    }
+
+    /// The same vectorized hash pass over a row-major rowset, for callers
+    /// (e.g. routing mappers) that only need the hash column and would
+    /// waste the full columnar transpose. Identical output to
+    /// `RowBatch::from_rowset(rs).key_hash_column(key_cols)`.
+    pub fn key_hash_column_of(rs: &UnversionedRowset, key_cols: &[usize]) -> Vec<Option<u64>> {
+        let mut out = Vec::with_capacity(rs.len());
+        let mut parts: Vec<&str> = Vec::with_capacity(key_cols.len());
+        'rows: for row in rs.rows() {
+            parts.clear();
+            for &c in key_cols {
+                match row.get(c).and_then(Value::as_str) {
+                    Some(s) => parts.push(s),
+                    None => {
+                        out.push(None);
+                        continue 'rows;
+                    }
+                }
+            }
+            out.push(Some(partitioning::composite_key_hash(&parts)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+    use crate::rows::rowset::RowsetBuilder;
+
+    fn sample() -> UnversionedRowset {
+        let nt = NameTable::new(&["user", "cluster", "ts", "score"]);
+        let mut b = RowsetBuilder::new(nt);
+        b.push(row!["alice", "hahn", 12i64, 1.5]);
+        b.push(row!["bob", "freud", -3i64, 0.0]);
+        b.push(UnversionedRow::new(vec![
+            Value::Null,
+            Value::Str("hahn".into()),
+            Value::Uint64(7),
+            Value::Bool(true),
+        ]));
+        b.build()
+    }
+
+    #[test]
+    fn roundtrips_match_per_row_codec() {
+        let rs = sample();
+        let batch = RowBatch::from_rowset(&rs);
+        assert_eq!(batch.len(), rs.len());
+        assert_eq!(batch.encode(), codec::encode_rowset(&rs), "byte-identical encode");
+        assert_eq!(batch.encoded_size(), codec::encoded_size_rowset(&rs));
+
+        let shared: Arc<[u8]> = codec::encode_rowset(&rs).into();
+        let decoded = RowBatch::decode_shared(&shared).unwrap();
+        assert_eq!(decoded.to_rowset(), rs);
+        assert_eq!(decoded, batch);
+    }
+
+    #[test]
+    fn ragged_rows_survive_exactly() {
+        // The wire format permits rows of differing widths; the columnar
+        // form must neither drop cells nor leak its Null padding.
+        let nt = NameTable::new(&["a", "b", "c"]);
+        let rs = UnversionedRowset::new(
+            nt,
+            vec![row![1i64], row![2i64, "x", 3i64], UnversionedRow::new(vec![])],
+        );
+        let bytes = codec::encode_rowset(&rs);
+        let batch = RowBatch::from_rowset(&rs);
+        assert_eq!(batch.encode(), bytes);
+        let shared: Arc<[u8]> = bytes.into();
+        let decoded = RowBatch::decode_shared(&shared).unwrap();
+        assert_eq!(decoded.to_rowset(), rs);
+        assert_eq!(decoded.value(0, 1), None, "padding is not a cell");
+        assert_eq!(decoded.value(1, 1).and_then(Value::as_str), Some("x"));
+    }
+
+    #[test]
+    fn rejects_what_the_codec_rejects() {
+        let rs = sample();
+        let bytes = codec::encode_rowset(&rs);
+        let mut garbage = bytes.clone();
+        garbage.push(0);
+        let shared: Arc<[u8]> = garbage.into();
+        assert!(matches!(
+            RowBatch::decode_shared(&shared),
+            Err(CodecError::Truncated(_))
+        ));
+        let truncated: Arc<[u8]> = bytes[..bytes.len() - 1].to_vec().into();
+        assert!(matches!(
+            RowBatch::decode_shared(&truncated),
+            Err(CodecError::Truncated(_))
+        ));
+        let mut bad_magic = bytes;
+        bad_magic[0] ^= 0xFF;
+        let shared: Arc<[u8]> = bad_magic.into();
+        assert!(matches!(
+            RowBatch::decode_shared(&shared),
+            Err(CodecError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn hash_column_matches_scalar_hashing() {
+        let rs = sample();
+        let batch = RowBatch::from_rowset(&rs);
+        // Composite (user, cluster) — row 2 has a Null user: None.
+        let hashes = batch.key_hash_column(&[0, 1]);
+        assert_eq!(
+            hashes[0],
+            Some(partitioning::key_hash(&partitioning::composite_key(&[
+                "alice", "hahn"
+            ])))
+        );
+        assert_eq!(
+            hashes[1],
+            Some(partitioning::key_hash(&partitioning::composite_key(&[
+                "bob", "freud"
+            ])))
+        );
+        assert_eq!(hashes[2], None);
+        // Single-column key degenerates to the plain key hash.
+        let single = batch.key_hash_column(&[1]);
+        assert_eq!(single[0], Some(partitioning::key_hash("hahn")));
+        // The row-major pass is the same function.
+        assert_eq!(RowBatch::key_hash_column_of(&rs, &[0, 1]), hashes);
+        assert_eq!(RowBatch::key_hash_column_of(&rs, &[1]), batch.key_hash_column(&[1]));
+    }
+
+    #[test]
+    fn empty_batch() {
+        let rs = UnversionedRowset::empty(NameTable::new(&["a"]));
+        let batch = RowBatch::from_rowset(&rs);
+        assert!(batch.is_empty());
+        assert_eq!(batch.encode(), codec::encode_rowset(&rs));
+        assert!(batch.key_hash_column(&[0]).is_empty());
+    }
+}

@@ -46,8 +46,8 @@ use super::row::UnversionedRow;
 use super::rowset::UnversionedRowset;
 use super::value::Value;
 
-const MAGIC: u32 = 0x59_54_52_53; // "YTRS"
-const VERSION: u16 = 2;
+pub(crate) const MAGIC: u32 = 0x59_54_52_53; // "YTRS"
+pub(crate) const VERSION: u16 = 2;
 
 const TAG_NULL: u8 = 0;
 const TAG_BOOL_FALSE: u8 = 1;
@@ -127,27 +127,27 @@ impl Encoder {
     }
 
     #[inline]
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
     #[inline]
-    fn u16(&mut self, v: u16) {
+    pub(crate) fn u16(&mut self, v: u16) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
     #[inline]
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
     #[inline]
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
     #[inline]
-    fn bytes(&mut self, b: &[u8]) {
+    pub(crate) fn bytes(&mut self, b: &[u8]) {
         self.buf.extend_from_slice(b);
     }
 
@@ -252,12 +252,24 @@ pub fn encode_rows(rows: &[UnversionedRow]) -> Vec<u8> {
 
 /// Decoder over a shared backing buffer: string cells are produced as
 /// [`ByteStr`] views into `arc` instead of freshly-allocated `String`s.
-struct Decoder<'a> {
+///
+/// `pub(crate)` so [`super::batch`] parses the identical wire format with
+/// the identical error semantics instead of re-implementing the grammar.
+pub(crate) struct Decoder<'a> {
     arc: &'a Arc<[u8]>,
     i: usize,
 }
 
 impl<'a> Decoder<'a> {
+    pub(crate) fn new(arc: &'a Arc<[u8]>) -> Decoder<'a> {
+        Decoder { arc, i: 0 }
+    }
+
+    /// Current byte position (for trailing-garbage checks by callers).
+    pub(crate) fn pos(&self) -> usize {
+        self.i
+    }
+
     fn b(&self) -> &[u8] {
         self.arc
     }
@@ -270,28 +282,28 @@ impl<'a> Decoder<'a> {
         }
     }
 
-    fn u8(&mut self) -> Result<u8, CodecError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, CodecError> {
         self.need(1)?;
         let v = self.b()[self.i];
         self.i += 1;
         Ok(v)
     }
 
-    fn u16(&mut self) -> Result<u16, CodecError> {
+    pub(crate) fn u16(&mut self) -> Result<u16, CodecError> {
         self.need(2)?;
         let v = u16::from_le_bytes(self.b()[self.i..self.i + 2].try_into().unwrap());
         self.i += 2;
         Ok(v)
     }
 
-    fn u32(&mut self) -> Result<u32, CodecError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, CodecError> {
         self.need(4)?;
         let v = u32::from_le_bytes(self.b()[self.i..self.i + 4].try_into().unwrap());
         self.i += 4;
         Ok(v)
     }
 
-    fn u64(&mut self) -> Result<u64, CodecError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, CodecError> {
         self.need(8)?;
         let v = u64::from_le_bytes(self.b()[self.i..self.i + 8].try_into().unwrap());
         self.i += 8;
@@ -299,7 +311,7 @@ impl<'a> Decoder<'a> {
     }
 
     /// Owned string (name-table entries: few, amortized over the rowset).
-    fn str(&mut self, n: usize) -> Result<String, CodecError> {
+    pub(crate) fn str(&mut self, n: usize) -> Result<String, CodecError> {
         self.need(n)?;
         let s = std::str::from_utf8(&self.b()[self.i..self.i + n])
             .map_err(|_| CodecError::BadUtf8)?
@@ -309,7 +321,7 @@ impl<'a> Decoder<'a> {
     }
 
     /// Shared-slice string cell: validates UTF-8 once, allocates nothing.
-    fn bytestr(&mut self, n: usize) -> Result<ByteStr, CodecError> {
+    pub(crate) fn bytestr(&mut self, n: usize) -> Result<ByteStr, CodecError> {
         self.need(n)?;
         // Distinguish the ByteStr u32 offset limit from actual UTF-8
         // corruption so huge attachments get a diagnosable error. (`n`
@@ -322,7 +334,7 @@ impl<'a> Decoder<'a> {
         Ok(s)
     }
 
-    fn value(&mut self) -> Result<Value, CodecError> {
+    pub(crate) fn value(&mut self) -> Result<Value, CodecError> {
         Ok(match self.u8()? {
             TAG_NULL => Value::Null,
             TAG_BOOL_FALSE => Value::Bool(false),
@@ -338,7 +350,7 @@ impl<'a> Decoder<'a> {
         })
     }
 
-    fn row(&mut self) -> Result<UnversionedRow, CodecError> {
+    pub(crate) fn row(&mut self) -> Result<UnversionedRow, CodecError> {
         let n = self.u16()? as usize;
         let mut vals = Vec::with_capacity(n);
         for _ in 0..n {
@@ -422,6 +434,27 @@ pub fn decode_rows_shared(buf: &Arc<[u8]>) -> Result<Vec<UnversionedRow>, CodecE
     Ok(rows)
 }
 
+/// Decode one [`encode_rows`] record that starts at `offset` inside a
+/// larger shared buffer holding several records back to back (the spill
+/// queue packs a whole routed batch into one buffer). Returns the rows and
+/// the offset one past the record's end. String cells are zero-copy views
+/// into `buf`, exactly as with [`decode_rows_shared`].
+pub fn decode_rows_shared_at(
+    buf: &Arc<[u8]>,
+    offset: usize,
+) -> Result<(Vec<UnversionedRow>, usize), CodecError> {
+    if offset > buf.len() {
+        return Err(CodecError::Truncated(offset));
+    }
+    let mut d = Decoder { arc: buf, i: offset };
+    let n = d.u32()? as usize;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        rows.push(d.row()?);
+    }
+    Ok((rows, d.i))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,6 +498,25 @@ mod tests {
         let bytes = encode_rows(&rows);
         assert_eq!(bytes.len(), encoded_size_rows(&rows));
         assert_eq!(decode_rows(&bytes).unwrap(), rows);
+    }
+
+    #[test]
+    fn rows_decode_at_offsets_across_packed_records() {
+        let a = vec![row![1i64, "x"], row![2i64, "y"]];
+        let b = vec![row![3i64, "zz"]];
+        let mut packed = encode_rows(&a);
+        packed.extend_from_slice(&encode_rows(&b));
+        let shared: Arc<[u8]> = packed.into();
+        let (rows_a, next) = decode_rows_shared_at(&shared, 0).unwrap();
+        assert_eq!(rows_a, a);
+        assert_eq!(next, encoded_size_rows(&a));
+        let (rows_b, end) = decode_rows_shared_at(&shared, next).unwrap();
+        assert_eq!(rows_b, b);
+        assert_eq!(end, shared.len());
+        assert!(matches!(
+            decode_rows_shared_at(&shared, shared.len() + 1),
+            Err(CodecError::Truncated(_))
+        ));
     }
 
     #[test]

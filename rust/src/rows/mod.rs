@@ -18,7 +18,9 @@ pub mod schema;
 pub mod row;
 pub mod rowset;
 pub mod codec;
+pub mod batch;
 
+pub use batch::RowBatch;
 pub use bytestr::ByteStr;
 pub use name_table::NameTable;
 pub use row::UnversionedRow;

@@ -26,13 +26,15 @@ use crate::storage::Journal;
 /// Persisted overflow queue for one straggler bucket.
 #[derive(Debug)]
 pub struct SpillQueue {
-    /// (shuffle_index, event time, encoded row). The record buffer is
-    /// **shared** with the journal (`Arc<[u8]>`): the queue entry models
-    /// reading the spill table back, the journal models (and accounts)
-    /// the write — one encoded buffer serves both, no copy. The event
-    /// time is cached at push so the mapper's watermark query
+    /// (shuffle_index, event time, encoded buffer, record offset). The
+    /// buffer is **shared** with the journal (`Arc<[u8]>`): the queue
+    /// entry models reading the spill table back, the journal models (and
+    /// accounts) the write — one encoded buffer serves both, no copy. A
+    /// batch push writes many records back-to-back into one buffer, so
+    /// entries address their record by byte offset (0 for single pushes).
+    /// The event time is cached at push so the mapper's watermark query
     /// ([`SpillQueue::min_event_ts`]) never has to decode records.
-    queue: VecDeque<(i64, Option<i64>, Arc<[u8]>)>,
+    queue: VecDeque<(i64, Option<i64>, Arc<[u8]>, usize)>,
     journal: Arc<Journal>,
     /// Total rows ever spilled through this queue (metrics).
     pub rows_spilled_total: u64,
@@ -57,7 +59,7 @@ impl SpillQueue {
 
     /// Shuffle index of the newest spilled row.
     pub fn last_shuffle_index(&self) -> Option<i64> {
-        self.queue.back().map(|(s, _, _)| *s)
+        self.queue.back().map(|(s, ..)| *s)
     }
 
     /// Persist a detached row. Rows must arrive in shuffle order and the
@@ -75,15 +77,59 @@ impl SpillQueue {
         row: &UnversionedRow,
         event_ts: Option<i64>,
     ) {
-        if let Some((last, _, _)) = self.queue.back() {
+        if let Some((last, ..)) = self.queue.back() {
             debug_assert!(shuffle_index > *last, "spill must preserve shuffle order");
         }
         // One bulk Vec→Arc copy of the encoded record; the journal append
         // and queue entry then share it by refcount.
         let encoded: Arc<[u8]> = codec::encode_rows(std::slice::from_ref(row)).into();
         self.journal.append(encoded.clone());
-        self.queue.push_back((shuffle_index, event_ts, encoded));
+        self.queue.push_back((shuffle_index, event_ts, encoded, 0));
         self.rows_spilled_total += 1;
+    }
+
+    /// Persist a run of detached rows as **one** journal append. Each
+    /// record keeps the standalone [`codec::encode_rows`] framing — the
+    /// journaled bytes are identical to `rows.len()` single pushes — but
+    /// they are encoded back-to-back into a single shared buffer, so the
+    /// whole run costs one encode pass, one buffer copy and one journal
+    /// operation. Queue entries address their record by offset into the
+    /// shared buffer.
+    pub fn push_batch(&mut self, rows: &[(i64, Option<i64>, &UnversionedRow)]) {
+        if rows.is_empty() {
+            return;
+        }
+        #[cfg(debug_assertions)]
+        {
+            let mut prev = self.queue.back().map(|(s, ..)| *s);
+            for (s, _, _) in rows {
+                debug_assert!(
+                    prev.map_or(true, |p| *s > p),
+                    "spill must preserve shuffle order"
+                );
+                prev = Some(*s);
+            }
+        }
+        let total: usize = rows
+            .iter()
+            .map(|(_, _, r)| 4 + codec::encoded_size_row(r))
+            .sum();
+        let mut e = codec::Encoder::with_capacity(total);
+        for (_, _, row) in rows {
+            e.u32(1); // one-row record framing, same as encode_rows
+            e.row(row);
+        }
+        let buf = e.finish();
+        debug_assert_eq!(buf.len(), total, "batch record sizes mispredicted");
+        let encoded: Arc<[u8]> = buf.into();
+        self.journal.append(encoded.clone());
+        let mut offset = 0;
+        for (shuffle_index, event_ts, row) in rows {
+            self.queue
+                .push_back((*shuffle_index, *event_ts, encoded.clone(), offset));
+            offset += 4 + codec::encoded_size_row(row);
+        }
+        self.rows_spilled_total += rows.len() as u64;
     }
 
     /// Drop rows acknowledged by the reducer (`shuffle_index <= committed`).
@@ -92,7 +138,7 @@ impl SpillQueue {
         while self
             .queue
             .front()
-            .is_some_and(|(s, _, _)| *s <= committed_row_index)
+            .is_some_and(|(s, ..)| *s <= committed_row_index)
         {
             self.queue.pop_front();
             popped += 1;
@@ -104,7 +150,7 @@ impl SpillQueue {
     /// integer scan, no decoding or allocation (this runs under the
     /// mapper's inner lock on the trim cadence).
     pub fn min_event_ts(&self) -> Option<i64> {
-        self.queue.iter().filter_map(|(_, ts, _)| *ts).min()
+        self.queue.iter().filter_map(|(_, ts, _, _)| *ts).min()
     }
 
     /// Decode up to `count` rows from the front (not removed). String
@@ -114,8 +160,9 @@ impl SpillQueue {
         self.queue
             .iter()
             .take(count)
-            .map(|(s, _, bytes)| {
-                let rows = codec::decode_rows_shared(bytes).expect("spill self-corruption");
+            .map(|(s, _, bytes, offset)| {
+                let (rows, _) =
+                    codec::decode_rows_shared_at(bytes, *offset).expect("spill self-corruption");
                 (*s, rows.into_iter().next().expect("one row per record"))
             })
             .collect()
@@ -223,7 +270,7 @@ mod tests {
     fn record_buffer_shared_with_journal() {
         let (mut q, _) = queue();
         q.push(1, &row!["payload", 1i64]);
-        let (_, _, rec) = q.queue.front().unwrap();
+        let (_, _, rec, _) = q.queue.front().unwrap();
         let journaled = q.journal.read(0).unwrap();
         assert!(
             Arc::ptr_eq(rec, &journaled),
@@ -232,12 +279,70 @@ mod tests {
     }
 
     #[test]
+    fn batch_push_is_one_journal_op_with_identical_bytes() {
+        let (mut q, acc) = queue();
+        let rows = [row!["a", 1i64], row![2i64], row!["ccc", 3i64, 4i64]];
+        let batch: Vec<(i64, Option<i64>, &crate::rows::UnversionedRow)> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i as i64 * 3, (i == 1).then_some(70i64), r))
+            .collect();
+        q.push_batch(&batch);
+
+        // One journal operation for the whole run…
+        assert_eq!(q.journal.len(), 1);
+        assert_eq!(q.rows_spilled_total, 3);
+        // …but byte-for-byte what three single pushes would have written.
+        let singles: u64 = rows
+            .iter()
+            .map(|r| codec::encode_rows(std::slice::from_ref(r)).len() as u64)
+            .sum();
+        assert_eq!(acc.bytes(WriteCategory::Spill), singles);
+        assert_eq!(q.journal.total_bytes(), singles);
+
+        // Every entry decodes its own record out of the shared buffer.
+        let peeked = q.peek(10);
+        assert_eq!(peeked.len(), 3);
+        assert_eq!(peeked[0], (0, rows[0].clone()));
+        assert_eq!(peeked[1], (3, rows[1].clone()));
+        assert_eq!(peeked[2], (6, rows[2].clone()));
+        assert_eq!(q.min_event_ts(), Some(70));
+        let journaled = q.journal.read(0).unwrap();
+        for (_, _, rec, _) in &q.queue {
+            assert!(Arc::ptr_eq(rec, &journaled), "entries share the batch buffer");
+        }
+
+        // Acks land per-row, exactly as with single pushes.
+        assert_eq!(q.ack(3), 2);
+        assert_eq!(q.peek(10)[0].0, 6);
+        assert_eq!(q.min_event_ts(), None);
+    }
+
+    #[test]
+    fn batch_and_single_pushes_interleave() {
+        let (mut q, _) = queue();
+        q.push(0, &row![0i64]);
+        let r1 = row![1i64];
+        let r2 = row![2i64];
+        q.push_batch(&[(1, None, &r1), (2, None, &r2)]);
+        q.push(3, &row![3i64]);
+        let peeked = q.peek(10);
+        assert_eq!(
+            peeked.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(peeked[2].1, row![2i64]);
+        q.push_batch(&[]); // no-op, no journal record
+        assert_eq!(q.journal.len(), 3);
+    }
+
+    #[test]
     fn peek_is_zero_copy() {
         let (mut q, _) = queue();
         q.push(1, &row!["spilled-string"]);
         let rows = q.peek(1);
         let cell = rows[0].1.get(0).unwrap();
-        let (_, _, rec) = q.queue.front().unwrap();
+        let (_, _, rec, _) = q.queue.front().unwrap();
         let start = rec.as_ptr() as usize;
         match cell {
             crate::rows::Value::Str(s) => {

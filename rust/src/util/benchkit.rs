@@ -8,7 +8,13 @@
 //! one-line-per-benchmark text that the EXPERIMENTS.md tables are built
 //! from.
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Every report produced by this process (fed by [`Bench::run`]), so a
+/// bench binary can emit one machine-readable document at exit — see
+/// [`write_json_env`].
+static COLLECTED: Mutex<Vec<BenchReport>> = Mutex::new(Vec::new());
 
 /// One benchmark definition.
 pub struct Bench {
@@ -107,7 +113,87 @@ impl Bench {
             self.items_per_iter,
         );
         println!("{}", format_report(&report));
+        COLLECTED.lock().unwrap().push(report.clone());
         report
+    }
+}
+
+/// Snapshot of every report collected by this process so far.
+pub fn collected() -> Vec<BenchReport> {
+    COLLECTED.lock().unwrap().clone()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_opt(x: Option<f64>) -> String {
+    x.map_or_else(|| "null".to_string(), json_num)
+}
+
+/// Render reports as the machine-readable `BENCH_<pr>.json` document
+/// (hand-rolled — serde is unavailable offline). `harness` records what
+/// produced the numbers so downstream tooling never mistakes a model or
+/// smoke run for full measurements.
+pub fn reports_to_json(harness: &str, reports: &[BenchReport]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"yt-stream-bench-v1\",\n");
+    s.push_str(&format!("  \"harness\": \"{}\",\n", json_escape(harness)));
+    s.push_str("  \"benches\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \
+             \"p99_ns\": {}, \"mb_per_s\": {}, \"mitems_per_s\": {}}}{}\n",
+            json_escape(&r.name),
+            r.iters,
+            json_num(r.mean_ns),
+            json_num(r.p50_ns),
+            json_num(r.p99_ns),
+            json_opt(r.mb_per_s),
+            json_opt(r.mitems_per_s),
+            if i + 1 < reports.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// If `BENCHKIT_JSON` names a path, write everything this process has
+/// collected there — the `scripts/bench_smoke.sh` contract for emitting
+/// `BENCH_<pr>.json` at the repo root. Returns the path written, if any.
+pub fn write_json_env(harness: &str) -> Option<std::path::PathBuf> {
+    let path = std::path::PathBuf::from(std::env::var_os("BENCHKIT_JSON")?);
+    let json = reports_to_json(harness, &collected());
+    match std::fs::write(&path, json) {
+        Ok(()) => {
+            println!("benchkit: wrote {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("benchkit: failed to write {}: {e}", path.display());
+            None
+        }
     }
 }
 
@@ -200,6 +286,33 @@ mod tests {
         let mb = r.mb_per_s.unwrap();
         // 1 MB per ~100us → ~10 GB/s nominal; just check it's sane & positive.
         assert!(mb > 0.0);
+    }
+
+    #[test]
+    fn reports_are_collected_and_serialized() {
+        let r = Bench::new("json\"bench")
+            .warmup(Duration::from_millis(1))
+            .min_time(Duration::from_millis(2))
+            .min_iters(3)
+            .throughput_items(10)
+            .run(|| {
+                black_box(2 + 2);
+            });
+        assert!(
+            collected().iter().any(|c| c.name == "json\"bench"),
+            "run() must feed the process-wide collector"
+        );
+        let json = reports_to_json("unit-test", &[r.clone()]);
+        assert!(json.contains("\"schema\": \"yt-stream-bench-v1\""));
+        assert!(json.contains("\"harness\": \"unit-test\""));
+        assert!(json.contains("json\\\"bench"), "names are escaped");
+        assert!(json.contains("\"mb_per_s\": null"), "absent metrics are null");
+        assert!(json.contains(&format!("\"iters\": {}", r.iters)));
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "braces balance"
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod guid;
 pub mod yson;
 pub mod benchkit;
 pub mod miniprop;
+pub mod slab;
 
 pub use clock::Clock;
 pub use guid::Guid;

@@ -1,0 +1,167 @@
+//! A minimal slab allocator: values live in stable, reusable slots
+//! addressed by `usize` keys.
+//!
+//! The mapper's in-memory window churns entries at batch rate — every
+//! push allocates and every trim frees, forever, on the hottest path the
+//! paper's design keeps off the disk. A [`Slab`] turns that churn into
+//! slot reuse: removed slots go on an internal free list and the next
+//! insert reclaims one, so a steady-state window reaches a fixed pool of
+//! slots and stops exercising the allocator entirely. Keys are stable for
+//! a value's whole residency (nothing is shifted on removal), which lets
+//! FIFO order live in a slim index queue beside the pool.
+
+/// Growable slot pool with free-list reuse. Not a map: keys are assigned
+/// by [`Slab::insert`] and only valid until the matching
+/// [`Slab::remove`].
+#[derive(Debug)]
+pub struct Slab<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab::default()
+    }
+
+    /// Number of occupied slots.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total slots ever allocated (occupied + free-listed).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store `value`, reusing a freed slot when one exists. Returns the
+    /// slot key.
+    pub fn insert(&mut self, value: T) -> usize {
+        self.len += 1;
+        match self.free.pop() {
+            Some(key) => {
+                debug_assert!(self.slots[key].is_none(), "free list pointed at a full slot");
+                self.slots[key] = Some(value);
+                key
+            }
+            None => {
+                self.slots.push(Some(value));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    /// Take the value out of a slot, putting the slot on the free list.
+    /// `None` if the slot is vacant (or the key out of range).
+    pub fn remove(&mut self, key: usize) -> Option<T> {
+        let value = self.slots.get_mut(key)?.take()?;
+        self.free.push(key);
+        self.len -= 1;
+        Some(value)
+    }
+
+    pub fn get(&self, key: usize) -> Option<&T> {
+        self.slots.get(key)?.as_ref()
+    }
+
+    pub fn get_mut(&mut self, key: usize) -> Option<&mut T> {
+        self.slots.get_mut(key)?.as_mut()
+    }
+
+    /// Drop every value but keep the allocated slot pool for reuse.
+    pub fn clear(&mut self) {
+        self.free.clear();
+        for (key, slot) in self.slots.iter_mut().enumerate() {
+            if slot.take().is_some() {
+                self.len -= 1;
+            }
+            self.free.push(key);
+        }
+        debug_assert_eq!(self.len, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_ne!(a, b);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert_eq!(s.len(), 1);
+        *s.get_mut(b).unwrap() = "b2";
+        assert_eq!(s.get(b), Some(&"b2"));
+    }
+
+    #[test]
+    fn freed_slots_are_reused_and_capacity_plateaus() {
+        let mut s = Slab::new();
+        let keys: Vec<usize> = (0..8).map(|i| s.insert(i)).collect();
+        assert_eq!(s.capacity(), 8);
+        // FIFO-ish churn, like the mapper window: free the front, push a
+        // new value — the pool must not grow.
+        for round in 0..100 {
+            let victim = keys[round % keys.len()];
+            s.remove(victim);
+            let reused = s.insert(round);
+            assert_eq!(reused, victim, "the freed slot is reclaimed");
+        }
+        assert_eq!(s.capacity(), 8, "steady state allocates nothing");
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn keys_stay_stable_across_other_removals() {
+        let mut s = Slab::new();
+        let a = s.insert(10);
+        let b = s.insert(20);
+        let c = s.insert(30);
+        s.remove(b);
+        assert_eq!(s.get(a), Some(&10), "unrelated removal does not move values");
+        assert_eq!(s.get(c), Some(&30));
+    }
+
+    #[test]
+    fn clear_retains_pool() {
+        let mut s = Slab::new();
+        for i in 0..5 {
+            s.insert(i);
+        }
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.capacity(), 5);
+        s.insert(99);
+        assert_eq!(s.capacity(), 5, "cleared slots are reused");
+    }
+
+    #[test]
+    fn out_of_range_key_is_none() {
+        let mut s: Slab<i32> = Slab::new();
+        assert_eq!(s.get(3), None);
+        assert_eq!(s.remove(3), None);
+        assert_eq!(s.get_mut(3), None);
+    }
+}

@@ -21,7 +21,7 @@ use crate::api::{
     ReducerSpec,
 };
 use crate::compute::native::NativeStage;
-use crate::compute::{fnv1a32, ComputeStage};
+use crate::compute::{fnv1a32, shuffle_mix, ComputeStage};
 use crate::coordinator::config::ComputeMode;
 use crate::dyntable::store::StoreError;
 use crate::dyntable::Transaction;
@@ -111,19 +111,27 @@ impl Mapper for LogAnalyticsMapper {
             .stage
             .map_stage(&user_hash, &cluster_hash, &has_user, self.num_reducers);
 
-        // 3. Materialize only the surviving rows.
+        // 3. Materialize only the surviving rows, carrying the routing
+        // hash the stage partitioned by. `reducer = shuffle_mix(u, c) %
+        // num_reducers` in every stage implementation, so the published
+        // u64 hash re-derives this row's owner under *any* partition
+        // count — which is what lets the runtime skip the second full
+        // map call during a reshard's dual-route window.
         let mut b = RowsetBuilder::new(self.out_nt.clone());
         let mut partitions = Vec::new();
+        let mut hashes = Vec::new();
         for (i, (user, cluster, ts)) in lines.into_iter().enumerate() {
             if out.keep[i] {
                 b.push(row![user.unwrap_or(""), cluster, ts]);
                 partitions.push(out.reducer[i] as usize);
+                hashes.push(shuffle_mix(user_hash[i], cluster_hash[i]) as u64);
             }
         }
-        PartitionedRowset {
-            rowset: b.build(),
-            partition_indexes: partitions,
-        }
+        PartitionedRowset::with_key_hashes(b.build(), partitions, hashes)
+    }
+
+    fn publishes_key_hashes(&self) -> bool {
+        true
     }
 }
 

@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::api::{
-    hash_partition, Client, Mapper, MapperFactory, MapperSpec, PartitionedRowset, Reducer,
+    partitioning, Client, Mapper, MapperFactory, MapperSpec, PartitionedRowset, Reducer,
     ReducerFactory, ReducerSpec,
 };
 use crate::coordinator::config::ComputeMode;
@@ -29,7 +29,7 @@ use crate::dyntable::Transaction;
 use crate::queue::input_name_table;
 use crate::row;
 use crate::rows::{
-    ColumnSchema, ColumnType, NameTable, RowsetBuilder, TableSchema, UnversionedRow,
+    ColumnSchema, ColumnType, NameTable, RowBatch, RowsetBuilder, TableSchema, UnversionedRow,
     UnversionedRowset, Value,
 };
 use crate::storage::WriteCategory;
@@ -175,25 +175,26 @@ impl Mapper for SessionRouteMapper {
         let (Some(u_col), Some(c_col)) = (nt.id("user"), nt.id("cluster")) else {
             return PartitionedRowset::empty(self.out_nt.clone());
         };
+        // One vectorized hash pass over the key columns (no per-row
+        // composite-key String); each surviving row carries its hash so
+        // the runtime can re-derive ownership under any epoch's count.
+        let hash_col = RowBatch::key_hash_column_of(&rows, &[u_col, c_col]);
         let mut b = RowsetBuilder::new(self.out_nt.clone());
         let mut partitions = Vec::with_capacity(rows.len());
-        for r in rows.rows() {
-            let (Some(u), Some(c)) = (
-                r.get(u_col).and_then(Value::as_str),
-                r.get(c_col).and_then(Value::as_str),
-            ) else {
+        let mut hashes = Vec::with_capacity(rows.len());
+        for (r, h) in rows.rows().iter().zip(hash_col) {
+            let Some(h) = h else {
                 continue; // malformed handoff row: drop deterministically
             };
-            partitions.push(hash_partition(
-                &crate::api::partitioning::composite_key(&[u, c]),
-                self.num_reducers,
-            ));
+            partitions.push(partitioning::owner(h, self.num_reducers));
+            hashes.push(h);
             b.push(r.clone());
         }
-        PartitionedRowset {
-            rowset: b.build(),
-            partition_indexes: partitions,
-        }
+        PartitionedRowset::with_key_hashes(b.build(), partitions, hashes)
+    }
+
+    fn publishes_key_hashes(&self) -> bool {
+        true
     }
 }
 

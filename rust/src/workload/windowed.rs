@@ -20,8 +20,8 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::api::{
-    hash_partition, partitioning, Client, FnMapper, Mapper, MapperFactory, MapperSpec,
-    PartitionedRowset, Reducer, ReducerFactory, ReducerSpec,
+    hash_partition, partitioning, Client, Mapper, MapperFactory, MapperSpec, PartitionedRowset,
+    Reducer, ReducerFactory, ReducerSpec,
 };
 use crate::coordinator::processor::ClusterEnv;
 use crate::coordinator::{EventTimeConfig, InputSpec, ProcessorConfig, StreamingProcessor};
@@ -82,36 +82,51 @@ pub fn ensure_windowed_table(client: &Client) -> Result<(), crate::dyntable::sto
     }
 }
 
-/// `CreateMapper`: parse log lines, filter rows without a user, route by
-/// `hash_partition(composite(user, cluster))` — the *same* ownership
-/// function the window state uses, which is what lets the final-fire
-/// reducer (and the reshard migrators) re-derive who owns a window.
+/// The windowed log mapper: parse log lines, filter rows without a user,
+/// route by `owner(composite_key_hash(user, cluster))` — the *same*
+/// ownership function the window state uses, which is what lets the
+/// final-fire reducer (and the reshard migrators) re-derive who owns a
+/// window. Publishes the hash column so the reshard dual-route can re-own
+/// every routed row under the old partition count without a second map.
+struct WindowedLogMapper {
+    reducers: usize,
+}
+
+impl Mapper for WindowedLogMapper {
+    fn map(&mut self, rows: UnversionedRowset) -> PartitionedRowset {
+        let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+        let mut partitions = Vec::new();
+        let mut hashes = Vec::new();
+        for r in rows.rows() {
+            let Some(payload) = r.get(INPUT_COL_PAYLOAD).and_then(Value::as_str) else {
+                continue;
+            };
+            for raw in payload.lines() {
+                let Some(p) = parse_line(raw) else { continue };
+                let Some(user) = p.user else { continue };
+                // Hash the composite key once; the partition index and
+                // the published hash column both derive from it.
+                let h = partitioning::composite_key_hash(&[user, p.cluster]);
+                partitions.push(partitioning::owner(h, self.reducers));
+                hashes.push(h);
+                b.push(row![user, p.cluster, p.ts]);
+            }
+        }
+        PartitionedRowset::with_key_hashes(b.build(), partitions, hashes)
+    }
+
+    fn publishes_key_hashes(&self) -> bool {
+        true
+    }
+}
+
+/// `CreateMapper` for [`WindowedLogMapper`].
 pub fn windowed_mapper_factory() -> MapperFactory {
     Arc::new(
         |_cfg: &Yson, _client: &Client, _nt: Arc<NameTable>, spec: &MapperSpec| {
-            let reducers = spec.num_reducers;
-            Box::new(FnMapper(move |rows: UnversionedRowset| {
-                let mut b = RowsetBuilder::new(windowed_mapped_name_table());
-                let mut partitions = Vec::new();
-                for r in rows.rows() {
-                    let Some(payload) = r.get(INPUT_COL_PAYLOAD).and_then(Value::as_str) else {
-                        continue;
-                    };
-                    for raw in payload.lines() {
-                        let Some(p) = parse_line(raw) else { continue };
-                        let Some(user) = p.user else { continue };
-                        partitions.push(hash_partition(
-                            &partitioning::composite_key(&[user, p.cluster]),
-                            reducers,
-                        ));
-                        b.push(row![user, p.cluster, p.ts]);
-                    }
-                }
-                PartitionedRowset {
-                    rowset: b.build(),
-                    partition_indexes: partitions,
-                }
-            })) as Box<dyn Mapper>
+            Box::new(WindowedLogMapper {
+                reducers: spec.num_reducers,
+            }) as Box<dyn Mapper>
         },
     )
 }

@@ -192,6 +192,19 @@ pub fn run_chain_to_drain(
     s2_reducers: usize,
     drill: impl FnOnce(&RunningTopology),
 ) -> ChainOutcome {
+    run_chain_to_drain_with(partitions, messages, s1_reducers, s2_reducers, |_| {}, drill)
+}
+
+/// [`run_chain_to_drain`] with a hook that edits the base
+/// [`ProcessorConfig`] before launch (e.g. to pin `commit_coalesce_max`).
+pub fn run_chain_to_drain_with(
+    partitions: usize,
+    messages: usize,
+    s1_reducers: usize,
+    s2_reducers: usize,
+    tweak: impl FnOnce(&mut ProcessorConfig),
+    drill: impl FnOnce(&RunningTopology),
+) -> ChainOutcome {
     let clock = Clock::scaled(4);
     let env = ClusterEnv::new(clock.clone(), 0xC4A1);
     let table = OrderedTable::new(
@@ -202,7 +215,7 @@ pub fn run_chain_to_drain(
     );
     let expected_events = fill_deterministic_chain_input(&table, messages);
 
-    let base = ProcessorConfig {
+    let mut base = ProcessorConfig {
         backoff_ms: 5,
         trim_period_ms: 100,
         restart_delay_ms: 100,
@@ -211,6 +224,7 @@ pub fn run_chain_to_drain(
         heartbeat_period_ms: 100,
         ..ProcessorConfig::default()
     };
+    tweak(&mut base);
     let topo = two_stage_topology(
         base,
         partitions,

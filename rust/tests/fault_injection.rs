@@ -770,3 +770,90 @@ fn windowed_final_fire_under_drills_and_reshard_byte_identical() {
     );
     assert_eq!(drilled.late_rows, 0);
 }
+
+#[test]
+fn chain_group_commit_coalescing_under_drills_byte_identical() {
+    // PR 6 group-commit drill: with commit coalescing wide open
+    // (commit_coalesce_max = 8, several fetch rounds folded into one CAS
+    // batch per commit), a stage-1 reducer kill + split-brain twins must
+    // still drain to output *byte-identical* to a fault-free run with
+    // coalescing disabled (commit_coalesce_max = 1). Batched CAS
+    // validation reads the same meta rows as the per-row path, so neither
+    // the conflict semantics nor the committed bytes may change.
+    let per_row_baseline = run_chain_to_drain_with(
+        3,
+        60,
+        2,
+        2,
+        |cfg| cfg.commit_coalesce_max = 1,
+        |_running| {},
+    );
+    assert_chain_exactly_once(&per_row_baseline, "chain, coalescing off, fault-free");
+
+    let coalesced_drilled = run_chain_to_drain_with(
+        3,
+        60,
+        2,
+        2,
+        |cfg| cfg.commit_coalesce_max = 8,
+        |running| {
+            let sup1 = running.stage(0).supervisor().clone();
+            sup1.kill(Role::Reducer, 0);
+            std::thread::sleep(std::time::Duration::from_millis(250));
+            sup1.duplicate(Role::Reducer, 0);
+            std::thread::sleep(std::time::Duration::from_millis(250));
+            sup1.duplicate(Role::Reducer, 1);
+        },
+    );
+    assert_chain_exactly_once(&coalesced_drilled, "chain, coalescing on, kill + twins");
+    assert_eq!(
+        coalesced_drilled.rows, per_row_baseline.rows,
+        "group-commit + drills must leave output byte-identical to the per-row-commit run"
+    );
+    assert_eq!(coalesced_drilled.handoff_retained, 0);
+}
+
+#[test]
+fn windowed_group_commit_coalescing_under_drills_byte_identical() {
+    // Same drill for the windowed reducer: its commit batches slot rows,
+    // plan + watermark meta and window state in one lookup_many pass, and
+    // coalescing folds several fetch rounds into that batch. Under a
+    // reducer kill + twins mid-window, the final-fire output must stay
+    // byte-identical to the coalescing-off fault-free run.
+    use yt_stream::reshard::plan::reducer_slot;
+    use yt_stream::workload::windowed::{run_windowed, WindowedCfg, WindowedMode};
+
+    let mut off = WindowedCfg {
+        seed: 0x6C0A,
+        messages_per_wave: 25,
+        ..WindowedCfg::default()
+    };
+    off.base.commit_coalesce_max = 1;
+    let baseline = run_windowed(&off, WindowedMode::FinalFire, |_, _| {});
+    assert_eq!(
+        baseline.rows, baseline.expected,
+        "fault-free final-fire with coalescing off must drain to ground truth"
+    );
+
+    let mut on = WindowedCfg {
+        reshard_to: vec![8],
+        ..off
+    };
+    on.base.commit_coalesce_max = 8;
+    let drilled = run_windowed(&on, WindowedMode::FinalFire, |processor, migration| {
+        let sup = processor.supervisor().clone();
+        sup.kill(Role::Reducer, reducer_slot(migration as i64, 0));
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        sup.duplicate(Role::Reducer, reducer_slot(migration as i64, 1));
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    });
+    assert_eq!(drilled.reshards.len(), 1, "the 4→8 migration must finalize");
+    assert_eq!(
+        drilled.rows, drilled.expected,
+        "coalesced drilled run must reach ground truth"
+    );
+    assert_eq!(
+        drilled.rows, baseline.rows,
+        "group-commit + kill/twin drills must be byte-identical to the per-row-commit run"
+    );
+}

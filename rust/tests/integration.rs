@@ -464,10 +464,7 @@ fn two_stage_event_time_cascade_fires_downstream_windows() {
                     ));
                     b.push(r.clone());
                 }
-                PartitionedRowset {
-                    rowset: b.build(),
-                    partition_indexes: partitions,
-                }
+                PartitionedRowset::new(b.build(), partitions)
             })) as Box<dyn Mapper>
         },
     );

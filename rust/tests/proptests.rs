@@ -589,3 +589,105 @@ fn txn_increments_serialize() {
         },
     );
 }
+
+/// Invariant 5 (PR 6): the columnar [`RowBatch`] is a faithful view of the
+/// per-row codec — same wire bytes, lossless round-trip, and a vectorized
+/// hash column that agrees with the scalar composite-key hash row by row.
+#[test]
+fn row_batch_roundtrip_matches_per_row_codec() {
+    use std::sync::Arc;
+    use yt_stream::api::partitioning;
+    use yt_stream::rows::{codec, NameTable, RowBatch, RowsetBuilder, UnversionedRow, Value};
+
+    check_with(
+        Config {
+            cases: 200,
+            base_seed: 0xBA7C,
+        },
+        "RowBatch wire format and hashes match the per-row codec",
+        |rng| {
+            // Random ragged rowset: 1..6 named columns, rows of any width
+            // up to that, every Value variant represented.
+            let ncols = rng.gen_range(1, 6) as usize;
+            let names: Vec<String> = (0..ncols).map(|i| format!("c{i}")).collect();
+            let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+            let mut b = RowsetBuilder::new(NameTable::new(&name_refs));
+            let nrows = rng.next_below(40) as usize;
+            for _ in 0..nrows {
+                let width = rng.next_below(ncols as u64 + 1) as usize;
+                let mut vals = Vec::with_capacity(width);
+                for _ in 0..width {
+                    vals.push(match rng.next_below(6) {
+                        0 => Value::Null,
+                        1 => Value::Bool(rng.next_below(2) == 1),
+                        2 => Value::Int64(rng.next_u64() as i64),
+                        3 => Value::Uint64(rng.next_u64()),
+                        4 => Value::Double(rng.next_f64() * 1e9 - 5e8),
+                        _ => {
+                            let slen = rng.next_below(12) as usize + 1;
+                            Value::from(rng.ident(slen).as_str())
+                        }
+                    });
+                }
+                b.push(UnversionedRow::new(vals));
+            }
+            let rs = b.build();
+
+            // (a) Byte identity: the columnar encoder emits exactly the
+            // per-row rowset wire format.
+            let batch = RowBatch::from_rowset(&rs);
+            prop_assert_eq!(batch.len(), rs.len(), "batch row count");
+            let encoded = batch.encode();
+            let per_row_bytes = codec::encode_rowset(&rs);
+            prop_assert_eq!(
+                encoded.len(),
+                batch.encoded_size(),
+                "encoded_size must predict the real encoding"
+            );
+            prop_assert!(
+                encoded == per_row_bytes,
+                "columnar encoding diverged from codec::encode_rowset"
+            );
+
+            // (b) Lossless round-trip through the shared-buffer decoder.
+            let arc: Arc<[u8]> = encoded.into();
+            let decoded = RowBatch::decode_shared(&arc).map_err(|e| format!("decode: {e:?}"))?;
+            let back = decoded.to_rowset();
+            prop_assert!(
+                back.rows() == rs.rows(),
+                "RowBatch round-trip changed row contents"
+            );
+            prop_assert_eq!(
+                back.name_table().names().len(),
+                rs.name_table().names().len(),
+                "round-trip changed the name table"
+            );
+
+            // (c) Vectorized hash column ≡ scalar composite_key_hash, on a
+            // random key-column subset; both the batch method and the
+            // rowset fast path must agree.
+            let nkeys = rng.gen_range(1, ncols as u64 + 1) as usize;
+            let key_cols: Vec<usize> = (0..nkeys)
+                .map(|_| rng.next_below(ncols as u64) as usize)
+                .collect();
+            let vectorized = batch.key_hash_column(&key_cols);
+            let fast_path = RowBatch::key_hash_column_of(&rs, &key_cols);
+            prop_assert!(
+                vectorized == fast_path,
+                "key_hash_column_of diverged from the batch hash column"
+            );
+            for (i, row) in rs.rows().iter().enumerate() {
+                let parts: Option<Vec<&str>> = key_cols
+                    .iter()
+                    .map(|&c| row.get(c).and_then(Value::as_str))
+                    .collect();
+                let scalar = parts.map(|p| partitioning::composite_key_hash(&p));
+                prop_assert_eq!(
+                    vectorized[i], scalar,
+                    "row {i}: vectorized hash != scalar composite_key_hash"
+                );
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,79 @@
+#!/usr/bin/env bash
+# Compare two BENCH_<pr>.json documents (benchkit schema
+# yt-stream-bench-v1) and fail on mean-time regressions.
+#
+# Usage: scripts/bench_compare.sh BASELINE.json CURRENT.json [max_regression_pct]
+#
+# A bench regresses when its mean_ns grows by more than
+# max_regression_pct (default 20) over the baseline. Benches present in
+# only one document are reported but never fail the comparison (suites
+# grow over time). Exit codes: 0 = no regression, 1 = regression found,
+# 2 = usage/parse error.
+#
+# CI runs this advisorily (micro-bench runners are noisy); locally it is
+# the gate for "batched path still beats per-row".
+set -euo pipefail
+
+if [ $# -lt 2 ]; then
+    echo "usage: $0 BASELINE.json CURRENT.json [max_regression_pct]" >&2
+    exit 2
+fi
+
+baseline="$1"
+current="$2"
+threshold="${3:-20}"
+
+exec python3 - "$baseline" "$current" "$threshold" <<'PY'
+import json
+import sys
+
+baseline_path, current_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if doc.get("schema") != "yt-stream-bench-v1":
+        print(f"bench_compare: {path}: unexpected schema {doc.get('schema')!r}", file=sys.stderr)
+        sys.exit(2)
+    return doc
+
+base_doc, cur_doc = load(baseline_path), load(current_path)
+base = {b["name"]: b for b in base_doc.get("benches", [])}
+cur = {b["name"]: b for b in cur_doc.get("benches", [])}
+
+if base_doc.get("harness") != cur_doc.get("harness"):
+    print(
+        f"bench_compare: note — comparing different harnesses: "
+        f"{base_doc.get('harness')!r} vs {cur_doc.get('harness')!r}"
+    )
+
+regressions = []
+for name in sorted(base.keys() & cur.keys()):
+    b, c = base[name]["mean_ns"], cur[name]["mean_ns"]
+    if not b or b <= 0:
+        continue
+    delta_pct = (c - b) / b * 100.0
+    marker = ""
+    if delta_pct > threshold:
+        marker = "  REGRESSION"
+        regressions.append((name, delta_pct))
+    print(f"{name:<44} base={b:>12.0f}ns cur={c:>12.0f}ns delta={delta_pct:+7.1f}%{marker}")
+
+for name in sorted(base.keys() - cur.keys()):
+    print(f"{name:<44} removed (present only in baseline)")
+for name in sorted(cur.keys() - base.keys()):
+    print(f"{name:<44} new (present only in current)")
+
+if regressions:
+    print(
+        f"bench_compare: FAIL — {len(regressions)} bench(es) regressed "
+        f"more than {threshold:.0f}%",
+        file=sys.stderr,
+    )
+    sys.exit(1)
+print(f"bench_compare: OK (threshold {threshold:.0f}%)")
+PY

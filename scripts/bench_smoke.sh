@@ -6,9 +6,17 @@
 # Usage: scripts/bench_smoke.sh [--full]
 #   --full   also run the complete micro_hot_paths suite (slower; prints
 #            the numbers EXPERIMENTS.md §Perf tables are built from)
+#
+# Both modes write the machine-readable bench document to
+# $repo_root/BENCH_${BENCH_PR}.json (override the PR number with BENCH_PR).
+# The smoke pass uses a tiny time budget — treat its numbers as smoke-grade;
+# only --full numbers belong in EXPERIMENTS.md tables. Compare two documents
+# with scripts/bench_compare.sh.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+BENCH_PR="${BENCH_PR:-6}"
+bench_json="$repo_root/BENCH_${BENCH_PR}.json"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_smoke: SKIP — cargo not on PATH (offline/analysis container)" >&2
@@ -65,18 +73,21 @@ timeout 600 cargo run --release --quiet -- figure reshard --auto --seconds 5 || 
 
 if [ "${1:-}" = "--full" ]; then
     echo "== bench_smoke: full micro_hot_paths suite =="
-    cargo bench --bench micro_hot_paths
+    BENCHKIT_JSON="$bench_json" cargo bench --bench micro_hot_paths
 else
     echo "== bench_smoke: one fast micro_hot_paths pass =="
     # Shrink the per-bench time budget via benchkit's env knobs: enough to
     # catch panics/regressions in the measured hot paths without paying
     # the full measurement cost. `timeout` guards against a hung bench
     # wedging CI.
-    BENCHKIT_WARMUP_MS=10 BENCHKIT_MIN_TIME_MS=40 \
+    BENCHKIT_WARMUP_MS=10 BENCHKIT_MIN_TIME_MS=40 BENCHKIT_JSON="$bench_json" \
         timeout 300 cargo bench --bench micro_hot_paths || {
         echo "bench_smoke: FAIL — micro_hot_paths did not complete" >&2
         exit 1
     }
 fi
 
+if [ -f "$bench_json" ]; then
+    echo "bench_smoke: wrote $bench_json"
+fi
 echo "bench_smoke: OK"
