@@ -1,7 +1,9 @@
 //! Micro-benchmarks of the hot paths identified in EXPERIMENTS.md §Perf:
 //! row codec, shuffle hash, compute stages (native + HLO), GetRows round
 //! trip, dynamic-table commit, window push/ack — plus the per-row vs
-//! batched comparisons backing the PR 6 columnar/group-commit work.
+//! batched comparisons backing the PR 6 columnar/group-commit work and
+//! the PR 7 consistency-tier pair (state persisted every commit vs only
+//! at bounded-error anchors).
 //!
 //! Run with `cargo bench --bench micro_hot_paths`. Output is one line per
 //! benchmark (benchkit format); set `BENCHKIT_JSON=/path/BENCH_<pr>.json`
@@ -335,6 +337,60 @@ fn bench_spill_batch() {
         });
 }
 
+/// Consistency tiers (PR 7): the reducer's Step-8 state write, persisted
+/// on every commit (exactly-once) vs only at anchors (bounded-error,
+/// `anchor_every_batches = 8`). Both variants pay the same CAS read —
+/// the state row stays in the validation set either way — so the delta
+/// is purely the skipped state-row writes the WA frontier banks on.
+fn bench_consistency_anchoring() {
+    use yt_stream::consistency::{AnchorScheduler, Consistency};
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::rows::{ColumnSchema, ColumnType, TableSchema, Value};
+    use yt_stream::storage::WriteCategory;
+
+    let env = ClusterEnv::new(Clock::realtime(), 4);
+    env.store
+        .create_table(
+            "anchor_state",
+            TableSchema::new(vec![
+                ColumnSchema::key("k", ColumnType::Int64),
+                ColumnSchema::value("v", ColumnType::Str),
+            ]),
+            WriteCategory::AnchorState,
+        )
+        .unwrap();
+    {
+        let mut txn = env.store.begin();
+        txn.write("anchor_state", row![0i64, "seed"]).unwrap();
+        txn.commit().unwrap();
+    }
+
+    let mut run_tier = |name: &str, policy: Consistency| {
+        Bench::new(name).throughput_items(64).run(|| {
+            // Fresh scheduler per iteration = one reducer incarnation.
+            let mut anchors = AnchorScheduler::new(policy);
+            for _ in 0..64 {
+                let persist = anchors.should_persist(16);
+                let mut txn = env.store.begin();
+                black_box(txn.lookup("anchor_state", &[Value::Int64(0)]).unwrap());
+                if persist {
+                    txn.write("anchor_state", row![0i64, "state-blob"]).unwrap();
+                }
+                txn.commit().unwrap();
+                anchors.note_commit(persist, 16);
+            }
+        });
+    };
+    run_tier("consistency/persist_every_commit_64", Consistency::ExactlyOnce);
+    run_tier(
+        "consistency/anchored_every_8_64",
+        Consistency::BoundedError {
+            divergence_budget: 1 << 20,
+            anchor_every_batches: 8,
+        },
+    );
+}
+
 fn main() {
     println!("== micro hot paths ==");
     bench_codec();
@@ -345,6 +401,7 @@ fn main() {
     bench_row_batch();
     bench_group_commit();
     bench_spill_batch();
+    bench_consistency_anchoring();
     // BENCHKIT_JSON=<path> → machine-readable BENCH_<pr>.json document.
     yt_stream::util::benchkit::write_json_env("rust/micro_hot_paths");
 }

@@ -1,0 +1,317 @@
+//! Per-stage consistency tiers: the WA-vs-accuracy frontier (AF-Stream's
+//! approximate fault tolerance, per-stage like StreamShield).
+//!
+//! Exactly-once is the *most expensive* tier: every reducer commit writes
+//! the meta-state row, so state-write WA scales with O(commits). Many
+//! production stages (counters, sampled analytics, monitoring sinks)
+//! tolerate bounded inaccuracy — for them this module trades durability
+//! writes for a *declared, measured* divergence budget:
+//!
+//! * [`Consistency::ExactlyOnce`] — today's behavior, the default and the
+//!   baseline every approximate mode is judged against. State persists on
+//!   every commit; recovery replays nothing twice and loses nothing.
+//! * [`Consistency::BoundedError`] — persist the reducer/window state only
+//!   at *anchors*: the first commit of every incarnation, then every
+//!   `anchor_every_batches` batches or whenever the rows committed since
+//!   the last anchor would exceed `divergence_budget`. A crash recovers
+//!   from the last anchor and replays the unanchored window — the output
+//!   drifts by at most `divergence_budget` rows per failure event. The
+//!   anchor write is the *same* meta-state row riding the *same* commit
+//!   CAS as exactly-once, so split-brain safety is untouched; a twin that
+//!   observes an anchor it didn't write abdicates (exits) rather than
+//!   resync, which bounds twin-induced drift to ~two anchor windows.
+//! * [`Consistency::AtMostOnce`] — no steady-state persistence at all:
+//!   commit marks advance in memory only, acknowledged to mappers through
+//!   the normal fetch protocol. Each incarnation *discards* its first
+//!   non-empty fetch round (the predecessor's in-flight window), so rows
+//!   are processed at most once. For counter/sampling sinks; topology
+//!   validation restricts it to final stages.
+//!
+//! State tables of approximate-tier stages are created under
+//! [`WriteCategory::AnchorState`] so `WriteAccounting` reports the anchor
+//! write volume as its own frontier line next to exactly-once's
+//! `reducer_meta`.
+
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+
+/// Default rows-of-drift budget for `BoundedError` when the config names
+/// the mode but no budget.
+pub const DEFAULT_DIVERGENCE_BUDGET: u64 = 512;
+/// Default anchor cadence (batches) for `BoundedError`.
+pub const DEFAULT_ANCHOR_EVERY_BATCHES: u32 = 32;
+
+/// Per-stage fault-tolerance policy (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Consistency {
+    /// Persist state on every commit (the seed behavior; baseline).
+    ExactlyOnce,
+    /// Persist state only at anchors; accept ≤ `divergence_budget` rows of
+    /// replay/loss drift per failure event.
+    BoundedError {
+        /// Max rows committed-but-unanchored at any moment (the per-event
+        /// drift bound).
+        divergence_budget: u64,
+        /// Anchor at least every this many committed batches even when
+        /// the row budget isn't pressing (bounds recovery *latency*).
+        anchor_every_batches: u32,
+    },
+    /// Never persist steady-state; drop the in-flight window on failure.
+    AtMostOnce,
+}
+
+impl Default for Consistency {
+    fn default() -> Consistency {
+        Consistency::ExactlyOnce
+    }
+}
+
+impl Consistency {
+    pub fn is_exactly_once(&self) -> bool {
+        matches!(self, Consistency::ExactlyOnce)
+    }
+
+    /// Any tier that may skip state persists (and therefore drift).
+    pub fn is_approximate(&self) -> bool {
+        !self.is_exactly_once()
+    }
+
+    pub fn bounded_error(divergence_budget: u64) -> Consistency {
+        Consistency::BoundedError {
+            divergence_budget,
+            anchor_every_batches: DEFAULT_ANCHOR_EVERY_BATCHES,
+        }
+    }
+
+    /// Stable label for scope lines, figures and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Consistency::ExactlyOnce => "exactly_once",
+            Consistency::BoundedError { .. } => "bounded_error",
+            Consistency::AtMostOnce => "at_most_once",
+        }
+    }
+
+    /// Which accounting category this stage's reducer/window state rows
+    /// land in: exactly-once keeps the seed's `reducer_meta`; approximate
+    /// tiers write (rarer, anchor/lifecycle-only) `anchor_state` rows so
+    /// the frontier is visible as two separate WA lines.
+    pub fn state_write_category(&self) -> WriteCategory {
+        if self.is_exactly_once() {
+            WriteCategory::ReducerMeta
+        } else {
+            WriteCategory::AnchorState
+        }
+    }
+
+    /// Parse the `consistency = {mode = ...}` config sub-map. Unknown or
+    /// absent mode falls back to exactly-once (never silently approximate).
+    pub fn from_yson(y: &Yson) -> Consistency {
+        match y.get_str_or("mode", "exactly_once") {
+            "bounded_error" => Consistency::BoundedError {
+                divergence_budget: y
+                    .get_i64_or("divergence_budget", DEFAULT_DIVERGENCE_BUDGET as i64)
+                    .max(1) as u64,
+                anchor_every_batches: y
+                    .get_i64_or("anchor_every_batches", DEFAULT_ANCHOR_EVERY_BATCHES as i64)
+                    .max(1) as u32,
+            },
+            "at_most_once" => Consistency::AtMostOnce,
+            _ => Consistency::ExactlyOnce,
+        }
+    }
+}
+
+/// Decides, commit by commit, whether this commit must carry the state
+/// write (an *anchor*). Owned by one reducer incarnation; its counters
+/// are exactly the incarnation's *exposure* — rows and batches committed
+/// since durable state last advanced.
+///
+/// Invariant (the divergence bound): after any `note_commit`,
+/// `exposure_rows() <= divergence_budget` for `BoundedError` — a crash at
+/// any instant replays/loses at most the budget.
+#[derive(Debug)]
+pub struct AnchorScheduler {
+    policy: Consistency,
+    rows_since_anchor: u64,
+    batches_since_anchor: u32,
+    committed_once: bool,
+}
+
+impl AnchorScheduler {
+    pub fn new(policy: Consistency) -> AnchorScheduler {
+        AnchorScheduler {
+            policy,
+            rows_since_anchor: 0,
+            batches_since_anchor: 0,
+            committed_once: false,
+        }
+    }
+
+    /// Must the commit about to carry `batch_rows` rows persist state?
+    pub fn should_persist(&self, batch_rows: u64) -> bool {
+        match self.policy {
+            Consistency::ExactlyOnce => true,
+            Consistency::AtMostOnce => false,
+            Consistency::BoundedError {
+                divergence_budget,
+                anchor_every_batches,
+            } => {
+                // First commit of the incarnation always anchors: it caps
+                // replay-after-crash at one window and lets a twin's rival
+                // incarnation detect us via the state CAS immediately.
+                !self.committed_once
+                    || self.rows_since_anchor + batch_rows > divergence_budget
+                    || self.batches_since_anchor + 1 >= anchor_every_batches
+            }
+        }
+    }
+
+    /// Record a successful commit (`persisted` = it carried the state
+    /// write).
+    pub fn note_commit(&mut self, persisted: bool, batch_rows: u64) {
+        self.committed_once = true;
+        if persisted {
+            self.rows_since_anchor = 0;
+            self.batches_since_anchor = 0;
+        } else {
+            self.rows_since_anchor += batch_rows;
+            self.batches_since_anchor += 1;
+        }
+    }
+
+    /// Rows committed since durable state last advanced (what a crash
+    /// right now would drift by).
+    pub fn exposure_rows(&self) -> u64 {
+        self.rows_since_anchor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_exactly_once() {
+        assert_eq!(Consistency::default(), Consistency::ExactlyOnce);
+        assert!(Consistency::default().is_exactly_once());
+        assert!(!Consistency::default().is_approximate());
+    }
+
+    #[test]
+    fn labels_and_categories() {
+        assert_eq!(Consistency::ExactlyOnce.label(), "exactly_once");
+        assert_eq!(Consistency::bounded_error(10).label(), "bounded_error");
+        assert_eq!(Consistency::AtMostOnce.label(), "at_most_once");
+        assert_eq!(
+            Consistency::ExactlyOnce.state_write_category(),
+            WriteCategory::ReducerMeta
+        );
+        assert_eq!(
+            Consistency::bounded_error(10).state_write_category(),
+            WriteCategory::AnchorState
+        );
+        assert_eq!(
+            Consistency::AtMostOnce.state_write_category(),
+            WriteCategory::AnchorState
+        );
+    }
+
+    #[test]
+    fn parse_modes() {
+        let y = Yson::parse("{mode = bounded_error; divergence_budget = 64; anchor_every_batches = 4}").unwrap();
+        assert_eq!(
+            Consistency::from_yson(&y),
+            Consistency::BoundedError {
+                divergence_budget: 64,
+                anchor_every_batches: 4
+            }
+        );
+        let y = Yson::parse("{mode = at_most_once}").unwrap();
+        assert_eq!(Consistency::from_yson(&y), Consistency::AtMostOnce);
+        let y = Yson::parse("{mode = garbage}").unwrap();
+        assert_eq!(Consistency::from_yson(&y), Consistency::ExactlyOnce);
+        let y = Yson::parse("{}").unwrap();
+        assert_eq!(Consistency::from_yson(&y), Consistency::ExactlyOnce);
+    }
+
+    #[test]
+    fn parse_defaults_fill_in() {
+        let y = Yson::parse("{mode = bounded_error}").unwrap();
+        assert_eq!(
+            Consistency::from_yson(&y),
+            Consistency::BoundedError {
+                divergence_budget: DEFAULT_DIVERGENCE_BUDGET,
+                anchor_every_batches: DEFAULT_ANCHOR_EVERY_BATCHES,
+            }
+        );
+    }
+
+    #[test]
+    fn exactly_once_always_persists() {
+        let mut s = AnchorScheduler::new(Consistency::ExactlyOnce);
+        for _ in 0..100 {
+            assert!(s.should_persist(1_000_000));
+            s.note_commit(true, 1_000_000);
+            assert_eq!(s.exposure_rows(), 0);
+        }
+    }
+
+    #[test]
+    fn at_most_once_never_persists() {
+        let mut s = AnchorScheduler::new(Consistency::AtMostOnce);
+        for _ in 0..100 {
+            assert!(!s.should_persist(1));
+            s.note_commit(false, 1);
+        }
+    }
+
+    #[test]
+    fn first_commit_of_incarnation_anchors() {
+        let s = AnchorScheduler::new(Consistency::bounded_error(1_000_000));
+        assert!(s.should_persist(1), "fresh incarnation must anchor first");
+    }
+
+    #[test]
+    fn bounded_error_exposure_never_exceeds_budget() {
+        let budget = 100u64;
+        let mut s = AnchorScheduler::new(Consistency::BoundedError {
+            divergence_budget: budget,
+            anchor_every_batches: u32::MAX,
+        });
+        // Deterministic pseudo-random batch sizes.
+        let mut x = 0x2545F4914F6CDD1Du64;
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let batch = x % 60 + 1;
+            let persist = s.should_persist(batch);
+            s.note_commit(persist, batch);
+            assert!(
+                s.exposure_rows() <= budget,
+                "exposure {} > budget {budget}",
+                s.exposure_rows()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_cadence_forces_anchor() {
+        let mut s = AnchorScheduler::new(Consistency::BoundedError {
+            divergence_budget: u64::MAX / 2,
+            anchor_every_batches: 4,
+        });
+        // First commit anchors.
+        assert!(s.should_persist(1));
+        s.note_commit(true, 1);
+        // Then three skipped commits, the fourth anchors.
+        for i in 0..3 {
+            assert!(!s.should_persist(1), "commit {i} inside cadence");
+            s.note_commit(false, 1);
+        }
+        assert!(s.should_persist(1), "cadence reached");
+        s.note_commit(true, 1);
+        assert_eq!(s.exposure_rows(), 0);
+    }
+}

@@ -5,6 +5,7 @@
 //! examples ship as `.yson` text; every field has a sane default so tests
 //! can build configs programmatically.
 
+use crate::consistency::Consistency;
 use crate::util::yson::{Yson, YsonError};
 
 /// Which implementation computes the mapper/reducer numeric stages.
@@ -109,6 +110,15 @@ pub struct ProcessorConfig {
     /// the state update becomes a blind element-wise max — rows can be
     /// processed more than once under races, but never lost.
     pub at_least_once: bool,
+    /// Per-stage fault-tolerance tier ([`crate::consistency`]): exactly-once
+    /// (default, the seed behavior), bounded-error anchoring, or
+    /// at-most-once. Approximate tiers skip reducer/window state persists
+    /// and trade bounded output drift for lower state-write WA.
+    pub consistency: Consistency,
+    /// Acknowledges that an *upstream* stage of this exactly-once stage
+    /// runs an approximate tier (its handoff can drift). Topology
+    /// validation refuses the wiring without this explicit flag.
+    pub tolerates_upstream_drift: bool,
     /// Write-accounting scope this processor's persisted bytes are
     /// attributed to (set by [`crate::dataflow`] topologies so the WA
     /// report can be broken down per stage). `None` = global-only.
@@ -150,6 +160,8 @@ impl Default for ProcessorConfig {
             artifacts_dir: "artifacts".into(),
             pipelined_reducer: false,
             at_least_once: false,
+            consistency: Consistency::ExactlyOnce,
+            tolerates_upstream_drift: false,
             scope_label: None,
             event_time: None,
             upstream_watermark_table: None,
@@ -208,6 +220,12 @@ impl ProcessorConfig {
             artifacts_dir: y.get_str_or("artifacts_dir", &d.artifacts_dir).to_string(),
             pipelined_reducer: y.get_bool_or("pipelined_reducer", d.pipelined_reducer),
             at_least_once: y.get_bool_or("at_least_once", d.at_least_once),
+            consistency: match y.get_opt("consistency") {
+                Some(cy) => Consistency::from_yson(cy),
+                None => d.consistency,
+            },
+            tolerates_upstream_drift: y
+                .get_bool_or("tolerates_upstream_drift", d.tolerates_upstream_drift),
             scope_label: y
                 .get_opt("scope_label")
                 .and_then(|v| v.as_str().ok())
@@ -297,6 +315,30 @@ mod tests {
         assert_eq!(c.upstream_watermark_table, None);
         let d = ProcessorConfig::parse("{}").unwrap();
         assert_eq!(d.event_time, None, "disabled by default");
+    }
+
+    #[test]
+    fn parse_consistency_section() {
+        let c = ProcessorConfig::parse(
+            "{consistency = {mode = bounded_error; divergence_budget = 96; anchor_every_batches = 8}}",
+        )
+        .unwrap();
+        assert_eq!(
+            c.consistency,
+            Consistency::BoundedError {
+                divergence_budget: 96,
+                anchor_every_batches: 8
+            }
+        );
+        assert!(!c.tolerates_upstream_drift);
+        let d = ProcessorConfig::parse(
+            "{consistency = {mode = at_most_once}; tolerates_upstream_drift = %true}",
+        )
+        .unwrap();
+        assert_eq!(d.consistency, Consistency::AtMostOnce);
+        assert!(d.tolerates_upstream_drift);
+        let e = ProcessorConfig::parse("{}").unwrap();
+        assert_eq!(e.consistency, Consistency::ExactlyOnce, "default tier");
     }
 
     #[test]

@@ -317,6 +317,7 @@ impl StreamingProcessor {
         let spawn_reducer = self.spawn_reducer_slot.clone();
         let metrics = self.env.metrics.clone();
         let scope = self.cfg.scope_label.clone();
+        let state_category = self.cfg.consistency.state_write_category();
         Arc::new(move || ReshardContext {
             store: store.clone(),
             runtime: runtime.clone(),
@@ -326,6 +327,7 @@ impl StreamingProcessor {
             spawn_reducer: spawn_reducer.clone(),
             metrics: metrics.clone(),
             scope: scope.clone(),
+            state_category,
         })
     }
 
@@ -543,10 +545,13 @@ fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), Str
         Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
         Err(e) => return Err(e.to_string()),
     }
+    // Approximate-tier stages write this table rarely (anchors and
+    // lifecycle rows only); its bytes land on the `anchor_state` frontier
+    // line instead of `reducer_meta`.
     match env.store.create_table_scoped(
         &cfg.reducer_state_table,
         ReducerState::schema(),
-        WriteCategory::ReducerMeta,
+        cfg.consistency.state_write_category(),
         cfg.scope_label.clone(),
     ) {
         Ok(_) | Err(StoreError::AlreadyExists(_)) => {}

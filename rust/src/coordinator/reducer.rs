@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::api::{Client, Reducer, ReducerSpec};
+use crate::consistency::{AnchorScheduler, Consistency};
 use crate::coordinator::config::ProcessorConfig;
 use crate::coordinator::state::{MapperState, ReducerState};
 use crate::cypress::{DiscoveryGroup, MemberInfo, SessionId};
@@ -115,7 +116,10 @@ pub fn spawn_reducer(
                     deps,
                     address,
                 };
-                if rt.cfg.pipelined_reducer {
+                // Approximate tiers run the serial loop: their commit
+                // acknowledgement lives in this incarnation's memory, and
+                // the pipelined overlap's resync-on-miss would discard it.
+                if rt.cfg.pipelined_reducer && rt.cfg.consistency.is_exactly_once() {
                     crate::pipelined::run_reducer_pipelined(&rt, user_reducer.as_mut(), &kill, &pause);
                 } else {
                     run_reducer_serial(&rt, user_reducer.as_mut(), &kill, &pause);
@@ -258,12 +262,21 @@ impl ReducerRt {
 
     /// Steps 5–8: decode, combine, run the user Reduce, validate the state
     /// within the transaction and commit atomically.
+    ///
+    /// `persist` gates step 8 only ([`crate::consistency`]): an
+    /// approximate tier's non-anchor commit applies the user effects and
+    /// the fences but leaves the durable state row untouched — the
+    /// fetched-row acknowledgement lives in the incarnation's memory (its
+    /// bounded-drift exposure). The state row still joins the read set in
+    /// step 7, so a rival incarnation's anchor serializes against this
+    /// commit exactly as under exactly-once.
     pub(crate) fn process_and_commit(
         &self,
         user_reducer: &mut dyn Reducer,
         state: &ReducerState,
         new_state: &ReducerState,
         fetches: &[FetchResult],
+        persist: bool,
     ) -> CommitOutcome {
         let client = &self.deps.client;
         let state_table = &self.spec.state_table;
@@ -377,11 +390,13 @@ impl ReducerRt {
         }
 
         // Step 8: write the new state; commit everything atomically.
-        if txn
-            .write(state_table, new_state.to_row(self.spec.index))
-            .is_err()
-        {
-            return CommitOutcome::TransientError;
+        if persist {
+            if txn
+                .write(state_table, new_state.to_row(self.spec.index))
+                .is_err()
+            {
+                return CommitOutcome::TransientError;
+            }
         }
         match txn.commit() {
             Ok(_) => {
@@ -591,9 +606,18 @@ impl ReducerRt {
     /// [`Reducer::tick`] under the full exactly-once protocol: the
     /// split-brain CAS (step 7), the reshard plan fence (step 7b — with
     /// no fetched rows the per-mapper cutover checks are vacuous), and a
-    /// rewrite of the unchanged state row so racing twins serialize on
-    /// its version exactly like a normal commit.
-    pub(crate) fn commit_tick(&self, state: &ReducerState, mut txn: Transaction) -> CommitOutcome {
+    /// rewrite of the state row so racing twins serialize on its version
+    /// exactly like a normal commit. Exactly-once passes the same state
+    /// for `state` and `new_state` (a rewrite of the unchanged row); an
+    /// approximate tier passes its working state as `new_state`, making
+    /// every tick commit an anchor — the tick's user effects (e.g. window
+    /// fires) then can never outrun the durable row-index frontier.
+    pub(crate) fn commit_tick(
+        &self,
+        state: &ReducerState,
+        new_state: &ReducerState,
+        mut txn: Transaction,
+    ) -> CommitOutcome {
         let state_table = &self.spec.state_table;
         let state_key = ReducerState::key(self.spec.index);
 
@@ -631,7 +655,7 @@ impl ReducerRt {
             return CommitOutcome::TransientError;
         }
         if txn
-            .write(state_table, state.to_row(self.spec.index))
+            .write(state_table, new_state.to_row(self.spec.index))
             .is_err()
         {
             return CommitOutcome::TransientError;
@@ -677,7 +701,26 @@ fn max_ts_of(rs: &UnversionedRowset) -> Option<i64> {
         .max()
 }
 
-/// The serial main procedure (§4.4.2 steps 1–8).
+/// The serial main procedure (§4.4.2 steps 1–8), for every consistency
+/// tier ([`crate::consistency`]).
+///
+/// Exactly-once re-adopts the durable state row each cycle and persists
+/// on every commit — the seed behavior, unchanged. Approximate tiers keep
+/// an in-memory *working* state driving fetch offsets (acknowledgement
+/// reaches mappers through the normal fetch protocol), remember the
+/// durable row they last observed or wrote (the commit CAS base), and:
+///
+/// * persist only at scheduler-chosen anchors (`BoundedError`) or never
+///   in steady state (`AtMostOnce`);
+/// * recover from the last anchor on restart — the first `fetch_state` of
+///   an incarnation adopts the durable row, replaying (`BoundedError`) or
+///   discarding (`AtMostOnce`) the unanchored window;
+/// * **abdicate** — exit the loop — when the durable row moves under a
+///   live incarnation or a commit trips the split-brain CAS: a rival
+///   incarnation anchored past us. The supervisor respawns incumbents but
+///   never `duplicate` twins, so split-brain contention collapses to a
+///   single instance within about one anchor window, instead of both
+///   twins committing the same bucket-head rows indefinitely.
 fn run_reducer_serial(
     rt: &ReducerRt,
     user_reducer: &mut dyn Reducer,
@@ -688,6 +731,17 @@ fn run_reducer_serial(
     let Some(session) = rt.join_discovery(kill) else {
         return;
     };
+    let policy = rt.cfg.consistency;
+    let mut anchors = AnchorScheduler::new(policy);
+    // (working, base): the in-memory committed frontier and the durable
+    // row it grew from. `None` until the incarnation's first adoption.
+    // Updated only on successful commits — a failed attempt must leave
+    // the frontier at its last committed value or unacknowledged rows
+    // would be popped by the next fetch.
+    let mut resident: Option<(ReducerState, ReducerState)> = None;
+    // At-most-once: the first non-empty fetch round of an incarnation is
+    // the predecessor's in-flight window — adopted, never processed.
+    let mut discarded_inflight = !matches!(policy, Consistency::AtMostOnce);
     let mut last_commit_ms = clock.now_ms();
     let mut last_heartbeat_ms = clock.now_ms();
     let mut last_cycle_committed = true;
@@ -711,19 +765,37 @@ fn run_reducer_serial(
         last_cycle_committed = false;
 
         // Step 2.
-        let Some(state) = rt.fetch_state() else {
+        let Some(durable) = rt.fetch_state() else {
             continue;
         };
-        if state.retired {
+        if durable.retired {
             return; // this epoch was resharded away; the slot is done
         }
-        if !state.bootstrapped {
+        if !durable.bootstrapped {
             // Born by a reshard: import the migration tablet before
             // serving the key range.
-            rt.try_bootstrap(&state);
+            rt.try_bootstrap(&durable);
             clock.sleep_ms(rt.cfg.backoff_ms);
             continue;
         }
+        let (state, base) = match resident.take() {
+            Some((w, b)) if b == durable => (w, b),
+            Some(_) if policy.is_approximate() => {
+                // The durable row moved under a live incarnation: a rival
+                // anchored past us, and our unanchored in-memory frontier
+                // lost. Resyncing would keep both twins committing the
+                // same bucket-head rows between anchors — abdicate
+                // instead; the supervisor restarts incumbents (never
+                // twins), so exactly one instance survives.
+                rt.deps.metrics.add(names::REDUCER_ABDICATIONS, 1);
+                return;
+            }
+            // First adoption of this incarnation (for approximate tiers:
+            // the recovery-from-anchor path), or exactly-once re-adopting
+            // the durable row as it always has.
+            _ => (durable.clone(), durable),
+        };
+        resident = Some((state.clone(), base.clone()));
 
         // Steps 3–4.
         let mut fetches = rt.fetch_cycle(&state, cycle);
@@ -733,11 +805,14 @@ fn run_reducer_serial(
         let (mut new_state, total_rows) = rt.tentative_state(&state, &fetches);
         if total_rows == 0 {
             // A drained old-epoch reducer retires: final transaction flips
-            // its state to retired and exports its residual rows.
+            // its state to retired and exports its residual rows. The CAS
+            // base (= the anchor, for approximate tiers) is what it drains
+            // and exports against — rows past the anchor are the tier's
+            // declared drift.
             if let Some(plan) = rt.fetch_plan() {
                 if plan.phase == PlanPhase::Migrating && plan.epoch == rt.spec.epoch {
                     if let Some(dead) = rt.ready_to_retire(&fetches, max_mapper_seen) {
-                        if rt.try_retire(&state, &plan, &dead) {
+                        if rt.try_retire(&base, &plan, &dead) {
                             return;
                         }
                     }
@@ -746,14 +821,34 @@ fn run_reducer_serial(
             // Time-driven work on a quiet stream (e.g. final-firing
             // event-time windows): the user hook may hand back a
             // transaction, committed under the full exactly-once protocol.
+            // The rewrite carries the working state, so for approximate
+            // tiers every tick commit is an anchor.
             if let Some(txn) = user_reducer.tick() {
-                if matches!(
-                    rt.commit_tick(&state, txn),
-                    CommitOutcome::Committed { .. }
-                ) {
-                    last_cycle_committed = true;
+                match rt.commit_tick(&base, &state, txn) {
+                    CommitOutcome::Committed { .. } => {
+                        last_cycle_committed = true;
+                        anchors.note_commit(true, 0);
+                        resident = Some((state.clone(), state));
+                    }
+                    CommitOutcome::SplitBrain if policy.is_approximate() => {
+                        rt.deps.metrics.add(names::REDUCER_ABDICATIONS, 1);
+                        return;
+                    }
+                    _ => {}
                 }
             }
+            continue;
+        }
+
+        // At-most-once: adopt the first non-empty round's frontier without
+        // processing it. The predecessor's in-flight window (rows served
+        // but unacknowledged when it died) is dropped, never duplicated —
+        // the tier's defining trade.
+        if !discarded_inflight {
+            discarded_inflight = true;
+            rt.deps.metrics.add(names::REDUCER_DISCARD_ROUNDS, 1);
+            resident = Some((new_state, base));
+            last_cycle_committed = true; // fresh rows next cycle; no backoff
             continue;
         }
 
@@ -785,11 +880,33 @@ fn run_reducer_serial(
             rt.deps.metrics.add(names::REDUCER_COALESCED_ROUNDS, 1);
         }
 
-        // Steps 5–8.
-        match rt.process_and_commit(user_reducer, &state, &new_state, &fetches) {
+        // Steps 5–8. The anchor scheduler decides whether this commit
+        // carries the state write (always, under exactly-once).
+        let batch_rows: i64 = fetches.iter().map(|f| f.rsp.row_count.max(0)).sum();
+        let persist = anchors.should_persist(batch_rows.max(0) as u64);
+        match rt.process_and_commit(user_reducer, &base, &new_state, &fetches, persist) {
             CommitOutcome::Committed { rows, bytes } => {
+                anchors.note_commit(persist, rows.max(0) as u64);
+                if policy.is_approximate() {
+                    rt.deps.metrics.add(
+                        if persist {
+                            names::REDUCER_ANCHOR_COMMITS
+                        } else {
+                            names::REDUCER_SKIPPED_PERSISTS
+                        },
+                        1,
+                    );
+                }
+                let next_base = if persist { new_state.clone() } else { base };
+                resident = Some((new_state, next_base));
                 last_cycle_committed = true;
                 last_commit_ms = rt.record_commit(rows, bytes, last_commit_ms);
+            }
+            CommitOutcome::SplitBrain if policy.is_approximate() => {
+                // A rival anchored between our step-2 read and the commit:
+                // same abdication rule as the fetch-time detection above.
+                rt.deps.metrics.add(names::REDUCER_ABDICATIONS, 1);
+                return;
             }
             CommitOutcome::SplitBrain
             | CommitOutcome::Conflict

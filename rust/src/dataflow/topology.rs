@@ -13,6 +13,7 @@
 use std::sync::Arc;
 
 use crate::api::{Client, MapperFactory, Reducer, ReducerFactory, ReducerSpec};
+use crate::consistency::Consistency;
 use crate::controller::Supervisor;
 use crate::coordinator::processor::{ClusterEnv, LaunchError};
 use crate::coordinator::{InputSpec, ProcessorConfig, StreamingProcessor};
@@ -117,6 +118,19 @@ pub enum TopologyError {
     )]
     ExactlyOnceRequired(String),
     #[error(
+        "stage '{0}': at_most_once is sink-only — an intermediate stage feeding an ordered \
+         handoff would silently drop rows out of the chain. Use bounded_error (declared, \
+         anchored drift) or exactly_once for intermediate stages."
+    )]
+    AtMostOnceIntermediate(String),
+    #[error(
+        "stage '{stage}' runs exactly-once but its upstream stage '{upstream}' is approximate: \
+         the input itself can drift (bounded replay/loss), so downstream exactly-once cannot \
+         promise byte-exact output. Acknowledge this by setting tolerates_upstream_drift on \
+         '{stage}', or make '{upstream}' exactly_once."
+    )]
+    UpstreamDriftUnacknowledged { stage: String, upstream: String },
+    #[error(
         "stage '{stage}' windows on event time but its upstream stage '{upstream}' does not \
          track it: rows buffered upstream would be invisible to the watermark, so final-fired \
          windows could silently miss them. Enable event_time on '{upstream}' (its watermark \
@@ -201,6 +215,29 @@ impl Topology {
                     }
                 }
                 (StageReduce::Final(_), true) => {}
+            }
+
+            // Consistency-tier wiring (see [`crate::consistency`]):
+            // at-most-once may only terminate a chain, and an
+            // exactly-once stage anywhere downstream of an approximate
+            // one inherits its drift — that demotion must be explicit.
+            if matches!(spec.config.consistency, Consistency::AtMostOnce) && k != last {
+                return Err(TopologyError::AtMostOnceIntermediate(spec.name.clone()));
+            }
+            if k > 0
+                && spec.config.consistency.is_exactly_once()
+                && !spec.config.tolerates_upstream_drift
+            {
+                if let Some(up) = self.stages[..k]
+                    .iter()
+                    .rev()
+                    .find(|s| s.config.consistency.is_approximate())
+                {
+                    return Err(TopologyError::UpstreamDriftUnacknowledged {
+                        stage: spec.name.clone(),
+                        upstream: up.name.clone(),
+                    });
+                }
             }
 
             // Partition wiring + schema compatibility against the upstream.
@@ -1097,5 +1134,44 @@ mod tests {
             two_stage(s1, cfg(2, 1)).validate(&source(2)),
             Err(TopologyError::ExactlyOnceRequired(_))
         ));
+    }
+
+    #[test]
+    fn at_most_once_intermediate_stage_rejected_sink_allowed() {
+        let mut s1 = cfg(2, 2);
+        s1.consistency = Consistency::AtMostOnce;
+        let mut s2 = cfg(2, 1);
+        s2.tolerates_upstream_drift = true;
+        assert!(matches!(
+            two_stage(s1, s2).validate(&source(2)),
+            Err(TopologyError::AtMostOnceIntermediate(_))
+        ));
+        // As the terminal sink (with the upstream exactly-once) it is fine.
+        let mut sink = cfg(2, 1);
+        sink.consistency = Consistency::AtMostOnce;
+        two_stage(cfg(2, 2), sink).validate(&source(2)).unwrap();
+    }
+
+    #[test]
+    fn exactly_once_below_approximate_must_acknowledge_drift() {
+        let mut s1 = cfg(2, 2);
+        s1.consistency = Consistency::bounded_error(64);
+        assert!(matches!(
+            two_stage(s1, cfg(2, 1)).validate(&source(2)),
+            Err(TopologyError::UpstreamDriftUnacknowledged { .. })
+        ));
+        // The same chain passes once the demotion is explicit.
+        let mut s1 = cfg(2, 2);
+        s1.consistency = Consistency::bounded_error(64);
+        let mut s2 = cfg(2, 1);
+        s2.tolerates_upstream_drift = true;
+        two_stage(s1, s2).validate(&source(2)).unwrap();
+        // An approximate downstream needs no acknowledgement — it never
+        // promised byte-exactness in the first place.
+        let mut s1 = cfg(2, 2);
+        s1.consistency = Consistency::bounded_error(64);
+        let mut s2 = cfg(2, 1);
+        s2.consistency = Consistency::bounded_error(64);
+        two_stage(s1, s2).validate(&source(2)).unwrap();
     }
 }

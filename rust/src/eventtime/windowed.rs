@@ -31,10 +31,11 @@
 //! to the **late side channel** — an ordered table appended within the
 //! same transaction, so even lateness handling is exactly-once.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::api::{partitioning, Client, Reducer, ReducerSpec};
+use crate::consistency::{AnchorScheduler, Consistency};
 use crate::dyntable::{DynTableStore, Transaction, TxnError};
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
@@ -220,6 +221,14 @@ pub struct WindowedDeps {
     /// (the stage's scope label in a topology; `None` standalone) — keeps
     /// the per-stage `event_time` WA line honest.
     pub scope: Option<String>,
+    /// The stage's consistency tier. Under the approximate tiers the
+    /// working accumulators live in memory and are persisted only at
+    /// *anchors* (scheduler cadence, or when a window can fire — firing
+    /// reads accumulators through the txn, so they must be in it); the
+    /// durable table holds the last anchor, and a crash replays/loses at
+    /// most the unanchored window. Exactly-once (the default) persists
+    /// every batch — that code path is unchanged from the seed.
+    pub consistency: Consistency,
 }
 
 /// `CreateReducer` for a windowed final stage: every spawned instance
@@ -257,6 +266,13 @@ pub struct WindowedReducer {
     /// Monotone clamp over observed fleet watermarks.
     local_watermark: i64,
     arena: SlotArena,
+    /// Approximate tiers only: the in-memory working accumulators. The
+    /// durable table lags behind at the last anchor; this map is the
+    /// truth folded between anchors. Always empty under exactly-once.
+    resident: BTreeMap<(i64, String), Yson>,
+    /// Anchor cadence for the approximate tiers (exactly-once: every
+    /// batch persists, the scheduler is never consulted).
+    anchors: AnchorScheduler,
 }
 
 impl WindowedReducer {
@@ -269,6 +285,7 @@ impl WindowedReducer {
             &window_state_table(&deps.state_base, spec.epoch),
             deps.scope.clone(),
         );
+        let policy = deps.consistency;
         WindowedReducer {
             deps,
             client: client.clone(),
@@ -278,6 +295,8 @@ impl WindowedReducer {
             tracker,
             local_watermark: NO_WATERMARK,
             arena: SlotArena::default(),
+            resident: BTreeMap::new(),
+            anchors: AnchorScheduler::new(policy),
         }
     }
 
@@ -503,6 +522,163 @@ impl WindowedReducer {
         }
         Ok(txn)
     }
+
+    /// The durable fired-watermark marker, read *outside* any transaction
+    /// — under the approximate tiers it is the authority on what already
+    /// final-fired (ours or a twin's), consulted every batch.
+    fn durable_fired(&self, table: &str) -> Result<i64, TxnError> {
+        Ok(self
+            .client
+            .store
+            .lookup(table, &marker_row_key(self.index))
+            .map_err(|_| TxnError::Unavailable)?
+            .and_then(|r| r.get(2).and_then(Value::as_str).map(str::to_string))
+            .and_then(|s| Yson::parse(&s).ok())
+            .and_then(|y| y.as_i64().ok())
+            .unwrap_or(NO_WATERMARK))
+    }
+
+    /// Write the approximate tiers' working accumulators into `txn` so a
+    /// fire in the same transaction sees them (read-your-writes). Returns
+    /// the persisted entries in `fire_into`'s `touched` shape.
+    fn persist_resident(
+        &self,
+        txn: &mut Transaction,
+        table: &str,
+        overlay: &[((i64, String), Yson)],
+    ) -> Result<Vec<((i64, String), Yson)>, TxnError> {
+        let mut entries: BTreeMap<(i64, String), Yson> = self.resident.clone();
+        for (slot, acc) in overlay {
+            entries.insert(slot.clone(), acc.clone());
+        }
+        let entries: Vec<((i64, String), Yson)> = entries.into_iter().collect();
+        for ((w, key), acc) in &entries {
+            txn.write(
+                table,
+                UnversionedRow::new(vec![
+                    Value::Int64(*w),
+                    Value::from(key.as_str()),
+                    Value::from(acc.to_string().as_str()),
+                ]),
+            )?;
+        }
+        Ok(entries)
+    }
+
+    /// One attempt at a batch under an *approximate* tier: fold into the
+    /// resident in-memory accumulators and carry window-state writes only
+    /// on anchors. Recovery is from the last anchor — a fresh incarnation
+    /// seeds each slot from the durable table, so a crash drifts by at
+    /// most the unanchored window (what `figure consistency` measures).
+    ///
+    /// Retry safety: `resident` is only mutated by idempotent steps
+    /// (eviction of durably-fired slots, seeding from the anchor) until
+    /// the transaction is fully built; the folds land in a scratch vec
+    /// and are applied to `resident` last, so the 500-attempt retry loop
+    /// in [`Reducer::reduce`] never double-folds. A commit that fails
+    /// *after* we returned the txn is the accepted optimistic case: the
+    /// next anchor rewrites every resident slot, so folds are delayed,
+    /// never lost.
+    fn attempt_reduce_approx(&mut self, rows: &UnversionedRowset) -> Result<Transaction, TxnError> {
+        let table = self.state_table();
+        let spec = self.deps.spec;
+        let fired_wm = self.durable_fired(&table)?;
+        // Slots the durable marker retired were fired (by us, committed,
+        // or by a twin): evict them; their stragglers route late below.
+        if fired_wm != NO_WATERMARK {
+            self.resident.retain(|(w, _), _| !spec.is_final(*w, fired_wm));
+        }
+
+        // Classify: late vs (window, key) slot — same rule as exactly-once.
+        let mut late: Vec<UnversionedRow> = Vec::new();
+        let mut tagged: Vec<((i64, String), usize)> = Vec::new();
+        let all_rows = rows.rows();
+        for (i, row) in all_rows.iter().enumerate() {
+            let (Some(ts), Some(key)) = (self.deps.fold.event_ts(row), self.deps.fold.key(row))
+            else {
+                continue;
+            };
+            let w = spec.window_start(ts);
+            if fired_wm != NO_WATERMARK && spec.is_final(w, fired_wm) {
+                late.push(row.clone());
+                continue;
+            }
+            tagged.push(((w, key), i));
+        }
+        tagged.sort_by(|a, b| a.0.cmp(&b.0));
+
+        // Seed every slot this incarnation has never held from its last
+        // anchor (idempotent, so a later error retries cleanly).
+        for (slot, _) in &tagged {
+            if self.resident.contains_key(slot) {
+                continue;
+            }
+            let key = vec![Value::Int64(slot.0), Value::from(slot.1.as_str())];
+            let acc = self
+                .client
+                .store
+                .lookup(&table, &key)
+                .map_err(|_| TxnError::Unavailable)?
+                .and_then(|r| r.get(2).and_then(Value::as_str).and_then(|s| Yson::parse(s).ok()))
+                .unwrap_or_else(|| self.deps.fold.zero());
+            self.resident.insert(slot.clone(), acc);
+        }
+
+        // Fold into a scratch overlay (not `resident` — retry safety).
+        let mut folded: Vec<((i64, String), Yson)> = Vec::new();
+        let mut j = 0;
+        while j < tagged.len() {
+            let run_start = j;
+            let slot = &tagged[run_start].0;
+            let mut acc = self.resident.get(slot).cloned().expect("seeded above");
+            while j < tagged.len() && tagged[j].0 == *slot {
+                self.deps.fold.fold(&mut acc, &all_rows[tagged[j].1]);
+                j += 1;
+            }
+            folded.push((slot.clone(), acc));
+        }
+        let batch_rows = tagged.len() as u64;
+
+        self.refresh_watermark();
+        // Anchor when the scheduler demands it, or when a *resident*
+        // window is actually final — a fire emits through the txn, so the
+        // accumulators must be persisted in it. (Durable leftovers from a
+        // dead incarnation fire on the next anchor's table scan, or from
+        // `tick` on a quiet stream.)
+        let wm = self.local_watermark;
+        let fire_possible = wm != NO_WATERMARK
+            && wm > fired_wm
+            && self.resident.keys().any(|(w, _)| spec.is_final(*w, wm));
+        let anchor = self.anchors.should_persist(batch_rows) || fire_possible;
+
+        let mut txn = self.client.begin();
+        if anchor {
+            let entries = self.persist_resident(&mut txn, &table, &folded)?;
+            self.fire_into(&mut txn, fired_wm, &entries)?;
+        }
+        if !late.is_empty() {
+            self.deps
+                .metrics
+                .add(names::EVENTTIME_LATE_ROWS, late.len() as u64);
+            self.deps.late.ensure_tablets(self.index + 1);
+            txn.append_ordered(self.deps.late.clone(), self.index, late)?;
+        }
+
+        // Success point: the txn is fully built — apply the folds.
+        for (slot, acc) in folded {
+            self.resident.insert(slot, acc);
+        }
+        self.anchors.note_commit(anchor, batch_rows);
+        self.deps.metrics.add(
+            if anchor {
+                names::REDUCER_ANCHOR_COMMITS
+            } else {
+                names::REDUCER_SKIPPED_PERSISTS
+            },
+            1,
+        );
+        Ok(txn)
+    }
 }
 
 impl Reducer for WindowedReducer {
@@ -515,9 +691,15 @@ impl Reducer for WindowedReducer {
         // row loss. So a transient store failure is retried here, and a
         // persistent one crashes the worker (panic = simulated process
         // death): nothing committed, the supervisor restarts us, the
-        // batch is re-fetched. Exactly-once is preserved either way.
+        // batch is re-fetched. Exactly-once is preserved either way; the
+        // approximate tiers recover from their last anchor instead.
         for _ in 0..500 {
-            match self.attempt_reduce(&rows) {
+            let attempt = if self.deps.consistency.is_exactly_once() {
+                self.attempt_reduce(&rows)
+            } else {
+                self.attempt_reduce_approx(&rows)
+            };
+            match attempt {
                 Ok(txn) => return Some(txn),
                 Err(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
             }
@@ -545,7 +727,25 @@ impl Reducer for WindowedReducer {
             txn.abort();
             return None;
         }
-        match self.fire_into(&mut txn, fired_wm, &[]) {
+        // Approximate tiers: the working accumulators live in memory, and
+        // a fire only sees them through the txn — persist them first.
+        // (Tick commits always carry the meta row, so this *is* an anchor.)
+        let mut touched: Vec<((i64, String), Yson)> = Vec::new();
+        if self.deps.consistency.is_approximate() && !self.resident.is_empty() {
+            let spec = self.deps.spec;
+            if fired_wm != NO_WATERMARK {
+                self.resident.retain(|(w, _), _| !spec.is_final(*w, fired_wm));
+            }
+            let table = self.state_table();
+            match self.persist_resident(&mut txn, &table, &[]) {
+                Ok(entries) => touched = entries,
+                Err(_) => {
+                    txn.abort();
+                    return None; // transient: retried next cycle
+                }
+            }
+        }
+        match self.fire_into(&mut txn, fired_wm, &touched) {
             Ok(0) | Err(_) => {
                 txn.abort();
                 None // nothing to do (or transient failure: retried next cycle)
@@ -609,6 +809,10 @@ mod tests {
     }
 
     fn rig(partitions: usize) -> TestRig {
+        rig_tier(partitions, Consistency::ExactlyOnce)
+    }
+
+    fn rig_tier(partitions: usize, consistency: Consistency) -> TestRig {
         let env = ClusterEnv::new(Clock::realtime(), 11);
         env.store
             .create_table(MAPPER_STATE, MapperState::schema(), WriteCategory::MapperMeta)
@@ -646,6 +850,7 @@ mod tests {
             late,
             metrics: env.metrics.clone(),
             scope: None,
+            consistency,
         });
         TestRig { env, deps }
     }
@@ -787,6 +992,7 @@ mod tests {
             late: rig.deps.late.clone(),
             metrics: rig.deps.metrics.clone(),
             scope: None,
+            consistency: rig.deps.consistency,
         });
         let spec0 = ReducerSpec {
             processor_guid: Guid::from_seed(1),
@@ -842,5 +1048,132 @@ mod tests {
     fn state_table_paths_per_epoch() {
         assert_eq!(window_state_table("//b", 0), "//b");
         assert_eq!(window_state_table("//b", 3), "//b/e3");
+    }
+
+    #[test]
+    fn bounded_error_skips_state_writes_between_anchors() {
+        let rig = rig_tier(
+            1,
+            Consistency::BoundedError {
+                divergence_budget: 1_000_000,
+                anchor_every_batches: 3,
+            },
+        );
+        let mut r = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 50); // window [0,100) stays open
+
+        let state_table = window_state_table(STATE_BASE, 0);
+        let acc_at = |rig: &TestRig| -> Option<i64> {
+            rig.env
+                .store
+                .scan(&state_table)
+                .unwrap()
+                .iter()
+                .find(|row| row.get(0).and_then(Value::as_i64) != Some(MARKER_WINDOW))
+                .and_then(|row| row.get(2).and_then(Value::as_str).map(str::to_string))
+                .and_then(|s| Yson::parse(&s).ok())
+                .and_then(|y| y.as_i64().ok())
+        };
+
+        // First commit of the incarnation anchors: durable acc = 1.
+        r.reduce(batch(&[("a", 10)])).unwrap().commit().unwrap();
+        assert_eq!(acc_at(&rig), Some(1));
+        // The next two batches fold in memory only — durable stays at 1.
+        r.reduce(batch(&[("a", 20)])).unwrap().commit().unwrap();
+        assert_eq!(acc_at(&rig), Some(1), "non-anchor batch must not persist");
+        r.reduce(batch(&[("a", 30)])).unwrap().commit().unwrap();
+        assert_eq!(acc_at(&rig), Some(1));
+        // Cadence of 3 skipped-or-not batches since the anchor: this one
+        // anchors and the durable accumulator catches up to all 4 folds.
+        r.reduce(batch(&[("a", 40)])).unwrap().commit().unwrap();
+        assert_eq!(acc_at(&rig), Some(4), "cadence anchor persists the folds");
+        assert_eq!(
+            rig.env
+                .metrics
+                .get_counter(crate::metrics::hub::names::REDUCER_SKIPPED_PERSISTS),
+            2
+        );
+
+        // Final fire still emits the complete (resident) count.
+        set_watermark(&rig.env, 0, 200);
+        r.tick().expect("final").commit().unwrap();
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn bounded_error_crash_recovers_from_anchor_with_bounded_drift() {
+        let rig = rig_tier(
+            1,
+            Consistency::BoundedError {
+                divergence_budget: 1_000_000,
+                anchor_every_batches: 1_000_000,
+            },
+        );
+        {
+            let mut r = reducer(&rig, 0);
+            set_watermark(&rig.env, 0, 50);
+            // Anchor (first commit) holds 1; two more folds stay resident.
+            r.reduce(batch(&[("a", 10)])).unwrap().commit().unwrap();
+            r.reduce(batch(&[("a", 20)])).unwrap().commit().unwrap();
+            r.reduce(batch(&[("a", 30)])).unwrap().commit().unwrap();
+            // r dropped = crash; the resident folds (rows 20, 30) are gone.
+        }
+        let mut fresh = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 50);
+        // The fresh incarnation seeds from the anchor (1) and folds on.
+        fresh.reduce(batch(&[("a", 40)])).unwrap().commit().unwrap();
+        set_watermark(&rig.env, 0, 999);
+        fresh.tick().expect("final").commit().unwrap();
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].get(2).unwrap().as_i64(),
+            Some(2),
+            "recovered from the anchor: 4 rows in, 2 counted — the 2 lost \
+             rows are exactly the unanchored exposure, never more"
+        );
+    }
+
+    #[test]
+    fn at_most_once_persists_nothing_until_a_fire() {
+        let rig = rig_tier(1, Consistency::AtMostOnce);
+        let mut r = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 50);
+        r.reduce(batch(&[("a", 10)])).unwrap().commit().unwrap();
+        r.reduce(batch(&[("a", 20)])).unwrap().commit().unwrap();
+        assert_eq!(
+            rig.env.store.scan(&window_state_table(STATE_BASE, 0)).unwrap().len(),
+            0,
+            "at-most-once writes no steady-state window rows"
+        );
+        // Once the window is final the fire persists-and-emits in one txn
+        // (the row at 250 opens a later, still-open window).
+        set_watermark(&rig.env, 0, 200);
+        r.reduce(batch(&[("b", 250)])).unwrap().commit().unwrap();
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get(1).unwrap().as_str(), Some("a"));
+        assert_eq!(out[0].get(2).unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn approximate_twin_fire_is_still_single_shot() {
+        // The fire itself rides the commit CAS under every tier: a twin
+        // racing the same final window conflicts and emits nothing.
+        let rig = rig_tier(1, Consistency::bounded_error(1_000_000));
+        let mut a = reducer(&rig, 0);
+        let mut b = reducer(&rig, 0);
+        set_watermark(&rig.env, 0, 10);
+        a.reduce(batch(&[("a", 5)])).unwrap().commit().unwrap();
+        b.reduce(batch(&[("a", 5)])).unwrap().commit().unwrap();
+        set_watermark(&rig.env, 0, 200);
+        let ta = a.tick().expect("final window");
+        let tb = b.tick().expect("twin sees it too");
+        ta.commit().unwrap();
+        assert!(tb.commit().is_err(), "loser conflicts on the window row");
+        let out = rig.env.store.scan(OUT).unwrap();
+        assert_eq!(out.len(), 1, "fired exactly once despite the twin");
     }
 }

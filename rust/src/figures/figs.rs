@@ -60,9 +60,10 @@ pub fn run_figure(id: &str, opts: &FigureOpts) {
         "reshard" if opts.auto => table_reshard_auto(opts),
         "reshard" => table_reshard(opts),
         "window" => table_window(opts),
+        "consistency" => table_consistency(opts),
         other => {
             eprintln!(
-                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window"
+                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window consistency"
             );
             std::process::exit(2);
         }
@@ -919,6 +920,103 @@ fn table_window(opts: &FigureOpts) {
             "figure window: FAIL — upsert_ok={upsert_ok} final_ok={final_ok} \
              drill_ok={drill_ok} strictly_lower={strictly_lower} late={}",
             drilled.late_rows
+        );
+        std::process::exit(1);
+    }
+}
+
+/// Consistency-tier frontier (`figure consistency`): the same deterministic
+/// wave workload under every per-stage fault-tolerance tier, with the same
+/// kill + split-brain drill schedule, so the runs differ only in policy.
+/// Prints one row per tier — state-write WA, `UserOutput` WA, and the
+/// *measured* output divergence against the generator's ground truth —
+/// and enforces the frontier's shape:
+///
+/// * exactly-once under drills stays **byte-identical** to the drill-free
+///   baseline (the seed guarantee must survive this PR untouched);
+/// * bounded-error spends **strictly fewer** state-write bytes than
+///   exactly-once over identical input and drills;
+/// * bounded-error's measured divergence stays within its declared
+///   allowance (budget × incidents × 2 — the twin-abdication factor).
+///
+/// At-most-once is reported (cheapest state writes, honest loss) but not
+/// gated: it declares no divergence bound to hold it to. Exits non-zero on
+/// any violation, so `bench_smoke.sh` can gate on it.
+fn table_consistency(opts: &FigureOpts) {
+    use crate::consistency::Consistency;
+    use crate::workload::consistency::{run_consistency_tier, ConsistencyCfg};
+
+    println!("# table consistency: WA-vs-accuracy frontier, identical input + drills");
+    let cfg = ConsistencyCfg {
+        seed: opts.seed,
+        ..ConsistencyCfg::default()
+    };
+
+    // --- the drill-free exactly-once baseline (ground truth output) -----
+    let baseline = run_consistency_tier(&cfg, Consistency::ExactlyOnce, false);
+    // --- every tier under the identical drill schedule ------------------
+    let exact = run_consistency_tier(&cfg, Consistency::ExactlyOnce, true);
+    let bounded = run_consistency_tier(&cfg, cfg.bounded_policy(), true);
+    let at_most = run_consistency_tier(&cfg, Consistency::AtMostOnce, true);
+
+    println!("{}", WaReport::csv_header());
+    for t in [&baseline, &exact, &bounded, &at_most] {
+        println!("{}", t.report.csv_row());
+    }
+    println!(
+        "tier,drilled,state_bytes,state_wa,user_output_wa,divergence,anchor_commits,\
+         skipped_persists,abdications,discard_rounds"
+    );
+    for t in [&baseline, &exact, &bounded, &at_most] {
+        println!(
+            "{},{},{},{:.4},{:.4},{},{},{},{},{}",
+            t.tier.label(),
+            t.drilled,
+            t.state_bytes(),
+            t.state_wa(),
+            t.user_output_wa(),
+            t.divergence,
+            t.anchor_commits,
+            t.skipped_persists,
+            t.abdications,
+            t.discard_rounds,
+        );
+    }
+
+    // Gate (a): exactly-once under drills is byte-identical to the
+    // drill-free baseline — kills and twins must not change one byte.
+    let exact_identical = exact.rows == baseline.rows && exact.divergence == 0;
+    // Gate (b): bounded-error's total state-write bytes (anchors plus any
+    // residual exactly-once-category writes) land strictly below
+    // exactly-once's over the identical workload.
+    let state_strictly_lower = bounded.state_bytes() < exact.state_bytes();
+    // Gate (c): measured divergence within the declared allowance.
+    let allowance = cfg.divergence_allowance();
+    let within_budget = bounded.divergence <= allowance;
+
+    println!(
+        "exactly-once drill byte-identity: {exact_identical} \
+         ({} rows vs {} baseline rows, divergence {})",
+        exact.rows.len(),
+        baseline.rows.len(),
+        exact.divergence,
+    );
+    println!(
+        "summary: bounded-error state bytes {} vs exactly-once {} (strictly lower: \
+         {state_strictly_lower}); divergence {} <= allowance {allowance}: {within_budget}; \
+         at-most-once state bytes {} divergence {}",
+        bounded.state_bytes(),
+        exact.state_bytes(),
+        bounded.divergence,
+        at_most.state_bytes(),
+        at_most.divergence,
+    );
+    if !(exact_identical && state_strictly_lower && within_budget) {
+        eprintln!(
+            "figure consistency: FAIL — exact_identical={exact_identical} \
+             state_strictly_lower={state_strictly_lower} within_budget={within_budget} \
+             (bounded divergence {} / allowance {allowance})",
+            bounded.divergence
         );
         std::process::exit(1);
     }

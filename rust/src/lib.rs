@@ -26,6 +26,7 @@
 //! | data model | [`rows`] |
 //! | substrates | [`storage`], [`queue`], [`dyntable`], [`cypress`], [`rpc`] |
 //! | the paper's system | [`api`], [`coordinator`], [`controller`] |
+//! | consistency tiers | [`consistency`] |
 //! | multi-stage chaining | [`dataflow`] |
 //! | elastic resharding | [`reshard`] |
 //! | event-time windowing | [`eventtime`] |
@@ -43,6 +44,7 @@ pub mod rpc;
 pub mod api;
 pub mod coordinator;
 pub mod controller;
+pub mod consistency;
 pub mod dataflow;
 pub mod reshard;
 pub mod eventtime;

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! yt-stream figure <id> [--seconds N] [--compute native|hlo] [--seed N] [--auto]
-//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window
+//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window consistency
 //!     (--auto: hands-off `figure reshard` — the resident autoscale driver
 //!      performs the resizes, no manual reshard() calls)
 //! yt-stream run [--config path.yson] [--seconds N]
@@ -42,7 +42,7 @@ fn main() {
         _ => {
             eprintln!(
                 "yt-stream — streaming MapReduce with low write amplification\n\
-                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard|window> [--seconds N] [--compute native|hlo] [--seed N] [--auto]\n\
+                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard|window|consistency> [--seconds N] [--compute native|hlo] [--seed N] [--auto]\n\
                  \x20 yt-stream run [--config path.yson] [--seconds N] [--compute native|hlo]\n\
                  \x20 yt-stream selfcheck"
             );

@@ -129,6 +129,10 @@ pub mod names {
     pub const REDUCER_COMMIT_CONFLICTS: &str = "reducer/commit_conflicts_total";
     pub const REDUCER_COALESCED_ROUNDS: &str = "reducer/coalesced_fetch_rounds_total";
     pub const REDUCER_SPLIT_BRAIN: &str = "reducer/split_brain_detected_total";
+    pub const REDUCER_ANCHOR_COMMITS: &str = "reducer/anchor_commits_total";
+    pub const REDUCER_SKIPPED_PERSISTS: &str = "reducer/state_persists_skipped_total";
+    pub const REDUCER_DISCARD_ROUNDS: &str = "reducer/at_most_once_discard_rounds_total";
+    pub const REDUCER_ABDICATIONS: &str = "reducer/approximate_abdications_total";
     pub const SPILL_ROWS: &str = "spill/rows_spilled_total";
     pub const SPILL_RESTORED: &str = "spill/rows_restored_total";
     pub const RESHARD_MIGRATIONS: &str = "reshard/migrations_started_total";

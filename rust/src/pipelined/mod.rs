@@ -98,7 +98,7 @@ pub(crate) fn run_reducer_pipelined(
                     // final-fires): same hook as the serial loop; the
                     // pipeline is empty here, so no prefetch is at risk.
                     if let Some(txn) = user_reducer.tick() {
-                        let _ = rt.commit_tick(&state, txn);
+                        let _ = rt.commit_tick(&state, &state, txn);
                     }
                     clock.sleep_ms(rt.cfg.backoff_ms);
                     continue;
@@ -112,8 +112,11 @@ pub(crate) fn run_reducer_pipelined(
         let mut outcome = CommitOutcome::Nothing;
         let mut prefetch: Option<(ReducerState, ReducerState, Vec<FetchResult>)> = None;
         std::thread::scope(|scope| {
+            // Pipelining is exactly-once-only (the spawn gate forces
+            // approximate tiers onto the serial loop), so every commit
+            // persists state.
             let commit = scope.spawn(|| {
-                rt.process_and_commit(user_reducer, &state, &new_state, &fetches)
+                rt.process_and_commit(user_reducer, &state, &new_state, &fetches, true)
             });
             // Optimistic fetch(n+1) against new_state.
             let next_fetches = rt.fetch_cycle(&new_state, cycle + 1);

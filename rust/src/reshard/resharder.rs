@@ -41,6 +41,11 @@ pub struct ReshardContext {
     pub metrics: Arc<MetricsHub>,
     /// Accounting scope for the new epoch's state table.
     pub scope: Option<String>,
+    /// Accounting category for the new epoch's state table — matches the
+    /// stage's consistency tier (`reducer_meta` for exactly-once,
+    /// `anchor_state` for approximate), so resharding an approximate
+    /// stage keeps its frontier line intact across epochs.
+    pub state_category: WriteCategory,
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -128,7 +133,7 @@ fn ensure_new_fleet(ctx: &ReshardContext, migrating: &ReshardPlan) -> Result<(),
     match ctx.store.create_table_scoped(
         &table,
         ReducerState::schema(),
-        WriteCategory::ReducerMeta,
+        ctx.state_category,
         ctx.scope.clone(),
     ) {
         Ok(_) | Err(crate::dyntable::store::StoreError::AlreadyExists(_)) => {}

@@ -51,10 +51,18 @@ pub enum WriteCategory {
     /// per batch — so it counts toward WA and `figure window` reports it
     /// as its own line against the per-batch-upsert `UserOutput` savings.
     EventTime,
+    /// Anchor/lifecycle state rows of approximate-consistency stages
+    /// ([`crate::consistency`]): the rare durable snapshots a
+    /// `BoundedError` stage writes instead of per-commit `ReducerMeta`,
+    /// plus the one-time bootstrap/retire rows an `AtMostOnce` stage still
+    /// needs for reshard safety. System overhead — counts toward WA — and
+    /// kept separate from `reducer_meta` so `figure consistency` can show
+    /// the frontier as two lines on the same workload.
+    AnchorState,
 }
 
 /// Number of [`WriteCategory`] variants (array sizing).
-pub const CATEGORY_COUNT: usize = 10;
+pub const CATEGORY_COUNT: usize = 11;
 
 pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::SourceIngest,
@@ -67,6 +75,7 @@ pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::InterStage,
     WriteCategory::Reshard,
     WriteCategory::EventTime,
+    WriteCategory::AnchorState,
 ];
 
 impl WriteCategory {
@@ -82,6 +91,7 @@ impl WriteCategory {
             WriteCategory::InterStage => 7,
             WriteCategory::Reshard => 8,
             WriteCategory::EventTime => 9,
+            WriteCategory::AnchorState => 10,
         }
     }
 
@@ -97,6 +107,7 @@ impl WriteCategory {
             WriteCategory::InterStage => "inter_stage",
             WriteCategory::Reshard => "reshard",
             WriteCategory::EventTime => "event_time",
+            WriteCategory::AnchorState => "anchor_state",
         }
     }
 
@@ -370,6 +381,18 @@ mod tests {
         assert_eq!(s.system_bytes(), 100, "user output stays excluded");
         assert!((s.wa_factor(1_000) - 0.1).abs() < 1e-9);
         assert!(s.to_string().contains("event_time"));
+    }
+
+    #[test]
+    fn anchor_state_counts_toward_wa() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::SourceIngest, 1_000);
+        a.record(WriteCategory::AnchorState, 80);
+        a.record(WriteCategory::UserOutput, 400);
+        let s = a.snapshot();
+        assert_eq!(s.system_bytes(), 80, "user output stays excluded");
+        assert!((s.wa_factor(1_000) - 0.08).abs() < 1e-9);
+        assert!(s.to_string().contains("anchor_state"));
     }
 
     #[test]

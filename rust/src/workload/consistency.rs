@@ -1,0 +1,406 @@
+//! The consistency-frontier scenario: the §5.2 analytics pipeline run
+//! under each [`Consistency`] tier with identical deterministic input and
+//! identical kill/split-brain drills, so the three runs differ **only**
+//! in their fault-tolerance policy. `figure consistency` compares them:
+//!
+//! * state-write WA (the `reducer_meta` vs `anchor_state` lines),
+//! * `UserOutput` WA,
+//! * and *measured* output divergence against the pure ground truth of
+//!   [`deterministic_wave_user_events`].
+//!
+//! Exactly-once must stay byte-identical to a drill-free baseline (the
+//! seed guarantee, untouched); bounded-error must land strictly below
+//! exactly-once on state-write bytes while its divergence stays within
+//! the declared per-incident budget; at-most-once is reported as the
+//! frontier's far end (cheapest writes, honest loss).
+
+use std::collections::BTreeMap;
+
+use crate::consistency::Consistency;
+use crate::controller::Role;
+use crate::coordinator::processor::ClusterEnv;
+use crate::coordinator::{ComputeMode, InputSpec, ProcessorConfig, StreamingProcessor};
+use crate::metrics::hub::names;
+use crate::metrics::WaReport;
+use crate::queue::input_name_table;
+use crate::queue::ordered_table::OrderedTable;
+use crate::reshard::plan::reducer_slot;
+use crate::rows::{UnversionedRow, Value};
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+use crate::util::Clock;
+use crate::workload::analytics::{
+    analytics_mapper_factory, analytics_reducer_factory, ensure_output_table, OUTPUT_TABLE,
+};
+use crate::workload::elastic::{deterministic_wave_user_events, fill_deterministic_wave};
+
+/// Scenario knobs, shared by every tier's run (the comparison is only
+/// meaningful because all of this is held constant across tiers).
+#[derive(Debug, Clone)]
+pub struct ConsistencyCfg {
+    pub partitions: usize,
+    pub reducers: usize,
+    pub waves: usize,
+    pub messages_per_wave: usize,
+    pub seed: u64,
+    /// Base timings (worker cadences); counts and the consistency policy
+    /// are overwritten per run.
+    pub base: ProcessorConfig,
+    /// Reducer kills across the run (cycled over reducer indexes, one
+    /// drill after each wave's fill).
+    pub kills: usize,
+    /// Split-brain twins spawned across the run (same cycling).
+    pub twins: usize,
+    /// The BoundedError tier's declared budget (rows per failure event).
+    pub divergence_budget: u64,
+    /// The BoundedError tier's batch-cadence anchor floor.
+    pub anchor_every_batches: u32,
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for ConsistencyCfg {
+    fn default() -> Self {
+        ConsistencyCfg {
+            partitions: 4,
+            reducers: 2,
+            waves: 3,
+            messages_per_wave: 40,
+            seed: 0xC0_75,
+            base: ProcessorConfig {
+                backoff_ms: 5,
+                trim_period_ms: 100,
+                restart_delay_ms: 100,
+                split_brain_delay_ms: 50,
+                session_ttl_ms: 1_500,
+                heartbeat_period_ms: 100,
+                ..ProcessorConfig::default()
+            },
+            kills: 2,
+            twins: 1,
+            divergence_budget: 64,
+            anchor_every_batches: 4,
+            drain_timeout_ms: 45_000,
+        }
+    }
+}
+
+impl ConsistencyCfg {
+    /// The BoundedError policy this config declares.
+    pub fn bounded_policy(&self) -> Consistency {
+        Consistency::BoundedError {
+            divergence_budget: self.divergence_budget,
+            anchor_every_batches: self.anchor_every_batches,
+        }
+    }
+
+    /// The figure's divergence gate: per-incident budget × incidents ×2
+    /// (the ×2 covers the twin-abdication window — a twin that anchors
+    /// once before abdicating can both replay and strand up to one
+    /// budget's worth of rows).
+    pub fn divergence_allowance(&self) -> u64 {
+        self.divergence_budget * (self.kills + self.twins).max(1) as u64 * 2
+    }
+}
+
+/// Everything one tier's run leaves behind for the frontier comparison.
+pub struct TierOutcome {
+    pub tier: Consistency,
+    /// Whether the kill/twin drills ran (false = clean baseline).
+    pub drilled: bool,
+    /// Ground truth: input lines carrying a user field.
+    pub expected_lines: i64,
+    /// Observed sum of the output `count` column after drain.
+    pub output_lines: i64,
+    /// Full drained output table in key order.
+    pub rows: Vec<UnversionedRow>,
+    /// Σ per-key |count − truth| (0 ⇔ the output is exactly the truth).
+    pub divergence: u64,
+    /// Reducer-state bytes under the exactly-once category.
+    pub reducer_meta_bytes: u64,
+    /// Reducer-state bytes under the approximate (anchor) category.
+    pub anchor_state_bytes: u64,
+    pub user_output_bytes: u64,
+    pub ingest_bytes: u64,
+    pub anchor_commits: u64,
+    pub skipped_persists: u64,
+    pub abdications: u64,
+    pub discard_rounds: u64,
+    pub report: WaReport,
+    pub env: ClusterEnv,
+}
+
+impl TierOutcome {
+    /// Total reducer-state bytes, whichever category they landed in — the
+    /// frontier's y-axis.
+    pub fn state_bytes(&self) -> u64 {
+        self.reducer_meta_bytes + self.anchor_state_bytes
+    }
+
+    /// State-write amplification against this run's own ingest.
+    pub fn state_wa(&self) -> f64 {
+        if self.ingest_bytes == 0 {
+            0.0
+        } else {
+            self.state_bytes() as f64 / self.ingest_bytes as f64
+        }
+    }
+
+    /// UserOutput write amplification against this run's own ingest.
+    pub fn user_output_wa(&self) -> f64 {
+        if self.ingest_bytes == 0 {
+            0.0
+        } else {
+            self.user_output_bytes as f64 / self.ingest_bytes as f64
+        }
+    }
+}
+
+/// The pure per-key ground truth of the whole wave plan:
+/// `(user, cluster) → count` (mirrors what a perfect pipeline commits).
+pub fn ground_truth_counts(
+    partitions: usize,
+    waves: usize,
+    messages_per_wave: usize,
+) -> BTreeMap<(String, String), i64> {
+    let mut truth: BTreeMap<(String, String), i64> = BTreeMap::new();
+    for wave in 0..waves {
+        for (_, user, cluster, _) in
+            deterministic_wave_user_events(partitions, wave, messages_per_wave)
+        {
+            *truth.entry((user.to_string(), cluster.to_string())).or_insert(0) += 1;
+        }
+    }
+    truth
+}
+
+/// Σ per-key |count − truth| over the union of keys: counts both
+/// replayed (inflated) and lost rows, in rows.
+pub fn divergence_vs_truth(
+    rows: &[UnversionedRow],
+    truth: &BTreeMap<(String, String), i64>,
+) -> u64 {
+    let mut got: BTreeMap<(String, String), i64> = BTreeMap::new();
+    for r in rows {
+        let (Some(user), Some(cluster), Some(count)) = (
+            r.get(0).and_then(Value::as_str),
+            r.get(1).and_then(Value::as_str),
+            r.get(2).and_then(Value::as_i64),
+        ) else {
+            continue;
+        };
+        got.insert((user.to_string(), cluster.to_string()), count);
+    }
+    let mut div = 0u64;
+    for (key, want) in truth {
+        div += (got.remove(key).unwrap_or(0) - want).unsigned_abs();
+    }
+    for (_, extra) in got {
+        div += extra.unsigned_abs();
+    }
+    div
+}
+
+fn output_count_sum(env: &ClusterEnv) -> i64 {
+    env.store
+        .scan(OUTPUT_TABLE)
+        .map(|rows| {
+            rows.iter()
+                .map(|r| r.get(2).and_then(Value::as_i64).unwrap_or(0))
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+/// Run the wave plan once under `tier`. With `drilled`, each wave's fill
+/// is followed by one fault drill — kills first, then twins, cycling over
+/// reducer indexes — so every tier faces the *same* failure schedule.
+pub fn run_consistency_tier(cfg: &ConsistencyCfg, tier: Consistency, drilled: bool) -> TierOutcome {
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    let table = OrderedTable::new(
+        "//input/consistency",
+        input_name_table(),
+        cfg.partitions,
+        env.accounting.clone(),
+    );
+    ensure_output_table(&env.client()).expect("create analytics output table");
+
+    let proc_cfg = ProcessorConfig {
+        mapper_count: cfg.partitions,
+        reducer_count: cfg.reducers,
+        consistency: tier,
+        ..cfg.base.clone()
+    };
+    let processor = StreamingProcessor::launch(
+        proc_cfg,
+        env.clone(),
+        InputSpec::Ordered(table.clone()),
+        analytics_mapper_factory(ComputeMode::Native),
+        analytics_reducer_factory(ComputeMode::Native),
+        Yson::parse("{}").unwrap(),
+    )
+    .expect("launch consistency processor");
+
+    // The drill schedule: `kills` kill drills then `twins` twin drills,
+    // one after each wave's fill (wrapping if there are more drills than
+    // waves), victims cycling over the reducer fleet. Purely a function
+    // of (cfg, wave) — every tier sees the same schedule.
+    let drills: Vec<(bool, usize)> = (0..cfg.kills)
+        .map(|i| (true, i % cfg.reducers))
+        .chain((0..cfg.twins).map(|i| (false, i % cfg.reducers)))
+        .collect();
+
+    let mut expected = 0i64;
+    for wave in 0..cfg.waves {
+        expected += fill_deterministic_wave(&table, wave, cfg.messages_per_wave);
+        // Let the wave start flowing before (possibly) drilling into it.
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if !drilled {
+            continue;
+        }
+        let sup = processor.supervisor();
+        for (d, (is_kill, victim)) in drills.iter().enumerate() {
+            if d % cfg.waves != wave {
+                continue;
+            }
+            if *is_kill {
+                sup.kill(Role::Reducer, reducer_slot(0, *victim));
+            } else {
+                sup.duplicate(Role::Reducer, reducer_slot(0, *victim));
+            }
+        }
+    }
+
+    if drilled && tier.is_approximate() {
+        // End twin contention deterministically: under bounded-error a
+        // twin abdicates at the next anchor it loses, but an at-most-once
+        // twin never writes state and so never collapses on its own. A
+        // retire→revive bounce kills incumbent + twins and respawns one
+        // fresh incarnation per slot (its recovery drift is part of what
+        // the figure measures).
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        let sup = processor.supervisor();
+        for i in 0..cfg.reducers {
+            sup.retire(Role::Reducer, reducer_slot(0, i));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        for i in 0..cfg.reducers {
+            sup.revive(Role::Reducer, reducer_slot(0, i));
+        }
+    }
+
+    // Drain. Exactly-once converges on the exact expectation; the
+    // approximate tiers settle near it (that distance *is* the measured
+    // divergence), so their verdict is stability: the drained backlog and
+    // an output sum unchanged across a quiet window.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(cfg.drain_timeout_ms);
+    let mut output_lines;
+    let mut stable_since: Option<(i64, std::time::Instant)> = None;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        output_lines = output_count_sum(&env);
+        if tier.is_exactly_once() && output_lines == expected {
+            break;
+        }
+        let drained = processor.input.retained_rows() == 0;
+        match stable_since {
+            Some((v, t0)) if v == output_lines && drained => {
+                if t0.elapsed() >= std::time::Duration::from_millis(1_200) {
+                    break;
+                }
+            }
+            _ => stable_since = Some((output_lines, std::time::Instant::now())),
+        }
+        if std::time::Instant::now() >= deadline {
+            break;
+        }
+    }
+
+    let report = processor.wa_report(&format!("consistency [{}]", tier.label()));
+    let ingest_bytes = processor.ingested_bytes();
+    let anchor_commits = env.metrics.get_counter(names::REDUCER_ANCHOR_COMMITS);
+    let skipped_persists = env.metrics.get_counter(names::REDUCER_SKIPPED_PERSISTS);
+    let abdications = env.metrics.get_counter(names::REDUCER_ABDICATIONS);
+    let discard_rounds = env.metrics.get_counter(names::REDUCER_DISCARD_ROUNDS);
+    processor.stop();
+
+    let rows = env.store.scan(OUTPUT_TABLE).unwrap_or_default();
+    let truth = ground_truth_counts(cfg.partitions, cfg.waves, cfg.messages_per_wave);
+    let divergence = divergence_vs_truth(&rows, &truth);
+    TierOutcome {
+        tier,
+        drilled,
+        expected_lines: expected,
+        output_lines,
+        rows,
+        divergence,
+        reducer_meta_bytes: env.accounting.bytes(WriteCategory::ReducerMeta),
+        anchor_state_bytes: env.accounting.bytes(WriteCategory::AnchorState),
+        user_output_bytes: env.accounting.bytes(WriteCategory::UserOutput),
+        ingest_bytes,
+        anchor_commits,
+        skipped_persists,
+        abdications,
+        discard_rounds,
+        report,
+        env,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::row;
+
+    #[test]
+    fn ground_truth_counts_sum_to_user_lines() {
+        let truth = ground_truth_counts(3, 2, 7);
+        let total: i64 = truth.values().sum();
+        let per_wave: usize = (0..2)
+            .map(|w| deterministic_wave_user_events(3, w, 7).len())
+            .sum();
+        assert_eq!(total, per_wave as i64);
+        assert!(!truth.is_empty());
+    }
+
+    #[test]
+    fn divergence_counts_inflation_loss_and_strays() {
+        let mut truth = BTreeMap::new();
+        truth.insert(("alice".to_string(), "hahn".to_string()), 10i64);
+        truth.insert(("bob".to_string(), "bohr".to_string()), 5i64);
+        // Exact output: zero divergence.
+        let exact = vec![
+            row!["alice", "hahn", 10i64, 0i64],
+            row!["bob", "bohr", 5i64, 0i64],
+        ];
+        assert_eq!(divergence_vs_truth(&exact, &truth), 0);
+        // Inflated by 2, short by 1, plus a stray key worth 3: total 6.
+        let off = vec![
+            row!["alice", "hahn", 12i64, 0i64],
+            row!["bob", "bohr", 4i64, 0i64],
+            row!["eve", "hahn", 3i64, 0i64],
+        ];
+        assert_eq!(divergence_vs_truth(&off, &truth), 6);
+        // Missing key counts fully.
+        let missing = vec![row!["alice", "hahn", 10i64, 0i64]];
+        assert_eq!(divergence_vs_truth(&missing, &truth), 5);
+    }
+
+    #[test]
+    fn allowance_scales_with_incidents() {
+        let cfg = ConsistencyCfg {
+            divergence_budget: 64,
+            kills: 2,
+            twins: 1,
+            ..ConsistencyCfg::default()
+        };
+        assert_eq!(cfg.divergence_allowance(), 64 * 3 * 2);
+        let quiet = ConsistencyCfg {
+            kills: 0,
+            twins: 0,
+            ..cfg
+        };
+        assert_eq!(quiet.divergence_allowance(), 64 * 2, "min one incident");
+    }
+}

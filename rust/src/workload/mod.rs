@@ -18,8 +18,12 @@ pub mod analytics;
 pub mod sessions;
 pub mod elastic;
 pub mod windowed;
+pub mod consistency;
 
 pub use analytics::{analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE};
+pub use consistency::{
+    divergence_vs_truth, ground_truth_counts, run_consistency_tier, ConsistencyCfg, TierOutcome,
+};
 pub use elastic::{
     auto_driver_config, run_elastic, run_elastic_auto, ElasticCfg, ElasticOutcome,
 };

@@ -437,6 +437,7 @@ pub fn run_windowed(
                 late,
                 metrics: env.metrics.clone(),
                 scope: proc_cfg.scope_label.clone(),
+                consistency: proc_cfg.consistency,
             });
             let migrators = WindowMigrators::new(
                 env.store.clone(),

@@ -716,6 +716,97 @@ fn at_least_once_mode_never_loses_rows() {
 }
 
 #[test]
+fn at_most_once_sink_never_blocks_exactly_once_handoff() {
+    // PR 7 consistency-tier drill: the aggregate *sink* stage runs
+    // at-most-once (no steady-state reducer persistence) while the
+    // sessionize stage upstream stays exactly-once. Kill the sink's
+    // reducers mid-run: each restarted incarnation discards its first
+    // non-empty fetch round (rows of unknowable application status), so
+    // the sink may under-count — but it must keep acking, so the chain
+    // still drains, the exactly-once handoff is fully trimmed (never
+    // blocked), and nothing is ever double-applied (never corrupted:
+    // under kills, loss is legal, inflation is not).
+    use yt_stream::consistency::Consistency;
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::coordinator::{ComputeMode, InputSpec};
+    use yt_stream::queue::input_name_table;
+    use yt_stream::queue::ordered_table::OrderedTable;
+    use yt_stream::storage::WriteCategory;
+    use yt_stream::util::Clock;
+    use yt_stream::workload::elastic::fill_deterministic_wave;
+    use yt_stream::workload::sessions::two_stage_topology;
+
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), 0xA403);
+    let table = OrderedTable::new(
+        "//input/amo_sink",
+        input_name_table(),
+        3,
+        env.accounting.clone(),
+    );
+    let expected = fill_deterministic_wave(&table, 0, 60);
+
+    let base = ProcessorConfig {
+        backoff_ms: 5,
+        trim_period_ms: 100,
+        restart_delay_ms: 100,
+        split_brain_delay_ms: 50,
+        session_ttl_ms: 1_500,
+        heartbeat_period_ms: 100,
+        ..ProcessorConfig::default()
+    };
+    let mut topo = two_stage_topology(base, 3, 2, 2, ComputeMode::Native);
+    // Sink-only approximation: validate() allows this without any
+    // `tolerates_upstream_drift` acknowledgement — nothing consumes the
+    // sink's output, and the exactly-once stage sits *upstream* of it.
+    topo.stages[1].config.consistency = Consistency::AtMostOnce;
+
+    let running = topo
+        .launch(&env, InputSpec::Ordered(table))
+        .expect("at-most-once sink topology must validate and launch");
+
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let sup2 = running.stage(1).supervisor().clone();
+    sup2.kill(Role::Reducer, 0);
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    sup2.kill(Role::Reducer, 1);
+
+    let drained = running.wait_drained(45_000);
+    let handoff_retained = running.handoff_retained_rows();
+    let discard_rounds = env
+        .metrics
+        .get_counter(names::REDUCER_DISCARD_ROUNDS);
+    let anchor_bytes = env.accounting.bytes(WriteCategory::AnchorState);
+    let env = running.stop();
+
+    assert!(
+        drained,
+        "an at-most-once sink must never block the chain from draining"
+    );
+    assert_eq!(
+        handoff_retained, 0,
+        "the exactly-once handoff must be fully acked and trimmed through \
+         the at-most-once sink's kills"
+    );
+    let events = sessions_events_sum(&env);
+    assert!(events > 0, "the sink must have applied something");
+    assert!(
+        events <= expected,
+        "at-most-once under kills may lose rows but must never duplicate: \
+         summed {events} events from {expected} input lines"
+    );
+    assert_eq!(
+        anchor_bytes, 0,
+        "at-most-once persists no anchors (its whole point is zero \
+         steady-state reducer-state writes)"
+    );
+    eprintln!(
+        "at-most-once sink: {events}/{expected} events after 2 kills, \
+         {discard_rounds} discard rounds"
+    );
+}
+
+#[test]
 fn windowed_final_fire_under_drills_and_reshard_byte_identical() {
     // The event-time acceptance drill: a final-fire windowed run under a
     // reducer kill + split-brain twins + a lossy/duplicating net + one

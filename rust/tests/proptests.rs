@@ -528,6 +528,68 @@ fn fleet_watermark_never_regresses() {
     );
 }
 
+/// Invariant 8 (PR 7, consistency tiers): under *random kill schedules*,
+/// a bounded-error stage recovers from its last anchor with measured
+/// divergence within the declared allowance, while the exactly-once tier
+/// over the identical workload and drills stays exactly on the ground
+/// truth (zero divergence — the seed guarantee is policy-gated, never
+/// weakened by the new tiers existing).
+#[test]
+fn anchored_recovery_divergence_within_budget() {
+    use yt_stream::consistency::Consistency;
+    use yt_stream::workload::consistency::{run_consistency_tier, ConsistencyCfg};
+
+    check_with(
+        Config {
+            cases: 3, // each case runs two full pipelines (~2-4 s each)
+            base_seed: 0xB0DE,
+        },
+        "bounded-error divergence within budget, exactly-once exact",
+        |rng| {
+            let cfg = ConsistencyCfg {
+                partitions: 2,
+                reducers: 1 + rng.next_below(2) as usize,
+                waves: 2,
+                messages_per_wave: 12,
+                seed: rng.next_u64(),
+                kills: 1 + rng.next_below(2) as usize,
+                twins: rng.next_below(2) as usize,
+                divergence_budget: 32 + rng.next_below(64),
+                anchor_every_batches: 2 + rng.next_below(4) as u32,
+                drain_timeout_ms: 30_000,
+                ..ConsistencyCfg::default()
+            };
+
+            let bounded = run_consistency_tier(&cfg, cfg.bounded_policy(), true);
+            prop_assert!(
+                bounded.divergence <= cfg.divergence_allowance(),
+                "bounded-error divergence {} exceeded allowance {} \
+                 (budget {}, kills {}, twins {}, anchors {}, skipped {})",
+                bounded.divergence,
+                cfg.divergence_allowance(),
+                cfg.divergence_budget,
+                cfg.kills,
+                cfg.twins,
+                bounded.anchor_commits,
+                bounded.skipped_persists
+            );
+
+            let exact = run_consistency_tier(&cfg, Consistency::ExactlyOnce, true);
+            prop_assert_eq!(
+                exact.output_lines,
+                exact.expected_lines,
+                "exactly-once lost or duplicated rows under the same drills"
+            );
+            prop_assert_eq!(
+                exact.divergence,
+                0u64,
+                "exactly-once output diverged from ground truth"
+            );
+            Ok(())
+        },
+    );
+}
+
 /// Invariant 4: optimistic transactions serialize read-modify-writes —
 /// concurrent increments with retry lose nothing.
 #[test]

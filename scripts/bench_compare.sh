@@ -23,6 +23,28 @@ baseline="$1"
 current="$2"
 threshold="${3:-20}"
 
+# A missing or renamed baseline is an expected state, not an error: the
+# bench document is named BENCH_<pr>.json, so the reference file changes
+# name every PR and a fresh checkout (or the first run after a rename)
+# has nothing to compare against yet. Say so clearly — pointing at any
+# bench documents that *do* exist nearby — and exit 0 so advisory CI
+# steps and local runs don't fail on bookkeeping.
+if [ ! -f "$baseline" ]; then
+    echo "bench_compare: SKIP — baseline '$baseline' not found (renamed or not committed yet)" >&2
+    candidates="$(ls "$(dirname "$baseline")"/BENCH_*.json 2>/dev/null || true)"
+    if [ -n "$candidates" ]; then
+        echo "bench_compare: bench documents present instead:" >&2
+        echo "$candidates" | sed 's/^/  /' >&2
+    fi
+    echo "bench_compare: nothing to compare; treating as advisory pass" >&2
+    exit 0
+fi
+if [ ! -f "$current" ]; then
+    echo "bench_compare: SKIP — current document '$current' not found (bench step skipped?)" >&2
+    echo "bench_compare: nothing to compare; treating as advisory pass" >&2
+    exit 0
+fi
+
 exec python3 - "$baseline" "$current" "$threshold" <<'PY'
 import json
 import sys

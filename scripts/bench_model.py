@@ -12,7 +12,11 @@ marking it as a model. The Rust-measured document replaces this one the
 first time `scripts/bench_smoke.sh --full` runs on a machine with cargo
 (CI does this on every push and uploads the artifact).
 
-Usage: scripts/bench_model.py [OUTPUT.json]   (default: BENCH_6.json)
+PR 7 adds the consistency-tier pair: persist-the-state-row-every-commit
+(exactly-once) vs anchor-every-K-commits (bounded-error), as the same
+journal-append mechanism the reducer's Step-8 state write amortizes.
+
+Usage: scripts/bench_model.py [OUTPUT.json]   (default: BENCH_7.json)
 """
 import json
 import struct
@@ -131,7 +135,7 @@ def bench(name, f, items=None, warmup_s=0.1, min_time_s=0.6, min_iters=10):
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_6.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_7.json"
     reports = []
 
     # --- rows: per-row encode+hash vs columnar batch ----------------------
@@ -205,6 +209,37 @@ def main():
     reports.append(bench("spill/push_per_row_256", spill_per_row, items=256))
     reports.append(bench("spill/push_batch_256", spill_batch, items=256))
 
+    # --- consistency: state persisted every commit vs anchored every K ----
+    # The reducer's Step-8 state write, modeled as the durable journal
+    # append of one serialized state row per commit. Exactly-once persists
+    # on all 64 commits; a bounded-error stage with anchor_every_batches=8
+    # appends on 8 of them and only bumps its in-memory exposure counters
+    # on the rest — the write-amplification saving the `figure consistency`
+    # frontier measures end to end.
+    state_row = encode_row(("reducer_state", "bucket_meta", 123456, 0.0))
+    ANCHOR_EVERY = 8
+
+    def persist_every_commit():
+        journal = []
+        for _ in range(64):
+            journal.append(bytes(state_row))  # one durable state row per commit
+        return len(journal)
+
+    def anchored_every_k():
+        journal = []
+        rows_since, batches_since = 0, 0
+        for _ in range(64):
+            batches_since += 1
+            if batches_since >= ANCHOR_EVERY:
+                journal.append(bytes(state_row))  # anchor commit
+                rows_since, batches_since = 0, 0
+            else:
+                rows_since += 16  # skipped persist: exposure accounting only
+        return len(journal)
+
+    reports.append(bench("consistency/persist_every_commit_64", persist_every_commit, items=64))
+    reports.append(bench("consistency/anchored_every_8_64", anchored_every_k, items=64))
+
     doc = {
         "schema": "yt-stream-bench-v1",
         "harness": (
@@ -224,6 +259,11 @@ def main():
         ("rows/per_row_encode_hash_1024", "rows/batch_encode_hash_1024", "rows"),
         ("dyntable/commit_cas10_per_row", "dyntable/commit_cas10_grouped", "cas"),
         ("spill/push_per_row_256", "spill/push_batch_256", "spill"),
+        (
+            "consistency/persist_every_commit_64",
+            "consistency/anchored_every_8_64",
+            "consistency",
+        ),
     ]:
         print(f"bench_model: {label}: batched is {by[a] / by[b]:.2f}x faster than per-row")
 

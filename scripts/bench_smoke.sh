@@ -15,7 +15,7 @@
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
-BENCH_PR="${BENCH_PR:-6}"
+BENCH_PR="${BENCH_PR:-7}"
 bench_json="$repo_root/BENCH_${BENCH_PR}.json"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -68,6 +68,16 @@ echo "== bench_smoke: figure reshard --auto (hands-off resident driver) =="
 # downstream mapper fleet (the drain-gate regression).
 timeout 600 cargo run --release --quiet -- figure reshard --auto --seconds 5 || {
     echo "bench_smoke: FAIL — figure reshard --auto did not complete" >&2
+    exit 1
+}
+
+echo "== bench_smoke: figure consistency (WA-vs-accuracy frontier) =="
+# The consistency-tier figure gates on: exactly-once under kill+twin
+# drills byte-identical to the drill-free baseline, bounded-error state
+# bytes strictly below exactly-once's over identical input, and measured
+# divergence within the declared per-incident allowance.
+timeout 600 cargo run --release --quiet -- figure consistency --seconds 5 || {
+    echo "bench_smoke: FAIL — figure consistency did not complete" >&2
     exit 1
 }
 
