@@ -3,7 +3,7 @@
 //! trip, dynamic-table commit, window push/ack — plus the per-row vs
 //! batched comparisons backing the PR 6 columnar/group-commit work and
 //! the PR 7 consistency-tier pair (state persisted every commit vs only
-//! at bounded-error anchors).
+//! at bounded-error anchors) and the PR 8 cold-chunk encode/scan pair.
 //!
 //! Run with `cargo bench --bench micro_hot_paths`. Output is one line per
 //! benchmark (benchkit format); set `BENCHKIT_JSON=/path/BENCH_<pr>.json`
@@ -391,6 +391,37 @@ fn bench_consistency_anchoring() {
     );
 }
 
+/// Cold tier (PR 8): chunk encode (columnar batch → hex payload + FNV
+/// content hash, what compact-on-trim adds to a trim CAS) vs chunk scan
+/// (hex decode + hash verify + columnar decode, what one backfill
+/// checkpoint replays). Both sides of the compact-once/read-many trade.
+fn bench_cold_chunk() {
+    use yt_stream::coldtier::{content_hash, hex_decode, hex_encode};
+    use yt_stream::rows::RowBatch;
+
+    let rs = sample_rowset(1024);
+    let payload = rs.byte_size() as u64;
+    let encoded = RowBatch::from_rowset(&rs).encode();
+    let hex = hex_encode(&encoded);
+    let want = format!("{:016x}", content_hash(&encoded));
+
+    Bench::new("coldtier/chunk_encode_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            let encoded = RowBatch::from_rowset(&rs).encode();
+            black_box(format!("{:016x}", content_hash(&encoded)));
+            black_box(hex_encode(&encoded));
+        });
+    Bench::new("coldtier/chunk_scan_1024")
+        .throughput_bytes(payload)
+        .run(|| {
+            let raw = hex_decode(&hex).unwrap();
+            assert_eq!(format!("{:016x}", content_hash(&raw)), want);
+            let shared: Arc<[u8]> = raw.into();
+            black_box(RowBatch::decode_shared(&shared).unwrap().to_rowset());
+        });
+}
+
 fn main() {
     println!("== micro hot paths ==");
     bench_codec();
@@ -402,6 +433,7 @@ fn main() {
     bench_group_commit();
     bench_spill_batch();
     bench_consistency_anchoring();
+    bench_cold_chunk();
     // BENCHKIT_JSON=<path> → machine-readable BENCH_<pr>.json document.
     yt_stream::util::benchkit::write_json_env("rust/micro_hot_paths");
 }

@@ -1,0 +1,222 @@
+//! Reshard bootstrap from cold: rebuild a windowed stage's state when the
+//! migration handoff is empty because the exporter is gone (retired fleet
+//! crashed past recovery, state tables dropped, or a brand-new consumer
+//! adopting day-N state).
+//!
+//! The split of responsibilities mirrors what the cold tier stores:
+//!
+//! * **Open-window accumulators** are rebuilt by *re-draining* the cold
+//!   segment chunks through [`crate::coordinator::InputSpec::BoundedRange`]
+//!   — the normal fold path over history, no special rehydration code.
+//! * **The fired-watermark marker** cannot be re-derived that way: without
+//!   it, re-drained rows of already-fired windows would re-open and
+//!   re-fire them, duplicating output. [`ColdWindowBootstrap`] restores it
+//!   from the *history* chunks — each fired-window GC pass wrote one chunk
+//!   whose `chunk_id` is the fire watermark, so the max history `chunk_id`
+//!   is exactly the last fired watermark — inside the same bootstrap
+//!   transaction the import runs in.
+//!
+//! When the handoff does contain rows, this importer is transparent: it
+//! delegates to the ordinary [`WindowResidualImporter`] wholesale, so a
+//! healthy reshard is bit-for-bit unchanged.
+
+use std::sync::Arc;
+
+use crate::dyntable::{Transaction, TxnError};
+use crate::eventtime::migrate::WindowMigrators;
+use crate::eventtime::windowed::{
+    ensure_window_state_table, restore_fired_marker, window_state_table,
+};
+use crate::reshard::migration::{ImportCtx, ResidualImporter};
+use crate::rows::UnversionedRow;
+
+use super::store::ColdStore;
+
+/// A [`ResidualImporter`] that falls back to the cold tier's fired-window
+/// history when the migration handoff arrives empty.
+pub struct ColdWindowBootstrap {
+    migrators: Arc<WindowMigrators>,
+    inner: Arc<dyn ResidualImporter>,
+    cold: Arc<ColdStore>,
+}
+
+impl ColdWindowBootstrap {
+    pub fn new(migrators: Arc<WindowMigrators>, cold: Arc<ColdStore>) -> Arc<ColdWindowBootstrap> {
+        let (_, inner) = migrators.pair();
+        Arc::new(ColdWindowBootstrap {
+            migrators,
+            inner,
+            cold,
+        })
+    }
+
+    /// Last fired watermark recorded in the cold tier (`None` when no
+    /// window ever fired with history compaction on).
+    pub fn fired_watermark_from_cold(&self) -> Option<i64> {
+        self.cold
+            .history_chunks()
+            .ok()?
+            .iter()
+            .map(|m| m.chunk_id)
+            .max()
+    }
+}
+
+impl ResidualImporter for ColdWindowBootstrap {
+    fn import(
+        &self,
+        ctx: &ImportCtx,
+        rows: &[UnversionedRow],
+        txn: &mut Transaction,
+    ) -> Result<(), TxnError> {
+        if !rows.is_empty() {
+            return self.inner.import(ctx, rows, txn);
+        }
+        let Some(wm) = self.fired_watermark_from_cold() else {
+            return Ok(()); // no handoff, no history: genuinely day-zero
+        };
+        let m = &self.migrators;
+        let table = window_state_table(&m.state_base, ctx.epoch);
+        ensure_window_state_table(&m.store, &table, m.scope.clone())
+            .map_err(TxnError::NoSuchTable)?;
+        restore_fired_marker(txn, &table, ctx.new_index, wm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::partitioning;
+    use crate::coldtier::store::KIND_HISTORY;
+    use crate::dyntable::DynTableStore;
+    use crate::eventtime::migrate::KIND_WINDOW_STATE;
+    use crate::eventtime::windowed::{WindowFold, MARKER_WINDOW};
+    use crate::row;
+    use crate::rows::{NameTable, RowsetBuilder, Value};
+    use crate::storage::WriteAccounting;
+    use crate::util::yson::Yson;
+
+    const BASE: &str = "//sys/cb/window_state";
+
+    struct CountFold;
+    impl WindowFold for CountFold {
+        fn event_ts(&self, _row: &UnversionedRow) -> Option<i64> {
+            None
+        }
+        fn key(&self, _row: &UnversionedRow) -> Option<String> {
+            None
+        }
+        fn zero(&self) -> Yson {
+            Yson::Int(0)
+        }
+        fn fold(&self, _acc: &mut Yson, _row: &UnversionedRow) {}
+        fn merge(&self, into: &mut Yson, other: &Yson) {
+            *into = Yson::Int(into.as_i64().unwrap_or(0) + other.as_i64().unwrap_or(0));
+        }
+        fn emit(
+            &self,
+            _w: i64,
+            _e: i64,
+            _k: &str,
+            _a: &Yson,
+            _t: &mut Transaction,
+        ) -> Result<(), TxnError> {
+            Ok(())
+        }
+    }
+
+    fn rig() -> (Arc<DynTableStore>, Arc<ColdWindowBootstrap>, Arc<ColdStore>) {
+        let store = DynTableStore::new(WriteAccounting::new());
+        let cold = ColdStore::new(store.clone(), "//sys/cold/b");
+        cold.ensure_tables(None).unwrap();
+        let migrators = WindowMigrators::new(store.clone(), Arc::new(CountFold), BASE, None);
+        let boot = ColdWindowBootstrap::new(migrators, cold.clone());
+        (store, boot, cold)
+    }
+
+    fn history_chunk(store: &Arc<DynTableStore>, cold: &Arc<ColdStore>, reducer: usize, wm: i64) {
+        let nt = NameTable::new(&["window_start", "win_key", "acc"]);
+        let mut b = RowsetBuilder::new(nt);
+        b.push(row![wm - 250, "alice", "{}"]);
+        let mut txn = store.begin();
+        cold.compact_into(&mut txn, reducer, KIND_HISTORY, wm, 0, &b.build(), Some(0), Some(1))
+            .unwrap();
+        txn.commit().unwrap();
+    }
+
+    #[test]
+    fn empty_handoff_restores_fired_marker_from_history() {
+        let (store, boot, cold) = rig();
+        history_chunk(&store, &cold, 0, 500);
+        history_chunk(&store, &cold, 1, 750);
+
+        let ctx = ImportCtx {
+            new_index: 0,
+            new_partitions: 2,
+            epoch: 1,
+        };
+        let mut txn = store.begin();
+        boot.import(&ctx, &[], &mut txn).unwrap();
+        txn.commit().unwrap();
+
+        // Marker = max fire watermark across all reducers' history.
+        let table = window_state_table(BASE, 1);
+        let rows = store.scan(&table).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get(0).unwrap().as_i64(), Some(MARKER_WINDOW));
+        assert_eq!(
+            Yson::parse(rows[0].get(2).unwrap().as_str().unwrap())
+                .unwrap()
+                .as_i64()
+                .unwrap(),
+            750
+        );
+    }
+
+    #[test]
+    fn empty_handoff_without_history_is_day_zero() {
+        let (store, boot, _cold) = rig();
+        let ctx = ImportCtx {
+            new_index: 0,
+            new_partitions: 1,
+            epoch: 1,
+        };
+        let mut txn = store.begin();
+        boot.import(&ctx, &[], &mut txn).unwrap();
+        txn.commit().unwrap();
+        assert!(store.scan(&window_state_table(BASE, 1)).is_err());
+    }
+
+    #[test]
+    fn non_empty_handoff_delegates_to_the_normal_importer() {
+        let (store, boot, cold) = rig();
+        // History exists, but the handoff wins: healthy reshards are
+        // unchanged by the cold tier.
+        history_chunk(&store, &cold, 0, 999_999);
+        let key = "alice";
+        let owner = partitioning::hash_partition(key, 1);
+        let ctx = ImportCtx {
+            new_index: owner,
+            new_partitions: 1,
+            epoch: 2,
+        };
+        let payload = Yson::map(vec![
+            ("w", Yson::Int(0)),
+            ("k", Yson::str(key)),
+            ("a", Yson::str(&Yson::Int(4).to_string())),
+        ])
+        .to_string();
+        let rows = vec![UnversionedRow::new(vec![
+            Value::Int64(0),
+            Value::from(KIND_WINDOW_STATE),
+            Value::from(payload.as_str()),
+        ])];
+        let mut txn = store.begin();
+        boot.import(&ctx, &rows, &mut txn).unwrap();
+        txn.commit().unwrap();
+        let out = store.scan(&window_state_table(BASE, 2)).unwrap();
+        // One state row, no marker from history (delegation path).
+        assert_eq!(out.len(), 1);
+        assert_ne!(out[0].get(0).unwrap().as_i64(), Some(MARKER_WINDOW));
+    }
+}

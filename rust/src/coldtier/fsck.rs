@@ -1,0 +1,209 @@
+//! Manifest fsck: offline verification that the cold tier is internally
+//! consistent — every manifest row has a payload whose content hash and
+//! row count match, and segment chunks tile each partition's row-index
+//! space with no gap and no overlap.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::dyntable::store::StoreError;
+use crate::dyntable::DynTableStore;
+
+use super::store::{ChunkError, ColdStore, KIND_HISTORY, KIND_SEGMENT};
+
+/// Summary of a clean fsck pass.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FsckReport {
+    pub chunks: usize,
+    pub segment_chunks: usize,
+    pub history_chunks: usize,
+    /// Sum of raw (pre-hex) encoded chunk bytes.
+    pub payload_bytes: u64,
+}
+
+impl fmt::Display for FsckReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "fsck ok: {} chunks ({} segment, {} history), {} payload bytes",
+            self.chunks, self.segment_chunks, self.history_chunks, self.payload_bytes
+        )
+    }
+}
+
+/// First inconsistency found (fsck stops at the first error so the exit
+/// status is unambiguous).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FsckError {
+    Store(StoreError),
+    /// Payload missing / corrupt / hash-mismatched for one chunk.
+    Chunk {
+        partition: i64,
+        kind: String,
+        chunk_id: i64,
+        error: ChunkError,
+    },
+    /// Decoded row count disagrees with the manifest row-index range.
+    RowCountMismatch {
+        partition: i64,
+        kind: String,
+        chunk_id: i64,
+        manifest_rows: i64,
+        decoded_rows: i64,
+    },
+    /// Segment chunks do not tile the partition contiguously.
+    Discontinuity {
+        partition: i64,
+        expected_begin: i64,
+        got_begin: i64,
+    },
+}
+
+impl fmt::Display for FsckError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsckError::Store(e) => write!(f, "fsck: store error: {e}"),
+            FsckError::Chunk {
+                partition,
+                kind,
+                chunk_id,
+                error,
+            } => write!(f, "fsck: chunk {partition}/{kind}/{chunk_id}: {error}"),
+            FsckError::RowCountMismatch {
+                partition,
+                kind,
+                chunk_id,
+                manifest_rows,
+                decoded_rows,
+            } => write!(
+                f,
+                "fsck: chunk {partition}/{kind}/{chunk_id}: manifest claims {manifest_rows} rows, payload decodes to {decoded_rows}"
+            ),
+            FsckError::Discontinuity {
+                partition,
+                expected_begin,
+                got_begin,
+            } => write!(
+                f,
+                "fsck: partition {partition}: segment chain broken — expected next chunk to begin at row {expected_begin}, found {got_begin}"
+            ),
+        }
+    }
+}
+
+/// Verify every chunk under `base` (hash, decodability, row counts) and
+/// the per-partition continuity of the segment chain.
+pub fn fsck(store: &Arc<DynTableStore>, base: &str) -> Result<FsckReport, FsckError> {
+    let cold = ColdStore::new(store.clone(), base);
+    let metas = cold.manifest_scan().map_err(FsckError::Store)?;
+    let mut report = FsckReport::default();
+    let mut prev_segment: Option<(i64, i64)> = None; // (partition, end_row)
+
+    for meta in &metas {
+        let rows = cold.read_chunk(meta).map_err(|error| FsckError::Chunk {
+            partition: meta.partition,
+            kind: meta.kind.clone(),
+            chunk_id: meta.chunk_id,
+            error,
+        })?;
+        let manifest_rows = meta.end_row - meta.begin_row;
+        if rows.len() as i64 != manifest_rows {
+            return Err(FsckError::RowCountMismatch {
+                partition: meta.partition,
+                kind: meta.kind.clone(),
+                chunk_id: meta.chunk_id,
+                manifest_rows,
+                decoded_rows: rows.len() as i64,
+            });
+        }
+        report.chunks += 1;
+        report.payload_bytes += meta.bytes as u64;
+        match meta.kind.as_str() {
+            KIND_SEGMENT => {
+                // Manifest scan is key-ordered (partition, kind, chunk_id)
+                // and segment chunk_id == begin_row, so each partition's
+                // segments arrive in begin order: the chain is continuous
+                // iff each begins where the previous ended.
+                if let Some((p, end)) = prev_segment {
+                    if p == meta.partition && meta.begin_row != end {
+                        return Err(FsckError::Discontinuity {
+                            partition: meta.partition,
+                            expected_begin: end,
+                            got_begin: meta.begin_row,
+                        });
+                    }
+                }
+                prev_segment = Some((meta.partition, meta.end_row));
+                report.segment_chunks += 1;
+            }
+            KIND_HISTORY => report.history_chunks += 1,
+            _ => {}
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::input_name_table;
+    use crate::row;
+    use crate::rows::RowsetBuilder;
+    use crate::storage::WriteAccounting;
+
+    fn chunked_store(ranges: &[(i64, i64)]) -> (Arc<DynTableStore>, Arc<ColdStore>) {
+        let store = DynTableStore::new(WriteAccounting::new());
+        let cold = ColdStore::new(store.clone(), "//sys/cold/f");
+        cold.ensure_tables(None).unwrap();
+        for &(begin, end) in ranges {
+            let mut b = RowsetBuilder::new(input_name_table());
+            for i in begin..end {
+                b.push(row![format!("r{i}"), i]);
+            }
+            let mut txn = store.begin();
+            cold.compact_into(&mut txn, 0, KIND_SEGMENT, begin, begin, &b.build(), Some(1), None)
+                .unwrap();
+            txn.commit().unwrap();
+        }
+        (store, cold)
+    }
+
+    #[test]
+    fn clean_chain_passes() {
+        let (store, _cold) = chunked_store(&[(0, 4), (4, 9), (9, 10)]);
+        let report = fsck(&store, "//sys/cold/f").unwrap();
+        assert_eq!(report.chunks, 3);
+        assert_eq!(report.segment_chunks, 3);
+        assert!(report.payload_bytes > 0);
+    }
+
+    #[test]
+    fn gap_in_chain_is_a_discontinuity() {
+        let (store, _cold) = chunked_store(&[(0, 4), (6, 9)]);
+        assert_eq!(
+            fsck(&store, "//sys/cold/f"),
+            Err(FsckError::Discontinuity {
+                partition: 0,
+                expected_begin: 4,
+                got_begin: 6,
+            })
+        );
+    }
+
+    #[test]
+    fn corrupted_payload_is_detected() {
+        use crate::coldtier::store::hex_encode;
+        let (store, cold) = chunked_store(&[(0, 4)]);
+        let mut txn = store.begin();
+        txn.write(
+            &cold.payload_table(),
+            row![0i64, KIND_SEGMENT, 0i64, hex_encode(b"not a row batch")],
+        )
+        .unwrap();
+        txn.commit().unwrap();
+        assert!(matches!(
+            fsck(&store, "//sys/cold/f"),
+            Err(FsckError::Chunk { .. })
+        ));
+    }
+}

@@ -1,0 +1,36 @@
+//! The cold tier: compacted history + unified backfill (DESIGN.md §3.7).
+//!
+//! The hot path's low-write-amplification story deletes everything it no
+//! longer needs: mappers trim consumed ordered-table segments, windowed
+//! reducers delete fired-window state. That makes any *new* consumer — a
+//! reprocessing job, a reshard bootstrap whose exporter died, a stage
+//! added to a running topology — re-ingest the source from scratch. The
+//! cold tier closes that gap with three pieces:
+//!
+//! * [`store`] — **compact-on-trim**: the bytes a trim or fired-window GC
+//!   is about to delete are first compacted into an immutable, columnar
+//!   ([`crate::rows::RowBatch`]-encoded) chunk with a manifest row (kind,
+//!   row-index range, event-time range, key range, content hash, size),
+//!   written *inside the same exactly-once transaction* that performs the
+//!   trim/fire and accounted under
+//!   [`crate::storage::WriteCategory::ColdTier`].
+//! * [`reader`] — **unified backfill**:
+//!   [`crate::coordinator::InputSpec::BoundedRange`] drains the historical
+//!   range from cold chunks (per-chunk checkpoints, hash-verified reads)
+//!   and cuts over seamlessly to live tailing at a fenced row index.
+//! * [`bootstrap`] + [`fsck`] — rebuild a windowed stage's fired marker
+//!   from history chunks when the migration handoff is empty, and verify
+//!   the whole tier offline (`yt-stream fsck`).
+
+pub mod bootstrap;
+pub mod fsck;
+pub mod reader;
+pub mod store;
+
+pub use bootstrap::ColdWindowBootstrap;
+pub use fsck::{fsck, FsckError, FsckReport};
+pub use reader::{ColdInput, ColdReader};
+pub use store::{
+    content_hash, decode_manifest_row, hex_decode, hex_encode, ChunkError, ChunkMeta, ColdStore,
+    ColdTierConfig, KIND_HISTORY, KIND_SEGMENT,
+};

@@ -1,0 +1,533 @@
+//! Chunk compaction: trimmed segments and fired-window history become
+//! immutable, columnar cold chunks.
+//!
+//! A chunk is a [`RowBatch`]-encoded blob plus a manifest row describing
+//! it (kind, row-index range, event-time range, key range, content hash,
+//! encoded size). Both rows are written **inside the caller's
+//! transaction** — the same CAS that advances mapper trim state or the
+//! reducer's fired-window marker — so a chunk becomes visible if and only
+//! if the state advance that produced it commits. Twins lose the CAS race
+//! and their chunk writes abort with the rest of the transaction; reruns
+//! recompute byte-identical chunks (compaction is a pure function of the
+//! segment) and skip the write when the manifest row already exists.
+//!
+//! The dyntable cell model is UTF-8 (`ByteStr`), so the binary chunk
+//! payload is **hex-encoded** into its payload row. This doubles the
+//! journaled `ColdTier` bytes relative to the raw encoding — an honest
+//! cost of keeping chunk writes fully transactional in this store; the
+//! manifest `bytes` column records the raw encoded length, which is what
+//! a backfill read actually moves.
+
+use std::sync::Arc;
+
+use crate::dyntable::store::StoreError;
+use crate::dyntable::{DynTableStore, Transaction, TxnError};
+use crate::row;
+use crate::rows::{
+    ColumnSchema, ColumnType, RowBatch, TableSchema, UnversionedRow, UnversionedRowset, Value,
+};
+use crate::storage::WriteCategory;
+
+/// Chunk kind for trimmed ordered-table segments (mapper trim path).
+pub const KIND_SEGMENT: &str = "segment";
+/// Chunk kind for fired-window history (windowed-reducer GC path).
+pub const KIND_HISTORY: &str = "history";
+
+/// Cold-tier configuration carried on
+/// [`crate::coordinator::ProcessorConfig`]. Presence turns compact-on-trim
+/// on; `base` roots the manifest and payload tables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColdTierConfig {
+    /// Table-path root: manifest at `{base}/manifest`, payloads at
+    /// `{base}/chunks`.
+    pub base: String,
+}
+
+impl Default for ColdTierConfig {
+    fn default() -> Self {
+        ColdTierConfig {
+            base: "//sys/cold".to_string(),
+        }
+    }
+}
+
+/// One manifest row, decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkMeta {
+    pub partition: i64,
+    pub kind: String,
+    /// Segment chunks: the begin row index (deterministic identity —
+    /// continuity means `next.begin_row == prev.end_row`). History
+    /// chunks: the fire watermark, so `max(chunk_id)` over history chunks
+    /// is the last fired watermark — what bootstrap-from-cold restores.
+    pub chunk_id: i64,
+    pub begin_row: i64,
+    pub end_row: i64,
+    pub min_ts: i64,
+    pub max_ts: i64,
+    pub key_min: String,
+    pub key_max: String,
+    /// FNV-1a 64 over the raw encoded payload, `{:016x}`.
+    pub hash: String,
+    /// Raw (pre-hex) encoded payload length.
+    pub bytes: i64,
+}
+
+/// Why a chunk read failed (reader + fsck).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChunkError {
+    Store(StoreError),
+    MissingPayload,
+    BadHex,
+    HashMismatch { want: String, got: String },
+    Decode(String),
+}
+
+impl std::fmt::Display for ChunkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChunkError::Store(e) => write!(f, "store error: {e}"),
+            ChunkError::MissingPayload => write!(f, "manifest row has no payload row"),
+            ChunkError::BadHex => write!(f, "payload is not valid hex"),
+            ChunkError::HashMismatch { want, got } => {
+                write!(f, "content hash mismatch: manifest {want}, payload {got}")
+            }
+            ChunkError::Decode(e) => write!(f, "chunk decode failed: {e}"),
+        }
+    }
+}
+
+/// FNV-1a 64 content hash — chunk identity is a pure function of its
+/// encoded bytes, so reruns and fsck recompute the same value.
+pub fn content_hash(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+/// Lowercase hex encoding (payload cells are UTF-8 `ByteStr`s).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0x0f) as usize] as char);
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; `None` on odd length or non-hex bytes.
+pub fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return None;
+    }
+    let nib = |c: u8| -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    };
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push(nib(pair[0])? << 4 | nib(pair[1])?);
+    }
+    Some(out)
+}
+
+/// The cold tier over one dyntable store: a manifest table plus a payload
+/// table, both accounted under [`WriteCategory::ColdTier`].
+#[derive(Debug)]
+pub struct ColdStore {
+    store: Arc<DynTableStore>,
+    base: String,
+}
+
+fn manifest_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("partition", ColumnType::Int64),
+        ColumnSchema::key("kind", ColumnType::Str),
+        ColumnSchema::key("chunk_id", ColumnType::Int64),
+        ColumnSchema::value("begin_row", ColumnType::Int64),
+        ColumnSchema::value("end_row", ColumnType::Int64),
+        ColumnSchema::value("min_ts", ColumnType::Int64),
+        ColumnSchema::value("max_ts", ColumnType::Int64),
+        ColumnSchema::value("key_min", ColumnType::Str),
+        ColumnSchema::value("key_max", ColumnType::Str),
+        ColumnSchema::value("hash", ColumnType::Str),
+        ColumnSchema::value("bytes", ColumnType::Int64),
+    ])
+}
+
+fn payload_schema() -> TableSchema {
+    TableSchema::new(vec![
+        ColumnSchema::key("partition", ColumnType::Int64),
+        ColumnSchema::key("kind", ColumnType::Str),
+        ColumnSchema::key("chunk_id", ColumnType::Int64),
+        ColumnSchema::value("payload", ColumnType::Str),
+    ])
+}
+
+impl ColdStore {
+    pub fn new(store: Arc<DynTableStore>, base: &str) -> Arc<ColdStore> {
+        Arc::new(ColdStore {
+            store,
+            base: base.to_string(),
+        })
+    }
+
+    pub fn from_config(store: Arc<DynTableStore>, cfg: &ColdTierConfig) -> Arc<ColdStore> {
+        ColdStore::new(store, &cfg.base)
+    }
+
+    pub fn base(&self) -> &str {
+        &self.base
+    }
+
+    pub fn store(&self) -> &Arc<DynTableStore> {
+        &self.store
+    }
+
+    pub fn manifest_table(&self) -> String {
+        format!("{}/manifest", self.base)
+    }
+
+    pub fn payload_table(&self) -> String {
+        format!("{}/chunks", self.base)
+    }
+
+    /// Create both tables (idempotent).
+    pub fn ensure_tables(&self, scope: Option<String>) -> Result<(), StoreError> {
+        for (path, schema) in [
+            (self.manifest_table(), manifest_schema()),
+            (self.payload_table(), payload_schema()),
+        ] {
+            match self.store.create_table_scoped(
+                &path,
+                schema,
+                WriteCategory::ColdTier,
+                scope.clone(),
+            ) {
+                Ok(_) | Err(StoreError::AlreadyExists(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Compact `rowset` into one immutable chunk inside `txn`.
+    ///
+    /// `begin_row` is the absolute row index of the first row for segment
+    /// chunks (0 for history chunks, where `end_row` is just the row
+    /// count). `ts_col`/`key_col` select the columns whose min/max become
+    /// the manifest's event-time and key ranges; when absent the range is
+    /// recorded empty (`min_ts=0, max_ts=-1` / empty strings).
+    ///
+    /// Idempotent: if the manifest row already exists (a rerun after a
+    /// commit that died before its side effects were observed, or a twin
+    /// that lost the race later), the existing meta is returned and
+    /// nothing is rewritten — the lookup still joins the transaction's
+    /// read set, so a concurrent writer conflicts the commit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compact_into(
+        &self,
+        txn: &mut Transaction,
+        partition: usize,
+        kind: &str,
+        chunk_id: i64,
+        begin_row: i64,
+        rowset: &UnversionedRowset,
+        ts_col: Option<usize>,
+        key_col: Option<usize>,
+    ) -> Result<ChunkMeta, TxnError> {
+        let manifest = self.manifest_table();
+        let key = [
+            Value::Int64(partition as i64),
+            Value::from(kind),
+            Value::Int64(chunk_id),
+        ];
+        if let Some(existing) = txn.lookup(&manifest, &key)? {
+            if let Some(meta) = decode_manifest_row(&existing) {
+                return Ok(meta);
+            }
+        }
+
+        let encoded = RowBatch::from_rowset(rowset).encode();
+        let hash = format!("{:016x}", content_hash(&encoded));
+        let payload_hex = hex_encode(&encoded);
+
+        let (mut min_ts, mut max_ts) = (0i64, -1i64);
+        if let Some(c) = ts_col {
+            for row in rowset.rows() {
+                if let Some(ts) = row.get(c).and_then(Value::as_i64) {
+                    if max_ts < min_ts {
+                        min_ts = ts;
+                        max_ts = ts;
+                    } else {
+                        min_ts = min_ts.min(ts);
+                        max_ts = max_ts.max(ts);
+                    }
+                }
+            }
+        }
+        let (mut key_min, mut key_max) = (String::new(), String::new());
+        if let Some(c) = key_col {
+            for row in rowset.rows() {
+                if let Some(k) = row.get(c).and_then(Value::as_str) {
+                    if key_min.is_empty() || k < key_min.as_str() {
+                        key_min = k.to_string();
+                    }
+                    if k > key_max.as_str() {
+                        key_max = k.to_string();
+                    }
+                }
+            }
+        }
+
+        let meta = ChunkMeta {
+            partition: partition as i64,
+            kind: kind.to_string(),
+            chunk_id,
+            begin_row,
+            end_row: begin_row + rowset.rows().len() as i64,
+            min_ts,
+            max_ts,
+            key_min,
+            key_max,
+            hash,
+            bytes: encoded.len() as i64,
+        };
+        txn.write(
+            &manifest,
+            row![
+                meta.partition,
+                meta.kind.clone(),
+                meta.chunk_id,
+                meta.begin_row,
+                meta.end_row,
+                meta.min_ts,
+                meta.max_ts,
+                meta.key_min.clone(),
+                meta.key_max.clone(),
+                meta.hash.clone(),
+                meta.bytes
+            ],
+        )?;
+        txn.write(
+            &self.payload_table(),
+            row![meta.partition, meta.kind.clone(), meta.chunk_id, payload_hex],
+        )?;
+        Ok(meta)
+    }
+
+    /// Every manifest row, key order (partition, kind, chunk_id).
+    pub fn manifest_scan(&self) -> Result<Vec<ChunkMeta>, StoreError> {
+        let rows = self.store.scan(&self.manifest_table())?;
+        Ok(rows.iter().filter_map(decode_manifest_row).collect())
+    }
+
+    /// Segment chunks of one partition, ascending chunk id.
+    pub fn segment_chunks(&self, partition: usize) -> Result<Vec<ChunkMeta>, StoreError> {
+        Ok(self
+            .manifest_scan()?
+            .into_iter()
+            .filter(|m| m.partition == partition as i64 && m.kind == KIND_SEGMENT)
+            .collect())
+    }
+
+    /// History chunks across all partitions, ascending (partition, id).
+    pub fn history_chunks(&self) -> Result<Vec<ChunkMeta>, StoreError> {
+        Ok(self
+            .manifest_scan()?
+            .into_iter()
+            .filter(|m| m.kind == KIND_HISTORY)
+            .collect())
+    }
+
+    /// Fetch + verify + decode one chunk back into rows.
+    pub fn read_chunk(&self, meta: &ChunkMeta) -> Result<UnversionedRowset, ChunkError> {
+        let key = [
+            Value::Int64(meta.partition),
+            Value::from(meta.kind.as_str()),
+            Value::Int64(meta.chunk_id),
+        ];
+        let row = self
+            .store
+            .lookup(&self.payload_table(), &key)
+            .map_err(ChunkError::Store)?
+            .ok_or(ChunkError::MissingPayload)?;
+        let hex = row
+            .get(3)
+            .and_then(Value::as_str)
+            .ok_or(ChunkError::MissingPayload)?;
+        let raw = hex_decode(hex).ok_or(ChunkError::BadHex)?;
+        let got = format!("{:016x}", content_hash(&raw));
+        if got != meta.hash {
+            return Err(ChunkError::HashMismatch {
+                want: meta.hash.clone(),
+                got,
+            });
+        }
+        let shared: Arc<[u8]> = raw.into();
+        let batch = RowBatch::decode_shared(&shared).map_err(|e| ChunkError::Decode(e.to_string()))?;
+        Ok(batch.to_rowset())
+    }
+}
+
+/// Decode a manifest row; `None` on shape mismatch.
+pub fn decode_manifest_row(row: &UnversionedRow) -> Option<ChunkMeta> {
+    Some(ChunkMeta {
+        partition: row.get(0)?.as_i64()?,
+        kind: row.get(1)?.as_str()?.to_string(),
+        chunk_id: row.get(2)?.as_i64()?,
+        begin_row: row.get(3)?.as_i64()?,
+        end_row: row.get(4)?.as_i64()?,
+        min_ts: row.get(5)?.as_i64()?,
+        max_ts: row.get(6)?.as_i64()?,
+        key_min: row.get(7)?.as_str()?.to_string(),
+        key_max: row.get(8)?.as_str()?.to_string(),
+        hash: row.get(9)?.as_str()?.to_string(),
+        bytes: row.get(10)?.as_i64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::input_name_table;
+    use crate::rows::RowsetBuilder;
+    use crate::storage::WriteAccounting;
+
+    fn test_store() -> Arc<DynTableStore> {
+        DynTableStore::new(WriteAccounting::new())
+    }
+
+    fn sample_rowset(n: usize, salt: i64) -> UnversionedRowset {
+        let mut b = RowsetBuilder::new(input_name_table());
+        for i in 0..n {
+            b.push(row![
+                format!("line {} salt {}", i, salt),
+                1_000 + salt + i as i64
+            ]);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let hex = hex_encode(&data);
+        assert_eq!(hex.len(), 512);
+        assert_eq!(hex_decode(&hex).unwrap(), data);
+        assert!(hex_decode("0g").is_none());
+        assert!(hex_decode("abc").is_none());
+    }
+
+    #[test]
+    fn content_hash_is_stable() {
+        // Pinned FNV-1a 64 vectors — the manifest hash must never drift
+        // across refactors or old chunks become unreadable.
+        assert_eq!(content_hash(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(content_hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(content_hash(b"ab"), content_hash(b"ba"));
+    }
+
+    #[test]
+    fn compact_roundtrip_and_ranges() {
+        let store = test_store();
+        let cold = ColdStore::new(store.clone(), "//sys/cold/t");
+        cold.ensure_tables(None).unwrap();
+        let rs = sample_rowset(8, 7);
+
+        let mut txn = store.begin();
+        let meta = cold
+            .compact_into(&mut txn, 2, KIND_SEGMENT, 100, 100, &rs, Some(1), None)
+            .unwrap();
+        txn.commit().unwrap();
+
+        assert_eq!(meta.begin_row, 100);
+        assert_eq!(meta.end_row, 108);
+        assert_eq!(meta.min_ts, 1_007);
+        assert_eq!(meta.max_ts, 1_014);
+        assert_eq!(meta.hash.len(), 16);
+
+        let metas = cold.segment_chunks(2).unwrap();
+        assert_eq!(metas, vec![meta.clone()]);
+        let back = cold.read_chunk(&meta).unwrap();
+        assert_eq!(back.rows(), rs.rows());
+    }
+
+    #[test]
+    fn compaction_is_deterministic_and_idempotent() {
+        // Same trimmed segment ⇒ byte-identical chunk + hash, across
+        // independent stores; a rerun over an existing manifest row is a
+        // no-op that returns the committed meta.
+        let rs = sample_rowset(16, 3);
+        let mut metas = Vec::new();
+        for _ in 0..2 {
+            let store = test_store();
+            let cold = ColdStore::new(store.clone(), "//sys/cold/d");
+            cold.ensure_tables(None).unwrap();
+            let mut txn = store.begin();
+            let meta = cold
+                .compact_into(&mut txn, 0, KIND_SEGMENT, 0, 0, &rs, Some(1), None)
+                .unwrap();
+            txn.commit().unwrap();
+            // Rerun: same identity, nothing rewritten.
+            let mut txn = store.begin();
+            let again = cold
+                .compact_into(&mut txn, 0, KIND_SEGMENT, 0, 0, &rs, Some(1), None)
+                .unwrap();
+            txn.commit().unwrap();
+            assert_eq!(again, meta);
+            metas.push(meta);
+        }
+        assert_eq!(metas[0], metas[1]);
+    }
+
+    #[test]
+    fn read_chunk_detects_corruption() {
+        let store = test_store();
+        let cold = ColdStore::new(store.clone(), "//sys/cold/c");
+        cold.ensure_tables(None).unwrap();
+        let rs = sample_rowset(4, 1);
+        let mut txn = store.begin();
+        let meta = cold
+            .compact_into(&mut txn, 0, KIND_SEGMENT, 0, 0, &rs, None, None)
+            .unwrap();
+        txn.commit().unwrap();
+
+        // Flip one payload byte.
+        let mut txn = store.begin();
+        let corrupt = hex_encode(&{
+            let row = store
+                .lookup(&cold.payload_table(), &[
+                    Value::Int64(0),
+                    Value::from(KIND_SEGMENT),
+                    Value::Int64(0),
+                ])
+                .unwrap()
+                .unwrap();
+            let mut raw = hex_decode(row.get(3).unwrap().as_str().unwrap()).unwrap();
+            raw[0] ^= 0xff;
+            raw
+        });
+        txn.write(
+            &cold.payload_table(),
+            row![0i64, KIND_SEGMENT, 0i64, corrupt],
+        )
+        .unwrap();
+        txn.commit().unwrap();
+
+        assert!(matches!(
+            cold.read_chunk(&meta),
+            Err(ChunkError::HashMismatch { .. })
+        ));
+    }
+}

@@ -5,6 +5,7 @@
 //! examples ship as `.yson` text; every field has a sane default so tests
 //! can build configs programmatically.
 
+use crate::coldtier::ColdTierConfig;
 use crate::consistency::Consistency;
 use crate::util::yson::{Yson, YsonError};
 
@@ -133,6 +134,13 @@ pub struct ProcessorConfig {
     /// overtaken. Wired by [`crate::dataflow::Topology::launch`]; `None`
     /// for source stages.
     pub upstream_watermark_table: Option<String>,
+    /// Cold tier ([`crate::coldtier`]; `None` = disabled). When set,
+    /// mapper trims and windowed fired-history GC compact the bytes they
+    /// delete into immutable cold chunks under `cold_tier.base`, inside
+    /// the same exactly-once transaction — accounted as
+    /// [`crate::storage::WriteCategory::ColdTier`]. Requires an input
+    /// whose reader can re-read by absolute row index (ordered tables).
+    pub cold_tier: Option<ColdTierConfig>,
 }
 
 impl Default for ProcessorConfig {
@@ -165,6 +173,7 @@ impl Default for ProcessorConfig {
             scope_label: None,
             event_time: None,
             upstream_watermark_table: None,
+            cold_tier: None,
         }
     }
 }
@@ -237,6 +246,11 @@ impl ProcessorConfig {
                 .get_opt("upstream_watermark_table")
                 .and_then(|v| v.as_str().ok())
                 .map(str::to_string),
+            cold_tier: y.get_opt("cold_tier").map(|cy| ColdTierConfig {
+                base: cy
+                    .get_str_or("base", &ColdTierConfig::default().base)
+                    .to_string(),
+            }),
         })
     }
 
@@ -339,6 +353,21 @@ mod tests {
         assert!(d.tolerates_upstream_drift);
         let e = ProcessorConfig::parse("{}").unwrap();
         assert_eq!(e.consistency, Consistency::ExactlyOnce, "default tier");
+    }
+
+    #[test]
+    fn parse_cold_tier_section() {
+        let c = ProcessorConfig::parse("{cold_tier = {base = \"//sys/cold/app\"}}").unwrap();
+        assert_eq!(
+            c.cold_tier,
+            Some(ColdTierConfig {
+                base: "//sys/cold/app".into()
+            })
+        );
+        let d = ProcessorConfig::parse("{cold_tier = {}}").unwrap();
+        assert_eq!(d.cold_tier, Some(ColdTierConfig::default()));
+        let e = ProcessorConfig::parse("{}").unwrap();
+        assert_eq!(e.cold_tier, None, "disabled by default");
     }
 
     #[test]

@@ -1198,6 +1198,51 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
     if txn.write(state_table, local.to_row(sh.index)).is_err() {
         return;
     }
+    // Compact-on-trim ([`crate::coldtier`]): the segment this commit will
+    // make trimmable — `[persisted.input_unread_row_index,
+    // local.input_unread_row_index)` — is re-read and compacted into one
+    // immutable cold chunk *inside the trim CAS*. Commit semantics do all
+    // the correctness work: a split-brain twin's chunk aborts with its
+    // losing CAS; a crash after commit but before the `trim` call below
+    // re-trims later without re-compacting (the manifest row exists, and
+    // `compact_into` is idempotent on it); the chunk chain is continuous
+    // by induction because each chunk covers exactly one committed state
+    // advance (chunk id = begin row index).
+    if let Some(cold_cfg) = &sh.cfg.cold_tier {
+        if local.input_unread_row_index > persisted.input_unread_row_index {
+            let begin = persisted.input_unread_row_index;
+            let end = local.input_unread_row_index;
+            match reader.read(begin, end, &persisted.continuation_token) {
+                Ok(batch) if batch.rowset.len() as i64 == end - begin => {
+                    let cold =
+                        crate::coldtier::ColdStore::from_config(sh.client.store.clone(), cold_cfg);
+                    let ts_col = crate::queue::INPUT_COL_WRITE_TS;
+                    if cold
+                        .compact_into(
+                            &mut txn,
+                            sh.index,
+                            crate::coldtier::KIND_SEGMENT,
+                            begin,
+                            begin,
+                            &batch.rowset,
+                            Some(ts_col),
+                            None,
+                        )
+                        .is_err()
+                    {
+                        return; // store blip: keep the segment, retry next period
+                    }
+                }
+                // Short or failed re-read (e.g. a twin already trimmed the
+                // segment after winning the CAS we are about to lose):
+                // don't commit a hole into the chunk chain — the CAS check
+                // has the committed row in its read set, so if we *are*
+                // the winner this is a transient store fault and the next
+                // period retries with the segment still retained.
+                _ => return,
+            }
+        }
+    }
     match txn.commit() {
         Ok(_) => {
             {

@@ -27,6 +27,7 @@ pub mod reducer;
 pub mod state;
 pub mod window;
 
+pub use crate::coldtier::ColdTierConfig;
 pub use config::{ComputeMode, EventTimeConfig, ProcessorConfig, SpillConfig};
 pub use processor::{ClusterEnv, InputSpec, StreamingProcessor};
 pub use state::{MapperState, ReducerState};

@@ -37,6 +37,11 @@ pub enum InputSpec {
     /// §6 multi-partition mappers: several source partitions per mapper,
     /// made deterministic by the order log (see [`crate::multipart`]).
     Grouped(Arc<crate::multipart::GroupedInput>),
+    /// Unified backfill ([`crate::coldtier`]): drain a bounded historical
+    /// range from cold chunks, then cut over to live tailing at the
+    /// per-partition fence. Same mapper loop, same checkpoints — the
+    /// reader is the only thing that knows history from head.
+    BoundedRange(Arc<crate::coldtier::ColdInput>),
 }
 
 impl InputSpec {
@@ -45,6 +50,7 @@ impl InputSpec {
             InputSpec::Ordered(t) => t.tablet_count(),
             InputSpec::LogBroker(t) => t.partition_count(),
             InputSpec::Grouped(g) => g.mapper_count(),
+            InputSpec::BoundedRange(c) => c.partition_count(),
         }
     }
 
@@ -53,6 +59,7 @@ impl InputSpec {
             InputSpec::Ordered(t) => t.name_table(),
             InputSpec::LogBroker(t) => t.name_table(),
             InputSpec::Grouped(g) => g.source.name_table(),
+            InputSpec::BoundedRange(c) => c.name_table(),
         }
     }
 
@@ -61,6 +68,7 @@ impl InputSpec {
             InputSpec::Ordered(t) => Box::new(t.reader(partition)),
             InputSpec::LogBroker(t) => Box::new(t.reader(partition)),
             InputSpec::Grouped(g) => Box::new(g.reader(partition)),
+            InputSpec::BoundedRange(c) => Box::new(c.reader(partition)),
         }
     }
 
@@ -70,6 +78,7 @@ impl InputSpec {
             InputSpec::Ordered(t) => t.retained_rows(),
             InputSpec::LogBroker(t) => t.retained_rows(),
             InputSpec::Grouped(g) => g.source.retained_rows(),
+            InputSpec::BoundedRange(c) => c.retained_rows(),
         }
     }
 }
@@ -114,6 +123,8 @@ impl ClusterEnv {
 pub enum LaunchError {
     #[error("config: mapper_count {cfg} != input partition count {input}")]
     PartitionMismatch { cfg: usize, input: usize },
+    #[error("backfill input: {fences} cutover fences for {partitions} partitions")]
+    FenceMismatch { fences: usize, partitions: usize },
     #[error("state table setup failed: {0}")]
     Setup(String),
 }
@@ -171,6 +182,16 @@ impl StreamingProcessor {
                 cfg: cfg.mapper_count,
                 input: input.partition_count(),
             });
+        }
+        if let InputSpec::BoundedRange(c) = &input {
+            // One cutover fence per partition, or the backfill/live split
+            // is ill-defined for the fenceless partitions.
+            if c.fences().len() != c.partition_count() {
+                return Err(LaunchError::FenceMismatch {
+                    fences: c.fences().len(),
+                    partitions: c.partition_count(),
+                });
+            }
         }
         let processor_guid = Guid::generate();
         setup_state_tables(&cfg, &env).map_err(LaunchError::Setup)?;
@@ -572,6 +593,13 @@ fn setup_state_tables(cfg: &ProcessorConfig, env: &ClusterEnv) -> Result<(), Str
             &cfg.mapper_state_table,
             cfg.scope_label.clone(),
         )?;
+    }
+    if let Some(cold) = &cfg.cold_tier {
+        // Compact-on-trim writes manifest + payload rows inside the trim
+        // CAS; the tables must exist before the first mapper commit.
+        crate::coldtier::ColdStore::from_config(env.store.clone(), cold)
+            .ensure_tables(cfg.scope_label.clone())
+            .map_err(|e| e.to_string())?;
     }
 
     let mut txn = env.store.begin();

@@ -144,6 +144,21 @@ pub enum TopologyError {
         partitions: usize,
     },
     #[error(
+        "stage '{stage}': backfill source has {fences} cutover fences for {partitions} \
+         partitions — the historical/live split is ill-defined"
+    )]
+    BackfillFenceWiring {
+        stage: String,
+        fences: usize,
+        partitions: usize,
+    },
+    #[error(
+        "stage '{stage}': cold_tier.base '{base}' is the same cold tier its backfill source \
+         reads from — compact-on-trim would re-compact backfilled chunks over the existing \
+         chain (discontinuous manifest). Point cold_tier at a different base or disable it."
+    )]
+    BackfillCompactsItself { stage: String, base: String },
+    #[error(
         "stage '{stage}': mapper_count {mappers} != upstream stage '{upstream}' \
          reducer_count {upstream_reducers}"
     )]
@@ -264,6 +279,28 @@ impl Topology {
                     upstream: self.stages[k - 1].name.clone(),
                     upstream_reducers: upstream_partitions,
                 });
+            }
+            // Unified-backfill wiring: the cutover fences must tile every
+            // source partition, and the consuming stage must not compact
+            // its own backfill input back into the tier it reads.
+            if k == 0 {
+                if let InputSpec::BoundedRange(c) = source {
+                    if c.fences().len() != c.partition_count() {
+                        return Err(TopologyError::BackfillFenceWiring {
+                            stage: spec.name.clone(),
+                            fences: c.fences().len(),
+                            partitions: c.partition_count(),
+                        });
+                    }
+                    if let Some(cold) = &spec.config.cold_tier {
+                        if cold.base == c.cold().base() {
+                            return Err(TopologyError::BackfillCompactsItself {
+                                stage: spec.name.clone(),
+                                base: cold.base.clone(),
+                            });
+                        }
+                    }
+                }
             }
             if spec.input_columns.names() != upstream_columns.names() {
                 return Err(TopologyError::SchemaMismatch {

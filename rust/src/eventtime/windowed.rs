@@ -150,6 +150,12 @@ pub fn window_state_schema() -> TableSchema {
     ])
 }
 
+/// Name table of fired-history cold chunks: the window-state rows exactly
+/// as the firing pass deleted them.
+pub fn history_name_table() -> Arc<crate::rows::NameTable> {
+    crate::rows::NameTable::new(&["window_start", "win_key", "acc"])
+}
+
 /// Reserved `window_start` of the per-reducer fired-watermark marker rows.
 pub const MARKER_WINDOW: i64 = i64::MIN;
 
@@ -187,6 +193,23 @@ pub(crate) fn lookup_fired_marker(
         .and_then(|r| r.get(2).and_then(Value::as_str).map(str::to_string))
         .and_then(|s| Yson::parse(&s).ok())
         .and_then(|y| y.as_i64().ok()))
+}
+
+/// Install reducer `index`'s fired-watermark marker if `wm` advances it —
+/// the bootstrap-from-cold path ([`crate::coldtier::ColdWindowBootstrap`])
+/// restoring "these windows already fired" into a fresh epoch whose
+/// migration handoff arrived empty.
+pub fn restore_fired_marker(
+    txn: &mut Transaction,
+    table: &str,
+    index: usize,
+    wm: i64,
+) -> Result<(), TxnError> {
+    let existing = lookup_fired_marker(txn, table, index)?;
+    if existing < Some(wm) {
+        txn.write(table, fired_marker_row(index, wm))?;
+    }
+    Ok(())
 }
 
 /// Create a window-state table (idempotent).
@@ -229,6 +252,12 @@ pub struct WindowedDeps {
     /// most the unanchored window. Exactly-once (the default) persists
     /// every batch — that code path is unchanged from the seed.
     pub consistency: Consistency,
+    /// Cold tier (when enabled): each firing pass compacts the fired
+    /// `(window, key, acc)` triples it is about to delete into one
+    /// history chunk, written in the same transaction — the GC'd history
+    /// becomes durable instead of gone, and the chunk id records the fire
+    /// watermark for bootstrap-from-cold.
+    pub cold: Option<Arc<crate::coldtier::ColdStore>>,
 }
 
 /// `CreateReducer` for a windowed final stage: every spawned instance
@@ -397,6 +426,7 @@ impl WindowedReducer {
         }
 
         let mut fired = 0u64;
+        let mut history: Vec<UnversionedRow> = Vec::new();
         for (w, key) in &candidates {
             let row_key = vec![Value::Int64(*w), Value::from(key.as_str())];
             // Read through the transaction: validates against twins and
@@ -412,10 +442,31 @@ impl WindowedReducer {
             self.deps
                 .fold
                 .emit(*w, self.deps.spec.window_end(*w), key, &acc, txn)?;
+            if self.deps.cold.is_some() {
+                history.push(row);
+            }
             txn.delete(&table, row_key)?;
             fired += 1;
         }
         if fired > 0 && wm > fired_wm {
+            // Compact-on-GC: the state rows this pass deletes ride the
+            // same transaction into a cold history chunk whose chunk id
+            // is the fire watermark (bootstrap-from-cold restores the
+            // fired marker as the max history chunk id). A split-brain
+            // loser's chunk aborts with the rest of its fires.
+            if let Some(cold) = &self.deps.cold {
+                let rowset = UnversionedRowset::new(history_name_table(), history);
+                cold.compact_into(
+                    txn,
+                    self.index,
+                    crate::coldtier::KIND_HISTORY,
+                    wm,
+                    0,
+                    &rowset,
+                    Some(0),
+                    Some(1),
+                )?;
+            }
             self.write_fired(txn, wm)?;
         }
         if fired > 0 {
@@ -851,6 +902,7 @@ mod tests {
             metrics: env.metrics.clone(),
             scope: None,
             consistency,
+            cold: None,
         });
         TestRig { env, deps }
     }
@@ -993,6 +1045,7 @@ mod tests {
             metrics: rig.deps.metrics.clone(),
             scope: None,
             consistency: rig.deps.consistency,
+            cold: None,
         });
         let spec0 = ReducerSpec {
             processor_guid: Guid::from_seed(1),

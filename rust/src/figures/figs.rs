@@ -61,9 +61,10 @@ pub fn run_figure(id: &str, opts: &FigureOpts) {
         "reshard" => table_reshard(opts),
         "window" => table_window(opts),
         "consistency" => table_consistency(opts),
+        "backfill" => table_backfill(opts),
         other => {
             eprintln!(
-                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window consistency"
+                "unknown figure '{other}'. available: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window consistency backfill"
             );
             std::process::exit(2);
         }
@@ -1017,6 +1018,148 @@ fn table_consistency(opts: &FigureOpts) {
              state_strictly_lower={state_strictly_lower} within_budget={within_budget} \
              (bounded divergence {} / allowance {allowance})",
             bounded.divergence
+        );
+        std::process::exit(1);
+    }
+}
+
+/// Cold-tier backfill figure (`figure backfill`): a day-N consumer drains
+/// a bounded historical range from cold chunks and cuts over to live
+/// tailing at a fenced row index, under kill + twin drills both
+/// mid-backfill and at the cutover fence. Gates:
+///
+/// * **(a)** the day-N output is byte-identical to a control consumer run
+///   live from day zero over the identical waves;
+/// * **(b)** backfilling from cold moves strictly fewer bytes (chunk reads
+///   + live tail + output writes) than re-ingesting the history from the
+///   source (re-append + mapper reads + output writes);
+/// * **(c)** cold-tier writes appear as a distinct `cold_tier` WA line and
+///   never inflate the exactly-once hot path — the backfill's `UserOutput`
+///   bytes equal the cold-free control's exactly.
+///
+/// Also demonstrates reshard-bootstrap-from-cold (an empty migration
+/// handoff restores the fired-window marker from cold history) and runs
+/// manifest `fsck` over the chunks the run produced. Exits non-zero on any
+/// violation, so `bench_smoke.sh` can gate on it.
+fn table_backfill(opts: &FigureOpts) {
+    use crate::coldtier::fsck;
+    use crate::reshard::plan::reducer_slot;
+    use crate::storage::WriteCategory;
+    use crate::workload::backfill::{run_backfill, BackfillCfg, BackfillDrillPoint};
+
+    println!("# table backfill: bounded-range backfill from cold chunks vs re-ingest from source");
+    let cfg = BackfillCfg {
+        seed: opts.seed,
+        ..BackfillCfg::default()
+    };
+    let last_partition = cfg.partitions - 1;
+    let out = run_backfill(&cfg, |processor, point| {
+        let sup = processor.supervisor().clone();
+        match point {
+            BackfillDrillPoint::MidBackfill => {
+                // Kill a mapper mid-chunk (its rerun re-reads at most one
+                // chunk) and twin a reducer (the twin loses CAS races).
+                sup.kill(Role::Mapper, 0);
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                sup.duplicate(Role::Reducer, reducer_slot(0, 0));
+            }
+            BackfillDrillPoint::AtCutover => {
+                // Twin a mapper right at the fence and kill a reducer —
+                // the cold→live seam must survive both.
+                sup.duplicate(Role::Mapper, last_partition);
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                sup.kill(Role::Reducer, reducer_slot(0, 1 % cfg.reducers));
+            }
+        }
+    });
+
+    println!(
+        "cold tier: fences={:?} segment_chunks={} history_chunks={} \
+         restored_fired_marker={:?} (verified={})",
+        out.fences,
+        out.segment_chunks,
+        out.history_chunks,
+        out.restored_fired_marker,
+        out.bootstrap_marker_verified,
+    );
+    println!("{}", WaReport::csv_header());
+    for r in [&out.report, &out.control_report] {
+        println!("{}", r.csv_row());
+    }
+    println!(
+        "bytes_moved,chunk_read,live_read,user_output,source_reappend,mapper_read,total"
+    );
+    println!(
+        "backfill_from_cold,{},{},{},0,0,{}",
+        out.chunk_bytes_read,
+        out.live_bytes_read,
+        out.backfill_user_output,
+        out.backfill_bytes_moved(),
+    );
+    println!(
+        "reingest_from_source,0,0,{},{},{},{}",
+        out.reingest_user_output,
+        out.reingest_source_bytes,
+        out.reingest_mapper_read,
+        out.reingest_bytes_moved(),
+    );
+
+    // fsck over the chunks this run produced: every hash verifies, every
+    // partition's segment chain is contiguous.
+    let fsck_ok = match fsck(&out.env.store, &cfg.cold_base) {
+        Ok(report) => {
+            println!("{report}");
+            true
+        }
+        Err(e) => {
+            println!("fsck FAILED: {e}");
+            false
+        }
+    };
+
+    // Gate (a): byte-identity under the drills.
+    let identical = out.backfill_rows == out.control_rows && out.backfill_rows == out.expected;
+    // Gate (b): strictly fewer bytes moved than re-ingesting.
+    let strictly_fewer = out.backfill_bytes_moved() < out.reingest_bytes_moved();
+    // Gate (c): distinct ColdTier line, hot path untouched.
+    let cold_bytes = out.report.snapshot.bytes_of(WriteCategory::ColdTier);
+    let control_cold_bytes = out.control_report.snapshot.bytes_of(WriteCategory::ColdTier);
+    let cold_distinct = cold_bytes > 0
+        && control_cold_bytes == 0
+        && format!("{}", out.report).contains("cold_tier");
+    let hot_path_untouched = out.backfill_user_output == out.reingest_user_output;
+    let bootstrap_ok = out.restored_fired_marker.is_some() && out.bootstrap_marker_verified;
+    let chunks_ok = out.segment_chunks >= cfg.partitions && out.history_chunks >= 1;
+
+    println!(
+        "byte-identity: drilled day-N backfill output == day-zero control output: {identical} \
+         ({} rows vs {} rows, late={})",
+        out.backfill_rows.len(),
+        out.control_rows.len(),
+        out.late_rows,
+    );
+    println!(
+        "summary: backfill moved {} bytes vs re-ingest {} (strictly fewer: {strictly_fewer}); \
+         cold_tier WA line = {cold_bytes} bytes (control: {control_cold_bytes}); \
+         UserOutput equal cold-on/cold-off: {hot_path_untouched}; \
+         bootstrap-from-cold marker restore: {bootstrap_ok}; fsck: {fsck_ok}",
+        out.backfill_bytes_moved(),
+        out.reingest_bytes_moved(),
+    );
+    if !(identical
+        && strictly_fewer
+        && cold_distinct
+        && hot_path_untouched
+        && bootstrap_ok
+        && chunks_ok
+        && fsck_ok
+        && out.late_rows == 0)
+    {
+        eprintln!(
+            "figure backfill: FAIL — identical={identical} strictly_fewer={strictly_fewer} \
+             cold_distinct={cold_distinct} hot_path_untouched={hot_path_untouched} \
+             bootstrap_ok={bootstrap_ok} chunks_ok={chunks_ok} fsck_ok={fsck_ok} late={}",
+            out.late_rows
         );
         std::process::exit(1);
     }

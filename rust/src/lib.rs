@@ -30,6 +30,7 @@
 //! | multi-stage chaining | [`dataflow`] |
 //! | elastic resharding | [`reshard`] |
 //! | event-time windowing | [`eventtime`] |
+//! | cold tier + backfill | [`coldtier`] |
 //! | compiled compute | [`runtime`], [`compute`] |
 //! | evaluation | [`workload`], [`baseline`], [`metrics`], [`figures`] |
 //! | future work (§6) | [`spill`], [`pipelined`] |
@@ -48,6 +49,7 @@ pub mod consistency;
 pub mod dataflow;
 pub mod reshard;
 pub mod eventtime;
+pub mod coldtier;
 pub mod runtime;
 pub mod compute;
 pub mod workload;

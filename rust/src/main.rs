@@ -2,11 +2,15 @@
 //!
 //! ```text
 //! yt-stream figure <id> [--seconds N] [--compute native|hlo] [--seed N] [--auto]
-//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window consistency
+//!     regenerate a paper figure/table: 5.1 5.2 5.3 5.4 5.5 wa scale spill chain reshard window consistency backfill
 //!     (--auto: hands-off `figure reshard` — the resident autoscale driver
 //!      performs the resizes, no manual reshard() calls)
 //! yt-stream run [--config path.yson] [--seconds N]
 //!     run the log-analytics streaming processor and print live stats
+//! yt-stream fsck [--corrupt]
+//!     build a deterministic cold-tier store and verify every chunk hash +
+//!     segment-chain continuity (--corrupt: inject a flipped payload byte
+//!     and prove fsck detects it — exits non-zero)
 //! yt-stream selfcheck
 //!     verify the PJRT runtime + AOT artifacts load and agree with native
 //! ```
@@ -38,12 +42,14 @@ fn main() {
             parse_common(&args[1..], &mut opts);
             run_demo(config_path.as_deref(), &opts);
         }
+        Some("fsck") => fsck_demo(args.iter().any(|a| a == "--corrupt")),
         Some("selfcheck") => selfcheck(),
         _ => {
             eprintln!(
                 "yt-stream — streaming MapReduce with low write amplification\n\
-                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard|window|consistency> [--seconds N] [--compute native|hlo] [--seed N] [--auto]\n\
+                 usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard|window|consistency|backfill> [--seconds N] [--compute native|hlo] [--seed N] [--auto]\n\
                  \x20 yt-stream run [--config path.yson] [--seconds N] [--compute native|hlo]\n\
+                 \x20 yt-stream fsck [--corrupt]\n\
                  \x20 yt-stream selfcheck"
             );
             std::process::exit(2);
@@ -131,6 +137,70 @@ fn run_demo(config_path: Option<&str>, opts: &FigureOpts) {
     let report = scenario.processor.wa_report("yt-stream");
     println!("{report}");
     scenario.stop();
+}
+
+/// `fsck`: build a small deterministic cold tier in a fresh store and run
+/// the manifest checker over it — chunk hashes, row counts, and segment
+/// chain continuity. `--corrupt` flips one payload byte first, which must
+/// make the check fail with a non-zero exit; the bench smoke test asserts
+/// both outcomes.
+fn fsck_demo(corrupt: bool) {
+    use yt_stream::coldtier::{
+        fsck, hex_decode, hex_encode, ColdStore, KIND_HISTORY, KIND_SEGMENT,
+    };
+    use yt_stream::dyntable::DynTableStore;
+    use yt_stream::queue::input_name_table;
+    use yt_stream::rows::{RowsetBuilder, Value};
+    use yt_stream::storage::WriteAccounting;
+
+    let store = DynTableStore::new(WriteAccounting::new());
+    let cold = ColdStore::new(store.clone(), "//sys/cold/fsck");
+    cold.ensure_tables(None).unwrap();
+
+    // Two partitions, each tiled by two contiguous segment chunks — the
+    // shape compact-on-trim produces.
+    for p in 0..2usize {
+        for (begin, end) in [(0i64, 8i64), (8, 20)] {
+            let mut b = RowsetBuilder::new(input_name_table());
+            for i in begin..end {
+                b.push(yt_stream::row![format!("p{p} row {i}"), 10_000 + i]);
+            }
+            let mut txn = store.begin();
+            cold.compact_into(&mut txn, p, KIND_SEGMENT, begin, begin, &b.build(), Some(1), None)
+                .unwrap();
+            txn.commit().unwrap();
+        }
+    }
+    // One fired-window history chunk (chunk_id = fire watermark).
+    let mut b = RowsetBuilder::new(input_name_table());
+    b.push(yt_stream::row!["window 0 history", 10_000i64]);
+    let mut txn = store.begin();
+    cold.compact_into(&mut txn, 0, KIND_HISTORY, 250_000, 0, &b.build(), Some(1), None)
+        .unwrap();
+    txn.commit().unwrap();
+
+    if corrupt {
+        let key = [Value::Int64(0), Value::from(KIND_SEGMENT), Value::Int64(0)];
+        let row = store.lookup(&cold.payload_table(), &key).unwrap().unwrap();
+        let mut raw = hex_decode(row.get(3).unwrap().as_str().unwrap()).unwrap();
+        raw[0] ^= 0xff;
+        let mut txn = store.begin();
+        txn.write(
+            &cold.payload_table(),
+            yt_stream::row![0i64, KIND_SEGMENT, 0i64, hex_encode(&raw)],
+        )
+        .unwrap();
+        txn.commit().unwrap();
+        println!("injected corruption: flipped first payload byte of chunk 0/{KIND_SEGMENT}/0");
+    }
+
+    match fsck(&store, cold.base()) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 /// `selfcheck`: PJRT + artifacts sanity (the AOT bridge smoke test).

@@ -148,6 +148,12 @@ pub mod names {
     pub const AUTOSCALE_RESUMES: &str = "autoscale/migrations_resumed_total";
     pub const EVENTTIME_WINDOWS_FIRED: &str = "eventtime/windows_fired_total";
     pub const EVENTTIME_LATE_ROWS: &str = "eventtime/late_rows_total";
+    /// Raw (pre-hex) encoded bytes of cold chunks fetched by backfill
+    /// readers — the "bytes moved from cold" side of `figure backfill`.
+    pub const COLD_CHUNK_BYTES_READ: &str = "coldtier/chunk_bytes_read_total";
+    /// Payload bytes a backfill reader served from the live table after
+    /// its cutover fence.
+    pub const COLD_LIVE_BYTES_READ: &str = "coldtier/live_bytes_read_total";
 }
 
 #[cfg(test)]

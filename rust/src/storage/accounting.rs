@@ -59,10 +59,17 @@ pub enum WriteCategory {
     /// kept separate from `reducer_meta` so `figure consistency` can show
     /// the frontier as two lines on the same workload.
     AnchorState,
+    /// Cold-tier chunk writes ([`crate::coldtier`]): trimmed ordered-table
+    /// segments and fired-window history compacted into immutable columnar
+    /// chunks (manifest + payload rows) inside the same transaction that
+    /// performs the trim/fire. System overhead the cold tier pays to make
+    /// backfill cheap — counts toward WA as its own line, and `figure
+    /// backfill` asserts it never inflates the exactly-once hot-path lines.
+    ColdTier,
 }
 
 /// Number of [`WriteCategory`] variants (array sizing).
-pub const CATEGORY_COUNT: usize = 11;
+pub const CATEGORY_COUNT: usize = 12;
 
 pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::SourceIngest,
@@ -76,6 +83,7 @@ pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
     WriteCategory::Reshard,
     WriteCategory::EventTime,
     WriteCategory::AnchorState,
+    WriteCategory::ColdTier,
 ];
 
 impl WriteCategory {
@@ -92,6 +100,7 @@ impl WriteCategory {
             WriteCategory::Reshard => 8,
             WriteCategory::EventTime => 9,
             WriteCategory::AnchorState => 10,
+            WriteCategory::ColdTier => 11,
         }
     }
 
@@ -108,6 +117,7 @@ impl WriteCategory {
             WriteCategory::Reshard => "reshard",
             WriteCategory::EventTime => "event_time",
             WriteCategory::AnchorState => "anchor_state",
+            WriteCategory::ColdTier => "cold_tier",
         }
     }
 
@@ -393,6 +403,18 @@ mod tests {
         assert_eq!(s.system_bytes(), 80, "user output stays excluded");
         assert!((s.wa_factor(1_000) - 0.08).abs() < 1e-9);
         assert!(s.to_string().contains("anchor_state"));
+    }
+
+    #[test]
+    fn cold_tier_counts_toward_wa() {
+        let a = WriteAccounting::new();
+        a.record(WriteCategory::SourceIngest, 1_000);
+        a.record(WriteCategory::ColdTier, 120);
+        a.record(WriteCategory::UserOutput, 400);
+        let s = a.snapshot();
+        assert_eq!(s.system_bytes(), 120, "user output stays excluded");
+        assert!((s.wa_factor(1_000) - 0.12).abs() < 1e-9);
+        assert!(s.to_string().contains("cold_tier"));
     }
 
     #[test]

@@ -1,0 +1,646 @@
+//! The backfill scenario: a day-N consumer bootstrapped from the cold
+//! tier instead of re-ingesting history from the source.
+//!
+//! One environment hosts the whole life cycle:
+//!
+//! 1. **Origin phase** — a final-fire windowed consumer with the cold tier
+//!    enabled drains the historical waves; every trimmed input segment and
+//!    every fired-window GC pass is compacted into cold chunks inside the
+//!    same exactly-once transactions (accounted under
+//!    [`WriteCategory::ColdTier`]). The consumer is then stopped and its
+//!    low water marks become the **cutover fences**.
+//! 2. **Live tail** — more waves arrive while no consumer is running.
+//! 3. **Backfill phase** — a brand-new consumer (fresh state tables, own
+//!    output table) launches against
+//!    [`crate::coordinator::InputSpec::BoundedRange`]: it drains the
+//!    bounded historical range from cold chunks, cuts over to live tailing
+//!    at the fences, and final-fires every window. Its residual importer
+//!    is [`ColdWindowBootstrap`], so an empty-handoff reshard would
+//!    restore the fired marker from cold history.
+//!
+//! A control run (`re-ingest from source`) processes the identical waves
+//! live from day zero in a fresh environment. `figure backfill` gates that
+//! the backfill output is **byte-identical** to the control's and that the
+//! backfill moved strictly fewer bytes than re-ingesting.
+
+use std::sync::Arc;
+
+use crate::coldtier::{ColdInput, ColdStore, ColdTierConfig, ColdWindowBootstrap};
+use crate::coordinator::processor::ClusterEnv;
+use crate::coordinator::{EventTimeConfig, InputSpec, ProcessorConfig, StreamingProcessor};
+use crate::dyntable::{Transaction, TxnError};
+use crate::eventtime::windowed::window_state_table;
+use crate::eventtime::{
+    windowed_reducer_factory, WindowFold, WindowMigrators, WindowSpec, WindowedDeps,
+    EVENT_TIME_CLOSED,
+};
+use crate::metrics::hub::names;
+use crate::metrics::WaReport;
+use crate::queue::input_name_table;
+use crate::queue::ordered_table::OrderedTable;
+use crate::reshard::migration::{ImportCtx, ResidualImporter};
+use crate::reshard::ReshardRuntime;
+use crate::row;
+use crate::rows::UnversionedRow;
+use crate::storage::accounting::AccountingSnapshot;
+use crate::storage::WriteCategory;
+use crate::util::yson::Yson;
+use crate::util::Clock;
+use crate::workload::elastic::fill_deterministic_wave;
+use crate::workload::windowed::{
+    expected_windowed_rows, windowed_mapped_name_table, windowed_mapper_factory, windowed_schema,
+    ActivityWindowFold, WindowedCfg,
+};
+
+/// Output table of the origin-phase consumer.
+pub const BACKFILL_ORIGIN_TABLE: &str = "//out/backfill_origin";
+/// Output table of the day-N backfill consumer — compared byte-for-byte
+/// against [`BACKFILL_CONTROL_TABLE`].
+pub const BACKFILL_TABLE: &str = "//out/backfill_day_n";
+/// Output table of the re-ingest-from-source control run.
+pub const BACKFILL_CONTROL_TABLE: &str = "//out/backfill_day0";
+
+/// [`ActivityWindowFold`] with a configurable output table, so the origin,
+/// backfill and control consumers write to distinct tables that can be
+/// scanned and compared independently.
+pub struct RoutedActivityFold {
+    pub table: String,
+}
+
+impl WindowFold for RoutedActivityFold {
+    fn event_ts(&self, row: &UnversionedRow) -> Option<i64> {
+        ActivityWindowFold.event_ts(row)
+    }
+
+    fn key(&self, row: &UnversionedRow) -> Option<String> {
+        ActivityWindowFold.key(row)
+    }
+
+    fn zero(&self) -> Yson {
+        ActivityWindowFold.zero()
+    }
+
+    fn fold(&self, acc: &mut Yson, row: &UnversionedRow) {
+        ActivityWindowFold.fold(acc, row)
+    }
+
+    fn merge(&self, into: &mut Yson, other: &Yson) {
+        ActivityWindowFold.merge(into, other)
+    }
+
+    fn emit(
+        &self,
+        window_start: i64,
+        _window_end: i64,
+        key: &str,
+        acc: &Yson,
+        txn: &mut Transaction,
+    ) -> Result<(), TxnError> {
+        let mut parts = key.split('\u{1f}');
+        let (Some(user), Some(cluster)) = (parts.next(), parts.next()) else {
+            return Ok(());
+        };
+        let (count, last_ts) = ActivityWindowFold::unpack(acc);
+        txn.write(&self.table, row![window_start, user, cluster, count, last_ts])
+    }
+}
+
+fn ensure_table_at(
+    env: &ClusterEnv,
+    path: &str,
+) -> Result<(), crate::dyntable::store::StoreError> {
+    use crate::dyntable::store::StoreError;
+    match env
+        .store
+        .create_table(path, windowed_schema(), WriteCategory::UserOutput)
+    {
+        Ok(_) | Err(StoreError::AlreadyExists(_)) => Ok(()),
+        Err(e) => Err(e),
+    }
+}
+
+/// Scenario knobs (same deterministic wave plan as the windowed scenario).
+#[derive(Debug, Clone)]
+pub struct BackfillCfg {
+    pub partitions: usize,
+    pub reducers: usize,
+    /// Waves the origin consumer drains (and the cold tier compacts)
+    /// before it is stopped. Must be < `total_waves`.
+    pub history_waves: usize,
+    /// Total waves; `history_waves..total_waves` arrive as the live tail
+    /// the backfill consumer cuts over into.
+    pub total_waves: usize,
+    pub messages_per_wave: usize,
+    pub seed: u64,
+    pub window: WindowSpec,
+    /// Table-path root of the cold tier.
+    pub cold_base: String,
+    pub base: ProcessorConfig,
+    /// Wall-clock budget for the origin phase to drain + trim every
+    /// historical row (the fences depend on it).
+    pub trim_timeout_ms: u64,
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for BackfillCfg {
+    fn default() -> Self {
+        BackfillCfg {
+            partitions: 4,
+            reducers: 4,
+            history_waves: 2,
+            total_waves: 3,
+            messages_per_wave: 40,
+            seed: 0xBF11,
+            window: WindowSpec::tumbling(250_000),
+            cold_base: "//sys/cold/backfill".to_string(),
+            base: ProcessorConfig {
+                backoff_ms: 5,
+                trim_period_ms: 100,
+                restart_delay_ms: 100,
+                split_brain_delay_ms: 50,
+                session_ttl_ms: 1_500,
+                heartbeat_period_ms: 100,
+                ..ProcessorConfig::default()
+            },
+            trim_timeout_ms: 45_000,
+            drain_timeout_ms: 45_000,
+        }
+    }
+}
+
+/// Where in the backfill the drill hook is being invoked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackfillDrillPoint {
+    /// Shortly after launch, while the historical range is draining from
+    /// cold chunks.
+    MidBackfill,
+    /// Right after the first live-tail read — the consumer just crossed
+    /// the cutover fence.
+    AtCutover,
+}
+
+/// What a backfill run leaves behind.
+pub struct BackfillOutcome {
+    /// Pure ground truth over all `total_waves` — what both the backfill
+    /// and the control output tables must equal.
+    pub expected: Vec<UnversionedRow>,
+    /// Drained output of the day-N backfill consumer, key order.
+    pub backfill_rows: Vec<UnversionedRow>,
+    /// Drained output of the re-ingest-from-source control, key order.
+    pub control_rows: Vec<UnversionedRow>,
+    /// Cutover fences (the origin run's final low water marks).
+    pub fences: Vec<i64>,
+    pub segment_chunks: usize,
+    pub history_chunks: usize,
+    /// Fired watermark [`ColdWindowBootstrap`] restored in the
+    /// empty-handoff demo (`None` if no window fired during the origin
+    /// phase).
+    pub restored_fired_marker: Option<i64>,
+    /// The restored marker was read back from the bootstrap epoch's state
+    /// table and matched.
+    pub bootstrap_marker_verified: bool,
+    /// WA report of the cold-tier environment (origin + backfill phases).
+    pub report: WaReport,
+    /// WA report of the control environment.
+    pub control_report: WaReport,
+    /// Raw (pre-hex) cold chunk bytes the backfill read.
+    pub chunk_bytes_read: u64,
+    /// Live-tail bytes the backfill read past the fence.
+    pub live_bytes_read: u64,
+    /// `UserOutput` bytes the backfill consumer wrote.
+    pub backfill_user_output: u64,
+    /// `SourceIngest` bytes the control paid to re-append all history.
+    pub reingest_source_bytes: u64,
+    /// Bytes the control's mappers read from the re-ingested source.
+    pub reingest_mapper_read: u64,
+    /// `UserOutput` bytes the control wrote (must equal the backfill's —
+    /// the cold tier never inflates the exactly-once hot path).
+    pub reingest_user_output: u64,
+    /// Rows on the backfill consumer's late side channel (0 expected for
+    /// the in-order waves).
+    pub late_rows: i64,
+    /// The cold-tier environment, for accounting/metrics assertions.
+    pub env: ClusterEnv,
+    /// The control environment.
+    pub control_env: ClusterEnv,
+}
+
+impl BackfillOutcome {
+    /// Bytes the backfill moved to reach day-N output: compact chunk reads
+    /// plus the live tail plus its own output writes.
+    pub fn backfill_bytes_moved(&self) -> u64 {
+        self.chunk_bytes_read + self.live_bytes_read + self.backfill_user_output
+    }
+
+    /// Bytes re-ingesting moved for the same output: re-appending all
+    /// history to a source, reading it all back, writing the output.
+    pub fn reingest_bytes_moved(&self) -> u64 {
+        self.reingest_source_bytes + self.reingest_mapper_read + self.reingest_user_output
+    }
+}
+
+/// Launch one final-fire windowed consumer with namespaced state tables.
+///
+/// `cold_write` enables compact-on-trim + fired-history compaction (the
+/// origin consumer); `cold_bootstrap` wires [`ColdWindowBootstrap`] as the
+/// reshard residual importer (the backfill consumer — it reads the cold
+/// tier but must never write it, its input *is* the cold tier).
+#[allow(clippy::too_many_arguments)]
+fn launch_final_fire(
+    env: &ClusterEnv,
+    input: InputSpec,
+    ns: &str,
+    out_table: &str,
+    window: WindowSpec,
+    partitions: usize,
+    reducers: usize,
+    base: &ProcessorConfig,
+    cold_write: Option<(Arc<ColdStore>, ColdTierConfig)>,
+    cold_bootstrap: Option<Arc<ColdStore>>,
+) -> (StreamingProcessor, Arc<OrderedTable>) {
+    ensure_table_at(env, out_table).expect("create backfill output table");
+    let (cold_deps, cold_cfg) = match cold_write {
+        Some((c, cfg)) => (Some(c), Some(cfg)),
+        None => (None, None),
+    };
+    let proc_cfg = ProcessorConfig {
+        mapper_count: partitions,
+        reducer_count: reducers,
+        mapper_state_table: format!("//sys/{ns}/mapper_state"),
+        reducer_state_table: format!("//sys/{ns}/reducer_state"),
+        reshard_plan_table: format!("//sys/{ns}/reshard_plan"),
+        discovery_dir: format!("//sys/{ns}/discovery"),
+        event_time: Some(EventTimeConfig { column: "ts".into() }),
+        cold_tier: cold_cfg,
+        ..base.clone()
+    };
+    let fold: Arc<dyn WindowFold> = Arc::new(RoutedActivityFold {
+        table: out_table.to_string(),
+    });
+    let late = OrderedTable::new_with_category(
+        &format!("//sys/{ns}/late"),
+        windowed_mapped_name_table(),
+        reducers,
+        env.accounting.clone(),
+        WriteCategory::UserOutput,
+    );
+    let deps = Arc::new(WindowedDeps {
+        spec: window,
+        fold: fold.clone(),
+        state_base: format!("//sys/{ns}/window_state"),
+        plan_table: proc_cfg.reshard_plan_table.clone(),
+        mapper_state_table: proc_cfg.mapper_state_table.clone(),
+        late: late.clone(),
+        metrics: env.metrics.clone(),
+        scope: proc_cfg.scope_label.clone(),
+        consistency: proc_cfg.consistency,
+        cold: cold_deps,
+    });
+    let migrators = WindowMigrators::new(
+        env.store.clone(),
+        fold,
+        deps.state_base.clone(),
+        proc_cfg.scope_label.clone(),
+    );
+    let (exporter, importer) = migrators.pair();
+    let importer: Arc<dyn ResidualImporter> = match cold_bootstrap {
+        Some(c) => ColdWindowBootstrap::new(migrators.clone(), c),
+        None => importer,
+    };
+    let runtime = ReshardRuntime::new_with_migrators(
+        proc_cfg.reshard_plan_table.clone(),
+        env.accounting.clone(),
+        proc_cfg.scope_label.clone(),
+        exporter,
+        importer,
+    );
+    let processor = StreamingProcessor::launch_with_runtime(
+        proc_cfg,
+        env.clone(),
+        input,
+        windowed_mapper_factory(),
+        windowed_reducer_factory(deps),
+        Yson::parse("{}").unwrap(),
+        runtime,
+    )
+    .expect("launch final-fire consumer");
+    (processor, late)
+}
+
+fn scan_sorted(env: &ClusterEnv, table: &str) -> Vec<UnversionedRow> {
+    env.store.scan(table).unwrap_or_default()
+}
+
+fn wait_for_rows(
+    env: &ClusterEnv,
+    table: &str,
+    expected: &[UnversionedRow],
+    wall_ms: u64,
+) -> Vec<UnversionedRow> {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(wall_ms);
+    let mut rows = Vec::new();
+    while std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        rows = scan_sorted(env, table);
+        if rows == expected {
+            break;
+        }
+    }
+    rows
+}
+
+fn user_output_bytes(snap: &AccountingSnapshot) -> u64 {
+    snap.bytes_of(WriteCategory::UserOutput)
+}
+
+/// Run the backfill scenario. `drill` is invoked on the **backfill**
+/// consumer at [`BackfillDrillPoint::MidBackfill`] and
+/// [`BackfillDrillPoint::AtCutover`] — kill/twin drills there must not
+/// change one output byte.
+pub fn run_backfill(
+    cfg: &BackfillCfg,
+    drill: impl Fn(&StreamingProcessor, BackfillDrillPoint),
+) -> BackfillOutcome {
+    assert!(
+        cfg.history_waves < cfg.total_waves,
+        "need a live tail: history_waves ({}) must be < total_waves ({})",
+        cfg.history_waves,
+        cfg.total_waves
+    );
+    let clock = Clock::scaled(4);
+    let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    let table = OrderedTable::new(
+        "//input/backfill",
+        input_name_table(),
+        cfg.partitions,
+        env.accounting.clone(),
+    );
+    let cold_cfg = ColdTierConfig {
+        base: cfg.cold_base.clone(),
+    };
+    let cold = ColdStore::from_config(env.store.clone(), &cold_cfg);
+
+    // --- origin phase: drain history with the cold tier on ---------------
+    let (origin, _origin_late) = launch_final_fire(
+        &env,
+        InputSpec::Ordered(table.clone()),
+        "bf_origin",
+        BACKFILL_ORIGIN_TABLE,
+        cfg.window,
+        cfg.partitions,
+        cfg.reducers,
+        &cfg.base,
+        Some((cold.clone(), cold_cfg.clone())),
+        None,
+    );
+    for wave in 0..cfg.history_waves {
+        fill_deterministic_wave(&table, wave, cfg.messages_per_wave);
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    // Every historical row must be consumed, persisted, and trimmed —
+    // i.e. compacted into cold — before the fences are cut.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(cfg.trim_timeout_ms);
+    loop {
+        let marks = table.low_water_marks();
+        if (0..cfg.partitions).all(|p| marks[p] == table.end_index(p)) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "origin consumer failed to trim all history within {} ms \
+             (low water marks {marks:?})",
+            cfg.trim_timeout_ms
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    origin.stop();
+    let fences = table.low_water_marks();
+    let segment_chunks: usize = (0..cfg.partitions)
+        .map(|p| cold.segment_chunks(p).map(|c| c.len()).unwrap_or(0))
+        .sum();
+    let history_chunks = cold.history_chunks().map(|c| c.len()).unwrap_or(0);
+
+    // --- live tail arrives while no consumer is running ------------------
+    let chunk_read_0 = env.metrics.get_counter(names::COLD_CHUNK_BYTES_READ);
+    let live_read_0 = env.metrics.get_counter(names::COLD_LIVE_BYTES_READ);
+    let snap_0 = env.accounting.snapshot();
+    for wave in cfg.history_waves..cfg.total_waves {
+        fill_deterministic_wave(&table, wave, cfg.messages_per_wave);
+    }
+
+    // --- backfill phase: a day-N consumer over cold chunks + live tail ---
+    let input = ColdInput::new(
+        cold.clone(),
+        table.clone(),
+        fences.clone(),
+        Some(env.metrics.clone()),
+    );
+    let (backfill, late) = launch_final_fire(
+        &env,
+        InputSpec::BoundedRange(input),
+        "bf_day_n",
+        BACKFILL_TABLE,
+        cfg.window,
+        cfg.partitions,
+        cfg.reducers,
+        &cfg.base,
+        None, // a backfill consumer never writes the tier it reads
+        Some(cold.clone()),
+    );
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    drill(&backfill, BackfillDrillPoint::MidBackfill);
+    // Wait for the first live-tail read — the cutover — then drill again.
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_millis(cfg.drain_timeout_ms);
+    while env.metrics.get_counter(names::COLD_LIVE_BYTES_READ) == live_read_0
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    drill(&backfill, BackfillDrillPoint::AtCutover);
+
+    backfill
+        .close_event_time(EVENT_TIME_CLOSED)
+        .expect("close event time");
+    let expected = expected_windowed_rows(&WindowedCfg {
+        partitions: cfg.partitions,
+        waves: cfg.total_waves,
+        messages_per_wave: cfg.messages_per_wave,
+        window: cfg.window,
+        ..WindowedCfg::default()
+    });
+    let backfill_rows = wait_for_rows(&env, BACKFILL_TABLE, &expected, cfg.drain_timeout_ms);
+
+    let snap_1 = env.accounting.snapshot();
+    let chunk_bytes_read = env.metrics.get_counter(names::COLD_CHUNK_BYTES_READ) - chunk_read_0;
+    let live_bytes_read = env.metrics.get_counter(names::COLD_LIVE_BYTES_READ) - live_read_0;
+    let backfill_user_output = user_output_bytes(&snap_1) - user_output_bytes(&snap_0);
+    let late_rows: i64 = (0..late.tablet_count()).map(|i| late.end_index(i)).sum();
+    let report = backfill.wa_report("backfill from cold (day-N consumer)");
+    backfill.stop();
+
+    // --- reshard-bootstrap-from-cold demo: an empty handoff (exporter
+    // gone) restores the fired marker from the cold history chunks -------
+    let boot_base = "//sys/bf_boot/window_state";
+    let migrators = WindowMigrators::new(
+        env.store.clone(),
+        Arc::new(RoutedActivityFold {
+            table: BACKFILL_TABLE.to_string(),
+        }) as Arc<dyn WindowFold>,
+        boot_base,
+        None,
+    );
+    let boot = ColdWindowBootstrap::new(migrators, cold.clone());
+    let restored_fired_marker = boot.fired_watermark_from_cold();
+    let mut bootstrap_marker_verified = false;
+    if let Some(wm) = restored_fired_marker {
+        let ctx = ImportCtx {
+            new_index: 0,
+            new_partitions: cfg.reducers,
+            epoch: 1,
+        };
+        let mut txn = env.store.begin();
+        boot.import(&ctx, &[], &mut txn)
+            .expect("bootstrap import from cold");
+        txn.commit().expect("commit bootstrap import");
+        bootstrap_marker_verified = env
+            .store
+            .scan(&window_state_table(boot_base, 1))
+            .ok()
+            .and_then(|rows| {
+                let acc = rows.first()?.get(2)?.as_str()?.to_string();
+                Yson::parse(&acc).ok()?.as_i64().ok()
+            })
+            .is_some_and(|v| v == wm);
+    }
+
+    // --- control: re-ingest everything from the source, day zero ---------
+    let control_env = ClusterEnv::new(Clock::scaled(4), cfg.seed ^ 0x5A5A);
+    let control_table = OrderedTable::new(
+        "//input/backfill_live",
+        input_name_table(),
+        cfg.partitions,
+        control_env.accounting.clone(),
+    );
+    let (control, _control_late) = launch_final_fire(
+        &control_env,
+        InputSpec::Ordered(control_table.clone()),
+        "bf_day0",
+        BACKFILL_CONTROL_TABLE,
+        cfg.window,
+        cfg.partitions,
+        cfg.reducers,
+        &cfg.base,
+        None,
+        None,
+    );
+    for wave in 0..cfg.total_waves {
+        fill_deterministic_wave(&control_table, wave, cfg.messages_per_wave);
+    }
+    control
+        .close_event_time(EVENT_TIME_CLOSED)
+        .expect("close control event time");
+    let control_rows = wait_for_rows(
+        &control_env,
+        BACKFILL_CONTROL_TABLE,
+        &expected,
+        cfg.drain_timeout_ms,
+    );
+    let control_report = control.wa_report("re-ingest from source (control)");
+    control.stop();
+    let control_snap = control_env.accounting.snapshot();
+
+    BackfillOutcome {
+        expected,
+        backfill_rows,
+        control_rows,
+        fences,
+        segment_chunks,
+        history_chunks,
+        restored_fired_marker,
+        bootstrap_marker_verified,
+        report,
+        control_report,
+        chunk_bytes_read,
+        live_bytes_read,
+        backfill_user_output,
+        reingest_source_bytes: control_snap.bytes_of(WriteCategory::SourceIngest),
+        reingest_mapper_read: control_env.metrics.get_counter(names::MAPPER_BYTES_READ),
+        reingest_user_output: user_output_bytes(&control_snap),
+        late_rows,
+        env,
+        control_env,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dyntable::DynTableStore;
+    use crate::rows::RowsetBuilder;
+    use crate::storage::WriteAccounting;
+
+    #[test]
+    fn default_cfg_keeps_timestamps_f32_exact() {
+        // Same precondition the elastic generator enforces: the largest
+        // wave timestamp must stay below 2^24 or byte-identity becomes
+        // batching-dependent.
+        let cfg = BackfillCfg::default();
+        let max_ts = 10_000
+            + (cfg.total_waves as i64 - 1) * 4_000_000
+            + (cfg.partitions as i64 - 1) * 500_000
+            + (cfg.messages_per_wave as i64) * 100
+            + 8;
+        assert!(max_ts < (1 << 24), "wave plan emits ts {max_ts} >= 2^24");
+        assert!(cfg.history_waves < cfg.total_waves);
+    }
+
+    #[test]
+    fn routed_fold_writes_to_its_own_table() {
+        let store = DynTableStore::new(WriteAccounting::new());
+        store
+            .create_table("//out/routed", windowed_schema(), WriteCategory::UserOutput)
+            .unwrap();
+        let fold = RoutedActivityFold {
+            table: "//out/routed".to_string(),
+        };
+        let mut b = RowsetBuilder::new(windowed_mapped_name_table());
+        b.push(row!["alice", "hahn", 50i64]);
+        let rs = b.build();
+        let mut acc = fold.zero();
+        fold.fold(&mut acc, &rs.rows()[0]);
+        let key = fold.key(&rs.rows()[0]).unwrap();
+
+        let mut txn = store.begin();
+        fold.emit(0, 250_000, &key, &acc, &mut txn).unwrap();
+        txn.commit().unwrap();
+        let rows = store.scan("//out/routed").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get(1).unwrap().as_str(), Some("alice"));
+        assert_eq!(rows[0].get(3).unwrap().as_i64(), Some(1));
+        assert_eq!(rows[0].get(4).unwrap().as_i64(), Some(50));
+    }
+
+    #[test]
+    fn expected_rows_cover_all_waves() {
+        let cfg = BackfillCfg::default();
+        let all = expected_windowed_rows(&WindowedCfg {
+            partitions: cfg.partitions,
+            waves: cfg.total_waves,
+            messages_per_wave: cfg.messages_per_wave,
+            window: cfg.window,
+            ..WindowedCfg::default()
+        });
+        let history_only = expected_windowed_rows(&WindowedCfg {
+            partitions: cfg.partitions,
+            waves: cfg.history_waves,
+            messages_per_wave: cfg.messages_per_wave,
+            window: cfg.window,
+            ..WindowedCfg::default()
+        });
+        // The live tail genuinely extends the output: the byte-identity
+        // gate cannot pass on a backfill that never cut over.
+        assert!(all.len() > history_only.len());
+    }
+}

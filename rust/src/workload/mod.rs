@@ -19,8 +19,10 @@ pub mod sessions;
 pub mod elastic;
 pub mod windowed;
 pub mod consistency;
+pub mod backfill;
 
 pub use analytics::{analytics_mapper_factory, analytics_reducer_factory, OUTPUT_TABLE};
+pub use backfill::{run_backfill, BackfillCfg, BackfillDrillPoint, BackfillOutcome};
 pub use consistency::{
     divergence_vs_truth, ground_truth_counts, run_consistency_tier, ConsistencyCfg, TierOutcome,
 };

@@ -136,7 +136,7 @@ pub fn windowed_mapper_factory() -> MapperFactory {
 pub struct ActivityWindowFold;
 
 impl ActivityWindowFold {
-    fn unpack(acc: &Yson) -> (i64, i64) {
+    pub(crate) fn unpack(acc: &Yson) -> (i64, i64) {
         let list = acc.as_list().ok().unwrap_or(&[]);
         (
             list.first().and_then(|v| v.as_i64().ok()).unwrap_or(0),
@@ -438,6 +438,7 @@ pub fn run_windowed(
                 metrics: env.metrics.clone(),
                 scope: proc_cfg.scope_label.clone(),
                 consistency: proc_cfg.consistency,
+                cold: None,
             });
             let migrators = WindowMigrators::new(
                 env.store.clone(),

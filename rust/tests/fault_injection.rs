@@ -863,6 +863,67 @@ fn windowed_final_fire_under_drills_and_reshard_byte_identical() {
 }
 
 #[test]
+fn backfill_cutover_under_kill_and_twin_byte_identical() {
+    // PR 8 acceptance drill: a day-N consumer backfilling from cold chunks
+    // takes a mapper kill + reducer twin while draining history, then a
+    // mapper twin + reducer kill right as it crosses the cutover fence. It
+    // must still drain to output byte-identical to the
+    // re-ingest-from-source control — per-chunk checkpoints make chunk
+    // reruns free, and the fence keeps the cold→live handoff exactly-once
+    // — while moving strictly fewer bytes than the re-ingest did.
+    use yt_stream::reshard::plan::reducer_slot;
+    use yt_stream::workload::backfill::{run_backfill, BackfillCfg, BackfillDrillPoint};
+
+    let cfg = BackfillCfg {
+        seed: 0xBF17,
+        ..BackfillCfg::default()
+    };
+    let partitions = cfg.partitions;
+    let reducers = cfg.reducers;
+    let out = run_backfill(&cfg, |processor, point| {
+        let sup = processor.supervisor().clone();
+        match point {
+            BackfillDrillPoint::MidBackfill => {
+                sup.kill(Role::Mapper, 0);
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                sup.duplicate(Role::Reducer, reducer_slot(0, 0));
+            }
+            BackfillDrillPoint::AtCutover => {
+                sup.duplicate(Role::Mapper, partitions - 1);
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                sup.kill(Role::Reducer, reducer_slot(0, 1 % reducers));
+            }
+        }
+    });
+
+    assert_eq!(
+        out.control_rows, out.expected,
+        "control re-ingest must reach the ground truth"
+    );
+    assert_eq!(
+        out.backfill_rows, out.expected,
+        "drilled backfill must reach the ground truth"
+    );
+    assert_eq!(
+        out.backfill_rows, out.control_rows,
+        "day-N backfill must be byte-identical to the day-zero run"
+    );
+    assert_eq!(out.late_rows, 0, "in-order waves produce no late rows");
+    assert!(
+        out.segment_chunks >= partitions,
+        "every partition must have compacted at least one segment chunk \
+         (got {} chunks over {partitions} partitions)",
+        out.segment_chunks
+    );
+    assert!(
+        out.backfill_bytes_moved() < out.reingest_bytes_moved(),
+        "backfill must move strictly fewer bytes than re-ingesting ({} vs {})",
+        out.backfill_bytes_moved(),
+        out.reingest_bytes_moved()
+    );
+}
+
+#[test]
 fn chain_group_commit_coalescing_under_drills_byte_identical() {
     // PR 6 group-commit drill: with commit coalescing wide open
     // (commit_coalesce_max = 8, several fetch rounds folded into one CAS

@@ -439,6 +439,7 @@ fn two_stage_event_time_cascade_fires_downstream_windows() {
         metrics: env.metrics.clone(),
         scope: Some("evt/window".into()),
         consistency: yt_stream::consistency::Consistency::ExactlyOnce,
+        cold: None,
     });
 
     // Stage-2 mapper: route (user, cluster, ts) handoff rows by the same

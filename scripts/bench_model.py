@@ -16,7 +16,13 @@ PR 7 adds the consistency-tier pair: persist-the-state-row-every-commit
 (exactly-once) vs anchor-every-K-commits (bounded-error), as the same
 journal-append mechanism the reducer's Step-8 state write amortizes.
 
-Usage: scripts/bench_model.py [OUTPUT.json]   (default: BENCH_7.json)
+PR 8 adds the backfill pair: re-ingesting history from the source
+(re-append every framed record, re-read and re-decode each one) vs
+backfilling from the cold tier (hash-verify + decode one pre-compacted
+columnar chunk per trimmed segment) — the bytes-moved asymmetry `figure
+backfill` measures end to end.
+
+Usage: scripts/bench_model.py [OUTPUT.json]   (default: BENCH_8.json)
 """
 import json
 import struct
@@ -135,7 +141,7 @@ def bench(name, f, items=None, warmup_s=0.1, min_time_s=0.6, min_iters=10):
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_7.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_8.json"
     reports = []
 
     # --- rows: per-row encode+hash vs columnar batch ----------------------
@@ -240,6 +246,72 @@ def main():
     reports.append(bench("consistency/persist_every_commit_64", persist_every_commit, items=64))
     reports.append(bench("consistency/anchored_every_8_64", anchored_every_k, items=64))
 
+    # --- backfill: re-ingest history from source vs read cold chunks ------
+    # Day-N consumer over 1024 historical rows. Re-ingesting pays three
+    # byte movements: append every framed record back onto a source journal,
+    # read each record back, decode it. Backfilling reads the chunks
+    # compact-on-trim already wrote: per 64-row segment, one hash-verified
+    # columnar blob to decode — no re-append, no per-record framing.
+    history = sample_rows(1024)
+    SEG = 64
+
+    def decode_buf(buf):
+        rows_out, off = [], 4
+        while off < len(buf):
+            (ncols,) = struct.unpack_from("<H", buf, off)
+            off += 2
+            vals = []
+            for _ in range(ncols):
+                tag = buf[off]
+                off += 1
+                if tag == 0x06:
+                    (ln,) = struct.unpack_from("<I", buf, off)
+                    off += 4
+                    vals.append(buf[off : off + ln].decode())
+                    off += ln
+                elif tag == 0x05:
+                    vals.append(struct.unpack_from("<d", buf, off)[0])
+                    off += 8
+                else:
+                    vals.append(struct.unpack_from("<q", buf, off)[0])
+                    off += 8
+            rows_out.append(tuple(vals))
+        return rows_out
+
+    # Chunks exist before the backfill starts — compacted inside the trim
+    # CAS, not on the read path — so building them is setup, not bench.
+    # The Rust tier verifies FNV-1a-64; a per-byte Python FNV loop would
+    # time the interpreter, not the mechanism, so the model's verify step
+    # uses a C-speed checksum and keeps the byte-movement asymmetry.
+    import zlib
+
+    chunks = []
+    for s in range(0, len(history), SEG):
+        buf = bytearray(struct.pack("<I", SEG))
+        for r in history[s : s + SEG]:
+            encode_row_into(buf, r)
+        blob = bytes(buf)
+        chunks.append((zlib.crc32(blob), blob))
+
+    def reingest_from_source():
+        source = []
+        for r in history:  # re-append all history to the source
+            source.append(struct.pack("<I", 1) + encode_row(r))
+        total = 0
+        for rec in source:  # mappers read + decode it all back
+            total += len(decode_buf(rec))
+        return total
+
+    def backfill_from_cold():
+        total = 0
+        for want, blob in chunks:  # manifest scan → verified chunk reads
+            assert zlib.crc32(blob) == want
+            total += len(decode_buf(blob))
+        return total
+
+    reports.append(bench("backfill/reingest_from_source", reingest_from_source, items=1024))
+    reports.append(bench("backfill/backfill_from_cold", backfill_from_cold, items=1024))
+
     doc = {
         "schema": "yt-stream-bench-v1",
         "harness": (
@@ -263,6 +335,11 @@ def main():
             "consistency/persist_every_commit_64",
             "consistency/anchored_every_8_64",
             "consistency",
+        ),
+        (
+            "backfill/reingest_from_source",
+            "backfill/backfill_from_cold",
+            "backfill",
         ),
     ]:
         print(f"bench_model: {label}: batched is {by[a] / by[b]:.2f}x faster than per-row")

@@ -15,7 +15,7 @@
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
-BENCH_PR="${BENCH_PR:-7}"
+BENCH_PR="${BENCH_PR:-8}"
 bench_json="$repo_root/BENCH_${BENCH_PR}.json"
 
 if ! command -v cargo >/dev/null 2>&1; then
@@ -81,6 +81,29 @@ timeout 600 cargo run --release --quiet -- figure consistency --seconds 5 || {
     exit 1
 }
 
+echo "== bench_smoke: figure backfill (day-N consumer from cold chunks) =="
+# The cold-tier figure gates on: the backfilled day-N output byte-identical
+# to a re-ingest-from-day-zero control (under kill + twin drills at
+# mid-backfill and at the cutover fence), strictly fewer bytes moved than
+# re-ingesting, ColdTier as a distinct WA line that never inflates the
+# exactly-once hot path, and a clean manifest fsck.
+timeout 600 cargo run --release --quiet -- figure backfill --seconds 5 || {
+    echo "bench_smoke: FAIL — figure backfill did not complete" >&2
+    exit 1
+}
+
+echo "== bench_smoke: fsck (cold-tier manifest verification) =="
+# A healthy deterministic tier must pass; a tier with one flipped payload
+# byte must be detected (non-zero exit) — both directions are the gate.
+timeout 120 cargo run --release --quiet -- fsck || {
+    echo "bench_smoke: FAIL — fsck rejected a healthy cold tier" >&2
+    exit 1
+}
+if timeout 120 cargo run --release --quiet -- fsck --corrupt; then
+    echo "bench_smoke: FAIL — fsck missed an injected payload corruption" >&2
+    exit 1
+fi
+
 if [ "${1:-}" = "--full" ]; then
     echo "== bench_smoke: full micro_hot_paths suite =="
     BENCHKIT_JSON="$bench_json" cargo bench --bench micro_hot_paths
@@ -99,5 +122,11 @@ fi
 
 if [ -f "$bench_json" ]; then
     echo "bench_smoke: wrote $bench_json"
+else
+    # BENCHKIT_JSON was requested above; the bench run exiting 0 without
+    # writing it means the emission path is broken, not that there was
+    # nothing to measure.
+    echo "bench_smoke: FAIL — BENCHKIT_JSON=$bench_json requested but not written" >&2
+    exit 1
 fi
 echo "bench_smoke: OK"
