@@ -188,6 +188,7 @@ impl PartitionReader for ColdReader {
             };
         };
         self.fetch_chunk(&meta)?;
+        // protolint: allow(panic, "fetch_chunk returned Ok on the line above, whose postcondition is self.cached = Some for this chunk")
         let (_, rows) = self.cached.as_ref().expect("chunk cached by fetch_chunk");
         let lo = (begin_row_index - meta.begin_row) as usize;
         let hi = (end.min(meta.end_row) - meta.begin_row) as usize;

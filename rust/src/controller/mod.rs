@@ -18,6 +18,7 @@ use std::time::Duration;
 use crate::coordinator::mapper::MapperHandle;
 use crate::coordinator::reducer::ReducerHandle;
 use crate::util::{Clock, Guid};
+use crate::util;
 
 /// A running worker of either role.
 pub enum WorkerHandle {
@@ -124,7 +125,7 @@ impl Supervisor {
                 .spawn(move || sup.monitor_loop())
                 .expect("spawn supervisor thread")
         };
-        *sup.monitor.lock().unwrap() = Some(monitor);
+        *util::lock(&sup.monitor) = Some(monitor);
         sup
     }
 
@@ -145,7 +146,7 @@ impl Supervisor {
     /// Panics if (role, index) is already taken.
     pub fn add_slot(&self, role: Role, index: usize, spawner: Spawner) {
         let slot = Self::new_slot(role, index, spawner);
-        let mut slots = self.slots.lock().unwrap();
+        let mut slots = util::lock(&self.slots);
         assert!(
             !slots.iter().any(|s| s.role == role && s.index == index),
             "{role:?} slot {index} already exists"
@@ -155,15 +156,13 @@ impl Supervisor {
 
     /// Does a slot exist for (role, index)?
     pub fn has_slot(&self, role: Role, index: usize) -> bool {
-        self.slots
-            .lock()
-            .unwrap()
+        util::lock(&self.slots)
             .iter()
             .any(|s| s.role == role && s.index == index)
     }
 
     fn snapshot(&self) -> Vec<Arc<Slot>> {
-        self.slots.lock().unwrap().clone()
+        util::lock(&self.slots).clone()
     }
 
     fn monitor_loop(&self) {
@@ -172,11 +171,11 @@ impl Supervisor {
                 if !slot.want_running.load(Ordering::SeqCst) {
                     continue;
                 }
-                let mut current = slot.current.lock().unwrap();
+                let mut current = util::lock(&slot.current);
                 let dead = current.as_ref().map(|h| h.is_finished()).unwrap_or(true);
                 if dead {
                     let now = self.clock.now_ms();
-                    let mut died = slot.died_at_ms.lock().unwrap();
+                    let mut died = util::lock(&slot.died_at_ms);
                     match *died {
                         None => *died = Some(now),
                         Some(t) if now.saturating_sub(t) >= self.restart_delay_ms => {
@@ -187,16 +186,14 @@ impl Supervisor {
                     }
                 }
                 // Reap finished twins.
-                slot.extras.lock().unwrap().retain(|h| !h.is_finished());
+                util::lock(&slot.extras).retain(|h| !h.is_finished());
             }
             std::thread::sleep(Duration::from_millis(1));
         }
     }
 
     fn slot(&self, role: Role, index: usize) -> Arc<Slot> {
-        self.slots
-            .lock()
-            .unwrap()
+        util::lock(&self.slots)
             .iter()
             .find(|s| s.role == role && s.index == index)
             .cloned()
@@ -205,14 +202,14 @@ impl Supervisor {
 
     /// Pause / unpause the incumbent (hung-worker drill).
     pub fn set_paused(&self, role: Role, index: usize, paused: bool) {
-        if let Some(h) = self.slot(role, index).current.lock().unwrap().as_ref() {
+        if let Some(h) = util::lock(&self.slot(role, index).current).as_ref() {
             h.set_paused(paused);
         }
     }
 
     /// Crash the incumbent; the monitor respawns it after the delay.
     pub fn kill(&self, role: Role, index: usize) {
-        if let Some(h) = self.slot(role, index).current.lock().unwrap().as_ref() {
+        if let Some(h) = util::lock(&self.slot(role, index).current).as_ref() {
             h.kill();
         }
     }
@@ -223,7 +220,7 @@ impl Supervisor {
         let slot = self.slot(role, index);
         let twin = (slot.spawner)();
         let guid = twin.guid();
-        slot.extras.lock().unwrap().push(twin);
+        util::lock(&slot.extras).push(twin);
         guid
     }
 
@@ -232,10 +229,10 @@ impl Supervisor {
     pub fn retire(&self, role: Role, index: usize) {
         let slot = self.slot(role, index);
         slot.want_running.store(false, Ordering::SeqCst);
-        if let Some(h) = slot.current.lock().unwrap().as_ref() {
+        if let Some(h) = util::lock(&slot.current).as_ref() {
             h.kill();
         }
-        for h in slot.extras.lock().unwrap().iter() {
+        for h in util::lock(&slot.extras).iter() {
             h.kill();
         }
     }
@@ -250,14 +247,12 @@ impl Supervisor {
     /// Number of supervised worker slots (dataflow topologies sum this
     /// across their stages' fleets).
     pub fn slot_count(&self) -> usize {
-        self.slots.lock().unwrap().len()
+        util::lock(&self.slots).len()
     }
 
     /// Is the slot present *and* still wanted running (not retired)?
     pub fn is_active(&self, role: Role, index: usize) -> bool {
-        self.slots
-            .lock()
-            .unwrap()
+        util::lock(&self.slots)
             .iter()
             .any(|s| s.role == role && s.index == index && s.want_running.load(Ordering::SeqCst))
     }
@@ -265,9 +260,7 @@ impl Supervisor {
     /// Slots of one role that are still wanted running (a reshard's
     /// retired fleets drop out of this count).
     pub fn active_slot_count(&self, role: Role) -> usize {
-        self.slots
-            .lock()
-            .unwrap()
+        util::lock(&self.slots)
             .iter()
             .filter(|s| s.role == role && s.want_running.load(Ordering::SeqCst))
             .count()
@@ -275,10 +268,7 @@ impl Supervisor {
 
     /// GUID of the incumbent instance, if alive.
     pub fn current_guid(&self, role: Role, index: usize) -> Option<Guid> {
-        self.slot(role, index)
-            .current
-            .lock()
-            .unwrap()
+        util::lock(&self.slot(role, index).current)
             .as_ref()
             .map(|h| h.guid())
     }
@@ -286,16 +276,16 @@ impl Supervisor {
     /// Stop everything: kill all workers, stop the monitor, join threads.
     pub fn stop(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        if let Some(m) = self.monitor.lock().unwrap().take() {
+        if let Some(m) = util::lock(&self.monitor).take() {
             let _ = m.join();
         }
         for slot in self.snapshot() {
             slot.want_running.store(false, Ordering::SeqCst);
-            if let Some(h) = slot.current.lock().unwrap().take() {
+            if let Some(h) = util::lock(&slot.current).take() {
                 h.kill();
                 h.join();
             }
-            for h in slot.extras.lock().unwrap().drain(..) {
+            for h in util::lock(&slot.extras).drain(..) {
                 h.kill();
                 h.join();
             }

@@ -35,6 +35,7 @@ use crate::rows::{codec, NameTable, Value};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService, RspGetRows};
 use crate::spill::{pick_straggler_buckets, SpillQueue};
 use crate::storage::{Journal, WriteCategory};
+use crate::util;
 use crate::util::yson::Yson;
 use crate::util::Guid;
 
@@ -253,7 +254,7 @@ impl MapperService {
             ));
         }
         let reducer = req.reducer_index as usize;
-        let mut inner = sh.inner.lock().unwrap();
+        let mut inner = util::lock(&sh.inner);
         let Some(pos) = inner.set_pos(req.epoch) else {
             // An epoch this instance does not route for. Older than our
             // newest set ⇒ it was finalized away (everything it could own
@@ -300,7 +301,7 @@ impl MapperService {
             drop(inner);
             sh.record_window_gauge(bytes);
             sh.mem_freed.notify_all();
-            inner = sh.inner.lock().unwrap();
+            inner = util::lock(&sh.inner);
         }
 
         // Step 4: serve up to `count` rows *without* removing them.
@@ -340,6 +341,7 @@ impl MapperService {
         let nt = inner
             .out_name_table
             .clone()
+            // protolint: allow(panic, "spilled/picked rows exist only after at least one map_batch stored the output name table; reaching this with None means in-process memory corruption, not drift")
             .expect("rows served before any batch was mapped");
         let mut refs: Vec<&crate::rows::UnversionedRow> =
             Vec::with_capacity(spilled_rows.len() + picks.len());
@@ -348,10 +350,12 @@ impl MapperService {
             let entry = inner
                 .window
                 .get(r.entry_index)
+                // protolint: allow(panic, "TrimWindowEntries never trims an entry with live bucket pointers (bucket_ptr_count > 0 pins it); a dangling index is a window-queue accounting bug, caught loudly")
                 .expect("bucket row references trimmed entry");
             refs.push(
                 entry
                     .row_at_shuffle_index(r.shuffle_index)
+                    // protolint: allow(panic, "bucket rows are built from the entry's own shuffle range at push time; an out-of-range index is in-process corruption, not input drift")
                     .expect("shuffle index outside its entry"),
             );
         }
@@ -488,6 +492,7 @@ pub fn spawn_mapper(
                 net.unregister(&shared.address);
             }
         })
+        // protolint: allow(panic, "thread spawn fails only on OS resource exhaustion at worker startup; there is no protocol state yet to corrupt")
         .expect("spawn mapper thread");
 
     MapperHandle {
@@ -558,6 +563,7 @@ fn build_user_mappers(
     spec: &MapperSpec,
     deps: &MapperDeps,
 ) -> UserMappers {
+    // protolint: allow(panic, "epoch_sets() returns at least one element by construction (both branches build a non-empty vec)")
     let (_, current_count) = *sets.last().expect("at least one epoch set");
     UserMappers {
         current: build_user_mapper(spec, deps, current_count),
@@ -610,10 +616,18 @@ fn run_ingestion(
                 }
             },
             Ok(None) => {
+                // Create the row CAS-on-absence: the transactional lookup
+                // records the absent key (version 0) in the read set, so a
+                // twin that created the row first makes this commit conflict
+                // instead of being silently reset to the initial state.
                 let mut txn = sh.client.begin();
-                let init = MapperState::initial();
-                if txn.write(state_table, init.to_row(sh.index)).is_ok() && txn.commit().is_ok() {
-                    break init;
+                if let Ok(None) = txn.lookup(state_table, &state_key) {
+                    let init = MapperState::initial();
+                    if txn.write(state_table, init.to_row(sh.index)).is_ok()
+                        && txn.commit().is_ok()
+                    {
+                        break init;
+                    }
                 }
                 clock.sleep_ms(cfg.backoff_ms);
             }
@@ -633,7 +647,7 @@ fn run_ingestion(
     let sets = epoch_sets(&cur, &plan);
     let mut mappers = build_user_mappers(&sets, spec, deps);
     {
-        let mut inner = sh.inner.lock().unwrap();
+        let mut inner = util::lock(&sh.inner);
         inner.install_epochs(&sets);
         inner.mapped_end = cur.shuffle_unread_row_index;
         inner.local_state = cur.clone();
@@ -679,7 +693,7 @@ fn run_ingestion(
             },
             _ => continue, // state backend error: skip to next iteration
         };
-        let persisted = sh.inner.lock().unwrap().persisted_state.clone();
+        let persisted = util::lock(&sh.inner).persisted_state.clone();
         if remote != persisted {
             // "we are in a split-brain situation and the mapper waits out a
             // configurable delay, after which the internal state is dropped
@@ -690,7 +704,15 @@ fn run_ingestion(
             sh.metrics.add(names::MAPPER_SPLIT_BRAIN, 1);
             clock.sleep_ms(cfg.split_brain_delay_ms);
             let fresh = match sh.client.store.lookup(state_table, &state_key) {
-                Ok(Some(row)) => MapperState::from_row(&row).unwrap_or_else(MapperState::initial),
+                Ok(Some(row)) => match MapperState::from_row(&row) {
+                    Some(s) => s,
+                    // Decode/schema drift on the remote row must not reset
+                    // this mapper to the initial state — that would rewind
+                    // shuffle_unread_row_index to 0 and re-emit every row.
+                    // Keep the stale internal state and retry; step 3
+                    // re-detects the mismatch next cycle.
+                    None => continue,
+                },
                 _ => continue,
             };
             // The reset needs a *real* plan: fabricating one could drop
@@ -703,7 +725,7 @@ fn run_ingestion(
             };
             let sets = epoch_sets(&fresh, &fresh_plan);
             mappers = build_user_mappers(&sets, spec, deps);
-            sh.inner.lock().unwrap().reset(fresh.clone(), &sets);
+            util::lock(&sh.inner).reset(fresh.clone(), &sets);
             cur = fresh;
             sh.record_window_gauge(0);
             continue;
@@ -716,7 +738,7 @@ fn run_ingestion(
         // timestamp once the window drains.
         if batch.rowset.is_empty() {
             {
-                let mut inner = sh.inner.lock().unwrap();
+                let mut inner = util::lock(&sh.inner);
                 if let Some(ev) = &mut inner.event {
                     if ev.closed_at.is_some() {
                         ev.exhausted_after_close = true;
@@ -767,10 +789,12 @@ fn run_ingestion(
         };
         let mapped = mappers.current.map(batch.rowset);
         if let Err(e) = mapped.validate(mappers.current_count) {
+            // protolint: allow(panic, "user Map contract violation: continuing with malformed output could break the determinism contract exactly-once rests on; fail loudly before any state is touched")
             panic!("user Map produced invalid output: {e}");
         }
         let n_out = mapped.rowset.len() as i64;
         let old_partitions: Option<Vec<usize>> = if may_straddle_old {
+            // protolint: allow(panic, "guarded by may_straddle_old, which requires mappers.old.is_some() two statements up")
             let (old_mapper, old_count) = mappers.old.as_mut().expect("checked");
             match (&mapped.key_hashes, input_for_old) {
                 (Some(hashes), _) => Some(
@@ -782,6 +806,7 @@ fn run_ingestion(
                 (None, Some(input)) => {
                     let mapped_old = old_mapper.map(input);
                     if let Err(e) = mapped_old.validate(*old_count) {
+                        // protolint: allow(panic, "user Map contract violation on the old-epoch re-map; same determinism-contract reasoning as the current-epoch check above")
                         panic!("user Map produced invalid output (old epoch): {e}");
                     }
                     assert_eq!(
@@ -792,6 +817,7 @@ fn run_ingestion(
                     Some(mapped_old.partition_indexes)
                 }
                 (None, None) => {
+                    // protolint: allow(panic, "unreachable by construction: input_for_old is Some whenever the current map does not publish hashes; reaching here means the user Mapper lied about publishes_key_hashes()")
                     panic!("mapper declared publishes_key_hashes() but returned no hash column")
                 }
             }
@@ -809,7 +835,7 @@ fn run_ingestion(
         // was committed before the last finalized reshard and gets no
         // bucket at all (the entry trims as soon as live rows ack).
         {
-            let mut inner = sh.inner.lock().unwrap();
+            let mut inner = util::lock(&sh.inner);
             if inner.out_name_table.is_none() && n_out > 0 {
                 inner.out_name_table = Some(mapped.rowset.name_table().clone());
             }
@@ -868,11 +894,9 @@ fn run_ingestion(
                     entry_index,
                 });
                 if became_head {
-                    inner
-                        .window
-                        .get_mut(entry_index)
-                        .unwrap()
-                        .bucket_ptr_count += 1;
+                    if let Some(e) = inner.window.get_mut(entry_index) {
+                        e.bucket_ptr_count += 1;
+                    }
                 }
             }
             inner.mapped_end = cur.shuffle_unread_row_index + n_out;
@@ -899,7 +923,7 @@ fn run_ingestion(
 
         // Step 8: memory semaphore.
         {
-            let mut inner = sh.inner.lock().unwrap();
+            let mut inner = util::lock(&sh.inner);
             while inner.window.total_bytes() > cfg.memory_limit_bytes
                 && !sh.kill.load(Ordering::SeqCst)
                 && !sh.pause.load(Ordering::SeqCst)
@@ -907,20 +931,16 @@ fn run_ingestion(
                 if cfg.spill.enabled {
                     drop(inner);
                     try_spill(sh);
-                    inner = sh.inner.lock().unwrap();
+                    inner = util::lock(&sh.inner);
                     if inner.window.total_bytes() <= cfg.memory_limit_bytes {
                         break;
                     }
                 }
-                let (guard, _timeout) = sh
-                    .mem_freed
-                    .wait_timeout(inner, Duration::from_millis(2))
-                    .unwrap();
-                inner = guard;
+                inner = util::cond_wait_timeout(&sh.mem_freed, inner, Duration::from_millis(2));
                 drop(inner);
                 heartbeat_if_due(sh, session, &mut last_heartbeat_ms);
                 maybe_trim_input(sh, reader, &mut last_trim_ms);
-                inner = sh.inner.lock().unwrap();
+                inner = util::lock(&sh.inner);
             }
         }
     }
@@ -959,7 +979,7 @@ fn maybe_poll_plan(
                 try_adopt(sh, spec, &plan, plan.next_epoch(), cur.shuffle_unread_row_index)
             {
                 {
-                    let mut inner = sh.inner.lock().unwrap();
+                    let mut inner = util::lock(&sh.inner);
                     inner.persisted_state = adopted.clone();
                     inner.local_state = inner
                         .local_state
@@ -978,19 +998,19 @@ fn maybe_poll_plan(
             // *persisted* floor and hard-reset, so everything above the
             // trim point re-maps under the new partition map and nothing
             // this instance routed under the dead map can leak out.
-            let persisted = sh.inner.lock().unwrap().persisted_state.clone();
+            let persisted = util::lock(&sh.inner).persisted_state.clone();
             if let Some(adopted) =
                 try_adopt(sh, spec, &plan, plan.epoch, persisted.shuffle_unread_row_index)
             {
                 let sets = epoch_sets(&adopted, &plan);
                 *mappers = build_user_mappers(&sets, spec, deps);
-                sh.inner.lock().unwrap().reset(adopted.clone(), &sets);
+                util::lock(&sh.inner).reset(adopted.clone(), &sets);
                 *cur = adopted;
                 sh.record_window_gauge(0);
             }
         }
         PlanPhase::Stable if plan.epoch == cur.epoch => {
-            let mut inner = sh.inner.lock().unwrap();
+            let mut inner = util::lock(&sh.inner);
             if inner.epochs.len() > 1 {
                 inner.drop_epochs_below(cur.epoch);
                 mappers.old = None;
@@ -1018,7 +1038,7 @@ fn try_adopt(
     new_epoch: i64,
     base_cutover: i64,
 ) -> Option<MapperState> {
-    let persisted = sh.inner.lock().unwrap().persisted_state.clone();
+    let persisted = util::lock(&sh.inner).persisted_state.clone();
     let old_state_table = reducer_state_table(&sh.cfg.reducer_state_table, plan.epoch);
 
     let mut txn = sh.client.begin();
@@ -1135,7 +1155,7 @@ fn maybe_update_event_time(sh: &Arc<MapperShared>) {
         WatermarkTracker::new(sh.client.store.clone(), t.clone()).fleet_watermark()
     });
     let wm = {
-        let mut inner = sh.inner.lock().unwrap();
+        let mut inner = util::lock(&sh.inner);
         if let Some(ev) = inner.event.as_mut() {
             if let Some(c) = closed {
                 if ev.closed_at < Some(c) {
@@ -1170,7 +1190,7 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
     maybe_update_event_time(sh);
 
     let (local, persisted) = {
-        let inner = sh.inner.lock().unwrap();
+        let inner = util::lock(&sh.inner);
         (inner.local_state.clone(), inner.persisted_state.clone())
     };
     if local.input_unread_row_index <= persisted.input_unread_row_index
@@ -1246,7 +1266,7 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
     match txn.commit() {
         Ok(_) => {
             {
-                let mut inner = sh.inner.lock().unwrap();
+                let mut inner = util::lock(&sh.inner);
                 inner.persisted_state = local.clone();
             }
             // "…and calls Trim on the partition reader."
@@ -1261,7 +1281,7 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
 /// the *active* (newest) epoch's buckets — a draining epoch's buckets are
 /// short-lived by construction and are never spilled.
 fn try_spill(sh: &Arc<MapperShared>) {
-    let mut inner = sh.inner.lock().unwrap();
+    let mut inner = util::lock(&sh.inner);
     let Some(pos) = inner.epochs.len().checked_sub(1) else {
         return;
     };
@@ -1299,6 +1319,7 @@ fn try_spill(sh: &Arc<MapperShared>) {
                     .window
                     .get(r.entry_index)
                     .and_then(|e| e.row_at_shuffle_index(r.shuffle_index))
+                    // protolint: allow(panic, "a bucket head pins its window entry (bucket_ptr_count), so queued rows are resident by construction; a miss is in-process queue corruption")
                     .expect("spill source row must be resident")
                     .clone();
                 // Cache the event time with the record so the watermark

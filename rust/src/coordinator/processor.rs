@@ -26,6 +26,7 @@ use crate::reshard::ReshardRuntime;
 use crate::rows::NameTable;
 use crate::rpc::RpcNet;
 use crate::storage::{WriteAccounting, WriteCategory};
+use crate::util;
 use crate::util::yson::Yson;
 use crate::util::{Clock, Guid, Prng};
 
@@ -372,7 +373,7 @@ impl StreamingProcessor {
             post_stable: None,
         };
         let driver = AutoscaleDriver::start(cfg, deps);
-        if let Some(old) = self.autoscaler.lock().unwrap().replace(driver) {
+        if let Some(old) = util::lock(&self.autoscaler).replace(driver) {
             old.stop();
         }
     }
@@ -382,14 +383,14 @@ impl StreamingProcessor {
     /// picked up by the next driver start (or a manual
     /// [`StreamingProcessor::resume_reshard`]).
     pub fn stop_autoscaler(&self) {
-        if let Some(driver) = self.autoscaler.lock().unwrap().take() {
+        if let Some(driver) = util::lock(&self.autoscaler).take() {
             driver.stop();
         }
     }
 
     /// Is a resident autoscale loop currently attached?
     pub fn autoscaler_running(&self) -> bool {
-        self.autoscaler.lock().unwrap().is_some()
+        util::lock(&self.autoscaler).is_some()
     }
 
     /// Start a live reshard towards `new_count` reducers. Returns the

@@ -126,6 +126,7 @@ pub fn spawn_reducer(
                 }
             }
         })
+        // protolint: allow(panic, "thread spawn fails only on OS resource exhaustion at worker startup; there is no protocol state yet to corrupt")
         .expect("spawn reducer thread");
 
     ReducerHandle {
@@ -200,7 +201,14 @@ impl ReducerRt {
         {
             Ok(Some(row)) => ReducerState::from_row(&row),
             Ok(None) => {
+                // Create the row CAS-on-absence: the transactional lookup
+                // records the absent key (version 0) in the read set, so a
+                // twin that created the row first makes this commit conflict
+                // instead of being silently reset to the initial state.
                 let mut txn = self.deps.client.begin();
+                let Ok(None) = txn.lookup(&self.spec.state_table, &key) else {
+                    return None; // raced a twin (or store error): refetch
+                };
                 let init = if self.spec.epoch > 0 {
                     ReducerState::initial_migrating(self.spec.num_mappers)
                 } else {

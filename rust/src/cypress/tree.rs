@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex};
 use crate::storage::{WriteAccounting, WriteCategory};
 use crate::util::yson::Yson;
 use crate::util::Clock;
+use crate::util;
 
 /// A client session. Ephemeral nodes live exactly as long as their session
 /// keeps heartbeating within the TTL.
@@ -93,7 +94,7 @@ impl Cypress {
     /// every `ttl_ms` of simulated time or its ephemeral nodes vanish.
     pub fn open_session(&self, ttl_ms: u64) -> SessionId {
         let id = SessionId(self.next_session.fetch_add(1, Ordering::Relaxed));
-        self.sessions.lock().unwrap().insert(
+        util::lock(&self.sessions).insert(
             id,
             SessionState {
                 last_heartbeat_ms: self.clock.now_ms(),
@@ -104,7 +105,7 @@ impl Cypress {
     }
 
     pub fn heartbeat(&self, session: SessionId) -> Result<(), CypressError> {
-        let mut sessions = self.sessions.lock().unwrap();
+        let mut sessions = util::lock(&self.sessions);
         let s = sessions
             .get_mut(&session)
             .ok_or(CypressError::NoSuchSession(session))?;
@@ -116,7 +117,7 @@ impl Cypress {
     /// workers never call this — their nodes linger until TTL expiry,
     /// which is the staleness window.
     pub fn close_session(&self, session: SessionId) {
-        self.sessions.lock().unwrap().remove(&session);
+        util::lock(&self.sessions).remove(&session);
         self.sweep_expired();
     }
 
@@ -125,11 +126,11 @@ impl Cypress {
     pub fn sweep_expired(&self) {
         let now = self.clock.now_ms();
         let live: std::collections::HashSet<SessionId> = {
-            let mut sessions = self.sessions.lock().unwrap();
+            let mut sessions = util::lock(&self.sessions);
             sessions.retain(|_, s| now.saturating_sub(s.last_heartbeat_ms) <= s.ttl_ms);
             sessions.keys().copied().collect()
         };
-        let mut root = self.root.lock().unwrap();
+        let mut root = util::lock(&self.root);
         fn prune(node: &mut Node, live: &std::collections::HashSet<SessionId>) {
             node.children.retain(|_, child| {
                 child.owner.map(|o| live.contains(&o)).unwrap_or(true)
@@ -153,9 +154,7 @@ impl Cypress {
     /// session; a node whose owner expired is replaced. This is the
     /// "create and take a lock on key-named nodes" primitive of §4.5.
     pub fn create_ephemeral(&self, path: &str, session: SessionId) -> Result<(), CypressError> {
-        self.sessions
-            .lock()
-            .unwrap()
+        util::lock(&self.sessions)
             .contains_key(&session)
             .then_some(())
             .ok_or(CypressError::NoSuchSession(session))?;
@@ -169,7 +168,7 @@ impl Cypress {
             return Err(CypressError::AlreadyExists("//".to_string()));
         }
         let bytes = path.len() as u64 + 16;
-        let mut root = self.root.lock().unwrap();
+        let mut root = util::lock(&self.root);
         let mut node = &mut *root;
         for (i, part) in parts.iter().enumerate() {
             let last = i == parts.len() - 1;
@@ -193,7 +192,7 @@ impl Cypress {
         let Ok(parts) = split_path(path) else {
             return false;
         };
-        let root = self.root.lock().unwrap();
+        let root = util::lock(&self.root);
         let mut node = &*root;
         for part in parts {
             match node.children.get(part) {
@@ -211,7 +210,7 @@ impl Cypress {
         if parts.is_empty() {
             return Err(CypressError::BadPath(path.to_string()));
         }
-        let mut root = self.root.lock().unwrap();
+        let mut root = util::lock(&self.root);
         let mut node = &mut *root;
         for part in &parts[..parts.len() - 1] {
             node = node
@@ -239,7 +238,7 @@ impl Cypress {
     pub fn list(&self, path: &str) -> Result<Vec<String>, CypressError> {
         self.sweep_expired();
         let parts = split_path(path)?;
-        let root = self.root.lock().unwrap();
+        let root = util::lock(&self.root);
         let mut node = &*root;
         for part in parts {
             node = node
@@ -255,7 +254,7 @@ impl Cypress {
     pub fn set_attr(&self, path: &str, key: &str, value: Yson) -> Result<(), CypressError> {
         let parts = split_path(path)?;
         let bytes = (key.len() + value.to_string().len()) as u64;
-        let mut root = self.root.lock().unwrap();
+        let mut root = util::lock(&self.root);
         let mut node = &mut *root;
         for part in parts {
             node = node
@@ -270,7 +269,7 @@ impl Cypress {
 
     pub fn get_attr(&self, path: &str, key: &str) -> Result<Option<Yson>, CypressError> {
         let parts = split_path(path)?;
-        let root = self.root.lock().unwrap();
+        let root = util::lock(&self.root);
         let mut node = &*root;
         for part in parts {
             node = node
@@ -283,7 +282,7 @@ impl Cypress {
 
     pub fn attrs(&self, path: &str) -> Result<BTreeMap<String, Yson>, CypressError> {
         let parts = split_path(path)?;
-        let root = self.root.lock().unwrap();
+        let root = util::lock(&self.root);
         let mut node = &*root;
         for part in parts {
             node = node

@@ -9,6 +9,7 @@ use crate::storage::accounting::ScopeHandle;
 use crate::storage::{WriteAccounting, WriteCategory};
 
 use super::txn::{Transaction, TxnError};
+use crate::util;
 
 /// Primary key of a sorted-table row: the schema's key-column prefix.
 pub type Key = Vec<Value>;
@@ -93,7 +94,7 @@ impl DynTableStore {
         self.check_available()?;
         assert!(schema.key_count() > 0, "sorted table needs key columns");
         let scope = scope.map(|s| self.accounting.scope_handle(&s));
-        let mut tables = self.tables.lock().unwrap();
+        let mut tables = util::lock(&self.tables);
         if tables.contains_key(name) {
             return Err(StoreError::AlreadyExists(name.to_string()));
         }
@@ -115,7 +116,7 @@ impl DynTableStore {
     /// the mapper's step-3 state fetch (§4.3.3), which is a plain read.
     pub fn lookup(&self, table: &str, key: &[Value]) -> Result<Option<UnversionedRow>, StoreError> {
         self.check_available()?;
-        let tables = self.tables.lock().unwrap();
+        let tables = util::lock(&self.tables);
         let t = tables
             .get(table)
             .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?;
@@ -130,7 +131,7 @@ impl DynTableStore {
         key: &[Value],
     ) -> Result<(u64, Option<UnversionedRow>), StoreError> {
         self.check_available()?;
-        let tables = self.tables.lock().unwrap();
+        let tables = util::lock(&self.tables);
         let t = tables
             .get(table)
             .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?;
@@ -144,7 +145,7 @@ impl DynTableStore {
     /// tests and output verification — not on the hot path).
     pub fn scan(&self, table: &str) -> Result<Vec<UnversionedRow>, StoreError> {
         self.check_available()?;
-        let tables = self.tables.lock().unwrap();
+        let tables = util::lock(&self.tables);
         let t = tables
             .get(table)
             .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?;
@@ -153,7 +154,7 @@ impl DynTableStore {
 
     pub fn row_count(&self, table: &str) -> Result<usize, StoreError> {
         self.check_available()?;
-        let tables = self.tables.lock().unwrap();
+        let tables = util::lock(&self.tables);
         Ok(tables
             .get(table)
             .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?
@@ -162,7 +163,7 @@ impl DynTableStore {
     }
 
     pub fn schema_of(&self, table: &str) -> Result<TableSchema, StoreError> {
-        let tables = self.tables.lock().unwrap();
+        let tables = util::lock(&self.tables);
         Ok(tables
             .get(table)
             .ok_or_else(|| StoreError::NoSuchTable(table.to_string()))?

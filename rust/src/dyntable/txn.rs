@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use crate::queue::ordered_table::OrderedTable;
 use crate::rows::{codec, UnversionedRow, Value};
+use crate::util;
 
 use super::store::{DynTableStore, Key, VersionedRow};
 
@@ -142,7 +143,7 @@ impl Transaction {
             return Ok(out);
         }
         self.store.check_available()?;
-        let tables = self.store.tables.lock().unwrap();
+        let tables = util::lock(&self.store.tables);
         for (table, key) in reads {
             let tk = (table.to_string(), key.clone());
             if let Some(&i) = self.write_index.get(&tk) {
@@ -214,11 +215,15 @@ impl Transaction {
         rows: Vec<UnversionedRow>,
     ) -> Result<(), TxnError> {
         self.check_open()?;
-        assert!(
-            tablet < table.tablet_count(),
-            "append_ordered: tablet {tablet} out of range (table has {})",
-            table.tablet_count()
-        );
+        // A tablet index past the end is topology drift (a caller holding a
+        // pre-reshard partition count), not an invariant violation of this
+        // transaction — surface it as a retriable error, never a panic.
+        if tablet >= table.tablet_count() {
+            return Err(TxnError::TabletUnavailable {
+                table: table.name().to_string(),
+                tablet,
+            });
+        }
         if !rows.is_empty() {
             self.ordered_appends.push((table, tablet, rows));
         }
@@ -246,7 +251,7 @@ impl Transaction {
         // The tables mutex doubles as the commit lock: validation and
         // application are one critical section, which is what 2PC's
         // prepare+commit collapse to in a single-process store.
-        let mut tables = self.store.tables.lock().unwrap();
+        let mut tables = util::lock(&self.store.tables);
 
         // Phase 1: validate every observed version.
         for ((table, key), expected) in &self.read_set {
@@ -294,7 +299,12 @@ impl Transaction {
         // so a linear scan beats a map.
         let mut acct: Vec<(&str, u64, u64)> = Vec::new();
         for ((table, key), m) in &self.write_set {
-            let t = tables.get_mut(table).unwrap();
+            // Unreachable in practice — every write target was validated
+            // under this same continuously-held lock above — but a dropped
+            // table mid-apply still propagates instead of panicking.
+            let Some(t) = tables.get_mut(table) else {
+                return Err(TxnError::NoSuchTable(table.clone()));
+            };
             let journal_bytes = match m {
                 Mutation::Upsert(row) => {
                     let bytes = 4 + codec::encoded_size_row(row);
@@ -331,7 +341,9 @@ impl Transaction {
             }
         }
         for (table, bytes, ops) in acct {
-            let t = tables.get(table).unwrap();
+            let Some(t) = tables.get(table) else {
+                return Err(TxnError::NoSuchTable(table.to_string()));
+            };
             self.store.accounting.record_batch(t.category, bytes, ops);
             if let Some(scope) = &t.scope {
                 scope.record_batch(t.category, bytes, ops);

@@ -368,6 +368,7 @@ impl WindowedReducer {
     }
 
     fn write_fired(&self, txn: &mut Transaction, fired_wm: i64) -> Result<(), TxnError> {
+        // protolint: allow(cas_read_set, "helper: every caller opens the txn with read_fired, which puts this marker row in the read set")
         txn.write(&self.state_table(), fired_marker_row(self.index, fired_wm))
     }
 
@@ -681,6 +682,7 @@ impl WindowedReducer {
         while j < tagged.len() {
             let run_start = j;
             let slot = &tagged[run_start].0;
+            // protolint: allow(panic, "every tagged slot was inserted into self.resident by the seeding loop directly above in this same function")
             let mut acc = self.resident.get(slot).cloned().expect("seeded above");
             while j < tagged.len() && tagged[j].0 == *slot {
                 self.deps.fold.fold(&mut acc, &all_rows[tagged[j].1]);
@@ -755,6 +757,7 @@ impl Reducer for WindowedReducer {
                 Err(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
             }
         }
+        // protolint: allow(panic, "deliberate crash-for-restart after exhausting retries: the supervisor respawns the worker and recovery re-reads persisted state; limping on without a store would stall the watermark silently")
         panic!(
             "windowed reducer {} (epoch {}): store kept failing; crashing for restart",
             self.index, self.epoch

@@ -261,6 +261,7 @@ fn table_wa(opts: &FigureOpts) {
     {
         let clock = Clock::scaled(8);
         let env = ClusterEnv::new(clock.clone(), opts.seed);
+        // protolint: allow(category, "source input table: the SourceIngest default is the intent")
         let table = OrderedTable::new(
             "//input/wa_ours",
             input_name_table(),
@@ -308,6 +309,7 @@ fn table_wa(opts: &FigureOpts) {
         let env = ClusterEnv::new(clock.clone(), opts.seed);
         let client = env.client();
         ensure_output_table(&client).expect("create analytics output table");
+        // protolint: allow(category, "source input table: the SourceIngest default is the intent")
         let table = OrderedTable::new(
             "//input/wa_baseline",
             input_name_table(),
@@ -424,6 +426,7 @@ fn table_chain(opts: &FigureOpts) {
     println!("# table chain: two-stage dataflow (sessionize -> aggregate), run to drain");
     let clock = Clock::scaled(8);
     let env = ClusterEnv::new(clock.clone(), opts.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let source_table = OrderedTable::new(
         "//input/chain",
         input_name_table(),
@@ -746,6 +749,7 @@ fn table_reshard_auto(opts: &FigureOpts) {
     const PARTITIONS: usize = 4;
     let clock = Clock::scaled(8);
     let env = ClusterEnv::new(clock.clone(), opts.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let source_table = OrderedTable::new(
         "//input/auto_topo",
         input_name_table(),

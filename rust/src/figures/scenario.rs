@@ -78,6 +78,7 @@ impl ScenarioCfg {
 pub fn start(cfg: ScenarioCfg) -> Scenario {
     let clock = Clock::scaled(cfg.speedup);
     let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let table = OrderedTable::new(
         "//input/master_logs",
         input_name_table(),

@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::timeseries::TimeSeries;
+use crate::util;
 
 /// Process-wide registry of counters and time series, shared by all
 /// simulated workers of a streaming processor.
@@ -21,9 +22,7 @@ impl MetricsHub {
 
     /// Get-or-create a named series.
     pub fn series(&self, name: &str) -> Arc<TimeSeries> {
-        self.series
-            .lock()
-            .unwrap()
+        util::lock(&self.series)
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(TimeSeries::new(name)))
             .clone()
@@ -31,9 +30,7 @@ impl MetricsHub {
 
     /// Get-or-create a named counter.
     pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
-        self.counters
-            .lock()
-            .unwrap()
+        util::lock(&self.counters)
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(AtomicU64::new(0)))
             .clone()
@@ -50,7 +47,7 @@ impl MetricsHub {
     /// All series whose names start with `prefix`, sorted by name — e.g.
     /// `mapper/`-prefixed read-lag series for fig. 5.2.
     pub fn series_with_prefix(&self, prefix: &str) -> Vec<Arc<TimeSeries>> {
-        let g = self.series.lock().unwrap();
+        let g = util::lock(&self.series);
         let mut out: Vec<_> = g
             .iter()
             .filter(|(k, _)| k.starts_with(prefix))
@@ -61,7 +58,7 @@ impl MetricsHub {
     }
 
     pub fn series_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.series.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = util::lock(&self.series).keys().cloned().collect();
         names.sort();
         names
     }
@@ -72,7 +69,7 @@ impl MetricsHub {
     /// has a sample in the window (e.g. a drained input: no reads, no
     /// lag — which the policy deliberately treats as "not overloaded").
     pub fn max_mean_since(&self, prefix: &str, suffix: &str, from_ms: u64) -> Option<f64> {
-        let g = self.series.lock().unwrap();
+        let g = util::lock(&self.series);
         g.iter()
             .filter(|(k, _)| k.starts_with(prefix) && k.ends_with(suffix))
             .filter_map(|(_, s)| s.mean_since(from_ms))

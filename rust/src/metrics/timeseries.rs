@@ -9,6 +9,7 @@
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
+use crate::util;
 
 /// Default per-series retention cap. At the workers' sub-second recording
 /// cadences this spans hours of simulated time — far wider than any
@@ -49,7 +50,7 @@ impl TimeSeries {
     }
 
     pub fn record(&self, t_ms: u64, value: f64) {
-        let mut g = self.samples.lock().unwrap();
+        let mut g = util::lock(&self.samples);
         if g.len() == self.cap {
             g.pop_front();
         }
@@ -57,7 +58,7 @@ impl TimeSeries {
     }
 
     pub fn len(&self) -> usize {
-        self.samples.lock().unwrap().len()
+        util::lock(&self.samples).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -65,24 +66,22 @@ impl TimeSeries {
     }
 
     pub fn samples(&self) -> Vec<(u64, f64)> {
-        self.samples.lock().unwrap().iter().copied().collect()
+        util::lock(&self.samples).iter().copied().collect()
     }
 
     pub fn last(&self) -> Option<(u64, f64)> {
-        self.samples.lock().unwrap().back().copied()
+        util::lock(&self.samples).back().copied()
     }
 
     pub fn max_value(&self) -> Option<f64> {
-        self.samples
-            .lock()
-            .unwrap()
+        util::lock(&self.samples)
             .iter()
             .map(|(_, v)| *v)
             .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
     }
 
     pub fn mean(&self) -> Option<f64> {
-        let g = self.samples.lock().unwrap();
+        let g = util::lock(&self.samples);
         if g.is_empty() {
             return None;
         }
@@ -92,7 +91,7 @@ impl TimeSeries {
     /// Mean over samples with `t >= from_ms` (steady-state stats that skip
     /// warmup).
     pub fn mean_since(&self, from_ms: u64) -> Option<f64> {
-        let g = self.samples.lock().unwrap();
+        let g = util::lock(&self.samples);
         let (mut sum, mut n) = (0.0f64, 0usize);
         for (t, v) in g.iter() {
             if *t >= from_ms {
@@ -111,7 +110,7 @@ impl TimeSeries {
     /// harness prints so series of different density align on one axis.
     pub fn binned(&self, bin_ms: u64) -> Vec<(u64, f64)> {
         assert!(bin_ms > 0);
-        let g = self.samples.lock().unwrap();
+        let g = util::lock(&self.samples);
         let mut out: Vec<(u64, f64, u32)> = Vec::new();
         for (t, v) in g.iter() {
             let bin = t / bin_ms * bin_ms;
@@ -132,9 +131,7 @@ impl TimeSeries {
     /// only at samples with `t >= from_ms`. Used for "recovered in ~15 s"
     /// style measurements (fig. 5.3).
     pub fn first_below_after(&self, from_ms: u64, threshold: f64) -> Option<u64> {
-        self.samples
-            .lock()
-            .unwrap()
+        util::lock(&self.samples)
             .iter()
             .find(|(t, v)| *t >= from_ms && *v <= threshold)
             .map(|(t, _)| *t)

@@ -18,6 +18,7 @@ use super::{ContinuationToken, PartitionReader, QueueError, ReadBatch};
 use crate::rows::{codec, NameTable, UnversionedRow, UnversionedRowset};
 use crate::storage::{Journal, WriteAccounting, WriteCategory};
 use crate::util::prng::splitmix64;
+use crate::util;
 
 #[derive(Debug)]
 struct LbPartition {
@@ -91,7 +92,7 @@ impl LbTopic {
     /// Producer append. Each row lands at a gappy offset.
     pub fn append(&self, partition: usize, rows: Vec<UnversionedRow>) -> Result<(), QueueError> {
         let encoded = codec::encode_rows(&rows);
-        let mut p = self.partitions[partition].lock().unwrap();
+        let mut p = util::lock(&self.partitions[partition]);
         if p.unavailable {
             return Err(QueueError::Unavailable(partition));
         }
@@ -109,17 +110,17 @@ impl LbTopic {
     pub fn retained_rows(&self) -> usize {
         self.partitions
             .iter()
-            .map(|p| p.lock().unwrap().entries.len())
+            .map(|p| util::lock(&p).entries.len())
             .sum()
     }
 
     pub fn set_unavailable(&self, partition: usize, unavailable: bool) {
-        self.partitions[partition].lock().unwrap().unavailable = unavailable;
+        util::lock(&self.partitions[partition]).unavailable = unavailable;
     }
 
     /// Offset one past the newest entry (for lag probes).
     pub fn head_offset(&self, partition: usize) -> u64 {
-        self.partitions[partition].lock().unwrap().next_offset
+        util::lock(&self.partitions[partition]).next_offset
     }
 
     pub fn reader(self: &Arc<Self>, partition: usize) -> LbReader {
@@ -146,7 +147,7 @@ impl PartitionReader for LbReader {
     ) -> Result<ReadBatch, QueueError> {
         let from_offset = decode_token(token)?;
         let want = (end_row_index - begin_row_index).max(0) as usize;
-        let p = self.topic.partitions[self.partition].lock().unwrap();
+        let p = util::lock(&self.topic.partitions[self.partition]);
         if p.unavailable {
             return Err(QueueError::Unavailable(self.partition));
         }
@@ -186,7 +187,7 @@ impl PartitionReader for LbReader {
 
     fn trim(&mut self, _row_index: i64, token: &ContinuationToken) -> Result<(), QueueError> {
         let below = decode_token(token)?;
-        let mut p = self.topic.partitions[self.partition].lock().unwrap();
+        let mut p = util::lock(&self.topic.partitions[self.partition]);
         if p.unavailable {
             return Err(QueueError::Unavailable(self.partition));
         }

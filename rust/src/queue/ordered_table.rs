@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use super::{ContinuationToken, PartitionReader, QueueError, ReadBatch};
 use crate::rows::{codec, NameTable, UnversionedRow, UnversionedRowset};
 use crate::storage::{Journal, WriteAccounting, WriteCategory};
+use crate::util;
 
 /// One queue-like partition of an ordered table.
 #[derive(Debug)]
@@ -87,14 +88,14 @@ impl OrderedTable {
     }
 
     pub fn tablet_count(&self) -> usize {
-        self.tablets.read().unwrap().len()
+        util::rlock(&self.tablets).len()
     }
 
     /// Grow to at least `count` tablets (no-op when already that large;
     /// shrinking is never done in place — a reshard that reduces the
     /// partition count simply stops writing the tail tablets).
     pub fn ensure_tablets(&self, count: usize) {
-        let mut tablets = self.tablets.write().unwrap();
+        let mut tablets = util::wlock(&self.tablets);
         while tablets.len() < count {
             tablets.push(fresh_tablet());
         }
@@ -102,7 +103,7 @@ impl OrderedTable {
 
     /// The tablet handle (panics on out-of-range, like the old indexing).
     fn tablet(&self, index: usize) -> Arc<Mutex<Tablet>> {
-        self.tablets.read().unwrap()[index].clone()
+        util::rlock(&self.tablets)[index].clone()
     }
 
     /// Table name (the journal's name).
@@ -118,8 +119,8 @@ impl OrderedTable {
     /// row. Durable: bytes are journal-accounted.
     pub fn append(&self, tablet: usize, rows: Vec<UnversionedRow>) -> Result<i64, QueueError> {
         let encoded = codec::encode_rows(&rows);
-        let t = self.tablet(tablet);
-        let mut t = t.lock().unwrap();
+        let tablet_ref = self.tablet(tablet);
+        let mut t = util::lock(&tablet_ref);
         if t.unavailable {
             return Err(QueueError::Unavailable(tablet));
         }
@@ -141,9 +142,10 @@ impl OrderedTable {
     pub(crate) fn append_committed(&self, tablet: usize, rows: Vec<UnversionedRow>) -> i64 {
         let encoded: Arc<[u8]> = codec::encode_rows(&rows).into();
         let retained =
+            // protolint: allow(panic, "round-trip of bytes this same statement encoded; a failure is a codec bug, not data drift, and the commit lock is held — no partial protocol state escapes")
             codec::decode_rows_shared(&encoded).expect("own encode must decode");
-        let t = self.tablet(tablet);
-        let mut t = t.lock().unwrap();
+        let tablet_ref = self.tablet(tablet);
+        let mut t = util::lock(&tablet_ref);
         self.journal.append(encoded);
         let first = t.first_index + t.rows.len() as i64;
         t.rows.extend(retained);
@@ -153,25 +155,25 @@ impl OrderedTable {
     /// Is the tablet currently serving requests? (False during an injected
     /// partition outage.)
     pub fn is_available(&self, tablet: usize) -> bool {
-        !self.tablet(tablet).lock().unwrap().unavailable
+        !util::lock(&self.tablet(tablet)).unavailable
     }
 
     /// Absolute index one past the last appended row.
     pub fn end_index(&self, tablet: usize) -> i64 {
-        let t = self.tablet(tablet);
-        let t = t.lock().unwrap();
+        let tablet_ref = self.tablet(tablet);
+        let t = util::lock(&tablet_ref);
         t.first_index + t.rows.len() as i64
     }
 
     /// Absolute index of the first retained (untrimmed) row.
     pub fn first_index(&self, tablet: usize) -> i64 {
-        self.tablet(tablet).lock().unwrap().first_index
+        util::lock(&self.tablet(tablet)).first_index
     }
 
     /// Rows currently retained across all tablets (for backlog metrics).
     pub fn retained_rows(&self) -> usize {
-        let tablets: Vec<_> = self.tablets.read().unwrap().clone();
-        tablets.iter().map(|t| t.lock().unwrap().rows.len()).sum()
+        let tablets: Vec<_> = util::rlock(&self.tablets).clone();
+        tablets.iter().map(|tablet| util::lock(tablet).rows.len()).sum()
     }
 
     /// Per-tablet trim low-water marks: the first retained absolute index
@@ -180,17 +182,17 @@ impl OrderedTable {
     /// continuation state, then trims), so the marks trail the downstream
     /// consumers' committed positions and bound the table's memory.
     pub fn low_water_marks(&self) -> Vec<i64> {
-        let tablets: Vec<_> = self.tablets.read().unwrap().clone();
+        let tablets: Vec<_> = util::rlock(&self.tablets).clone();
         tablets
             .iter()
-            .map(|t| t.lock().unwrap().first_index)
+            .map(|tablet| util::lock(tablet).first_index)
             .collect()
     }
 
     /// Inject or clear a partition outage (used by §5.2-style drills:
     /// "failures of individual partitions").
     pub fn set_unavailable(&self, tablet: usize, unavailable: bool) {
-        self.tablet(tablet).lock().unwrap().unavailable = unavailable;
+        util::lock(&self.tablet(tablet)).unavailable = unavailable;
     }
 
     /// Public indexed read over one tablet (used by the §6 order log).
@@ -209,8 +211,8 @@ impl OrderedTable {
     }
 
     fn read(&self, tablet: usize, begin: i64, end: i64) -> Result<Vec<UnversionedRow>, QueueError> {
-        let t = self.tablet(tablet);
-        let t = t.lock().unwrap();
+        let tablet_ref = self.tablet(tablet);
+        let t = util::lock(&tablet_ref);
         if t.unavailable {
             return Err(QueueError::Unavailable(tablet));
         }
@@ -232,8 +234,8 @@ impl OrderedTable {
     }
 
     fn trim(&self, tablet: usize, row_index: i64) -> Result<(), QueueError> {
-        let t = self.tablet(tablet);
-        let mut t = t.lock().unwrap();
+        let tablet_ref = self.tablet(tablet);
+        let mut t = util::lock(&tablet_ref);
         if t.unavailable {
             return Err(QueueError::Unavailable(tablet));
         }

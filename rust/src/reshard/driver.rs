@@ -43,6 +43,7 @@ use crate::util::Clock;
 use super::autoscaler::{Autoscaler, AutoscalerConfig, LoadSignal, ScaleDecision};
 use super::plan::{PlanPhase, ReshardPlan};
 use super::resharder::{self, ReshardContext, ReshardError};
+use crate::util;
 
 /// Tunables of the resident loop.
 #[derive(Debug, Clone)]
@@ -140,6 +141,7 @@ impl LoopHandle {
                 let stop = stop.clone();
                 move || body(&stop)
             })
+            // protolint: allow(panic, "thread spawn fails only on OS resource exhaustion at driver startup; no protocol state exists yet")
             .unwrap_or_else(|e| panic!("spawn {name} thread: {e}"));
         LoopHandle {
             stop,
@@ -150,7 +152,7 @@ impl LoopHandle {
     /// Signal the loop to exit and join it (idempotent).
     pub(crate) fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(join) = self.join.lock().unwrap().take() {
+        if let Some(join) = util::lock(&self.join).take() {
             let _ = join.join();
         }
     }

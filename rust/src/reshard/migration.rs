@@ -29,6 +29,7 @@ use crate::storage::{WriteAccounting, WriteCategory};
 use crate::util::yson::Yson;
 
 use super::plan::migration_table;
+use crate::util;
 
 /// Columns of a migration-handoff row: which old reducer exported it, a
 /// workload-defined kind tag, and an opaque payload.
@@ -179,7 +180,7 @@ impl ReshardRuntime {
     /// The migration handoff table for the fleet bootstrapping `epoch`,
     /// with one tablet per new reducer. Idempotent get-or-create.
     pub fn migration_for(&self, epoch: i64, new_partitions: usize) -> Arc<OrderedTable> {
-        let mut g = self.migrations.lock().unwrap();
+        let mut g = util::lock(&self.migrations);
         g.entry(epoch)
             .or_insert_with(|| {
                 OrderedTable::new_scoped(
@@ -196,7 +197,7 @@ impl ReshardRuntime {
 
     /// Total rows ever appended to migration handoff tables (stats).
     pub fn migrated_rows(&self) -> i64 {
-        let g = self.migrations.lock().unwrap();
+        let g = util::lock(&self.migrations);
         g.values()
             .map(|t| (0..t.tablet_count()).map(|i| t.end_index(i)).sum::<i64>())
             .sum()

@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use super::fault::FaultPlan;
 use super::messages::{Request, Response};
 use crate::util::{Clock, Prng};
+use crate::util;
 
 /// A service mounted at an address. Handlers run on the caller's thread
 /// (the in-process analogue of a synchronous RPC).
@@ -68,16 +69,16 @@ impl RpcNet {
 
     /// Unmount (worker death). Subsequent calls see `NoSuchService`.
     pub fn unregister(&self, address: &str) {
-        self.services.write().unwrap().remove(address);
+        util::wlock(&self.services).remove(address);
     }
 
     pub fn is_registered(&self, address: &str) -> bool {
-        self.services.read().unwrap().contains_key(address)
+        util::rlock(&self.services).contains_key(address)
     }
 
     /// Mutate the fault plan (drills, tests).
     pub fn with_faults(&self, f: impl FnOnce(&mut FaultPlan)) {
-        f(&mut self.faults.lock().unwrap());
+        f(&mut util::lock(&self.faults));
     }
 
     /// Perform a call from `src` to `dst`, subject to the fault plan.
@@ -89,8 +90,8 @@ impl RpcNet {
 
         // Fault decisions are made under the prng lock for determinism.
         let (cut, dropped, duplicated, delay_ms) = {
-            let faults = self.faults.lock().unwrap();
-            let mut prng = self.prng.lock().unwrap();
+            let faults = util::lock(&self.faults);
+            let mut prng = util::lock(&self.prng);
             let cut = faults.is_cut(src, dst);
             let dropped = !cut && faults.drop_prob > 0.0 && prng.chance(faults.drop_prob);
             let duplicated = !cut && !dropped && faults.dup_prob > 0.0 && prng.chance(faults.dup_prob);

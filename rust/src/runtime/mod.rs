@@ -35,6 +35,7 @@
 //! and chunk arbitrary batch sizes to fit (see `compute::hlo`).
 
 use std::path::PathBuf;
+use crate::util;
 
 /// Rows per compiled batch (must match `python/compile/aot.py`).
 pub const BATCH: usize = 1024;
@@ -95,7 +96,7 @@ mod pjrt_impl {
         /// Execute with the given argument literals; returns the un-tupled
         /// results (artifacts are lowered with `return_tuple=True`).
         pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
-            let exe = self.exe.lock().unwrap();
+            let exe = util::lock(&self.exe);
             let result = exe.execute::<xla::Literal>(args)?;
             let literal = result[0][0].to_literal_sync()?;
             Ok(literal.to_tuple()?)

@@ -10,6 +10,7 @@ use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use crate::util;
 
 /// What a persisted byte was written *for*. The WA factor of the streaming
 /// processor counts only the categories the processor itself is responsible
@@ -208,7 +209,7 @@ impl WriteAccounting {
 
     /// Get-or-create the lock-free recording handle for a scope.
     pub fn scope_handle(&self, scope: &str) -> ScopeHandle {
-        let mut g = self.scoped.lock().unwrap();
+        let mut g = util::lock(&self.scoped);
         let cells = g
             .entry(scope.to_string())
             .or_insert_with(|| Arc::new(ScopeCells::default()))
@@ -237,7 +238,7 @@ impl WriteAccounting {
     /// recorded anything).
     pub fn scope_snapshot(&self, scope: &str) -> AccountingSnapshot {
         let cells = {
-            let g = self.scoped.lock().unwrap();
+            let g = util::lock(&self.scoped);
             g.get(scope).cloned()
         };
         let mut s = AccountingSnapshot::default();

@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::accounting::{WriteAccounting, WriteCategory};
+use crate::util;
 
 /// Opaque id of a stored chunk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -51,14 +52,12 @@ impl ChunkStore {
         let data: Arc<[u8]> = data.into();
         self.accounting.record(self.category, data.len() as u64);
         let id = ChunkId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        self.chunks.lock().unwrap().insert(id, data);
+        util::lock(&self.chunks).insert(id, data);
         id
     }
 
     pub fn get(&self, id: ChunkId) -> Result<Arc<[u8]>, ChunkError> {
-        self.chunks
-            .lock()
-            .unwrap()
+        util::lock(&self.chunks)
             .get(&id)
             .cloned()
             .ok_or(ChunkError::NotFound(id))
@@ -66,19 +65,17 @@ impl ChunkStore {
 
     /// Remove a chunk once its consumers are done (idempotent).
     pub fn delete(&self, id: ChunkId) {
-        self.chunks.lock().unwrap().remove(&id);
+        util::lock(&self.chunks).remove(&id);
     }
 
     /// Number of live (not yet deleted) chunks.
     pub fn live_count(&self) -> usize {
-        self.chunks.lock().unwrap().len()
+        util::lock(&self.chunks).len()
     }
 
     /// Bytes currently held live.
     pub fn live_bytes(&self) -> u64 {
-        self.chunks
-            .lock()
-            .unwrap()
+        util::lock(&self.chunks)
             .values()
             .map(|c| c.len() as u64)
             .sum()

@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::accounting::{ScopeHandle, WriteAccounting, WriteCategory};
+use crate::util;
 
 /// One journal record: owned when appended as `Vec` (move, no copy),
 /// shared when appended as / promoted to `Arc<[u8]>`.
@@ -127,7 +128,7 @@ impl Journal {
     pub fn append(&self, record: impl Into<Record>) -> u64 {
         let record: Record = record.into();
         self.account(record.len() as u64);
-        let mut g = self.records.lock().unwrap();
+        let mut g = util::lock(&self.records);
         // Incremented under the record lock so the counter never runs
         // ahead of (or behind) what read()/replay() can observe.
         self.total_bytes
@@ -141,7 +142,7 @@ impl Journal {
     pub fn append_accounted(&self, record: impl Into<Record>, accounted_bytes: u64) -> u64 {
         let record: Record = record.into();
         self.account(accounted_bytes);
-        let mut g = self.records.lock().unwrap();
+        let mut g = util::lock(&self.records);
         self.total_bytes
             .fetch_add(record.len() as u64, Ordering::Relaxed);
         g.push(record);
@@ -149,7 +150,7 @@ impl Journal {
     }
 
     pub fn len(&self) -> u64 {
-        self.records.lock().unwrap().len() as u64
+        util::lock(&self.records).len() as u64
     }
 
     pub fn is_empty(&self) -> bool {
@@ -159,13 +160,13 @@ impl Journal {
     /// Read back a record (recovery / tests). Shares the stored buffer,
     /// promoting owned storage on first access.
     pub fn read(&self, seqno: u64) -> Option<Arc<[u8]>> {
-        let mut g = self.records.lock().unwrap();
+        let mut g = util::lock(&self.records);
         g.get_mut(seqno as usize).map(Record::share)
     }
 
     /// Replay all records in order.
     pub fn replay(&self, mut f: impl FnMut(u64, &[u8])) {
-        let g = self.records.lock().unwrap();
+        let g = util::lock(&self.records);
         for (i, r) in g.iter().enumerate() {
             f(i as u64, r.bytes());
         }

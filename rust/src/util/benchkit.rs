@@ -10,6 +10,7 @@
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+use crate::util;
 
 /// Every report produced by this process (fed by [`Bench::run`]), so a
 /// bench binary can emit one machine-readable document at exit — see
@@ -113,14 +114,14 @@ impl Bench {
             self.items_per_iter,
         );
         println!("{}", format_report(&report));
-        COLLECTED.lock().unwrap().push(report.clone());
+        util::lock(&COLLECTED).push(report.clone());
         report
     }
 }
 
 /// Snapshot of every report collected by this process so far.
 pub fn collected() -> Vec<BenchReport> {
-    COLLECTED.lock().unwrap().clone()
+    util::lock(&COLLECTED).clone()
 }
 
 fn json_escape(s: &str) -> String {

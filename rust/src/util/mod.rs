@@ -13,8 +13,10 @@ pub mod yson;
 pub mod benchkit;
 pub mod miniprop;
 pub mod slab;
+pub mod sync;
 
 pub use clock::Clock;
 pub use guid::Guid;
 pub use prng::Prng;
+pub use sync::{cond_wait_timeout, lock, rlock, wlock};
 pub use yson::Yson;

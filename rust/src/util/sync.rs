@@ -1,0 +1,95 @@
+//! Lock acquisition helpers — the crate-wide mutex-poisoning policy.
+//!
+//! Every guard in the crate is taken through these helpers instead of
+//! scattered `.lock().unwrap()` calls (enforced by `tools/protolint`
+//! rule R1's `lock_unwrap` sub-rule). The policy they centralize:
+//!
+//! **Poisoned locks are recovered, not propagated.** A poisoned mutex
+//! means some holder panicked; under this system's fault model a
+//! panicking worker is indistinguishable from a killed one, and the
+//! protocol is explicitly designed to survive killed workers — any
+//! cross-worker invariant a dead holder might have violated is
+//! revalidated by commit-time CAS before it can reach persistent state
+//! (DESIGN.md §"Exactly-once commit protocol"). Propagating the poison
+//! instead would turn one dead worker into a cascade of dead workers
+//! sharing the process, which is strictly worse than the fault being
+//! modeled. Local in-memory state guarded by a poisoned lock is either
+//! rebuilt from persistent state on the next fetch (mapper/reducer
+//! state caches) or monotonic counters whose partial update is benign
+//! (metrics, accounting).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock an `RwLock`, recovering the guard if a writer panicked.
+pub fn rlock<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock an `RwLock`, recovering the guard if a holder panicked.
+pub fn wlock<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` with the same poison-recovery policy as
+/// [`lock`]: a panicked notifier does not take the waiter down with it.
+pub fn cond_wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_helpers_recover_from_poison() {
+        let l = Arc::new(RwLock::new(3u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*rlock(&l), 3);
+        *wlock(&l) += 1;
+        assert_eq!(*rlock(&l), 4);
+    }
+
+    #[test]
+    fn cond_wait_timeout_times_out() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let g = cond_wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(!*g);
+    }
+}

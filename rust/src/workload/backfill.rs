@@ -369,6 +369,7 @@ pub fn run_backfill(
     );
     let clock = Clock::scaled(4);
     let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let table = OrderedTable::new(
         "//input/backfill",
         input_name_table(),
@@ -517,6 +518,7 @@ pub fn run_backfill(
 
     // --- control: re-ingest everything from the source, day zero ---------
     let control_env = ClusterEnv::new(Clock::scaled(4), cfg.seed ^ 0x5A5A);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let control_table = OrderedTable::new(
         "//input/backfill_live",
         input_name_table(),

@@ -217,6 +217,7 @@ fn output_count_sum(env: &ClusterEnv) -> i64 {
 pub fn run_consistency_tier(cfg: &ConsistencyCfg, tier: Consistency, drilled: bool) -> TierOutcome {
     let clock = Clock::scaled(4);
     let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let table = OrderedTable::new(
         "//input/consistency",
         input_name_table(),

@@ -253,6 +253,7 @@ pub fn run_elastic(
 ) -> ElasticOutcome {
     let clock = Clock::scaled(4);
     let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let table = OrderedTable::new(
         "//input/elastic",
         input_name_table(),
@@ -373,6 +374,7 @@ pub fn run_elastic_auto(
 ) -> ElasticOutcome {
     let clock = Clock::scaled(4);
     let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let table = OrderedTable::new(
         "//input/elastic",
         input_name_table(),

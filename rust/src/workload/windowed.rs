@@ -390,6 +390,7 @@ pub fn run_windowed(
 ) -> WindowedOutcome {
     let clock = Clock::scaled(4);
     let env = ClusterEnv::new(clock.clone(), cfg.seed);
+    // protolint: allow(category, "source input table: the SourceIngest default is the intent")
     let table = OrderedTable::new(
         "//input/windowed",
         input_name_table(),

@@ -22,7 +22,7 @@ backfilling from the cold tier (hash-verify + decode one pre-compacted
 columnar chunk per trimmed segment) — the bytes-moved asymmetry `figure
 backfill` measures end to end.
 
-Usage: scripts/bench_model.py [OUTPUT.json]   (default: BENCH_8.json)
+Usage: scripts/bench_model.py [OUTPUT.json]   (default: BENCH_9.json)
 """
 import json
 import struct
@@ -141,7 +141,7 @@ def bench(name, f, items=None, warmup_s=0.1, min_time_s=0.6, min_iters=10):
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_8.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_9.json"
     reports = []
 
     # --- rows: per-row encode+hash vs columnar batch ----------------------

@@ -1,0 +1,621 @@
+#!/usr/bin/env python3
+"""Approximate Python mirror of `tools/protolint` (rules R1-R4).
+
+The canonical linter is the Rust crate `tools/protolint`, which parses
+the crate with `syn` and is what CI runs (`cargo run -p protolint --
+--deny`). This script re-implements the same rules with regexes and a
+brace scanner so the tree can be checked in environments without a Rust
+toolchain. It is an approximation: the lexical guard model and call
+closure are line-based rather than AST-based. Divergences should be
+rare on idiomatic code; when in doubt, the Rust crate's verdict wins.
+
+Usage: python3 scripts/protolint_check.py [--deny]
+Prints findings as `file:line: [rule] message`; exits 1 under --deny
+when any finding is reported.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RULES = ("panic", "lock_unwrap", "lock_order", "category", "cas_read_set")
+PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
+
+# ---------------------------------------------------------------- config
+
+
+def parse_config(path):
+    cfg = {
+        "protocol_modules": [],
+        "classes": [],
+        "order": [],
+        "defaulting_constructors": [],
+        "defining_modules": [],
+        "state_table_patterns": [],
+    }
+    section = None
+    buf = ""
+    key = None
+    text = open(path).read()
+    for raw in text.splitlines():
+        line = strip_toml_comment(raw).strip()
+        if not line:
+            continue
+        m = re.match(r"^\[(\w+)\]$", line)
+        if m:
+            section = m.group(1)
+            continue
+        if buf:
+            buf += " " + line
+        else:
+            if "=" not in line:
+                continue
+            key, val = line.split("=", 1)
+            key = key.strip()
+            buf = val.strip()
+        if buf.startswith("[") and buf.count("[") != buf.count("]"):
+            continue  # multi-line array, keep accumulating
+        val = buf
+        buf = ""
+        if val.startswith("["):
+            items = re.findall(r'"([^"]*)"', val)
+        else:
+            m = re.match(r'^"([^"]*)"$', val)
+            items = m.group(1) if m else val
+        if section == "paths":
+            cfg[key] = items
+        elif section == "r1" and key == "protocol_modules":
+            cfg["protocol_modules"] = items
+        elif section == "r2" and key == "classes":
+            cfg["classes"] = [tuple(x.split("=>", 1)) for x in items]
+        elif section == "r2" and key == "order":
+            cfg["order"] = items
+        elif section == "r3":
+            cfg[key] = items
+        elif section == "r4":
+            cfg[key] = items
+    return cfg
+
+
+def strip_toml_comment(line):
+    out, in_str = [], False
+    for c in line:
+        if c == '"':
+            in_str = not in_str
+        if c == "#" and not in_str:
+            break
+        out.append(c)
+    return "".join(out)
+
+
+def matches_module(rel, modules):
+    return any(
+        rel.startswith(m) if m.endswith("/") else rel == m for m in modules
+    )
+
+
+def classify(cfg, receiver):
+    for pat, cls in cfg["classes"]:
+        if pat in receiver:
+            return cls
+    return None
+
+
+def rank(cfg, cls):
+    try:
+        return cfg["order"].index(cls)
+    except ValueError:
+        return None
+
+
+# ------------------------------------------------------------- source model
+
+
+def clean_line(line):
+    """Blank out string/char contents and // comments (keep length-ish)."""
+    line = re.sub(r"'(\\.|[^'\\])'", "' '", line)
+    out, in_str, i = [], False, 0
+    while i < len(line):
+        c = line[i]
+        if in_str:
+            if c == "\\":
+                out.append("  ")
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+                out.append(c)
+            else:
+                out.append(" ")
+            i += 1
+            continue
+        if c == '"':
+            in_str = True
+            out.append(c)
+            i += 1
+            continue
+        if c == "/" and line[i : i + 2] == "//":
+            break
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+class File:
+    def __init__(self, rel, text):
+        self.rel = rel
+        self.raw = text.splitlines()
+        self.clean = [clean_line(l) for l in self.raw]
+        self.masked = mask_tests(self.clean)
+
+
+def mask_tests(clean):
+    """Blank lines inside #[cfg(test)] / #[test] items (brace-matched)."""
+    masked = list(clean)
+    i = 0
+    n = len(clean)
+    while i < n:
+        line = clean[i].strip()
+        if re.match(r"#\[cfg\(test\)\]|#\[test\]", line):
+            j = i
+            depth = 0
+            opened = False
+            while j < n:
+                for c in masked[j]:
+                    if c == "{":
+                        depth += 1
+                        opened = True
+                    elif c == "}":
+                        depth -= 1
+                masked[j] = ""
+                if opened and depth <= 0:
+                    break
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+    return masked
+
+
+ALLOW_RE = re.compile(r'protolint: allow\((\w+)(?:,\s*"([^"]*)")?')
+
+
+def allowed(file, line_no, rule):
+    def has(idx):
+        return any(
+            m.group(1) == rule for m in ALLOW_RE.finditer(file.raw[idx])
+        )
+
+    if line_no < 1 or line_no > len(file.raw):
+        return False
+    if has(line_no - 1):
+        return True
+    i = line_no - 1
+    while i > 0 and file.raw[i - 1].lstrip().startswith("//"):
+        i -= 1
+        if has(i):
+            return True
+    return False
+
+
+def check_annotations(files, findings):
+    for f in files:
+        for i, raw in enumerate(f.raw):
+            for m in ALLOW_RE.finditer(raw):
+                rule, reason = m.group(1), m.group(2)
+                if rule not in RULES:
+                    findings.append((f.rel, i + 1, "annotation",
+                                     f"allow names unknown rule `{rule}`"))
+                elif reason is None or not reason.strip():
+                    findings.append((f.rel, i + 1, "annotation",
+                                     f"allow({rule}) needs a reason"))
+
+
+# --------------------------------------------------------------------- R1
+
+
+def check_r1(cfg, files, findings):
+    for f in files:
+        if not matches_module(f.rel, cfg["protocol_modules"]):
+            continue
+        for i, line in enumerate(f.masked):
+            for m in re.finditer(r"\.\s*(unwrap|expect)\s*\(", line):
+                before = line[: m.start()]
+                rule = (
+                    "lock_unwrap"
+                    if re.search(r"\.(lock|read|write)\(\)\s*$", before)
+                    else "panic"
+                )
+                if not allowed(f, i + 1, rule):
+                    findings.append((f.rel, i + 1, rule,
+                                     f"`.{m.group(1)}()` in a protocol module"))
+            # a chain broken across lines: `.lock()` ends prev line
+            if re.match(r"\s*\.\s*(unwrap|expect)\s*\(", line) and i > 0:
+                pass  # handled above; receivers never split in this tree
+            for m in re.finditer(r"\b(panic|unreachable|todo|unimplemented)!", line):
+                if not allowed(f, i + 1, "panic"):
+                    findings.append((f.rel, i + 1, "panic",
+                                     f"`{m.group(1)}!` in a protocol module"))
+
+
+# --------------------------------------------------------------------- fns
+
+
+FN_RE = re.compile(r"\bfn\s+(\w+)")
+IMPL_RE = re.compile(
+    r"\bimpl(?:<[^>]*>)?\s+(?:[\w:<>,'\s]+\bfor\s+)?(?:[\w:]*::)?([A-Za-z_]\w*)"
+)
+
+
+def extract_fns(file):
+    """Yield (name, impl_type, start_line_idx, body_line_idxs)."""
+    fns = []
+    impl_stack = []  # (depth, type)
+    depth = 0
+    pending_fn = None  # (name, ty, depth_at_sig)
+    open_fns = []  # (name, ty, body_depth, lines)
+    for i, line in enumerate(file.masked):
+        im = IMPL_RE.search(line)
+        if im and line.lstrip().startswith("impl"):
+            impl_stack.append((depth, im.group(1)))
+        fm = FN_RE.search(line)
+        if fm and pending_fn is None and not open_fns:
+            ty = impl_stack[-1][1] if impl_stack else None
+            pending_fn = (fm.group(1), ty, depth)
+        for c in line:
+            if c == "{":
+                depth += 1
+                if pending_fn is not None:
+                    name, ty, _ = pending_fn
+                    open_fns.append((name, ty, depth, []))
+                    pending_fn = None
+            elif c == "}":
+                depth -= 1
+                if open_fns and depth < open_fns[-1][2]:
+                    name, ty, _, lines = open_fns.pop()
+                    fns.append((name, ty, lines))
+                while impl_stack and depth < impl_stack[-1][0]:
+                    impl_stack.pop()
+        if pending_fn is not None and ";" in line and "{" not in line:
+            pending_fn = None  # trait-method declaration, no body
+        if open_fns:
+            open_fns[0][3].append(i)
+    return [(n, t, lines) for (n, t, lines) in fns if lines]
+
+
+# --------------------------------------------------------------------- R2
+
+
+UTIL_LOCK_RE = re.compile(r"\b(?:util\s*::\s*)?(lock|rlock|wlock)\s*\(")
+METHOD_LOCK_RE = re.compile(r"\.\s*(lock|read|write)\s*\(\s*\)")
+
+
+def receiver_before(line, idx):
+    """Token chain ending at idx, scanning backward over idents/parens."""
+    i = idx
+    depth = 0
+    while i > 0:
+        c = line[i - 1]
+        if c == ")":
+            depth += 1
+        elif c == "(":
+            if depth == 0:
+                break
+            depth -= 1
+        elif depth == 0 and not (c.isalnum() or c in "_.:"):
+            break
+        i -= 1
+    return line[i:idx]
+
+
+def arg_after(line, idx):
+    """Balanced-paren argument text starting after '(' at idx."""
+    depth = 1
+    j = idx + 1
+    while j < len(line) and depth > 0:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    arg = line[idx + 1 : j - 1]
+    return arg.replace("&", "").replace("mut ", "").strip()
+
+
+def line_acquisitions(line):
+    """[(pos, receiver_text, is_util_call)] for one cleaned line."""
+    out = []
+    for m in UTIL_LOCK_RE.finditer(line):
+        before = line[: m.start()].rstrip()
+        if before.endswith("."):
+            continue  # method call, handled below
+        if m.group(1) == "lock" and not re.search(
+            r"(util\s*::\s*|^|[^\w.])lock\s*\($", line[: m.end()]
+        ):
+            pass
+        out.append((m.start(), arg_after(line, m.end() - 1), True))
+    for m in METHOD_LOCK_RE.finditer(line):
+        out.append((m.start(), receiver_before(line, m.start()), False))
+    out.sort()
+    return out
+
+
+def fn_acquired_classes(cfg, file, lines):
+    classes = set()
+    for i in lines:
+        for _, recv, _ in line_acquisitions(file.masked[i]):
+            cls = classify(cfg, recv)
+            if cls:
+                classes.add(cls)
+    return classes
+
+
+def build_fn_map(cfg, files):
+    fn_map = {}  # key -> set(classes)
+    for f in files:
+        for name, ty, lines in extract_fns(f):
+            classes = fn_acquired_classes(cfg, f, lines)
+            key = f"{ty}::{name}" if ty else name
+            fn_map.setdefault(key, set()).update(classes)
+    return fn_map
+
+
+CALL_RE = re.compile(r"\b([A-Za-z_]\w*)\s*::\s*(\w+)\s*\(")
+SELF_CALL_RE = re.compile(r"\bself\s*\.\s*(\w+)\s*\(")
+FREE_CALL_RE = re.compile(r"(?<![\w:.])([a-z_]\w*)\s*\(")
+DROP_RE = re.compile(r"\bdrop\s*\(\s*(\w+)\s*\)")
+LET_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*(?::[^=]*)?=")
+
+
+def check_r2(cfg, files, fn_map, free_fns, findings):
+    for f in files:
+        for name, ty, lines in extract_fns(f):
+            check_r2_fn(cfg, f, name, ty, lines, fn_map, free_fns, findings)
+
+
+def check_r2_fn(cfg, f, fn_name, ty, lines, fn_map, free_fns, findings):
+    guards = []  # dicts: {depth, cls, name, temp}
+    depth = 0
+
+    def inversion(cls):
+        r = rank(cfg, cls)
+        if r is None:
+            return None
+        for g in guards:
+            gr = rank(cfg, g["cls"])
+            if gr is not None and gr > r:
+                return g["cls"]
+        return None
+
+    for i in lines:
+        line = f.masked[i]
+        letm = LET_RE.search(line)
+        acqs = line_acquisitions(line)
+        temps = []
+        # One-level call closure FIRST: call arguments/receivers are
+        # evaluated before any same-statement lock is acquired, so calls
+        # on this line run against the guards held from prior lines.
+        if guards:
+            keys = []
+            for m in CALL_RE.finditer(line):
+                a, b = m.group(1), m.group(2)
+                if b in ("lock", "rlock", "wlock") and a == "util":
+                    continue
+                if a == "Self" and ty:
+                    a = ty
+                keys.append((f"{a}::{b}", m.start()))
+            for m in SELF_CALL_RE.finditer(line):
+                if ty and m.group(1) not in ("lock", "read", "write"):
+                    keys.append((f"{ty}::{m.group(1)}", m.start()))
+            for m in FREE_CALL_RE.finditer(line):
+                if m.group(1) in free_fns:
+                    keys.append((m.group(1), m.start()))
+            for key, _ in keys:
+                for cls in sorted(fn_map.get(key, ())):
+                    held = inversion(cls)
+                    if held is not None and not allowed(f, i + 1, "lock_order"):
+                        findings.append(
+                            (f.rel, i + 1, "lock_order",
+                             f"calls `{key}` (acquires `{cls}`) while "
+                             f"holding `{held}` in {fn_name}"))
+                        break
+        for pos, recv, is_util in acqs:
+            cls = classify(cfg, recv)
+            if cls is None:
+                continue
+            held = inversion(cls)
+            if held is not None and not allowed(f, i + 1, "lock_order"):
+                findings.append(
+                    (f.rel, i + 1, "lock_order",
+                     f"acquires `{cls}` while holding `{held}` in {fn_name}"))
+            is_let = letm is not None and pos > letm.end() - 1 and acqs[0][0] == pos
+            g = {
+                "depth": depth + 1 if is_let else depth,
+                "cls": cls,
+                "name": letm.group(1) if is_let else None,
+                "temp": not is_let,
+            }
+            guards.append(g)
+            if g["temp"]:
+                temps.append(g)
+        for m in DROP_RE.finditer(line):
+            nm = m.group(1)
+            for g in reversed(guards):
+                if g["name"] == nm:
+                    guards.remove(g)
+                    break
+        # end of line: drop temps
+        for g in temps:
+            if g in guards:
+                guards.remove(g)
+        # brace tracking: pop let-guards on block exit
+        for c in line:
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+                guards = [g for g in guards if g["depth"] <= depth]
+
+
+# --------------------------------------------------------------------- R3
+
+
+def check_r3(cfg, files, by_rel, findings):
+    acc_rel = cfg["accounting"].replace("rust/src/", "", 1)
+    wa_rel = cfg["wa_report"].replace("rust/src/", "", 1)
+    acc = by_rel.get(acc_rel)
+    if acc is None:
+        findings.append((acc_rel, 1, "category", "accounting module not found"))
+    else:
+        check_enum(acc, findings)
+    wa = by_rel.get(wa_rel)
+    if wa is None:
+        findings.append((wa_rel, 1, "category", "wa_report module not found"))
+    elif not any("ALL_CATEGORIES" in l for l in wa.raw):
+        findings.append((wa_rel, 1, "category",
+                         "WA report does not iterate ALL_CATEGORIES"))
+    for f in files:
+        if matches_module(f.rel, cfg["defining_modules"]):
+            continue
+        for i, line in enumerate(f.masked):
+            for ctor in cfg["defaulting_constructors"]:
+                if re.search(re.escape(ctor) + r"\s*\(", line):
+                    if not allowed(f, i + 1, "category"):
+                        findings.append(
+                            (f.rel, i + 1, "category",
+                             f"`{ctor}` defaults its WriteCategory — "
+                             "annotate with allow(category, ...)"))
+
+
+def check_enum(acc, findings):
+    text = "\n".join(acc.clean)
+    em = re.search(r"pub enum WriteCategory \{(.*?)\n\}", text, re.S)
+    if not em:
+        findings.append((acc.rel, 1, "category", "enum WriteCategory not found"))
+        return
+    variants = re.findall(r"^\s{4}(\w+),", em.group(1), re.M)
+    n = len(variants)
+    cm = re.search(r"const CATEGORY_COUNT: usize = (\d+)", text)
+    if not cm:
+        findings.append((acc.rel, 1, "category", "CATEGORY_COUNT not found"))
+    elif int(cm.group(1)) != n:
+        findings.append((acc.rel, 1, "category",
+                         f"CATEGORY_COUNT {cm.group(1)} != {n} variants"))
+    am = re.search(r"const ALL_CATEGORIES[^=]*= \[(.*?)\]", text, re.S)
+    if not am:
+        findings.append((acc.rel, 1, "category", "ALL_CATEGORIES not found"))
+    else:
+        elems = re.findall(r"WriteCategory::(\w+)", am.group(1))
+        if sorted(elems) != sorted(variants) or len(set(elems)) != len(elems):
+            findings.append((acc.rel, 1, "category",
+                             "ALL_CATEGORIES out of sync with the enum"))
+    for fn, pat, check in (
+        ("index", r"WriteCategory::(\w+) => (\d+)",
+         lambda arms: sorted(int(v) for _, v in arms) == list(range(n))),
+        ("name", r'WriteCategory::(\w+) => "(\w+)"',
+         lambda arms: len({v for _, v in arms}) == len(arms)),
+    ):
+        fm = re.search(r"fn " + fn + r"\(self\)[^{]*\{\s*match self \{(.*?)\n        \}",
+                       "\n".join(acc.raw), re.S)
+        if not fm:
+            findings.append((acc.rel, 1, "category", f"{fn}() not found"))
+            continue
+        arms = re.findall(pat, fm.group(1))
+        if sorted(a for a, _ in arms) != sorted(variants) or not check(arms):
+            findings.append((acc.rel, 1, "category",
+                             f"{fn}() arms out of sync with the enum"))
+
+
+# --------------------------------------------------------------------- R4
+
+
+WRITE_RE = re.compile(r"\.\s*write\s*\(")
+LOOKUP_RE = re.compile(r"\.\s*(lookup|lookup_many)\s*\(")
+
+
+def check_r4(cfg, files, findings):
+    pats = cfg["state_table_patterns"]
+    for f in files:
+        if not matches_module(f.rel, cfg["protocol_modules"]):
+            continue
+        for name, ty, lines in extract_fns(f):
+            aliases = set()
+            writes = []
+            has_lookup = False
+            text = "\n".join(f.masked[i] for i in lines)
+            for m in re.finditer(r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*([^;]+);", text):
+                if any(p in m.group(2) for p in pats):
+                    aliases.add(m.group(1))
+            for i in lines:
+                line = f.masked[i]
+                for m in LOOKUP_RE.finditer(line):
+                    if "store" not in receiver_before(line, m.start()):
+                        has_lookup = True
+                for m in WRITE_RE.finditer(line):
+                    recv = receiver_before(line, m.start())
+                    if "store" in recv:
+                        continue
+                    arg = arg_after(line, line.index("(", m.start()))
+                    first = arg.split(",")[0].strip()
+                    if "," not in arg and ")" not in line[m.end():]:
+                        # multi-line call: peek at the next line for arg0
+                        nxt = f.masked[i + 1].strip() if i + 1 < len(f.masked) else ""
+                        first = nxt.replace("&", "").rstrip(",").strip()
+                        if not nxt.endswith(","):
+                            continue  # not a 2+ arg call we can see
+                    elif "," not in arg:
+                        continue  # single-argument write: not a table write
+                    if any(p in first for p in pats) or first in aliases:
+                        writes.append(i + 1)
+            if has_lookup:
+                continue
+            for ln in writes:
+                if not allowed(f, ln, "cas_read_set"):
+                    findings.append(
+                        (f.rel, ln, "cas_read_set",
+                         f"state-table write with no transactional lookup in {name}"))
+
+
+# -------------------------------------------------------------------- main
+
+
+def main():
+    deny = "--deny" in sys.argv
+    cfg = parse_config(os.path.join(ROOT, "protolint.toml"))
+    src = os.path.join(ROOT, cfg["source_root"])
+    files = []
+    for dirpath, _, names in os.walk(src):
+        for nm in sorted(names):
+            if nm.endswith(".rs"):
+                p = os.path.join(dirpath, nm)
+                rel = os.path.relpath(p, src).replace(os.sep, "/")
+                files.append(File(rel, open(p).read()))
+    files.sort(key=lambda f: f.rel)
+    by_rel = {f.rel: f.rel and f for f in files}
+
+    free_fns = set()
+    for f in files:
+        for name, ty, _ in extract_fns(f):
+            if ty is None:
+                free_fns.add(name)
+    fn_map = build_fn_map(cfg, files)
+
+    findings = []
+    check_r1(cfg, files, findings)
+    check_r2(cfg, files, fn_map, free_fns, findings)
+    check_r3(cfg, files, by_rel, findings)
+    check_r4(cfg, files, findings)
+    check_annotations(files, findings)
+    findings.sort()
+    for rel, line, rule, msg in findings:
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    if findings:
+        print(f"protolint_check: {len(findings)} finding(s)", file=sys.stderr)
+        sys.exit(1 if deny else 0)
+    print("protolint_check: clean", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+//! `protolint.toml` loading. Hand-rolled parser for the TOML subset the
+//! config actually uses — `[section]` headers, `key = "string"`,
+//! `key = ["a", "b", ...]` (arrays may span lines) — so the linter adds
+//! no parsing dependency beyond `syn` itself.
+
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub source_root: PathBuf,
+    pub accounting: PathBuf,
+    pub wa_report: PathBuf,
+    /// R1 scope: file paths (relative to source root) or `dir/` prefixes.
+    pub protocol_modules: Vec<String>,
+    /// R2 receiver-substring → lock class, first match wins.
+    pub lock_classes: Vec<(String, String)>,
+    /// R2 global order, outermost first.
+    pub lock_order: Vec<String>,
+    /// R3 constructors (as `Type::fn`) that default a WriteCategory.
+    pub defaulting_constructors: Vec<String>,
+    /// R3 modules allowed to call them without annotation (the definers).
+    pub defining_modules: Vec<String>,
+    /// R4 substrings identifying state-table name expressions.
+    pub state_table_patterns: Vec<String>,
+}
+
+impl Config {
+    /// Walk upward from `start` until a `protolint.toml` is found.
+    /// Returns (config, directory containing it).
+    pub fn discover(start: &Path) -> Result<(Config, PathBuf), String> {
+        let mut dir = start
+            .canonicalize()
+            .map_err(|e| format!("{}: {e}", start.display()))?;
+        loop {
+            let candidate = dir.join("protolint.toml");
+            if candidate.is_file() {
+                return Ok((Config::load(&candidate)?, dir));
+            }
+            if !dir.pop() {
+                return Err(format!(
+                    "no protolint.toml found walking up from {}",
+                    start.display()
+                ));
+            }
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        let mut lines = text.lines().peekable();
+        while let Some(raw) = lines.next() {
+            let line = strip_comment(raw);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, mut value)) = line.split_once('=') else {
+                return Err(format!("protolint.toml: expected `key = value`: {line}"));
+            };
+            let key = key.trim();
+            let mut buf = value.trim().to_string();
+            // Arrays may span lines: accumulate until brackets balance.
+            while buf.starts_with('[') && !brackets_balanced(&buf) {
+                let Some(next) = lines.next() else {
+                    return Err(format!("protolint.toml: unterminated array for {key}"));
+                };
+                buf.push(' ');
+                buf.push_str(strip_comment(next).trim());
+            }
+            value = buf.as_str();
+            match (section.as_str(), key) {
+                ("paths", "source_root") => cfg.source_root = PathBuf::from(parse_str(value)?),
+                ("paths", "accounting") => cfg.accounting = PathBuf::from(parse_str(value)?),
+                ("paths", "wa_report") => cfg.wa_report = PathBuf::from(parse_str(value)?),
+                ("r1", "protocol_modules") => cfg.protocol_modules = parse_array(value)?,
+                ("r2", "classes") => {
+                    for entry in parse_array(value)? {
+                        let Some((pat, class)) = entry.split_once("=>") else {
+                            return Err(format!("r2.classes entry without `=>`: {entry}"));
+                        };
+                        cfg.lock_classes
+                            .push((pat.trim().to_string(), class.trim().to_string()));
+                    }
+                }
+                ("r2", "order") => cfg.lock_order = parse_array(value)?,
+                ("r3", "defaulting_constructors") => {
+                    cfg.defaulting_constructors = parse_array(value)?
+                }
+                ("r3", "defining_modules") => cfg.defining_modules = parse_array(value)?,
+                ("r4", "state_table_patterns") => cfg.state_table_patterns = parse_array(value)?,
+                _ => return Err(format!("protolint.toml: unknown key [{section}] {key}")),
+            }
+        }
+        for class in cfg.lock_classes.iter().map(|(_, c)| c) {
+            if !cfg.lock_order.contains(class) {
+                return Err(format!("lock class `{class}` missing from r2.order"));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Rank of a lock class in the declared order (0 = outermost).
+    pub fn lock_rank(&self, class: &str) -> Option<usize> {
+        self.lock_order.iter().position(|c| c == class)
+    }
+
+    /// Classify a lock-acquisition receiver expression.
+    pub fn classify_receiver(&self, receiver: &str) -> Option<&str> {
+        self.lock_classes
+            .iter()
+            .find(|(pat, _)| receiver.contains(pat.as_str()))
+            .map(|(_, class)| class.as_str())
+    }
+
+    /// Is `rel_path` (relative to source root, `/`-separated) covered by
+    /// a module list (exact file or `dir/` prefix)?
+    pub fn matches_module(rel_path: &str, modules: &[String]) -> bool {
+        modules.iter().any(|m| {
+            if m.ends_with('/') {
+                rel_path.starts_with(m.as_str())
+            } else {
+                rel_path == m
+            }
+        })
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn brackets_balanced(s: &str) -> bool {
+    let mut depth = 0i32;
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth == 0
+}
+
+fn parse_str(v: &str) -> Result<String, String> {
+    let v = v.trim();
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(str::to_string)
+        .ok_or_else(|| format!("expected a quoted string, got {v}"))
+}
+
+fn parse_array(v: &str) -> Result<Vec<String>, String> {
+    let v = v.trim();
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("expected an array, got {v}"))?;
+    let mut out = Vec::new();
+    let mut buf = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                if !buf.trim().is_empty() {
+                    out.push(parse_str(buf.trim())?);
+                }
+                buf.clear();
+                continue;
+            }
+            _ => {}
+        }
+        buf.push(c);
+    }
+    if !buf.trim().is_empty() {
+        out.push(parse_str(buf.trim())?);
+    }
+    Ok(out)
+}

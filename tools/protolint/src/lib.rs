@@ -1,0 +1,55 @@
+//! protolint — repo-specific static enforcement of the yt_stream
+//! protocol invariants (DESIGN.md §"Statically enforced invariants").
+//!
+//! Four rules, configured by `protolint.toml` at the repo root:
+//!
+//! - **R1 `panic` / `lock_unwrap`** — panic-freedom in the
+//!   transaction-commit modules: no `unwrap`/`expect`/`panic!`/
+//!   `unreachable!`/`todo!`/`unimplemented!` outside `#[cfg(test)]`
+//!   code, unless annotated. `.lock().unwrap()` is its own sub-rule
+//!   (the fix is `util::lock`, which centralizes poisoning policy).
+//! - **R2 `lock_order`** — lexical lock-acquisition sequences per
+//!   function, plus a one-level call-graph closure, checked against
+//!   the declared global lock order.
+//! - **R3 `category`** — the `WriteCategory` enum, `ALL_CATEGORIES`,
+//!   `CATEGORY_COUNT`, `index()` and `name()` must stay mutually
+//!   exhaustive, the WA report must stay data-driven over
+//!   `ALL_CATEGORIES`, and call sites of constructors that *default*
+//!   a category must be annotated.
+//! - **R4 `cas_read_set`** — a function that writes a mapper/reducer
+//!   state table through a `Transaction` must also transactionally
+//!   look that state up in the same function (the read set is what
+//!   makes split-brain twins lose the commit race).
+//!
+//! Findings are fix-or-allow: `// protolint: allow(<rule>, "reason")`
+//! on the offending line, or on its own comment line directly above,
+//! suppresses a finding. The reason string is mandatory — each allow
+//! is a line of documentation.
+
+pub mod config;
+pub mod r1;
+pub mod r2;
+pub mod r3;
+pub mod r4;
+pub mod source;
+
+use std::path::Path;
+
+pub use config::Config;
+pub use source::{Finding, SourceTree};
+
+/// Run every rule over the tree rooted at the config's source root.
+/// `config_dir` is the directory containing `protolint.toml`.
+pub fn run_all(cfg: &Config, config_dir: &Path) -> Result<Vec<Finding>, String> {
+    let tree = SourceTree::load(&config_dir.join(&cfg.source_root))?;
+    let mut findings = Vec::new();
+    findings.extend(r1::check(cfg, &tree));
+    findings.extend(r2::check(cfg, &tree));
+    findings.extend(r3::check(cfg, &tree, config_dir));
+    findings.extend(r4::check(cfg, &tree));
+    // Annotations with a missing/empty reason are findings themselves,
+    // whatever file they are in — an allow must say why.
+    findings.extend(source::check_annotation_reasons(&tree));
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}

@@ -1,0 +1,69 @@
+//! protolint CLI.
+//!
+//! Usage: `cargo run -p protolint -- [--deny] [--config <dir>]`
+//!
+//! Discovers `protolint.toml` by walking upward from `--config` (or the
+//! working directory), runs rules R1–R4 over the configured source
+//! root, and prints findings as `file:line: [rule] message`. With
+//! `--deny`, any finding makes the process exit 1 (the CI mode);
+//! without it the exit code is always 0, for exploratory local runs.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut deny = false;
+    let mut start = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--deny" => deny = true,
+            "--config" => match args.next() {
+                Some(dir) => start = PathBuf::from(dir),
+                None => {
+                    eprintln!("--config needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: protolint [--deny] [--config <dir>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let (cfg, config_dir) = match protolint::Config::discover(&start) {
+        Ok(found) => found,
+        Err(e) => {
+            eprintln!("protolint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let findings = match protolint::run_all(&cfg, &config_dir) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("protolint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("protolint: clean ({})", cfg.source_root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("protolint: {} finding(s)", findings.len());
+        if deny {
+            ExitCode::FAILURE
+        } else {
+            ExitCode::SUCCESS
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! R1 — panic-freedom in the transaction-commit (protocol) modules.
+//!
+//! Inside the configured `protocol_modules`, every `unwrap`/`expect`
+//! method call and every `panic!`/`unreachable!`/`todo!`/
+//! `unimplemented!` macro is a finding unless annotated. A `.unwrap()`
+//! whose receiver is a zero-arg `.lock()`/`.read()`/`.write()` call is
+//! reported under the `lock_unwrap` sub-rule, because it has a
+//! mechanical fix: `util::lock` / `util::rlock` / `util::wlock`, which
+//! centralize the mutex-poisoning policy. `assert!` / `assert_eq!` are
+//! deliberately NOT denied — checked invariants are encouraged; the
+//! rule targets *unchecked* optimism about `Option`/`Result` values.
+//!
+//! Test-only code (`#[cfg(test)]` modules, `#[test]` fns) is exempt.
+
+use proc_macro2::Span;
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+use crate::config::Config;
+use crate::source::{allowed, is_test_item, Finding, SourceFile, SourceTree};
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn check(cfg: &Config, tree: &SourceTree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &tree.files {
+        if !Config::matches_module(&file.rel, &cfg.protocol_modules) {
+            continue;
+        }
+        let mut v = R1Visitor {
+            file,
+            findings: &mut findings,
+        };
+        v.visit_file(&file.ast);
+    }
+    findings
+}
+
+struct R1Visitor<'a> {
+    file: &'a SourceFile,
+    findings: &'a mut Vec<Finding>,
+}
+
+impl R1Visitor<'_> {
+    fn report(&mut self, span: Span, rule: &str, message: String) {
+        let line = span.start().line;
+        if allowed(self.file, line, rule) {
+            return;
+        }
+        self.findings.push(Finding {
+            file: self.file.rel.clone(),
+            line,
+            rule: rule.to_string(),
+            message,
+        });
+    }
+}
+
+/// Is `expr` a zero-arg `.lock()` / `.read()` / `.write()` call?
+fn is_lock_acquire(expr: &syn::Expr) -> bool {
+    matches!(expr, syn::Expr::MethodCall(mc)
+        if mc.args.is_empty() && matches!(mc.method.to_string().as_str(), "lock" | "read" | "write"))
+}
+
+impl<'ast> Visit<'ast> for R1Visitor<'_> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if !is_test_item(&node.attrs) {
+            syn::visit::visit_item_mod(self, node);
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if !is_test_item(&node.attrs) {
+            syn::visit::visit_item_fn(self, node);
+        }
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        if !is_test_item(&node.attrs) {
+            syn::visit::visit_impl_item_fn(self, node);
+        }
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        if method == "unwrap" || method == "expect" {
+            // Anchor the finding to the method-name token, not the
+            // expression start: in a multi-line chain the annotation
+            // sits directly above the `.expect(...)` line.
+            if is_lock_acquire(&node.receiver) {
+                self.report(
+                    node.method.span(),
+                    "lock_unwrap",
+                    format!(
+                        ".{{lock,read,write}}().{method}() in a protocol module — use \
+                         util::{{lock,rlock,wlock}} (centralized poisoning policy)"
+                    ),
+                );
+            } else {
+                self.report(
+                    node.method.span(),
+                    "panic",
+                    format!(
+                        "`.{method}()` in a protocol module can abort a commit mid-protocol — \
+                         propagate the error or annotate with allow(panic, \"why\")"
+                    ),
+                );
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        if let Some(name) = node.path.segments.last().map(|s| s.ident.to_string()) {
+            if PANIC_MACROS.contains(&name.as_str()) {
+                self.report(
+                    node.path.span(),
+                    "panic",
+                    format!(
+                        "`{name}!` in a protocol module — return an error, or annotate with \
+                         allow(panic, \"why\") if crashing is the designed recovery"
+                    ),
+                );
+            }
+        }
+        syn::visit::visit_macro(self, node);
+    }
+}

@@ -1,0 +1,432 @@
+//! R2 — lock-order discipline.
+//!
+//! Model: a lexical guard analysis per function, plus a one-level
+//! call-graph closure.
+//!
+//! *Acquisitions* are calls to `util::lock` / `util::rlock` /
+//! `util::wlock` (receiver = first argument, leading `&`/`mut`
+//! stripped) and zero-arg `.lock()` / `.read()` / `.write()` method
+//! calls. The receiver's token text is classified into a lock class by
+//! the config's substring table (first match wins); unclassified
+//! receivers are not order-checked.
+//!
+//! *Holding*: a `let` whose initializer is (at top level) an
+//! acquisition binds a guard held until the end of the enclosing block
+//! or an explicit `drop(name)`. Any other acquisition is a
+//! statement-temporary, held to the end of its statement.
+//!
+//! *Inversion*: acquiring a class that ranks EARLIER (more outer) in
+//! the configured order than a class currently held. Same-class
+//! re-acquisition is not flagged (distinct instances, e.g. two tablet
+//! locks, are ordered by other means).
+//!
+//! *Closure*: calling a crate function while holding guards checks
+//! every class that callee acquires anywhere in its body against the
+//! held set. Callees resolve precisely — free functions by bare name,
+//! associated functions by `Type::name` (`Self::` maps to the
+//! enclosing impl type), and method calls only on a literal `self`
+//! receiver — so a std container call like `map.get(..)` never aliases
+//! a crate method of the same name. One level only: deep transitive
+//! analysis is out of scope; the commit-path spine is covered because
+//! each hop is one call deep.
+
+use std::collections::{BTreeSet, HashMap};
+
+use proc_macro2::Span;
+use quote::ToTokens;
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+use crate::config::Config;
+use crate::source::{allowed, is_test_item, Finding, SourceFile, SourceTree};
+
+pub fn check(cfg: &Config, tree: &SourceTree) -> Vec<Finding> {
+    // Pass 1: what does every crate function acquire, anywhere in its
+    // body? Free fns keyed by bare name, impl fns by `Type::name`.
+    let mut fns: HashMap<String, BTreeSet<String>> = HashMap::new();
+    for file in &tree.files {
+        collect_items(cfg, &file.ast.items, &mut fns);
+    }
+
+    // Pass 2: scoped per-function walk.
+    let mut findings = Vec::new();
+    for file in &tree.files {
+        walk_items(cfg, file, &file.ast.items, &fns, &mut findings);
+    }
+    findings
+}
+
+fn collect_items(cfg: &Config, items: &[syn::Item], fns: &mut HashMap<String, BTreeSet<String>>) {
+    for item in items {
+        match item {
+            syn::Item::Fn(f) if !is_test_item(&f.attrs) => {
+                let classes = acquired_classes(cfg, &f.block);
+                fns.entry(f.sig.ident.to_string()).or_default().extend(classes);
+            }
+            syn::Item::Impl(imp) if !is_test_item(&imp.attrs) => {
+                let Some(ty) = type_name(&imp.self_ty) else {
+                    continue;
+                };
+                for ii in &imp.items {
+                    if let syn::ImplItem::Fn(f) = ii {
+                        if is_test_item(&f.attrs) {
+                            continue;
+                        }
+                        let classes = acquired_classes(cfg, &f.block);
+                        fns.entry(format!("{ty}::{}", f.sig.ident))
+                            .or_default()
+                            .extend(classes);
+                    }
+                }
+            }
+            syn::Item::Mod(m) if !is_test_item(&m.attrs) => {
+                if let Some((_, items)) = &m.content {
+                    collect_items(cfg, items, fns);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn type_name(ty: &syn::Type) -> Option<String> {
+    match ty {
+        syn::Type::Path(p) => p.path.segments.last().map(|s| s.ident.to_string()),
+        _ => None,
+    }
+}
+
+/// Every lock class acquired anywhere in a block (flat, unordered).
+fn acquired_classes(cfg: &Config, block: &syn::Block) -> BTreeSet<String> {
+    struct V<'a> {
+        cfg: &'a Config,
+        out: BTreeSet<String>,
+    }
+    impl<'ast> Visit<'ast> for V<'_> {
+        fn visit_expr(&mut self, node: &'ast syn::Expr) {
+            if let Some(acq) = as_acquisition(node) {
+                if let Some(class) = self.cfg.classify_receiver(&acq.receiver) {
+                    self.out.insert(class.to_string());
+                }
+            }
+            syn::visit::visit_expr(self, node);
+        }
+    }
+    let mut v = V {
+        cfg,
+        out: BTreeSet::new(),
+    };
+    v.visit_block(block);
+    v.out
+}
+
+fn walk_items(
+    cfg: &Config,
+    file: &SourceFile,
+    items: &[syn::Item],
+    fns: &HashMap<String, BTreeSet<String>>,
+    findings: &mut Vec<Finding>,
+) {
+    for item in items {
+        match item {
+            syn::Item::Fn(f) if !is_test_item(&f.attrs) => {
+                scoped_walk(cfg, file, &f.block, None, fns, findings);
+            }
+            syn::Item::Impl(imp) if !is_test_item(&imp.attrs) => {
+                let ty = type_name(&imp.self_ty);
+                for ii in &imp.items {
+                    if let syn::ImplItem::Fn(f) = ii {
+                        if !is_test_item(&f.attrs) {
+                            scoped_walk(cfg, file, &f.block, ty.as_deref(), fns, findings);
+                        }
+                    }
+                }
+            }
+            syn::Item::Mod(m) if !is_test_item(&m.attrs) => {
+                if let Some((_, items)) = &m.content {
+                    walk_items(cfg, file, items, fns, findings);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+struct Acquisition<'a> {
+    receiver: String,
+    span: Span,
+    /// The receiver expression, to visit before the acquisition takes
+    /// effect (runtime evaluates it first).
+    inner: Option<&'a syn::Expr>,
+}
+
+fn as_acquisition(expr: &syn::Expr) -> Option<Acquisition<'_>> {
+    match expr {
+        syn::Expr::Call(c) => call_acquisition(c),
+        syn::Expr::MethodCall(mc) => method_acquisition(mc),
+        _ => None,
+    }
+}
+
+fn call_acquisition(c: &syn::ExprCall) -> Option<Acquisition<'_>> {
+    let syn::Expr::Path(p) = &*c.func else {
+        return None;
+    };
+    let segs: Vec<String> = p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+    let last = segs.last()?;
+    if !matches!(last.as_str(), "lock" | "rlock" | "wlock") {
+        return None;
+    }
+    if segs.len() >= 2 && segs[segs.len() - 2] != "util" {
+        return None;
+    }
+    let arg = c.args.first()?;
+    Some(Acquisition {
+        receiver: receiver_text(arg),
+        span: p.path.segments.last().unwrap().ident.span(),
+        inner: Some(arg),
+    })
+}
+
+fn method_acquisition(mc: &syn::ExprMethodCall) -> Option<Acquisition<'_>> {
+    if !mc.args.is_empty() {
+        return None;
+    }
+    if !matches!(mc.method.to_string().as_str(), "lock" | "read" | "write") {
+        return None;
+    }
+    Some(Acquisition {
+        receiver: receiver_text(&mc.receiver),
+        span: mc.method.span(),
+        inner: Some(&mc.receiver),
+    })
+}
+
+/// Token text of a receiver expression, leading `&` / `mut` stripped.
+fn receiver_text(expr: &syn::Expr) -> String {
+    let mut text = expr.to_token_stream().to_string();
+    loop {
+        let t = text.trim_start();
+        if let Some(rest) = t.strip_prefix('&') {
+            text = rest.to_string();
+        } else if let Some(rest) = t.strip_prefix("mut ") {
+            text = rest.to_string();
+        } else {
+            return t.to_string();
+        }
+    }
+}
+
+struct Guard {
+    name: Option<String>,
+    class: String,
+}
+
+struct ScopedWalker<'a> {
+    cfg: &'a Config,
+    file: &'a SourceFile,
+    self_ty: Option<&'a str>,
+    fns: &'a HashMap<String, BTreeSet<String>>,
+    held: Vec<Guard>,
+    findings: &'a mut Vec<Finding>,
+}
+
+fn scoped_walk(
+    cfg: &Config,
+    file: &SourceFile,
+    block: &syn::Block,
+    self_ty: Option<&str>,
+    fns: &HashMap<String, BTreeSet<String>>,
+    findings: &mut Vec<Finding>,
+) {
+    let mut w = ScopedWalker {
+        cfg,
+        file,
+        self_ty,
+        fns,
+        held: Vec::new(),
+        findings,
+    };
+    w.visit_block(block);
+}
+
+impl ScopedWalker<'_> {
+    fn report(&mut self, span: Span, message: String) {
+        let line = span.start().line;
+        if allowed(self.file, line, "lock_order") {
+            return;
+        }
+        self.findings.push(Finding {
+            file: self.file.rel.clone(),
+            line,
+            rule: "lock_order".to_string(),
+            message,
+        });
+    }
+
+    /// Check a direct acquisition of `class` against the held stack.
+    fn check_acquire(&mut self, class: &str, span: Span) {
+        let Some(rank) = self.cfg.lock_rank(class) else {
+            return;
+        };
+        if let Some(g) = self
+            .held
+            .iter()
+            .find(|g| self.cfg.lock_rank(&g.class).is_some_and(|r| r > rank))
+        {
+            let held = g.class.clone();
+            self.report(
+                span,
+                format!(
+                    "acquires `{class}` while holding `{held}` — inverts the declared \
+                     lock order (outermost first) in protolint.toml [r2]"
+                ),
+            );
+        }
+    }
+
+    /// One-level closure: a resolved call to a crate fn while holding.
+    fn check_call(&mut self, key: &str, span: Span) {
+        if self.held.is_empty() {
+            return;
+        }
+        let Some(classes) = self.fns.get(key) else {
+            return;
+        };
+        let classes = classes.clone();
+        for class in &classes {
+            let Some(rank) = self.cfg.lock_rank(class) else {
+                continue;
+            };
+            if let Some(g) = self
+                .held
+                .iter()
+                .find(|g| self.cfg.lock_rank(&g.class).is_some_and(|r| r > rank))
+            {
+                let held = g.class.clone();
+                self.report(
+                    span,
+                    format!(
+                        "calls `{key}`, which acquires `{class}`, while holding \
+                         `{held}` — one-level lock-order inversion"
+                    ),
+                );
+                return; // one finding per call site
+            }
+        }
+    }
+}
+
+fn pat_name(pat: &syn::Pat) -> Option<String> {
+    match pat {
+        syn::Pat::Ident(p) => Some(p.ident.to_string()),
+        _ => None,
+    }
+}
+
+impl<'ast> Visit<'ast> for ScopedWalker<'_> {
+    fn visit_block(&mut self, block: &'ast syn::Block) {
+        let base = self.held.len();
+        for stmt in &block.stmts {
+            let stmt_base = self.held.len();
+            // A `let` whose top-level init is an acquisition binds a
+            // block-scoped guard.
+            if let syn::Stmt::Local(local) = stmt {
+                if let Some(init) = &local.init {
+                    if let Some(acq) = as_acquisition(&init.expr) {
+                        if let Some(class) = self.cfg.classify_receiver(&acq.receiver) {
+                            let class = class.to_string();
+                            if let Some(e) = acq.inner {
+                                self.visit_expr(e);
+                            }
+                            self.check_acquire(&class, acq.span);
+                            self.held.truncate(stmt_base); // pop receiver temps
+                            self.held.push(Guard {
+                                name: pat_name(&local.pat),
+                                class,
+                            });
+                            continue;
+                        }
+                    }
+                }
+            }
+            self.visit_stmt(stmt);
+            // Pop statement-temporaries (guards acquired mid-expression).
+            self.held.truncate(stmt_base.max(base));
+        }
+        self.held.truncate(base);
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        // drop(guard) releases a named guard early.
+        if let syn::Expr::Path(p) = &*node.func {
+            if p.path.is_ident("drop") && node.args.len() == 1 {
+                if let syn::Expr::Path(arg) = &node.args[0] {
+                    if let Some(id) = arg.path.get_ident() {
+                        let name = id.to_string();
+                        if let Some(pos) = self
+                            .held
+                            .iter()
+                            .rposition(|g| g.name.as_deref() == Some(name.as_str()))
+                        {
+                            self.held.remove(pos);
+                        }
+                        return;
+                    }
+                }
+            }
+        }
+        if let Some(acq) = call_acquisition(node) {
+            if let Some(class) = self.cfg.classify_receiver(&acq.receiver) {
+                let class = class.to_string();
+                if let Some(e) = acq.inner {
+                    self.visit_expr(e);
+                }
+                self.check_acquire(&class, acq.span);
+                self.held.push(Guard { name: None, class });
+                return;
+            }
+        }
+        // Call closure: free fn by bare name, associated fn by
+        // `Type::name` (`Self::` resolves to the enclosing impl type).
+        if let syn::Expr::Path(p) = &*node.func {
+            let segs: Vec<String> =
+                p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+            let key = if segs.len() >= 2 {
+                let ty = if segs[segs.len() - 2] == "Self" {
+                    self.self_ty.map(str::to_string)
+                } else {
+                    Some(segs[segs.len() - 2].clone())
+                };
+                ty.map(|t| format!("{t}::{}", segs[segs.len() - 1]))
+            } else {
+                segs.last().cloned()
+            };
+            if let (Some(key), Some(seg)) = (key, p.path.segments.last()) {
+                self.check_call(&key, seg.ident.span());
+            }
+        }
+        syn::visit::visit_expr_call(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if let Some(acq) = method_acquisition(node) {
+            if let Some(class) = self.cfg.classify_receiver(&acq.receiver) {
+                let class = class.to_string();
+                self.visit_expr(&node.receiver);
+                self.check_acquire(&class, acq.span);
+                self.held.push(Guard { name: None, class });
+                return;
+            }
+        }
+        // Closure only for `self.method(..)` — a literal-self receiver
+        // is the one method-call shape that resolves unambiguously.
+        if matches!(&*node.receiver, syn::Expr::Path(p) if p.path.is_ident("self")) {
+            if let Some(ty) = self.self_ty {
+                let key = format!("{ty}::{}", node.method);
+                self.check_call(&key, node.method.span());
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+}

@@ -1,0 +1,357 @@
+//! R3 — write-accounting coverage.
+//!
+//! The WA report is only trustworthy if every persisted byte lands in
+//! a `WriteCategory` bucket and the report iterates all buckets. Two
+//! halves:
+//!
+//! 1. **Enum coherence** in the accounting module: the `WriteCategory`
+//!    variant list, `CATEGORY_COUNT`, `ALL_CATEGORIES`, `index()` (a
+//!    bijection onto `0..n`) and `name()` (unique strings) must stay
+//!    mutually exhaustive. Adding a 13th category and forgetting one of
+//!    the five is a finding, not a silent accounting hole.
+//! 2. **Flow at call sites**: `Journal` constructors take the category
+//!    as a typed parameter, so those sites are enforced by the type
+//!    system. Constructors that *default* a category (the config's
+//!    `defaulting_constructors`, e.g. `OrderedTable::new`, which
+//!    assumes `SourceIngest`) must be annotated
+//!    `allow(category, "...")` at every call site outside the defining
+//!    module — the annotation is the visible claim that the default is
+//!    the intent.
+//!
+//! The WA report itself (`wa_report` path) must mention
+//! `ALL_CATEGORIES`: a report hand-listing categories is exactly the
+//! kind of code that silently drops the 13th one.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+use crate::config::Config;
+use crate::source::{allowed, is_test_item, Finding, SourceFile, SourceTree};
+
+pub fn check(cfg: &Config, tree: &SourceTree, _config_dir: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    let rel_of = |p: &Path| {
+        p.strip_prefix(&cfg.source_root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/")
+    };
+
+    let accounting_rel = rel_of(&cfg.accounting);
+    match tree.get(&accounting_rel) {
+        Some(file) => check_enum_coherence(file, &mut findings),
+        None => findings.push(Finding {
+            file: accounting_rel.clone(),
+            line: 1,
+            rule: "category".into(),
+            message: "accounting module configured in protolint.toml not found".into(),
+        }),
+    }
+
+    let wa_rel = rel_of(&cfg.wa_report);
+    match tree.get(&wa_rel) {
+        Some(file) => {
+            if !file.lines.iter().any(|l| l.contains("ALL_CATEGORIES")) {
+                findings.push(Finding {
+                    file: wa_rel.clone(),
+                    line: 1,
+                    rule: "category".into(),
+                    message: "WA report does not iterate ALL_CATEGORIES — a hand-listed \
+                              report silently drops newly added categories"
+                        .into(),
+                });
+            }
+        }
+        None => findings.push(Finding {
+            file: wa_rel.clone(),
+            line: 1,
+            rule: "category".into(),
+            message: "wa_report module configured in protolint.toml not found".into(),
+        }),
+    }
+
+    // Defaulting-constructor call sites outside the defining modules.
+    for file in &tree.files {
+        if Config::matches_module(&file.rel, &cfg.defining_modules) {
+            continue;
+        }
+        let mut v = CallSiteVisitor {
+            cfg,
+            file,
+            findings: &mut findings,
+        };
+        v.visit_file(&file.ast);
+    }
+
+    findings
+}
+
+fn path_last(expr: &syn::Expr) -> Option<String> {
+    match expr {
+        syn::Expr::Path(p) => p.path.segments.last().map(|s| s.ident.to_string()),
+        _ => None,
+    }
+}
+
+fn check_enum_coherence(file: &SourceFile, findings: &mut Vec<Finding>) {
+    let mut report = |line: usize, message: String| {
+        findings.push(Finding {
+            file: file.rel.clone(),
+            line,
+            rule: "category".into(),
+            message,
+        });
+    };
+
+    let mut variants: Vec<String> = Vec::new();
+    let mut enum_line = 1;
+    let mut count: Option<(usize, usize)> = None; // (value, line)
+    let mut all: Option<(Vec<String>, usize)> = None;
+    let mut index_arms: Option<(BTreeMap<String, Option<usize>>, usize)> = None;
+    let mut name_arms: Option<(BTreeMap<String, Option<String>>, usize)> = None;
+
+    for item in &file.ast.items {
+        match item {
+            syn::Item::Enum(e) if e.ident == "WriteCategory" => {
+                enum_line = e.ident.span().start().line;
+                variants = e.variants.iter().map(|v| v.ident.to_string()).collect();
+            }
+            syn::Item::Const(c) if c.ident == "CATEGORY_COUNT" => {
+                let line = c.ident.span().start().line;
+                match &*c.expr {
+                    syn::Expr::Lit(syn::ExprLit {
+                        lit: syn::Lit::Int(i),
+                        ..
+                    }) => match i.base10_parse::<usize>() {
+                        Ok(v) => count = Some((v, line)),
+                        Err(_) => report(line, "CATEGORY_COUNT literal does not parse".into()),
+                    },
+                    _ => report(line, "CATEGORY_COUNT must be an integer literal".into()),
+                }
+            }
+            syn::Item::Const(c) if c.ident == "ALL_CATEGORIES" => {
+                let line = c.ident.span().start().line;
+                match &*c.expr {
+                    syn::Expr::Array(a) => {
+                        let elems: Vec<String> =
+                            a.elems.iter().filter_map(path_last).collect();
+                        if elems.len() != a.elems.len() {
+                            report(line, "ALL_CATEGORIES has a non-path element".into());
+                        }
+                        all = Some((elems, line));
+                    }
+                    _ => report(line, "ALL_CATEGORIES must be an array literal".into()),
+                }
+            }
+            syn::Item::Impl(imp) if type_is(&imp.self_ty, "WriteCategory") => {
+                for ii in &imp.items {
+                    let syn::ImplItem::Fn(f) = ii else { continue };
+                    let line = f.sig.ident.span().start().line;
+                    if f.sig.ident == "index" {
+                        index_arms = Some((
+                            match_arms(&f.block, |e| match e {
+                                syn::Expr::Lit(syn::ExprLit {
+                                    lit: syn::Lit::Int(i),
+                                    ..
+                                }) => i.base10_parse::<usize>().ok(),
+                                _ => None,
+                            }),
+                            line,
+                        ));
+                    } else if f.sig.ident == "name" {
+                        name_arms = Some((
+                            match_arms(&f.block, |e| match e {
+                                syn::Expr::Lit(syn::ExprLit {
+                                    lit: syn::Lit::Str(s),
+                                    ..
+                                }) => Some(s.value()),
+                                _ => None,
+                            }),
+                            line,
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    if variants.is_empty() {
+        report(enum_line, "enum WriteCategory not found".into());
+        return;
+    }
+    let n = variants.len();
+    let vset: BTreeSet<&String> = variants.iter().collect();
+
+    match count {
+        Some((v, line)) if v != n => report(
+            line,
+            format!("CATEGORY_COUNT is {v} but WriteCategory has {n} variants"),
+        ),
+        Some(_) => {}
+        None => report(enum_line, "const CATEGORY_COUNT not found".into()),
+    }
+
+    match &all {
+        Some((elems, line)) => {
+            let eset: BTreeSet<&String> = elems.iter().collect();
+            for v in vset.iter().filter(|v| !eset.contains(**v)) {
+                report(*line, format!("ALL_CATEGORIES is missing WriteCategory::{v}"));
+            }
+            for e in eset.iter().filter(|e| !vset.contains(**e)) {
+                report(*line, format!("ALL_CATEGORIES lists unknown variant {e}"));
+            }
+            if elems.len() != eset.len() {
+                report(*line, "ALL_CATEGORIES lists a variant twice".into());
+            }
+        }
+        None => report(enum_line, "const ALL_CATEGORIES not found".into()),
+    }
+
+    match &index_arms {
+        Some((arms, line)) => {
+            for v in vset.iter().filter(|v| !arms.contains_key(**v)) {
+                report(*line, format!("index() has no arm for WriteCategory::{v}"));
+            }
+            let mut seen: BTreeMap<usize, &String> = BTreeMap::new();
+            for (variant, value) in arms {
+                match value {
+                    Some(i) if *i < n => {
+                        if let Some(other) = seen.insert(*i, variant) {
+                            report(
+                                *line,
+                                format!("index() maps both {other} and {variant} to {i}"),
+                            );
+                        }
+                    }
+                    Some(i) => report(
+                        *line,
+                        format!("index() maps {variant} to {i}, outside 0..{n}"),
+                    ),
+                    None => report(
+                        *line,
+                        format!("index() arm for {variant} is not an integer literal"),
+                    ),
+                }
+            }
+        }
+        None => report(enum_line, "WriteCategory::index() not found".into()),
+    }
+
+    match &name_arms {
+        Some((arms, line)) => {
+            for v in vset.iter().filter(|v| !arms.contains_key(**v)) {
+                report(*line, format!("name() has no arm for WriteCategory::{v}"));
+            }
+            let mut seen: BTreeMap<&String, &String> = BTreeMap::new();
+            for (variant, value) in arms {
+                match value {
+                    Some(s) => {
+                        if let Some(other) = seen.insert(s, variant) {
+                            report(
+                                *line,
+                                format!("name() gives {other} and {variant} the same name {s:?}"),
+                            );
+                        }
+                    }
+                    None => report(
+                        *line,
+                        format!("name() arm for {variant} is not a string literal"),
+                    ),
+                }
+            }
+        }
+        None => report(enum_line, "WriteCategory::name() not found".into()),
+    }
+}
+
+fn type_is(ty: &syn::Type, name: &str) -> bool {
+    matches!(ty, syn::Type::Path(p) if p.path.segments.last().is_some_and(|s| s.ident == name))
+}
+
+/// Extract `WriteCategory::Variant => <value>` arms from the first
+/// `match` in a function body. `Variant` keys map to `extract(body)`.
+fn match_arms<T>(
+    block: &syn::Block,
+    extract: impl Fn(&syn::Expr) -> Option<T>,
+) -> BTreeMap<String, Option<T>> {
+    struct Finder<'ast> {
+        found: Option<&'ast syn::ExprMatch>,
+    }
+    impl<'ast> Visit<'ast> for Finder<'ast> {
+        fn visit_expr_match(&mut self, node: &'ast syn::ExprMatch) {
+            if self.found.is_none() {
+                self.found = Some(node);
+            }
+        }
+    }
+    let mut finder = Finder { found: None };
+    finder.visit_block(block);
+    let mut out = BTreeMap::new();
+    if let Some(m) = finder.found {
+        for arm in &m.arms {
+            if let syn::Pat::Path(p) = &arm.pat {
+                if let Some(seg) = p.path.segments.last() {
+                    out.insert(seg.ident.to_string(), extract(&arm.body));
+                }
+            }
+        }
+    }
+    out
+}
+
+struct CallSiteVisitor<'a> {
+    cfg: &'a Config,
+    file: &'a SourceFile,
+    findings: &'a mut Vec<Finding>,
+}
+
+impl<'ast> Visit<'ast> for CallSiteVisitor<'_> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if !is_test_item(&node.attrs) {
+            syn::visit::visit_item_mod(self, node);
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if !is_test_item(&node.attrs) {
+            syn::visit::visit_item_fn(self, node);
+        }
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        if !is_test_item(&node.attrs) {
+            syn::visit::visit_impl_item_fn(self, node);
+        }
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if let syn::Expr::Path(p) = &*node.func {
+            let segs: Vec<String> =
+                p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+            if segs.len() >= 2 {
+                let key = format!("{}::{}", segs[segs.len() - 2], segs[segs.len() - 1]);
+                if self.cfg.defaulting_constructors.contains(&key) {
+                    let line = p.path.segments.last().unwrap().ident.span().start().line;
+                    if !allowed(self.file, line, "category") {
+                        self.findings.push(Finding {
+                            file: self.file.rel.clone(),
+                            line,
+                            rule: "category".into(),
+                            message: format!(
+                                "`{key}` defaults its WriteCategory — annotate the call \
+                                 site with allow(category, \"...\") to state the default \
+                                 is the intent, or use a constructor that takes one"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        syn::visit::visit_expr_call(self, node);
+    }
+}

@@ -1,0 +1,144 @@
+//! R4 — CAS read-set discipline for state tables.
+//!
+//! The exactly-once protocol survives split-brain twins because every
+//! commit that rewrites a mapper/reducer state row also carries that
+//! row in its transactional read set — the loser of a commit race
+//! conflicts instead of clobbering. A `txn.write(state_table, row)`
+//! with no `txn.lookup(...)` in the same function is therefore a
+//! protocol bug: the write would blind-overwrite whatever a twin
+//! committed (exactly the shape of the two blind-init bugs this rule
+//! was extracted from).
+//!
+//! Heuristics, scoped to the protocol modules only:
+//! - A *state write* is a two-argument `.write(table, row)` whose
+//!   receiver text does not contain `store` (store writes are the
+//!   non-transactional path and have their own rules) and whose first
+//!   argument matches a configured state-table pattern — directly, or
+//!   through a local alias (`let table = ...state_table...`).
+//! - A *counting lookup* is any `.lookup(..)` / `.lookup_many(..)`
+//!   whose receiver text does not contain `store`: store-level reads
+//!   do not join the transaction's read set, so they do not count.
+//! - Any counting lookup in the function satisfies the rule for every
+//!   state write in it (the row looked up and the row written share
+//!   the commit's conflict window).
+
+use quote::ToTokens;
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+use crate::config::Config;
+use crate::source::{allowed, is_test_item, Finding, SourceFile, SourceTree};
+
+pub fn check(cfg: &Config, tree: &SourceTree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &tree.files {
+        if !Config::matches_module(&file.rel, &cfg.protocol_modules) {
+            continue;
+        }
+        check_items(cfg, file, &file.ast.items, &mut findings);
+    }
+    findings
+}
+
+fn check_items(cfg: &Config, file: &SourceFile, items: &[syn::Item], findings: &mut Vec<Finding>) {
+    for item in items {
+        match item {
+            syn::Item::Fn(f) if !is_test_item(&f.attrs) => {
+                check_fn(cfg, file, &f.block, findings);
+            }
+            syn::Item::Impl(imp) if !is_test_item(&imp.attrs) => {
+                for ii in &imp.items {
+                    if let syn::ImplItem::Fn(f) = ii {
+                        if !is_test_item(&f.attrs) {
+                            check_fn(cfg, file, &f.block, findings);
+                        }
+                    }
+                }
+            }
+            syn::Item::Mod(m) if !is_test_item(&m.attrs) => {
+                if let Some((_, items)) = &m.content {
+                    check_items(cfg, file, items, findings);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+struct FnScan<'a> {
+    cfg: &'a Config,
+    /// Local bindings whose initializer text matches a state pattern.
+    aliases: Vec<String>,
+    /// (line) of each state write found.
+    state_writes: Vec<usize>,
+    has_lookup: bool,
+}
+
+impl FnScan<'_> {
+    fn matches_state(&self, text: &str) -> bool {
+        self.cfg
+            .state_table_patterns
+            .iter()
+            .any(|p| text.contains(p.as_str()))
+    }
+}
+
+fn text_of(expr: &syn::Expr) -> String {
+    expr.to_token_stream().to_string()
+}
+
+impl<'ast> Visit<'ast> for FnScan<'_> {
+    fn visit_local(&mut self, node: &'ast syn::Local) {
+        if let (syn::Pat::Ident(p), Some(init)) = (&node.pat, &node.init) {
+            if self.matches_state(&text_of(&init.expr)) {
+                self.aliases.push(p.ident.to_string());
+            }
+        }
+        syn::visit::visit_local(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        let receiver = text_of(&node.receiver);
+        if (method == "lookup" || method == "lookup_many") && !receiver.contains("store") {
+            self.has_lookup = true;
+        }
+        if method == "write" && node.args.len() == 2 && !receiver.contains("store") {
+            let arg = text_of(&node.args[0]);
+            let arg = arg.trim_start_matches('&').trim();
+            let is_state = self.matches_state(arg)
+                || self.aliases.iter().any(|a| a == arg);
+            if is_state {
+                self.state_writes.push(node.method.span().start().line);
+            }
+        }
+        syn::visit::visit_expr_method_call(self, node);
+    }
+}
+
+fn check_fn(cfg: &Config, file: &SourceFile, block: &syn::Block, findings: &mut Vec<Finding>) {
+    let mut scan = FnScan {
+        cfg,
+        aliases: Vec::new(),
+        state_writes: Vec::new(),
+        has_lookup: false,
+    };
+    scan.visit_block(block);
+    if scan.has_lookup {
+        return;
+    }
+    for line in scan.state_writes {
+        if allowed(file, line, "cas_read_set") {
+            continue;
+        }
+        findings.push(Finding {
+            file: file.rel.clone(),
+            line,
+            rule: "cas_read_set".into(),
+            message: "state-table write with no transactional lookup in the same \
+                      function — a blind write lets a split-brain twin's committed \
+                      state be overwritten instead of losing the CAS race"
+                .into(),
+        });
+    }
+}

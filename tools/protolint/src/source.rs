@@ -1,0 +1,175 @@
+//! Source-tree model: loaded + parsed files, findings, and the
+//! `// protolint: allow(rule, "reason")` annotation grammar.
+
+use std::path::Path;
+
+/// One lint finding. `line` is 1-based in `file` (relative path).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+pub struct SourceFile {
+    /// Path relative to the source root, `/`-separated.
+    pub rel: String,
+    pub lines: Vec<String>,
+    pub ast: syn::File,
+}
+
+pub struct SourceTree {
+    pub files: Vec<SourceFile>,
+}
+
+impl SourceTree {
+    pub fn load(root: &Path) -> Result<SourceTree, String> {
+        let mut files = Vec::new();
+        let mut stack = vec![root.to_path_buf()];
+        while let Some(dir) = stack.pop() {
+            let entries =
+                std::fs::read_dir(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+            for entry in entries {
+                let path = entry.map_err(|e| e.to_string())?.path();
+                if path.is_dir() {
+                    stack.push(path);
+                } else if path.extension().is_some_and(|e| e == "rs") {
+                    let text = std::fs::read_to_string(&path)
+                        .map_err(|e| format!("{}: {e}", path.display()))?;
+                    let ast = syn::parse_file(&text)
+                        .map_err(|e| format!("{}: parse error: {e}", path.display()))?;
+                    let rel = path
+                        .strip_prefix(root)
+                        .map_err(|e| e.to_string())?
+                        .to_string_lossy()
+                        .replace('\\', "/");
+                    files.push(SourceFile {
+                        rel,
+                        lines: text.lines().map(str::to_string).collect(),
+                        ast,
+                    });
+                }
+            }
+        }
+        files.sort_by(|a, b| a.rel.cmp(&b.rel));
+        Ok(SourceTree { files })
+    }
+
+    pub fn get(&self, rel: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+}
+
+/// The rule names an allow annotation may name.
+pub const RULES: &[&str] = &["panic", "lock_unwrap", "lock_order", "category", "cas_read_set"];
+
+/// Parse every `protolint: allow(...)` on a line. Returns (rule, reason).
+fn allows_on_line(line: &str) -> Vec<(String, Option<String>)> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(pos) = rest.find("protolint: allow(") {
+        let after = &rest[pos + "protolint: allow(".len()..];
+        let rule: String = after
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        let tail = &after[rule.len()..];
+        let reason = tail.strip_prefix(',').map(str::trim_start).and_then(|t| {
+            let t = t.strip_prefix('"')?;
+            Some(t[..t.find('"')?].to_string())
+        });
+        out.push((rule, reason));
+        rest = after;
+    }
+    out
+}
+
+/// Is a finding of `rule` at 1-based `line` suppressed by an annotation
+/// on that line or on the run of comment-only lines directly above it?
+pub fn allowed(file: &SourceFile, line: usize, rule: &str) -> bool {
+    let has = |idx: usize| {
+        file.lines
+            .get(idx)
+            .map(|l| allows_on_line(l).iter().any(|(r, _)| r == rule))
+            .unwrap_or(false)
+    };
+    if line == 0 || line > file.lines.len() {
+        return false;
+    }
+    if has(line - 1) {
+        return true;
+    }
+    let mut i = line - 1;
+    while i > 0 && file.lines[i - 1].trim_start().starts_with("//") {
+        i -= 1;
+        if has(i) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Every allow annotation must name a known rule and carry a non-empty
+/// reason — an allow is documentation, not a mute button.
+pub fn check_annotation_reasons(tree: &SourceTree) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for file in &tree.files {
+        for (i, line) in file.lines.iter().enumerate() {
+            for (rule, reason) in allows_on_line(line) {
+                if !RULES.contains(&rule.as_str()) {
+                    findings.push(Finding {
+                        file: file.rel.clone(),
+                        line: i + 1,
+                        rule: "annotation".into(),
+                        message: format!(
+                            "allow names unknown rule `{rule}` (known: {})",
+                            RULES.join(", ")
+                        ),
+                    });
+                } else if reason.as_deref().map_or(true, |r| r.trim().is_empty()) {
+                    findings.push(Finding {
+                        file: file.rel.clone(),
+                        line: i + 1,
+                        rule: "annotation".into(),
+                        message: format!(
+                            "allow({rule}) needs a reason: `// protolint: allow({rule}, \"why\")`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    findings
+}
+
+/// Does an attribute list mark test-only code (`#[cfg(test)]` / `#[test]`)?
+pub fn is_test_item(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        let path = a.path();
+        if path.is_ident("test") {
+            return true;
+        }
+        if path.is_ident("cfg") {
+            let mut has_test = false;
+            let _ = a.parse_nested_meta(|meta| {
+                if meta.path.is_ident("test") {
+                    has_test = true;
+                }
+                Ok(())
+            });
+            return has_test;
+        }
+        false
+    })
+}

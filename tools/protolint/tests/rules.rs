@@ -1,0 +1,437 @@
+//! Per-rule fixture tests: each rule gets a tripping fixture, a
+//! near-miss that must stay clean, and an annotation-suppression case.
+
+use std::path::Path;
+
+use protolint::source::{SourceFile, SourceTree};
+use protolint::{r1, r2, r3, r4, source, Config};
+
+const TEST_TOML: &str = r#"
+[paths]
+source_root = "src"
+accounting = "src/acc.rs"
+wa_report = "src/wa.rs"
+
+[r1]
+protocol_modules = ["proto.rs", "protodir/"]
+
+[r2]
+classes = ["outer_thing=>outer", "inner_thing=>inner"]
+order = ["outer", "inner"]
+
+[r3]
+defaulting_constructors = ["OrderedTable::new"]
+defining_modules = ["queue/"]
+
+[r4]
+state_table_patterns = ["state_table"]
+"#;
+
+fn cfg() -> Config {
+    Config::parse(TEST_TOML).expect("test config parses")
+}
+
+fn tree(files: &[(&str, &str)]) -> SourceTree {
+    SourceTree {
+        files: files
+            .iter()
+            .map(|(rel, text)| SourceFile {
+                rel: rel.to_string(),
+                lines: text.lines().map(str::to_string).collect(),
+                ast: syn::parse_file(text).expect("fixture parses"),
+            })
+            .collect(),
+    }
+}
+
+fn rules(findings: &[protolint::Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+// ----------------------------------------------------------------- R1
+
+#[test]
+fn r1_trips_on_unwrap_expect_and_panic_macros() {
+    let t = tree(&[(
+        "proto.rs",
+        r#"
+fn commit(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("present");
+    if a + b > 3 { panic!("boom"); }
+    unreachable!()
+}
+"#,
+    )]);
+    let f = r1::check(&cfg(), &t);
+    assert_eq!(rules(&f), vec!["panic", "panic", "panic", "panic"]);
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn r1_lock_unwrap_is_its_own_subrule() {
+    let t = tree(&[(
+        "protodir/a.rs",
+        "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n",
+    )]);
+    let f = r1::check(&cfg(), &t);
+    assert_eq!(rules(&f), vec!["lock_unwrap"]);
+}
+
+#[test]
+fn r1_near_misses_stay_clean() {
+    // Outside the protocol modules; test code inside them; assert!.
+    let t = tree(&[
+        ("other.rs", "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n"),
+        (
+            "proto.rs",
+            r#"
+fn ok(a: u32) { assert!(a > 0); assert_eq!(a, a); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { Some(1).unwrap(); }
+}
+"#,
+        ),
+    ]);
+    assert!(r1::check(&cfg(), &t).is_empty());
+}
+
+#[test]
+fn r1_allow_annotation_suppresses_including_multiline_chains() {
+    let t = tree(&[(
+        "proto.rs",
+        r#"
+fn f(v: Option<u32>) -> u32 {
+    // protolint: allow(panic, "fixture: checked by caller")
+    let a = v.unwrap();
+    let b = long_call_chain(v)
+        // protolint: allow(panic, "fixture: anchor is the expect line")
+        .expect("chained");
+    a + b
+}
+fn long_call_chain(v: Option<u32>) -> Option<u32> { v }
+"#,
+    )]);
+    assert!(r1::check(&cfg(), &t).is_empty());
+}
+
+#[test]
+fn r1_annotation_for_wrong_rule_does_not_suppress() {
+    let t = tree(&[(
+        "proto.rs",
+        "fn f(v: Option<u32>) -> u32 {\n    // protolint: allow(lock_order, \"wrong rule\")\n    v.unwrap()\n}\n",
+    )]);
+    assert_eq!(rules(&r1::check(&cfg(), &t)), vec!["panic"]);
+}
+
+// ----------------------------------------------------------------- R2
+
+#[test]
+fn r2_trips_on_let_guard_inversion() {
+    let t = tree(&[(
+        "a.rs",
+        r#"
+fn f(s: &S) {
+    let i = util::lock(&s.inner_thing);
+    let o = util::lock(&s.outer_thing);
+    drop(o);
+    drop(i);
+}
+"#,
+    )]);
+    let f = r2::check(&cfg(), &t);
+    assert_eq!(rules(&f), vec!["lock_order"]);
+    assert_eq!(f[0].line, 4);
+}
+
+#[test]
+fn r2_correct_order_and_dropped_guard_stay_clean() {
+    let t = tree(&[(
+        "a.rs",
+        r#"
+fn ordered(s: &S) {
+    let o = util::lock(&s.outer_thing);
+    let i = util::lock(&s.inner_thing);
+    drop(i);
+    drop(o);
+}
+fn released(s: &S) {
+    let i = util::lock(&s.inner_thing);
+    drop(i);
+    let o = util::lock(&s.outer_thing);
+    drop(o);
+}
+fn temps(s: &S) {
+    util::lock(&s.inner_thing).poke();
+    util::lock(&s.outer_thing).poke();
+}
+fn scoped(s: &S) {
+    {
+        let i = util::lock(&s.inner_thing);
+        i.poke();
+    }
+    let o = util::lock(&s.outer_thing);
+    o.poke();
+}
+"#,
+    )]);
+    assert!(r2::check(&cfg(), &t).is_empty());
+}
+
+#[test]
+fn r2_method_form_acquisitions_are_tracked() {
+    let t = tree(&[(
+        "a.rs",
+        r#"
+fn f(s: &S) {
+    let i = s.inner_thing.lock();
+    let o = s.outer_thing.read();
+    drop(o);
+    drop(i);
+}
+"#,
+    )]);
+    assert_eq!(rules(&r2::check(&cfg(), &t)), vec!["lock_order"]);
+}
+
+#[test]
+fn r2_one_level_call_closure_trips() {
+    let t = tree(&[(
+        "a.rs",
+        r#"
+fn helper(s: &S) {
+    let o = util::lock(&s.outer_thing);
+    o.poke();
+}
+fn f(s: &S) {
+    let i = util::lock(&s.inner_thing);
+    helper(s);
+    drop(i);
+}
+"#,
+    )]);
+    let f = r2::check(&cfg(), &t);
+    assert_eq!(rules(&f), vec!["lock_order"]);
+    assert!(f[0].message.contains("helper"), "{}", f[0].message);
+}
+
+#[test]
+fn r2_self_method_closure_and_annotation() {
+    let t = tree(&[(
+        "a.rs",
+        r#"
+impl S {
+    fn helper(&self) {
+        let o = util::lock(&self.outer_thing);
+        o.poke();
+    }
+    fn trip(&self) {
+        let i = util::lock(&self.inner_thing);
+        self.helper();
+        drop(i);
+    }
+    fn allowed_site(&self) {
+        let i = util::lock(&self.inner_thing);
+        // protolint: allow(lock_order, "fixture: re-entrant by design")
+        self.helper();
+        drop(i);
+    }
+}
+"#,
+    )]);
+    let f = r2::check(&cfg(), &t);
+    assert_eq!(rules(&f), vec!["lock_order"]);
+    assert_eq!(f[0].line, 9);
+}
+
+#[test]
+fn r2_receiver_evaluation_precedes_the_acquisition() {
+    // `util::lock(&s.fetch_outer().inner_thing)` runs `fetch_outer`
+    // (which takes the outer lock) BEFORE the inner lock exists, so
+    // there is no inversion even though both appear in one statement.
+    let t = tree(&[(
+        "a.rs",
+        r#"
+impl S {
+    fn fetch_outer(&self) -> &T {
+        let o = util::lock(&self.outer_thing);
+        o.get()
+    }
+    fn fine(&self) {
+        let i = util::lock(&self.fetch_outer().inner_thing);
+        i.poke();
+    }
+}
+"#,
+    )]);
+    assert!(r2::check(&cfg(), &t).is_empty());
+}
+
+// ----------------------------------------------------------------- R3
+
+const COHERENT_ACC: &str = r#"
+pub enum WriteCategory { A, B }
+pub const CATEGORY_COUNT: usize = 2;
+pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] =
+    [WriteCategory::A, WriteCategory::B];
+impl WriteCategory {
+    fn index(self) -> usize {
+        match self {
+            WriteCategory::A => 0,
+            WriteCategory::B => 1,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            WriteCategory::A => "a",
+            WriteCategory::B => "b",
+        }
+    }
+}
+"#;
+
+const WA_OK: &str = "pub fn report() { for c in ALL_CATEGORIES { emit(c); } }\n";
+
+#[test]
+fn r3_coherent_enum_is_clean() {
+    let t = tree(&[("acc.rs", COHERENT_ACC), ("wa.rs", WA_OK)]);
+    let f = r3::check(&cfg(), &t, Path::new("."));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn r3_trips_on_each_desync() {
+    let desynced = COHERENT_ACC
+        .replace("pub const CATEGORY_COUNT: usize = 2;", "pub const CATEGORY_COUNT: usize = 3;")
+        .replace("[WriteCategory::A, WriteCategory::B]", "[WriteCategory::A, WriteCategory::A]")
+        .replace("WriteCategory::B => 1,", "WriteCategory::B => 0,")
+        .replace("WriteCategory::B => \"b\",", "WriteCategory::B => \"a\",");
+    let t = tree(&[("acc.rs", &desynced), ("wa.rs", "pub fn report() {}\n")]);
+    let f = r3::check(&cfg(), &t, Path::new("."));
+    let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("CATEGORY_COUNT is 3")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("missing WriteCategory::B")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("lists a variant twice")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("maps both A and B to 0")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("the same name")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("ALL_CATEGORIES")), "{msgs:?}");
+}
+
+#[test]
+fn r3_defaulting_constructor_needs_annotation_outside_definer() {
+    let bare = "fn f() { let t = OrderedTable::new(\"t\", 2); }\n";
+    let annotated = "fn f() {\n    // protolint: allow(category, \"fixture: ingest table\")\n    let t = OrderedTable::new(\"t\", 2);\n}\n";
+    let base = [("acc.rs", COHERENT_ACC), ("wa.rs", WA_OK)];
+
+    let t = tree(&[base[0], base[1], ("workload.rs", bare)]);
+    assert_eq!(rules(&r3::check(&cfg(), &t, Path::new("."))), vec!["category"]);
+
+    let t = tree(&[base[0], base[1], ("workload.rs", annotated)]);
+    assert!(r3::check(&cfg(), &t, Path::new(".")).is_empty());
+
+    // The defining module itself is exempt.
+    let t = tree(&[base[0], base[1], ("queue/table.rs", bare)]);
+    assert!(r3::check(&cfg(), &t, Path::new(".")).is_empty());
+}
+
+// ----------------------------------------------------------------- R4
+
+#[test]
+fn r4_blind_state_write_trips() {
+    let t = tree(&[(
+        "proto.rs",
+        r#"
+fn blind_init(txn: &mut Transaction, spec: &Spec) {
+    txn.write(&spec.state_table, initial_row());
+}
+"#,
+    )]);
+    let f = r4::check(&cfg(), &t);
+    assert_eq!(rules(&f), vec!["cas_read_set"]);
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn r4_lookup_in_same_function_satisfies() {
+    let t = tree(&[(
+        "proto.rs",
+        r#"
+fn cas_init(txn: &mut Transaction, spec: &Spec) {
+    if txn.lookup(&spec.state_table, &key()).is_ok() {
+        txn.write(&spec.state_table, initial_row());
+    }
+}
+"#,
+    )]);
+    assert!(r4::check(&cfg(), &t).is_empty());
+}
+
+#[test]
+fn r4_near_misses_stay_clean() {
+    let t = tree(&[
+        // Store-level writes are the non-transactional path.
+        ("proto.rs", "fn f(store: &Store, spec: &Spec) { store.write(&spec.state_table, row()); }\n"),
+        // Non-state tables are not covered.
+        ("protodir/b.rs", "fn f(txn: &mut Txn) { txn.write(&output_table(), row()); }\n"),
+        // Outside the protocol modules the rule does not apply.
+        ("other.rs", "fn f(txn: &mut Txn, spec: &Spec) { txn.write(&spec.state_table, row()); }\n"),
+    ]);
+    assert!(r4::check(&cfg(), &t).is_empty());
+}
+
+#[test]
+fn r4_local_alias_is_resolved() {
+    let t = tree(&[(
+        "proto.rs",
+        r#"
+fn blind_via_alias(txn: &mut Transaction, index: u32) {
+    let table = reducer_state_table(index);
+    txn.write(&table, initial_row());
+}
+"#,
+    )]);
+    assert_eq!(rules(&r4::check(&cfg(), &t)), vec!["cas_read_set"]);
+}
+
+#[test]
+fn r4_allow_annotation_suppresses() {
+    let t = tree(&[(
+        "proto.rs",
+        r#"
+fn helper_write(txn: &mut Transaction, spec: &Spec) {
+    // protolint: allow(cas_read_set, "fixture: caller holds the read")
+    txn.write(&spec.state_table, row());
+}
+"#,
+    )]);
+    assert!(r4::check(&cfg(), &t).is_empty());
+}
+
+// ---------------------------------------------------- annotation grammar
+
+#[test]
+fn annotations_require_known_rule_and_reason() {
+    let t = tree(&[(
+        "any.rs",
+        r#"
+// protolint: allow(panic, "fine")
+// protolint: allow(panic)
+// protolint: allow(panic, "")
+// protolint: allow(typo_rule, "reasoned")
+fn f() {}
+"#,
+    )]);
+    let f = source::check_annotation_reasons(&t);
+    assert_eq!(f.len(), 3);
+    assert_eq!(f[0].line, 3); // missing reason
+    assert_eq!(f[1].line, 4); // empty reason
+    assert!(f[2].message.contains("typo_rule"));
+}
+
+#[test]
+fn config_rejects_class_missing_from_order() {
+    let broken = TEST_TOML.replace("order = [\"outer\", \"inner\"]", "order = [\"outer\"]");
+    assert!(Config::parse(&broken).is_err());
+}

@@ -1,0 +1,22 @@
+//! The lint must hold on the tree it ships in: discover the repo's own
+//! `protolint.toml` and assert zero findings. This is the same check CI
+//! runs via `cargo run -p protolint -- --deny`, expressed as a test so
+//! `cargo test -p protolint` alone also guards the invariants.
+
+use std::path::Path;
+
+#[test]
+fn live_tree_is_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let (cfg, dir) = protolint::Config::discover(manifest).expect("repo protolint.toml");
+    let findings = protolint::run_all(&cfg, &dir).expect("tree parses");
+    assert!(
+        findings.is_empty(),
+        "protolint findings on the live tree:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
