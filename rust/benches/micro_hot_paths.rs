@@ -3,7 +3,9 @@
 //! trip, dynamic-table commit, window push/ack — plus the per-row vs
 //! batched comparisons backing the PR 6 columnar/group-commit work and
 //! the PR 7 consistency-tier pair (state persisted every commit vs only
-//! at bounded-error anchors) and the PR 8 cold-chunk encode/scan pair.
+//! at bounded-error anchors), the PR 8 cold-chunk encode/scan pair, and
+//! the PR 10 flight-recorder span-record trio (baseline / disabled /
+//! enabled around the same RMW commit).
 //!
 //! Run with `cargo bench --bench micro_hot_paths`. Output is one line per
 //! benchmark (benchkit format); set `BENCHKIT_JSON=/path/BENCH_<pr>.json`
@@ -422,6 +424,88 @@ fn bench_cold_chunk() {
         });
 }
 
+/// Flight recorder (PR 10): the commit-spine span record, measured
+/// around the same RMW commit as `dyntable/txn_rmw_commit`. Three
+/// points: no recorder interaction at all (baseline), the disabled
+/// recorder (one relaxed atomic load per commit — the ≤5%-of-baseline
+/// budget the obs design promises), and the enabled path (span
+/// construction + per-worker ring push).
+fn bench_obs_span_record() {
+    use yt_stream::coordinator::processor::ClusterEnv;
+    use yt_stream::obs::{SpanOutcome, TxnSpan, WorkerId};
+    use yt_stream::rows::{ColumnSchema, ColumnType, TableSchema};
+    use yt_stream::storage::WriteCategory;
+
+    let env = ClusterEnv::new(Clock::realtime(), 4);
+    env.store
+        .create_table(
+            "obs_t",
+            TableSchema::new(vec![
+                ColumnSchema::key("k", ColumnType::Int64),
+                ColumnSchema::value("v", ColumnType::Str),
+            ]),
+            WriteCategory::UserOutput,
+        )
+        .unwrap();
+    let hub = env.metrics.clone();
+    let mut commit_one = |k: i64| {
+        let mut txn = env.store.begin();
+        let _ = txn
+            .lookup("obs_t", &[yt_stream::rows::Value::Int64(k % 1000)])
+            .unwrap();
+        txn.write("obs_t", row![k % 1000, "value"]).unwrap();
+        txn.commit().unwrap()
+    };
+
+    let mut k = 0i64;
+    Bench::new("obs/txn_commit_baseline").run(|| {
+        k += 1;
+        black_box(commit_one(k));
+    });
+
+    hub.recorder().set_enabled(false);
+    Bench::new("obs/txn_commit_span_disabled").run(|| {
+        k += 1;
+        let res = commit_one(k);
+        // The exact call-site shape: one atomic load, everything else
+        // (span construction, guid formatting, trace hashing) skipped.
+        if hub.recorder().enabled() {
+            hub.recorder().record(TxnSpan {
+                txn_id: 0,
+                trace_id: k as u64,
+                worker: WorkerId::reducer(0, "bench"),
+                scope: "reduce".to_string(),
+                read_set: 1,
+                outcome: SpanOutcome::Committed,
+                bytes_by_category: res.bytes_by_category,
+                start_ms: 0,
+                end_ms: 1,
+            });
+        }
+        black_box(res.rows_written);
+    });
+
+    hub.recorder().set_enabled(true);
+    Bench::new("obs/txn_commit_span_enabled").run(|| {
+        k += 1;
+        let res = commit_one(k);
+        if hub.recorder().enabled() {
+            hub.recorder().record(TxnSpan {
+                txn_id: 0,
+                trace_id: k as u64,
+                worker: WorkerId::reducer(0, "bench"),
+                scope: "reduce".to_string(),
+                read_set: 1,
+                outcome: SpanOutcome::Committed,
+                bytes_by_category: res.bytes_by_category,
+                start_ms: 0,
+                end_ms: 1,
+            });
+        }
+        black_box(res.rows_written);
+    });
+}
+
 fn main() {
     println!("== micro hot paths ==");
     bench_codec();
@@ -434,6 +518,7 @@ fn main() {
     bench_spill_batch();
     bench_consistency_anchoring();
     bench_cold_chunk();
+    bench_obs_span_record();
     // BENCHKIT_JSON=<path> → machine-readable BENCH_<pr>.json document.
     yt_stream::util::benchkit::write_json_env("rust/micro_hot_paths");
 }

@@ -29,11 +29,13 @@ use crate::dyntable::TxnError;
 use crate::eventtime::{fetch_close, WatermarkTracker, NO_WATERMARK};
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
+use crate::obs::{self, SpanOutcome, TxnSpan, WorkerId};
 use crate::queue::{PartitionReader, INPUT_COL_WRITE_TS};
 use crate::reshard::plan::{reducer_state_table, PlanPhase, ReshardPlan};
 use crate::rows::{codec, NameTable, Value};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RpcService, RspGetRows};
 use crate::spill::{pick_straggler_buckets, SpillQueue};
+use crate::storage::accounting::CATEGORY_COUNT;
 use crate::storage::{Journal, WriteCategory};
 use crate::util;
 use crate::util::yson::Yson;
@@ -234,6 +236,32 @@ impl MapperShared {
         self.metrics
             .series(&names::mapper_window_bytes(self.index))
             .record(self.client.clock.now_ms(), bytes as f64);
+    }
+
+    /// Record a flight-recorder span for one commit-spine attempt.
+    /// Strictly post-outcome — the recorder never joins the CAS read
+    /// set. Call sites gate on `recorder().enabled()` so the disabled
+    /// path costs one atomic load per transaction.
+    fn record_span(
+        &self,
+        scope: &str,
+        trace_id: u64,
+        read_set: usize,
+        outcome: SpanOutcome,
+        bytes_by_category: [u64; CATEGORY_COUNT],
+        start_ms: u64,
+    ) {
+        self.metrics.recorder().record(TxnSpan {
+            txn_id: 0,
+            trace_id,
+            worker: WorkerId::mapper(self.index, &self.guid.to_string()),
+            scope: scope.to_string(),
+            read_set,
+            outcome,
+            bytes_by_category,
+            start_ms,
+            end_ms: self.client.clock.now_ms(),
+        });
     }
 }
 
@@ -654,7 +682,7 @@ fn run_ingestion(
         inner.persisted_state = cur.clone();
     }
 
-    let lag_series = sh.metrics.series(&names::mapper_read_lag(sh.index));
+    let lag_name = names::mapper_read_lag(sh.index);
     let mut last_trim_ms = clock.now_ms();
     let mut last_plan_ms = clock.now_ms();
     let mut last_heartbeat_ms = clock.now_ms();
@@ -702,6 +730,16 @@ fn run_ingestion(
             // carries the agreed cutover and the bucket sets are rebuilt
             // from it.
             sh.metrics.add(names::MAPPER_SPLIT_BRAIN, 1);
+            if sh.metrics.recorder().enabled() {
+                sh.record_span(
+                    "ingest",
+                    0,
+                    0,
+                    SpanOutcome::Abdicated,
+                    [0; CATEGORY_COUNT],
+                    clock.now_ms(),
+                );
+            }
             clock.sleep_ms(cfg.split_brain_delay_ms);
             let fresh = match sh.client.store.lookup(state_table, &state_key) {
                 Ok(Some(row)) => match MapperState::from_row(&row) {
@@ -766,7 +804,8 @@ fn run_ingestion(
         if let Some(last_row) = batch.rowset.rows().last() {
             if let Some(ts) = last_row.get(INPUT_COL_WRITE_TS).and_then(|v| v.as_i64()) {
                 let lag = clock.now_ms() as i64 - ts;
-                lag_series.record(clock.now_ms(), lag.max(0) as f64);
+                sh.metrics
+                    .record_latency(&lag_name, clock.now_ms(), lag.max(0) as f64);
             }
         }
 
@@ -1061,14 +1100,45 @@ fn try_adopt(
     }
     let adopted = persisted.adopted(new_epoch, cutover);
     txn.write(&spec.state_table, adopted.to_row(sh.index)).ok()?;
+    let obs_on = sh.metrics.recorder().enabled();
+    let span_start = if obs_on { sh.client.clock.now_ms() } else { 0 };
+    let read_set = txn.read_set_len();
     match txn.commit() {
-        Ok(_) => {
+        Ok(res) => {
             sh.metrics.add(names::RESHARD_ADOPTIONS, 1);
+            if obs_on {
+                sh.record_span(
+                    "adopt",
+                    0,
+                    read_set,
+                    SpanOutcome::Committed,
+                    res.bytes_by_category,
+                    span_start,
+                );
+            }
             Some(adopted)
         }
         // Conflict: a twin adopted or the old fleet raced; re-polled.
         // Other errors: transient store failure; retried next poll.
-        Err(_) => None,
+        Err(e) => {
+            if obs_on {
+                let outcome = match e {
+                    TxnError::Conflict { table, key, .. } => SpanOutcome::Conflicted {
+                        losing_row: format!("{table}/{key:?}"),
+                    },
+                    _ => SpanOutcome::Error,
+                };
+                sh.record_span(
+                    "adopt",
+                    0,
+                    read_set,
+                    outcome,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
+            None
+        }
     }
 }
 
@@ -1199,6 +1269,24 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
         return; // nothing new to persist
     }
 
+    // Flight recorder: the trim commit's trace id hashes the input
+    // segment this CAS makes trimmable — the same `[persisted, local)`
+    // range the cold chunk below compacts, so the ingest, the trim and
+    // any later backfill read of that chunk share one trace id.
+    let obs_on = sh.metrics.recorder().enabled();
+    let (span_start, span_trace) = if obs_on {
+        (
+            now,
+            obs::trace_id(&[(
+                sh.index,
+                persisted.input_unread_row_index,
+                local.input_unread_row_index,
+            )]),
+        )
+    } else {
+        (0, 0)
+    };
+
     let state_table = &sh.cfg.mapper_state_table;
     let key = MapperState::key(sh.index);
     let mut txn = sh.client.begin();
@@ -1213,6 +1301,16 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
     // LocalMapperState is further along than the committed state, the
     // method tries to update the remote state…"
     if committed != persisted {
+        if obs_on {
+            sh.record_span(
+                "trim",
+                span_trace,
+                txn.read_set_len(),
+                SpanOutcome::Abdicated,
+                [0; CATEGORY_COUNT],
+                span_start,
+            );
+        }
         return; // split brain — the ingestion loop will handle it
     }
     if txn.write(state_table, local.to_row(sh.index)).is_err() {
@@ -1263,8 +1361,19 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
             }
         }
     }
+    let read_set = txn.read_set_len();
     match txn.commit() {
-        Ok(_) => {
+        Ok(res) => {
+            if obs_on {
+                sh.record_span(
+                    "trim",
+                    span_trace,
+                    read_set,
+                    SpanOutcome::Committed,
+                    res.bytes_by_category,
+                    span_start,
+                );
+            }
             {
                 let mut inner = util::lock(&sh.inner);
                 inner.persisted_state = local.clone();
@@ -1272,8 +1381,34 @@ fn maybe_trim_input(sh: &Arc<MapperShared>, reader: &mut dyn PartitionReader, la
             // "…and calls Trim on the partition reader."
             let _ = reader.trim(local.input_unread_row_index, &local.continuation_token);
         }
-        Err(TxnError::Conflict { .. }) => { /* raced a twin; loop handles it */ }
-        Err(_) => { /* transient store failure; retried next period */ }
+        Err(TxnError::Conflict { table, key, .. }) => {
+            // Raced a twin; the ingestion loop handles the reset.
+            if obs_on {
+                sh.record_span(
+                    "trim",
+                    span_trace,
+                    read_set,
+                    SpanOutcome::Conflicted {
+                        losing_row: format!("{table}/{key:?}"),
+                    },
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
+        }
+        Err(_) => {
+            // Transient store failure; retried next period.
+            if obs_on {
+                sh.record_span(
+                    "trim",
+                    span_trace,
+                    read_set,
+                    SpanOutcome::Error,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
+        }
     }
 }
 

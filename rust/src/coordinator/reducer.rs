@@ -20,10 +20,12 @@ use crate::cypress::{DiscoveryGroup, MemberInfo, SessionId};
 use crate::dyntable::{Transaction, TxnError};
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
+use crate::obs::{self, SpanOutcome, TxnSpan, WorkerId};
 use crate::reshard::migration::{ExportCtx, ImportCtx, ReshardRuntime};
 use crate::reshard::plan::{PlanPhase, ReshardPlan};
 use crate::rows::{codec, UnversionedRowset, Value};
 use crate::rpc::{ReqGetRows, Request, Response, RpcNet, RspGetRows};
+use crate::storage::accounting::CATEGORY_COUNT;
 use crate::util::Guid;
 
 /// Dependencies handed to a reducer instance at spawn.
@@ -268,6 +270,34 @@ impl ReducerRt {
         (new_state, total)
     }
 
+    /// Record a flight-recorder span for one commit-spine attempt.
+    /// Called strictly *after* the transaction's outcome is known — the
+    /// recorder never joins the CAS read set, so recording cannot
+    /// change any commit result. Call sites gate on
+    /// `recorder().enabled()` so the disabled path stays one atomic
+    /// load per transaction.
+    pub(crate) fn record_span(
+        &self,
+        scope: &str,
+        trace_id: u64,
+        read_set: usize,
+        outcome: SpanOutcome,
+        bytes_by_category: [u64; CATEGORY_COUNT],
+        start_ms: u64,
+    ) {
+        self.deps.metrics.recorder().record(TxnSpan {
+            txn_id: 0,
+            trace_id,
+            worker: WorkerId::reducer(self.spec.index, &self.spec.guid.to_string()),
+            scope: scope.to_string(),
+            read_set,
+            outcome,
+            bytes_by_category,
+            start_ms,
+            end_ms: self.deps.client.clock.now_ms(),
+        });
+    }
+
     /// Steps 5–8: decode, combine, run the user Reduce, validate the state
     /// within the transaction and commit atomically.
     ///
@@ -313,6 +343,28 @@ impl ReducerRt {
         let combined_bytes = combined.byte_size();
         let batch_ts = max_ts_of(&combined);
 
+        // Flight recorder: one span per transaction attempt from here on
+        // (a txn exists past this point). The trace id hashes the
+        // shuffle row ranges this attempt covers, so the mapper trim
+        // that later retires these rows carries a joinable id.
+        let obs_on = self.deps.metrics.recorder().enabled();
+        let (span_start, span_trace) = if obs_on {
+            let ranges: Vec<(usize, i64, i64)> = fetches
+                .iter()
+                .filter(|f| f.rsp.row_count > 0)
+                .map(|f| {
+                    (
+                        f.mapper_index,
+                        f.rsp.last_shuffle_row_index - f.rsp.row_count,
+                        f.rsp.last_shuffle_row_index,
+                    )
+                })
+                .collect();
+            (client.clock.now_ms(), obs::trace_id(&ranges))
+        } else {
+            (0, 0)
+        };
+
         // Step 6: user Reduce, taking over its transaction if it opened
         // one.
         let mut txn = match user_reducer.reduce(combined) {
@@ -331,7 +383,18 @@ impl ReducerRt {
         ]) {
             Ok(rows) => rows,
             Err(_) => {
+                let rs = txn.read_set_len();
                 txn.abort();
+                if obs_on {
+                    self.record_span(
+                        "reduce",
+                        span_trace,
+                        rs,
+                        SpanOutcome::Error,
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
                 return CommitOutcome::TransientError;
             }
         };
@@ -340,7 +403,18 @@ impl ReducerRt {
         let in_txn = meta[0].as_ref().and_then(ReducerState::from_row);
         if in_txn.as_ref() != Some(state) {
             self.deps.metrics.add(names::REDUCER_SPLIT_BRAIN, 1);
+            let rs = txn.read_set_len();
             txn.abort();
+            if obs_on {
+                self.record_span(
+                    "reduce",
+                    span_trace,
+                    rs,
+                    SpanOutcome::Abdicated,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
             return CommitOutcome::SplitBrain;
         }
 
@@ -358,7 +432,18 @@ impl ReducerRt {
         // outside a migration, so they cannot ride the first one).
         let plan = meta[1].as_ref().and_then(ReshardPlan::from_row);
         let Some(plan) = plan else {
+            let rs = txn.read_set_len();
             txn.abort();
+            if obs_on {
+                self.record_span(
+                    "reduce",
+                    span_trace,
+                    rs,
+                    SpanOutcome::Error,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
             return CommitOutcome::TransientError;
         };
         let fence_ok = match plan.phase {
@@ -393,7 +478,18 @@ impl ReducerRt {
         };
         if !fence_ok {
             self.deps.metrics.add(names::RESHARD_COMMIT_FENCED, 1);
+            let rs = txn.read_set_len();
             txn.abort();
+            if obs_on {
+                self.record_span(
+                    "reduce",
+                    span_trace,
+                    rs,
+                    SpanOutcome::Abdicated,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
             return CommitOutcome::TransientError;
         }
 
@@ -406,25 +502,61 @@ impl ReducerRt {
                 return CommitOutcome::TransientError;
             }
         }
+        let read_set = txn.read_set_len();
         match txn.commit() {
-            Ok(_) => {
+            Ok(res) => {
                 if let Some(ts) = batch_ts {
                     let now = client.clock.now_ms();
-                    self.deps
-                        .metrics
-                        .series(&names::reducer_commit_latency(self.spec.index))
-                        .record(now, (now as i64 - ts).max(0) as f64);
+                    self.deps.metrics.record_latency(
+                        &names::reducer_commit_latency(self.spec.index),
+                        now,
+                        (now as i64 - ts).max(0) as f64,
+                    );
+                }
+                if obs_on {
+                    self.record_span(
+                        "reduce",
+                        span_trace,
+                        read_set,
+                        SpanOutcome::Committed,
+                        res.bytes_by_category,
+                        span_start,
+                    );
                 }
                 CommitOutcome::Committed {
                     rows: total_rows,
                     bytes: combined_bytes,
                 }
             }
-            Err(TxnError::Conflict { .. }) => {
+            Err(TxnError::Conflict { table, key, .. }) => {
                 self.deps.metrics.add(names::REDUCER_COMMIT_CONFLICTS, 1);
+                if obs_on {
+                    self.record_span(
+                        "reduce",
+                        span_trace,
+                        read_set,
+                        SpanOutcome::Conflicted {
+                            losing_row: format!("{table}/{key:?}"),
+                        },
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
                 CommitOutcome::Conflict
             }
-            Err(_) => CommitOutcome::TransientError,
+            Err(_) => {
+                if obs_on {
+                    self.record_span(
+                        "reduce",
+                        span_trace,
+                        read_set,
+                        SpanOutcome::Error,
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
+                CommitOutcome::TransientError
+            }
         }
     }
 
@@ -547,12 +679,47 @@ impl ReducerRt {
                 return false;
             }
         }
+        let obs_on = self.deps.metrics.recorder().enabled();
+        let span_start = if obs_on {
+            self.deps.client.clock.now_ms()
+        } else {
+            0
+        };
+        let read_set = txn.read_set_len();
         match txn.commit() {
-            Ok(_) => {
+            Ok(res) => {
                 self.deps.metrics.add(names::RESHARD_RETIRED, 1);
+                if obs_on {
+                    self.record_span(
+                        "retire",
+                        0,
+                        read_set,
+                        SpanOutcome::Committed,
+                        res.bytes_by_category,
+                        span_start,
+                    );
+                }
                 true
             }
-            Err(_) => false,
+            Err(e) => {
+                if obs_on {
+                    let outcome = match e {
+                        TxnError::Conflict { table, key, .. } => SpanOutcome::Conflicted {
+                            losing_row: format!("{table}/{key:?}"),
+                        },
+                        _ => SpanOutcome::Error,
+                    };
+                    self.record_span(
+                        "retire",
+                        0,
+                        read_set,
+                        outcome,
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
+                false
+            }
         }
     }
 
@@ -601,12 +768,53 @@ impl ReducerRt {
         {
             return false;
         }
+        let obs_on = self.deps.metrics.recorder().enabled();
+        let span_start = if obs_on {
+            self.deps.client.clock.now_ms()
+        } else {
+            0
+        };
+        let read_set = txn.read_set_len();
+        // The tablet range the bootstrap consumed, keyed by our index.
+        let span_trace = if obs_on {
+            obs::trace_id(&[(self.spec.index, 0, end)])
+        } else {
+            0
+        };
         match txn.commit() {
-            Ok(_) => {
+            Ok(res) => {
                 self.deps.metrics.add(names::RESHARD_BOOTSTRAPPED, 1);
+                if obs_on {
+                    self.record_span(
+                        "bootstrap",
+                        span_trace,
+                        read_set,
+                        SpanOutcome::Committed,
+                        res.bytes_by_category,
+                        span_start,
+                    );
+                }
                 true
             }
-            Err(_) => false,
+            Err(e) => {
+                if obs_on {
+                    let outcome = match e {
+                        TxnError::Conflict { table, key, .. } => SpanOutcome::Conflicted {
+                            losing_row: format!("{table}/{key:?}"),
+                        },
+                        _ => SpanOutcome::Error,
+                    };
+                    self.record_span(
+                        "bootstrap",
+                        span_trace,
+                        read_set,
+                        outcome,
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
+                false
+            }
         }
     }
 
@@ -628,6 +836,12 @@ impl ReducerRt {
     ) -> CommitOutcome {
         let state_table = &self.spec.state_table;
         let state_key = ReducerState::key(self.spec.index);
+        let obs_on = self.deps.metrics.recorder().enabled();
+        let span_start = if obs_on {
+            self.deps.client.clock.now_ms()
+        } else {
+            0
+        };
 
         // Same batched steps-7+7b read as `process_and_commit`: state CAS
         // and plan fence join the read set in one locked pass.
@@ -637,18 +851,51 @@ impl ReducerRt {
         ]) {
             Ok(rows) => rows,
             Err(_) => {
+                let rs = txn.read_set_len();
                 txn.abort();
+                if obs_on {
+                    self.record_span(
+                        "tick",
+                        0,
+                        rs,
+                        SpanOutcome::Error,
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
                 return CommitOutcome::TransientError;
             }
         };
         let in_txn = meta[0].as_ref().and_then(ReducerState::from_row);
         if in_txn.as_ref() != Some(state) {
             self.deps.metrics.add(names::REDUCER_SPLIT_BRAIN, 1);
+            let rs = txn.read_set_len();
             txn.abort();
+            if obs_on {
+                self.record_span(
+                    "tick",
+                    0,
+                    rs,
+                    SpanOutcome::Abdicated,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
             return CommitOutcome::SplitBrain;
         }
         let Some(plan) = meta[1].as_ref().and_then(ReshardPlan::from_row) else {
+            let rs = txn.read_set_len();
             txn.abort();
+            if obs_on {
+                self.record_span(
+                    "tick",
+                    0,
+                    rs,
+                    SpanOutcome::Error,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
             return CommitOutcome::TransientError;
         };
         let fence_ok = match plan.phase {
@@ -659,7 +906,18 @@ impl ReducerRt {
         };
         if !fence_ok {
             self.deps.metrics.add(names::RESHARD_COMMIT_FENCED, 1);
+            let rs = txn.read_set_len();
             txn.abort();
+            if obs_on {
+                self.record_span(
+                    "tick",
+                    0,
+                    rs,
+                    SpanOutcome::Abdicated,
+                    [0; CATEGORY_COUNT],
+                    span_start,
+                );
+            }
             return CommitOutcome::TransientError;
         }
         if txn
@@ -668,16 +926,51 @@ impl ReducerRt {
         {
             return CommitOutcome::TransientError;
         }
+        let read_set = txn.read_set_len();
         match txn.commit() {
-            Ok(_) => {
+            Ok(res) => {
                 self.deps.metrics.add(names::REDUCER_COMMITS, 1);
+                if obs_on {
+                    self.record_span(
+                        "tick",
+                        0,
+                        read_set,
+                        SpanOutcome::Committed,
+                        res.bytes_by_category,
+                        span_start,
+                    );
+                }
                 CommitOutcome::Committed { rows: 0, bytes: 0 }
             }
-            Err(TxnError::Conflict { .. }) => {
+            Err(TxnError::Conflict { table, key, .. }) => {
                 self.deps.metrics.add(names::REDUCER_COMMIT_CONFLICTS, 1);
+                if obs_on {
+                    self.record_span(
+                        "tick",
+                        0,
+                        read_set,
+                        SpanOutcome::Conflicted {
+                            losing_row: format!("{table}/{key:?}"),
+                        },
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
                 CommitOutcome::Conflict
             }
-            Err(_) => CommitOutcome::TransientError,
+            Err(_) => {
+                if obs_on {
+                    self.record_span(
+                        "tick",
+                        0,
+                        read_set,
+                        SpanOutcome::Error,
+                        [0; CATEGORY_COUNT],
+                        span_start,
+                    );
+                }
+                CommitOutcome::TransientError
+            }
         }
     }
 
@@ -796,6 +1089,17 @@ fn run_reducer_serial(
                 // instead; the supervisor restarts incumbents (never
                 // twins), so exactly one instance survives.
                 rt.deps.metrics.add(names::REDUCER_ABDICATIONS, 1);
+                if rt.deps.metrics.recorder().enabled() {
+                    let now = clock.now_ms();
+                    rt.record_span(
+                        "abdicate",
+                        0,
+                        0,
+                        SpanOutcome::Abdicated,
+                        [0; CATEGORY_COUNT],
+                        now,
+                    );
+                }
                 return;
             }
             // First adoption of this incarnation (for approximate tiers:

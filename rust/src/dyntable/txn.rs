@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use crate::queue::ordered_table::OrderedTable;
 use crate::rows::{codec, UnversionedRow, Value};
+use crate::storage::accounting::CATEGORY_COUNT;
 use crate::util;
 
 use super::store::{DynTableStore, Key, VersionedRow};
@@ -79,6 +80,11 @@ pub struct Transaction {
 pub struct CommitResult {
     pub commit_id: u64,
     pub rows_written: usize,
+    /// Journaled bytes per [`WriteCategory`] index — sorted-table write
+    /// set plus ordered-table appends, exactly what this commit added to
+    /// the accounting. Observability payload (obs spans); zero-cost to
+    /// carry since the categories are resolved for accounting anyway.
+    pub bytes_by_category: [u64; CATEGORY_COUNT],
 }
 
 impl Transaction {
@@ -240,6 +246,12 @@ impl Transaction {
         self.ordered_appends.iter().map(|(_, _, r)| r.len()).sum()
     }
 
+    /// Size of the CAS read set (keys whose versions `commit` will
+    /// validate). Observability accessor — recorded in obs spans.
+    pub fn read_set_len(&self) -> usize {
+        self.read_set.len()
+    }
+
     /// Validate the read set and atomically apply the write set (sorted
     /// rows and buffered ordered-table appends).
     pub fn commit(mut self) -> Result<CommitResult, TxnError> {
@@ -340,11 +352,13 @@ impl Transaction {
                 None => acct.push((table.as_str(), journal_bytes, 1)),
             }
         }
+        let mut bytes_by_category = [0u64; CATEGORY_COUNT];
         for (table, bytes, ops) in acct {
             let Some(t) = tables.get(table) else {
                 return Err(TxnError::NoSuchTable(table.to_string()));
             };
             self.store.accounting.record_batch(t.category, bytes, ops);
+            bytes_by_category[t.category.index()] += bytes;
             if let Some(scope) = &t.scope {
                 scope.record_batch(t.category, bytes, ops);
             }
@@ -353,11 +367,15 @@ impl Transaction {
         // tablet assigns dense absolute row indexes in commit order.
         for (table, tablet, rows) in ordered_appends {
             rows_written += rows.len();
+            // Same journal-record size `append_committed` will account.
+            let bytes = codec::encoded_size_rows(&rows) as u64;
+            bytes_by_category[table.category().index()] += bytes;
             table.append_committed(tablet, rows);
         }
         Ok(CommitResult {
             commit_id,
             rows_written,
+            bytes_by_category,
         })
     }
 

@@ -474,6 +474,13 @@ impl WindowedReducer {
             // Advisory (pre-commit) counter; conflicts are rare and only
             // ever over-count.
             self.deps.metrics.add(names::EVENTTIME_WINDOWS_FIRED, fired);
+            // Log-bucketed distribution of fires per transaction: the
+            // obs export's view of fire burstiness (a watermark stall
+            // shows up as a fat tail here before it shows up in lag).
+            self.deps
+                .metrics
+                .histogram("eventtime/windows_fired_per_txn")
+                .record(fired);
         }
         Ok(fired)
     }

@@ -9,6 +9,7 @@ use crate::coordinator::{ComputeMode, InputSpec, StreamingProcessor};
 use crate::metrics::hub::names;
 use crate::metrics::wa::comparison_table;
 use crate::metrics::{MetricsHub, WaReport};
+use crate::obs::{forensics, ObsExport};
 use crate::queue::input_name_table;
 use crate::queue::ordered_table::OrderedTable;
 use crate::util::yson::Yson;
@@ -71,6 +72,28 @@ pub fn run_figure(id: &str, opts: &FigureOpts) {
     }
 }
 
+/// A failed drill gate exits *through* the flight recorder: dump the
+/// conflict/abdication timeline (losing incarnations named) and flush
+/// the obs export, then exit non-zero — the verdict ships with its
+/// forensic record instead of a bare exit code.
+fn fail_figure(obs: &ObsExport, metrics: &MetricsHub, msg: &str) -> ! {
+    eprintln!("{msg}");
+    eprint!(
+        "{}",
+        forensics::conflict_timeline(metrics.recorder(), None, 32)
+    );
+    let _ = obs.write();
+    std::process::exit(1);
+}
+
+/// Flush the obs export at the end of a passing figure run; a write
+/// failure (read-only CI scratch dir) must not fail the figure.
+fn flush_obs(obs: &ObsExport) {
+    if let Err(e) = obs.write() {
+        eprintln!("obs export: write failed: {e}");
+    }
+}
+
 fn print_series(metrics: &MetricsHub, prefix: &str, bin_ms: u64, unit_scale: f64, limit: usize) {
     println!("series,t_ms,value");
     for s in metrics.series_with_prefix(prefix).into_iter().take(limit) {
@@ -101,11 +124,16 @@ fn fig5_1(opts: &FigureOpts) {
         .filter(|s| s.name().contains("ingest"))
         .filter_map(|s| s.max_value())
         .fold(0.0f64, f64::max);
-    println!(
-        "summary: max reducer ingest = {:.2} MB/s (paper: ≈95 MB/s on 10 prod reducers; \
-         shape target: most-loaded reducer is the bottleneck)",
-        max_thpt * 1e-6
+    let mut obs = ObsExport::new("fig5.1", env.metrics.clone());
+    obs.stat(
+        "summary",
+        format!(
+            "max reducer ingest = {:.2} MB/s (paper: ≈95 MB/s on 10 prod reducers; \
+             shape target: most-loaded reducer is the bottleneck)",
+            max_thpt * 1e-6
+        ),
     );
+    flush_obs(&obs);
 }
 
 /// Figure 5.2 — steady-state read lag of 10 sampled mappers.
@@ -137,10 +165,15 @@ fn fig5_2(opts: &FigureOpts) {
         .iter()
         .filter_map(|s| s.mean_since(5_000))
         .fold(0.0f64, f64::max);
-    println!(
-        "summary: max steady-state average read lag = {max_avg:.0} ms \
-         (paper: ≈400 ms max average, few hundred ms typical)"
+    let mut obs = ObsExport::new("fig5.2", env.metrics.clone());
+    obs.stat(
+        "summary",
+        format!(
+            "max steady-state average read lag = {max_avg:.0} ms \
+             (paper: ≈400 ms max average, few hundred ms typical)"
+        ),
     );
+    flush_obs(&obs);
 }
 
 /// Figures 5.3 + 5.4 — single mapper paused (scaled 10 min), then killed;
@@ -184,16 +217,21 @@ fn fig5_3_and_5_4(opts: &FigureOpts) {
     let steady_lag = lag.mean_since(2_000).unwrap_or(0.0).max(100.0);
     let recovered_at = lag.first_below_after(t_restart, steady_lag * 2.0);
     let peak_window = window.max_value().unwrap_or(0.0);
-    println!(
-        "summary: outage {}s (sim); lag recovered {} ms after restart \
-         (paper: ≈15 s); peak window {:.1} MB of {} MB limit (paper: 1.5 of 8 GB); \
-         other reducers kept committing: {} rows during drill (paper: no reducer slowdown)",
-        outage_sim_ms / 1000,
-        recovered_at.map(|t| (t - t_restart).to_string()).unwrap_or_else(|| "n/a".into()),
-        peak_window / 1e6,
-        (ScenarioCfg::default().memory_limit_bytes >> 20),
-        reduced_after - reduced_before,
+    let mut obs = ObsExport::new("fig5.3-5.4", env.metrics.clone());
+    obs.stat(
+        "summary",
+        format!(
+            "outage {}s (sim); lag recovered {} ms after restart \
+             (paper: ≈15 s); peak window {:.1} MB of {} MB limit (paper: 1.5 of 8 GB); \
+             other reducers kept committing: {} rows during drill (paper: no reducer slowdown)",
+            outage_sim_ms / 1000,
+            recovered_at.map(|t| (t - t_restart).to_string()).unwrap_or_else(|| "n/a".into()),
+            peak_window / 1e6,
+            (ScenarioCfg::default().memory_limit_bytes >> 20),
+            reduced_after - reduced_before,
+        ),
     );
+    flush_obs(&obs);
     let _ = t_pause;
 }
 
@@ -239,14 +277,19 @@ fn fig5_5(opts: &FigureOpts) {
         .iter()
         .filter_map(|s| s.first_below_after(t_back + 10_000, (peak / 2.0).max(1.0)))
         .count();
-    println!(
-        "summary: outage at {t_outage} ms for 60 s (sim); peak mapper window {:.1} MB; \
-         {} of {} sampled mappers drained below half peak after recovery \
-         (paper: windows grew during outage, shrank within minutes after)",
-        peak / 1e6,
-        drained,
-        windows.len(),
+    let mut obs = ObsExport::new("fig5.5", env.metrics.clone());
+    obs.stat(
+        "summary",
+        format!(
+            "outage at {t_outage} ms for 60 s (sim); peak mapper window {:.1} MB; \
+             {} of {} sampled mappers drained below half peak after recovery \
+             (paper: windows grew during outage, shrank within minutes after)",
+            peak / 1e6,
+            drained,
+            windows.len(),
+        ),
     );
+    flush_obs(&obs);
 }
 
 /// The headline table — write amplification: streaming vs persisted
@@ -258,7 +301,7 @@ fn table_wa(opts: &FigureOpts) {
     let mut reports: Vec<WaReport> = Vec::new();
 
     // --- ours: the streaming processor, run to drain --------------------
-    {
+    let ours_metrics = {
         let clock = Clock::scaled(8);
         let env = ClusterEnv::new(clock.clone(), opts.seed);
         // protolint: allow(category, "source input table: the SourceIngest default is the intent")
@@ -301,7 +344,8 @@ fn table_wa(opts: &FigureOpts) {
         );
         scenario.stop();
         reports.push(report);
-    }
+        env.metrics.clone()
+    };
 
     // --- baseline: persisted shuffle over identical input ----------------
     {
@@ -364,11 +408,19 @@ fn table_wa(opts: &FigureOpts) {
     println!("{}", comparison_table(&reports));
     let ours = reports[0].factor();
     let base = reports[1].factor();
-    println!(
-        "summary: WA ours = {ours:.4}, persisted shuffle = {base:.4} \
-         ({}× reduction; paper claim: only compact meta-state is persisted)",
-        if ours > 0.0 { format!("{:.0}", base / ours) } else { "∞".into() }
+    let mut obs = ObsExport::new("table-wa", ours_metrics);
+    for r in &reports {
+        obs.add_report(r);
+    }
+    obs.stat(
+        "summary",
+        format!(
+            "WA ours = {ours:.4}, persisted shuffle = {base:.4} \
+             ({}× reduction; paper claim: only compact meta-state is persisted)",
+            if ours > 0.0 { format!("{:.0}", base / ours) } else { "∞".into() }
+        ),
     );
+    flush_obs(&obs);
 }
 
 /// Scale table — aggregate throughput vs worker count (the §1.2 claim:
@@ -377,6 +429,7 @@ fn table_wa(opts: &FigureOpts) {
 fn table_scale(opts: &FigureOpts) {
     println!("# table scale: aggregate reducer throughput vs topology");
     println!("mappers,reducers,agg_MB_per_s,mean_commit_latency_ms");
+    let mut last_metrics = MetricsHub::new();
     for (mappers, reducers) in [(2usize, 1usize), (4, 2), (8, 2), (8, 4)] {
         let scenario = start(ScenarioCfg {
             mappers,
@@ -408,8 +461,14 @@ fn table_scale(opts: &FigureOpts) {
             lat.iter().sum::<f64>() / lat.len() as f64
         };
         println!("{mappers},{reducers},{:.3},{:.0}", agg * 1e-6, mean_lat);
+        last_metrics = env.metrics.clone();
     }
-    println!("summary: throughput grows with reducers; commit latency stays sub-second (paper §1.2)");
+    let mut obs = ObsExport::new("table-scale", last_metrics);
+    obs.stat(
+        "summary",
+        "throughput grows with reducers; commit latency stays sub-second (paper §1.2)",
+    );
+    flush_obs(&obs);
 }
 
 /// Chained-dataflow table: the two-stage sessionize→aggregate topology run
@@ -475,12 +534,17 @@ fn table_chain(opts: &FigureOpts) {
          handoff_trim_low_water={handoff_marks:?}"
     );
     println!("{report}");
-    println!(
-        "summary: end-to-end WA = {:.4} over {} stages \
-         (denominator: source ingest only; inter-stage handoff is the chained cost)",
-        report.end_to_end_factor(),
-        report.stages.len(),
+    let mut obs = ObsExport::new("table-chain", env.metrics.clone());
+    obs.stat(
+        "summary",
+        format!(
+            "end-to-end WA = {:.4} over {} stages \
+             (denominator: source ingest only; inter-stage handoff is the chained cost)",
+            report.end_to_end_factor(),
+            report.stages.len(),
+        ),
     );
+    flush_obs(&obs);
 }
 
 /// Elastic-resharding table: a live 4→8→4 reducer resize under
@@ -550,31 +614,57 @@ fn table_reshard(opts: &FigureOpts) {
         elastic.final_plan,
     );
     println!("{}", elastic.report);
+    let mut obs = ObsExport::new("table-reshard", elastic.env.metrics.clone());
+    obs.add_report(&elastic.report);
     let identical = elastic.rows == baseline.rows;
-    println!(
-        "byte-identity: drilled elastic output == static fault-free output: {identical} \
-         ({} rows vs {} rows)",
-        elastic.rows.len(),
-        baseline.rows.len(),
+    obs.stat(
+        "byte-identity",
+        format!(
+            "drilled elastic output == static fault-free output: {identical} \
+             ({} rows vs {} rows)",
+            elastic.rows.len(),
+            baseline.rows.len(),
+        ),
     );
     let reshard_bytes = elastic.report.snapshot.bytes_of(WriteCategory::Reshard);
     let exact = identical && elastic.output_lines == elastic.expected_lines;
-    println!(
-        "summary: WA = {:.4} with {} reshard bytes (plan CAS + residual migration) — \
-         rescaling costs bytes, honestly accounted; output {}",
-        elastic.report.factor(),
-        reshard_bytes,
-        if exact {
-            "byte-identical to the static run (exactly-once held across both resizes)"
-        } else {
-            "MISMATCH — exactly-once violated"
-        },
+    obs.stat(
+        "summary",
+        format!(
+            "WA = {:.4} with {} reshard bytes (plan CAS + residual migration) — \
+             rescaling costs bytes, honestly accounted; output {}",
+            elastic.report.factor(),
+            reshard_bytes,
+            if exact {
+                "byte-identical to the static run (exactly-once held across both resizes)"
+            } else {
+                "MISMATCH — exactly-once violated"
+            },
+        ),
     );
+    // Forensics demo hook: YT_OBS_DEMO_FAIL takes the failure exit even
+    // though the gates passed, so the conflict-timeline dump can be
+    // exercised (and eyeballed) without actually breaking exactly-once.
+    // The gate booleans above stay honest — the note says "deliberate".
+    if std::env::var_os("YT_OBS_DEMO_FAIL").is_some() {
+        fail_figure(
+            &obs,
+            &elastic.env.metrics,
+            &format!(
+                "figure reshard: FAIL (deliberate, YT_OBS_DEMO_FAIL set; \
+                 real gates: exact={exact})"
+            ),
+        );
+    }
     if !exact {
         // This figure doubles as the bench_smoke exactly-once gate: a
-        // mismatch must fail the process, not just print.
-        eprintln!("figure reshard: FAIL — elastic output diverged from the static run");
-        std::process::exit(1);
+        // mismatch must fail the process, not just print — and it fails
+        // through the flight recorder, naming the losing incarnations.
+        fail_figure(
+            &obs,
+            &elastic.env.metrics,
+            "figure reshard: FAIL — elastic output diverged from the static run",
+        );
     }
 
     // --- autoscaler demo: the policy loop proposing + executing ---------
@@ -625,13 +715,17 @@ fn table_reshard(opts: &FigureOpts) {
     }
     let final_count = scenario.processor.current_reducer_count();
     scenario.stop();
-    println!(
-        "summary: autoscaler {} (final fleet: {final_count} reducers)",
-        match executed {
-            Some(n) => format!("proposed and executed a live scale-up to {n}"),
-            None => "made no proposal within the window (backlog stayed in band)".into(),
-        }
+    obs.stat(
+        "autoscaler",
+        format!(
+            "{} (final fleet: {final_count} reducers)",
+            match executed {
+                Some(n) => format!("proposed and executed a live scale-up to {n}"),
+                None => "made no proposal within the window (backlog stayed in band)".into(),
+            }
+        ),
     );
+    flush_obs(&obs);
 }
 
 /// Hands-off elastic-resharding figure (`figure reshard --auto`): the
@@ -709,35 +803,46 @@ fn table_reshard_auto(opts: &FigureOpts) {
         elastic.final_plan,
     );
     println!("{}", elastic.report);
+    let mut obs = ObsExport::new("table-reshard-auto", elastic.env.metrics.clone());
+    obs.add_report(&elastic.report);
     let identical = elastic.rows == baseline.rows;
     let exact = identical && elastic.output_lines == elastic.expected_lines;
     let settled = elastic
         .final_plan
         .as_ref()
         .is_some_and(|p| p.phase == PlanPhase::Stable);
-    println!(
-        "byte-identity: hands-off drilled output == static fault-free output: {identical} \
-         ({} rows vs {} rows)",
-        elastic.rows.len(),
-        baseline.rows.len(),
+    obs.stat(
+        "byte-identity",
+        format!(
+            "hands-off drilled output == static fault-free output: {identical} \
+             ({} rows vs {} rows)",
+            elastic.rows.len(),
+            baseline.rows.len(),
+        ),
     );
-    println!(
-        "summary: driver performed {grows} grow(s) + {shrinks} shrink(s) unattended, \
-         WA = {:.4} with {} reshard bytes; output {}",
-        elastic.report.factor(),
-        elastic.report.snapshot.bytes_of(WriteCategory::Reshard),
-        if exact {
-            "byte-identical to the static run (exactly-once held, zero manual reshard calls)"
-        } else {
-            "MISMATCH — exactly-once violated"
-        },
+    obs.stat(
+        "summary",
+        format!(
+            "driver performed {grows} grow(s) + {shrinks} shrink(s) unattended, \
+             WA = {:.4} with {} reshard bytes; output {}",
+            elastic.report.factor(),
+            elastic.report.snapshot.bytes_of(WriteCategory::Reshard),
+            if exact {
+                "byte-identical to the static run (exactly-once held, zero manual reshard calls)"
+            } else {
+                "MISMATCH — exactly-once violated"
+            },
+        ),
     );
     if !exact || !settled || grows < 1 || shrinks < 1 {
-        eprintln!(
-            "figure reshard --auto: FAIL — exact={exact} settled={settled} \
-             grows={grows} shrinks={shrinks}"
+        fail_figure(
+            &obs,
+            &elastic.env.metrics,
+            &format!(
+                "figure reshard --auto: FAIL — exact={exact} settled={settled} \
+                 grows={grows} shrinks={shrinks}"
+            ),
         );
-        std::process::exit(1);
     }
 
     // --- topology: shrink-hygiene regression, resident loop -------------
@@ -819,14 +924,21 @@ fn table_reshard_auto(opts: &FigureOpts) {
     }
     scaler.stop();
     running.shutdown();
-    println!(
-        "summary: downstream reducer shrink with a previously-shrunk mapper fleet: {}",
-        if shrunk { "PASS (no drain-gate deadlock)" } else { "FAIL" }
+    obs.stat(
+        "topology",
+        format!(
+            "downstream reducer shrink with a previously-shrunk mapper fleet: {}",
+            if shrunk { "PASS (no drain-gate deadlock)" } else { "FAIL" }
+        ),
     );
     if !shrunk {
-        eprintln!("figure reshard --auto: FAIL — downstream reducer shrink deadlocked");
-        std::process::exit(1);
+        fail_figure(
+            &obs,
+            &env.metrics,
+            "figure reshard --auto: FAIL — downstream reducer shrink deadlocked",
+        );
     }
+    flush_obs(&obs);
 }
 
 /// Event-time windowing figure (`figure window`): per-batch-upsert WA vs
@@ -903,31 +1015,45 @@ fn table_window(opts: &FigureOpts) {
         );
     }
 
+    let mut obs = ObsExport::new("table-window", drilled.env.metrics.clone());
+    for r in [&upsert.report, &finalfire.report, &drilled.report] {
+        obs.add_report(r);
+    }
     let upsert_ok = upsert.rows == upsert.expected;
     let final_ok = finalfire.rows == finalfire.expected;
     let drill_ok = drilled.rows == drilled.expected && drilled.rows == finalfire.rows;
     let strictly_lower = user_final < user_upsert;
-    println!(
-        "byte-identity: upsert=={}expected, final-fire=={}expected, \
-         drilled(kill+dup+4->8 reshard)==static: {}",
-        if upsert_ok { "" } else { "!" },
-        if final_ok { "" } else { "!" },
-        drill_ok,
+    obs.stat(
+        "byte-identity",
+        format!(
+            "upsert=={}expected, final-fire=={}expected, \
+             drilled(kill+dup+4->8 reshard)==static: {}",
+            if upsert_ok { "" } else { "!" },
+            if final_ok { "" } else { "!" },
+            drill_ok,
+        ),
     );
-    println!(
-        "summary: final-fire UserOutput WA strictly lower: {strictly_lower} \
-         ({user_final} vs {user_upsert} bytes over identical input); \
-         fault drill byte-identical: {drill_ok}; late rows: {} (in-order waves ⇒ none expected)",
-        drilled.late_rows,
+    obs.stat(
+        "summary",
+        format!(
+            "final-fire UserOutput WA strictly lower: {strictly_lower} \
+             ({user_final} vs {user_upsert} bytes over identical input); \
+             fault drill byte-identical: {drill_ok}; late rows: {} (in-order waves ⇒ none expected)",
+            drilled.late_rows,
+        ),
     );
     if !(upsert_ok && final_ok && drill_ok && strictly_lower) || drilled.late_rows != 0 {
-        eprintln!(
-            "figure window: FAIL — upsert_ok={upsert_ok} final_ok={final_ok} \
-             drill_ok={drill_ok} strictly_lower={strictly_lower} late={}",
-            drilled.late_rows
+        fail_figure(
+            &obs,
+            &drilled.env.metrics,
+            &format!(
+                "figure window: FAIL — upsert_ok={upsert_ok} final_ok={final_ok} \
+                 drill_ok={drill_ok} strictly_lower={strictly_lower} late={}",
+                drilled.late_rows
+            ),
         );
-        std::process::exit(1);
     }
+    flush_obs(&obs);
 }
 
 /// Consistency-tier frontier (`figure consistency`): the same deterministic
@@ -999,32 +1125,45 @@ fn table_consistency(opts: &FigureOpts) {
     let allowance = cfg.divergence_allowance();
     let within_budget = bounded.divergence <= allowance;
 
-    println!(
-        "exactly-once drill byte-identity: {exact_identical} \
-         ({} rows vs {} baseline rows, divergence {})",
-        exact.rows.len(),
-        baseline.rows.len(),
-        exact.divergence,
+    let mut obs = ObsExport::new("table-consistency", exact.env.metrics.clone());
+    for t in [&baseline, &exact, &bounded, &at_most] {
+        obs.add_report(&t.report);
+    }
+    obs.stat(
+        "exactly-once drill byte-identity",
+        format!(
+            "{exact_identical} ({} rows vs {} baseline rows, divergence {})",
+            exact.rows.len(),
+            baseline.rows.len(),
+            exact.divergence,
+        ),
     );
-    println!(
-        "summary: bounded-error state bytes {} vs exactly-once {} (strictly lower: \
-         {state_strictly_lower}); divergence {} <= allowance {allowance}: {within_budget}; \
-         at-most-once state bytes {} divergence {}",
-        bounded.state_bytes(),
-        exact.state_bytes(),
-        bounded.divergence,
-        at_most.state_bytes(),
-        at_most.divergence,
+    obs.stat(
+        "summary",
+        format!(
+            "bounded-error state bytes {} vs exactly-once {} (strictly lower: \
+             {state_strictly_lower}); divergence {} <= allowance {allowance}: {within_budget}; \
+             at-most-once state bytes {} divergence {}",
+            bounded.state_bytes(),
+            exact.state_bytes(),
+            bounded.divergence,
+            at_most.state_bytes(),
+            at_most.divergence,
+        ),
     );
     if !(exact_identical && state_strictly_lower && within_budget) {
-        eprintln!(
-            "figure consistency: FAIL — exact_identical={exact_identical} \
-             state_strictly_lower={state_strictly_lower} within_budget={within_budget} \
-             (bounded divergence {} / allowance {allowance})",
-            bounded.divergence
+        fail_figure(
+            &obs,
+            &exact.env.metrics,
+            &format!(
+                "figure consistency: FAIL — exact_identical={exact_identical} \
+                 state_strictly_lower={state_strictly_lower} within_budget={within_budget} \
+                 (bounded divergence {} / allowance {allowance})",
+                bounded.divergence
+            ),
         );
-        std::process::exit(1);
     }
+    flush_obs(&obs);
 }
 
 /// Cold-tier backfill figure (`figure backfill`): a day-N consumer drains
@@ -1135,20 +1274,29 @@ fn table_backfill(opts: &FigureOpts) {
     let bootstrap_ok = out.restored_fired_marker.is_some() && out.bootstrap_marker_verified;
     let chunks_ok = out.segment_chunks >= cfg.partitions && out.history_chunks >= 1;
 
-    println!(
-        "byte-identity: drilled day-N backfill output == day-zero control output: {identical} \
-         ({} rows vs {} rows, late={})",
-        out.backfill_rows.len(),
-        out.control_rows.len(),
-        out.late_rows,
+    let mut obs = ObsExport::new("table-backfill", out.env.metrics.clone());
+    obs.add_report(&out.report);
+    obs.add_report(&out.control_report);
+    obs.stat(
+        "byte-identity",
+        format!(
+            "drilled day-N backfill output == day-zero control output: {identical} \
+             ({} rows vs {} rows, late={})",
+            out.backfill_rows.len(),
+            out.control_rows.len(),
+            out.late_rows,
+        ),
     );
-    println!(
-        "summary: backfill moved {} bytes vs re-ingest {} (strictly fewer: {strictly_fewer}); \
-         cold_tier WA line = {cold_bytes} bytes (control: {control_cold_bytes}); \
-         UserOutput equal cold-on/cold-off: {hot_path_untouched}; \
-         bootstrap-from-cold marker restore: {bootstrap_ok}; fsck: {fsck_ok}",
-        out.backfill_bytes_moved(),
-        out.reingest_bytes_moved(),
+    obs.stat(
+        "summary",
+        format!(
+            "backfill moved {} bytes vs re-ingest {} (strictly fewer: {strictly_fewer}); \
+             cold_tier WA line = {cold_bytes} bytes (control: {control_cold_bytes}); \
+             UserOutput equal cold-on/cold-off: {hot_path_untouched}; \
+             bootstrap-from-cold marker restore: {bootstrap_ok}; fsck: {fsck_ok}",
+            out.backfill_bytes_moved(),
+            out.reingest_bytes_moved(),
+        ),
     );
     if !(identical
         && strictly_fewer
@@ -1159,20 +1307,25 @@ fn table_backfill(opts: &FigureOpts) {
         && fsck_ok
         && out.late_rows == 0)
     {
-        eprintln!(
-            "figure backfill: FAIL — identical={identical} strictly_fewer={strictly_fewer} \
-             cold_distinct={cold_distinct} hot_path_untouched={hot_path_untouched} \
-             bootstrap_ok={bootstrap_ok} chunks_ok={chunks_ok} fsck_ok={fsck_ok} late={}",
-            out.late_rows
+        fail_figure(
+            &obs,
+            &out.env.metrics,
+            &format!(
+                "figure backfill: FAIL — identical={identical} strictly_fewer={strictly_fewer} \
+                 cold_distinct={cold_distinct} hot_path_untouched={hot_path_untouched} \
+                 bootstrap_ok={bootstrap_ok} chunks_ok={chunks_ok} fsck_ok={fsck_ok} late={}",
+                out.late_rows
+            ),
         );
-        std::process::exit(1);
     }
+    flush_obs(&obs);
 }
 
 /// Spill ablation (§6): reducer outage with spill off vs on.
 fn ablation_spill(opts: &FigureOpts) {
     println!("# ablation spill: reducer outage, spill off vs on");
     println!("variant,peak_window_MB,spilled_rows,wa_factor,reduced_rows");
+    let mut last_metrics = MetricsHub::new();
     for spill in [false, true] {
         let scenario = start(ScenarioCfg {
             compute: opts.compute,
@@ -1211,9 +1364,13 @@ fn ablation_spill(opts: &FigureOpts) {
             report.factor(),
             reduced,
         );
+        last_metrics = env.metrics.clone();
     }
-    println!(
-        "summary: spill-on trades a bounded WA increase for bounded windows \
-         and healthy-reducer progress during a straggler (§6 thresholds)"
+    let mut obs = ObsExport::new("ablation-spill", last_metrics);
+    obs.stat(
+        "summary",
+        "spill-on trades a bounded WA increase for bounded windows \
+         and healthy-reducer progress during a straggler (§6 thresholds)",
     );
+    flush_obs(&obs);
 }

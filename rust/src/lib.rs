@@ -33,6 +33,7 @@
 //! | cold tier + backfill | [`coldtier`] |
 //! | compiled compute | [`runtime`], [`compute`] |
 //! | evaluation | [`workload`], [`baseline`], [`metrics`], [`figures`] |
+//! | observability | [`obs`] |
 //! | future work (§6) | [`spill`], [`pipelined`] |
 
 pub mod util;
@@ -58,4 +59,5 @@ pub mod spill;
 pub mod multipart;
 pub mod pipelined;
 pub mod metrics;
+pub mod obs;
 pub mod figures;

@@ -11,6 +11,10 @@
 //!     build a deterministic cold-tier store and verify every chunk hash +
 //!     segment-chain continuity (--corrupt: inject a flipped payload byte
 //!     and prove fsck detects it — exits non-zero)
+//! yt-stream obs [--seconds N] [--worker SUB] [--scope SUB] [--outcome NAME] [--json]
+//!     run a short drilled demo (a twinned reducer losing CAS races), then
+//!     dump the commit-spine flight recorder: a filtered span timeline by
+//!     default, the versioned obs JSON document with --json
 //! yt-stream selfcheck
 //!     verify the PJRT runtime + AOT artifacts load and agree with native
 //! ```
@@ -43,6 +47,7 @@ fn main() {
             run_demo(config_path.as_deref(), &opts);
         }
         Some("fsck") => fsck_demo(args.iter().any(|a| a == "--corrupt")),
+        Some("obs") => obs_demo(&args[1..]),
         Some("selfcheck") => selfcheck(),
         _ => {
             eprintln!(
@@ -50,6 +55,7 @@ fn main() {
                  usage:\n  yt-stream figure <5.1|5.2|5.3|5.4|5.5|wa|scale|spill|chain|reshard|window|consistency|backfill> [--seconds N] [--compute native|hlo] [--seed N] [--auto]\n\
                  \x20 yt-stream run [--config path.yson] [--seconds N] [--compute native|hlo]\n\
                  \x20 yt-stream fsck [--corrupt]\n\
+                 \x20 yt-stream obs [--seconds N] [--worker SUB] [--scope SUB] [--outcome NAME] [--json]\n\
                  \x20 yt-stream selfcheck"
             );
             std::process::exit(2);
@@ -201,6 +207,89 @@ fn fsck_demo(corrupt: bool) {
             std::process::exit(1);
         }
     }
+}
+
+/// `obs`: exercise the commit spine under a twin drill, then dump the
+/// flight recorder. The demo twins reducer 0 mid-run so the rings hold
+/// losing spans (conflicted/abdicated) next to the committed ones; the
+/// query flags are substring filters over worker address and scope plus
+/// an exact outcome name, the same filters `forensics::spans_matching`
+/// gives the drill-forensics path.
+fn obs_demo(rest: &[String]) {
+    use yt_stream::controller::Role;
+    use yt_stream::figures::scenario::start;
+    use yt_stream::figures::ScenarioCfg;
+    use yt_stream::obs::{forensics, ObsExport};
+
+    let mut opts = FigureOpts::default();
+    let (mut worker, mut scope, mut outcome) = (None, None, None);
+    let mut json = false;
+    let mut it = rest.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--seconds" => {
+                opts.sim_seconds = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(opts.sim_seconds)
+            }
+            "--seed" => {
+                opts.seed = it.next().and_then(|v| v.parse().ok()).unwrap_or(opts.seed)
+            }
+            "--compute" => {
+                opts.compute = match it.next().map(String::as_str) {
+                    Some("hlo") => ComputeMode::Hlo,
+                    _ => ComputeMode::Native,
+                }
+            }
+            "--worker" => worker = it.next().cloned(),
+            "--scope" => scope = it.next().cloned(),
+            "--outcome" => outcome = it.next().cloned(),
+            "--json" => json = true,
+            other => {
+                eprintln!("unknown flag '{other}'");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let scenario = start(ScenarioCfg {
+        compute: opts.compute,
+        seed: opts.seed,
+        speedup: 20,
+        ..ScenarioCfg::default()
+    });
+    scenario.run_for_sim_ms(4_000);
+    // Twin a reducer: the twin loses CAS races, so the rings record
+    // conflicted/abdicated spans alongside the winner's commits.
+    scenario.processor.supervisor().duplicate(Role::Reducer, 0);
+    scenario.run_for_sim_ms(opts.sim_seconds.max(1) * 1_000);
+    let report = scenario.processor.wa_report("obs-demo");
+    let env = scenario.stop();
+
+    if json {
+        let mut obs = ObsExport::new("demo", env.metrics.clone());
+        obs.add_report(&report);
+        print!("{}", obs.to_json());
+        return;
+    }
+
+    let rec = env.metrics.recorder();
+    let spans = forensics::spans_matching(
+        rec,
+        worker.as_deref(),
+        scope.as_deref(),
+        outcome.as_deref(),
+    );
+    for s in &spans {
+        println!("{}", forensics::format_span(s));
+    }
+    println!(
+        "{} span(s) shown ({} recorded, {} dropped ring-wide)",
+        spans.len(),
+        rec.recorded_total(),
+        rec.dropped_total(),
+    );
 }
 
 /// `selfcheck`: PJRT + artifacts sanity (the AOT bridge smoke test).

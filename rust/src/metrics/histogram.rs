@@ -1,0 +1,170 @@
+//! Log-bucketed latency histograms.
+//!
+//! One bucket per power of two (65 buckets covers the full `u64`
+//! range), each an atomic counter — recording is two relaxed atomic
+//! RMWs, no locks, so workers can histogram every commit without
+//! contending. Quantiles are read as the *upper bound* of the bucket
+//! containing the rank, i.e. "p99 ≤ this value", which is the right
+//! direction to err for tail-latency gates: a log-bucketed p99 can
+//! overstate the tail by at most 2×, never hide it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: bucket 0 holds zeros, bucket `b` holds values with
+/// `b` significant bits (`[2^(b-1), 2^b)`), up to bucket 64.
+pub const BUCKETS: usize = 65;
+
+/// A fixed-size log₂ histogram of `u64` samples (latencies in ms).
+#[derive(Debug)]
+pub struct LogHistogram {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Largest value a bucket can hold (what quantile queries report).
+fn bucket_upper_bound(b: usize) -> u64 {
+    match b {
+        0 => 0,
+        64 => u64::MAX,
+        _ => (1u64 << b) - 1,
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded value (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile sample
+    /// (`0 < q <= 1`), clamped to the exact max. `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Some(bucket_upper_bound(b).min(self.max()));
+            }
+        }
+        Some(self.max())
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50).unwrap_or(0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99).unwrap_or(0)
+    }
+
+    /// `(bucket_upper_bound, count)` for every non-empty bucket, in
+    /// ascending value order — what the obs export serializes.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(b, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then(|| (bucket_upper_bound(b), n))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(100), 7);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_upper_bound(7), 127);
+        assert_eq!(bucket_upper_bound(64), u64::MAX);
+    }
+
+    #[test]
+    fn quantiles_bound_the_tail() {
+        let h = LogHistogram::new();
+        for _ in 0..99 {
+            h.record(10); // bucket [8,16), ub 15
+        }
+        h.record(1000); // bucket [512,1024), ub 1023
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), 15);
+        assert_eq!(h.p99(), 15, "p99 rank 99 still lands in the body");
+        assert_eq!(h.quantile(1.0), Some(1000), "clamped to the exact max");
+        assert_eq!(h.max(), 1000);
+    }
+
+    #[test]
+    fn p99_sees_a_one_percent_tail() {
+        let h = LogHistogram::new();
+        for _ in 0..98 {
+            h.record(1);
+        }
+        for _ in 0..2 {
+            h.record(100);
+        }
+        assert_eq!(h.p99(), 100, "ub 127 clamped to exact max 100");
+        assert_eq!(h.p50(), 1);
+    }
+
+    #[test]
+    fn empty_and_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.99), None);
+        assert_eq!(h.p99(), 0);
+        h.record(0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.nonzero_buckets(), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn nonzero_buckets_ascend() {
+        let h = LogHistogram::new();
+        h.record(3);
+        h.record(300);
+        h.record(3);
+        assert_eq!(h.nonzero_buckets(), vec![(3, 2), (511, 1)]);
+    }
+}

@@ -4,15 +4,20 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::histogram::LogHistogram;
 use super::timeseries::TimeSeries;
+use crate::obs::recorder::FlightRecorder;
 use crate::util;
 
-/// Process-wide registry of counters and time series, shared by all
-/// simulated workers of a streaming processor.
+/// Process-wide registry of counters, time series, latency histograms
+/// and the transaction flight recorder, shared by all simulated
+/// workers of a streaming processor.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
     series: Mutex<HashMap<String, Arc<TimeSeries>>>,
     counters: Mutex<HashMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<HashMap<String, Arc<LogHistogram>>>,
+    recorder: FlightRecorder,
 }
 
 impl MetricsHub {
@@ -44,6 +49,57 @@ impl MetricsHub {
         self.counter(name).load(Ordering::Relaxed)
     }
 
+    /// Every counter with its current value, sorted by name — the obs
+    /// export serializes this so the JSON can never drift from what a
+    /// figure printed.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let g = util::lock(&self.counters);
+        let mut out: Vec<(String, u64)> = g
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        drop(g);
+        out.sort();
+        out
+    }
+
+    /// Get-or-create a named latency histogram. Registering one also
+    /// switches that series' autoscale signal from windowed mean to
+    /// windowed p99 (see [`MetricsHub::max_mean_since`]).
+    pub fn histogram(&self, name: &str) -> Arc<LogHistogram> {
+        util::lock(&self.histograms)
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn get_histogram(&self, name: &str) -> Option<Arc<LogHistogram>> {
+        util::lock(&self.histograms).get(name).cloned()
+    }
+
+    /// Every histogram, sorted by name (for the obs export).
+    pub fn histograms_snapshot(&self) -> Vec<(String, Arc<LogHistogram>)> {
+        let g = util::lock(&self.histograms);
+        let mut out: Vec<(String, Arc<LogHistogram>)> =
+            g.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        drop(g);
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Dual-write a latency sample: the time series keeps the sliding
+    /// window, the cumulative histogram keeps the whole-run tail shape
+    /// for the obs export.
+    pub fn record_latency(&self, name: &str, t_ms: u64, value_ms: f64) {
+        self.series(name).record(t_ms, value_ms);
+        self.histogram(name).record(value_ms.max(0.0).round() as u64);
+    }
+
+    /// The per-process transaction flight recorder (`obs` module).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
     /// All series whose names start with `prefix`, sorted by name — e.g.
     /// `mapper/`-prefixed read-lag series for fig. 5.2.
     pub fn series_with_prefix(&self, prefix: &str) -> Vec<Arc<TimeSeries>> {
@@ -63,17 +119,50 @@ impl MetricsHub {
         names
     }
 
-    /// Worst (max) per-series mean over `[from_ms, now]` across every
+    /// Worst per-series signal over `[from_ms, now]` across every
     /// series named `<prefix>…<suffix>` — the lag-aggregation query the
-    /// autoscale driver runs each tick. `None` when no matching series
-    /// has a sample in the window (e.g. a drained input: no reads, no
-    /// lag — which the policy deliberately treats as "not overloaded").
+    /// autoscale driver runs each tick. Per series the signal is the
+    /// **windowed log-bucketed p99** when a histogram is registered
+    /// under the same name (tail latency, not the mean that hides it),
+    /// falling back to the windowed mean for plain series. `None` when
+    /// no matching series has a sample in the window (e.g. a drained
+    /// input: no reads, no lag — which the policy deliberately treats
+    /// as "not overloaded").
     pub fn max_mean_since(&self, prefix: &str, suffix: &str, from_ms: u64) -> Option<f64> {
-        let g = util::lock(&self.series);
-        g.iter()
-            .filter(|(k, _)| k.starts_with(prefix) && k.ends_with(suffix))
-            .filter_map(|(_, s)| s.mean_since(from_ms))
+        let matching: Vec<(String, Arc<TimeSeries>)> = {
+            let g = util::lock(&self.series);
+            g.iter()
+                .filter(|(k, _)| k.starts_with(prefix) && k.ends_with(suffix))
+                .map(|(k, s)| (k.clone(), s.clone()))
+                .collect()
+        };
+        matching
+            .into_iter()
+            .filter_map(|(name, s)| self.signal_value(&name, &s, from_ms))
             .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// One series' windowed signal value. The p99 is computed over the
+    /// *windowed* samples (re-bucketed transiently), not read off the
+    /// cumulative histogram: a cumulative p99 would stay pinned at a
+    /// spike forever and the autoscaler could never shrink again.
+    fn signal_value(&self, name: &str, s: &TimeSeries, from_ms: u64) -> Option<f64> {
+        if self.get_histogram(name).is_none() {
+            return s.mean_since(from_ms);
+        }
+        let h = LogHistogram::new();
+        let mut n = 0usize;
+        for (t, v) in s.samples() {
+            if t >= from_ms {
+                h.record(v.max(0.0).round() as u64);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(h.p99() as f64)
+        }
     }
 
     /// Fleet-wide read-lag signal: worst per-mapper `read_lag_ms` mean
@@ -200,6 +289,42 @@ mod tests {
         assert_eq!(h.commit_latency_signal(0), None, "no reducer committed yet");
         h.series(&names::reducer_commit_latency(3)).record(50, 75.0);
         assert_eq!(h.commit_latency_signal(0), Some(75.0));
+    }
+
+    #[test]
+    fn signal_uses_windowed_p99_with_histogram() {
+        let h = MetricsHub::new();
+        let name = names::reducer_commit_latency(0);
+        // 98 fast commits and two 100 ms stragglers: the mean (~12)
+        // would hide the tail; the log-bucketed p99 must not.
+        for i in 0..98u64 {
+            h.record_latency(&name, i, 10.0);
+        }
+        h.record_latency(&name, 98, 100.0);
+        h.record_latency(&name, 99, 100.0);
+        let sig = h.commit_latency_signal(0).expect("samples in window");
+        assert!(sig >= 100.0, "p99 must surface the tail, got {sig}");
+        // Windowed: restricting to the straggler-free prefix drops back
+        // into the 10 ms bucket even though the cumulative histogram
+        // still remembers the spike.
+        for i in 200..300u64 {
+            h.record_latency(&name, i, 10.0);
+        }
+        let calm = h.commit_latency_signal(200).expect("samples in window");
+        assert!(calm <= 15.0, "windowed p99 must forget old spikes, got {calm}");
+        assert_eq!(h.histogram(&name).max(), 100, "cumulative histogram keeps it");
+    }
+
+    #[test]
+    fn signal_falls_back_to_mean_without_histogram() {
+        let h = MetricsHub::new();
+        let name = names::reducer_commit_latency(1);
+        // Plain series() recording (no histogram registered): the
+        // signal must stay the windowed mean, bit-for-bit.
+        h.series(&name).record(0, 10.0);
+        h.series(&name).record(1, 100.0);
+        assert_eq!(h.commit_latency_signal(0), Some(55.0), "mean fallback");
+        assert!(h.get_histogram(&name).is_none());
     }
 
     #[test]

@@ -8,10 +8,12 @@
 //! [`wa::WaReport`] computes the headline write-amplification table from
 //! the storage accounting.
 
+pub mod histogram;
 pub mod hub;
 pub mod timeseries;
 pub mod wa;
 
+pub use histogram::LogHistogram;
 pub use hub::MetricsHub;
 pub use timeseries::TimeSeries;
 pub use wa::{PipelineWaReport, WaReport};

@@ -1,0 +1,278 @@
+//! `yt-stream-obs-v1`: the versioned observability export.
+//!
+//! One JSON document per `figure` run, written next to `BENCH_*.json`,
+//! carrying everything the run observed: the stat lines the figure
+//! printed, every counter, every latency histogram, the WA report(s),
+//! and the flight-recorder spans. The console output is *routed
+//! through* this collector ([`ObsExport::stat`] prints and records in
+//! one call), so the text a human read and the JSON a tool parses can
+//! never disagree.
+//!
+//! Hand-rolled serialization, same policy as `util::benchkit`: the
+//! crate takes no serde dependency, and the document is flat enough
+//! that a writer is ~100 lines. `u64` ids are emitted as fixed-width
+//! hex *strings* — JSON numbers lose integer precision past 2^53.
+
+use std::fmt::Display;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::metrics::wa::WaReport;
+use crate::metrics::MetricsHub;
+use crate::obs::span::{SpanOutcome, TxnSpan};
+use crate::storage::accounting::ALL_CATEGORIES;
+
+/// Schema identifier; bump on any shape change.
+pub const OBS_SCHEMA: &str = "yt-stream-obs-v1";
+
+/// Collector for one labeled run (one figure invocation).
+pub struct ObsExport {
+    label: String,
+    metrics: Arc<MetricsHub>,
+    reports: Vec<WaReport>,
+    stats: Vec<(String, String)>,
+}
+
+impl ObsExport {
+    pub fn new(label: impl Into<String>, metrics: Arc<MetricsHub>) -> ObsExport {
+        ObsExport {
+            label: label.into(),
+            metrics,
+            reports: Vec::new(),
+            stats: Vec::new(),
+        }
+    }
+
+    /// Print one stat line (`name: value`) *and* record it in the
+    /// export — the single path figure drivers use for result lines.
+    pub fn stat(&mut self, name: &str, value: impl Display) {
+        let rendered = value.to_string();
+        println!("{name}: {rendered}");
+        self.stats.push((name.to_string(), rendered));
+    }
+
+    /// Attach a WA report. The export serializes the report's own
+    /// accounting snapshot, so the JSON per-category totals are equal
+    /// to the `WaReport` by construction.
+    pub fn add_report(&mut self, report: &WaReport) {
+        self.reports.push(report.clone());
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(16 * 1024);
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{}\",\n", OBS_SCHEMA));
+        out.push_str(&format!("  \"label\": {},\n", json_str(&self.label)));
+
+        out.push_str("  \"stats\": [");
+        push_list(&mut out, self.stats.iter(), |o, (k, v)| {
+            o.push_str(&format!(
+                "{{\"name\": {}, \"value\": {}}}",
+                json_str(k),
+                json_str(v)
+            ));
+        });
+        out.push_str("],\n");
+
+        out.push_str("  \"counters\": [");
+        push_list(&mut out, self.metrics.counters_snapshot().iter(), |o, (k, v)| {
+            o.push_str(&format!("{{\"name\": {}, \"value\": {v}}}", json_str(k)));
+        });
+        out.push_str("],\n");
+
+        out.push_str("  \"histograms\": [");
+        push_list(&mut out, self.metrics.histograms_snapshot().iter(), |o, (k, h)| {
+            let buckets: Vec<String> = h
+                .nonzero_buckets()
+                .iter()
+                .map(|(ub, n)| format!("[{ub}, {n}]"))
+                .collect();
+            o.push_str(&format!(
+                "{{\"name\": {}, \"count\": {}, \"p50\": {}, \"p99\": {}, \"max\": {}, \"buckets\": [{}]}}",
+                json_str(k),
+                h.count(),
+                h.p50(),
+                h.p99(),
+                h.max(),
+                buckets.join(", ")
+            ));
+        });
+        out.push_str("],\n");
+
+        out.push_str("  \"wa\": [");
+        push_list(&mut out, self.reports.iter(), |o, r| {
+            o.push_str(&wa_json(r));
+        });
+        out.push_str("],\n");
+
+        let rec = self.metrics.recorder();
+        out.push_str("  \"spans\": {\n");
+        out.push_str(&format!(
+            "    \"recorded_total\": {},\n    \"dropped_total\": {},\n",
+            rec.recorded_total(),
+            rec.dropped_total()
+        ));
+        out.push_str("    \"workers\": [");
+        push_list(&mut out, rec.snapshot().iter(), |o, ws| {
+            o.push_str(&format!(
+                "{{\"worker\": {}, \"dropped\": {}, \"spans\": [",
+                json_str(&ws.worker),
+                ws.dropped
+            ));
+            push_list(o, ws.spans.iter(), |o2, s| o2.push_str(&span_json(s)));
+            o.push_str("]}");
+        });
+        out.push_str("]\n  }\n");
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write `obs-<label>.json` into `$YT_OBS_DIR` (default: the
+    /// working directory, i.e. next to `BENCH_*.json` in CI runs).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("YT_OBS_DIR").unwrap_or_else(|_| ".".to_string());
+        let file = format!("obs-{}.json", sanitize(&self.label));
+        let path = PathBuf::from(dir).join(file);
+        std::fs::write(&path, self.to_json())?;
+        println!("obs export: wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+fn wa_json(r: &WaReport) -> String {
+    let mut bytes = Vec::new();
+    for cat in ALL_CATEGORIES {
+        let (b, o) = (r.snapshot.bytes_of(cat), r.snapshot.ops_of(cat));
+        if b > 0 || o > 0 {
+            bytes.push(format!(
+                "{{\"category\": \"{}\", \"bytes\": {b}, \"ops\": {o}}}",
+                cat.name()
+            ));
+        }
+    }
+    format!(
+        "{{\"label\": {}, \"ingested_bytes\": {}, \"factor\": {:.6}, \"bytes\": [{}]}}",
+        json_str(&r.label),
+        r.ingested_bytes,
+        r.factor(),
+        bytes.join(", ")
+    )
+}
+
+fn span_json(s: &TxnSpan) -> String {
+    let mut bytes = Vec::new();
+    for cat in ALL_CATEGORIES {
+        let b = s.bytes_by_category[cat.index()];
+        if b > 0 {
+            bytes.push(format!("{{\"category\": \"{}\", \"bytes\": {b}}}", cat.name()));
+        }
+    }
+    let losing = match &s.outcome {
+        SpanOutcome::Conflicted { losing_row } => {
+            format!(", \"losing_row\": {}", json_str(losing_row))
+        }
+        _ => String::new(),
+    };
+    format!(
+        "{{\"txn_id\": {}, \"trace_id\": \"{:016x}\", \"worker\": {}, \"scope\": {}, \
+         \"read_set\": {}, \"outcome\": \"{}\"{}, \"bytes\": [{}], \
+         \"start_ms\": {}, \"end_ms\": {}}}",
+        s.txn_id,
+        s.trace_id,
+        json_str(&s.worker.address()),
+        json_str(&s.scope),
+        s.read_set,
+        s.outcome.name(),
+        losing,
+        bytes.join(", "),
+        s.start_ms,
+        s.end_ms
+    )
+}
+
+fn push_list<T>(out: &mut String, items: impl Iterator<Item = T>, f: impl Fn(&mut String, T)) {
+    for (i, item) in items.enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        f(out, item);
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn sanitize(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::WorkerId;
+    use crate::storage::accounting::{AccountingSnapshot, WriteCategory, CATEGORY_COUNT};
+
+    #[test]
+    fn export_round_trips_wa_totals() {
+        let hub = MetricsHub::new();
+        hub.add("reducer/commits_total", 3);
+        hub.histogram("reducer/000/commit_latency_ms").record(12);
+        let mut snap = AccountingSnapshot::default();
+        snap.bytes[WriteCategory::ReducerMeta.index()] = 4096;
+        snap.ops[WriteCategory::ReducerMeta.index()] = 2;
+        let report = WaReport::new("drill", 1024, snap);
+        let mut exp = ObsExport::new("unit", hub.clone());
+        exp.add_report(&report);
+        exp.stat("byte-identity", "EXACT");
+        let json = exp.to_json();
+        assert!(json.contains("\"schema\": \"yt-stream-obs-v1\""), "{json}");
+        // The WA section carries exactly the report's per-category bytes.
+        assert!(
+            json.contains("{\"category\": \"reducer_meta\", \"bytes\": 4096, \"ops\": 2}"),
+            "{json}"
+        );
+        assert!(json.contains("\"name\": \"byte-identity\", \"value\": \"EXACT\""), "{json}");
+        assert!(json.contains("\"p50\": 12"), "{json}");
+    }
+
+    #[test]
+    fn spans_serialize_with_hex_trace_ids() {
+        let hub = MetricsHub::new();
+        let mut by_cat = [0u64; CATEGORY_COUNT];
+        by_cat[WriteCategory::ReducerMeta.index()] = 7;
+        hub.recorder().record(TxnSpan {
+            txn_id: 0,
+            trace_id: 0xdead_beef,
+            worker: WorkerId::reducer(2, "g9"),
+            scope: "stage1".into(),
+            read_set: 4,
+            outcome: SpanOutcome::Conflicted { losing_row: "state/\"k\"".into() },
+            bytes_by_category: by_cat,
+            start_ms: 5,
+            end_ms: 9,
+        });
+        let json = ObsExport::new("unit2", hub).to_json();
+        assert!(json.contains("\"trace_id\": \"00000000deadbeef\""), "{json}");
+        assert!(json.contains("\"outcome\": \"conflicted\""), "{json}");
+        assert!(json.contains("\\\"k\\\""), "escaped losing row: {json}");
+        assert!(json.contains("\"worker\": \"reducer-2/g9\""), "{json}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Drill forensics: turn the flight recorder into an explanation.
+//!
+//! When a figure's byte-identity or WA gate fails, a bare `exit 1`
+//! says *that* exactly-once broke, not *which* transaction lost
+//! *which* conflict. These helpers render the recorded spans as a
+//! causal timeline — losers first-class, twins named by incarnation —
+//! so a failed drill prints the incident record StreamShield-style
+//! instead of an assert.
+
+use crate::obs::recorder::FlightRecorder;
+use crate::obs::span::{SpanOutcome, TxnSpan, ALL_OUTCOMES};
+
+/// Snapshot every span matching the filters, sorted by `(end_ms,
+/// txn_id)` so concurrent attempts read as a timeline. All filters are
+/// substring matches; `None` matches everything.
+pub fn spans_matching(
+    rec: &FlightRecorder,
+    worker: Option<&str>,
+    scope: Option<&str>,
+    outcome: Option<&str>,
+) -> Vec<TxnSpan> {
+    let mut out = Vec::new();
+    for ws in rec.snapshot() {
+        if let Some(w) = worker {
+            if !ws.worker.contains(w) {
+                continue;
+            }
+        }
+        for s in ws.spans {
+            if let Some(sc) = scope {
+                if !s.scope.contains(sc) {
+                    continue;
+                }
+            }
+            if let Some(o) = outcome {
+                if s.outcome.name() != o {
+                    continue;
+                }
+            }
+            out.push(s);
+        }
+    }
+    out.sort_by_key(|s| (s.end_ms, s.txn_id));
+    out
+}
+
+/// One timeline line for a span.
+pub fn format_span(s: &TxnSpan) -> String {
+    let detail = match &s.outcome {
+        SpanOutcome::Conflicted { losing_row } => {
+            format!("conflicted(losing_row={losing_row})")
+        }
+        other => other.name().to_string(),
+    };
+    let bytes: u64 = s.bytes_by_category.iter().sum();
+    format!(
+        "[{:>6}ms..{:>6}ms] txn#{:<5} trace={:016x} {:<24} scope={:<12} read_set={:<3} bytes={:<8} {}",
+        s.start_ms,
+        s.end_ms,
+        s.txn_id,
+        s.trace_id,
+        s.worker.address(),
+        if s.scope.is_empty() { "-" } else { &s.scope },
+        s.read_set,
+        bytes,
+        detail,
+    )
+}
+
+/// Render the conflict/abdication timeline for a failed gate: every
+/// non-committed span (newest `limit` of them), then a per-worker
+/// outcome census so the losing incarnation is named even when its
+/// spans scrolled out of the ring.
+pub fn conflict_timeline(rec: &FlightRecorder, scope: Option<&str>, limit: usize) -> String {
+    let mut out = String::new();
+    let losers: Vec<TxnSpan> = spans_matching(rec, None, scope, None)
+        .into_iter()
+        .filter(|s| !matches!(s.outcome, SpanOutcome::Committed))
+        .collect();
+    let skip = losers.len().saturating_sub(limit);
+    out.push_str(&format!(
+        "conflict timeline ({} non-committed span(s){}):\n",
+        losers.len(),
+        if skip > 0 {
+            format!(", newest {limit} shown")
+        } else {
+            String::new()
+        }
+    ));
+    if losers.is_empty() {
+        out.push_str("  (none recorded — every attempt committed)\n");
+    }
+    for s in losers.iter().skip(skip) {
+        out.push_str("  ");
+        out.push_str(&format_span(s));
+        out.push('\n');
+    }
+    out.push_str("per-worker outcomes:\n");
+    for ws in rec.snapshot() {
+        let mut counts = [0u64; ALL_OUTCOMES.len()];
+        for s in &ws.spans {
+            if let Some(i) = ALL_OUTCOMES.iter().position(|n| *n == s.outcome.name()) {
+                counts[i] += 1;
+            }
+        }
+        let cells: Vec<String> = ALL_OUTCOMES
+            .iter()
+            .zip(counts)
+            .map(|(n, c)| format!("{n}={c}"))
+            .collect();
+        out.push_str(&format!(
+            "  {:<24} {} dropped={}\n",
+            ws.worker,
+            cells.join(" "),
+            ws.dropped
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::WorkerId;
+    use crate::storage::accounting::CATEGORY_COUNT;
+
+    fn span(guid: &str, outcome: SpanOutcome, end_ms: u64) -> TxnSpan {
+        TxnSpan {
+            txn_id: 0,
+            trace_id: 7,
+            worker: WorkerId::reducer(0, guid),
+            scope: "stage0".into(),
+            read_set: 2,
+            outcome,
+            bytes_by_category: [0; CATEGORY_COUNT],
+            start_ms: end_ms.saturating_sub(1),
+            end_ms,
+        }
+    }
+
+    #[test]
+    fn timeline_names_the_losing_incarnation() {
+        let rec = FlightRecorder::default();
+        rec.record(span("winner", SpanOutcome::Committed, 10));
+        rec.record(span(
+            "loser",
+            SpanOutcome::Conflicted { losing_row: "state/k3".into() },
+            11,
+        ));
+        rec.record(span("loser", SpanOutcome::Abdicated, 12));
+        let text = conflict_timeline(&rec, Some("stage0"), 16);
+        assert!(text.contains("reducer-0/loser"), "{text}");
+        assert!(text.contains("losing_row=state/k3"), "{text}");
+        assert!(text.contains("2 non-committed span(s)"), "{text}");
+        // The census row still names the winner's incarnation.
+        assert!(text.contains("reducer-0/winner"), "{text}");
+    }
+
+    #[test]
+    fn filters_compose() {
+        let rec = FlightRecorder::default();
+        rec.record(span("a", SpanOutcome::Committed, 1));
+        rec.record(span("b", SpanOutcome::Abdicated, 2));
+        assert_eq!(spans_matching(&rec, Some("reducer-0"), None, None).len(), 2);
+        assert_eq!(
+            spans_matching(&rec, None, Some("stage0"), Some("abdicated")).len(),
+            1
+        );
+        assert_eq!(spans_matching(&rec, Some("mapper"), None, None).len(), 0);
+    }
+}

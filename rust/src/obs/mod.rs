@@ -1,0 +1,25 @@
+//! Commit-spine observability: the transaction flight recorder.
+//!
+//! Every transaction attempt on the commit spine — reducer batch
+//! commits, mapper trim/adopt CAS, reshard plan and finalize commits,
+//! cold-tier compaction (which rides the trim transaction) — records a
+//! [`span::TxnSpan`] into the [`recorder::FlightRecorder`] owned by
+//! the `MetricsHub`. Spans carry the worker incarnation, stage scope,
+//! CAS read-set size, per-`WriteCategory` bytes and a trace id derived
+//! from the source row-index range, so a drill failure is answered
+//! with a causal record ([`forensics`]) instead of a bare exit code,
+//! and every figure run emits a machine-readable `yt-stream-obs-v1`
+//! document ([`export`]).
+//!
+//! Recording is strictly off-transaction: a span is written after the
+//! commit call returns and never joins the CAS read set, so enabling
+//! or disabling the recorder cannot change any commit outcome.
+
+pub mod export;
+pub mod forensics;
+pub mod recorder;
+pub mod span;
+
+pub use export::{ObsExport, OBS_SCHEMA};
+pub use recorder::{FlightRecorder, WorkerSpans, DEFAULT_RING_CAPACITY};
+pub use span::{trace_id, SpanOutcome, TxnSpan, WorkerId, WorkerKind, ALL_OUTCOMES, OUTCOME_COUNT};

@@ -1,0 +1,206 @@
+//! The flight recorder: bounded per-worker rings of [`TxnSpan`]s.
+//!
+//! Lock-light by construction. The hot path (`record`) takes one
+//! atomic load when recording is disabled and, when enabled, one
+//! read-lock on the ring map plus the owning worker's ring mutex —
+//! never a global serialization point across workers. Rings are
+//! bounded drop-oldest: a long run cannot grow memory without bound,
+//! and every evicted span is counted so exports can say exactly how
+//! much history was lost.
+//!
+//! Recording is strictly off-transaction: spans are written after the
+//! commit call returns and never join the CAS read set, so the
+//! recorder cannot change which twin wins a race (DESIGN.md §3).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::obs::span::TxnSpan;
+use crate::util;
+
+/// Default per-worker ring capacity. Sized so the figure drills
+/// (thousands of commits per run) keep their full span history while a
+/// pathological hot loop still tops out at a few MB per worker.
+pub const DEFAULT_RING_CAPACITY: usize = 2048;
+
+#[derive(Debug, Default)]
+struct WorkerRing {
+    spans: Mutex<VecDeque<TxnSpan>>,
+    dropped: AtomicU64,
+}
+
+/// All spans currently retained for one worker, plus its drop count.
+#[derive(Debug, Clone)]
+pub struct WorkerSpans {
+    /// The worker's address (`kind-index/incarnation`).
+    pub worker: String,
+    /// Spans evicted from this ring since the run started.
+    pub dropped: u64,
+    /// Retained spans, oldest first.
+    pub spans: Vec<TxnSpan>,
+}
+
+/// Per-process span recorder, owned by the `MetricsHub` so every
+/// worker holding a metrics handle can record without new plumbing.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    capacity: AtomicUsize,
+    next_txn_id: AtomicU64,
+    rings: RwLock<HashMap<String, Arc<WorkerRing>>>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder {
+            enabled: AtomicBool::new(true),
+            capacity: AtomicUsize::new(DEFAULT_RING_CAPACITY),
+            next_txn_id: AtomicU64::new(0),
+            rings: RwLock::new(HashMap::new()),
+        }
+    }
+}
+
+impl FlightRecorder {
+    /// The one hot-path check: call sites skip span construction
+    /// entirely when this is false.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Change the per-worker ring bound (existing rings shrink lazily
+    /// on their next record).
+    pub fn set_capacity(&self, cap: usize) {
+        self.capacity.store(cap.max(1), Ordering::Relaxed);
+    }
+
+    /// Record one transaction attempt. Assigns the span's `txn_id`;
+    /// drops the oldest span(s) if the worker's ring is full.
+    pub fn record(&self, mut span: TxnSpan) {
+        if !self.enabled() {
+            return;
+        }
+        span.txn_id = self.next_txn_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let key = span.worker.address();
+        let ring = {
+            let rings = util::rlock(&self.rings);
+            rings.get(&key).cloned()
+        };
+        let ring = match ring {
+            Some(r) => r,
+            None => {
+                let mut rings = util::wlock(&self.rings);
+                rings.entry(key).or_default().clone()
+            }
+        };
+        let cap = self.capacity.load(Ordering::Relaxed).max(1);
+        let mut spans = util::lock(&ring.spans);
+        while spans.len() >= cap {
+            spans.pop_front();
+            ring.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        spans.push_back(span);
+    }
+
+    /// Total spans accepted (retained + dropped) since the start.
+    pub fn recorded_total(&self) -> u64 {
+        self.next_txn_id.load(Ordering::Relaxed)
+    }
+
+    /// Total spans evicted across all rings.
+    pub fn dropped_total(&self) -> u64 {
+        let rings = util::rlock(&self.rings);
+        rings.values().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Copy out every ring, sorted by worker address.
+    pub fn snapshot(&self) -> Vec<WorkerSpans> {
+        let mut out: Vec<WorkerSpans> = {
+            let rings = util::rlock(&self.rings);
+            rings
+                .iter()
+                .map(|(k, r)| WorkerSpans {
+                    worker: k.clone(),
+                    dropped: r.dropped.load(Ordering::Relaxed),
+                    spans: util::lock(&r.spans).iter().cloned().collect(),
+                })
+                .collect()
+        };
+        out.sort_by(|a, b| a.worker.cmp(&b.worker));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{SpanOutcome, WorkerId};
+    use crate::storage::accounting::CATEGORY_COUNT;
+
+    fn span(worker: &WorkerId, i: u64) -> TxnSpan {
+        TxnSpan {
+            txn_id: 0,
+            trace_id: i,
+            worker: worker.clone(),
+            scope: String::new(),
+            read_set: 1,
+            outcome: SpanOutcome::Committed,
+            bytes_by_category: [0; CATEGORY_COUNT],
+            start_ms: i,
+            end_ms: i + 1,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_accounts_for_every_evicted_span() {
+        let rec = FlightRecorder::default();
+        rec.set_capacity(8);
+        let w = WorkerId::reducer(0, "g1");
+        for i in 0..20 {
+            rec.record(span(&w, i));
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].spans.len(), 8);
+        assert_eq!(snap[0].dropped, 12);
+        // Exact accounting: accepted == retained + dropped.
+        assert_eq!(
+            rec.recorded_total(),
+            snap[0].spans.len() as u64 + rec.dropped_total()
+        );
+        // Drop-oldest: the survivors are the 8 newest (trace ids 12..20).
+        assert_eq!(snap[0].spans[0].trace_id, 12);
+        assert_eq!(snap[0].spans[7].trace_id, 19);
+        // txn ids are assigned in record order, monotonically.
+        assert!(snap[0].spans.windows(2).all(|w| w[0].txn_id < w[1].txn_id));
+    }
+
+    #[test]
+    fn disabled_recorder_accepts_nothing() {
+        let rec = FlightRecorder::default();
+        rec.set_enabled(false);
+        rec.record(span(&WorkerId::mapper(0, "g"), 0));
+        assert_eq!(rec.recorded_total(), 0);
+        assert!(rec.snapshot().is_empty());
+        rec.set_enabled(true);
+        rec.record(span(&WorkerId::mapper(0, "g"), 1));
+        assert_eq!(rec.recorded_total(), 1);
+    }
+
+    #[test]
+    fn rings_are_per_worker() {
+        let rec = FlightRecorder::default();
+        rec.record(span(&WorkerId::reducer(0, "a"), 0));
+        rec.record(span(&WorkerId::reducer(0, "b"), 1));
+        rec.record(span(&WorkerId::reducer(1, "a"), 2));
+        let snap = rec.snapshot();
+        let names: Vec<&str> = snap.iter().map(|w| w.worker.as_str()).collect();
+        assert_eq!(names, ["reducer-0/a", "reducer-0/b", "reducer-1/a"]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Transaction spans: the unit of record of the flight recorder.
+//!
+//! A [`TxnSpan`] is written for every transaction *attempt* on the
+//! commit spine — committed or not — by the worker that drove the
+//! attempt. Spans are recorded strictly off-transaction (after the
+//! commit call returns, never inside the CAS read set), so observing
+//! the protocol can never perturb it: a run with recording enabled and
+//! a run with it disabled execute byte-identical commit sequences.
+//!
+//! The `trace_id` ties a span back to the source rows the transaction
+//! moved: it is an FNV-1a-64 hash over the `(partition, begin, end)`
+//! row-index ranges the attempt covered. A reducer commit over shuffle
+//! rows, the mapper trim that later retires those rows, and the cold
+//! chunk the trim compacts them into all hash the *same* range, so a
+//! row's provenance (ingest → handoff → fire → output) is
+//! reconstructible by joining spans on `trace_id` across stages.
+
+use crate::storage::accounting::CATEGORY_COUNT;
+
+/// Which commit-spine role produced a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkerKind {
+    Mapper,
+    Reducer,
+    Resharder,
+}
+
+impl WorkerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerKind::Mapper => "mapper",
+            WorkerKind::Reducer => "reducer",
+            WorkerKind::Resharder => "resharder",
+        }
+    }
+}
+
+/// Identity of the worker incarnation that drove a transaction attempt.
+///
+/// Worker identity in this tree is `(kind, index, guid)` — there is no
+/// numeric incarnation counter; the spawn guid *is* the incarnation.
+/// Two spans with the same kind/index but different `incarnation`
+/// strings are a twin pair, which is exactly what drill forensics needs
+/// to name the split-brain loser.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WorkerId {
+    pub kind: WorkerKind,
+    pub index: usize,
+    /// Spawn guid (the incarnation); stable for a worker's lifetime.
+    pub incarnation: String,
+}
+
+impl WorkerId {
+    pub fn mapper(index: usize, guid: &str) -> Self {
+        WorkerId { kind: WorkerKind::Mapper, index, incarnation: guid.to_string() }
+    }
+
+    pub fn reducer(index: usize, guid: &str) -> Self {
+        WorkerId { kind: WorkerKind::Reducer, index, incarnation: guid.to_string() }
+    }
+
+    pub fn resharder(index: usize, guid: &str) -> Self {
+        WorkerId { kind: WorkerKind::Resharder, index, incarnation: guid.to_string() }
+    }
+
+    /// `kind-index/incarnation`, matching the address strings the
+    /// coordinator already prints (`mapper-3/abc123`).
+    pub fn address(&self) -> String {
+        format!("{}-{}/{}", self.kind.name(), self.index, self.incarnation)
+    }
+}
+
+/// How a transaction attempt ended.
+///
+/// Kept mutually exhaustive with [`OUTCOME_COUNT`], [`ALL_OUTCOMES`]
+/// and [`SpanOutcome::name`] — protolint R3 checks the four stay in
+/// sync, so a new variant cannot ship without its export name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// The CAS validated and the write set was applied.
+    Committed,
+    /// Lost the CAS race; `losing_row` names the table/key whose
+    /// timestamp moved under the transaction.
+    Conflicted { losing_row: String },
+    /// The worker discovered it is a stale twin (split-brain fence,
+    /// reshard fence, ownership moved) and stood down without writing.
+    Abdicated,
+    /// Transient failure before an outcome (I/O, decode, lookup).
+    Error,
+}
+
+/// Number of [`SpanOutcome`] variants; must track the enum.
+pub const OUTCOME_COUNT: usize = 4;
+
+/// Every outcome's export name, in declaration order. Export and query
+/// code iterates this instead of hand-listing outcomes.
+pub const ALL_OUTCOMES: [&str; OUTCOME_COUNT] = [
+    "committed",
+    "conflicted",
+    "abdicated",
+    "error",
+];
+
+impl SpanOutcome {
+    /// Stable lower-case name used in exports and `obs` query filters.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanOutcome::Committed => "committed",
+            SpanOutcome::Conflicted { .. } => "conflicted",
+            SpanOutcome::Abdicated => "abdicated",
+            SpanOutcome::Error => "error",
+        }
+    }
+}
+
+/// One recorded transaction attempt on the commit spine.
+#[derive(Debug, Clone)]
+pub struct TxnSpan {
+    /// Recorder-assigned sequence number (global across workers).
+    pub txn_id: u64,
+    /// FNV-1a-64 over the source row-index ranges (see [`trace_id`]).
+    pub trace_id: u64,
+    pub worker: WorkerId,
+    /// Stage scope (the WA accounting scope), "" for unscoped txns.
+    pub scope: String,
+    /// CAS read-set size at commit time (rows validated).
+    pub read_set: usize,
+    pub outcome: SpanOutcome,
+    /// Bytes written per `WriteCategory` (index order), zero unless
+    /// the attempt committed.
+    pub bytes_by_category: [u64; CATEGORY_COUNT],
+    pub start_ms: u64,
+    pub end_ms: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_u64(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Derive a trace id from the source row-index ranges a transaction
+/// covered: one `(partition, begin, end)` triple per source, `end`
+/// exclusive. Deterministic, so the reducer commit over shuffle rows
+/// `[a, b)` of partition `p` and the trim/compaction that later
+/// retires exactly those rows produce the same id.
+pub fn trace_id(ranges: &[(usize, i64, i64)]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &(part, begin, end) in ranges {
+        h = fnv_u64(h, part as u64);
+        h = fnv_u64(h, begin as u64);
+        h = fnv_u64(h, end as u64);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_names_cover_all_outcomes() {
+        let outcomes = [
+            SpanOutcome::Committed,
+            SpanOutcome::Conflicted { losing_row: "t/k".into() },
+            SpanOutcome::Abdicated,
+            SpanOutcome::Error,
+        ];
+        assert_eq!(outcomes.len(), OUTCOME_COUNT);
+        for (o, want) in outcomes.iter().zip(ALL_OUTCOMES) {
+            assert_eq!(o.name(), want);
+        }
+    }
+
+    #[test]
+    fn trace_id_is_deterministic_and_range_sensitive() {
+        let a = trace_id(&[(0, 0, 128), (1, 0, 64)]);
+        assert_eq!(a, trace_id(&[(0, 0, 128), (1, 0, 64)]));
+        assert_ne!(a, trace_id(&[(0, 0, 128), (1, 0, 65)]));
+        assert_ne!(a, trace_id(&[(1, 0, 64), (0, 0, 128)]));
+        assert_ne!(trace_id(&[]), trace_id(&[(0, 0, 0)]));
+    }
+
+    #[test]
+    fn worker_address_matches_coordinator_format() {
+        assert_eq!(WorkerId::mapper(3, "abc").address(), "mapper-3/abc");
+        assert_eq!(WorkerId::reducer(0, "g").address(), "reducer-0/g");
+        assert_eq!(WorkerId::resharder(0, "driver").address(), "resharder-0/driver");
+    }
+}

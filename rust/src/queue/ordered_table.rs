@@ -115,6 +115,12 @@ impl OrderedTable {
         self.name_table.clone()
     }
 
+    /// Write-accounting category of this table's journal (what an
+    /// append's bytes are recorded as).
+    pub fn category(&self) -> WriteCategory {
+        self.journal.category()
+    }
+
     /// Producer append; returns the absolute index of the first appended
     /// row. Durable: bytes are journal-accounted.
     pub fn append(&self, tablet: usize, rows: Vec<UnversionedRow>) -> Result<i64, QueueError> {

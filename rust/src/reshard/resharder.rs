@@ -22,6 +22,8 @@ use crate::coordinator::state::ReducerState;
 use crate::dyntable::{DynTableStore, TxnError};
 use crate::metrics::hub::names;
 use crate::metrics::MetricsHub;
+use crate::obs::{SpanOutcome, TxnSpan, WorkerId};
+use crate::storage::accounting::CATEGORY_COUNT;
 use crate::storage::WriteCategory;
 
 use super::migration::ReshardRuntime;
@@ -80,6 +82,31 @@ pub struct ReshardStats {
     pub migrated_rows: i64,
 }
 
+/// Flight-recorder span for one driver plan transaction. The driver is
+/// a singleton outside any worker fleet, so its spans carry the fixed
+/// `resharder-0/driver` identity; it also runs on wall-clock (no sim
+/// clock in scope), so span timestamps are zero and ordering comes from
+/// the recorder's monotonic txn ids.
+fn record_plan_span(
+    ctx: &ReshardContext,
+    scope: &str,
+    read_set: usize,
+    outcome: SpanOutcome,
+    bytes_by_category: [u64; CATEGORY_COUNT],
+) {
+    ctx.metrics.recorder().record(TxnSpan {
+        txn_id: 0,
+        trace_id: 0,
+        worker: WorkerId::resharder(0, "driver"),
+        scope: scope.to_string(),
+        read_set,
+        outcome,
+        bytes_by_category,
+        start_ms: 0,
+        end_ms: 0,
+    });
+}
+
 /// Read the current plan (non-transactionally).
 pub fn read_plan(ctx: &ReshardContext) -> Result<ReshardPlan, ReshardError> {
     let row = ctx
@@ -109,7 +136,33 @@ pub fn begin(ctx: &ReshardContext, new_partitions: usize) -> Result<ReshardPlan,
             to: new_partitions,
         })?;
     txn.write(&ctx.runtime.plan_table, migrating.to_row())?;
-    txn.commit()?;
+    let obs_on = ctx.metrics.recorder().enabled();
+    let read_set = txn.read_set_len();
+    match txn.commit() {
+        Ok(res) => {
+            if obs_on {
+                record_plan_span(
+                    ctx,
+                    "reshard_plan",
+                    read_set,
+                    SpanOutcome::Committed,
+                    res.bytes_by_category,
+                );
+            }
+        }
+        Err(e) => {
+            if obs_on {
+                let outcome = match &e {
+                    TxnError::Conflict { table, key, .. } => SpanOutcome::Conflicted {
+                        losing_row: format!("{table}/{key:?}"),
+                    },
+                    _ => SpanOutcome::Error,
+                };
+                record_plan_span(ctx, "reshard_plan", read_set, outcome, [0; CATEGORY_COUNT]);
+            }
+            return Err(e.into());
+        }
+    }
 
     ensure_new_fleet(ctx, &migrating)?;
     ctx.metrics.add(names::RESHARD_MIGRATIONS, 1);
@@ -265,7 +318,33 @@ pub fn finalize(ctx: &ReshardContext, wall_timeout_ms: u64) -> Result<ReshardSta
     }
     let finalized = current.finalized().ok_or(ReshardError::NotStable)?;
     txn.write(&ctx.runtime.plan_table, finalized.to_row())?;
-    txn.commit()?;
+    let obs_on = ctx.metrics.recorder().enabled();
+    let read_set = txn.read_set_len();
+    match txn.commit() {
+        Ok(res) => {
+            if obs_on {
+                record_plan_span(
+                    ctx,
+                    "reshard_finalize",
+                    read_set,
+                    SpanOutcome::Committed,
+                    res.bytes_by_category,
+                );
+            }
+        }
+        Err(e) => {
+            if obs_on {
+                let outcome = match &e {
+                    TxnError::Conflict { table, key, .. } => SpanOutcome::Conflicted {
+                        losing_row: format!("{table}/{key:?}"),
+                    },
+                    _ => SpanOutcome::Error,
+                };
+                record_plan_span(ctx, "reshard_finalize", read_set, outcome, [0; CATEGORY_COUNT]);
+            }
+            return Err(e.into());
+        }
+    }
 
     // Stop respawning the retired fleet.
     for index in 0..current.partitions {

@@ -88,7 +88,9 @@ pub const ALL_CATEGORIES: [WriteCategory; CATEGORY_COUNT] = [
 ];
 
 impl WriteCategory {
-    fn index(self) -> usize {
+    /// Dense array index of this category (`bytes_by_category`-style
+    /// arrays in accounting snapshots and obs spans).
+    pub fn index(self) -> usize {
         match self {
             WriteCategory::SourceIngest => 0,
             WriteCategory::MapperMeta => 1,

@@ -755,6 +755,94 @@ fn txn_increments_serialize() {
     );
 }
 
+/// Invariant 10 (PR 10, flight recorder): span completeness on the
+/// commit spine. Under a random drill schedule (twin reducer plus an
+/// optional kill/pause), the recorder's reducer rings account for every
+/// counted commit-spine event once the run drains: committed spans
+/// (scopes `reduce`/`tick`) equal `REDUCER_COMMITS`, conflicted spans
+/// equal `REDUCER_COMMIT_CONFLICTS`, abdication spans are at least
+/// `REDUCER_SPLIT_BRAIN` (plan-fence and CAS-widen abdications also
+/// record), and — with rings sized above the run — nothing is dropped,
+/// so accepted == retained exactly.
+#[test]
+fn flight_recorder_accounts_for_every_commit_spine_attempt() {
+    use yt_stream::metrics::hub::names;
+    use yt_stream::obs::SpanOutcome;
+
+    check_with(
+        Config {
+            cases: 4, // each case drains a drilled pipeline (~1-2 s)
+            base_seed: 0x0B5E,
+        },
+        "flight recorder span completeness under drills",
+        |rng| {
+            let mappers = rng.gen_range(2, 4) as usize;
+            let reducers = rng.gen_range(1, 3) as usize;
+            let rig = rig(mappers, 60, rng.next_u64());
+            // Sized far above anything this run can record so the census
+            // below sees every span (`dropped_total` must stay 0).
+            rig.env.metrics.recorder().set_capacity(1 << 16);
+            let processor = launch(&rig, fast_config(mappers, reducers));
+            let sup = processor.supervisor().clone();
+
+            std::thread::sleep(std::time::Duration::from_millis(rng.gen_range(100, 300)));
+            let victim = rng.next_below(reducers as u64) as usize;
+            sup.duplicate(Role::Reducer, victim);
+            if rng.chance(0.5) {
+                sup.kill(Role::Reducer, rng.next_below(reducers as u64) as usize);
+            }
+            let got = wait_for_output(&rig.env, rig.expected_lines as i64, 40_000);
+            processor.stop();
+            prop_assert_eq!(got, rig.expected_lines as i64, "drilled run did not drain");
+
+            let metrics = &rig.env.metrics;
+            let snap = metrics.recorder().snapshot();
+            let retained: u64 = snap.iter().map(|w| w.spans.len() as u64).sum();
+            let (mut committed, mut conflicted, mut abdicated) = (0u64, 0u64, 0u64);
+            for ring in snap.iter().filter(|w| w.worker.starts_with("reducer-")) {
+                for s in &ring.spans {
+                    if s.scope != "reduce" && s.scope != "tick" {
+                        continue;
+                    }
+                    match &s.outcome {
+                        SpanOutcome::Committed => committed += 1,
+                        SpanOutcome::Conflicted { .. } => conflicted += 1,
+                        SpanOutcome::Abdicated => abdicated += 1,
+                        SpanOutcome::Error => {}
+                    }
+                }
+            }
+            prop_assert_eq!(
+                committed,
+                metrics.get_counter(names::REDUCER_COMMITS),
+                "committed spans out of sync with the commit counter"
+            );
+            prop_assert_eq!(
+                conflicted,
+                metrics.get_counter(names::REDUCER_COMMIT_CONFLICTS),
+                "conflicted spans out of sync with the conflict counter"
+            );
+            prop_assert!(
+                abdicated >= metrics.get_counter(names::REDUCER_SPLIT_BRAIN),
+                "fewer abdication spans ({}) than split-brain detections ({})",
+                abdicated,
+                metrics.get_counter(names::REDUCER_SPLIT_BRAIN)
+            );
+            prop_assert_eq!(
+                metrics.recorder().dropped_total(),
+                0u64,
+                "oversized rings must not evict during a short run"
+            );
+            prop_assert_eq!(
+                metrics.recorder().recorded_total(),
+                retained,
+                "accepted spans != retained spans with zero drops"
+            );
+            Ok(())
+        },
+    );
+}
+
 /// Invariant 5 (PR 6): the columnar [`RowBatch`] is a faithful view of the
 /// per-row codec — same wire bytes, lossless round-trip, and a vectorized
 /// hash column that agrees with the scalar composite-key hash row by row.

@@ -15,7 +15,7 @@
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
-BENCH_PR="${BENCH_PR:-9}"
+BENCH_PR="${BENCH_PR:-10}"
 bench_json="$repo_root/BENCH_${BENCH_PR}.json"
 
 if ! command -v cargo >/dev/null 2>&1; then

@@ -20,7 +20,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-RULES = ("panic", "lock_unwrap", "lock_order", "category", "cas_read_set")
+RULES = ("panic", "lock_unwrap", "lock_order", "category", "outcome", "cas_read_set")
 PANIC_MACROS = ("panic", "unreachable", "todo", "unimplemented")
 
 # ---------------------------------------------------------------- config
@@ -487,6 +487,14 @@ def check_r3(cfg, files, by_rel, findings):
                             (f.rel, i + 1, "category",
                              f"`{ctor}` defaults its WriteCategory — "
                              "annotate with allow(category, ...)"))
+    span_path = cfg.get("obs_span")
+    if span_path:
+        span_rel = span_path.replace("rust/src/", "", 1)
+        span = by_rel.get(span_rel)
+        if span is None:
+            findings.append((span_rel, 1, "outcome", "obs_span module not found"))
+        else:
+            check_outcome(span, findings)
 
 
 def check_enum(acc, findings):
@@ -526,6 +534,64 @@ def check_enum(acc, findings):
         if sorted(a for a, _ in arms) != sorted(variants) or not check(arms):
             findings.append((acc.rel, 1, "category",
                              f"{fn}() arms out of sync with the enum"))
+
+
+def check_outcome(span, findings):
+    """SpanOutcome / OUTCOME_COUNT / ALL_OUTCOMES / name() coherence.
+
+    Mirror of the Rust `r3::check_outcome_coherence`. Unlike
+    WriteCategory, SpanOutcome carries a payload variant
+    (`Conflicted { losing_row }`) and `name()` takes `&self`, so the
+    WriteCategory regexes do not apply verbatim.
+    """
+    text = "\n".join(span.clean)
+    raw = "\n".join(span.raw)
+    em = re.search(r"pub enum SpanOutcome \{(.*?)\n\}", text, re.S)
+    if not em:
+        findings.append((span.rel, 1, "outcome", "enum SpanOutcome not found"))
+        return
+    # Variant idents at 4-space indent; payload braces trail the ident.
+    variants = re.findall(r"^\s{4}(\w+)", em.group(1), re.M)
+    n = len(variants)
+    cm = re.search(r"const OUTCOME_COUNT: usize = (\d+)", text)
+    if not cm:
+        findings.append((span.rel, 1, "outcome", "OUTCOME_COUNT not found"))
+    elif int(cm.group(1)) != n:
+        findings.append((span.rel, 1, "outcome",
+                         f"OUTCOME_COUNT is {cm.group(1)} but SpanOutcome "
+                         f"has {n} variants"))
+    fm = re.search(r"fn name\(&self\)[^{]*\{\s*match self \{(.*?)\n        \}",
+                   raw, re.S)
+    name_of = {}
+    if not fm:
+        findings.append((span.rel, 1, "outcome", "name() not found"))
+    else:
+        arms = re.findall(
+            r'SpanOutcome::(\w+)(?:\s*\{[^}]*\})?\s*=>\s*"(\w+)"', fm.group(1))
+        name_of = dict(arms)
+        for v in variants:
+            if v not in name_of:
+                findings.append((span.rel, 1, "outcome",
+                                 f"name() has no arm for SpanOutcome::{v}"))
+        if len({nm for _, nm in arms}) != len(arms):
+            findings.append((span.rel, 1, "outcome",
+                             "name() maps two variants to the same string"))
+    am = re.search(r"const ALL_OUTCOMES[^=]*= \[(.*?)\];", raw, re.S)
+    if not am:
+        findings.append((span.rel, 1, "outcome", "ALL_OUTCOMES not found"))
+    else:
+        elems = re.findall(r'"(\w+)"', am.group(1))
+        if len(elems) != n:
+            findings.append((span.rel, 1, "outcome",
+                             f"ALL_OUTCOMES has {len(elems)} entries but "
+                             f"SpanOutcome has {n} variants"))
+        elif name_of:
+            want = [name_of.get(v) for v in variants]
+            if elems != want:
+                findings.append((span.rel, 1, "outcome",
+                                 "ALL_OUTCOMES does not match name() in "
+                                 "declaration order — the array must follow "
+                                 "declaration order"))
 
 
 # --------------------------------------------------------------------- R4

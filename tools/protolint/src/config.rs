@@ -10,6 +10,10 @@ pub struct Config {
     pub source_root: PathBuf,
     pub accounting: PathBuf,
     pub wa_report: PathBuf,
+    /// R3 second half: the obs span module whose `SpanOutcome` enum must
+    /// stay coherent with `OUTCOME_COUNT`/`ALL_OUTCOMES`/`name()`.
+    /// Empty (key absent) skips the check.
+    pub obs_span: PathBuf,
     /// R1 scope: file paths (relative to source root) or `dir/` prefixes.
     pub protocol_modules: Vec<String>,
     /// R2 receiver-substring → lock class, first match wins.
@@ -82,6 +86,7 @@ impl Config {
                 ("paths", "source_root") => cfg.source_root = PathBuf::from(parse_str(value)?),
                 ("paths", "accounting") => cfg.accounting = PathBuf::from(parse_str(value)?),
                 ("paths", "wa_report") => cfg.wa_report = PathBuf::from(parse_str(value)?),
+                ("paths", "obs_span") => cfg.obs_span = PathBuf::from(parse_str(value)?),
                 ("r1", "protocol_modules") => cfg.protocol_modules = parse_array(value)?,
                 ("r2", "classes") => {
                     for entry in parse_array(value)? {

@@ -21,6 +21,13 @@
 //! The WA report itself (`wa_report` path) must mention
 //! `ALL_CATEGORIES`: a report hand-listing categories is exactly the
 //! kind of code that silently drops the 13th one.
+//!
+//! The same coherence discipline covers the obs span module
+//! (`obs_span` path, when configured): the `SpanOutcome` variant list,
+//! `OUTCOME_COUNT`, `ALL_OUTCOMES` (the export-name array) and
+//! `name()` must stay mutually exhaustive, with `ALL_OUTCOMES` in
+//! declaration order — a new outcome cannot ship without the name the
+//! export schema and `obs` query filters key on.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
@@ -72,6 +79,19 @@ pub fn check(cfg: &Config, tree: &SourceTree, _config_dir: &Path) -> Vec<Finding
             rule: "category".into(),
             message: "wa_report module configured in protolint.toml not found".into(),
         }),
+    }
+
+    if !cfg.obs_span.as_os_str().is_empty() {
+        let obs_rel = rel_of(&cfg.obs_span);
+        match tree.get(&obs_rel) {
+            Some(file) => check_outcome_coherence(file, &mut findings),
+            None => findings.push(Finding {
+                file: obs_rel.clone(),
+                line: 1,
+                rule: "outcome".into(),
+                message: "obs_span module configured in protolint.toml not found".into(),
+            }),
+        }
     }
 
     // Defaulting-constructor call sites outside the defining modules.
@@ -269,6 +289,168 @@ fn check_enum_coherence(file: &SourceFile, findings: &mut Vec<Finding>) {
     }
 }
 
+/// `SpanOutcome` coherence in the obs span module: the variant list,
+/// `OUTCOME_COUNT`, `ALL_OUTCOMES` and `name()` must agree, with
+/// `ALL_OUTCOMES` listing each variant's export name in declaration
+/// order — export and query code iterates that array instead of the
+/// enum, so a mismatch is a silently unqueryable outcome.
+fn check_outcome_coherence(file: &SourceFile, findings: &mut Vec<Finding>) {
+    let mut report = |line: usize, message: String| {
+        findings.push(Finding {
+            file: file.rel.clone(),
+            line,
+            rule: "outcome".into(),
+            message,
+        });
+    };
+
+    let mut variants: Vec<String> = Vec::new();
+    let mut enum_line = 1;
+    let mut count: Option<(usize, usize)> = None; // (value, line)
+    let mut all: Option<(Vec<String>, usize)> = None;
+    let mut name_arms: Option<(BTreeMap<String, Option<String>>, usize)> = None;
+
+    for item in &file.ast.items {
+        match item {
+            syn::Item::Enum(e) if e.ident == "SpanOutcome" => {
+                enum_line = e.ident.span().start().line;
+                variants = e.variants.iter().map(|v| v.ident.to_string()).collect();
+            }
+            syn::Item::Const(c) if c.ident == "OUTCOME_COUNT" => {
+                let line = c.ident.span().start().line;
+                match &*c.expr {
+                    syn::Expr::Lit(syn::ExprLit {
+                        lit: syn::Lit::Int(i),
+                        ..
+                    }) => match i.base10_parse::<usize>() {
+                        Ok(v) => count = Some((v, line)),
+                        Err(_) => report(line, "OUTCOME_COUNT literal does not parse".into()),
+                    },
+                    _ => report(line, "OUTCOME_COUNT must be an integer literal".into()),
+                }
+            }
+            syn::Item::Const(c) if c.ident == "ALL_OUTCOMES" => {
+                let line = c.ident.span().start().line;
+                match &*c.expr {
+                    syn::Expr::Array(a) => {
+                        let elems: Vec<String> = a
+                            .elems
+                            .iter()
+                            .filter_map(|e| match e {
+                                syn::Expr::Lit(syn::ExprLit {
+                                    lit: syn::Lit::Str(s),
+                                    ..
+                                }) => Some(s.value()),
+                                _ => None,
+                            })
+                            .collect();
+                        if elems.len() != a.elems.len() {
+                            report(line, "ALL_OUTCOMES has a non-string element".into());
+                        }
+                        all = Some((elems, line));
+                    }
+                    _ => report(line, "ALL_OUTCOMES must be an array literal".into()),
+                }
+            }
+            syn::Item::Impl(imp) if type_is(&imp.self_ty, "SpanOutcome") => {
+                for ii in &imp.items {
+                    let syn::ImplItem::Fn(f) = ii else { continue };
+                    if f.sig.ident == "name" {
+                        let line = f.sig.ident.span().start().line;
+                        name_arms = Some((
+                            match_arms(&f.block, |e| match e {
+                                syn::Expr::Lit(syn::ExprLit {
+                                    lit: syn::Lit::Str(s),
+                                    ..
+                                }) => Some(s.value()),
+                                _ => None,
+                            }),
+                            line,
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    if variants.is_empty() {
+        report(enum_line, "enum SpanOutcome not found".into());
+        return;
+    }
+    let n = variants.len();
+    let vset: BTreeSet<&String> = variants.iter().collect();
+
+    match count {
+        Some((v, line)) if v != n => report(
+            line,
+            format!("OUTCOME_COUNT is {v} but SpanOutcome has {n} variants"),
+        ),
+        Some(_) => {}
+        None => report(enum_line, "const OUTCOME_COUNT not found".into()),
+    }
+
+    let mut name_of: BTreeMap<String, String> = BTreeMap::new();
+    match &name_arms {
+        Some((arms, line)) => {
+            for v in vset.iter().filter(|v| !arms.contains_key(**v)) {
+                report(*line, format!("name() has no arm for SpanOutcome::{v}"));
+            }
+            let mut seen: BTreeMap<&String, &String> = BTreeMap::new();
+            for (variant, value) in arms {
+                match value {
+                    Some(s) => {
+                        if let Some(other) = seen.insert(s, variant) {
+                            report(
+                                *line,
+                                format!("name() gives {other} and {variant} the same name {s:?}"),
+                            );
+                        }
+                        name_of.insert(variant.clone(), s.clone());
+                    }
+                    None => report(
+                        *line,
+                        format!("name() arm for {variant} is not a string literal"),
+                    ),
+                }
+            }
+        }
+        None => report(enum_line, "SpanOutcome::name() not found".into()),
+    }
+
+    match &all {
+        Some((elems, line)) => {
+            if elems.len() != n {
+                report(
+                    *line,
+                    format!(
+                        "ALL_OUTCOMES lists {} names but SpanOutcome has {n} variants",
+                        elems.len()
+                    ),
+                );
+            }
+            for (i, variant) in variants.iter().enumerate() {
+                let Some(want) = name_of.get(variant) else { continue };
+                match elems.get(i) {
+                    Some(got) if got == want => {}
+                    Some(got) => report(
+                        *line,
+                        format!(
+                            "ALL_OUTCOMES[{i}] is {got:?} but SpanOutcome::{variant}.name() \
+                             is {want:?} (the array must follow declaration order)"
+                        ),
+                    ),
+                    None => report(
+                        *line,
+                        format!("ALL_OUTCOMES is missing {want:?} (SpanOutcome::{variant})"),
+                    ),
+                }
+            }
+        }
+        None => report(enum_line, "const ALL_OUTCOMES not found".into()),
+    }
+}
+
 fn type_is(ty: &syn::Type, name: &str) -> bool {
     matches!(ty, syn::Type::Path(p) if p.path.segments.last().is_some_and(|s| s.ident == name))
 }
@@ -294,10 +476,17 @@ fn match_arms<T>(
     let mut out = BTreeMap::new();
     if let Some(m) = finder.found {
         for arm in &m.arms {
-            if let syn::Pat::Path(p) = &arm.pat {
-                if let Some(seg) = p.path.segments.last() {
-                    out.insert(seg.ident.to_string(), extract(&arm.body));
-                }
+            // Unit variants match as paths; payload-carrying variants
+            // (`SpanOutcome::Conflicted { .. }`) as struct or
+            // tuple-struct patterns.
+            let path = match &arm.pat {
+                syn::Pat::Path(p) => Some(&p.path),
+                syn::Pat::Struct(p) => Some(&p.path),
+                syn::Pat::TupleStruct(p) => Some(&p.path),
+                _ => None,
+            };
+            if let Some(seg) = path.and_then(|p| p.segments.last()) {
+                out.insert(seg.ident.to_string(), extract(&arm.body));
             }
         }
     }

@@ -319,6 +319,73 @@ fn r3_trips_on_each_desync() {
     assert!(msgs.iter().any(|m| m.contains("ALL_CATEGORIES")), "{msgs:?}");
 }
 
+const COHERENT_SPAN: &str = r#"
+pub enum SpanOutcome {
+    Committed,
+    Conflicted { losing_row: String },
+    Abdicated,
+}
+pub const OUTCOME_COUNT: usize = 3;
+pub const ALL_OUTCOMES: [&str; OUTCOME_COUNT] = ["committed", "conflicted", "abdicated"];
+impl SpanOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanOutcome::Committed => "committed",
+            SpanOutcome::Conflicted { .. } => "conflicted",
+            SpanOutcome::Abdicated => "abdicated",
+        }
+    }
+}
+"#;
+
+fn cfg_with_span() -> Config {
+    let mut c = cfg();
+    c.obs_span = std::path::PathBuf::from("src/span.rs");
+    c
+}
+
+#[test]
+fn r3_coherent_outcome_enum_is_clean() {
+    let t = tree(&[("acc.rs", COHERENT_ACC), ("wa.rs", WA_OK), ("span.rs", COHERENT_SPAN)]);
+    let f = r3::check(&cfg_with_span(), &t, Path::new("."));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn r3_outcome_trips_on_each_desync() {
+    // Count drifts, the export array loses declaration order, and one
+    // variant loses its name() arm — each must be its own finding. The
+    // struct pattern on Conflicted also exercises non-path match arms.
+    let desynced = COHERENT_SPAN
+        .replace(
+            "pub const OUTCOME_COUNT: usize = 3;",
+            "pub const OUTCOME_COUNT: usize = 4;",
+        )
+        .replace(
+            "[\"committed\", \"conflicted\", \"abdicated\"]",
+            "[\"committed\", \"abdicated\", \"conflicted\"]",
+        )
+        .replace("SpanOutcome::Abdicated => \"abdicated\",", "");
+    let t = tree(&[("acc.rs", COHERENT_ACC), ("wa.rs", WA_OK), ("span.rs", &desynced)]);
+    let f = r3::check(&cfg_with_span(), &t, Path::new("."));
+    assert!(rules(&f).iter().all(|r| *r == "outcome"), "{f:?}");
+    let msgs: Vec<&str> = f.iter().map(|x| x.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("OUTCOME_COUNT is 4")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("declaration order")), "{msgs:?}");
+    assert!(
+        msgs.iter().any(|m| m.contains("no arm for SpanOutcome::Abdicated")),
+        "{msgs:?}"
+    );
+}
+
+#[test]
+fn r3_outcome_check_skipped_without_configured_path() {
+    // TEST_TOML has no [paths] obs_span: trees without a span module
+    // must stay clean (the check is opt-in per config).
+    let t = tree(&[("acc.rs", COHERENT_ACC), ("wa.rs", WA_OK)]);
+    assert!(r3::check(&cfg(), &t, Path::new(".")).is_empty());
+}
+
 #[test]
 fn r3_defaulting_constructor_needs_annotation_outside_definer() {
     let bare = "fn f() { let t = OrderedTable::new(\"t\", 2); }\n";
